@@ -1,0 +1,63 @@
+//! Auto-tuning demo: regenerate a paper-style "tuning graph" (Figure 2)
+//! for one dataset on both modelled CPUs, then persist and reload the
+//! tuning decision.
+//!
+//! ```text
+//! cargo run --release --example autotune_demo
+//! ```
+
+use isplib::autotune::{
+    render_ascii_chart, HardwareProfile, KernelRegistry, TuneConfig, Tuner, TuningDb,
+};
+use isplib::data::spec_by_name;
+use isplib::error::Result;
+use isplib::kernels::Semiring;
+
+fn main() -> Result<()> {
+    // the paper tunes "against a given dataset" — use scaled Reddit
+    let spec = spec_by_name("reddit").expect("spec");
+    let ds = spec.instantiate(512, 7)?;
+    println!(
+        "dataset {}: {} nodes, {} edges (scale 1/512 of the paper's)",
+        ds.name,
+        ds.num_nodes(),
+        ds.num_edges()
+    );
+
+    for profile_name in ["intel-skylake", "amd-epyc", "host"] {
+        let profile = HardwareProfile::named(profile_name)?;
+        println!(
+            "\nprofile {}: VLEN={} f32 lanes, candidate K-blocks {:?}",
+            profile.name,
+            profile.vlen(),
+            profile.candidate_kbs()
+        );
+        let tuner = Tuner::with_config(
+            profile,
+            TuneConfig { ks: vec![16, 32, 64, 128, 256], reps: 3, warmup: 1, threads: 1 },
+        );
+        let report = tuner.sweep(&ds.name, &ds.adj)?;
+        print!("{}", render_ascii_chart(&report));
+    }
+
+    // tune one embedding size, persist the decision, reload it
+    let tuner = Tuner::with_config(HardwareProfile::named("host")?, TuneConfig::default());
+    let registry = KernelRegistry::global();
+    registry.set_patched(true);
+    let mut db = TuningDb::default();
+    let choice = tuner.tune(&ds.name, &ds.adj, 32, registry, &mut db)?;
+    println!("\ntuned K=32 → {}", choice.label());
+
+    let db_path = std::env::temp_dir().join("isplib_tuning_demo.json");
+    db.save(&db_path)?;
+    let reloaded = TuningDb::load(&db_path)?;
+    println!(
+        "persisted to {} and reloaded ({} entries); resolver now answers {}",
+        db_path.display(),
+        reloaded.entries.len(),
+        registry.resolve(&ds.name, 32, Semiring::Sum).label()
+    );
+    std::fs::remove_file(&db_path).ok();
+    registry.set_patched(false);
+    Ok(())
+}

@@ -1,0 +1,60 @@
+// Phase-level profile of one GCN training epoch (native stack).
+use isplib::autodiff::{SpmmOperand, Tape};
+use isplib::data::spec_by_name;
+use isplib::dense::Dense;
+use isplib::gnn::GnnModel;
+use isplib::kernels::{spmm, KernelChoice, Semiring};
+use isplib::sparse::NormKind;
+use isplib::util::rng::Rng;
+use std::time::Instant;
+
+fn t<R>(label: &str, reps: usize, mut f: impl FnMut() -> R) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps { std::hint::black_box(f()); }
+    let s = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("{label:<42} {s:>12.6}s");
+    s
+}
+
+fn main() {
+    let ds = spec_by_name("reddit").unwrap().instantiate(256, 7).unwrap();
+    let n = ds.num_nodes();
+    let (f, h, c) = (ds.feature_dim(), 32usize, ds.num_classes);
+    println!("reddit/256: n={n} nnz={} f={f} h={h} c={c}", ds.num_edges());
+    let a = NormKind::GcnSym.apply(&ds.adj).unwrap();
+    let mut rng = Rng::seed_from_u64(1);
+    let w0 = Dense::uniform(f, h, 0.1, &mut rng);
+    let w1 = Dense::uniform(h, c, 0.1, &mut rng);
+    let x = &ds.features;
+
+    let xw = t("fwd: X@W0 (n*f*h GEMM)", 5, || x.matmul(&w0).unwrap());
+    let xw0 = x.matmul(&w0).unwrap();
+    let sp = t("fwd: spmm(A, XW0) K=h", 5, || spmm(&a, &xw0, Semiring::Sum, KernelChoice::Trusted, 1).unwrap());
+    let h1 = spmm(&a, &xw0, Semiring::Sum, KernelChoice::Trusted, 1).unwrap();
+    let hw = t("fwd: H@W1 (n*h*c GEMM)", 5, || h1.matmul(&w1).unwrap());
+    let hw1 = h1.matmul(&w1).unwrap();
+    let sp2 = t("fwd: spmm(A, HW1) K=c", 5, || spmm(&a, &hw1, Semiring::Sum, KernelChoice::Trusted, 1).unwrap());
+    let tr = t("bwd extra: transpose(A) (uncached)", 5, || a.transpose());
+    // backward GEMMs: dW0 = X^T @ G (f x h from n) — the big one
+    let g = Dense::uniform(n, h, 0.1, &mut rng);
+    let bg = t("bwd: X^T@G (f*n*h GEMM)", 5, || x.t_matmul(&g).unwrap());
+
+    let operand = SpmmOperand::cached(a.clone(), "prof");
+    let x_arc = std::sync::Arc::new(x.clone());
+    let full = t("full train_step (tape)", 3, || {
+        let mut tape = Tape::new(1);
+        let xv = tape.input_no_grad(std::sync::Arc::clone(&x_arc));
+        let w0v = tape.input(w0.clone());
+        let w1v = tape.input(w1.clone());
+        let h = tape.matmul(xv, w0v).unwrap();
+        let h = tape.spmm(&operand, h).unwrap();
+        let h = tape.relu(h).unwrap();
+        let o = tape.matmul(h, w1v).unwrap();
+        let o = tape.spmm(&operand, o).unwrap();
+        let loss = tape.softmax_xent(o, &ds.labels, Some(&ds.train_mask)).unwrap();
+        tape.backward(loss).unwrap();
+        tape.value(loss).get(0,0)
+    });
+    println!("\nshare of full step: GEMMs {:.0}%, spmm {:.0}%, transpose-if-uncached {:.0}%",
+        100.0*(xw+hw+bg)/full, 100.0*(sp+sp2)/full, 100.0*tr/full);
+}

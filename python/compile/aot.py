@@ -1,0 +1,141 @@
+"""AOT pipeline: lower the L2 train steps + standalone kernels to HLO text.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per entry plus ``manifest.json`` (the contract
+``rust/src/runtime/manifest.rs`` consumes).  HLO **text** is the
+interchange format, not ``.serialize()``: jax ≥ 0.5 emits HloModuleProto
+with 64-bit instruction ids which the runtime's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Python never runs at train time — the Rust binary is self-contained once
+this script has produced ``artifacts/``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import spmm_ell
+from .model import MODELS, flat_train_step, param_shapes
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_train_step(model: str, n: int, w: int, f: int, h: int, c: int,
+                     lr: float):
+    """Lower one (model, shape) train step; returns (hlo_text, entry)."""
+    flat, names, shapes = flat_train_step(model, f, h, c, lr)
+    args = [f32(*shapes[name]) for name in names]
+    args += [
+        f32(n, f),   # features
+        i32(n, w),   # ell cols
+        f32(n, w),   # ell vals (pre-normalised by the coordinator)
+        i32(n, w),   # ell cols of Aᵀ (the §3.3 cached transpose)
+        f32(n, w),   # ell vals of Aᵀ
+        i32(n),      # labels
+        f32(n),      # train mask (1.0/0.0)
+    ]
+    lowered = jax.jit(flat).lower(*args)
+    entry = {
+        "name": f"{model.replace('-', '_')}_n{n}_f{f}_h{h}_c{c}",
+        "kind": "train_step",
+        "model": model,
+        "n": n,
+        "ell_width": w,
+        "feature_dim": f,
+        "hidden": h,
+        "classes": c,
+        "lr": lr,
+        "param_names": names,
+        "param_shapes": [list(shapes[nm]) for nm in names],
+    }
+    return to_hlo_text(lowered), entry
+
+
+def lower_spmm(n: int, w: int, k: int):
+    """Standalone SpMM artifact (runtime smoke tests + HLO-kernel bench)."""
+    fn = lambda cols, vals, x: (spmm_ell(cols, vals, x, reduce="sum"),)
+    lowered = jax.jit(fn).lower(i32(n, w), f32(n, w), f32(n, k))
+    entry = {
+        "name": f"spmm_n{n}_w{w}_k{k}",
+        "kind": "spmm",
+        "model": "",
+        "n": n,
+        "ell_width": w,
+        "feature_dim": k,
+        "hidden": 0,
+        "classes": 0,
+        "lr": 0.0,
+        "param_names": [],
+        "param_shapes": [],
+    }
+    return to_hlo_text(lowered), entry
+
+
+# The artifact set: every model at karate-club shape (the end-to-end
+# example + parity tests) and one synthetic shape, plus standalone SpMMs.
+KARATE = dict(n=34, w=32, f=34, h=8, c=2, lr=0.1)
+SYNTH = dict(n=256, w=64, f=16, h=16, c=4, lr=0.1)
+SPMM_SHAPES = [(64, 16, 16), (256, 64, 32)]
+
+
+def build_all(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for model in MODELS:
+        for shape in (KARATE, SYNTH):
+            text, entry = lower_train_step(model, **shape)
+            path = os.path.join(out_dir, entry["name"] + ".hlo.txt")
+            with open(path, "w") as fh:
+                fh.write(text)
+            entries.append(entry)
+            print(f"wrote {path} ({len(text)} chars)")
+    for n, w, k in SPMM_SHAPES:
+        text, entry = lower_spmm(n, w, k)
+        path = os.path.join(out_dir, entry["name"] + ".hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        entries.append(entry)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {"jax_version": jax.__version__, "entries": entries}
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote {mpath} ({len(entries)} entries)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (ELL layout) + pure-jnp references."""
+
+from .fusedmm import fusedmm_ell
+from .sddmm import sddmm_ell
+from .spmm import spmm_ell, spmm_ell_cached
+from . import ref
+
+__all__ = ["spmm_ell", "spmm_ell_cached", "sddmm_ell", "fusedmm_ell", "ref"]

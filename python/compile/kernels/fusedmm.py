@@ -1,0 +1,65 @@
+"""L1 Pallas FusedMM kernel: SDDMM + SpMM in one grid pass (FusedMM [8]).
+
+The unfused pipeline materialises an ``(n, w)`` edge-value tensor between
+the two kernels; fusing keeps each ``(RB, W)`` edge tile in VMEM only for
+the lifetime of one grid step and writes only the ``(RB, KB)`` output tile
+— exactly the traffic-halving argument of the FusedMM paper, restated for
+the HBM↔VMEM boundary instead of DRAM↔cache.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _fusedmm_kernel(cols_ref, vals_ref, u_ref, v_ref, x_ref, o_ref, *, edge_op: str):
+    cols = cols_ref[...]                  # (RB, W)
+    vals = vals_ref[...]                  # (RB, W)
+    u = u_ref[...]                        # (RB, D)
+    v = v_ref[...]                        # (m, D)
+    x = x_ref[...]                        # (m, KB)
+    dots = jnp.einsum("rd,rwd->rw", u, v[cols])
+    if edge_op == "dot":
+        edge = vals * dots
+    elif edge_op == "sigmoid":
+        edge = vals * jax.nn.sigmoid(dots)
+    else:  # pragma: no cover - guarded by the wrapper
+        raise ValueError(edge_op)
+    gathered = x[cols]                    # (RB, W, KB)
+    o_ref[...] = jnp.sum(edge[:, :, None] * gathered, axis=1)
+
+
+def fusedmm_ell(cols, vals, u, v, x, *, edge_op: str = "dot",
+                row_block: int = 32, k_block: int = 32):
+    """Fused SDDMM→SpMM: ``Y[i,:] = Σ_j g(vals, <u_i, v_cols>) x[cols[i,j],:]``."""
+    if edge_op not in ("dot", "sigmoid"):
+        raise ValueError(f"unknown edge op '{edge_op}'")
+    n, w = cols.shape
+    m, k = x.shape
+    _, d = v.shape
+    rb = min(row_block, n)
+    kb = min(k_block, k)
+    grid = (_cdiv(n, rb), _cdiv(k, kb))
+    kernel = functools.partial(_fusedmm_kernel, edge_op=edge_op)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rb, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((rb, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((rb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((m, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((m, kb), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((rb, kb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, k), x.dtype),
+        interpret=True,
+    )(cols, vals, u, v, x)

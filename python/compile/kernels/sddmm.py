@@ -1,0 +1,50 @@
+"""L1 Pallas SDDMM kernel over the ELL layout.
+
+``S[i, j] = vals[i, j] * <u[i, :], v[cols[i, j], :]>`` — the sampled
+dense-dense product that iSpLib names alongside SpMM (paper §1(a)).
+
+Tiling: the grid walks row blocks; each step keeps the ``(RB, W)``
+neighbour tile, the ``(RB, D)`` strip of U and the whole ``(m, D)`` V panel
+in VMEM, emitting the ``(RB, W)`` edge-value tile.  The feature dim D is
+the contraction axis, so it is not tiled (GNN attention dims are small).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _sddmm_kernel(cols_ref, vals_ref, u_ref, v_ref, o_ref):
+    cols = cols_ref[...]                 # (RB, W)
+    vals = vals_ref[...]                 # (RB, W)
+    u = u_ref[...]                       # (RB, D)
+    v = v_ref[...]                       # (m, D)
+    dots = jnp.einsum("rd,rwd->rw", u, v[cols])
+    o_ref[...] = vals * dots
+
+
+def sddmm_ell(cols, vals, u, v, *, row_block: int = 32):
+    """SDDMM over an ELL pattern; returns the new edge values (n × w)."""
+    n, w = cols.shape
+    m, d = v.shape
+    rb = min(row_block, n)
+    grid = (_cdiv(n, rb),)
+    return pl.pallas_call(
+        _sddmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rb, w), lambda i: (i, 0)),
+            pl.BlockSpec((rb, w), lambda i: (i, 0)),
+            pl.BlockSpec((rb, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, w), vals.dtype),
+        interpret=True,
+    )(cols, vals, u, v)

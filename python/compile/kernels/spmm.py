@@ -1,0 +1,127 @@
+"""L1 Pallas SpMM kernel over the ELL layout.
+
+Hardware adaptation (DESIGN.md §2): the paper's CPU kernel register-blocks
+the feature dimension so a K-strip of the output row stays in SIMD
+registers across the whole neighbour stream.  On a TPU the same insight
+maps to *VMEM tiling*: the grid walks ``(row_block, k_block)`` tiles, the
+``k_block`` width playing the role of the paper's VLEN-multiple — it is
+the knob the auto-tuner sweeps.  Each grid step keeps
+
+  * a ``(ROW_BLOCK, W)`` slice of the ELL neighbour lists, and
+  * the ``(m, K_BLOCK)`` feature panel
+
+resident in VMEM and accumulates ``(ROW_BLOCK, K_BLOCK)`` outputs in one
+shot — dense rectangular math on the VPU instead of the CPU's serial CSR
+row stream.
+
+The kernels run with ``interpret=True`` everywhere in this repo: the CPU
+PJRT plugin cannot execute real Mosaic lowerings, so correctness is
+validated through the interpreter and TPU performance is *estimated*
+statically (EXPERIMENTS.md §Perf) from the BlockSpec geometry.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _spmm_kernel(cols_ref, vals_ref, x_ref, o_ref, *, reduce: str):
+    """One (row_block × k_block) grid step."""
+    cols = cols_ref[...]                     # (RB, W) int32
+    vals = vals_ref[...]                     # (RB, W) f32
+    x = x_ref[...]                           # (m, KB) f32
+    gathered = x[cols]                       # (RB, W, KB)
+    messages = vals[:, :, None] * gathered   # (RB, W, KB)
+    valid = (vals != 0.0)[:, :, None]
+    if reduce == "sum":
+        o_ref[...] = jnp.sum(jnp.where(valid, messages, 0.0), axis=1)
+    elif reduce == "mean":
+        nnz = jnp.sum(valid, axis=1)
+        total = jnp.sum(jnp.where(valid, messages, 0.0), axis=1)
+        o_ref[...] = jnp.where(nnz > 0, total / jnp.maximum(nnz, 1), 0.0)
+    elif reduce == "max":
+        filled = jnp.where(valid, messages, -jnp.inf)
+        out = jnp.max(filled, axis=1)
+        o_ref[...] = jnp.where(jnp.any(valid, axis=1), out, 0.0)
+    elif reduce == "min":
+        filled = jnp.where(valid, messages, jnp.inf)
+        out = jnp.min(filled, axis=1)
+        o_ref[...] = jnp.where(jnp.any(valid, axis=1), out, 0.0)
+    else:  # pragma: no cover - guarded by the wrapper
+        raise ValueError(reduce)
+
+
+def spmm_ell(cols, vals, x, *, reduce: str = "sum",
+             row_block: int = 32, k_block: int = 32):
+    """Semiring SpMM ``Y[i,:] = reduce_j vals[i,j] * x[cols[i,j],:]``.
+
+    Args:
+      cols: int32[n, w] ELL neighbour ids (0-padded).
+      vals: float32[n, w] edge values (0.0-padded).
+      x:    float32[m, k] dense features.
+      reduce: 'sum' | 'max' | 'min' | 'mean'.
+      row_block/k_block: VMEM tile geometry (the tuning knobs).
+
+    Returns float32[n, k].
+    """
+    if reduce not in ("sum", "max", "min", "mean"):
+        raise ValueError(f"unknown reduce '{reduce}'")
+    n, w = cols.shape
+    m, k = x.shape
+    rb = min(row_block, n)
+    kb = min(k_block, k)
+    grid = (_cdiv(n, rb), _cdiv(k, kb))
+    kernel = functools.partial(_spmm_kernel, reduce=reduce)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rb, w), lambda i, j: (i, 0)),      # neighbour ids
+            pl.BlockSpec((rb, w), lambda i, j: (i, 0)),      # edge values
+            pl.BlockSpec((m, kb), lambda i, j: (0, j)),      # feature panel
+        ],
+        out_specs=pl.BlockSpec((rb, kb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, k), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic lowerings
+    )(cols, vals, x)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def spmm_ell_cached(cols, vals, cols_t, vals_t, x, row_block=32, k_block=32):
+    """SpMM (sum) with **cache-enabled backprop** (paper §3.3).
+
+    The backward of ``Y = A @ X`` w.r.t. ``X`` is ``Aᵀ @ dY``.  Without
+    intervention XLA differentiates the gather into a scatter-add — the
+    "uncached" form that re-derives the transpose's access pattern on every
+    step.  This wrapper instead takes the transpose ``(cols_t, vals_t)`` as
+    an *input* (computed once by the Rust coordinator's BackpropCache) and
+    its custom VJP runs the same forward kernel over it — the L2 half of
+    iSpLib's cached backpropagation.
+    """
+    return spmm_ell(cols, vals, x, reduce="sum",
+                    row_block=row_block, k_block=k_block)
+
+
+def _spmm_cached_fwd(cols, vals, cols_t, vals_t, x, row_block, k_block):
+    y = spmm_ell(cols, vals, x, reduce="sum",
+                 row_block=row_block, k_block=k_block)
+    return y, (cols_t, vals_t)
+
+
+def _spmm_cached_bwd(row_block, k_block, res, g):
+    cols_t, vals_t = res
+    dx = spmm_ell(cols_t, vals_t, g, reduce="sum",
+                  row_block=row_block, k_block=k_block)
+    # no gradients for the (static) sparse structure
+    return None, None, None, None, dx
+
+
+spmm_ell_cached.defvjp(_spmm_cached_fwd, _spmm_cached_bwd)

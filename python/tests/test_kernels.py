@@ -1,0 +1,135 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp references.
+
+hypothesis sweeps shapes, sparsity patterns, block geometries and
+semirings; every property pins the kernel to ``ref.py``.  This is the CORE
+correctness signal for the compile path — if these pass, the HLO the AOT
+pipeline ships computes the right thing.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fusedmm_ell, ref, sddmm_ell, spmm_ell
+
+SEMIRINGS = ["sum", "max", "min", "mean"]
+
+
+def make_ell(rng, n, w, m, density=0.6):
+    cols = rng.integers(0, m, (n, w)).astype(np.int32)
+    vals = rng.uniform(0.2, 1.5, (n, w)).astype(np.float32)
+    vals[rng.uniform(size=(n, w)) >= density] = 0.0
+    return cols, vals
+
+
+@st.composite
+def spmm_case(draw):
+    n = draw(st.integers(2, 24))
+    w = draw(st.integers(1, 8))
+    m = draw(st.integers(2, 24))
+    k = draw(st.integers(1, 20))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rb = draw(st.sampled_from([1, 4, 8, 32]))
+    kb = draw(st.sampled_from([1, 4, 8, 32]))
+    return n, w, m, k, seed, rb, kb
+
+
+@settings(max_examples=40, deadline=None)
+@given(case=spmm_case(), reduce=st.sampled_from(SEMIRINGS))
+def test_spmm_matches_ref(case, reduce):
+    n, w, m, k, seed, rb, kb = case
+    rng = np.random.default_rng(seed)
+    cols, vals = make_ell(rng, n, w, m)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    got = spmm_ell(cols, vals, x, reduce=reduce, row_block=rb, k_block=kb)
+    want = ref.spmm_ell_ref(cols, vals, x, reduce)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 20),
+    w=st.integers(1, 6),
+    d=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+    rb=st.sampled_from([1, 8, 32]),
+)
+def test_sddmm_matches_ref(n, w, d, seed, rb):
+    rng = np.random.default_rng(seed)
+    cols, vals = make_ell(rng, n, w, n)
+    u = rng.normal(size=(n, d)).astype(np.float32)
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    got = sddmm_ell(cols, vals, u, v, row_block=rb)
+    want = ref.sddmm_ell_ref(cols, vals, u, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 16),
+    w=st.integers(1, 5),
+    d=st.integers(1, 6),
+    k=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fusedmm_matches_unfused(n, w, d, k, seed):
+    rng = np.random.default_rng(seed)
+    cols, vals = make_ell(rng, n, w, n)
+    u = rng.normal(size=(n, d)).astype(np.float32)
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    x = rng.normal(size=(n, k)).astype(np.float32)
+    got = fusedmm_ell(cols, vals, u, v, x, row_block=8, k_block=8)
+    want = ref.fusedmm_ell_ref(cols, vals, u, v, x)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 16),
+    k=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_geometry_invariance(n, k, seed):
+    """The tuning knob (block sizes) must never change numerics — the same
+    routing-invariance property the Rust side property-tests."""
+    rng = np.random.default_rng(seed)
+    cols, vals = make_ell(rng, n, 4, n)
+    x = rng.normal(size=(n, k)).astype(np.float32)
+    base = spmm_ell(cols, vals, x, row_block=1, k_block=1)
+    for rb in (2, 8, 64):
+        for kb in (2, 8, 64):
+            got = spmm_ell(cols, vals, x, row_block=rb, k_block=kb)
+            np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+
+def test_empty_rows_are_zero_all_semirings():
+    cols = np.zeros((4, 3), np.int32)
+    vals = np.zeros((4, 3), np.float32)
+    x = np.ones((4, 5), np.float32)
+    for reduce in SEMIRINGS:
+        out = np.asarray(spmm_ell(cols, vals, x, reduce=reduce))
+        assert np.all(out == 0.0), reduce
+
+
+def test_unknown_reduce_rejected():
+    cols = np.zeros((2, 1), np.int32)
+    vals = np.zeros((2, 1), np.float32)
+    x = np.zeros((2, 2), np.float32)
+    with pytest.raises(ValueError):
+        spmm_ell(cols, vals, x, reduce="prod")
+    with pytest.raises(ValueError):
+        fusedmm_ell(cols, vals, x, x, x, edge_op="relu")
+
+
+def test_padding_is_neutral():
+    """Widening the ELL with (0, 0.0) padding never changes the result."""
+    rng = np.random.default_rng(3)
+    cols, vals = make_ell(rng, 6, 3, 6, density=1.0)
+    x = rng.normal(size=(6, 4)).astype(np.float32)
+    base = spmm_ell(cols, vals, x)
+    wide_cols = np.zeros((6, 8), np.int32)
+    wide_vals = np.zeros((6, 8), np.float32)
+    wide_cols[:, :3] = cols
+    wide_vals[:, :3] = vals
+    wide = spmm_ell(wide_cols, wide_vals, x)
+    np.testing.assert_allclose(wide, base, rtol=1e-6, atol=1e-6)

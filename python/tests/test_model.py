@@ -1,0 +1,151 @@
+"""L2 model correctness: forwards, gradients, the cached-backprop VJP, and
+the train step that aot.py lowers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref, spmm_ell_cached
+from compile.model import (MODELS, flat_train_step, forward, init_params,
+                           make_train_step, masked_xent, param_shapes)
+
+
+def make_graph(rng, n, w, symmetric=True):
+    cols = rng.integers(0, n, (n, w)).astype(np.int32)
+    vals = rng.uniform(0.2, 1.0, (n, w)).astype(np.float32)
+    vals[rng.uniform(size=(n, w)) < 0.3] = 0.0
+    if symmetric:
+        # build a symmetric matrix by mirroring through dense form
+        dense = np.zeros((n, n), np.float32)
+        for i in range(n):
+            for j in range(w):
+                if vals[i, j] != 0.0:
+                    dense[i, cols[i, j]] = vals[i, j]
+        dense = np.maximum(dense, dense.T)
+        width = max(1, int((dense != 0).sum(1).max()))
+        cols = np.zeros((n, width), np.int32)
+        vals = np.zeros((n, width), np.float32)
+        for i in range(n):
+            nz = np.nonzero(dense[i])[0]
+            cols[i, :len(nz)] = nz
+            vals[i, :len(nz)] = dense[i, nz]
+    return cols, vals
+
+
+def transpose_ell(cols, vals, n):
+    # duplicates within a row are summed by the kernel, so accumulate (+=)
+    dense = np.zeros((n, n), np.float32)
+    for i in range(cols.shape[0]):
+        for j in range(cols.shape[1]):
+            if vals[i, j] != 0.0:
+                dense[i, cols[i, j]] += vals[i, j]
+    dt = dense.T
+    width = max(1, int((dt != 0).sum(1).max()), cols.shape[1])
+    ct = np.zeros((n, width), np.int32)
+    vt = np.zeros((n, width), np.float32)
+    for i in range(n):
+        nz = np.nonzero(dt[i])[0]
+        ct[i, :len(nz)] = nz
+        vt[i, :len(nz)] = dt[i, nz]
+    return ct, vt
+
+
+def test_cached_vjp_matches_autodiff_of_reference():
+    """The custom VJP (backward = spmm over the cached transpose) must equal
+    jax.grad of the plain reference — §3.3 caching cannot change gradients."""
+    rng = np.random.default_rng(0)
+    n, w, k = 10, 4, 6
+    cols, vals = make_graph(rng, n, w, symmetric=False)
+    cols_t, vals_t = transpose_ell(cols, vals, n)
+    x = rng.normal(size=(n, k)).astype(np.float32)
+
+    def loss_cached(x):
+        return spmm_ell_cached(cols, vals, cols_t, vals_t, x).sum()
+
+    def loss_ref(x):
+        return ref.spmm_ell_ref(cols, vals, x, "sum").sum()
+
+    g_cached = jax.grad(loss_cached)(x)
+    g_ref = jax.grad(loss_ref)(x)
+    np.testing.assert_allclose(g_cached, g_ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_forward_shapes_and_finiteness(model):
+    rng = np.random.default_rng(1)
+    n, w, f, h, c = 12, 4, 7, 5, 3
+    cols, vals = make_graph(rng, n, w)
+    cols_t, vals_t = cols, vals  # symmetric
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    params = init_params(model, f, h, c, seed=0)
+    logits = forward(model, params, x, cols, vals, cols_t, vals_t)
+    assert logits.shape == (n, c)
+    assert np.all(np.isfinite(logits))
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_training_reduces_loss(model):
+    rng = np.random.default_rng(2)
+    n, w, f, h, c = 16, 4, 8, 6, 2
+    cols, vals = make_graph(rng, n, w)
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    labels = jnp.asarray(rng.integers(0, c, n), jnp.int32)
+    mask = jnp.ones((n,), jnp.float32)
+    params = init_params(model, f, h, c, seed=1)
+    step = make_train_step(model, c, lr=0.2)
+    losses = []
+    for _ in range(15):
+        params, loss = step(params, x, cols, vals, cols, vals, labels, mask)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], f"{model}: {losses[0]} -> {losses[-1]}"
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_masked_xent_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0], [0.0, 1.0], [1.0, 1.0]])
+    labels = jnp.asarray([0, 1, 0], jnp.int32)
+    mask = jnp.asarray([1.0, 1.0, 0.0])
+    got = float(masked_xent(logits, labels, mask))
+    logp = jax.nn.log_softmax(logits)
+    want = float(-(logp[0, 0] + logp[1, 1]) / 2.0)
+    assert abs(got - want) < 1e-6
+
+
+def test_mask_excludes_rows_from_gradient():
+    rng = np.random.default_rng(3)
+    logits = jnp.asarray(rng.normal(size=(3, 2)).astype(np.float32))
+    labels = jnp.asarray([0, 1, 0], jnp.int32)
+    mask = jnp.asarray([1.0, 0.0, 1.0])
+    g = jax.grad(lambda z: masked_xent(z, labels, mask))(logits)
+    assert np.all(np.asarray(g)[1] == 0.0)
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_flat_train_step_signature(model):
+    """The AOT argument convention: sorted param names, then statics, and
+    output = params' + loss. This is the contract the manifest records."""
+    f, h, c = 6, 4, 2
+    flat, names, shapes = flat_train_step(model, f, h, c, lr=0.1)
+    assert names == sorted(shapes)
+    rng = np.random.default_rng(4)
+    n, w = 9, 3
+    cols, vals = make_graph(rng, n, w)
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    labels = jnp.asarray(rng.integers(0, c, n), jnp.int32)
+    mask = jnp.ones((n,), jnp.float32)
+    args = [jnp.zeros(shapes[nm], jnp.float32) for nm in names]
+    out = flat(*args, x, cols, vals, cols, vals, labels, mask)
+    assert len(out) == len(names) + 1
+    for nm, new in zip(names, out[:-1]):
+        assert new.shape == shapes[nm]
+    assert out[-1].shape == ()
+
+
+def test_param_shapes_match_rust_side():
+    # mirror of rust/src/gnn/models.rs param_counts test
+    assert len(param_shapes("gcn", 10, 4, 3)) == 4
+    assert len(param_shapes("sage-sum", 10, 4, 3)) == 6
+    assert len(param_shapes("gin", 10, 4, 3)) == 6
+    with pytest.raises(ValueError):
+        param_shapes("gat", 10, 4, 3)

@@ -1,0 +1,61 @@
+//! Bench F2 — regenerates the paper's **Figure 2** (tuning graphs).
+//!
+//! ```text
+//! cargo bench --bench fig2_tuning
+//! ```
+//!
+//! For each of the six datasets × the two modelled CPUs (Intel Skylake /
+//! AMD EPYC kernel geometries; wall-clock from this host), sweeps embedding
+//! sizes K ∈ {16..1024} and reports the generated-over-trusted speedup
+//! curve. The paper reads the ideal K off the peak (32 Intel / 64 AMD);
+//! here the peak's *shape* (bell curve: rises to the register budget, falls
+//! on spilling) is the reproduction target.
+//!
+//! Env knobs: `ISPLIB_BENCH_SCALE` (default 512), `ISPLIB_BENCH_QUICK`
+//! (restrict to 2 datasets × K ≤ 128).
+
+use isplib::autotune::render_ascii_chart;
+use isplib::coordinator::{figure2_sweep, ExperimentConfig};
+use isplib::data::paper_specs;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let quick = std::env::var("ISPLIB_BENCH_QUICK").is_ok();
+    let scale = env_usize("ISPLIB_BENCH_SCALE", 512);
+    let cfg = ExperimentConfig { scale, ..ExperimentConfig::default() };
+
+    let mut specs = paper_specs();
+    let ks: Vec<usize> = if quick {
+        specs.truncate(2);
+        vec![16, 32, 64, 128]
+    } else {
+        vec![16, 32, 64, 128, 256, 512, 1024]
+    };
+    let profiles = ["intel-skylake", "amd-epyc"];
+
+    println!(
+        "=== Figure 2: tuning graphs ({} datasets × {:?}, K ∈ {ks:?}, scale 1/{scale}) ===",
+        specs.len(),
+        profiles
+    );
+
+    let reports = figure2_sweep(&cfg, &specs, &profiles, &ks).expect("sweep");
+    for r in &reports {
+        println!();
+        print!("{}", render_ascii_chart(r));
+    }
+
+    // Figure-2 style summary: ideal K per (dataset, profile)
+    println!("\nideal embedding size per dataset (paper: 32 on Intel, 64 on AMD):");
+    for profile in profiles {
+        let ideal: Vec<String> = reports
+            .iter()
+            .filter(|r| r.profile == profile)
+            .map(|r| format!("{}={}", r.dataset, r.ideal_k().unwrap_or(0)))
+            .collect();
+        println!("  {profile:<14} {}", ideal.join("  "));
+    }
+}

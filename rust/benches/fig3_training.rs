@@ -1,0 +1,91 @@
+//! Bench F3 — regenerates the paper's **Figure 3** (average per-epoch
+//! training time + speedup, model × dataset × framework) and the §5
+//! headline numbers (R1: 27× GCN / 12× SAGE-sum / 8× SAGE-mean / 18× GIN,
+//! R2: CogDL comparison, R3: 93× vanilla-dense GCN).
+//!
+//! ```text
+//! cargo bench --bench fig3_training
+//! ```
+//!
+//! Frameworks (DESIGN.md §5 maps them to the paper's columns):
+//!   iSpLib (tuned+cached) | PT2 (trusted, uncached) | PT1 (+ per-epoch
+//!   re-normalisation) | PT2-MP (gather/scatter) | Dense (vanilla / CogDL).
+//!
+//! Env knobs: `ISPLIB_BENCH_SCALE` (default 1024), `ISPLIB_BENCH_EPOCHS`
+//! (default 5), `ISPLIB_BENCH_QUICK` (2 datasets, GCN only).
+
+use isplib::coordinator::{
+    figure3_grid, headline_speedups, render_figure3, ExperimentConfig,
+};
+use isplib::data::paper_specs;
+use isplib::gnn::GnnModel;
+use isplib::train::Backend;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let quick = std::env::var("ISPLIB_BENCH_QUICK").is_ok();
+    let scale = env_usize("ISPLIB_BENCH_SCALE", 1024);
+    let epochs = env_usize("ISPLIB_BENCH_EPOCHS", 5);
+    let cfg = ExperimentConfig { scale, epochs, hidden: 32, ..ExperimentConfig::default() };
+
+    let mut specs = paper_specs();
+    // Figure 3 shows GCN, SAGE-sum and GIN; §5 additionally quotes
+    // SAGE-mean — include all four so R1 is fully regenerated.
+    let mut models =
+        vec![GnnModel::Gcn, GnnModel::SageSum, GnnModel::SageMean, GnnModel::Gin];
+    if quick {
+        specs.truncate(2);
+        models.truncate(1);
+    }
+    let backends = Backend::NATIVE_ALL;
+
+    println!(
+        "=== Figure 3: per-epoch training time ({} models × {} datasets × {} frameworks, \
+         {epochs} epochs, scale 1/{scale}) ===\n",
+        models.len(),
+        specs.len(),
+        backends.len()
+    );
+
+    let cells = figure3_grid(&cfg, &models, &specs, &backends).expect("grid");
+    print!("{}", render_figure3(&cells));
+
+    // R1: headline speedups vs PT2 (max over datasets per model)
+    println!("\nR1 — headline speedups vs PT2 (paper: GCN 27x, SAGE-sum 12x, SAGE-mean 8x, GIN 18x):");
+    for (model, speedup) in headline_speedups(&cells) {
+        println!("  {model:<10} {speedup:6.2}x");
+    }
+
+    // R2/R3: iSpLib vs the Dense column (vanilla-PyTorch / CogDL-small
+    // comparator; paper: up to 93x for vanilla GCN on Reddit, 43x CogDL)
+    println!("\nR2/R3 — speedups vs Dense (vanilla / CogDL comparator):");
+    let mut best: Vec<(String, f64)> = Vec::new();
+    for c in cells.iter().filter(|c| c.framework == "Dense") {
+        match best.iter_mut().find(|(m, _)| *m == c.model) {
+            Some((_, b)) => *b = b.max(c.speedup_vs_isplib),
+            None => best.push((c.model.clone(), c.speedup_vs_isplib)),
+        }
+    }
+    for (model, speedup) in best {
+        println!("  {model:<10} {speedup:6.2}x");
+    }
+
+    // sanity: the drop-in claim — all frameworks reach comparable loss
+    for chunk in cells.chunks(backends.len()) {
+        let base = chunk[0].final_loss;
+        for c in chunk {
+            assert!(
+                (c.final_loss - base).abs() < 0.2,
+                "loss drift in {}/{}: {} vs {}",
+                c.dataset,
+                c.model,
+                c.final_loss,
+                base
+            );
+        }
+    }
+    println!("\nloss-parity check across frameworks: OK (drop-in claim holds)");
+}

@@ -1,0 +1,115 @@
+//! Bench D1 — kernel micro-benchmarks behind the paper's §6 discussion:
+//! register blocking wins at small K-blocks and *spills* past the register
+//! budget (the downslope of Figure 2's bell), the trusted-vs-generated gap,
+//! semiring overheads, and the FusedMM fusion benefit.
+//!
+//! ```text
+//! cargo bench --bench kernels_micro
+//! ```
+
+use isplib::data::spec_by_name;
+use isplib::dense::Dense;
+use isplib::kernels::{
+    fusedmm, sddmm, spmm, spmm_dense_ref, EdgeOp, KernelChoice, Semiring, GENERATED_KBS,
+};
+use isplib::util::bench::BenchSet;
+use isplib::util::rng::Rng;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let scale = env_usize("ISPLIB_BENCH_SCALE", 512);
+    let ds = spec_by_name("reddit").unwrap().instantiate(scale, 7).unwrap();
+    let a = &ds.adj;
+    let mut rng = Rng::seed_from_u64(9);
+    println!(
+        "workload: scaled reddit, {} nodes, {} nnz, avg deg {:.1}\n",
+        a.rows,
+        a.nnz(),
+        a.nnz() as f64 / a.rows as f64
+    );
+
+    // --- D1a: K-block sweep at fixed K (register blocking → spilling) -----
+    let k = 128;
+    let x = Dense::uniform(a.rows, k, 1.0, &mut rng);
+    let mut set = BenchSet::new(format!("K-block sweep at K={k} (sum)").as_str());
+    set.header();
+    let trusted_name = "spmm/trusted".to_string();
+    set.case(&trusted_name, || {
+        std::hint::black_box(spmm(a, &x, Semiring::Sum, KernelChoice::Trusted, 1).unwrap());
+    });
+    for kb in GENERATED_KBS {
+        if k % kb != 0 {
+            continue;
+        }
+        set.case(&format!("spmm/generated kb={kb}"), || {
+            std::hint::black_box(
+                spmm(a, &x, Semiring::Sum, KernelChoice::Generated { kb }, 1).unwrap(),
+            );
+        });
+    }
+    if let Some(t) = set.median(&trusted_name) {
+        println!("\nspeedup over trusted:");
+        for r in set.results().iter().skip(1) {
+            println!("  {:<28} {:5.2}x", r.name, t / r.median_secs);
+        }
+    }
+
+    // --- D1b: semiring overhead (only sum has generated kernels, §3.4) ----
+    let x32 = Dense::uniform(a.rows, 32, 1.0, &mut rng);
+    let mut set = BenchSet::new("semiring sweep at K=32 (trusted)");
+    set.header();
+    for op in Semiring::ALL {
+        set.case(&format!("spmm/{}", op.name()), || {
+            std::hint::black_box(spmm(a, &x32, op, KernelChoice::Trusted, 1).unwrap());
+        });
+    }
+
+    // --- D1c: FusedMM vs unfused SDDMM→SpMM -------------------------------
+    let d = 16;
+    let u = Dense::uniform(a.rows, d, 1.0, &mut rng);
+    let v = Dense::uniform(a.rows, d, 1.0, &mut rng);
+    let mut set = BenchSet::new("FusedMM vs unfused (K=32, d=16)");
+    set.header();
+    set.case("unfused/sddmm-then-spmm", || {
+        let s = sddmm(a, &u, &v, 1).unwrap();
+        std::hint::black_box(spmm(&s, &x32, Semiring::Sum, KernelChoice::Trusted, 1).unwrap());
+    });
+    set.case("fused/fusedmm-dot", || {
+        std::hint::black_box(
+            fusedmm(a, &x32, Some(&u), Some(&v), EdgeOp::Dot, 1).unwrap(),
+        );
+    });
+    let (Some(unf), Some(fus)) =
+        (set.median("unfused/sddmm-then-spmm"), set.median("fused/fusedmm-dot"))
+    else {
+        return;
+    };
+    println!("\nfusion speedup: {:.2}x (FusedMM paper reports ~1.3-2x on CPU)", unf / fus);
+
+    // --- D1d: sparse kernel vs densified-adjacency GEMM (the vanilla /
+    //     CogDL-small-graph execution strategy, R3's comparator) ----------
+    let a_dense = a.to_dense();
+    let mut set = BenchSet::new("sparse vs densified GEMM (K=32)");
+    set.header();
+    set.case("spmm/trusted", || {
+        std::hint::black_box(spmm(a, &x32, Semiring::Sum, KernelChoice::Trusted, 1).unwrap());
+    });
+    set.case("dense/adjacency-gemm", || {
+        std::hint::black_box(a_dense.matmul(&x32).unwrap());
+    });
+    set.case("spmm/semiring-ref(oracle)", || {
+        std::hint::black_box(spmm_dense_ref(a, &x32, Semiring::Sum).unwrap());
+    });
+    let (Some(sp), Some(dn)) = (set.median("spmm/trusted"), set.median("dense/adjacency-gemm"))
+    else {
+        return;
+    };
+    println!(
+        "\nsparse-over-dense speedup: {:.1}x (density {:.4} → paper's 93x claim scales with 1/density)",
+        dn / sp,
+        a.nnz() as f64 / (a.rows as f64 * a.cols as f64)
+    );
+}

@@ -1,0 +1,51 @@
+//! Bench T1 — regenerates the paper's **Table 1** (dataset inventory) and
+//! times the generator substrate.
+//!
+//! ```text
+//! cargo bench --bench table1_datasets
+//! ```
+//!
+//! Columns: paper-scale spec (feature count, classes, nodes, edges) and the
+//! generated instantiation at this run's scale (override with
+//! `ISPLIB_BENCH_SCALE`, default 256).
+
+use isplib::coordinator::{render_table1, table1_rows, ExperimentConfig};
+use isplib::data::paper_specs;
+use isplib::util::bench::BenchSet;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let scale = env_usize("ISPLIB_BENCH_SCALE", 256);
+    let cfg = ExperimentConfig { scale, ..ExperimentConfig::default() };
+
+    println!("=== Table 1: datasets (paper spec + generated at 1/{scale} nodes) ===\n");
+    let rows = table1_rows(&cfg).expect("generate table 1");
+    print!("{}", render_table1(&rows));
+
+    let mut set = BenchSet::new("dataset generation time");
+    set.header();
+    for spec in paper_specs() {
+        set.case(&format!("generate/{}", spec.name), || {
+            let ds = spec.instantiate(scale, 7).unwrap();
+            std::hint::black_box(ds.num_edges());
+        });
+    }
+
+    // paper-vs-generated fidelity summary
+    println!("\nfidelity (generated avg degree / capped target):");
+    for r in &rows {
+        let paper_deg = r.paper_edges as f64 / r.paper_nodes as f64;
+        let target = paper_deg.min(r.gen_nodes as f64 / 4.0);
+        println!(
+            "  {:<16} paper_deg={:>7.1} target={:>7.1} generated={:>7.1} ratio={:.2}",
+            r.name,
+            paper_deg,
+            target,
+            r.gen_avg_degree,
+            r.gen_avg_degree / target
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! Reverse-mode autodiff tape over dense + sparse matrix ops.
+//!
+//! This is the substrate that plays PyTorch-autograd's role in the paper's
+//! baselines: a dynamic tape recording forward ops, then a reverse sweep
+//! producing gradients. The GNN trainer builds every model (GCN, SAGE, GIN)
+//! on this tape, and the tape's `spmm` node is where iSpLib plugs in:
+//!
+//! * the **forward** kernel is resolved through the global
+//!   [`KernelRegistry`](crate::autotune::KernelRegistry) (so `patch()` /
+//!   the tuner control it),
+//! * the **backward** needs `Aᵀ`; a cached operand carries it
+//!   pre-transposed (paper §3.3), an uncached operand recomputes the
+//!   transpose on *every* backward step — the two cost models the
+//!   `cache_backprop` bench compares.
+
+mod ops;
+mod tape;
+
+pub use ops::{SpmmImpl, SpmmOperand};
+pub use tape::{Tape, Var};

@@ -1,0 +1,20 @@
+//! Auto-tuning (paper §3.2): probe the hardware, benchmark the generated
+//! kernel family against the trusted kernel over a sweep of embedding
+//! sizes, and persist the winning configuration.
+//!
+//! The paper's tuner emits a "tuning graph" — speedup of generated over
+//! trusted per embedding size K — whose peak identifies the ideal K for the
+//! machine (32 on their Intel, 64 on their AMD). [`Tuner::sweep`]
+//! regenerates exactly that curve (Figure 2); [`Tuner::tune`] picks the
+//! best [`KernelChoice`] per `(graph, K)` and records it in a
+//! [`TuningDb`] so later runs skip the probe.
+
+mod probe;
+mod registry;
+mod report;
+mod tuner;
+
+pub use probe::{detect_host, HardwareProfile, SimdClass};
+pub use registry::{KernelRegistry, RegistryEntry};
+pub use report::{render_ascii_chart, TuningPoint, TuningReport};
+pub use tuner::{TuneConfig, Tuner, TuningDb};

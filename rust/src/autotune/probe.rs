@@ -1,0 +1,210 @@
+//! Hardware probing (paper §3.2): "iSpLib probes the hardware to determine
+//! SIMD vector length and generates kernels for various multiples of these
+//! vector lengths (VLEN)".
+//!
+//! [`detect_host`] inspects the actual machine (x86 feature detection; NEON
+//! implied on aarch64). Because the paper's Figure 2 compares an Intel
+//! Skylake (AVX-512) against an AMD EPYC (AVX2) and we may be running on
+//! neither, [`HardwareProfile`] is also constructible as a *named model* of
+//! those machines: the profile fixes the kernel geometry (VLEN, register
+//! budget) so the generated-kernel family is instantiated exactly as it
+//! would be on that CPU, while wall-clock comes from wherever we run.
+
+use crate::error::{Error, Result};
+use crate::kernels::GENERATED_KBS;
+
+/// SIMD instruction class → f32 lanes per vector register.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdClass {
+    /// 128-bit: SSE / NEON — 4 f32 lanes.
+    V128,
+    /// 256-bit: AVX/AVX2 — 8 f32 lanes.
+    V256,
+    /// 512-bit: AVX-512 — 16 f32 lanes.
+    V512,
+    /// No SIMD detected; scalar fallback.
+    Scalar,
+}
+
+impl SimdClass {
+    /// f32 lanes per vector (the paper's VLEN).
+    pub fn vlen_f32(self) -> usize {
+        match self {
+            SimdClass::V128 => 4,
+            SimdClass::V256 => 8,
+            SimdClass::V512 => 16,
+            SimdClass::Scalar => 1,
+        }
+    }
+}
+
+/// Everything the kernel generator needs to know about a machine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HardwareProfile {
+    /// Human-readable name ("host", "intel-skylake", "amd-epyc").
+    pub name: String,
+    /// SIMD class (determines VLEN).
+    pub simd: SimdClass,
+    /// Number of architectural vector registers available for accumulators.
+    /// 32 for AVX-512/NEON-SVE-class, 16 for AVX2/SSE.
+    pub vector_registers: usize,
+    /// Physical cores (thread budget for the parallel kernels).
+    pub cores: usize,
+    /// L2 cache per core in bytes (drives the row-block working-set bound).
+    pub l2_bytes: usize,
+}
+
+impl HardwareProfile {
+    /// The paper's Intel testbed: Skylake-SP, AVX-512, 48 cores.
+    pub fn intel_skylake() -> Self {
+        HardwareProfile {
+            name: "intel-skylake".into(),
+            simd: SimdClass::V512,
+            vector_registers: 32,
+            cores: 48,
+            l2_bytes: 1024 * 1024,
+        }
+    }
+
+    /// The paper's AMD testbed: EPYC 7763 (Zen3), AVX2, 64 cores.
+    pub fn amd_epyc() -> Self {
+        HardwareProfile {
+            name: "amd-epyc".into(),
+            simd: SimdClass::V256,
+            vector_registers: 16,
+            cores: 64,
+            l2_bytes: 512 * 1024,
+        }
+    }
+
+    /// Look up a named profile, or probe the host for `"host"`.
+    pub fn named(name: &str) -> Result<Self> {
+        match name {
+            "host" => Ok(detect_host()),
+            "intel-skylake" | "intel" => Ok(Self::intel_skylake()),
+            "amd-epyc" | "amd" => Ok(Self::amd_epyc()),
+            other => Err(Error::UnknownName(format!("hardware profile '{other}'"))),
+        }
+    }
+
+    /// The paper's VLEN for this machine.
+    pub fn vlen(&self) -> usize {
+        self.simd.vlen_f32()
+    }
+
+    /// The K-blocks the generator instantiates for this machine: multiples
+    /// of VLEN that fit the register budget, intersected with the
+    /// monomorphised family we actually ship ([`GENERATED_KBS`]).
+    ///
+    /// Register model: a KB-wide f32 accumulator strip occupies
+    /// `KB / vlen` vector registers; we leave half the file for the
+    /// streamed operands, so KB ≤ `vlen * vector_registers / 2`. Blocks
+    /// beyond that are still *instantiable* (the paper measures them — the
+    /// downslope of the bell curve is register spilling, §6) so we keep one
+    /// extra size past the budget.
+    pub fn candidate_kbs(&self) -> Vec<usize> {
+        let vlen = self.vlen();
+        let budget = vlen * self.vector_registers / 2;
+        let mut out: Vec<usize> = GENERATED_KBS
+            .iter()
+            .copied()
+            .filter(|&kb| kb % vlen == 0 && kb <= budget)
+            .collect();
+        // one spilling candidate past the budget, to expose the downslope
+        if let Some(&next) = GENERATED_KBS.iter().find(|&&kb| kb % vlen == 0 && kb > budget) {
+            out.push(next);
+        }
+        if out.is_empty() {
+            // scalar machines: smallest block still beats dynamic loops
+            out.push(GENERATED_KBS[0]);
+        }
+        out
+    }
+
+    /// Predicted sweet-spot K-block for this machine (peak of the bell
+    /// curve): the largest candidate within the register budget.
+    pub fn predicted_best_kb(&self) -> usize {
+        let vlen = self.vlen();
+        let budget = vlen * self.vector_registers / 2;
+        self.candidate_kbs().iter().copied().filter(|&kb| kb <= budget).max().unwrap_or(GENERATED_KBS[0])
+    }
+}
+
+/// Probe the actual host machine.
+pub fn detect_host() -> HardwareProfile {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    #[cfg(target_arch = "x86_64")]
+    {
+        let simd = if is_x86_feature_detected!("avx512f") {
+            SimdClass::V512
+        } else if is_x86_feature_detected!("avx2") {
+            SimdClass::V256
+        } else {
+            SimdClass::V128
+        };
+        let vector_registers = if simd == SimdClass::V512 { 32 } else { 16 };
+        HardwareProfile {
+            name: "host".into(),
+            simd,
+            vector_registers,
+            cores,
+            l2_bytes: 512 * 1024,
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        HardwareProfile {
+            name: "host".into(),
+            simd: SimdClass::V128,
+            vector_registers: 32,
+            cores,
+            l2_bytes: 512 * 1024,
+        }
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        HardwareProfile {
+            name: "host".into(),
+            simd: SimdClass::Scalar,
+            vector_registers: 8,
+            cores,
+            l2_bytes: 256 * 1024,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_probe_is_sane() {
+        let h = detect_host();
+        assert!(h.cores >= 1);
+        assert!(h.vlen() >= 1);
+        assert!(!h.candidate_kbs().is_empty());
+    }
+
+    #[test]
+    fn paper_profiles() {
+        let intel = HardwareProfile::intel_skylake();
+        assert_eq!(intel.vlen(), 16);
+        // AVX-512, 32 regs → budget 256; candidates are VLEN multiples ≤ 256
+        assert_eq!(intel.candidate_kbs(), vec![16, 32, 64, 128]);
+        assert_eq!(intel.predicted_best_kb(), 128);
+
+        let amd = HardwareProfile::amd_epyc();
+        assert_eq!(amd.vlen(), 8);
+        // AVX2, 16 regs → budget 64; plus one spilling candidate (128)
+        assert_eq!(amd.candidate_kbs(), vec![8, 16, 32, 64, 128]);
+        assert_eq!(amd.predicted_best_kb(), 64);
+    }
+
+    #[test]
+    fn named_lookup() {
+        assert_eq!(HardwareProfile::named("intel").unwrap().name, "intel-skylake");
+        assert_eq!(HardwareProfile::named("amd").unwrap().name, "amd-epyc");
+        assert_eq!(HardwareProfile::named("host").unwrap().name, "host");
+        assert!(HardwareProfile::named("sparc").is_err());
+    }
+}

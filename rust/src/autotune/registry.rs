@@ -1,0 +1,181 @@
+//! Kernel registry: the mutable seam between the tuner and the kernels.
+//!
+//! The trainer never calls a kernel directly; it asks the registry for the
+//! [`KernelChoice`] bound to `(context key, K, semiring)`. The tuner writes
+//! bindings; `patch()`/`unpatch()` (paper §3.6) toggle whether bindings are
+//! honoured at all — unpatched, every lookup returns the trusted kernel,
+//! which is exactly "PyTorch without iSpLib".
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::kernels::{KernelChoice, Semiring};
+
+/// One tuned binding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegistryEntry {
+    /// Kernel the tuner picked.
+    pub choice: KernelChoice,
+    /// Measured speedup over the trusted kernel at tuning time.
+    pub speedup: f64,
+}
+
+/// Process-wide kernel registry.
+///
+/// Keys are `(context, k, semiring)` where `context` is a caller-chosen
+/// string (dataset name, layer name, ...). Missing keys fall back to a
+/// default choice, which itself falls back to [`KernelChoice::Trusted`].
+pub struct KernelRegistry {
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    bindings: HashMap<(String, usize, Semiring), RegistryEntry>,
+    default_choice: KernelChoice,
+    patched: bool,
+}
+
+impl KernelRegistry {
+    /// A fresh registry (unpatched, trusted default).
+    pub fn new() -> Self {
+        KernelRegistry {
+            inner: Mutex::new(Inner {
+                bindings: HashMap::new(),
+                default_choice: KernelChoice::Trusted,
+                patched: false,
+            }),
+        }
+    }
+
+    /// The process-wide singleton used by `Trainer` and `patch()`.
+    pub fn global() -> &'static KernelRegistry {
+        static GLOBAL: OnceLock<KernelRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(KernelRegistry::new)
+    }
+
+    /// Bind a tuned choice for `(context, k, op)`.
+    pub fn bind(&self, context: &str, k: usize, op: Semiring, entry: RegistryEntry) {
+        let mut g = self.inner.lock().unwrap();
+        g.bindings.insert((context.to_string(), k, op), entry);
+    }
+
+    /// Set the fallback choice used when no binding matches.
+    pub fn set_default(&self, choice: KernelChoice) {
+        self.inner.lock().unwrap().default_choice = choice;
+    }
+
+    /// Resolve the kernel for a call. Unpatched registries always answer
+    /// `Trusted` — iSpLib disengaged.
+    pub fn resolve(&self, context: &str, k: usize, op: Semiring) -> KernelChoice {
+        let g = self.inner.lock().unwrap();
+        if !g.patched {
+            return KernelChoice::Trusted;
+        }
+        let choice = g
+            .bindings
+            .get(&(context.to_string(), k, op))
+            .map(|e| e.choice)
+            .unwrap_or(g.default_choice);
+        if choice.applicable(k, op) {
+            choice
+        } else {
+            KernelChoice::Trusted
+        }
+    }
+
+    /// Engage iSpLib routing (paper `patch()`).
+    pub fn set_patched(&self, on: bool) {
+        self.inner.lock().unwrap().patched = on;
+    }
+
+    /// Is routing engaged?
+    pub fn patched(&self) -> bool {
+        self.inner.lock().unwrap().patched
+    }
+
+    /// Number of bindings (diagnostics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().bindings.len()
+    }
+
+    /// True when no bindings exist.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all bindings (used between experiments).
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.bindings.clear();
+        g.default_choice = KernelChoice::Trusted;
+    }
+}
+
+impl Default for KernelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unpatched_always_trusted() {
+        let r = KernelRegistry::new();
+        r.bind("d", 64, Semiring::Sum, RegistryEntry {
+            choice: KernelChoice::Generated { kb: 16 },
+            speedup: 2.0,
+        });
+        assert_eq!(r.resolve("d", 64, Semiring::Sum), KernelChoice::Trusted);
+    }
+
+    #[test]
+    fn patched_resolves_binding_then_default() {
+        let r = KernelRegistry::new();
+        r.set_patched(true);
+        r.bind("d", 64, Semiring::Sum, RegistryEntry {
+            choice: KernelChoice::Generated { kb: 16 },
+            speedup: 2.0,
+        });
+        assert_eq!(r.resolve("d", 64, Semiring::Sum), KernelChoice::Generated { kb: 16 });
+        // unknown context → default (trusted)
+        assert_eq!(r.resolve("other", 64, Semiring::Sum), KernelChoice::Trusted);
+        r.set_default(KernelChoice::Generated { kb: 8 });
+        assert_eq!(r.resolve("other", 64, Semiring::Sum), KernelChoice::Generated { kb: 8 });
+    }
+
+    #[test]
+    fn inapplicable_binding_falls_back() {
+        let r = KernelRegistry::new();
+        r.set_patched(true);
+        // kb=16 can't serve K=20
+        r.bind("d", 20, Semiring::Sum, RegistryEntry {
+            choice: KernelChoice::Generated { kb: 16 },
+            speedup: 2.0,
+        });
+        assert_eq!(r.resolve("d", 20, Semiring::Sum), KernelChoice::Trusted);
+        // generated never serves non-sum semirings
+        r.bind("d", 64, Semiring::Max, RegistryEntry {
+            choice: KernelChoice::Generated { kb: 16 },
+            speedup: 2.0,
+        });
+        assert_eq!(r.resolve("d", 64, Semiring::Max), KernelChoice::Trusted);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let r = KernelRegistry::new();
+        r.set_patched(true);
+        r.set_default(KernelChoice::Generated { kb: 8 });
+        r.bind("d", 8, Semiring::Sum, RegistryEntry {
+            choice: KernelChoice::Generated { kb: 8 },
+            speedup: 1.5,
+        });
+        assert_eq!(r.len(), 1);
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.resolve("d", 8, Semiring::Sum), KernelChoice::Trusted);
+    }
+}

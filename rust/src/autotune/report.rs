@@ -1,0 +1,169 @@
+//! Tuning reports — the data behind the paper's Figure 2 "tuning graph".
+//!
+//! A [`TuningReport`] is one curve: per embedding size K, the measured
+//! speedup of the best generated kernel over the trusted kernel on a given
+//! dataset + hardware profile. [`render_ascii_chart`] draws the bell curve
+//! in the terminal; the JSON form feeds plotting scripts.
+
+use crate::util::json::Json;
+
+/// One point of the tuning curve.
+#[derive(Clone, Debug)]
+pub struct TuningPoint {
+    /// Embedding size K that was benchmarked.
+    pub k: usize,
+    /// K-block of the best generated kernel at this K.
+    pub best_kb: usize,
+    /// Trusted-kernel time (seconds, median of reps).
+    pub trusted_secs: f64,
+    /// Best generated-kernel time (seconds, median of reps).
+    pub generated_secs: f64,
+}
+
+impl TuningPoint {
+    /// Speedup of generated over trusted (>1 = generated wins).
+    pub fn speedup(&self) -> f64 {
+        if self.generated_secs > 0.0 {
+            self.trusted_secs / self.generated_secs
+        } else {
+            1.0
+        }
+    }
+}
+
+/// A full tuning curve for one `(dataset, hardware profile)` pair.
+#[derive(Clone, Debug)]
+pub struct TuningReport {
+    /// Dataset name.
+    pub dataset: String,
+    /// Hardware profile name.
+    pub profile: String,
+    /// Points, ascending in K.
+    pub points: Vec<TuningPoint>,
+}
+
+impl TuningReport {
+    /// The K with the highest generated-over-trusted speedup — the paper's
+    /// "ideal embedding size" (peak of the bell).
+    pub fn ideal_k(&self) -> Option<usize> {
+        self.points
+            .iter()
+            .max_by(|a, b| a.speedup().partial_cmp(&b.speedup()).unwrap())
+            .map(|p| p.k)
+    }
+
+    /// Max speedup across the sweep.
+    pub fn peak_speedup(&self) -> f64 {
+        self.points.iter().map(|p| p.speedup()).fold(1.0, f64::max)
+    }
+
+    /// JSON form (for `isplib tune --json` and plotting scripts).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(&self.dataset)),
+            ("profile", Json::str(&self.profile)),
+            (
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("k", Json::num(p.k as f64)),
+                                ("best_kb", Json::num(p.best_kb as f64)),
+                                ("trusted_secs", Json::num(p.trusted_secs)),
+                                ("generated_secs", Json::num(p.generated_secs)),
+                                ("speedup", Json::num(p.speedup())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Render a report as a terminal bar chart (the Figure 2 visual).
+pub fn render_ascii_chart(report: &TuningReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "tuning graph — dataset={} profile={}\n",
+        report.dataset, report.profile
+    ));
+    let maxsp = report.peak_speedup().max(1.0);
+    let width = 48usize;
+    for p in &report.points {
+        let sp = p.speedup();
+        let bars = ((sp / maxsp) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "  K={:<5} kb={:<4} {:>6.2}x |{}\n",
+            p.k,
+            p.best_kb,
+            sp,
+            "#".repeat(bars)
+        ));
+    }
+    if let Some(k) = report.ideal_k() {
+        out.push_str(&format!("  ideal K = {k} (peak {:.2}x)\n", report.peak_speedup()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TuningReport {
+        TuningReport {
+            dataset: "reddit".into(),
+            profile: "intel-skylake".into(),
+            points: vec![
+                TuningPoint { k: 16, best_kb: 16, trusted_secs: 1.0, generated_secs: 0.8 },
+                TuningPoint { k: 32, best_kb: 32, trusted_secs: 1.0, generated_secs: 0.5 },
+                TuningPoint { k: 64, best_kb: 32, trusted_secs: 1.0, generated_secs: 0.7 },
+            ],
+        }
+    }
+
+    #[test]
+    fn ideal_k_is_peak() {
+        let r = sample();
+        assert_eq!(r.ideal_k(), Some(32));
+        assert!((r.peak_speedup() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speedup_handles_zero_time() {
+        let p = TuningPoint { k: 8, best_kb: 8, trusted_secs: 1.0, generated_secs: 0.0 };
+        assert_eq!(p.speedup(), 1.0);
+    }
+
+    #[test]
+    fn chart_contains_every_k() {
+        let r = sample();
+        let chart = render_ascii_chart(&r);
+        for p in &r.points {
+            assert!(chart.contains(&format!("K={:<5}", p.k)));
+        }
+        assert!(chart.contains("ideal K = 32"));
+    }
+
+    #[test]
+    fn json_shape() {
+        let r = sample();
+        let j = r.to_json();
+        assert_eq!(j.get("dataset").unwrap().as_str().unwrap(), "reddit");
+        assert_eq!(j.get("points").unwrap().as_arr().unwrap().len(), 3);
+        // parse back the printed form
+        let back = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(back.get("profile").unwrap().as_str().unwrap(), "intel-skylake");
+    }
+
+    #[test]
+    fn empty_report() {
+        let r = TuningReport { dataset: "x".into(), profile: "y".into(), points: vec![] };
+        assert_eq!(r.ideal_k(), None);
+        assert_eq!(r.peak_speedup(), 1.0);
+        let _ = render_ascii_chart(&r);
+    }
+}

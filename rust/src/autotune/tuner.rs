@@ -1,0 +1,314 @@
+//! The tuner: measure, choose, persist.
+//!
+//! [`Tuner::sweep`] reproduces the paper's tuning procedure: for each
+//! embedding size K in the sweep, time the trusted kernel and every
+//! applicable generated kernel on the *actual dataset* (the paper tunes
+//! "against a given dataset"), and record the best. [`Tuner::tune`] then
+//! binds the winner into the [`KernelRegistry`] and appends it to a
+//! JSON-persisted [`TuningDb`] so subsequent runs skip measurement.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::dense::Dense;
+use crate::error::Result;
+use crate::util::json::Json;
+use crate::kernels::{spmm, KernelChoice, Semiring};
+use crate::sparse::Csr;
+
+use super::{HardwareProfile, KernelRegistry, RegistryEntry, TuningPoint, TuningReport};
+
+/// Tuning sweep configuration.
+#[derive(Clone, Debug)]
+pub struct TuneConfig {
+    /// Embedding sizes to sweep — the paper uses 16..1024 powers of two.
+    pub ks: Vec<usize>,
+    /// Timing repetitions per point (median taken).
+    pub reps: usize,
+    /// Warmup runs per kernel before timing.
+    pub warmup: usize,
+    /// Thread budget for the kernels (0 = rayon default).
+    pub threads: usize,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig { ks: vec![16, 32, 64, 128, 256, 512, 1024], reps: 3, warmup: 1, threads: 1 }
+    }
+}
+
+impl TuneConfig {
+    /// A fast configuration for tests/CI (small Ks, one rep).
+    pub fn quick() -> Self {
+        TuneConfig { ks: vec![8, 16, 32], reps: 1, warmup: 0, threads: 1 }
+    }
+}
+
+/// Persisted tuning database: `(dataset, profile, k)` → best kernel.
+#[derive(Clone, Debug, Default)]
+pub struct TuningDb {
+    /// Keyed by `"dataset/profile/k"`.
+    pub entries: HashMap<String, DbEntry>,
+}
+
+/// One persisted tuning decision.
+#[derive(Clone, Debug)]
+pub struct DbEntry {
+    /// Winning kernel ("trusted" or a generated kb).
+    pub kb: Option<usize>,
+    /// Measured speedup over trusted.
+    pub speedup: f64,
+}
+
+impl TuningDb {
+    fn key(dataset: &str, profile: &str, k: usize) -> String {
+        format!("{dataset}/{profile}/{k}")
+    }
+
+    /// Load from a JSON file; missing file → empty DB.
+    pub fn load(path: &Path) -> Result<Self> {
+        if !path.exists() {
+            return Ok(TuningDb::default());
+        }
+        let text = std::fs::read_to_string(path)?;
+        let json = Json::parse(&text)?;
+        let mut entries = HashMap::new();
+        if let Json::Obj(map) = json.get("entries")? {
+            for (key, val) in map {
+                let kb = match val.get_opt("kb") {
+                    Some(Json::Null) | None => None,
+                    Some(v) => Some(v.as_usize()?),
+                };
+                let speedup = val.get("speedup")?.as_f64()?;
+                entries.insert(key.clone(), DbEntry { kb, speedup });
+            }
+        }
+        Ok(TuningDb { entries })
+    }
+
+    /// Persist to a JSON file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut map = std::collections::BTreeMap::new();
+        for (key, e) in &self.entries {
+            let kb = match e.kb {
+                Some(kb) => Json::num(kb as f64),
+                None => Json::Null,
+            };
+            map.insert(
+                key.clone(),
+                Json::obj(vec![("kb", kb), ("speedup", Json::num(e.speedup))]),
+            );
+        }
+        let doc = Json::obj(vec![("entries", Json::Obj(map))]);
+        std::fs::write(path, doc.pretty())?;
+        Ok(())
+    }
+
+    /// Look up a prior decision.
+    pub fn get(&self, dataset: &str, profile: &str, k: usize) -> Option<&DbEntry> {
+        self.entries.get(&Self::key(dataset, profile, k))
+    }
+
+    /// Record a decision.
+    pub fn put(&mut self, dataset: &str, profile: &str, k: usize, entry: DbEntry) {
+        self.entries.insert(Self::key(dataset, profile, k), entry);
+    }
+}
+
+/// The auto-tuner.
+pub struct Tuner {
+    /// Kernel geometry to tune for.
+    pub profile: HardwareProfile,
+    /// Sweep settings.
+    pub config: TuneConfig,
+}
+
+impl Tuner {
+    /// Tuner for a hardware profile with default sweep settings.
+    pub fn new(profile: HardwareProfile) -> Self {
+        Tuner { profile, config: TuneConfig::default() }
+    }
+
+    /// Tuner with explicit config.
+    pub fn with_config(profile: HardwareProfile, config: TuneConfig) -> Self {
+        Tuner { profile, config }
+    }
+
+    /// Median-of-reps timing of one kernel choice.
+    fn time_choice(&self, a: &Csr, x: &Dense, choice: KernelChoice) -> Result<f64> {
+        for _ in 0..self.config.warmup {
+            spmm(a, x, Semiring::Sum, choice, self.config.threads)?;
+        }
+        let mut times = Vec::with_capacity(self.config.reps);
+        for _ in 0..self.config.reps.max(1) {
+            let t0 = Instant::now();
+            let y = spmm(a, x, Semiring::Sum, choice, self.config.threads)?;
+            times.push(t0.elapsed().as_secs_f64());
+            std::hint::black_box(&y.data[0]);
+        }
+        times.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        Ok(times[times.len() / 2])
+    }
+
+    /// Run the full tuning sweep for one dataset adjacency — the Figure 2
+    /// curve. Feature matrices are synthesised per K (contents don't affect
+    /// kernel timing, only shape does).
+    pub fn sweep(&self, dataset: &str, a: &Csr) -> Result<TuningReport> {
+        let mut points = Vec::with_capacity(self.config.ks.len());
+        for &k in &self.config.ks {
+            let x = deterministic_features(a.cols, k);
+            let trusted_secs = self.time_choice(a, &x, KernelChoice::Trusted)?;
+            // best applicable generated kernel for this K on this profile
+            let mut best: Option<(usize, f64)> = None;
+            for kb in self.profile.candidate_kbs() {
+                let choice = KernelChoice::Generated { kb };
+                if !choice.applicable(k, Semiring::Sum) {
+                    continue;
+                }
+                let t = self.time_choice(a, &x, choice)?;
+                if best.map(|(_, bt)| t < bt).unwrap_or(true) {
+                    best = Some((kb, t));
+                }
+            }
+            let (best_kb, generated_secs) = best.unwrap_or((0, trusted_secs));
+            points.push(TuningPoint { k, best_kb, trusted_secs, generated_secs });
+        }
+        Ok(TuningReport { dataset: dataset.to_string(), profile: self.profile.name.clone(), points })
+    }
+
+    /// Tune a single `(dataset, K)` pair: consult the DB, measure on a miss,
+    /// bind the winner into the registry, and record it in the DB.
+    pub fn tune(
+        &self,
+        dataset: &str,
+        a: &Csr,
+        k: usize,
+        registry: &KernelRegistry,
+        db: &mut TuningDb,
+    ) -> Result<KernelChoice> {
+        if let Some(e) = db.get(dataset, &self.profile.name, k) {
+            let choice = match e.kb {
+                Some(kb) => KernelChoice::Generated { kb },
+                None => KernelChoice::Trusted,
+            };
+            registry.bind(dataset, k, Semiring::Sum, RegistryEntry {
+                choice,
+                speedup: e.speedup,
+            });
+            return Ok(choice);
+        }
+
+        let x = deterministic_features(a.cols, k);
+        let trusted = self.time_choice(a, &x, KernelChoice::Trusted)?;
+        let mut best_choice = KernelChoice::Trusted;
+        let mut best_time = trusted;
+        for kb in self.profile.candidate_kbs() {
+            let choice = KernelChoice::Generated { kb };
+            if !choice.applicable(k, Semiring::Sum) {
+                continue;
+            }
+            let t = self.time_choice(a, &x, choice)?;
+            if t < best_time {
+                best_time = t;
+                best_choice = choice;
+            }
+        }
+        let speedup = if best_time > 0.0 { trusted / best_time } else { 1.0 };
+        registry.bind(dataset, k, Semiring::Sum, RegistryEntry { choice: best_choice, speedup });
+        db.put(dataset, &self.profile.name, k, DbEntry {
+            kb: match best_choice {
+                KernelChoice::Generated { kb } => Some(kb),
+                KernelChoice::Trusted => None,
+            },
+            speedup,
+        });
+        Ok(best_choice)
+    }
+}
+
+/// Deterministic pseudo-random features (no RNG dependency in the hot
+/// timing path; values are irrelevant to timing, shape is everything).
+fn deterministic_features(rows: usize, k: usize) -> Dense {
+    let mut x = Dense::zeros(rows, k);
+    for (i, v) in x.data.iter_mut().enumerate() {
+        *v = ((i as f32) * 0.618).fract() - 0.5;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn graph(n: usize, deg: usize, seed: u64) -> Csr {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            for _ in 0..deg {
+                coo.push(r, rng.gen_range(n), 1.0);
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn sweep_produces_point_per_k() {
+        let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+        let a = graph(64, 4, 51);
+        let report = tuner.sweep("toy", &a).unwrap();
+        assert_eq!(report.points.len(), 3);
+        assert!(report.ideal_k().is_some());
+        for p in &report.points {
+            assert!(p.trusted_secs > 0.0);
+            assert!(p.generated_secs > 0.0);
+        }
+    }
+
+    #[test]
+    fn tune_binds_registry_and_db() {
+        let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+        let a = graph(48, 3, 52);
+        let registry = KernelRegistry::new();
+        registry.set_patched(true);
+        let mut db = TuningDb::default();
+        let choice = tuner.tune("toy", &a, 16, &registry, &mut db).unwrap();
+        assert!(choice.applicable(16, Semiring::Sum));
+        assert_eq!(registry.resolve("toy", 16, Semiring::Sum), choice);
+        assert!(db.get("toy", "amd-epyc", 16).is_some());
+    }
+
+    #[test]
+    fn tune_db_hit_skips_measurement() {
+        let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+        let a = graph(32, 3, 53);
+        let registry = KernelRegistry::new();
+        registry.set_patched(true);
+        let mut db = TuningDb::default();
+        db.put("toy", "amd-epyc", 32, DbEntry { kb: Some(8), speedup: 3.0 });
+        let choice = tuner.tune("toy", &a, 32, &registry, &mut db).unwrap();
+        assert_eq!(choice, KernelChoice::Generated { kb: 8 });
+        assert_eq!(registry.resolve("toy", 32, Semiring::Sum), choice);
+    }
+
+    #[test]
+    fn db_save_load_roundtrip() {
+        let dir = crate::util::tmp::TempDir::new().unwrap();
+        let path = dir.path().join("tune.json");
+        let mut db = TuningDb::default();
+        db.put("d", "p", 64, DbEntry { kb: None, speedup: 1.0 });
+        db.put("d", "p", 32, DbEntry { kb: Some(16), speedup: 2.5 });
+        db.save(&path).unwrap();
+        let back = TuningDb::load(&path).unwrap();
+        assert!(back.get("d", "p", 64).unwrap().kb.is_none());
+        assert_eq!(back.get("d", "p", 32).unwrap().kb, Some(16));
+        // missing file is fine
+        let empty = TuningDb::load(&dir.path().join("missing.json")).unwrap();
+        assert!(empty.entries.is_empty());
+    }
+}

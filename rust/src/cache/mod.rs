@@ -1,0 +1,284 @@
+//! Cache-enabled backpropagation (paper §3.3).
+//!
+//! Training a GNN runs the *same* sparse matrix through forward and backward
+//! every epoch. The backward of `Y = spmm(A, X)` w.r.t. `X` is
+//! `spmm(Aᵀ, dY)` — so an uncached implementation re-derives `Aᵀ` (an
+//! O(nnz) counting transpose) **every step**, plus the normalised adjacency
+//! `Â` and degree vectors at every forward. iSpLib "identifies common
+//! expressions required during the training epochs and caches them
+//! locally"; this module is that cache.
+//!
+//! [`BackpropCache`] memoises, per graph:
+//! * the normalised adjacency `Â` (per [`NormKind`]),
+//! * its transpose `Âᵀ` (identical for symmetric norms, but stored
+//!   explicitly because directed graphs and row-norms break symmetry),
+//! * degree vectors,
+//! * staged XLA literals of the CSR arrays (for the HLO backend, where
+//!   re-staging host→device buffers every step is the analogous waste).
+//!
+//! Everything is keyed by a caller-supplied graph identity plus the
+//! parameters of the derived object, with hit/miss counters so the
+//! cache-effectiveness experiment (bench `cache_backprop`) can report
+//! exactly what the paper's §6 discusses: caching matters more the bigger
+//! the graph and the more epochs you run.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::error::Result;
+use crate::sparse::{degree_vector, Csr, NormKind};
+
+/// Statistics for one cache instance.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups that found a ready entry.
+    pub hits: u64,
+    /// Lookups that had to compute.
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Hit ratio in [0,1]; 0 for an unused cache.
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    normalized: HashMap<(u64, NormKind), Csr>,
+    transposed: HashMap<(u64, NormKind), Csr>,
+    degrees: HashMap<u64, Vec<f32>>,
+    stats: CacheStats,
+    enabled: bool,
+    memory_bytes: usize,
+}
+
+/// The per-training-run expression cache.
+pub struct BackpropCache {
+    inner: Mutex<Inner>,
+}
+
+impl BackpropCache {
+    /// A fresh, enabled cache.
+    pub fn new() -> Self {
+        BackpropCache {
+            inner: Mutex::new(Inner { enabled: true, ..Inner::default() }),
+        }
+    }
+
+    /// A cache that never stores anything — the "uncached PyTorch"
+    /// baseline; every lookup recomputes (and counts as a miss).
+    pub fn disabled() -> Self {
+        BackpropCache { inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Toggle caching at runtime.
+    pub fn set_enabled(&self, on: bool) {
+        let mut g = self.inner.lock().unwrap();
+        g.enabled = on;
+        if !on {
+            g.normalized.clear();
+            g.transposed.clear();
+            g.degrees.clear();
+            g.memory_bytes = 0;
+        }
+    }
+
+    /// Is caching on?
+    pub fn enabled(&self) -> bool {
+        self.inner.lock().unwrap().enabled
+    }
+
+    /// Normalised adjacency `norm(A)`, cached per `(graph_id, norm)`.
+    pub fn normalized(&self, graph_id: u64, a: &Csr, norm: NormKind) -> Result<Csr> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            if let Some(hit) = g.normalized.get(&(graph_id, norm)).cloned() {
+                g.stats.hits += 1;
+                return Ok(hit);
+            }
+            g.stats.misses += 1;
+        }
+        let computed = norm.apply(a)?;
+        let mut g = self.inner.lock().unwrap();
+        if g.enabled {
+            g.memory_bytes += computed.memory_bytes();
+            g.normalized.insert((graph_id, norm), computed.clone());
+        }
+        Ok(computed)
+    }
+
+    /// Transposed normalised adjacency `norm(A)ᵀ` — the §3.3 common
+    /// expression of the backward pass.
+    pub fn transposed(&self, graph_id: u64, a_norm: &Csr, norm: NormKind) -> Result<Csr> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            if let Some(hit) = g.transposed.get(&(graph_id, norm)).cloned() {
+                g.stats.hits += 1;
+                return Ok(hit);
+            }
+            g.stats.misses += 1;
+        }
+        let computed = a_norm.transpose();
+        let mut g = self.inner.lock().unwrap();
+        if g.enabled {
+            g.memory_bytes += computed.memory_bytes();
+            g.transposed.insert((graph_id, norm), computed.clone());
+        }
+        Ok(computed)
+    }
+
+    /// Weighted degree vector of the raw adjacency.
+    pub fn degrees(&self, graph_id: u64, a: &Csr) -> Vec<f32> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            if let Some(hit) = g.degrees.get(&graph_id).cloned() {
+                g.stats.hits += 1;
+                return hit;
+            }
+            g.stats.misses += 1;
+        }
+        let computed = degree_vector(a);
+        let mut g = self.inner.lock().unwrap();
+        if g.enabled {
+            g.memory_bytes += computed.len() * std::mem::size_of::<f32>();
+            g.degrees.insert(graph_id, computed.clone());
+        }
+        computed
+    }
+
+    /// Current stats snapshot.
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Approximate resident bytes of cached objects.
+    pub fn memory_bytes(&self) -> usize {
+        self.inner.lock().unwrap().memory_bytes
+    }
+
+    /// Drop everything, keep the enabled flag and reset stats.
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.normalized.clear();
+        g.transposed.clear();
+        g.degrees.clear();
+        g.stats = CacheStats::default();
+        g.memory_bytes = 0;
+    }
+}
+
+impl Default for BackpropCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn ring(n: usize) -> Csr {
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            coo.push_sym(i, (i + 1) % n, 1.0);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn second_lookup_hits() {
+        let cache = BackpropCache::new();
+        let a = ring(10);
+        let n1 = cache.normalized(1, &a, NormKind::GcnSym).unwrap();
+        let n2 = cache.normalized(1, &a, NormKind::GcnSym).unwrap();
+        assert_eq!(n1, n2);
+        let s = cache.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 1);
+        assert!(cache.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn different_norms_are_different_entries() {
+        let cache = BackpropCache::new();
+        let a = ring(8);
+        cache.normalized(1, &a, NormKind::GcnSym).unwrap();
+        cache.normalized(1, &a, NormKind::RowMean).unwrap();
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn disabled_cache_always_misses_but_is_correct() {
+        let cache = BackpropCache::disabled();
+        let a = ring(6);
+        let n1 = cache.normalized(1, &a, NormKind::GcnSym).unwrap();
+        let n2 = cache.normalized(1, &a, NormKind::GcnSym).unwrap();
+        assert_eq!(n1, n2);
+        let s = cache.stats();
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.misses, 2);
+        assert_eq!(cache.memory_bytes(), 0);
+    }
+
+    #[test]
+    fn transpose_cached_matches_direct() {
+        let cache = BackpropCache::new();
+        let a = ring(7);
+        let an = cache.normalized(9, &a, NormKind::RowMean).unwrap();
+        let t1 = cache.transposed(9, &an, NormKind::RowMean).unwrap();
+        assert_eq!(t1, an.transpose());
+        let t2 = cache.transposed(9, &an, NormKind::RowMean).unwrap();
+        assert_eq!(t1, t2);
+        assert!(cache.stats().hits >= 1);
+    }
+
+    #[test]
+    fn degrees_cached() {
+        let cache = BackpropCache::new();
+        let a = ring(5);
+        let d1 = cache.degrees(3, &a);
+        let d2 = cache.degrees(3, &a);
+        assert_eq!(d1, d2);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+    }
+
+    #[test]
+    fn clear_resets() {
+        let cache = BackpropCache::new();
+        let a = ring(5);
+        cache.degrees(1, &a);
+        cache.clear();
+        assert_eq!(cache.stats(), CacheStats::default());
+        assert_eq!(cache.memory_bytes(), 0);
+        cache.degrees(1, &a);
+        assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn set_enabled_false_evicts() {
+        let cache = BackpropCache::new();
+        let a = ring(5);
+        cache.normalized(1, &a, NormKind::GcnSym).unwrap();
+        cache.set_enabled(false);
+        assert!(!cache.enabled());
+        assert_eq!(cache.memory_bytes(), 0);
+        cache.normalized(1, &a, NormKind::GcnSym).unwrap();
+        // recomputed, not stored
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn hit_ratio() {
+        let s = CacheStats { hits: 3, misses: 1 };
+        assert!((s.hit_ratio() - 0.75).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_ratio(), 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! The coordinator: experiment orchestration, the `patch()`/`unpatch()`
+//! integration seam, and the report emitters that regenerate the paper's
+//! tables and figures.
+
+pub mod experiments;
+pub mod patch;
+
+pub use experiments::{
+    figure2_sweep, figure3_grid, figure3_to_json, headline_speedups, render_figure3,
+    render_table1, table1_rows, ExperimentConfig, Figure3Cell, Table1Row,
+};

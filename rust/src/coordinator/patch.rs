@@ -1,0 +1,118 @@
+//! `patch()` / `unpatch()` — the paper's §3.6 two-line integration.
+//!
+//! In iSpLib the user writes
+//!
+//! ```python
+//! import isplib
+//! isplib.patch()          # all torch_sparse matmuls now hit iSpLib
+//! ...existing PyG code...
+//! isplib.unpatch()        # back to stock kernels
+//! ```
+//!
+//! Here the same seam is the global [`KernelRegistry`]: `patch()` engages
+//! tuned-kernel routing for every SpMM issued through the autodiff tape
+//! (i.e. every trainer in the process), `unpatch()` reverts all of them to
+//! the trusted kernel — no trainer code changes, exactly the drop-in
+//! semantics the paper advertises. A [`PatchGuard`] offers the RAII form.
+
+use crate::autotune::KernelRegistry;
+
+/// Engage iSpLib kernel routing process-wide.
+pub fn patch() {
+    KernelRegistry::global().set_patched(true);
+}
+
+/// Disengage iSpLib: every SpMM goes back to the trusted kernel.
+pub fn unpatch() {
+    KernelRegistry::global().set_patched(false);
+}
+
+/// Is routing currently engaged?
+pub fn is_patched() -> bool {
+    KernelRegistry::global().patched()
+}
+
+/// RAII guard: patches on construction, unpatches on drop — the analogue
+/// of the paper's single-function decorator form.
+pub struct PatchGuard(());
+
+impl PatchGuard {
+    /// Patch until the guard drops.
+    pub fn new() -> Self {
+        patch();
+        PatchGuard(())
+    }
+}
+
+impl Default for PatchGuard {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for PatchGuard {
+    fn drop(&mut self) {
+        unpatch();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::RegistryEntry;
+    use crate::kernels::{KernelChoice, Semiring};
+    use std::sync::Mutex;
+
+    // patch state is process-global; serialise the tests that touch it
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn patch_unpatch_toggle() {
+        let _g = LOCK.lock().unwrap();
+        unpatch();
+        assert!(!is_patched());
+        patch();
+        assert!(is_patched());
+        unpatch();
+        assert!(!is_patched());
+    }
+
+    #[test]
+    fn patch_idempotent() {
+        let _g = LOCK.lock().unwrap();
+        patch();
+        patch();
+        assert!(is_patched());
+        unpatch();
+        unpatch();
+        assert!(!is_patched());
+    }
+
+    #[test]
+    fn guard_unpatches_on_drop() {
+        let _g = LOCK.lock().unwrap();
+        unpatch();
+        {
+            let _p = PatchGuard::new();
+            assert!(is_patched());
+        }
+        assert!(!is_patched());
+    }
+
+    #[test]
+    fn unpatched_routing_ignores_bindings() {
+        let _g = LOCK.lock().unwrap();
+        let reg = KernelRegistry::global();
+        reg.bind("patch-test", 64, Semiring::Sum, RegistryEntry {
+            choice: KernelChoice::Generated { kb: 16 },
+            speedup: 2.0,
+        });
+        patch();
+        assert_eq!(
+            reg.resolve("patch-test", 64, Semiring::Sum),
+            KernelChoice::Generated { kb: 16 }
+        );
+        unpatch();
+        assert_eq!(reg.resolve("patch-test", 64, Semiring::Sum), KernelChoice::Trusted);
+    }
+}

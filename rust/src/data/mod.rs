@@ -1,0 +1,85 @@
+//! Datasets: the paper's Table 1 specs, synthetic generators that
+//! instantiate them, and one real graph (Zachary's karate club) for
+//! end-to-end validation.
+//!
+//! The paper evaluates on Reddit, Reddit2, OGBN-mag, OGBN-products-scale,
+//! Amazon Products and OGBN-Protein — up to 264M edges, none of which are
+//! redistributable or tractable here. Per DESIGN.md §5 we *simulate* them:
+//! each [`DatasetSpec`] preserves the shape knobs that drive sparse-kernel
+//! behaviour (node count, average degree, feature width, class count,
+//! degree skew), and a seeded R-MAT / Erdős–Rényi generator instantiates it
+//! at a configurable scale factor.
+
+mod features;
+mod generators;
+mod karate;
+mod specs;
+
+pub use features::{random_features, random_labels, train_test_masks};
+pub use generators::{erdos_renyi, rmat, GraphKind};
+pub use karate::karate_club;
+pub use specs::{paper_specs, spec_by_name, DatasetSpec};
+
+use crate::dense::Dense;
+use crate::error::{Error, Result};
+use crate::sparse::Csr;
+
+/// A fully materialised node-classification dataset.
+pub struct Dataset {
+    /// Name (spec name or "karate").
+    pub name: String,
+    /// Adjacency (unnormalised, undirected → symmetric).
+    pub adj: Csr,
+    /// Node feature matrix, `n × feature_dim`.
+    pub features: Dense,
+    /// Class label per node.
+    pub labels: Vec<usize>,
+    /// Number of classes.
+    pub num_classes: usize,
+    /// Training mask per node.
+    pub train_mask: Vec<bool>,
+    /// Test mask per node (complement of train).
+    pub test_mask: Vec<bool>,
+}
+
+impl Dataset {
+    /// Number of nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.adj.rows
+    }
+
+    /// Number of stored directed edges (2× undirected edge count).
+    pub fn num_edges(&self) -> usize {
+        self.adj.nnz()
+    }
+
+    /// Feature dimensionality.
+    pub fn feature_dim(&self) -> usize {
+        self.features.cols
+    }
+
+    /// Sanity-check internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        self.adj.validate()?;
+        let n = self.num_nodes();
+        if self.adj.cols != n {
+            return Err(Error::InvalidSparse("adjacency not square".into()));
+        }
+        if self.features.rows != n {
+            return Err(Error::ShapeMismatch(format!(
+                "features rows {} != nodes {n}",
+                self.features.rows
+            )));
+        }
+        if self.labels.len() != n || self.train_mask.len() != n || self.test_mask.len() != n {
+            return Err(Error::ShapeMismatch("labels/mask length != nodes".into()));
+        }
+        if let Some(&bad) = self.labels.iter().find(|&&l| l >= self.num_classes) {
+            return Err(Error::Config(format!(
+                "label {bad} out of range ({} classes)",
+                self.num_classes
+            )));
+        }
+        Ok(())
+    }
+}

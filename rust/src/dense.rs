@@ -1,0 +1,397 @@
+//! Dense row-major `f32` matrix used as the feature/weight container.
+//!
+//! iSpLib's SpMM is *sparse × dense*: the graph adjacency is sparse (CSR),
+//! node features / layer activations are dense. This module provides the
+//! dense side: a minimal, allocation-conscious row-major matrix with the
+//! handful of BLAS-1/2/3 operations the GNN layers and the autodiff tape
+//! need. It is deliberately small — the point of the paper is the *sparse*
+//! kernels; dense ops just need to be correct and not embarrassing.
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Row-major dense matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Row-major storage, `len == rows * cols`.
+    pub data: Vec<f32>,
+}
+
+impl Dense {
+    /// Create a matrix of zeros.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Dense { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Create from a row-major vector; errors if the length is wrong.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::ShapeMismatch(format!(
+                "Dense::from_vec: {}x{} needs {} elements, got {}",
+                rows,
+                cols,
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(Dense { rows, cols, data })
+    }
+
+    /// Create with every element drawn from `U(-scale, scale)`.
+    pub fn uniform(rows: usize, cols: usize, scale: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.gen_range_f32(-scale, scale)).collect();
+        Dense { rows, cols, data }
+    }
+
+    /// Glorot/Xavier-uniform initialisation, the init GNN papers use.
+    pub fn glorot(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let scale = (6.0f32 / (rows + cols) as f32).sqrt();
+        Self::uniform(rows, cols, scale, rng)
+    }
+
+    /// Immutable view of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable view of row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Element access (debug-checked).
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Element assignment (debug-checked).
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// `self @ other` — register-blocked matmul.
+    ///
+    /// The same insight as the paper's generated SpMM kernels applies to
+    /// the dense projections: keep a fixed-width strip of the output row in
+    /// registers across the whole `k` loop instead of re-loading it per
+    /// rank-1 update. Column strips of width 16 (one AVX-512 register /
+    /// two AVX2) are accumulated in a `[f32; 16]` local; the remainder
+    /// falls back to the plain loop.
+    pub fn matmul(&self, other: &Dense) -> Result<Dense> {
+        if self.cols != other.rows {
+            return Err(Error::ShapeMismatch(format!(
+                "matmul: {}x{} @ {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        const BW: usize = 16;
+        let n = other.cols;
+        let blocks = n / BW;
+        let tail = blocks * BW;
+        let mut out = Dense::zeros(self.rows, n);
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            let out_row = out.row_mut(i);
+            for blk in 0..blocks {
+                let base = blk * BW;
+                let mut acc = [0.0f32; BW];
+                for (k, &a) in a_row.iter().enumerate() {
+                    let b = &other.data[k * n + base..k * n + base + BW];
+                    for t in 0..BW {
+                        acc[t] += a * b[t];
+                    }
+                }
+                out_row[base..base + BW].copy_from_slice(&acc);
+            }
+            if tail < n {
+                for (k, &a) in a_row.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let b_row = &other.data[k * n + tail..(k + 1) * n];
+                    for (o, &b) in out_row[tail..].iter_mut().zip(b_row.iter()) {
+                        *o += a * b;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// `self^T @ other` without materialising the transpose.
+    pub fn t_matmul(&self, other: &Dense) -> Result<Dense> {
+        if self.rows != other.rows {
+            return Err(Error::ShapeMismatch(format!(
+                "t_matmul: ({}x{})^T @ {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = Dense::zeros(self.cols, other.cols);
+        let n = other.cols;
+        for r in 0..self.rows {
+            let a_row = self.row(r);
+            let b_row = other.row(r);
+            for (k, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[k * n..(k + 1) * n];
+                for (o, &b) in out_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// `self @ other^T` without materialising the transpose.
+    pub fn matmul_t(&self, other: &Dense) -> Result<Dense> {
+        if self.cols != other.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "matmul_t: {}x{} @ ({}x{})^T",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = Dense::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            for j in 0..other.rows {
+                let b_row = other.row(j);
+                let dot: f32 = a_row.iter().zip(b_row.iter()).map(|(a, b)| a * b).sum();
+                out.data[i * other.rows + j] = dot;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Element-wise addition (shape-checked).
+    pub fn add(&self, other: &Dense) -> Result<Dense> {
+        self.zip_with(other, |a, b| a + b)
+    }
+
+    /// Element-wise subtraction.
+    pub fn sub(&self, other: &Dense) -> Result<Dense> {
+        self.zip_with(other, |a, b| a - b)
+    }
+
+    /// Element-wise multiplication (Hadamard).
+    pub fn hadamard(&self, other: &Dense) -> Result<Dense> {
+        self.zip_with(other, |a, b| a * b)
+    }
+
+    fn zip_with(&self, other: &Dense, f: impl Fn(f32, f32) -> f32) -> Result<Dense> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "elementwise: {}x{} vs {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let data = self.data.iter().zip(other.data.iter()).map(|(&a, &b)| f(a, b)).collect();
+        Ok(Dense { rows: self.rows, cols: self.cols, data })
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Dense) -> Result<()> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "axpy: {}x{} vs {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        for (o, &x) in self.data.iter_mut().zip(other.data.iter()) {
+            *o += alpha * x;
+        }
+        Ok(())
+    }
+
+    /// Scale every element by `alpha`.
+    pub fn scale(&mut self, alpha: f32) {
+        for v in &mut self.data {
+            *v *= alpha;
+        }
+    }
+
+    /// Map every element through `f`, returning a new matrix.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Dense {
+        Dense { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&v| f(v)).collect() }
+    }
+
+    /// ReLU, the activation used by all the paper's GNNs.
+    pub fn relu(&self) -> Dense {
+        self.map(|v| v.max(0.0))
+    }
+
+    /// Add a broadcast row vector (bias) to every row.
+    pub fn add_row_broadcast(&self, bias: &[f32]) -> Result<Dense> {
+        if bias.len() != self.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "bias: len {} vs cols {}",
+                bias.len(),
+                self.cols
+            )));
+        }
+        let mut out = self.clone();
+        for r in 0..out.rows {
+            for (o, &b) in out.row_mut(r).iter_mut().zip(bias.iter()) {
+                *o += b;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Column-sum → vector of length `cols` (used for bias gradients).
+    pub fn col_sum(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            for (o, &v) in out.iter_mut().zip(self.row(r).iter()) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// Transpose (materialised).
+    pub fn transpose(&self) -> Dense {
+        let mut out = Dense::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// Max absolute difference to another matrix — test helper.
+    pub fn max_abs_diff(&self, other: &Dense) -> f32 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Approximate equality within `tol` — test helper.
+    pub fn allclose(&self, other: &Dense, tol: f32) -> bool {
+        self.rows == other.rows && self.cols == other.cols && self.max_abs_diff(other) <= tol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: usize, cols: usize, v: &[f32]) -> Dense {
+        Dense::from_vec(rows, cols, v.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn zeros_and_from_vec() {
+        let z = Dense::zeros(2, 3);
+        assert_eq!(z.data, vec![0.0; 6]);
+        assert!(Dense::from_vec(2, 2, vec![1.0; 3]).is_err());
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = m(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = m(2, 2, &[1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_shape_err() {
+        let a = Dense::zeros(2, 3);
+        let b = Dense::zeros(2, 3);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let mut rng = Rng::seed_from_u64(7);
+        let a = Dense::uniform(5, 3, 1.0, &mut rng);
+        let b = Dense::uniform(5, 4, 1.0, &mut rng);
+        let fast = a.t_matmul(&b).unwrap();
+        let slow = a.transpose().matmul(&b).unwrap();
+        assert!(fast.allclose(&slow, 1e-5));
+    }
+
+    #[test]
+    fn matmul_t_matches_explicit_transpose() {
+        let mut rng = Rng::seed_from_u64(8);
+        let a = Dense::uniform(4, 6, 1.0, &mut rng);
+        let b = Dense::uniform(3, 6, 1.0, &mut rng);
+        let fast = a.matmul_t(&b).unwrap();
+        let slow = a.matmul(&b.transpose()).unwrap();
+        assert!(fast.allclose(&slow, 1e-5));
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = m(1, 3, &[1.0, 2.0, 3.0]);
+        let b = m(1, 3, &[4.0, 5.0, 6.0]);
+        assert_eq!(a.add(&b).unwrap().data, vec![5.0, 7.0, 9.0]);
+        assert_eq!(b.sub(&a).unwrap().data, vec![3.0, 3.0, 3.0]);
+        assert_eq!(a.hadamard(&b).unwrap().data, vec![4.0, 10.0, 18.0]);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = m(1, 2, &[1.0, 2.0]);
+        let b = m(1, 2, &[10.0, 20.0]);
+        a.axpy(0.5, &b).unwrap();
+        assert_eq!(a.data, vec![6.0, 12.0]);
+        a.scale(2.0);
+        assert_eq!(a.data, vec![12.0, 24.0]);
+    }
+
+    #[test]
+    fn relu_and_map() {
+        let a = m(1, 4, &[-1.0, 0.0, 2.0, -3.0]);
+        assert_eq!(a.relu().data, vec![0.0, 0.0, 2.0, 0.0]);
+        assert_eq!(a.map(|v| v * v).data, vec![1.0, 0.0, 4.0, 9.0]);
+    }
+
+    #[test]
+    fn bias_and_colsum() {
+        let a = m(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let with_bias = a.add_row_broadcast(&[10.0, 20.0]).unwrap();
+        assert_eq!(with_bias.data, vec![11.0, 22.0, 13.0, 24.0]);
+        assert_eq!(a.col_sum(), vec![4.0, 6.0]);
+        assert!(a.add_row_broadcast(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::seed_from_u64(9);
+        let a = Dense::uniform(3, 5, 1.0, &mut rng);
+        assert!(a.transpose().transpose().allclose(&a, 0.0));
+    }
+
+    #[test]
+    fn glorot_scale_bound() {
+        let mut rng = Rng::seed_from_u64(10);
+        let a = Dense::glorot(100, 50, &mut rng);
+        let bound = (6.0f32 / 150.0).sqrt();
+        assert!(a.data.iter().all(|v| v.abs() <= bound));
+        // and it isn't all zeros
+        assert!(a.frobenius() > 0.0);
+    }
+}

@@ -1,0 +1,100 @@
+//! Error type shared across the iSpLib crate.
+//!
+//! Every fallible public API returns [`Result<T>`]. We keep a small
+//! structured enum rather than a boxed `dyn Error` so callers (the CLI, the
+//! coordinator, tests) can match on failure classes — e.g. shape mismatches
+//! from kernel calls vs. runtime (PJRT) failures vs. I/O.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error enum.
+#[derive(Debug)]
+pub enum Error {
+    /// A matrix/vector dimension mismatch, with a human-readable context.
+    ShapeMismatch(String),
+    /// A sparse structure invariant was violated (unsorted indices,
+    /// out-of-range column, row_ptr not monotone, ...).
+    InvalidSparse(String),
+    /// An unknown kernel / backend / dataset / model name was requested.
+    UnknownName(String),
+    /// The XLA/PJRT runtime failed (compile, execute, literal staging).
+    Runtime(String),
+    /// An artifact (HLO text, manifest) was missing or malformed.
+    Artifact(String),
+    /// Configuration error (bad CLI flag combination, bad spec).
+    Config(String),
+    /// I/O error wrapper.
+    Io(std::io::Error),
+    /// JSON (de)serialization error.
+    Json(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::ShapeMismatch(s) => write!(f, "shape mismatch: {s}"),
+            Error::InvalidSparse(s) => write!(f, "invalid sparse structure: {s}"),
+            Error::UnknownName(s) => write!(f, "unknown name: {s}"),
+            Error::Runtime(s) => write!(f, "runtime error: {s}"),
+            Error::Artifact(s) => write!(f, "artifact error: {s}"),
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(e) => write!(f, "json error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Helper: build a [`Error::ShapeMismatch`] with `format!` semantics.
+#[macro_export]
+macro_rules! shape_err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::ShapeMismatch(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants() {
+        let e = Error::ShapeMismatch("a x b".into());
+        assert!(e.to_string().contains("shape mismatch"));
+        let e = Error::UnknownName("foo".into());
+        assert!(e.to_string().contains("foo"));
+        let e = Error::Runtime("pjrt".into());
+        assert!(e.to_string().contains("pjrt"));
+    }
+
+    #[test]
+    fn from_io() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn shape_err_macro() {
+        let e = shape_err!("want {}x{}, got {}", 2, 3, 4);
+        assert!(e.to_string().contains("want 2x3, got 4"));
+    }
+}

@@ -1,0 +1,66 @@
+//! Classification metrics.
+
+use crate::dense::Dense;
+
+/// Argmax-accuracy of logits vs labels over all rows.
+pub fn accuracy(logits: &Dense, labels: &[usize]) -> f64 {
+    masked_accuracy(logits, labels, None)
+}
+
+/// Accuracy over rows where `mask` is true (or all rows when `None`).
+pub fn masked_accuracy(logits: &Dense, labels: &[usize], mask: Option<&[bool]>) -> f64 {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for r in 0..logits.rows {
+        if let Some(m) = mask {
+            if !m[r] {
+                continue;
+            }
+        }
+        let row = logits.row(r);
+        let mut best = 0usize;
+        for (c, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = c;
+            }
+        }
+        if best == labels[r] {
+            correct += 1;
+        }
+        total += 1;
+    }
+    if total == 0 {
+        0.0
+    } else {
+        correct as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_and_zero() {
+        let logits = Dense::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        assert_eq!(accuracy(&logits, &[0, 1]), 1.0);
+        assert_eq!(accuracy(&logits, &[1, 0]), 0.0);
+    }
+
+    #[test]
+    fn masked_subset() {
+        let logits = Dense::from_vec(3, 2, vec![1.0, 0.0, 1.0, 0.0, 0.0, 1.0]).unwrap();
+        // only rows 0 and 2 counted; row 0 correct, row 2 correct
+        let acc = masked_accuracy(&logits, &[0, 1, 1], Some(&[true, false, true]));
+        assert_eq!(acc, 1.0);
+        // row 1 wrong when included
+        let acc = masked_accuracy(&logits, &[0, 1, 1], None);
+        assert!((acc - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_mask_is_zero() {
+        let logits = Dense::zeros(2, 2);
+        assert_eq!(masked_accuracy(&logits, &[0, 0], Some(&[false, false])), 0.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! The GNN zoo: the two-layer models the paper benchmarks (§4).
+//!
+//! * **GCN** — `softmax(Â · relu(Â · X·W₀ + b₀) · W₁ + b₁)` with the
+//!   symmetric normalisation `Â`. Note the paper's §5 observation: GCN
+//!   projects features *before* the SpMM (`X·W` first), which shrinks the
+//!   SpMM's K to the hidden size — exactly where tuned kernels shine.
+//! * **GraphSAGE** (sum / mean / max aggregation) —
+//!   `relu(W_self·x + W_neigh·agg(neighbours))` per layer. SpMM runs on the
+//!   *raw* features in layer 0 (no projection first), which the paper uses
+//!   to explain SAGE's smaller speedups.
+//! * **GIN** — `MLP((1+ε)·x + Σ neighbours)`.
+//!
+//! Models are expressed over the [`Tape`](crate::autodiff::Tape) so every
+//! backend (tuned, trusted, uncached, message-passing) trains through the
+//! identical code path with only the SpMM provider swapped.
+
+mod metrics;
+mod models;
+mod params;
+
+pub use metrics::{accuracy, masked_accuracy};
+pub use models::{GnnModel, ModelParams};
+pub use params::ParamSet;

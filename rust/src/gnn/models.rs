@@ -1,0 +1,242 @@
+//! Two-layer GNN model definitions over the autodiff tape.
+
+use std::collections::BTreeMap;
+
+use crate::autodiff::{SpmmOperand, Tape, Var};
+use crate::error::{Error, Result};
+use crate::sparse::NormKind;
+
+use super::ParamSet;
+
+/// Model dimensions.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelParams {
+    /// Input feature dimensionality.
+    pub in_dim: usize,
+    /// Hidden width (the "embedding size" K the tuner optimises).
+    pub hidden: usize,
+    /// Number of output classes.
+    pub classes: usize,
+}
+
+/// The GNN architectures benchmarked by the paper (§4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GnnModel {
+    /// Graph Convolution Network (Kipf & Welling).
+    Gcn,
+    /// GraphSAGE with sum aggregation.
+    SageSum,
+    /// GraphSAGE with mean aggregation (row-normalised adjacency).
+    SageMean,
+    /// Graph Isomorphism Network (Xu et al.), ε = 0.
+    Gin,
+}
+
+impl GnnModel {
+    /// Parse CLI form.
+    pub fn parse(s: &str) -> Result<GnnModel> {
+        match s {
+            "gcn" => Ok(GnnModel::Gcn),
+            "sage-sum" | "sage_sum" | "graphsage-sum" => Ok(GnnModel::SageSum),
+            "sage-mean" | "sage_mean" | "graphsage-mean" => Ok(GnnModel::SageMean),
+            "gin" => Ok(GnnModel::Gin),
+            other => Err(Error::UnknownName(format!("model '{other}'"))),
+        }
+    }
+
+    /// Name for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            GnnModel::Gcn => "gcn",
+            GnnModel::SageSum => "sage-sum",
+            GnnModel::SageMean => "sage-mean",
+            GnnModel::Gin => "gin",
+        }
+    }
+
+    /// All benchmarked models.
+    pub const ALL: [GnnModel; 4] = [GnnModel::Gcn, GnnModel::SageSum, GnnModel::SageMean, GnnModel::Gin];
+
+    /// The adjacency normalisation this model trains against. Mean
+    /// aggregation is exactly sum over the row-normalised adjacency, so
+    /// every model reduces to sum-semiring SpMM in the hot path — matching
+    /// iSpLib, where only sum has generated kernels.
+    pub fn norm_kind(self) -> NormKind {
+        match self {
+            GnnModel::Gcn => NormKind::GcnSym,
+            GnnModel::SageSum => NormKind::None,
+            GnnModel::SageMean => NormKind::RowMean,
+            GnnModel::Gin => NormKind::None,
+        }
+    }
+
+    /// Whether the model projects features before the first SpMM — the
+    /// paper's §5 explanation for GCN's larger speedups (SpMM runs at the
+    /// hidden width, not the raw feature width).
+    pub fn projects_before_spmm(self) -> bool {
+        matches!(self, GnnModel::Gcn)
+    }
+
+    /// Initialise parameters for the given dimensions.
+    pub fn init_params(self, dims: ModelParams, seed: u64) -> ParamSet {
+        let mut p = ParamSet::new();
+        let ModelParams { in_dim, hidden, classes } = dims;
+        match self {
+            GnnModel::Gcn => {
+                p.init_glorot("w0", in_dim, hidden, seed);
+                p.init_zeros("b0", 1, hidden);
+                p.init_glorot("w1", hidden, classes, seed ^ 1);
+                p.init_zeros("b1", 1, classes);
+            }
+            GnnModel::SageSum | GnnModel::SageMean => {
+                p.init_glorot("w0_self", in_dim, hidden, seed);
+                p.init_glorot("w0_neigh", in_dim, hidden, seed ^ 1);
+                p.init_zeros("b0", 1, hidden);
+                p.init_glorot("w1_self", hidden, classes, seed ^ 2);
+                p.init_glorot("w1_neigh", hidden, classes, seed ^ 3);
+                p.init_zeros("b1", 1, classes);
+            }
+            GnnModel::Gin => {
+                // layer 0: aggregate then 2-layer MLP
+                p.init_glorot("w0a", in_dim, hidden, seed);
+                p.init_zeros("b0a", 1, hidden);
+                p.init_glorot("w0b", hidden, hidden, seed ^ 1);
+                p.init_zeros("b0b", 1, hidden);
+                // layer 1: aggregate then linear classifier
+                p.init_glorot("w1", hidden, classes, seed ^ 2);
+                p.init_zeros("b1", 1, classes);
+            }
+        }
+        p
+    }
+
+    /// Record the forward pass on `tape`; returns the logits node.
+    ///
+    /// `vars` maps parameter names to their tape handles (the trainer
+    /// inserts every parameter at the start of each step).
+    pub fn forward(
+        self,
+        tape: &mut Tape,
+        operand: &SpmmOperand,
+        x: Var,
+        vars: &BTreeMap<String, Var>,
+    ) -> Result<Var> {
+        let get = |name: &str| -> Result<Var> {
+            vars.get(name).copied().ok_or_else(|| Error::UnknownName(format!("param var '{name}'")))
+        };
+        match self {
+            GnnModel::Gcn => {
+                // layer 0: project *then* aggregate (K = hidden in the SpMM)
+                let xw = tape.matmul(x, get("w0")?)?;
+                let agg = tape.spmm(operand, xw)?;
+                let h = tape.add_bias(agg, get("b0")?)?;
+                let h = tape.relu(h)?;
+                // layer 1
+                let hw = tape.matmul(h, get("w1")?)?;
+                let agg = tape.spmm(operand, hw)?;
+                tape.add_bias(agg, get("b1")?)
+            }
+            GnnModel::SageSum | GnnModel::SageMean => {
+                // layer 0: aggregate raw features *then* project (K = in_dim)
+                let neigh = tape.spmm(operand, x)?;
+                let neigh = tape.matmul(neigh, get("w0_neigh")?)?;
+                let selfp = tape.matmul(x, get("w0_self")?)?;
+                let h = tape.add(selfp, neigh)?;
+                let h = tape.add_bias(h, get("b0")?)?;
+                let h = tape.relu(h)?;
+                // layer 1
+                let neigh = tape.spmm(operand, h)?;
+                let neigh = tape.matmul(neigh, get("w1_neigh")?)?;
+                let selfp = tape.matmul(h, get("w1_self")?)?;
+                let out = tape.add(selfp, neigh)?;
+                tape.add_bias(out, get("b1")?)
+            }
+            GnnModel::Gin => {
+                // layer 0: z = (1+ε)x + Σ_neigh x, ε = 0
+                let agg = tape.spmm(operand, x)?;
+                let z = tape.add(x, agg)?;
+                let h = tape.matmul(z, get("w0a")?)?;
+                let h = tape.add_bias(h, get("b0a")?)?;
+                let h = tape.relu(h)?;
+                let h = tape.matmul(h, get("w0b")?)?;
+                let h = tape.add_bias(h, get("b0b")?)?;
+                let h = tape.relu(h)?;
+                // layer 1
+                let agg = tape.spmm(operand, h)?;
+                let z = tape.add(h, agg)?;
+                let out = tape.matmul(z, get("w1")?)?;
+                tape.add_bias(out, get("b1")?)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::karate_club;
+    use crate::dense::Dense;
+
+    fn run_forward(model: GnnModel) -> Dense {
+        let ds = karate_club();
+        let dims = ModelParams { in_dim: ds.feature_dim(), hidden: 8, classes: 2 };
+        let params = model.init_params(dims, 42);
+        let a = model.norm_kind().apply(&ds.adj).unwrap();
+        let operand = SpmmOperand::cached(a, "test");
+        let mut tape = Tape::new(1);
+        let x = tape.input(ds.features.clone());
+        let mut vars = BTreeMap::new();
+        for (name, value) in params.iter() {
+            vars.insert(name.clone(), tape.input(value.clone()));
+        }
+        let logits = model.forward(&mut tape, &operand, x, &vars).unwrap();
+        tape.value(logits).clone()
+    }
+
+    #[test]
+    fn all_models_produce_logits() {
+        for model in GnnModel::ALL {
+            let logits = run_forward(model);
+            assert_eq!(logits.rows, 34, "{model:?}");
+            assert_eq!(logits.cols, 2, "{model:?}");
+            assert!(logits.data.iter().all(|v| v.is_finite()), "{model:?}");
+        }
+    }
+
+    #[test]
+    fn parse_and_names() {
+        for m in GnnModel::ALL {
+            assert_eq!(GnnModel::parse(m.name()).unwrap(), m);
+        }
+        assert!(GnnModel::parse("gat").is_err());
+    }
+
+    #[test]
+    fn norm_kinds() {
+        assert_eq!(GnnModel::Gcn.norm_kind(), NormKind::GcnSym);
+        assert_eq!(GnnModel::SageSum.norm_kind(), NormKind::None);
+        assert_eq!(GnnModel::SageMean.norm_kind(), NormKind::RowMean);
+        assert_eq!(GnnModel::Gin.norm_kind(), NormKind::None);
+        assert!(GnnModel::Gcn.projects_before_spmm());
+        assert!(!GnnModel::SageSum.projects_before_spmm());
+    }
+
+    #[test]
+    fn param_counts() {
+        let dims = ModelParams { in_dim: 10, hidden: 4, classes: 3 };
+        assert_eq!(GnnModel::Gcn.init_params(dims, 1).len(), 4);
+        assert_eq!(GnnModel::SageSum.init_params(dims, 1).len(), 6);
+        assert_eq!(GnnModel::Gin.init_params(dims, 1).len(), 6);
+    }
+
+    #[test]
+    fn missing_param_errors() {
+        let ds = karate_club();
+        let a = NormKind::GcnSym.apply(&ds.adj).unwrap();
+        let operand = SpmmOperand::cached(a, "test");
+        let mut tape = Tape::new(1);
+        let x = tape.input(ds.features.clone());
+        let vars = BTreeMap::new(); // empty!
+        assert!(GnnModel::Gcn.forward(&mut tape, &operand, x, &vars).is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Parameter containers: named dense tensors + SGD/Adam state.
+
+use std::collections::BTreeMap;
+
+use crate::dense::Dense;
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// An ordered set of named parameters. `BTreeMap` keeps iteration order
+/// stable so optimizer state lines up across steps and the HLO backend can
+/// flatten parameters deterministically.
+#[derive(Clone, Debug, Default)]
+pub struct ParamSet {
+    params: BTreeMap<String, Dense>,
+}
+
+impl ParamSet {
+    /// Empty set.
+    pub fn new() -> Self {
+        ParamSet { params: BTreeMap::new() }
+    }
+
+    /// Insert (or replace) a parameter.
+    pub fn insert(&mut self, name: &str, value: Dense) {
+        self.params.insert(name.to_string(), value);
+    }
+
+    /// Get a parameter by name.
+    pub fn get(&self, name: &str) -> Result<&Dense> {
+        self.params.get(name).ok_or_else(|| Error::UnknownName(format!("param '{name}'")))
+    }
+
+    /// Mutable access by name.
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Dense> {
+        self.params.get_mut(name).ok_or_else(|| Error::UnknownName(format!("param '{name}'")))
+    }
+
+    /// Iterate `(name, value)` in stable order.
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Dense)> {
+        self.params.iter()
+    }
+
+    /// Iterate mutably in stable order.
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (&String, &mut Dense)> {
+        self.params.iter_mut()
+    }
+
+    /// Parameter names in stable order.
+    pub fn names(&self) -> Vec<String> {
+        self.params.keys().cloned().collect()
+    }
+
+    /// Number of parameters (tensors).
+    pub fn len(&self) -> usize {
+        self.params.len()
+    }
+
+    /// True if no parameters.
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
+
+    /// Total scalar count across all tensors.
+    pub fn num_scalars(&self) -> usize {
+        self.params.values().map(|d| d.data.len()).sum()
+    }
+
+    /// Glorot-init a new parameter and insert it.
+    pub fn init_glorot(&mut self, name: &str, rows: usize, cols: usize, seed: u64) {
+        let mut rng = Rng::seed_from_u64(seed);
+        self.insert(name, Dense::glorot(rows, cols, &mut rng));
+    }
+
+    /// Zero-init a new parameter (biases).
+    pub fn init_zeros(&mut self, name: &str, rows: usize, cols: usize) {
+        self.insert(name, Dense::zeros(rows, cols));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_iter_order() {
+        let mut p = ParamSet::new();
+        p.init_zeros("w1", 2, 2);
+        p.init_zeros("b0", 1, 2);
+        p.init_zeros("w0", 2, 2);
+        // BTreeMap order is lexicographic, stable
+        assert_eq!(p.names(), vec!["b0", "w0", "w1"]);
+        assert!(p.get("w0").is_ok());
+        assert!(p.get("nope").is_err());
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.num_scalars(), 2 + 4 + 4);
+    }
+
+    #[test]
+    fn glorot_init_deterministic() {
+        let mut a = ParamSet::new();
+        a.init_glorot("w", 4, 4, 9);
+        let mut b = ParamSet::new();
+        b.init_glorot("w", 4, 4, 9);
+        assert_eq!(a.get("w").unwrap(), b.get("w").unwrap());
+    }
+
+    #[test]
+    fn get_mut_updates() {
+        let mut p = ParamSet::new();
+        p.init_zeros("w", 1, 1);
+        p.get_mut("w").unwrap().data[0] = 5.0;
+        assert_eq!(p.get("w").unwrap().data[0], 5.0);
+    }
+}

@@ -1,0 +1,100 @@
+//! Dense reference SpMM — the correctness oracle every kernel is tested
+//! against, and the "CogDL-like dense fallback" baseline for small graphs.
+//!
+//! Deliberately naive: materialise nothing clever, loop over every
+//! (row, neighbour, feature) triple through the semiring's combine/finalize.
+
+use crate::dense::Dense;
+use crate::error::{Error, Result};
+use crate::sparse::Csr;
+
+use super::Semiring;
+
+/// Reference semiring SpMM: `Y[r,k] = finalize(reduce_c combine(A[r,c]·X[c,k]))`.
+pub fn spmm_dense_ref(a: &Csr, x: &Dense, op: Semiring) -> Result<Dense> {
+    if a.cols != x.rows {
+        return Err(Error::ShapeMismatch(format!(
+            "spmm: A {}x{} @ X {}x{}",
+            a.rows, a.cols, x.rows, x.cols
+        )));
+    }
+    let k = x.cols;
+    let mut y = Dense::zeros(a.rows, k);
+    for r in 0..a.rows {
+        let nnz = a.row_nnz(r);
+        let out = y.row_mut(r);
+        for slot in out.iter_mut() {
+            *slot = op.identity();
+        }
+        for (&c, &v) in a.row_cols(r).iter().zip(a.row_vals(r)) {
+            let xrow = x.row(c);
+            for (o, &xv) in out.iter_mut().zip(xrow.iter()) {
+                *o = op.combine(*o, v * xv);
+            }
+        }
+        for slot in out.iter_mut() {
+            *slot = op.finalize(*slot, nnz);
+        }
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn toy() -> (Csr, Dense) {
+        // A = [[0,1],[2,3]] as sparse (3 nnz: (0,1)=1,(1,0)=2,(1,1)=3)
+        let a = Coo::from_triplets(2, 2, vec![0, 1, 1], vec![1, 0, 1], vec![1.0, 2.0, 3.0])
+            .unwrap()
+            .to_csr();
+        let x = Dense::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        (a, x)
+    }
+
+    #[test]
+    fn sum_matches_dense_matmul() {
+        let (a, x) = toy();
+        let y = spmm_dense_ref(&a, &x, Semiring::Sum).unwrap();
+        let expect = a.to_dense().matmul(&x).unwrap();
+        assert!(y.allclose(&expect, 1e-6));
+    }
+
+    #[test]
+    fn max_picks_extreme_message() {
+        let (a, x) = toy();
+        let y = spmm_dense_ref(&a, &x, Semiring::Max).unwrap();
+        // row0: only neighbour 1 → messages (3,4) → (3,4)
+        assert_eq!(y.row(0), &[3.0, 4.0]);
+        // row1: messages n0:(2,4), n1:(9,12) → max (9,12)
+        assert_eq!(y.row(1), &[9.0, 12.0]);
+    }
+
+    #[test]
+    fn min_and_mean() {
+        let (a, x) = toy();
+        let y = spmm_dense_ref(&a, &x, Semiring::Min).unwrap();
+        assert_eq!(y.row(1), &[2.0, 4.0]);
+        let y = spmm_dense_ref(&a, &x, Semiring::Mean).unwrap();
+        // row1 sum (11,16) / 2 neighbours
+        assert_eq!(y.row(1), &[5.5, 8.0]);
+    }
+
+    #[test]
+    fn empty_rows_are_zero() {
+        let a = Csr::empty(3, 3);
+        let x = Dense::zeros(3, 4);
+        for op in Semiring::ALL {
+            let y = spmm_dense_ref(&a, &x, op).unwrap();
+            assert!(y.data.iter().all(|&v| v == 0.0), "op {op:?}");
+        }
+    }
+
+    #[test]
+    fn shape_mismatch() {
+        let a = Csr::empty(2, 3);
+        let x = Dense::zeros(2, 2);
+        assert!(spmm_dense_ref(&a, &x, Semiring::Sum).is_err());
+    }
+}

@@ -1,0 +1,240 @@
+//! FusedMM — the fused SDDMM+SpMM kernel of Rahman, Sujon & Azad (IPDPS'21,
+//! the paper's reference [8] and the engine behind iSpLib's kernels).
+//!
+//! The unfused pipeline materialises the edge-value CSR from SDDMM, then
+//! streams it again for SpMM — 2× traffic over the edge list and an O(nnz)
+//! temporary. FusedMM computes, per non-zero, the edge scalar and
+//! immediately accumulates its message into the output row:
+//!
+//! `Y[r,:] = Σ_c  g(A[r,c], ⟨U[r],V[c]⟩) · X[c,:]`
+//!
+//! with `g` an [`EdgeOp`]. `EdgeOp::Copy` degenerates to plain SpMM;
+//! `EdgeOp::Dot` is the attention-style SDDMM·SpMM fusion.
+
+use crate::dense::Dense;
+use crate::error::{Error, Result};
+use crate::sparse::Csr;
+use crate::util::parallel;
+
+use super::nnz_balanced_partition;
+
+/// Per-edge scalar function applied before aggregation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EdgeOp {
+    /// `g = A[r,c]` — plain SpMM (no dense-dense sampling).
+    Copy,
+    /// `g = A[r,c] · ⟨U[r], V[c]⟩` — SDDMM-then-SpMM, fused.
+    Dot,
+    /// `g = A[r,c] · σ(⟨U[r], V[c]⟩)` — sigmoid-gated edges (the FusedMM
+    /// paper's graph-embedding use case).
+    SigmoidDot,
+}
+
+impl EdgeOp {
+    /// Parse from string form.
+    pub fn parse(s: &str) -> Result<EdgeOp> {
+        match s {
+            "copy" => Ok(EdgeOp::Copy),
+            "dot" => Ok(EdgeOp::Dot),
+            "sigmoid" | "sigmoid_dot" => Ok(EdgeOp::SigmoidDot),
+            other => Err(Error::UnknownName(format!("edge op '{other}'"))),
+        }
+    }
+
+    #[inline]
+    fn apply(self, aval: f32, dot: f32) -> f32 {
+        match self {
+            EdgeOp::Copy => aval,
+            EdgeOp::Dot => aval * dot,
+            EdgeOp::SigmoidDot => aval * (1.0 / (1.0 + (-dot).exp())),
+        }
+    }
+
+    /// Whether the op needs U/V at all.
+    fn needs_uv(self) -> bool {
+        !matches!(self, EdgeOp::Copy)
+    }
+}
+
+/// Fused SDDMM+SpMM. `u`/`v` may be `None` only for [`EdgeOp::Copy`].
+/// `threads == 1` runs serial; `0` uses the rayon pool size.
+pub fn fusedmm(
+    a: &Csr,
+    x: &Dense,
+    u: Option<&Dense>,
+    v: Option<&Dense>,
+    op: EdgeOp,
+    threads: usize,
+) -> Result<Dense> {
+    if a.cols != x.rows {
+        return Err(Error::ShapeMismatch(format!(
+            "fusedmm: A {}x{} @ X {}x{}",
+            a.rows, a.cols, x.rows, x.cols
+        )));
+    }
+    if op.needs_uv() {
+        let u = u.ok_or_else(|| Error::Config("fusedmm: edge op needs U".into()))?;
+        let v = v.ok_or_else(|| Error::Config("fusedmm: edge op needs V".into()))?;
+        if u.rows != a.rows || v.rows != a.cols || u.cols != v.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "fusedmm: U {}x{}, V {}x{} vs A {}x{}",
+                u.rows, u.cols, v.rows, v.cols, a.rows, a.cols
+            )));
+        }
+    }
+
+    let threads = if threads == 0 { parallel::current_num_threads() } else { threads };
+    let k = x.cols;
+    let mut y = Dense::zeros(a.rows, k);
+
+    if threads <= 1 {
+        fused_rows(a, x, u, v, op, 0, a.rows, &mut y.data);
+        return Ok(y);
+    }
+
+    let ranges = nnz_balanced_partition(a, threads);
+    let mut slices: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(ranges.len());
+    let mut rest: &mut [f32] = &mut y.data;
+    for r in &ranges {
+        let (head, tail) = rest.split_at_mut((r.end - r.start) * k);
+        slices.push((r.start, r.end, head));
+        rest = tail;
+    }
+    parallel::join_all(
+        slices
+            .into_iter()
+            .map(|(start, end, out)| move || fused_rows(a, x, u, v, op, start, end, out))
+            .collect(),
+    );
+    Ok(y)
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn fused_rows(
+    a: &Csr,
+    x: &Dense,
+    u: Option<&Dense>,
+    v: Option<&Dense>,
+    op: EdgeOp,
+    start: usize,
+    end: usize,
+    out: &mut [f32],
+) {
+    let k = x.cols;
+    for r in start..end {
+        let orow = &mut out[(r - start) * k..(r - start + 1) * k];
+        let urow = u.map(|u| u.row(r));
+        for (&c, &aval) in a.row_cols(r).iter().zip(a.row_vals(r)) {
+            let dot = match (op.needs_uv(), urow, v) {
+                (true, Some(ur), Some(v)) => {
+                    let vr = v.row(c);
+                    ur.iter().zip(vr.iter()).map(|(x, y)| x * y).sum()
+                }
+                _ => 0.0,
+            };
+            let g = op.apply(aval, dot);
+            if g == 0.0 {
+                continue;
+            }
+            let xrow = x.row(c);
+            for (o, &xv) in orow.iter_mut().zip(xrow.iter()) {
+                *o += g * xv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{sddmm, spmm_dense_ref, spmm_trusted, Semiring};
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn random_graph(n: usize, avg_deg: usize, seed: u64) -> Csr {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            for _ in 0..avg_deg {
+                coo.push(r, rng.gen_range(n), rng.gen_range_f32(0.5, 1.5));
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn copy_op_is_plain_spmm() {
+        let mut rng = Rng::seed_from_u64(31);
+        let a = random_graph(40, 5, 32);
+        let x = Dense::uniform(40, 12, 1.0, &mut rng);
+        let got = fusedmm(&a, &x, None, None, EdgeOp::Copy, 1).unwrap();
+        let want = spmm_trusted(&a, &x, Semiring::Sum).unwrap();
+        assert!(got.allclose(&want, 1e-5));
+    }
+
+    #[test]
+    fn dot_op_matches_unfused_pipeline() {
+        let mut rng = Rng::seed_from_u64(33);
+        let a = random_graph(35, 4, 34);
+        let x = Dense::uniform(35, 10, 1.0, &mut rng);
+        let u = Dense::uniform(35, 6, 1.0, &mut rng);
+        let v = Dense::uniform(35, 6, 1.0, &mut rng);
+        let fused = fusedmm(&a, &x, Some(&u), Some(&v), EdgeOp::Dot, 1).unwrap();
+        // unfused: SDDMM then SpMM
+        let s = sddmm(&a, &u, &v, 1).unwrap();
+        let unfused = spmm_dense_ref(&s, &x, Semiring::Sum).unwrap();
+        assert!(fused.allclose(&unfused, 1e-3));
+    }
+
+    #[test]
+    fn sigmoid_dot_bounded_by_spmm() {
+        let mut rng = Rng::seed_from_u64(35);
+        let a = random_graph(20, 3, 36);
+        let x = Dense::uniform(20, 8, 1.0, &mut rng);
+        let u = Dense::uniform(20, 4, 1.0, &mut rng);
+        let v = Dense::uniform(20, 4, 1.0, &mut rng);
+        let got = fusedmm(&a, &x, Some(&u), Some(&v), EdgeOp::SigmoidDot, 1).unwrap();
+        assert_eq!(got.rows, 20);
+        assert_eq!(got.cols, 8);
+        // sanity: sigmoid gate ∈ (0,1) → |fused| ≤ spmm(|A|,|X|) elementwise bound
+        let abs_a = Csr {
+            values: a.values.iter().map(|v| v.abs()).collect(),
+            ..a.clone()
+        };
+        let abs_x = x.map(f32::abs);
+        let bound = spmm_trusted(&abs_a, &abs_x, Semiring::Sum).unwrap();
+        for (g, b) in got.data.iter().zip(bound.data.iter()) {
+            assert!(g.abs() <= b + 1e-5);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::seed_from_u64(37);
+        let a = random_graph(70, 6, 38);
+        let x = Dense::uniform(70, 16, 1.0, &mut rng);
+        let u = Dense::uniform(70, 8, 1.0, &mut rng);
+        let v = Dense::uniform(70, 8, 1.0, &mut rng);
+        let serial = fusedmm(&a, &x, Some(&u), Some(&v), EdgeOp::Dot, 1).unwrap();
+        for t in [2, 4] {
+            let par = fusedmm(&a, &x, Some(&u), Some(&v), EdgeOp::Dot, t).unwrap();
+            assert!(par.allclose(&serial, 0.0), "threads={t}");
+        }
+    }
+
+    #[test]
+    fn missing_uv_rejected() {
+        let a = random_graph(5, 2, 39);
+        let x = Dense::zeros(5, 4);
+        assert!(fusedmm(&a, &x, None, None, EdgeOp::Dot, 1).is_err());
+    }
+
+    #[test]
+    fn edge_op_parse() {
+        assert_eq!(EdgeOp::parse("copy").unwrap(), EdgeOp::Copy);
+        assert_eq!(EdgeOp::parse("dot").unwrap(), EdgeOp::Dot);
+        assert_eq!(EdgeOp::parse("sigmoid").unwrap(), EdgeOp::SigmoidDot);
+        assert!(EdgeOp::parse("relu").is_err());
+    }
+}

@@ -1,0 +1,221 @@
+//! The "generated" kernel family (paper §3.2): register-blocked,
+//! loop-unrolled SpMM specialised per K-block.
+//!
+//! iSpLib's code generator probes SIMD vector length (VLEN) and emits C
+//! kernels for embedding sizes that are multiples of VLEN; the unrolled
+//! inner loop keeps a `KB`-wide accumulator strip in vector registers across
+//! the whole neighbour stream of a row, so `Y[r, kb..kb+KB]` is written once
+//! per row instead of once per non-zero.
+//!
+//! The Rust analogue is a `const KB: usize` monomorphised kernel: the
+//! accumulator is a `[f32; KB]` local array; with KB known at compile time
+//! LLVM keeps it in SIMD registers and fully unrolls the inner loop —
+//! exactly the register-blocking + unrolling the paper generates. The
+//! family `GENERATED_KBS` plays the role of the generated-kernel set the
+//! auto-tuner searches over. Only `Semiring::Sum` has generated support,
+//! matching the paper ("currently, only the sum reduction operation has the
+//! generated kernel support").
+
+use crate::dense::Dense;
+use crate::error::{Error, Result};
+use crate::sparse::Csr;
+use crate::util::parallel;
+
+use super::nnz_balanced_partition;
+
+/// K-block widths with generated kernels. 4/8 suit 128/256-bit SIMD
+/// (NEON/AVX2, f32×4/×8); 16 suits AVX-512; 32/64/128 probe the
+/// register-spilling regime the paper's §6 discusses.
+pub const GENERATED_KBS: [usize; 6] = [4, 8, 16, 32, 64, 128];
+
+/// Register-blocked SpMM with compile-time K-block `KB`.
+///
+/// Requires `x.cols % KB == 0` — the tuner only routes here when the
+/// embedding size is a multiple of the block (paper: "when the embedding
+/// dimension is not a multiple of VLEN, we use a trusted kernel").
+fn spmm_blocked<const KB: usize>(a: &Csr, x: &Dense, start: usize, end: usize, out: &mut [f32]) {
+    let k = x.cols;
+    debug_assert_eq!(k % KB, 0);
+    let kblocks = k / KB;
+    for r in start..end {
+        let cols = a.row_cols(r);
+        let vals = a.row_vals(r);
+        let orow = &mut out[(r - start) * k..(r - start + 1) * k];
+        for kb in 0..kblocks {
+            let base = kb * KB;
+            // KB-wide accumulator strip: lives in registers for the whole
+            // neighbour stream (the register blocking of §3.2).
+            let mut acc = [0.0f32; KB];
+            for (&c, &v) in cols.iter().zip(vals.iter()) {
+                let xrow = &x.data[c * k + base..c * k + base + KB];
+                // fixed-trip-count loop → fully unrolled + vectorised
+                for i in 0..KB {
+                    acc[i] += v * xrow[i];
+                }
+            }
+            orow[base..base + KB].copy_from_slice(&acc);
+        }
+    }
+}
+
+/// Dispatch to the monomorphised kernel for `kb`. Returns `false` if `kb`
+/// has no generated instantiation.
+fn dispatch_blocked(
+    kb: usize,
+    a: &Csr,
+    x: &Dense,
+    start: usize,
+    end: usize,
+    out: &mut [f32],
+) -> bool {
+    match kb {
+        4 => spmm_blocked::<4>(a, x, start, end, out),
+        8 => spmm_blocked::<8>(a, x, start, end, out),
+        16 => spmm_blocked::<16>(a, x, start, end, out),
+        32 => spmm_blocked::<32>(a, x, start, end, out),
+        64 => spmm_blocked::<64>(a, x, start, end, out),
+        128 => spmm_blocked::<128>(a, x, start, end, out),
+        _ => return false,
+    }
+    true
+}
+
+/// Serial generated-kernel SpMM (sum semiring).
+///
+/// `kb` is the K-block width to use; `x.cols` must be a multiple of it and
+/// it must be one of [`GENERATED_KBS`].
+pub fn spmm_generated(a: &Csr, x: &Dense, kb: usize) -> Result<Dense> {
+    check(a, x, kb)?;
+    let mut y = Dense::zeros(a.rows, x.cols);
+    let ok = dispatch_blocked(kb, a, x, 0, a.rows, &mut y.data);
+    debug_assert!(ok);
+    Ok(y)
+}
+
+/// Parallel generated-kernel SpMM: NNZ-balanced ranges, disjoint output
+/// slices, no locks (same scheme as the trusted kernel).
+pub fn spmm_generated_parallel(a: &Csr, x: &Dense, kb: usize, threads: usize) -> Result<Dense> {
+    check(a, x, kb)?;
+    let threads = if threads == 0 { parallel::current_num_threads() } else { threads };
+    let ranges = nnz_balanced_partition(a, threads);
+    let k = x.cols;
+    let mut y = Dense::zeros(a.rows, k);
+
+    let mut slices: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(ranges.len());
+    let mut rest: &mut [f32] = &mut y.data;
+    for r in &ranges {
+        let (head, tail) = rest.split_at_mut((r.end - r.start) * k);
+        slices.push((r.start, r.end, head));
+        rest = tail;
+    }
+
+    parallel::join_all(
+        slices
+            .into_iter()
+            .map(|(start, end, out)| {
+                move || {
+                    let ok = dispatch_blocked(kb, a, x, start, end, out);
+                    debug_assert!(ok);
+                }
+            })
+            .collect(),
+    );
+    Ok(y)
+}
+
+fn check(a: &Csr, x: &Dense, kb: usize) -> Result<()> {
+    if a.cols != x.rows {
+        return Err(Error::ShapeMismatch(format!(
+            "spmm_generated: A {}x{} @ X {}x{}",
+            a.rows, a.cols, x.rows, x.cols
+        )));
+    }
+    if !GENERATED_KBS.contains(&kb) {
+        return Err(Error::UnknownName(format!(
+            "no generated kernel for K-block {kb}; have {GENERATED_KBS:?}"
+        )));
+    }
+    if x.cols % kb != 0 {
+        return Err(Error::ShapeMismatch(format!(
+            "spmm_generated: K={} not a multiple of K-block {kb} (use the trusted kernel)",
+            x.cols
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{spmm_dense_ref, Semiring};
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn random_graph(n: usize, avg_deg: usize, seed: u64) -> Csr {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            for _ in 0..avg_deg {
+                coo.push(r, rng.gen_range(n), rng.gen_range_f32(0.1, 1.0));
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn all_kbs_match_reference() {
+        let mut rng = Rng::seed_from_u64(5);
+        let a = random_graph(60, 6, 6);
+        for kb in GENERATED_KBS {
+            let k = kb * 2; // any multiple works
+            let x = Dense::uniform(60, k, 1.0, &mut rng);
+            let got = spmm_generated(&a, &x, kb).unwrap();
+            let want = spmm_dense_ref(&a, &x, Semiring::Sum).unwrap();
+            assert!(got.allclose(&want, 1e-4), "kb={kb}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::seed_from_u64(7);
+        let a = random_graph(90, 7, 8);
+        let x = Dense::uniform(90, 32, 1.0, &mut rng);
+        let serial = spmm_generated(&a, &x, 16).unwrap();
+        for threads in [1, 2, 4] {
+            let par = spmm_generated_parallel(&a, &x, 16, threads).unwrap();
+            assert!(par.allclose(&serial, 0.0), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn rejects_non_multiple_k() {
+        let a = random_graph(10, 2, 11);
+        let x = Dense::zeros(10, 17);
+        assert!(spmm_generated(&a, &x, 8).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_kb() {
+        let a = random_graph(10, 2, 12);
+        let x = Dense::zeros(10, 12);
+        assert!(spmm_generated(&a, &x, 3).is_err());
+        assert!(spmm_generated(&a, &x, 12).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let a = random_graph(10, 2, 13);
+        let x = Dense::zeros(11, 8);
+        assert!(spmm_generated(&a, &x, 8).is_err());
+    }
+
+    #[test]
+    fn kb_equals_k_exactly() {
+        let mut rng = Rng::seed_from_u64(14);
+        let a = random_graph(30, 4, 15);
+        let x = Dense::uniform(30, 64, 1.0, &mut rng);
+        let got = spmm_generated(&a, &x, 64).unwrap();
+        let want = spmm_dense_ref(&a, &x, Semiring::Sum).unwrap();
+        assert!(got.allclose(&want, 1e-4));
+    }
+}

@@ -1,0 +1,38 @@
+//! Sparse kernels — the paper's §3.2 contribution.
+//!
+//! Two kernel families, mirroring iSpLib's code generator:
+//!
+//! * **trusted** ([`trusted`]) — a generic SpMM that handles any embedding
+//!   size `K` and any [`Semiring`]. "Still efficient with balanced
+//!   multithreading, but does not use loop unrolling" (paper §3.2).
+//! * **generated** ([`generated`]) — register-blocked kernels monomorphised
+//!   over a compile-time K-block `KB` (the analogue of iSpLib's
+//!   VLEN-multiple generated C kernels). The auto-tuner picks between the
+//!   two families per `(dataset, K, machine)`.
+//!
+//! Plus the two other primitives the paper names: [`sddmm`] (sampled
+//! dense-dense matmul) and [`fusedmm`] (the FusedMM SDDMM+SpMM fusion [8]).
+//!
+//! All kernels are deterministic: parallelism partitions output rows, never
+//! reduction order within a row.
+
+mod dense_ref;
+mod fusedmm;
+mod generated;
+mod partition;
+mod sddmm;
+mod semiring;
+mod spmm_dispatch;
+mod trusted;
+
+pub use dense_ref::spmm_dense_ref;
+pub use fusedmm::{fusedmm, EdgeOp};
+pub use generated::{spmm_generated, spmm_generated_parallel, GENERATED_KBS};
+pub use partition::{nnz_balanced_partition, RowRange};
+pub use sddmm::sddmm;
+pub use semiring::Semiring;
+pub use spmm_dispatch::{spmm, KernelChoice};
+pub use trusted::{spmm_trusted, spmm_trusted_parallel};
+
+#[cfg(test)]
+mod proptests;

@@ -1,0 +1,130 @@
+//! NNZ-balanced row partitioning — the "balanced multithreading" of §3.2.
+//!
+//! Power-law graphs (all six paper datasets) have wildly skewed row lengths;
+//! splitting rows evenly gives one thread the hub rows and the rest idle
+//! time. iSpLib's thread scheduling splits by *work* (non-zeros). We do the
+//! same: [`nnz_balanced_partition`] produces contiguous row ranges whose nnz
+//! counts differ by at most one row's worth.
+
+use crate::sparse::Csr;
+
+/// A contiguous half-open range of output rows assigned to one worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowRange {
+    /// First row (inclusive).
+    pub start: usize,
+    /// Last row (exclusive).
+    pub end: usize,
+}
+
+impl RowRange {
+    /// Number of rows in the range.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// True if the range is empty.
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+}
+
+/// Split `a`'s rows into at most `parts` contiguous ranges with roughly
+/// equal non-zero counts (each range's nnz ≤ ceil(total/parts) + the last
+/// row that tipped it over). Empty ranges are dropped, so the result may be
+/// shorter than `parts`. The union of ranges covers `0..a.rows` exactly.
+pub fn nnz_balanced_partition(a: &Csr, parts: usize) -> Vec<RowRange> {
+    let parts = parts.max(1);
+    let total = a.nnz();
+    if a.rows == 0 {
+        return vec![];
+    }
+    if total == 0 || parts == 1 {
+        return vec![RowRange { start: 0, end: a.rows }];
+    }
+    let target = total.div_ceil(parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    let mut acc = 0usize;
+    for r in 0..a.rows {
+        acc += a.row_nnz(r);
+        // close the chunk once it has reached the per-part target, unless
+        // doing so would leave more remaining parts than remaining rows
+        if acc >= target && out.len() + 1 < parts {
+            out.push(RowRange { start, end: r + 1 });
+            start = r + 1;
+            acc = 0;
+        }
+    }
+    if start < a.rows {
+        out.push(RowRange { start, end: a.rows });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn skewed_graph() -> Csr {
+        // row 0 is a hub with 50 neighbours; rows 1..=50 have 1 each.
+        let mut coo = Coo::new(51, 51);
+        for j in 1..=50 {
+            coo.push(0, j, 1.0);
+            coo.push(j, 0, 1.0);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn covers_all_rows_exactly_once() {
+        let g = skewed_graph();
+        for parts in [1, 2, 3, 7, 64] {
+            let ranges = nnz_balanced_partition(&g, parts);
+            let mut cursor = 0;
+            for r in &ranges {
+                assert_eq!(r.start, cursor, "gap/overlap at parts={parts}");
+                assert!(!r.is_empty());
+                cursor = r.end;
+            }
+            assert_eq!(cursor, g.rows);
+        }
+    }
+
+    #[test]
+    fn balances_work_not_rows() {
+        let g = skewed_graph();
+        let ranges = nnz_balanced_partition(&g, 2);
+        assert_eq!(ranges.len(), 2);
+        // first range should be just the hub row (50 nnz ≈ half of 100)
+        assert_eq!(ranges[0], RowRange { start: 0, end: 1 });
+        let nnz0: usize = (ranges[0].start..ranges[0].end).map(|r| g.row_nnz(r)).sum();
+        let nnz1: usize = (ranges[1].start..ranges[1].end).map(|r| g.row_nnz(r)).sum();
+        assert_eq!(nnz0, 50);
+        assert_eq!(nnz1, 50);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        let empty = Csr::empty(0, 4);
+        assert!(nnz_balanced_partition(&empty, 4).is_empty());
+
+        let zero_nnz = Csr::empty(5, 5);
+        let ranges = nnz_balanced_partition(&zero_nnz, 4);
+        assert_eq!(ranges, vec![RowRange { start: 0, end: 5 }]);
+
+        let g = skewed_graph();
+        // more parts than rows → no empty ranges, still a full cover
+        let ranges = nnz_balanced_partition(&g, 1000);
+        let covered: usize = ranges.iter().map(|r| r.len()).sum();
+        assert_eq!(covered, g.rows);
+    }
+
+    #[test]
+    fn parts_zero_treated_as_one() {
+        let g = skewed_graph();
+        let ranges = nnz_balanced_partition(&g, 0);
+        assert_eq!(ranges, vec![RowRange { start: 0, end: g.rows }]);
+    }
+}

@@ -1,0 +1,149 @@
+//! Property-based tests over the kernel family (via `util::check`).
+//!
+//! The central invariant of the whole library: **the tuner's routing choice
+//! never changes numerics** — trusted, every generated instantiation, the
+//! parallel variants, and the dense reference all agree (up to fp
+//! associativity slack) on random sparsity patterns, shapes, and semirings.
+
+use crate::dense::Dense;
+use crate::kernels::{
+    fusedmm, nnz_balanced_partition, sddmm, spmm, spmm_dense_ref, EdgeOp, KernelChoice, Semiring,
+    GENERATED_KBS,
+};
+use crate::sparse::{Coo, Csr};
+use crate::util::check::forall;
+use crate::util::rng::Rng;
+
+/// Random CSR with shape `rows × cols` and 0..4·rows entries.
+fn arb_csr(rng: &mut Rng, rows: usize, cols: usize) -> Csr {
+    let n_entries = rng.gen_range(rows * 4 + 1);
+    let mut coo = Coo::new(rows, cols);
+    for _ in 0..n_entries {
+        coo.push(rng.gen_range(rows), rng.gen_range(cols), rng.gen_range_f32(-2.0, 2.0));
+    }
+    coo.to_csr()
+}
+
+fn arb_dense(rng: &mut Rng, rows: usize, cols: usize) -> Dense {
+    let data = (0..rows * cols).map(|_| rng.gen_range_f32(-2.0, 2.0)).collect();
+    Dense { rows, cols, data }
+}
+
+fn arb_semiring(rng: &mut Rng) -> Semiring {
+    Semiring::ALL[rng.gen_range(4)]
+}
+
+#[test]
+fn prop_trusted_matches_reference() {
+    forall("trusted == dense reference", 48, |rng| {
+        let a = arb_csr(rng, 24, 20);
+        let x = arb_dense(rng, 20, 13);
+        let op = arb_semiring(rng);
+        let got = spmm(&a, &x, op, KernelChoice::Trusted, 1).unwrap();
+        let want = spmm_dense_ref(&a, &x, op).unwrap();
+        assert!(got.allclose(&want, 1e-3), "op={op:?}");
+    });
+}
+
+#[test]
+fn prop_generated_matches_trusted() {
+    forall("generated == trusted (routing invariance)", 48, |rng| {
+        let a = arb_csr(rng, 20, 20);
+        let kb = GENERATED_KBS[rng.gen_range(GENERATED_KBS.len())];
+        let mult = 1 + rng.gen_range(3);
+        let k = kb * mult;
+        let mut x = Dense::zeros(20, k);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i as f32) * 0.37).sin();
+        }
+        let want = spmm(&a, &x, Semiring::Sum, KernelChoice::Trusted, 1).unwrap();
+        let got = spmm(&a, &x, Semiring::Sum, KernelChoice::Generated { kb }, 1).unwrap();
+        assert!(got.allclose(&want, 1e-3), "kb={kb} k={k}");
+    });
+}
+
+#[test]
+fn prop_parallel_bit_identical() {
+    forall("parallel == serial bitwise", 48, |rng| {
+        let a = arb_csr(rng, 32, 32);
+        let x = arb_dense(rng, 32, 16);
+        let op = arb_semiring(rng);
+        let threads = 2 + rng.gen_range(4);
+        let serial = spmm(&a, &x, op, KernelChoice::Trusted, 1).unwrap();
+        let par = spmm(&a, &x, op, KernelChoice::Trusted, threads).unwrap();
+        assert_eq!(serial.data, par.data, "threads={threads} op={op:?}");
+    });
+}
+
+#[test]
+fn prop_partition_covers() {
+    forall("nnz partition covers rows exactly once", 64, |rng| {
+        let a = arb_csr(rng, 40, 10);
+        let parts = 1 + rng.gen_range(12);
+        let ranges = nnz_balanced_partition(&a, parts);
+        let mut cursor = 0usize;
+        for r in &ranges {
+            assert_eq!(r.start, cursor);
+            assert!(r.end > r.start);
+            cursor = r.end;
+        }
+        assert_eq!(cursor, a.rows);
+    });
+}
+
+#[test]
+fn prop_mean_is_sum_over_count() {
+    forall("mean == sum / nnz", 48, |rng| {
+        let a = arb_csr(rng, 16, 16);
+        let x = arb_dense(rng, 16, 8);
+        let sum = spmm(&a, &x, Semiring::Sum, KernelChoice::Trusted, 1).unwrap();
+        let mean = spmm(&a, &x, Semiring::Mean, KernelChoice::Trusted, 1).unwrap();
+        for r in 0..16 {
+            let n = a.row_nnz(r);
+            for k in 0..8 {
+                let expect = if n == 0 { 0.0 } else { sum.get(r, k) / n as f32 };
+                assert!((mean.get(r, k) - expect).abs() < 1e-4);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fusion_equivalence() {
+    forall("fusedmm(dot) == sddmm then spmm", 32, |rng| {
+        let a = arb_csr(rng, 14, 14);
+        let u = arb_dense(rng, 14, 5);
+        let v = arb_dense(rng, 14, 5);
+        let x = arb_dense(rng, 14, 6);
+        let s = sddmm(&a, &u, &v, 1).unwrap();
+        assert_eq!(&s.row_ptr, &a.row_ptr);
+        assert_eq!(&s.col_idx, &a.col_idx);
+        let unfused = spmm_dense_ref(&s, &x, Semiring::Sum).unwrap();
+        let fused = fusedmm(&a, &x, Some(&u), Some(&v), EdgeOp::Dot, 1).unwrap();
+        assert!(fused.allclose(&unfused, 1e-2));
+    });
+}
+
+#[test]
+fn prop_format_roundtrips() {
+    forall("csr/coo/csc round-trips", 64, |rng| {
+        let a = arb_csr(rng, 18, 25);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.to_coo().to_csr(), a);
+        assert_eq!(a.to_csc().to_csr(), a);
+        a.validate().unwrap();
+        a.transpose().validate().unwrap();
+    });
+}
+
+#[test]
+fn prop_transpose_spmm_identity() {
+    forall("spmm(At, g) == dense transpose oracle", 48, |rng| {
+        let a = arb_csr(rng, 12, 15);
+        let g = arb_dense(rng, 12, 7);
+        let at = a.transpose();
+        let got = spmm(&at, &g, Semiring::Sum, KernelChoice::Trusted, 1).unwrap();
+        let want = a.to_dense().transpose().matmul(&g).unwrap();
+        assert!(got.allclose(&want, 1e-3));
+    });
+}

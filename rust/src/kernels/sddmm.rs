@@ -1,0 +1,156 @@
+//! SDDMM — sampled dense-dense matrix multiplication (paper §1(a)).
+//!
+//! `S[r,c] = A[r,c] · ⟨U[r,:], V[c,:]⟩` for every non-zero `(r,c)` of the
+//! sparse pattern `A`. This is the other primitive GNN training maps to
+//! (attention scores, edge gates) and one half of FusedMM.
+//!
+//! Output shares `A`'s sparsity pattern; only the values change, so the
+//! kernel writes a value vector aligned with `A.values`.
+
+use crate::dense::Dense;
+use crate::error::{Error, Result};
+use crate::sparse::Csr;
+use crate::util::parallel;
+
+use super::nnz_balanced_partition;
+
+/// Serial/parallel SDDMM: returns a CSR with `A`'s pattern and values
+/// `A[r,c] * dot(U[r], V[c])`. `threads == 1` runs serial; `0` uses the
+/// rayon pool.
+pub fn sddmm(a: &Csr, u: &Dense, v: &Dense, threads: usize) -> Result<Csr> {
+    if u.rows != a.rows {
+        return Err(Error::ShapeMismatch(format!(
+            "sddmm: U has {} rows, A has {}",
+            u.rows, a.rows
+        )));
+    }
+    if v.rows != a.cols {
+        return Err(Error::ShapeMismatch(format!(
+            "sddmm: V has {} rows, A has {} cols",
+            v.rows, a.cols
+        )));
+    }
+    if u.cols != v.cols {
+        return Err(Error::ShapeMismatch(format!(
+            "sddmm: U dim {} != V dim {}",
+            u.cols, v.cols
+        )));
+    }
+
+    let mut out = a.clone();
+    let threads = if threads == 0 { parallel::current_num_threads() } else { threads };
+
+    if threads <= 1 {
+        sddmm_rows(a, u, v, 0, a.rows, &mut out.values);
+        return Ok(out);
+    }
+
+    let ranges = nnz_balanced_partition(a, threads);
+    // Slice the value buffer along nnz boundaries of the row ranges.
+    let mut slices: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(ranges.len());
+    let mut rest: &mut [f32] = &mut out.values;
+    let mut consumed = 0usize;
+    for r in &ranges {
+        let len = a.row_ptr[r.end] - a.row_ptr[r.start];
+        let (head, tail) = rest.split_at_mut(len);
+        slices.push((r.start, r.end, head));
+        rest = tail;
+        consumed += len;
+    }
+    debug_assert_eq!(consumed, a.nnz());
+
+    parallel::join_all(
+        slices
+            .into_iter()
+            .map(|(start, end, vals)| move || sddmm_rows_into(a, u, v, start, end, vals))
+            .collect(),
+    );
+    Ok(out)
+}
+
+fn sddmm_rows(a: &Csr, u: &Dense, v: &Dense, start: usize, end: usize, values: &mut [f32]) {
+    let (s, e) = (a.row_ptr[start], a.row_ptr[end]);
+    sddmm_rows_into(a, u, v, start, end, &mut values[s..e]);
+}
+
+/// Compute edge values for rows `[start, end)` into a buffer whose index 0
+/// corresponds to `a.row_ptr[start]`.
+#[inline]
+fn sddmm_rows_into(a: &Csr, u: &Dense, v: &Dense, start: usize, end: usize, out: &mut [f32]) {
+    let base = a.row_ptr[start];
+    for r in start..end {
+        let urow = u.row(r);
+        let (s, e) = (a.row_ptr[r], a.row_ptr[r + 1]);
+        for i in s..e {
+            let c = a.col_idx[i];
+            let vrow = v.row(c);
+            let dot: f32 = urow.iter().zip(vrow.iter()).map(|(x, y)| x * y).sum();
+            out[i - base] = a.values[i] * dot;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn random_graph(n: usize, m: usize, avg_deg: usize, seed: u64) -> Csr {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut coo = Coo::new(n, m);
+        for r in 0..n {
+            for _ in 0..avg_deg {
+                coo.push(r, rng.gen_range(m), rng.gen_range_f32(0.5, 1.5));
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// Dense oracle: S = A ⊙ (U Vᵀ).
+    fn sddmm_dense(a: &Csr, u: &Dense, v: &Dense) -> Dense {
+        let uvt = u.matmul_t(v).unwrap();
+        a.to_dense().hadamard(&uvt).unwrap()
+    }
+
+    #[test]
+    fn matches_dense_oracle() {
+        let mut rng = Rng::seed_from_u64(21);
+        let a = random_graph(30, 25, 4, 22);
+        let u = Dense::uniform(30, 9, 1.0, &mut rng);
+        let v = Dense::uniform(25, 9, 1.0, &mut rng);
+        let got = sddmm(&a, &u, &v, 1).unwrap();
+        assert!(got.to_dense().allclose(&sddmm_dense(&a, &u, &v), 1e-4));
+        // pattern preserved exactly
+        assert_eq!(got.row_ptr, a.row_ptr);
+        assert_eq!(got.col_idx, a.col_idx);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::seed_from_u64(23);
+        let a = random_graph(80, 80, 6, 24);
+        let u = Dense::uniform(80, 16, 1.0, &mut rng);
+        let v = Dense::uniform(80, 16, 1.0, &mut rng);
+        let serial = sddmm(&a, &u, &v, 1).unwrap();
+        for t in [2, 3, 8] {
+            let par = sddmm(&a, &u, &v, t).unwrap();
+            assert_eq!(par.values, serial.values, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = random_graph(5, 5, 2, 25);
+        assert!(sddmm(&a, &Dense::zeros(4, 3), &Dense::zeros(5, 3), 1).is_err());
+        assert!(sddmm(&a, &Dense::zeros(5, 3), &Dense::zeros(4, 3), 1).is_err());
+        assert!(sddmm(&a, &Dense::zeros(5, 3), &Dense::zeros(5, 2), 1).is_err());
+    }
+
+    #[test]
+    fn empty_pattern() {
+        let a = Csr::empty(3, 3);
+        let got = sddmm(&a, &Dense::zeros(3, 2), &Dense::zeros(3, 2), 1).unwrap();
+        assert_eq!(got.nnz(), 0);
+    }
+}

@@ -1,0 +1,148 @@
+//! The public SpMM entry point: routes between the trusted and generated
+//! kernel families.
+//!
+//! This is the seam the auto-tuner (and `patch()`/`unpatch()`) controls: a
+//! [`KernelChoice`] says *which* kernel handles a call; numerics never
+//! depend on the choice (a property-tested invariant).
+
+use crate::dense::Dense;
+use crate::error::Result;
+use crate::sparse::Csr;
+
+use super::{
+    spmm_generated, spmm_generated_parallel, spmm_trusted, spmm_trusted_parallel, Semiring,
+    GENERATED_KBS,
+};
+
+/// Which kernel implementation to route an SpMM call to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelChoice {
+    /// Generic kernel, any K / any semiring.
+    Trusted,
+    /// Register-blocked generated kernel with the given K-block width.
+    /// Sum semiring only; K must be a multiple of the block.
+    Generated {
+        /// K-block width (one of [`GENERATED_KBS`]).
+        kb: usize,
+    },
+}
+
+impl KernelChoice {
+    /// Can this choice execute a call with embedding size `k` and semiring
+    /// `op`? (The tuner consults this before routing; the paper falls back
+    /// to the trusted kernel whenever the generated one doesn't apply.)
+    pub fn applicable(&self, k: usize, op: Semiring) -> bool {
+        match *self {
+            KernelChoice::Trusted => true,
+            KernelChoice::Generated { kb } => {
+                op == Semiring::Sum && GENERATED_KBS.contains(&kb) && k % kb == 0 && k > 0
+            }
+        }
+    }
+
+    /// Short display name for reports.
+    pub fn label(&self) -> String {
+        match *self {
+            KernelChoice::Trusted => "trusted".to_string(),
+            KernelChoice::Generated { kb } => format!("generated(kb={kb})"),
+        }
+    }
+}
+
+/// SpMM with explicit routing. Falls back to the trusted kernel when the
+/// requested choice is not applicable to `(K, op)` — mirroring the paper's
+/// "when the embedding dimension is not a multiple of VLEN, we use a
+/// trusted kernel".
+pub fn spmm(
+    a: &Csr,
+    x: &Dense,
+    op: Semiring,
+    choice: KernelChoice,
+    threads: usize,
+) -> Result<Dense> {
+    let choice = if choice.applicable(x.cols, op) { choice } else { KernelChoice::Trusted };
+    match choice {
+        KernelChoice::Trusted => {
+            if threads <= 1 {
+                spmm_trusted(a, x, op)
+            } else {
+                spmm_trusted_parallel(a, x, op, threads)
+            }
+        }
+        KernelChoice::Generated { kb } => {
+            if threads <= 1 {
+                spmm_generated(a, x, kb)
+            } else {
+                spmm_generated_parallel(a, x, kb, threads)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::spmm_dense_ref;
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn graph(n: usize, seed: u64) -> Csr {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            for _ in 0..4 {
+                coo.push(r, rng.gen_range(n), rng.gen_range_f32(0.1, 1.0));
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn applicability_rules() {
+        assert!(KernelChoice::Trusted.applicable(17, Semiring::Max));
+        let g8 = KernelChoice::Generated { kb: 8 };
+        assert!(g8.applicable(64, Semiring::Sum));
+        assert!(!g8.applicable(20, Semiring::Sum)); // not a multiple
+        assert!(!g8.applicable(64, Semiring::Mean)); // only sum
+        assert!(!KernelChoice::Generated { kb: 5 }.applicable(10, Semiring::Sum)); // no kernel
+        assert!(!g8.applicable(0, Semiring::Sum));
+    }
+
+    #[test]
+    fn fallback_keeps_numerics() {
+        let mut rng = Rng::seed_from_u64(41);
+        let a = graph(30, 42);
+        let x = Dense::uniform(30, 17, 1.0, &mut rng); // 17 not a multiple of 8
+        let want = spmm_dense_ref(&a, &x, Semiring::Sum).unwrap();
+        let got = spmm(&a, &x, Semiring::Sum, KernelChoice::Generated { kb: 8 }, 1).unwrap();
+        assert!(got.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn routing_invariance() {
+        let mut rng = Rng::seed_from_u64(43);
+        let a = graph(50, 44);
+        let x = Dense::uniform(50, 32, 1.0, &mut rng);
+        let want = spmm_dense_ref(&a, &x, Semiring::Sum).unwrap();
+        for choice in [
+            KernelChoice::Trusted,
+            KernelChoice::Generated { kb: 8 },
+            KernelChoice::Generated { kb: 16 },
+            KernelChoice::Generated { kb: 32 },
+        ] {
+            for threads in [1, 3] {
+                let got = spmm(&a, &x, Semiring::Sum, choice, threads).unwrap();
+                assert!(
+                    got.allclose(&want, 1e-4),
+                    "choice={choice:?} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(KernelChoice::Trusted.label(), "trusted");
+        assert_eq!(KernelChoice::Generated { kb: 16 }.label(), "generated(kb=16)");
+    }
+}

@@ -1,0 +1,185 @@
+//! The "trusted" kernel (paper §3.2): generic SpMM for any embedding size
+//! and any semiring. No loop unrolling / register blocking — its inner loop
+//! is a dynamic-length stream over the feature dimension — but it is still
+//! "efficient with balanced multithreading": the parallel variant uses
+//! NNZ-balanced row partitioning.
+
+use crate::dense::Dense;
+use crate::error::{Error, Result};
+use crate::sparse::Csr;
+use crate::util::parallel;
+
+use super::{nnz_balanced_partition, Semiring};
+
+/// Serial trusted kernel.
+pub fn spmm_trusted(a: &Csr, x: &Dense, op: Semiring) -> Result<Dense> {
+    check_shapes(a, x)?;
+    let mut y = Dense::zeros(a.rows, x.cols);
+    spmm_trusted_rows(a, x, op, 0, a.rows, &mut y.data);
+    Ok(y)
+}
+
+/// Parallel trusted kernel: NNZ-balanced row ranges over `threads` workers
+/// (0 → rayon's current pool size).
+pub fn spmm_trusted_parallel(a: &Csr, x: &Dense, op: Semiring, threads: usize) -> Result<Dense> {
+    check_shapes(a, x)?;
+    let threads = if threads == 0 { parallel::current_num_threads() } else { threads };
+    let ranges = nnz_balanced_partition(a, threads);
+    let k = x.cols;
+    let mut y = Dense::zeros(a.rows, k);
+
+    // Split the output buffer along the same row boundaries so each worker
+    // owns a disjoint &mut slice — no locks on the hot path.
+    let mut slices: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(ranges.len());
+    let mut rest: &mut [f32] = &mut y.data;
+    let mut offset = 0usize;
+    for r in &ranges {
+        let len = (r.end - r.start) * k;
+        let (head, tail) = rest.split_at_mut(len);
+        slices.push((r.start, r.end, head));
+        rest = tail;
+        offset += len;
+    }
+    debug_assert_eq!(offset, a.rows * k);
+
+    parallel::join_all(
+        slices
+            .into_iter()
+            .map(|(start, end, out)| move || spmm_trusted_rows_into(a, x, op, start, end, out))
+            .collect(),
+    );
+    Ok(y)
+}
+
+/// Compute rows `[start, end)` into the global output buffer `y_data`
+/// (indexed from row 0).
+fn spmm_trusted_rows(a: &Csr, x: &Dense, op: Semiring, start: usize, end: usize, y_data: &mut [f32]) {
+    let k = x.cols;
+    spmm_trusted_rows_into(a, x, op, start, end, &mut y_data[start * k..end * k]);
+}
+
+/// Compute rows `[start, end)` into a buffer whose row 0 is `start`.
+#[inline]
+fn spmm_trusted_rows_into(
+    a: &Csr,
+    x: &Dense,
+    op: Semiring,
+    start: usize,
+    end: usize,
+    out: &mut [f32],
+) {
+    let k = x.cols;
+    match op {
+        // Fast path: sum skips the identity fill (0.0 is the alloc default)
+        // and the finalize pass.
+        Semiring::Sum => {
+            for r in start..end {
+                let orow = &mut out[(r - start) * k..(r - start + 1) * k];
+                for (&c, &v) in a.row_cols(r).iter().zip(a.row_vals(r)) {
+                    let xrow = x.row(c);
+                    for (o, &xv) in orow.iter_mut().zip(xrow.iter()) {
+                        *o += v * xv;
+                    }
+                }
+            }
+        }
+        _ => {
+            for r in start..end {
+                let nnz = a.row_nnz(r);
+                let orow = &mut out[(r - start) * k..(r - start + 1) * k];
+                for slot in orow.iter_mut() {
+                    *slot = op.identity();
+                }
+                for (&c, &v) in a.row_cols(r).iter().zip(a.row_vals(r)) {
+                    let xrow = x.row(c);
+                    for (o, &xv) in orow.iter_mut().zip(xrow.iter()) {
+                        *o = op.combine(*o, v * xv);
+                    }
+                }
+                for slot in orow.iter_mut() {
+                    *slot = op.finalize(*slot, nnz);
+                }
+            }
+        }
+    }
+}
+
+fn check_shapes(a: &Csr, x: &Dense) -> Result<()> {
+    if a.cols != x.rows {
+        return Err(Error::ShapeMismatch(format!(
+            "spmm_trusted: A {}x{} @ X {}x{}",
+            a.rows, a.cols, x.rows, x.cols
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::spmm_dense_ref;
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn random_graph(n: usize, avg_deg: usize, seed: u64) -> Csr {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            for _ in 0..avg_deg {
+                coo.push(r, rng.gen_range(n), rng.gen_range_f32(0.1, 1.0));
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn matches_reference_all_semirings() {
+        let mut rng = Rng::seed_from_u64(1);
+        let a = random_graph(40, 5, 2);
+        let x = Dense::uniform(40, 17, 1.0, &mut rng);
+        for op in Semiring::ALL {
+            let got = spmm_trusted(&a, &x, op).unwrap();
+            let want = spmm_dense_ref(&a, &x, op).unwrap();
+            assert!(got.allclose(&want, 1e-4), "semiring {op:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::seed_from_u64(3);
+        let a = random_graph(100, 8, 4);
+        let x = Dense::uniform(100, 33, 1.0, &mut rng);
+        for op in Semiring::ALL {
+            let serial = spmm_trusted(&a, &x, op).unwrap();
+            for threads in [1, 2, 5] {
+                let par = spmm_trusted_parallel(&a, &x, op, threads).unwrap();
+                assert!(par.allclose(&serial, 0.0), "threads={threads} op={op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = Csr::empty(4, 4);
+        let x = Dense::zeros(4, 8);
+        let y = spmm_trusted(&a, &x, Semiring::Max).unwrap();
+        assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn k_equals_one() {
+        // degenerate embedding size (the paper's datasets do 1-dim prediction)
+        let a = random_graph(20, 3, 9);
+        let mut rng = Rng::seed_from_u64(10);
+        let x = Dense::uniform(20, 1, 1.0, &mut rng);
+        let got = spmm_trusted(&a, &x, Semiring::Sum).unwrap();
+        let want = spmm_dense_ref(&a, &x, Semiring::Sum).unwrap();
+        assert!(got.allclose(&want, 1e-5));
+    }
+
+    #[test]
+    fn shape_error() {
+        let a = Csr::empty(2, 3);
+        assert!(spmm_trusted(&a, &Dense::zeros(4, 2), Semiring::Sum).is_err());
+    }
+}

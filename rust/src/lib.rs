@@ -1,0 +1,62 @@
+//! # iSpLib — auto-tuned sparse operations for GNN training
+//!
+//! A Rust + JAX + Pallas reproduction of *iSpLib: A Library for Accelerating
+//! Graph Neural Networks using Auto-tuned Sparse Operations* (WWW 2024).
+//!
+//! The library is organised in three layers:
+//!
+//! * **L3 (this crate)** — the coordinator: sparse substrate, the
+//!   trusted/generated kernel families, the auto-tuner, the backprop cache,
+//!   a reverse-mode autodiff tape, the GNN zoo, the trainer, dataset
+//!   generators, and the experiment harness that regenerates every table
+//!   and figure of the paper.
+//! * **L2 (python/compile)** — JAX models (GCN/SAGE/GIN) AOT-lowered to HLO
+//!   text, loaded and executed from Rust through [`runtime`] (PJRT).
+//! * **L1 (python/compile/kernels)** — Pallas SpMM/SDDMM/FusedMM kernels
+//!   called by the L2 models.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use isplib::prelude::*;
+//!
+//! // Build a graph, a model, and train — two extra lines (`patch`) route
+//! // all SpMM through the auto-tuned kernels, exactly the paper's §3.6.
+//! let dataset = isplib::data::karate_club();
+//! isplib::patch();
+//! let cfg = TrainConfig { epochs: 50, ..TrainConfig::default() };
+//! let mut trainer = Trainer::new(GnnModel::Gcn, Backend::NativeTuned, cfg, &dataset).unwrap();
+//! let report = trainer.fit(&dataset).unwrap();
+//! println!("final loss {:.4}", report.final_loss);
+//! isplib::unpatch();
+//! ```
+
+pub mod autodiff;
+pub mod autotune;
+pub mod cache;
+pub mod coordinator;
+pub mod data;
+pub mod dense;
+pub mod error;
+pub mod gnn;
+pub mod kernels;
+pub mod runtime;
+pub mod sparse;
+pub mod train;
+pub mod util;
+
+pub use coordinator::patch::{is_patched, patch, unpatch};
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::autotune::{HardwareProfile, Tuner, TuningReport};
+    pub use crate::cache::BackpropCache;
+    pub use crate::coordinator::patch::{is_patched, patch, unpatch};
+    pub use crate::data::{Dataset, DatasetSpec};
+    pub use crate::dense::Dense;
+    pub use crate::error::{Error, Result};
+    pub use crate::gnn::GnnModel;
+    pub use crate::kernels::{spmm, EdgeOp, KernelChoice, Semiring};
+    pub use crate::sparse::{Coo, Csc, Csr, NormKind};
+    pub use crate::train::{Backend, TrainConfig, TrainReport, Trainer};
+}

@@ -1,0 +1,223 @@
+//! iSpLib CLI — the leader entrypoint.
+//!
+//! ```text
+//! isplib probe                       # hardware probe + kernel geometry
+//! isplib datasets [--scale N]        # regenerate Table 1
+//! isplib tune [--profiles P] [...]   # regenerate Figure 2 tuning graphs
+//! isplib train --model gcn --dataset reddit --backend isplib [...]
+//! isplib bench [...]                 # regenerate the Figure 3 grid
+//! ```
+
+use isplib::autotune::{render_ascii_chart, HardwareProfile};
+use isplib::coordinator::{
+    figure2_sweep, figure3_grid, figure3_to_json, headline_speedups, render_figure3,
+    render_table1, table1_rows, ExperimentConfig,
+};
+use isplib::data::{karate_club, paper_specs, spec_by_name, DatasetSpec};
+use isplib::error::{Error, Result};
+use isplib::gnn::GnnModel;
+use isplib::train::{Backend, TrainConfig, Trainer};
+use isplib::util::cli::Args;
+use isplib::util::json::Json;
+
+const USAGE: &str = "\
+isplib — auto-tuned sparse operations for GNN training (iSpLib reproduction)
+
+USAGE: isplib <COMMAND> [FLAGS]
+
+COMMANDS:
+  probe      Probe the host (and show the paper's two modelled CPUs)
+  datasets   Regenerate Table 1     [--scale 256] [--seed 7]
+  tune       Regenerate Figure 2    [--profiles intel-skylake,amd-epyc]
+             [--datasets all] [--ks 16,32,64,128,256,512,1024]
+             [--scale 256] [--json]
+  train      Train one cell         [--model gcn] [--dataset karate]
+             [--backend isplib] [--epochs 30] [--hidden 32] [--scale 256]
+             [--artifacts artifacts] [--json]
+  bench      Regenerate Figure 3    [--models gcn,sage-sum,gin]
+             [--datasets all] [--frameworks all] [--epochs 10]
+             [--hidden 32] [--scale 256] [--json]
+
+Models:     gcn | sage-sum | sage-mean | gin
+Backends:   isplib | pt2 | pt1 | pt2-mp | dense | hlo
+Datasets:   reddit | reddit2 | ogbn-mag | ogbn-products | amazon |
+            ogbn-protein | karate (train only)
+";
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("probe") => probe(),
+        Some("datasets") => datasets(&args),
+        Some("tune") => tune(&args),
+        Some("train") => train(&args),
+        Some("bench") => bench(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(Error::Config(format!("unknown command '{other}'\n\n{USAGE}"))),
+    }
+}
+
+fn probe() -> Result<()> {
+    for name in ["host", "intel-skylake", "amd-epyc"] {
+        let p = HardwareProfile::named(name)?;
+        println!(
+            "{:<14} simd={:?} vlen_f32={} vregs={} cores={} kbs={:?} best_kb={}",
+            p.name,
+            p.simd,
+            p.vlen(),
+            p.vector_registers,
+            p.cores,
+            p.candidate_kbs(),
+            p.predicted_best_kb()
+        );
+    }
+    Ok(())
+}
+
+fn datasets(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig {
+        scale: args.get_parse("scale", 256usize)?,
+        seed: args.get_parse("seed", 7u64)?,
+        ..ExperimentConfig::default()
+    };
+    let rows = table1_rows(&cfg)?;
+    print!("{}", render_table1(&rows));
+    Ok(())
+}
+
+fn tune(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig {
+        scale: args.get_parse("scale", 256usize)?,
+        ..ExperimentConfig::default()
+    };
+    let specs = parse_datasets(&args.get("datasets", "all"))?;
+    let profiles_arg = args.get("profiles", "intel-skylake,amd-epyc");
+    let profiles: Vec<&str> = profiles_arg.split(',').collect();
+    let ks_arg = args.get("ks", "16,32,64,128,256,512,1024");
+    let ks = parse_usize_list(&ks_arg)?;
+    let reports = figure2_sweep(&cfg, &specs, &profiles, &ks)?;
+    if args.has("json") {
+        let arr = Json::Arr(reports.iter().map(|r| r.to_json()).collect());
+        println!("{}", arr.pretty());
+    } else {
+        for r in &reports {
+            print!("{}", render_ascii_chart(r));
+        }
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let model = GnnModel::parse(&args.get("model", "gcn"))?;
+    let backend = Backend::parse(&args.get("backend", "isplib"))?;
+    let dataset_name = args.get("dataset", "karate");
+    let scale = args.get_parse("scale", 256usize)?;
+    let ds = if dataset_name == "karate" {
+        karate_club()
+    } else {
+        spec_by_name(&dataset_name)
+            .ok_or_else(|| Error::UnknownName(format!("dataset '{dataset_name}'")))?
+            .instantiate(scale, 7)?
+    };
+    let cfg = TrainConfig {
+        epochs: args.get_parse("epochs", 30usize)?,
+        hidden: args.get_parse("hidden", 32usize)?,
+        artifacts_dir: Some(args.get("artifacts", "artifacts").into()),
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(model, backend, cfg, &ds)?;
+    let report = trainer.fit(&ds)?;
+    if args.has("json") {
+        println!("{}", report.to_json().pretty());
+    } else {
+        println!(
+            "model={} backend={} dataset={} epochs={} avg_epoch={:.6}s setup={:.3}s \
+             final_loss={:.4} train_acc={:.3} test_acc={:.3}",
+            report.model,
+            report.backend,
+            report.dataset,
+            report.epoch_secs.len(),
+            report.avg_epoch_secs(),
+            report.setup_secs,
+            report.final_loss,
+            report.train_acc,
+            report.test_acc
+        );
+    }
+    Ok(())
+}
+
+fn bench(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig {
+        scale: args.get_parse("scale", 256usize)?,
+        epochs: args.get_parse("epochs", 10usize)?,
+        hidden: args.get_parse("hidden", 32usize)?,
+        ..ExperimentConfig::default()
+    };
+    let models = parse_models(&args.get("models", "gcn,sage-sum,gin"))?;
+    let specs = parse_datasets(&args.get("datasets", "all"))?;
+    let backends = parse_backends(&args.get("frameworks", "all"))?;
+    let cells = figure3_grid(&cfg, &models, &specs, &backends)?;
+    if args.has("json") {
+        println!("{}", figure3_to_json(&cells).pretty());
+    } else {
+        print!("{}", render_figure3(&cells));
+        println!("\nheadline speedups vs PT2 (max over datasets):");
+        for (model, speedup) in headline_speedups(&cells) {
+            println!("  {model}: {speedup:.1}x");
+        }
+    }
+    Ok(())
+}
+
+fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|t| {
+            t.trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("cannot parse '{t}' as a number")))
+        })
+        .collect()
+}
+
+fn parse_models(s: &str) -> Result<Vec<GnnModel>> {
+    if s == "all" {
+        return Ok(GnnModel::ALL.to_vec());
+    }
+    s.split(',').map(|m| GnnModel::parse(m.trim())).collect()
+}
+
+fn parse_datasets(s: &str) -> Result<Vec<DatasetSpec>> {
+    if s == "all" {
+        return Ok(paper_specs());
+    }
+    s.split(',')
+        .map(|name| {
+            spec_by_name(name.trim())
+                .ok_or_else(|| Error::UnknownName(format!("dataset '{name}'")))
+        })
+        .collect()
+}
+
+fn parse_backends(s: &str) -> Result<Vec<Backend>> {
+    if s == "all" {
+        return Ok(Backend::NATIVE_ALL.to_vec());
+    }
+    s.split(',').map(|b| Backend::parse(b.trim())).collect()
+}

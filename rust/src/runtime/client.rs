@@ -1,0 +1,151 @@
+//! Thin wrappers over the `xla` crate: compile HLO text, execute, convert.
+
+use std::path::Path;
+
+use crate::dense::Dense;
+use crate::error::{Error, Result};
+
+/// Convert an `xla` crate error into ours.
+fn xerr(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+/// A compiled executable together with its owning PJRT client.
+///
+/// The `xla` crate's handles borrow the client internally, so we keep the
+/// client alive alongside every executable. One `HloExecutable` per loaded
+/// artifact; compile once, execute many times.
+pub struct HloExecutable {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    /// Path the HLO text was loaded from (diagnostics).
+    pub source: String,
+}
+
+impl HloExecutable {
+    /// Load HLO text from `path`, compile it on a fresh PJRT CPU client.
+    pub fn load(path: &Path) -> Result<Self> {
+        if !path.exists() {
+            return Err(Error::Artifact(format!(
+                "HLO artifact {} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(xerr)?;
+        Ok(HloExecutable { client, exe, source: path.display().to_string() })
+    }
+
+    /// Execute with host literals; returns the flattened output tuple.
+    /// (aot.py lowers with `return_tuple=True`, so the single output is a
+    /// tuple literal we decompose.)
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs).map_err(xerr)?;
+        let out = result[0][0].to_literal_sync().map_err(xerr)?;
+        out.to_tuple().map_err(xerr)
+    }
+
+    /// [`HloExecutable::run`] over borrowed literals (callers keep
+    /// ownership of inputs reused across steps).
+    pub fn run_ref(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<&xla::Literal>(inputs).map_err(xerr)?;
+        let out = result[0][0].to_literal_sync().map_err(xerr)?;
+        out.to_tuple().map_err(xerr)
+    }
+
+    /// Stage a literal onto the device (for inputs reused across calls —
+    /// the runtime-layer cache).
+    pub fn stage(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_literal(None, lit).map_err(xerr)
+    }
+
+    /// Execute with pre-staged device buffers; returns raw output buffers
+    /// (still device-resident, so parameters can round-trip without a host
+    /// copy).
+    pub fn run_buffers(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut result = self.exe.execute_b::<xla::PjRtBuffer>(inputs).map_err(xerr)?;
+        Ok(result.swap_remove(0))
+    }
+
+    /// [`HloExecutable::run_buffers`] over borrowed buffers (lets callers
+    /// keep ownership of staged inputs across steps).
+    pub fn run_buffers_ref(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut result = self.exe.execute_b::<&xla::PjRtBuffer>(inputs).map_err(xerr)?;
+        Ok(result.swap_remove(0))
+    }
+}
+
+/// Dense (row-major f32) → XLA literal of shape `[rows, cols]`.
+pub fn dense_to_literal(d: &Dense) -> Result<xla::Literal> {
+    xla::Literal::vec1(&d.data)
+        .reshape(&[d.rows as i64, d.cols as i64])
+        .map_err(xerr)
+}
+
+/// XLA literal (any 2-D f32) → Dense.
+pub fn literal_to_dense(lit: &xla::Literal) -> Result<Dense> {
+    let shape = lit.array_shape().map_err(xerr)?;
+    let dims = shape.dims();
+    let (rows, cols) = match dims.len() {
+        2 => (dims[0] as usize, dims[1] as usize),
+        1 => (1usize, dims[0] as usize),
+        0 => (1usize, 1usize),
+        n => return Err(Error::Runtime(format!("literal_to_dense: rank {n}"))),
+    };
+    let data = lit.to_vec::<f32>().map_err(xerr)?;
+    Dense::from_vec(rows, cols, data)
+}
+
+/// Build an i32 literal of shape `[n]`.
+pub fn i32_vec_literal(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Build an f32 literal of shape `[n]`.
+pub fn f32_vec_literal(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Build an f32 literal of shape `[rows, cols]` from a flat slice.
+pub fn f32_mat_literal(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64]).map_err(xerr)
+}
+
+/// Build an i32 literal of shape `[rows, cols]` from a flat slice.
+pub fn i32_mat_literal(v: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64]).map_err(xerr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_literal_roundtrip() {
+        let d = Dense::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let lit = dense_to_literal(&d).unwrap();
+        let back = literal_to_dense(&lit).unwrap();
+        assert!(back.allclose(&d, 0.0));
+    }
+
+    #[test]
+    fn vector_literal_shapes() {
+        let lit = f32_vec_literal(&[1.0, 2.0]);
+        let d = literal_to_dense(&lit).unwrap();
+        assert_eq!((d.rows, d.cols), (1, 2));
+        let lit = i32_vec_literal(&[3, 4, 5]);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let err = match HloExecutable::load(Path::new("/nonexistent/foo.hlo.txt")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected missing-artifact error"),
+        };
+        assert!(matches!(err, Error::Artifact(_)));
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,155 @@
+//! ELL (ELLPACK) packing — the fixed-shape sparse format the AOT path uses.
+//!
+//! XLA executables have static shapes, so the CSR's ragged rows must be
+//! padded: ELL stores `n × max_deg` column indices and values, rows padded
+//! with `(col=0, val=0.0)` entries that contribute nothing to a sum
+//! aggregation. This is also the TPU-friendly layout (DESIGN.md
+//! §Hardware-Adaptation): rectangular tiles map onto VPU lanes, where CSR's
+//! serial row stream does not.
+
+use crate::error::{Error, Result};
+use crate::sparse::Csr;
+
+/// Fixed-width sparse matrix: row `r`'s neighbours are
+/// `cols[r*width..(r+1)*width]` with padding entries `(0, 0.0)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EllMatrix {
+    /// Number of rows (== the CSR's rows).
+    pub rows: usize,
+    /// Number of columns of the underlying matrix.
+    pub cols: usize,
+    /// Row width (≥ max row degree).
+    pub width: usize,
+    /// Column indices, row-major `rows × width`, padded with 0.
+    pub col_idx: Vec<i32>,
+    /// Values, row-major `rows × width`, padded with 0.0.
+    pub values: Vec<f32>,
+}
+
+impl EllMatrix {
+    /// Pack a CSR into ELL with width `max(max_deg, min_width)`.
+    /// `min_width` lets callers match a pre-compiled artifact's shape.
+    pub fn from_csr(a: &Csr, min_width: usize) -> Result<EllMatrix> {
+        let max_deg = (0..a.rows).map(|r| a.row_nnz(r)).max().unwrap_or(0);
+        let width = max_deg.max(min_width).max(1);
+        let mut col_idx = vec![0i32; a.rows * width];
+        let mut values = vec![0.0f32; a.rows * width];
+        for r in 0..a.rows {
+            for (j, (&c, &v)) in a.row_cols(r).iter().zip(a.row_vals(r)).enumerate() {
+                col_idx[r * width + j] = i32::try_from(c)
+                    .map_err(|_| Error::InvalidSparse(format!("col {c} exceeds i32")))?;
+                values[r * width + j] = v;
+            }
+        }
+        Ok(EllMatrix { rows: a.rows, cols: a.cols, width, col_idx, values })
+    }
+
+    /// Check that this ELL fits an artifact compiled for `(rows, width)`.
+    pub fn fits(&self, rows: usize, width: usize) -> bool {
+        self.rows == rows && self.width <= width
+    }
+
+    /// Re-pad to a wider row width (to match an artifact's shape exactly).
+    pub fn widen(&self, width: usize) -> Result<EllMatrix> {
+        if width < self.width {
+            return Err(Error::ShapeMismatch(format!(
+                "cannot narrow ELL from width {} to {width}",
+                self.width
+            )));
+        }
+        let mut col_idx = vec![0i32; self.rows * width];
+        let mut values = vec![0.0f32; self.rows * width];
+        for r in 0..self.rows {
+            let src = r * self.width;
+            let dst = r * width;
+            col_idx[dst..dst + self.width].copy_from_slice(&self.col_idx[src..src + self.width]);
+            values[dst..dst + self.width].copy_from_slice(&self.values[src..src + self.width]);
+        }
+        Ok(EllMatrix { rows: self.rows, cols: self.cols, width, col_idx, values })
+    }
+
+    /// Reference SpMM over the ELL form (sum semiring) — used by tests to
+    /// cross-check the HLO executable against the native kernels.
+    pub fn spmm_ref(&self, x: &crate::dense::Dense) -> Result<crate::dense::Dense> {
+        if x.rows != self.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "ell spmm: A {}x{} @ X {}x{}",
+                self.rows, self.cols, x.rows, x.cols
+            )));
+        }
+        let mut y = crate::dense::Dense::zeros(self.rows, x.cols);
+        for r in 0..self.rows {
+            for j in 0..self.width {
+                let v = self.values[r * self.width + j];
+                if v == 0.0 {
+                    continue;
+                }
+                let c = self.col_idx[r * self.width + j] as usize;
+                let xrow = x.row(c);
+                let orow = y.row_mut(r);
+                for (o, &xv) in orow.iter_mut().zip(xrow.iter()) {
+                    *o += v * xv;
+                }
+            }
+        }
+        Ok(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::Dense;
+    use crate::kernels::{spmm_dense_ref, Semiring};
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn graph(n: usize, seed: u64) -> Csr {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            for _ in 0..rng.gen_range(6) {
+                coo.push(r, rng.gen_range(n), rng.gen_range_f32(0.1, 1.0));
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn pack_roundtrip_matches_csr_spmm() {
+        let a = graph(24, 71);
+        let ell = EllMatrix::from_csr(&a, 0).unwrap();
+        let mut rng = Rng::seed_from_u64(72);
+        let x = Dense::uniform(24, 7, 1.0, &mut rng);
+        let got = ell.spmm_ref(&x).unwrap();
+        let want = spmm_dense_ref(&a, &x, Semiring::Sum).unwrap();
+        assert!(got.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn min_width_and_widen() {
+        let a = graph(10, 73);
+        let ell = EllMatrix::from_csr(&a, 32).unwrap();
+        assert_eq!(ell.width, 32);
+        assert!(ell.fits(10, 32));
+        assert!(ell.fits(10, 64));
+        assert!(!ell.fits(11, 32));
+        let wide = ell.widen(64).unwrap();
+        assert_eq!(wide.width, 64);
+        assert!(ell.widen(8).is_err());
+        // widened result computes the same product
+        let mut rng = Rng::seed_from_u64(74);
+        let x = Dense::uniform(10, 3, 1.0, &mut rng);
+        assert!(wide.spmm_ref(&x).unwrap().allclose(&ell.spmm_ref(&x).unwrap(), 0.0));
+    }
+
+    #[test]
+    fn empty_graph() {
+        let a = Csr::empty(4, 4);
+        let ell = EllMatrix::from_csr(&a, 0).unwrap();
+        assert_eq!(ell.width, 1); // floor of 1
+        let x = Dense::zeros(4, 2);
+        let y = ell.spmm_ref(&x).unwrap();
+        assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,191 @@
+//! The AOT GNN trainer (PT2-Compile analogue): one XLA executable per
+//! (model, shape) computes loss + SGD update in a single call.
+//!
+//! Per-step host↔device traffic is minimised the same way the paper's
+//! cache minimises recomputation: static inputs (features, ELL adjacency,
+//! labels, mask) are staged to device buffers **once**; parameters live in
+//! device buffers that round-trip from output to input without touching
+//! the host; only the scalar loss is copied back each epoch.
+
+use std::path::Path;
+
+use crate::data::Dataset;
+use crate::dense::Dense;
+use crate::error::{Error, Result};
+use crate::gnn::{GnnModel, ModelParams, ParamSet};
+use crate::sparse::NormKind;
+
+use super::client::{dense_to_literal, f32_vec_literal, i32_mat_literal, literal_to_dense};
+use super::{ArtifactManifest, EllMatrix, HloExecutable, ManifestEntry};
+
+/// A compiled whole-step GNN trainer.
+///
+/// Inputs are passed as host literals: the `xla` crate's tuple-output
+/// buffer path (`execute_b` + `to_literal_sync` on a tuple buffer)
+/// segfaults in xla_extension 0.5.1, so parameters round-trip as literals
+/// instead of staying device-resident. On the CPU PJRT client both live in
+/// host memory, so the cost is one memcpy per parameter per step. The
+/// *static* inputs (features, ELL adjacency + its §3.3-cached transpose,
+/// labels, mask) are still built exactly once.
+pub struct HloGnnTrainer {
+    exe: HloExecutable,
+    entry: ManifestEntry,
+    /// Current parameters, in `entry.param_names` order.
+    param_lits: Vec<xla::Literal>,
+    /// Static inputs (built once).
+    static_lits: Vec<xla::Literal>,
+    /// Number of parameters (outputs [0..n_params) are the updated params).
+    n_params: usize,
+}
+
+impl HloGnnTrainer {
+    /// Load the artifact matching `(model, dataset)` from `artifacts_dir`,
+    /// normalise + pack the adjacency, stage everything.
+    pub fn load(
+        artifacts_dir: &Path,
+        model: GnnModel,
+        dataset: &Dataset,
+        hidden: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let manifest = ArtifactManifest::load(artifacts_dir)?;
+        let entry = manifest
+            .find_train_step(model.name(), dataset.num_nodes(), dataset.feature_dim(), dataset.num_classes)
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "no train_step artifact for model={} n={} f={} c={} — \
+                     add it to python/compile/aot.py and re-run `make artifacts`",
+                    model.name(),
+                    dataset.num_nodes(),
+                    dataset.feature_dim(),
+                    dataset.num_classes
+                ))
+            })?
+            .clone();
+        if entry.hidden != hidden {
+            return Err(Error::Artifact(format!(
+                "artifact '{}' compiled for hidden={}, requested {hidden}",
+                entry.name, entry.hidden
+            )));
+        }
+        let exe = HloExecutable::load(&entry.hlo_path(artifacts_dir))?;
+
+        // Normalise exactly as the native path does, then pack to the
+        // compiled ELL width.
+        let a = model.norm_kind().apply(&dataset.adj)?;
+        debug_assert!(matches!(
+            model.norm_kind(),
+            NormKind::GcnSym | NormKind::RowMean | NormKind::None
+        ));
+        let ell = EllMatrix::from_csr(&a, entry.ell_width)?;
+        if ell.width > entry.ell_width {
+            return Err(Error::Artifact(format!(
+                "graph max degree needs ELL width {} but artifact '{}' was compiled for {}",
+                ell.width, entry.name, entry.ell_width
+            )));
+        }
+        let ell = ell.widen(entry.ell_width)?;
+        // §3.3: the transpose is computed once here and shipped as a static
+        // input — the compiled backward consumes it instead of re-deriving.
+        let at = a.transpose();
+        let ell_t = EllMatrix::from_csr(&at, entry.ell_width)?;
+        if ell_t.width > entry.ell_width {
+            return Err(Error::Artifact(format!(
+                "transpose max degree needs ELL width {} but artifact '{}' has {}",
+                ell_t.width, entry.name, entry.ell_width
+            )));
+        }
+        let ell_t = ell_t.widen(entry.ell_width)?;
+
+        // Initialise parameters with the same init as the native trainer
+        // (seeded, so HLO-vs-native parity tests can compare trajectories).
+        let dims = ModelParams { in_dim: dataset.feature_dim(), hidden, classes: dataset.num_classes };
+        let params = model.init_params(dims, seed);
+        Self::from_parts(exe, entry, dataset, &ell, &ell_t, &params)
+    }
+
+    /// Assemble from explicit parts (used by tests with hand-built params).
+    pub fn from_parts(
+        exe: HloExecutable,
+        entry: ManifestEntry,
+        dataset: &Dataset,
+        ell: &EllMatrix,
+        ell_t: &EllMatrix,
+        params: &ParamSet,
+    ) -> Result<Self> {
+        // parameter literals
+        let mut param_lits = Vec::with_capacity(entry.param_names.len());
+        for (name, shape) in entry.param_names.iter().zip(entry.param_shapes.iter()) {
+            let p = params.get(name)?;
+            if [p.rows, p.cols] != *shape {
+                return Err(Error::ShapeMismatch(format!(
+                    "param '{name}': artifact wants {:?}, got {}x{}",
+                    shape, p.rows, p.cols
+                )));
+            }
+            param_lits.push(dense_to_literal(p)?);
+        }
+        // static inputs: features, ell, ell-transpose (§3.3 cache), labels,
+        // mask — built ONCE; every epoch reuses them
+        let n = dataset.num_nodes();
+        let features = dense_to_literal(&dataset.features)?;
+        let cols = i32_mat_literal(&ell.col_idx, n, entry.ell_width)?;
+        let vals = super::client::f32_mat_literal(&ell.values, n, entry.ell_width)?;
+        let cols_t = i32_mat_literal(&ell_t.col_idx, n, entry.ell_width)?;
+        let vals_t = super::client::f32_mat_literal(&ell_t.values, n, entry.ell_width)?;
+        let labels: Vec<i32> = dataset.labels.iter().map(|&l| l as i32).collect();
+        let labels = super::client::i32_vec_literal(&labels);
+        let mask: Vec<f32> =
+            dataset.train_mask.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect();
+        let mask = f32_vec_literal(&mask);
+
+        let static_lits = vec![features, cols, vals, cols_t, vals_t, labels, mask];
+        let n_params = param_lits.len();
+        Ok(HloGnnTrainer { exe, entry, param_lits, static_lits, n_params })
+    }
+
+    /// Run one training step; returns the loss.
+    pub fn step(&mut self) -> Result<f32> {
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.n_params + 7);
+        inputs.extend(self.param_lits.iter());
+        inputs.extend(self.static_lits.iter());
+        let mut lits = self.exe.run_ref(&inputs)?;
+        if lits.len() != self.n_params + 1 {
+            return Err(Error::Runtime(format!(
+                "train step tuple has {} elements, expected {}",
+                lits.len(),
+                self.n_params + 1
+            )));
+        }
+        let loss_lit = lits.pop().unwrap();
+        self.param_lits = lits;
+        loss_lit
+            .get_first_element::<f32>()
+            .map_err(|e| Error::Runtime(e.to_string()))
+    }
+
+    /// Copy the current parameters back to the host.
+    pub fn params_to_host(&self) -> Result<ParamSet> {
+        let mut out = ParamSet::new();
+        for (name, lit) in self.entry.param_names.iter().zip(self.param_lits.iter()) {
+            let mut d = literal_to_dense(lit)?;
+            // 1-D bias literals come back as 1×C
+            let shape = self
+                .entry
+                .param_shapes
+                .get(out.len())
+                .copied()
+                .unwrap_or([d.rows, d.cols]);
+            if d.rows * d.cols == shape[0] * shape[1] {
+                d = Dense::from_vec(shape[0], shape[1], d.data)?;
+            }
+            out.insert(name, d);
+        }
+        Ok(out)
+    }
+
+    /// The manifest entry backing this trainer.
+    pub fn entry(&self) -> &ManifestEntry {
+        &self.entry
+    }
+}

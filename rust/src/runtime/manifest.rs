@@ -1,0 +1,270 @@
+//! The artifact manifest — the contract between `python/compile/aot.py`
+//! (which writes it) and the Rust runtime (which reads it).
+//!
+//! `artifacts/manifest.json` lists every compiled executable with its exact
+//! static shapes, so the runtime can (a) pick the right artifact for a
+//! dataset/model pair and (b) pad the sparse operand to the compiled ELL
+//! width.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One compiled executable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    /// Unique name, also the HLO file stem (`<name>.hlo.txt`).
+    pub name: String,
+    /// Kind: "train_step" or "spmm".
+    pub kind: String,
+    /// Model ("gcn", "sage-sum", "sage-mean", "gin"); empty for `spmm`.
+    pub model: String,
+    /// Node count the artifact was compiled for.
+    pub n: usize,
+    /// ELL row width.
+    pub ell_width: usize,
+    /// Input feature dim (train_step) or SpMM K (spmm).
+    pub feature_dim: usize,
+    /// Hidden width (train_step only).
+    pub hidden: usize,
+    /// Class count (train_step only).
+    pub classes: usize,
+    /// Learning rate baked into the compiled SGD update.
+    pub lr: f32,
+    /// Parameter names, in argument order.
+    pub param_names: Vec<String>,
+    /// Parameter shapes `[rows, cols]`, same order.
+    pub param_shapes: Vec<[usize; 2]>,
+}
+
+impl ManifestEntry {
+    /// HLO file path under `dir`.
+    pub fn hlo_path(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("{}.hlo.txt", self.name))
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let opt_usize = |key: &str| -> Result<usize> {
+            match j.get_opt(key) {
+                Some(v) => v.as_usize(),
+                None => Ok(0),
+            }
+        };
+        let mut param_names = Vec::new();
+        if let Some(arr) = j.get_opt("param_names") {
+            for v in arr.as_arr()? {
+                param_names.push(v.as_str()?.to_string());
+            }
+        }
+        let mut param_shapes = Vec::new();
+        if let Some(arr) = j.get_opt("param_shapes") {
+            for v in arr.as_arr()? {
+                let dims = v.as_arr()?;
+                if dims.len() != 2 {
+                    return Err(Error::Json(format!("param shape must be [r,c]: {v:?}")));
+                }
+                param_shapes.push([dims[0].as_usize()?, dims[1].as_usize()?]);
+            }
+        }
+        Ok(ManifestEntry {
+            name: j.get("name")?.as_str()?.to_string(),
+            kind: j.get("kind")?.as_str()?.to_string(),
+            model: j
+                .get_opt("model")
+                .map(|m| m.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_default(),
+            n: j.get("n")?.as_usize()?,
+            ell_width: j.get("ell_width")?.as_usize()?,
+            feature_dim: j.get("feature_dim")?.as_usize()?,
+            hidden: opt_usize("hidden")?,
+            classes: opt_usize("classes")?,
+            lr: j.get_opt("lr").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0) as f32,
+            param_names,
+            param_shapes,
+        })
+    }
+
+    /// JSON form (used by tests to write synthetic manifests).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("kind", Json::str(&self.kind)),
+            ("model", Json::str(&self.model)),
+            ("n", Json::num(self.n as f64)),
+            ("ell_width", Json::num(self.ell_width as f64)),
+            ("feature_dim", Json::num(self.feature_dim as f64)),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("classes", Json::num(self.classes as f64)),
+            ("lr", Json::num(self.lr as f64)),
+            (
+                "param_names",
+                Json::Arr(self.param_names.iter().map(|s| Json::str(s)).collect()),
+            ),
+            (
+                "param_shapes",
+                Json::Arr(
+                    self.param_shapes
+                        .iter()
+                        .map(|s| {
+                            Json::Arr(vec![Json::num(s[0] as f64), Json::num(s[1] as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    /// JAX version used at build time (provenance).
+    pub jax_version: String,
+    /// Entries.
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load `manifest.json` from the artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        if !path.exists() {
+            return Err(Error::Artifact(format!(
+                "{} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let text = std::fs::read_to_string(&path)?;
+        let json = Json::parse(&text)?;
+        let jax_version = json
+            .get_opt("jax_version")
+            .map(|v| v.as_str().map(str::to_string))
+            .transpose()?
+            .unwrap_or_default();
+        let mut entries = Vec::new();
+        for e in json.get("entries")?.as_arr()? {
+            entries.push(ManifestEntry::from_json(e)?);
+        }
+        Ok(ArtifactManifest { jax_version, entries })
+    }
+
+    /// Serialise (tests / tooling).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("jax_version", Json::str(&self.jax_version)),
+            ("entries", Json::Arr(self.entries.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+
+    /// Find a train-step entry for `(model, n, feature_dim, classes)`.
+    pub fn find_train_step(
+        &self,
+        model: &str,
+        n: usize,
+        feature_dim: usize,
+        classes: usize,
+    ) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| {
+            e.kind == "train_step"
+                && e.model == model
+                && e.n == n
+                && e.feature_dim == feature_dim
+                && e.classes == classes
+        })
+    }
+
+    /// Find a standalone SpMM entry for `(n, k)`.
+    pub fn find_spmm(&self, n: usize, k: usize) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.kind == "spmm" && e.n == n && e.feature_dim == k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn sample() -> ArtifactManifest {
+        ArtifactManifest {
+            jax_version: "0.8.2".into(),
+            entries: vec![
+                ManifestEntry {
+                    name: "gcn_karate".into(),
+                    kind: "train_step".into(),
+                    model: "gcn".into(),
+                    n: 34,
+                    ell_width: 32,
+                    feature_dim: 34,
+                    hidden: 8,
+                    classes: 2,
+                    lr: 0.1,
+                    param_names: vec!["w0".into(), "b0".into(), "w1".into(), "b1".into()],
+                    param_shapes: vec![[34, 8], [1, 8], [8, 2], [1, 2]],
+                },
+                ManifestEntry {
+                    name: "spmm_256_32".into(),
+                    kind: "spmm".into(),
+                    model: String::new(),
+                    n: 256,
+                    ell_width: 64,
+                    feature_dim: 32,
+                    hidden: 0,
+                    classes: 0,
+                    lr: 0.0,
+                    param_names: vec![],
+                    param_shapes: vec![],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        let m = sample();
+        assert!(m.find_train_step("gcn", 34, 34, 2).is_some());
+        assert!(m.find_train_step("gcn", 35, 34, 2).is_none());
+        assert!(m.find_spmm(256, 32).is_some());
+        assert!(m.find_spmm(256, 33).is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_and_paths() {
+        let m = sample();
+        let dir = TempDir::new().unwrap();
+        std::fs::write(dir.path().join("manifest.json"), m.to_json().pretty()).unwrap();
+        let back = ArtifactManifest::load(dir.path()).unwrap();
+        assert_eq!(back.jax_version, "0.8.2");
+        assert_eq!(back.entries, m.entries);
+        let e = &back.entries[0];
+        assert_eq!(
+            e.hlo_path(Path::new("/tmp/artifacts")),
+            PathBuf::from("/tmp/artifacts/gcn_karate.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn load_missing_dir() {
+        let err = ArtifactManifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn python_style_manifest_parses() {
+        // exactly what aot.py emits (ints, no nulls)
+        let text = r#"{
+          "jax_version": "0.8.2",
+          "entries": [
+            {"name": "spmm_64_16", "kind": "spmm", "model": "", "n": 64,
+             "ell_width": 16, "feature_dim": 16, "hidden": 0, "classes": 0,
+             "lr": 0.0, "param_names": [], "param_shapes": []}
+          ]
+        }"#;
+        let dir = TempDir::new().unwrap();
+        std::fs::write(dir.path().join("manifest.json"), text).unwrap();
+        let m = ArtifactManifest::load(dir.path()).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(m.entries[0].ell_width, 16);
+    }
+}

@@ -1,0 +1,32 @@
+//! XLA/PJRT runtime — loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python is **never** on this path: `make artifacts` lowers the JAX/Pallas
+//! models to HLO *text* once (text, not serialized proto — jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids). This module loads that text with
+//! [`xla::HloModuleProto::from_text_file`], compiles it on the PJRT CPU
+//! client, and runs it with device-resident parameter buffers.
+//!
+//! Contents:
+//! * [`client`] — thin wrappers over the `xla` crate (compile, execute,
+//!   Dense↔Literal conversion, ELL packing).
+//! * [`manifest`] — the JSON manifest `aot.py` writes next to the HLO
+//!   files: one entry per compiled executable with its exact shapes.
+//! * [`gnn_step`] — [`HloGnnTrainer`]: a whole GNN training step compiled
+//!   to one executable (the PT2-Compile analogue), with parameters kept
+//!   device-side between steps and static inputs staged exactly once (the
+//!   runtime-layer analogue of the paper's §3.3 caching).
+
+mod client;
+mod ell;
+mod gnn_step;
+mod manifest;
+
+pub use client::{
+    dense_to_literal, f32_mat_literal, f32_vec_literal, i32_mat_literal, i32_vec_literal,
+    literal_to_dense, HloExecutable,
+};
+pub use ell::EllMatrix;
+pub use gnn_step::HloGnnTrainer;
+pub use manifest::{ArtifactManifest, ManifestEntry};

@@ -1,0 +1,225 @@
+//! COO (coordinate / triplet) sparse format — the construction format.
+//!
+//! Graph generators emit edges one at a time; COO accumulates them and is
+//! then converted once to CSR for the kernels. Duplicate handling is
+//! explicit: [`Coo::sum_duplicates`] mirrors what `torch_sparse.coalesce`
+//! does for multigraph edge lists.
+
+use crate::error::{Error, Result};
+
+use super::Csr;
+
+/// Coordinate-format sparse matrix: parallel `(row, col, val)` triplets.
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Row index per entry.
+    pub row_idx: Vec<usize>,
+    /// Column index per entry.
+    pub col_idx: Vec<usize>,
+    /// Value per entry.
+    pub values: Vec<f32>,
+}
+
+impl Coo {
+    /// Empty matrix of the given shape.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Coo { rows, cols, row_idx: Vec::new(), col_idx: Vec::new(), values: Vec::new() }
+    }
+
+    /// Empty matrix with pre-allocated capacity for `nnz` entries.
+    pub fn with_capacity(rows: usize, cols: usize, nnz: usize) -> Self {
+        Coo {
+            rows,
+            cols,
+            row_idx: Vec::with_capacity(nnz),
+            col_idx: Vec::with_capacity(nnz),
+            values: Vec::with_capacity(nnz),
+        }
+    }
+
+    /// Build from parallel triplet vectors (validated).
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        row_idx: Vec<usize>,
+        col_idx: Vec<usize>,
+        values: Vec<f32>,
+    ) -> Result<Self> {
+        if row_idx.len() != col_idx.len() || row_idx.len() != values.len() {
+            return Err(Error::InvalidSparse(format!(
+                "triplet arrays disagree: {} rows, {} cols, {} vals",
+                row_idx.len(),
+                col_idx.len(),
+                values.len()
+            )));
+        }
+        if let Some(&r) = row_idx.iter().max() {
+            if r >= rows {
+                return Err(Error::InvalidSparse(format!("row index {r} >= rows {rows}")));
+            }
+        }
+        if let Some(&c) = col_idx.iter().max() {
+            if c >= cols {
+                return Err(Error::InvalidSparse(format!("col index {c} >= cols {cols}")));
+            }
+        }
+        Ok(Coo { rows, cols, row_idx, col_idx, values })
+    }
+
+    /// Number of stored entries (including any duplicates).
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Append one entry (debug-checked bounds).
+    #[inline]
+    pub fn push(&mut self, row: usize, col: usize, val: f32) {
+        debug_assert!(row < self.rows && col < self.cols);
+        self.row_idx.push(row);
+        self.col_idx.push(col);
+        self.values.push(val);
+    }
+
+    /// Append the symmetric pair `(r,c)` and `(c,r)` — undirected edges.
+    pub fn push_sym(&mut self, r: usize, c: usize, val: f32) {
+        self.push(r, c, val);
+        if r != c {
+            self.push(c, r, val);
+        }
+    }
+
+    /// Sort triplets by `(row, col)` and merge duplicates by summing values.
+    /// Equivalent to `torch_sparse.coalesce`.
+    pub fn sum_duplicates(&mut self) {
+        if self.nnz() == 0 {
+            return;
+        }
+        let mut order: Vec<usize> = (0..self.nnz()).collect();
+        order.sort_unstable_by_key(|&i| (self.row_idx[i], self.col_idx[i]));
+
+        let mut row_out = Vec::with_capacity(self.nnz());
+        let mut col_out = Vec::with_capacity(self.nnz());
+        let mut val_out = Vec::with_capacity(self.nnz());
+        for &i in &order {
+            let (r, c, v) = (self.row_idx[i], self.col_idx[i], self.values[i]);
+            if let (Some(&lr), Some(&lc)) = (row_out.last(), col_out.last()) {
+                if lr == r && lc == c {
+                    *val_out.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            row_out.push(r);
+            col_out.push(c);
+            val_out.push(v);
+        }
+        self.row_idx = row_out;
+        self.col_idx = col_out;
+        self.values = val_out;
+    }
+
+    /// Convert to CSR. Duplicates are merged (summed) first.
+    pub fn to_csr(&self) -> Csr {
+        let mut coo = self.clone();
+        coo.sum_duplicates();
+        let mut row_ptr = vec![0usize; coo.rows + 1];
+        for &r in &coo.row_idx {
+            row_ptr[r + 1] += 1;
+        }
+        for i in 0..coo.rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        // After sum_duplicates the triplets are already (row, col)-sorted,
+        // so col_idx/values can be taken as-is.
+        Csr::from_parts_unchecked(coo.rows, coo.cols, row_ptr, coo.col_idx, coo.values)
+    }
+
+    /// Transpose (swap row/col index vectors — O(1) semantics, O(nnz) clone).
+    pub fn transpose(&self) -> Coo {
+        Coo {
+            rows: self.cols,
+            cols: self.rows,
+            row_idx: self.col_idx.clone(),
+            col_idx: self.row_idx.clone(),
+            values: self.values.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_nnz() {
+        let mut c = Coo::new(3, 3);
+        c.push(0, 1, 1.0);
+        c.push(2, 0, 2.0);
+        assert_eq!(c.nnz(), 2);
+    }
+
+    #[test]
+    fn push_sym_skips_self_loop_double() {
+        let mut c = Coo::new(3, 3);
+        c.push_sym(1, 1, 5.0);
+        assert_eq!(c.nnz(), 1);
+        c.push_sym(0, 2, 1.0);
+        assert_eq!(c.nnz(), 3);
+    }
+
+    #[test]
+    fn from_triplets_validates() {
+        assert!(Coo::from_triplets(2, 2, vec![0], vec![0, 1], vec![1.0]).is_err());
+        assert!(Coo::from_triplets(2, 2, vec![2], vec![0], vec![1.0]).is_err());
+        assert!(Coo::from_triplets(2, 2, vec![0], vec![5], vec![1.0]).is_err());
+        assert!(Coo::from_triplets(2, 2, vec![1], vec![1], vec![1.0]).is_ok());
+    }
+
+    #[test]
+    fn sum_duplicates_merges_and_sorts() {
+        let mut c =
+            Coo::from_triplets(2, 3, vec![1, 0, 1], vec![2, 1, 2], vec![1.0, 3.0, 4.0]).unwrap();
+        c.sum_duplicates();
+        assert_eq!(c.row_idx, vec![0, 1]);
+        assert_eq!(c.col_idx, vec![1, 2]);
+        assert_eq!(c.values, vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn to_csr_small() {
+        let c = Coo::from_triplets(
+            3,
+            3,
+            vec![0, 0, 2, 1],
+            vec![1, 2, 0, 1],
+            vec![1.0, 2.0, 3.0, 4.0],
+        )
+        .unwrap();
+        let csr = c.to_csr();
+        assert_eq!(csr.row_ptr, vec![0, 2, 3, 4]);
+        assert_eq!(csr.col_idx, vec![1, 2, 1, 0]);
+        assert_eq!(csr.values, vec![1.0, 2.0, 4.0, 3.0]);
+        csr.validate().unwrap();
+    }
+
+    #[test]
+    fn transpose_swaps() {
+        let c = Coo::from_triplets(2, 3, vec![0, 1], vec![2, 0], vec![1.0, 2.0]).unwrap();
+        let t = c.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.cols, 2);
+        assert_eq!(t.row_idx, vec![2, 0]);
+        assert_eq!(t.col_idx, vec![0, 1]);
+    }
+
+    #[test]
+    fn empty_to_csr() {
+        let c = Coo::new(4, 4);
+        let csr = c.to_csr();
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.row_ptr, vec![0; 5]);
+    }
+}

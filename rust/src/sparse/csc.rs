@@ -1,0 +1,141 @@
+//! CSC (compressed sparse column).
+//!
+//! Used by the column-major SpMM-transpose path: `A^T @ G` with `A` in CSR
+//! is exactly `spmm` over the CSC view of `A`. The backprop cache prefers a
+//! materialised transposed CSR (better locality for the row-streaming
+//! kernels), but CSC is kept as a first-class citizen for format-conversion
+//! completeness and the format-selection experiments.
+
+use crate::error::{Error, Result};
+
+use super::Csr;
+
+/// Compressed-sparse-column matrix with `f32` values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csc {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Column offsets, length `cols + 1`.
+    pub col_ptr: Vec<usize>,
+    /// Row index per non-zero.
+    pub row_idx: Vec<usize>,
+    /// Value per non-zero.
+    pub values: Vec<f32>,
+}
+
+impl Csc {
+    /// Build from raw parts, validating the invariants (mirror of CSR's).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        col_ptr: Vec<usize>,
+        row_idx: Vec<usize>,
+        values: Vec<f32>,
+    ) -> Result<Self> {
+        let m = Csc { rows, cols, col_ptr, row_idx, values };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Number of non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Row indices of column `c`.
+    #[inline]
+    pub fn col_rows(&self, c: usize) -> &[usize] {
+        &self.row_idx[self.col_ptr[c]..self.col_ptr[c + 1]]
+    }
+
+    /// Values of column `c`.
+    #[inline]
+    pub fn col_vals(&self, c: usize) -> &[f32] {
+        &self.values[self.col_ptr[c]..self.col_ptr[c + 1]]
+    }
+
+    /// Validate structural invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.col_ptr.len() != self.cols + 1 {
+            return Err(Error::InvalidSparse(format!(
+                "col_ptr len {} != cols+1 {}",
+                self.col_ptr.len(),
+                self.cols + 1
+            )));
+        }
+        if self.col_ptr[0] != 0 || *self.col_ptr.last().unwrap() != self.nnz() {
+            return Err(Error::InvalidSparse("col_ptr endpoints wrong".into()));
+        }
+        for w in self.col_ptr.windows(2) {
+            if w[1] < w[0] {
+                return Err(Error::InvalidSparse("col_ptr not monotone".into()));
+            }
+        }
+        for c in 0..self.cols {
+            let rows = self.col_rows(c);
+            for w in rows.windows(2) {
+                if w[1] <= w[0] {
+                    return Err(Error::InvalidSparse(format!(
+                        "col {c}: rows not strictly increasing"
+                    )));
+                }
+            }
+            if let Some(&r) = rows.last() {
+                if r >= self.rows {
+                    return Err(Error::InvalidSparse(format!(
+                        "col {c}: row {r} >= rows {}",
+                        self.rows
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Convert to CSR. The CSC of `A` is structurally the CSR of `A^T`, so
+    /// conversion is a transpose of the reinterpreted matrix.
+    pub fn to_csr(&self) -> Csr {
+        // Reinterpret (col_ptr,row_idx) as a CSR of A^T, then transpose.
+        let at = Csr::from_parts_unchecked(
+            self.cols,
+            self.rows,
+            self.col_ptr.clone(),
+            self.row_idx.clone(),
+            self.values.clone(),
+        );
+        at.transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_csc_roundtrip() {
+        let m = Csr::from_parts(3, 4, vec![0, 2, 3, 5], vec![0, 3, 2, 1, 3], vec![
+            1.0, 2.0, 3.0, 4.0, 5.0,
+        ])
+        .unwrap();
+        let csc = m.to_csc();
+        csc.validate().unwrap();
+        assert_eq!(csc.to_csr(), m);
+    }
+
+    #[test]
+    fn col_accessors() {
+        let m = Csr::from_parts(2, 2, vec![0, 2, 3], vec![0, 1, 0], vec![1.0, 2.0, 3.0]).unwrap();
+        let csc = m.to_csc();
+        assert_eq!(csc.col_rows(0), &[0, 1]);
+        assert_eq!(csc.col_vals(0), &[1.0, 3.0]);
+        assert_eq!(csc.col_rows(1), &[0]);
+    }
+
+    #[test]
+    fn validate_rejects_garbage() {
+        assert!(Csc::from_parts(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err());
+        assert!(Csc::from_parts(2, 2, vec![0, 1, 1], vec![9], vec![1.0]).is_err());
+    }
+}

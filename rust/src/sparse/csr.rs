@@ -1,0 +1,375 @@
+//! CSR (compressed sparse row) — the kernel input format (paper §3.5).
+//!
+//! All SpMM/SDDMM/FusedMM kernels consume this type. Invariants (checked by
+//! [`Csr::validate`], relied on by the `unsafe`-free but bounds-hot kernels):
+//!
+//! 1. `row_ptr.len() == rows + 1`, `row_ptr[0] == 0`, monotone non-decreasing,
+//!    `row_ptr[rows] == nnz`.
+//! 2. `col_idx[i] < cols` for all `i`.
+//! 3. Column indices are sorted strictly increasing within each row (no
+//!    duplicates) — the construction path via [`super::Coo::to_csr`]
+//!    guarantees this.
+
+use crate::dense::Dense;
+use crate::error::{Error, Result};
+
+use super::{Coo, Csc};
+
+/// Compressed-sparse-row matrix with `f32` values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Row offsets, length `rows + 1`.
+    pub row_ptr: Vec<usize>,
+    /// Column index per non-zero.
+    pub col_idx: Vec<usize>,
+    /// Value per non-zero.
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from raw parts, validating every invariant.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<usize>,
+        values: Vec<f32>,
+    ) -> Result<Self> {
+        let m = Csr { rows, cols, row_ptr, col_idx, values };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Build from raw parts without validation — for internal construction
+    /// paths that guarantee the invariants (e.g. [`Coo::to_csr`]).
+    pub(crate) fn from_parts_unchecked(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<usize>,
+        values: Vec<f32>,
+    ) -> Self {
+        Csr { rows, cols, row_ptr, col_idx, values }
+    }
+
+    /// An identity-free empty matrix.
+    pub fn empty(rows: usize, cols: usize) -> Self {
+        Csr { rows, cols, row_ptr: vec![0; rows + 1], col_idx: Vec::new(), values: Vec::new() }
+    }
+
+    /// Identity matrix (used for self-loop insertion tests).
+    pub fn identity(n: usize) -> Self {
+        Csr {
+            rows: n,
+            cols: n,
+            row_ptr: (0..=n).collect(),
+            col_idx: (0..n).collect(),
+            values: vec![1.0; n],
+        }
+    }
+
+    /// Number of non-zeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Column indices of row `r`.
+    #[inline]
+    pub fn row_cols(&self, r: usize) -> &[usize] {
+        &self.col_idx[self.row_ptr[r]..self.row_ptr[r + 1]]
+    }
+
+    /// Values of row `r`.
+    #[inline]
+    pub fn row_vals(&self, r: usize) -> &[f32] {
+        &self.values[self.row_ptr[r]..self.row_ptr[r + 1]]
+    }
+
+    /// Out-degree (nnz) of row `r`.
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.row_ptr[r + 1] - self.row_ptr[r]
+    }
+
+    /// Check all structural invariants (see module docs).
+    pub fn validate(&self) -> Result<()> {
+        if self.row_ptr.len() != self.rows + 1 {
+            return Err(Error::InvalidSparse(format!(
+                "row_ptr len {} != rows+1 {}",
+                self.row_ptr.len(),
+                self.rows + 1
+            )));
+        }
+        if self.row_ptr[0] != 0 {
+            return Err(Error::InvalidSparse("row_ptr[0] != 0".into()));
+        }
+        if *self.row_ptr.last().unwrap() != self.nnz() {
+            return Err(Error::InvalidSparse(format!(
+                "row_ptr[rows] {} != nnz {}",
+                self.row_ptr.last().unwrap(),
+                self.nnz()
+            )));
+        }
+        if self.col_idx.len() != self.values.len() {
+            return Err(Error::InvalidSparse("col_idx/values length mismatch".into()));
+        }
+        for w in self.row_ptr.windows(2) {
+            if w[1] < w[0] {
+                return Err(Error::InvalidSparse("row_ptr not monotone".into()));
+            }
+        }
+        for r in 0..self.rows {
+            let cols = self.row_cols(r);
+            for w in cols.windows(2) {
+                if w[1] <= w[0] {
+                    return Err(Error::InvalidSparse(format!(
+                        "row {r}: columns not strictly increasing"
+                    )));
+                }
+            }
+            if let Some(&c) = cols.last() {
+                if c >= self.cols {
+                    return Err(Error::InvalidSparse(format!(
+                        "row {r}: col {c} >= cols {}",
+                        self.cols
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Transpose via a counting pass — O(nnz + rows + cols). The result is a
+    /// valid CSR of shape `(cols, rows)`; this is exactly the matrix the
+    /// backprop cache stores (paper §3.3).
+    pub fn transpose(&self) -> Csr {
+        let mut out_ptr = vec![0usize; self.cols + 1];
+        for &c in &self.col_idx {
+            out_ptr[c + 1] += 1;
+        }
+        for i in 0..self.cols {
+            out_ptr[i + 1] += out_ptr[i];
+        }
+        let mut cursor = out_ptr.clone();
+        let mut out_col = vec![0usize; self.nnz()];
+        let mut out_val = vec![0.0f32; self.nnz()];
+        for r in 0..self.rows {
+            let (s, e) = (self.row_ptr[r], self.row_ptr[r + 1]);
+            for i in s..e {
+                let c = self.col_idx[i];
+                let dst = cursor[c];
+                out_col[dst] = r;
+                out_val[dst] = self.values[i];
+                cursor[c] += 1;
+            }
+        }
+        Csr {
+            rows: self.cols,
+            cols: self.rows,
+            row_ptr: out_ptr,
+            col_idx: out_col,
+            values: out_val,
+        }
+    }
+
+    /// Convert to COO triplets.
+    pub fn to_coo(&self) -> Coo {
+        let mut row_idx = Vec::with_capacity(self.nnz());
+        for r in 0..self.rows {
+            row_idx.extend(std::iter::repeat(r).take(self.row_nnz(r)));
+        }
+        Coo {
+            rows: self.rows,
+            cols: self.cols,
+            row_idx,
+            col_idx: self.col_idx.clone(),
+            values: self.values.clone(),
+        }
+    }
+
+    /// Convert to CSC (column-compressed); shares the transpose kernel.
+    pub fn to_csc(&self) -> Csc {
+        let t = self.transpose();
+        Csc {
+            rows: self.rows,
+            cols: self.cols,
+            col_ptr: t.row_ptr,
+            row_idx: t.col_idx,
+            values: t.values,
+        }
+    }
+
+    /// Materialise as dense — reference/test helper only.
+    pub fn to_dense(&self) -> Dense {
+        let mut d = Dense::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for (&c, &v) in self.row_cols(r).iter().zip(self.row_vals(r)) {
+                d.set(r, c, v);
+            }
+        }
+        d
+    }
+
+    /// Add self-loops: `A + I` (GCN preprocessing). Rows keep sorted order.
+    pub fn add_self_loops(&self) -> Result<Csr> {
+        if self.rows != self.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "add_self_loops on non-square {}x{}",
+                self.rows, self.cols
+            )));
+        }
+        let mut coo = self.to_coo();
+        for i in 0..self.rows {
+            coo.push(i, i, 1.0);
+        }
+        Ok(coo.to_csr())
+    }
+
+    /// Scale row `r` values by `s[r]` (left diagonal scaling `D·A`).
+    pub fn scale_rows(&self, s: &[f32]) -> Result<Csr> {
+        if s.len() != self.rows {
+            return Err(Error::ShapeMismatch(format!(
+                "scale_rows: {} factors for {} rows",
+                s.len(),
+                self.rows
+            )));
+        }
+        let mut out = self.clone();
+        for r in 0..out.rows {
+            let (st, e) = (out.row_ptr[r], out.row_ptr[r + 1]);
+            for v in &mut out.values[st..e] {
+                *v *= s[r];
+            }
+        }
+        Ok(out)
+    }
+
+    /// Scale column `c` values by `s[c]` (right diagonal scaling `A·D`).
+    pub fn scale_cols(&self, s: &[f32]) -> Result<Csr> {
+        if s.len() != self.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "scale_cols: {} factors for {} cols",
+                s.len(),
+                self.cols
+            )));
+        }
+        let mut out = self.clone();
+        for (v, &c) in out.values.iter_mut().zip(out.col_idx.iter()) {
+            *v *= s[c];
+        }
+        Ok(out)
+    }
+
+    /// Total bytes of the three arrays — used by the cache budget accounting.
+    pub fn memory_bytes(&self) -> usize {
+        self.row_ptr.len() * std::mem::size_of::<usize>()
+            + self.col_idx.len() * std::mem::size_of::<usize>()
+            + self.values.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [[0 1 2]
+        //  [0 0 0]
+        //  [3 0 4]]
+        Csr::from_parts(3, 3, vec![0, 2, 2, 4], vec![1, 2, 0, 2], vec![1.0, 2.0, 3.0, 4.0])
+            .unwrap()
+    }
+
+    #[test]
+    fn validate_catches_bad_ptr() {
+        assert!(Csr::from_parts(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err()); // short ptr
+        assert!(Csr::from_parts(2, 2, vec![1, 1, 1], vec![0], vec![1.0]).is_err()); // ptr[0]!=0
+        assert!(Csr::from_parts(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 1.0]).is_err());
+        // non-monotone
+    }
+
+    #[test]
+    fn validate_catches_bad_cols() {
+        // out of range
+        assert!(Csr::from_parts(2, 2, vec![0, 1, 1], vec![5], vec![1.0]).is_err());
+        // duplicate within row
+        assert!(Csr::from_parts(1, 3, vec![0, 2], vec![1, 1], vec![1.0, 1.0]).is_err());
+        // unsorted within row
+        assert!(Csr::from_parts(1, 3, vec![0, 2], vec![2, 0], vec![1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn row_accessors() {
+        let m = sample();
+        assert_eq!(m.row_cols(0), &[1, 2]);
+        assert_eq!(m.row_vals(2), &[3.0, 4.0]);
+        assert_eq!(m.row_nnz(1), 0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = sample();
+        let t = m.transpose();
+        t.validate().unwrap();
+        assert_eq!(t.rows, 3);
+        let tt = t.transpose();
+        assert_eq!(tt, m);
+        // dense check
+        assert!(t.to_dense().allclose(&m.to_dense().transpose(), 0.0));
+    }
+
+    #[test]
+    fn to_coo_roundtrip() {
+        let m = sample();
+        assert_eq!(m.to_coo().to_csr(), m);
+    }
+
+    #[test]
+    fn to_csc_matches_transpose() {
+        let m = sample();
+        let csc = m.to_csc();
+        let t = m.transpose();
+        assert_eq!(csc.col_ptr, t.row_ptr);
+        assert_eq!(csc.row_idx, t.col_idx);
+        assert_eq!(csc.values, t.values);
+    }
+
+    #[test]
+    fn identity_and_self_loops() {
+        let i = Csr::identity(3);
+        i.validate().unwrap();
+        let m = sample();
+        let a = m.add_self_loops().unwrap();
+        a.validate().unwrap();
+        assert_eq!(a.nnz(), m.nnz() + 2); // (0,0)? no — (0,*) has no diag, (1,1) new, (2,2) exists → +...
+        // diag (0,0) new, (1,1) new, (2,2) merges with existing 4.0
+        let d = a.to_dense();
+        assert_eq!(d.get(0, 0), 1.0);
+        assert_eq!(d.get(1, 1), 1.0);
+        assert_eq!(d.get(2, 2), 5.0);
+    }
+
+    #[test]
+    fn scaling() {
+        let m = sample();
+        let r = m.scale_rows(&[2.0, 3.0, 0.5]).unwrap();
+        assert_eq!(r.values, vec![2.0, 4.0, 1.5, 2.0]);
+        let c = m.scale_cols(&[10.0, 100.0, 1000.0]).unwrap();
+        assert_eq!(c.values, vec![100.0, 2000.0, 30.0, 4000.0]);
+        assert!(m.scale_rows(&[1.0]).is_err());
+        assert!(m.scale_cols(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let m = sample();
+        let bytes = m.memory_bytes();
+        // row_ptr: 4 usize, col_idx: 4 usize, values: 4 f32
+        assert_eq!(bytes, 4 * 8 + 4 * 8 + 4 * 4);
+    }
+}

@@ -1,0 +1,25 @@
+//! Sparse matrix substrate.
+//!
+//! iSpLib's matmul interface (paper §3.5) receives the graph in CSR
+//! (compressed sparse row) format; the backprop cache (§3.3) additionally
+//! needs the transpose, which we keep as a second CSR (equivalently the CSC
+//! of the original). Datasets are generated edge-by-edge, so COO is the
+//! construction format.
+//!
+//! Layout choices mirror `pytorch_sparse` (the library the paper patches):
+//! `row_ptr: Vec<usize>` of length `rows+1`, column indices sorted within
+//! each row, explicit `f32` values (GNN adjacencies are weighted after GCN
+//! normalisation).
+
+mod coo;
+mod csc;
+mod csr;
+mod norm;
+
+pub use coo::Coo;
+pub use csc::Csc;
+pub use csr::Csr;
+pub use norm::{degree_counts, degree_vector, gcn_normalize, row_normalize, NormKind};
+
+#[cfg(test)]
+mod proptests;

@@ -1,0 +1,143 @@
+//! Graph normalisations used by the GNN layers.
+//!
+//! GCN uses the symmetric normalisation `D^{-1/2} (A + I) D^{-1/2}` (Kipf &
+//! Welling); GraphSAGE-mean uses the row-stochastic `D^{-1} A`. Both are
+//! *preprocessing* in iSpLib: they're computed once, cached (paper §3.3),
+//! and the per-epoch hot path only runs SpMM against the cached matrix.
+
+use crate::error::{Error, Result};
+
+use super::Csr;
+
+/// Which normalisation to apply to an adjacency before training.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NormKind {
+    /// No normalisation (GIN, GraphSAGE-sum use the raw adjacency).
+    None,
+    /// Symmetric GCN normalisation with self-loops:
+    /// `D^{-1/2} (A+I) D^{-1/2}`.
+    GcnSym,
+    /// Row-stochastic `D^{-1} A` (GraphSAGE-mean).
+    RowMean,
+}
+
+impl NormKind {
+    /// Parse from the CLI / config string form.
+    pub fn parse(s: &str) -> Result<NormKind> {
+        match s {
+            "none" => Ok(NormKind::None),
+            "gcn" | "sym" => Ok(NormKind::GcnSym),
+            "mean" | "row" => Ok(NormKind::RowMean),
+            other => Err(Error::UnknownName(format!("norm kind '{other}'"))),
+        }
+    }
+
+    /// Apply this normalisation to `a`.
+    pub fn apply(self, a: &Csr) -> Result<Csr> {
+        match self {
+            NormKind::None => Ok(a.clone()),
+            NormKind::GcnSym => gcn_normalize(a),
+            NormKind::RowMean => row_normalize(a),
+        }
+    }
+}
+
+/// Weighted out-degree vector: `deg[r] = Σ_c A[r,c]`.
+pub fn degree_vector(a: &Csr) -> Vec<f32> {
+    (0..a.rows).map(|r| a.row_vals(r).iter().sum()).collect()
+}
+
+/// Count-based out-degree (number of neighbours, ignores weights). This is
+/// the denominator for the `mean` semiring reduction.
+pub fn degree_counts(a: &Csr) -> Vec<f32> {
+    (0..a.rows).map(|r| a.row_nnz(r) as f32).collect()
+}
+
+/// Symmetric GCN normalisation with self-loops:
+/// `Â = D̂^{-1/2} (A + I) D̂^{-1/2}` where `D̂` is the degree of `A + I`.
+pub fn gcn_normalize(a: &Csr) -> Result<Csr> {
+    let a_hat = a.add_self_loops()?;
+    let deg = degree_vector(&a_hat);
+    let inv_sqrt: Vec<f32> =
+        deg.iter().map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 }).collect();
+    a_hat.scale_rows(&inv_sqrt)?.scale_cols(&inv_sqrt)
+}
+
+/// Row-stochastic normalisation `D^{-1} A`; zero-degree rows stay zero.
+pub fn row_normalize(a: &Csr) -> Result<Csr> {
+    let deg = degree_vector(a);
+    let inv: Vec<f32> = deg.iter().map(|&d| if d > 0.0 { 1.0 / d } else { 0.0 }).collect();
+    a.scale_rows(&inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn path_graph(n: usize) -> Csr {
+        // 0 - 1 - 2 - ... - (n-1), undirected, unweighted
+        let mut coo = Coo::new(n, n);
+        for i in 0..n - 1 {
+            coo.push_sym(i, i + 1, 1.0);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn degree_vectors() {
+        let g = path_graph(4);
+        assert_eq!(degree_vector(&g), vec![1.0, 2.0, 2.0, 1.0]);
+        assert_eq!(degree_counts(&g), vec![1.0, 2.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn row_normalize_rows_sum_to_one() {
+        let g = path_graph(5);
+        let n = row_normalize(&g).unwrap();
+        for r in 0..5 {
+            let s: f32 = n.row_vals(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn row_normalize_zero_degree_row_stays_zero() {
+        // node 2 is isolated
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 1, 1.0);
+        coo.push(1, 0, 1.0);
+        let g = coo.to_csr();
+        let n = row_normalize(&g).unwrap();
+        assert_eq!(n.row_nnz(2), 0);
+    }
+
+    #[test]
+    fn gcn_normalize_symmetric_and_bounded() {
+        let g = path_graph(4);
+        let n = gcn_normalize(&g).unwrap();
+        n.validate().unwrap();
+        // Â must be symmetric for undirected A
+        let d = n.to_dense();
+        let dt = n.transpose().to_dense();
+        assert!(d.allclose(&dt, 1e-6));
+        // Largest eigval of the GCN-normalised adjacency is 1; all entries in (0,1]
+        for &v in &n.values {
+            assert!(v > 0.0 && v <= 1.0);
+        }
+        // diagonal entry of node with degree d is 1/(d+1)
+        assert!((d.get(0, 0) - 1.0 / 2.0).abs() < 1e-6);
+        assert!((d.get(1, 1) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn norm_kind_parse_and_apply() {
+        assert_eq!(NormKind::parse("gcn").unwrap(), NormKind::GcnSym);
+        assert_eq!(NormKind::parse("mean").unwrap(), NormKind::RowMean);
+        assert_eq!(NormKind::parse("none").unwrap(), NormKind::None);
+        assert!(NormKind::parse("bogus").is_err());
+        let g = path_graph(3);
+        assert_eq!(NormKind::None.apply(&g).unwrap(), g);
+        assert_eq!(NormKind::RowMean.apply(&g).unwrap(), row_normalize(&g).unwrap());
+    }
+}

@@ -1,0 +1,98 @@
+//! Property tests for the sparse substrate itself (format invariants,
+//! normalisation identities). Kernel-level properties live in
+//! `kernels::proptests`.
+
+use super::{degree_vector, gcn_normalize, row_normalize, Coo, Csr};
+use crate::util::check::forall;
+use crate::util::rng::Rng;
+
+/// Random undirected simple graph over `n` nodes.
+fn arb_sym_graph(rng: &mut Rng, n: usize) -> Csr {
+    let n_edges = rng.gen_range(n * 3 + 1);
+    let mut coo = Coo::new(n, n);
+    for _ in 0..n_edges {
+        let a = rng.gen_range(n);
+        let b = rng.gen_range(n);
+        if a != b {
+            coo.push_sym(a, b, 1.0);
+        }
+    }
+    let mut csr = coo.to_csr();
+    // clamp merged duplicate weights back to 1.0 (simple graph)
+    for v in &mut csr.values {
+        *v = 1.0;
+    }
+    csr
+}
+
+#[test]
+fn prop_sym_graph_is_symmetric() {
+    forall("undirected construction is symmetric", 64, |rng| {
+        let g = arb_sym_graph(rng, 20);
+        assert_eq!(g.transpose(), g);
+    });
+}
+
+#[test]
+fn prop_row_norm_stochastic() {
+    forall("row normalisation makes rows sum to 1", 64, |rng| {
+        let g = arb_sym_graph(rng, 16);
+        let n = row_normalize(&g).unwrap();
+        for r in 0..n.rows {
+            let s: f32 = n.row_vals(r).iter().sum();
+            if g.row_nnz(r) > 0 {
+                assert!((s - 1.0).abs() < 1e-5);
+            } else {
+                assert_eq!(s, 0.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_gcn_norm_properties() {
+    forall("gcn norm: symmetric, bounded, diag", 64, |rng| {
+        let g = arb_sym_graph(rng, 14);
+        let a = gcn_normalize(&g).unwrap();
+        a.validate().unwrap();
+        assert_eq!(a.transpose(), a);
+        for &v in &a.values {
+            assert!(v > 0.0 && v <= 1.0 + 1e-6);
+        }
+        // diagonal of Â is 1/(deg+1) exactly
+        let deg = degree_vector(&g);
+        let d = a.to_dense();
+        for i in 0..14 {
+            let expect = 1.0 / (deg[i] + 1.0);
+            assert!((d.get(i, i) - expect).abs() < 1e-5);
+        }
+    });
+}
+
+#[test]
+fn prop_coalesce_idempotent() {
+    forall("sum_duplicates idempotent", 64, |rng| {
+        let mut coo = Coo::new(10, 10);
+        let n = rng.gen_range(60);
+        for _ in 0..n {
+            coo.push(rng.gen_range(10), rng.gen_range(10), rng.gen_range_f32(-1.0, 1.0));
+        }
+        let mut once = coo.clone();
+        once.sum_duplicates();
+        let mut twice = once.clone();
+        twice.sum_duplicates();
+        assert_eq!(once.row_idx, twice.row_idx);
+        assert_eq!(once.col_idx, twice.col_idx);
+        assert_eq!(once.values, twice.values);
+    });
+}
+
+#[test]
+fn prop_nnz_conserved() {
+    forall("nnz conserved by conversions", 64, |rng| {
+        let g = arb_sym_graph(rng, 18);
+        assert_eq!(g.transpose().nnz(), g.nnz());
+        assert_eq!(g.to_coo().nnz(), g.nnz());
+        assert_eq!(g.to_csc().nnz(), g.nnz());
+    });
+}

@@ -1,0 +1,122 @@
+//! Training backends — the "framework" axis of the paper's Figure 3.
+//!
+//! Each backend is a *real implementation* of the same training
+//! computation, differing exactly where the compared frameworks differ
+//! (DESIGN.md §5 documents the mapping):
+//!
+//! | backend          | paper column | what's different                                  |
+//! |------------------|--------------|---------------------------------------------------|
+//! | `NativeTuned`    | iSpLib       | tuned generated kernels + cached Aᵀ/Â (§3.2+§3.3) |
+//! | `NativeTrusted`  | PT2          | trusted kernel, uncached backward transpose        |
+//! | `NativeLegacy`   | PT1          | trusted kernel, uncached, re-normalises per epoch  |
+//! | `MessagePassing` | PT2-MP       | edge-wise gather/scatter with message tensor       |
+//! | `DenseFallback`  | vanilla PT2 / CogDL-small | densified adjacency GEMM             |
+//! | `Hlo`            | PT2-Compile  | whole step AOT-compiled to XLA, run via PJRT       |
+
+use crate::error::{Error, Result};
+
+/// Backend selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// iSpLib: tuned kernels + cache-enabled backprop.
+    NativeTuned,
+    /// PyTorch-2-sparse equivalent: trusted kernel, no backprop caching.
+    NativeTrusted,
+    /// PyTorch-1-sparse equivalent: trusted kernel, no caching, plus
+    /// per-epoch re-normalisation of the adjacency (the extra
+    /// materialisation older stacks pay).
+    NativeLegacy,
+    /// PyG message-passing equivalent (PT2-MP).
+    MessagePassing,
+    /// Dense-adjacency fallback (vanilla PyTorch GCN / CogDL small-graph).
+    DenseFallback,
+    /// AOT-compiled whole-step via XLA/PJRT (torch.compile analogue).
+    Hlo,
+}
+
+impl Backend {
+    /// Parse CLI form.
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "isplib" | "tuned" => Ok(Backend::NativeTuned),
+            "pt2" | "trusted" => Ok(Backend::NativeTrusted),
+            "pt1" | "legacy" => Ok(Backend::NativeLegacy),
+            "pt2-mp" | "mp" | "message-passing" => Ok(Backend::MessagePassing),
+            "dense" | "vanilla" | "cogdl" => Ok(Backend::DenseFallback),
+            "pt2-compile" | "hlo" | "compile" => Ok(Backend::Hlo),
+            other => Err(Error::UnknownName(format!("backend '{other}'"))),
+        }
+    }
+
+    /// Report name (paper column label).
+    pub fn label(self) -> &'static str {
+        match self {
+            Backend::NativeTuned => "iSpLib",
+            Backend::NativeTrusted => "PT2",
+            Backend::NativeLegacy => "PT1",
+            Backend::MessagePassing => "PT2-MP",
+            Backend::DenseFallback => "Dense",
+            Backend::Hlo => "PT2-Compile",
+        }
+    }
+
+    /// Does this backend cache the backward transpose (§3.3)?
+    pub fn caches_backprop(self) -> bool {
+        matches!(self, Backend::NativeTuned | Backend::Hlo)
+    }
+
+    /// Does this backend use tuned (generated) kernels?
+    pub fn uses_tuned_kernels(self) -> bool {
+        matches!(self, Backend::NativeTuned)
+    }
+
+    /// Does this backend re-normalise the adjacency every epoch?
+    pub fn renormalizes_per_epoch(self) -> bool {
+        matches!(self, Backend::NativeLegacy)
+    }
+
+    /// The five Figure 3 columns (everything but Hlo, which needs
+    /// artifacts) — used by test sweeps.
+    pub const NATIVE_ALL: [Backend; 5] = [
+        Backend::NativeTuned,
+        Backend::NativeTrusted,
+        Backend::NativeLegacy,
+        Backend::MessagePassing,
+        Backend::DenseFallback,
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_labels() {
+        assert_eq!(Backend::parse("isplib").unwrap(), Backend::NativeTuned);
+        assert_eq!(Backend::parse("pt2").unwrap(), Backend::NativeTrusted);
+        assert_eq!(Backend::parse("pt1").unwrap(), Backend::NativeLegacy);
+        assert_eq!(Backend::parse("pt2-mp").unwrap(), Backend::MessagePassing);
+        assert_eq!(Backend::parse("dense").unwrap(), Backend::DenseFallback);
+        assert_eq!(Backend::parse("hlo").unwrap(), Backend::Hlo);
+        assert!(Backend::parse("tf").is_err());
+    }
+
+    #[test]
+    fn flags_match_paper_semantics() {
+        assert!(Backend::NativeTuned.caches_backprop());
+        assert!(Backend::NativeTuned.uses_tuned_kernels());
+        assert!(!Backend::NativeTrusted.caches_backprop());
+        assert!(!Backend::NativeTrusted.uses_tuned_kernels());
+        assert!(Backend::NativeLegacy.renormalizes_per_epoch());
+        assert!(!Backend::NativeTrusted.renormalizes_per_epoch());
+    }
+
+    #[test]
+    fn labels_unique() {
+        let mut labels: Vec<&str> = Backend::NATIVE_ALL.iter().map(|b| b.label()).collect();
+        labels.push(Backend::Hlo.label());
+        let n = labels.len();
+        labels.dedup();
+        assert_eq!(labels.len(), n);
+    }
+}

@@ -1,0 +1,10 @@
+//! Training: optimizers, backends (the "framework" axis of Figure 3), and
+//! the epoch-loop [`Trainer`].
+
+mod backend;
+mod optimizer;
+mod trainer;
+
+pub use backend::Backend;
+pub use optimizer::{Optimizer, OptimizerKind};
+pub use trainer::{TrainConfig, TrainReport, Trainer};

@@ -1,0 +1,159 @@
+//! Optimizers: SGD (with momentum) and Adam over a [`ParamSet`].
+
+use std::collections::BTreeMap;
+
+use crate::dense::Dense;
+use crate::error::{Error, Result};
+use crate::gnn::ParamSet;
+
+/// Which optimizer to use.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OptimizerKind {
+    /// Plain SGD with optional momentum.
+    Sgd {
+        /// Learning rate.
+        lr: f32,
+        /// Momentum coefficient (0 = vanilla SGD).
+        momentum: f32,
+    },
+    /// Adam (Kingma & Ba) with the usual defaults.
+    Adam {
+        /// Learning rate.
+        lr: f32,
+    },
+}
+
+impl OptimizerKind {
+    /// Parse CLI form "sgd" / "adam" with default hyperparameters.
+    pub fn parse(s: &str) -> Result<OptimizerKind> {
+        match s {
+            "sgd" => Ok(OptimizerKind::Sgd { lr: 0.1, momentum: 0.9 }),
+            "adam" => Ok(OptimizerKind::Adam { lr: 0.01 }),
+            other => Err(Error::UnknownName(format!("optimizer '{other}'"))),
+        }
+    }
+}
+
+/// Stateful optimizer over named parameters.
+pub struct Optimizer {
+    kind: OptimizerKind,
+    // per-parameter state buffers
+    m: BTreeMap<String, Dense>,
+    v: BTreeMap<String, Dense>,
+    t: u64,
+}
+
+impl Optimizer {
+    /// New optimizer with empty state.
+    pub fn new(kind: OptimizerKind) -> Self {
+        Optimizer { kind, m: BTreeMap::new(), v: BTreeMap::new(), t: 0 }
+    }
+
+    /// Apply one update step: `params[name] -= update(grads[name])`.
+    /// Parameters without a gradient are left untouched.
+    pub fn step(&mut self, params: &mut ParamSet, grads: &BTreeMap<String, Dense>) -> Result<()> {
+        self.t += 1;
+        match self.kind {
+            OptimizerKind::Sgd { lr, momentum } => {
+                for (name, p) in params.iter_mut() {
+                    let Some(g) = grads.get(name) else { continue };
+                    if momentum > 0.0 {
+                        let buf = self
+                            .m
+                            .entry(name.clone())
+                            .or_insert_with(|| Dense::zeros(p.rows, p.cols));
+                        // buf = momentum*buf + g
+                        buf.scale(momentum);
+                        buf.axpy(1.0, g)?;
+                        p.axpy(-lr, &buf.clone())?;
+                    } else {
+                        p.axpy(-lr, g)?;
+                    }
+                }
+            }
+            OptimizerKind::Adam { lr } => {
+                let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+                let t = self.t as i32;
+                let bc1 = 1.0 - b1.powi(t);
+                let bc2 = 1.0 - b2.powi(t);
+                for (name, p) in params.iter_mut() {
+                    let Some(g) = grads.get(name) else { continue };
+                    let m = self
+                        .m
+                        .entry(name.clone())
+                        .or_insert_with(|| Dense::zeros(p.rows, p.cols));
+                    let v = self
+                        .v
+                        .entry(name.clone())
+                        .or_insert_with(|| Dense::zeros(p.rows, p.cols));
+                    for i in 0..p.data.len() {
+                        let gi = g.data[i];
+                        m.data[i] = b1 * m.data[i] + (1.0 - b1) * gi;
+                        v.data[i] = b2 * v.data[i] + (1.0 - b2) * gi * gi;
+                        let mhat = m.data[i] / bc1;
+                        let vhat = v.data[i] / bc2;
+                        p.data[i] -= lr * mhat / (vhat.sqrt() + eps);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quadratic_grad(p: &Dense) -> Dense {
+        // f(p) = ||p||²/2 → ∇f = p
+        p.clone()
+    }
+
+    fn converges(kind: OptimizerKind) -> f32 {
+        let mut params = ParamSet::new();
+        params.insert("w", Dense::from_vec(1, 3, vec![1.0, -2.0, 3.0]).unwrap());
+        let mut opt = Optimizer::new(kind);
+        for _ in 0..200 {
+            let g = quadratic_grad(params.get("w").unwrap());
+            let mut grads = BTreeMap::new();
+            grads.insert("w".to_string(), g);
+            opt.step(&mut params, &grads).unwrap();
+        }
+        params.get("w").unwrap().frobenius()
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let norm = converges(OptimizerKind::Sgd { lr: 0.1, momentum: 0.0 });
+        assert!(norm < 1e-3, "norm {norm}");
+    }
+
+    #[test]
+    fn sgd_momentum_converges() {
+        let norm = converges(OptimizerKind::Sgd { lr: 0.05, momentum: 0.9 });
+        assert!(norm < 1e-3, "norm {norm}");
+    }
+
+    #[test]
+    fn adam_converges() {
+        let norm = converges(OptimizerKind::Adam { lr: 0.05 });
+        assert!(norm < 1e-2, "norm {norm}");
+    }
+
+    #[test]
+    fn missing_grad_leaves_param() {
+        let mut params = ParamSet::new();
+        params.insert("w", Dense::from_vec(1, 1, vec![7.0]).unwrap());
+        let mut opt = Optimizer::new(OptimizerKind::Sgd { lr: 1.0, momentum: 0.0 });
+        opt.step(&mut params, &BTreeMap::new()).unwrap();
+        assert_eq!(params.get("w").unwrap().data[0], 7.0);
+    }
+
+    #[test]
+    fn parse() {
+        assert!(matches!(OptimizerKind::parse("sgd").unwrap(), OptimizerKind::Sgd { .. }));
+        assert!(matches!(OptimizerKind::parse("adam").unwrap(), OptimizerKind::Adam { .. }));
+        assert!(OptimizerKind::parse("lbfgs").is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! Bench harness (criterion replacement) for the `cargo bench` targets.
+//!
+//! Each bench binary (`rust/benches/*.rs`, `harness = false`) builds a
+//! [`BenchSet`], registers named closures, and calls [`BenchSet::run`]:
+//! warmup, fixed repetition count, then a one-line report per case with
+//! min / median / mean wall time. Deterministic, no statistics theatre —
+//! the paper's numbers are ratios of medians, which this provides.
+
+use std::time::Instant;
+
+/// One measured case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Case name.
+    pub name: String,
+    /// Repetitions measured.
+    pub reps: usize,
+    /// Minimum seconds.
+    pub min_secs: f64,
+    /// Median seconds.
+    pub median_secs: f64,
+    /// Mean seconds.
+    pub mean_secs: f64,
+}
+
+impl BenchResult {
+    /// Render as the standard report line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<48} reps={:<3} min={:>12.6}s median={:>12.6}s mean={:>12.6}s",
+            self.name, self.reps, self.min_secs, self.median_secs, self.mean_secs
+        )
+    }
+}
+
+/// Timing configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Unmeasured warmup runs per case.
+    pub warmup: usize,
+    /// Measured repetitions per case.
+    pub reps: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // overridable for CI / quick runs
+        let quick = std::env::var("ISPLIB_BENCH_QUICK").is_ok();
+        if quick {
+            BenchConfig { warmup: 0, reps: 1 }
+        } else {
+            BenchConfig { warmup: 1, reps: 5 }
+        }
+    }
+}
+
+/// Time one closure under `cfg`.
+pub fn time_case<F: FnMut()>(cfg: BenchConfig, name: &str, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(cfg.reps.max(1));
+    for _ in 0..cfg.reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = times[0];
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        reps: times.len(),
+        min_secs: min,
+        median_secs: median,
+        mean_secs: mean,
+    }
+}
+
+/// A collection of cases run and reported together.
+pub struct BenchSet {
+    /// Title printed before results.
+    pub title: String,
+    /// Config for every case.
+    pub config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl BenchSet {
+    /// New set with env-derived defaults.
+    pub fn new(title: &str) -> Self {
+        BenchSet { title: title.to_string(), config: BenchConfig::default(), results: Vec::new() }
+    }
+
+    /// Measure and record one case.
+    pub fn case<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        let r = time_case(self.config, name, f);
+        println!("{}", r.line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// All recorded results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Look up a case's median by name.
+    pub fn median(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|r| r.name == name).map(|r| r.median_secs)
+    }
+
+    /// Print the header. (Separated so benches can print context first.)
+    pub fn header(&self) {
+        println!("\n=== {} ===", self.title);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_expected_reps() {
+        let count = AtomicUsize::new(0);
+        let cfg = BenchConfig { warmup: 2, reps: 3 };
+        let r = time_case(cfg, "t", || {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 5);
+        assert_eq!(r.reps, 3);
+        assert!(r.min_secs <= r.median_secs);
+        assert!(r.median_secs <= r.mean_secs * 3.0);
+    }
+
+    #[test]
+    fn set_records_and_finds() {
+        let mut set = BenchSet::new("test");
+        set.config = BenchConfig { warmup: 0, reps: 1 };
+        set.case("a", || {});
+        set.case("b", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert_eq!(set.results().len(), 2);
+        assert!(set.median("a").unwrap() <= set.median("b").unwrap());
+        assert!(set.median("c").is_none());
+    }
+
+    #[test]
+    fn line_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            reps: 3,
+            min_secs: 0.1,
+            median_secs: 0.2,
+            mean_secs: 0.3,
+        };
+        let line = r.line();
+        assert!(line.contains("reps=3"));
+        assert!(line.contains("median="));
+    }
+}

@@ -1,0 +1,102 @@
+//! Seeded property-testing loop (proptest replacement).
+//!
+//! [`forall`] runs a property over `cases` generated inputs; on failure it
+//! reports the case's seed so the exact input reproduces with
+//! `ISPLIB_CHECK_SEED=<seed>`. No shrinking — generators here are small and
+//! seeds make failures replayable, which is what debugging actually needs.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with `ISPLIB_CHECK_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("ISPLIB_CHECK_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(48)
+}
+
+/// Run `prop` over `cases` inputs drawn by `gen` from a seeded RNG.
+/// Panics (test failure) with the offending seed on the first violation.
+///
+/// ```
+/// use isplib::util::check::forall;
+/// use isplib::util::rng::Rng;
+/// forall("addition commutes", 32, |rng: &mut Rng| {
+///     let (a, b) = (rng.gen_range(100) as i64, rng.gen_range(100) as i64);
+///     assert_eq!(a + b, b + a);
+/// });
+/// ```
+pub fn forall<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng),
+{
+    // replay mode: a single pinned seed
+    if let Ok(seed) = std::env::var("ISPLIB_CHECK_SEED") {
+        let seed: u64 = seed.parse().expect("ISPLIB_CHECK_SEED must be a u64");
+        let mut rng = Rng::seed_from_u64(seed);
+        prop(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        // derive the case seed from the property name so adding properties
+        // doesn't shift others' inputs
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in name.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        let seed = h ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case} (replay with ISPLIB_CHECK_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        forall("trivial", 10, |_rng| {
+            n += 1;
+        });
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            forall("always-fails", 5, |_rng| {
+                panic!("boom");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("ISPLIB_CHECK_SEED="), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_inputs_per_case() {
+        let mut first: Vec<u64> = Vec::new();
+        forall("det", 5, |rng| first.push(rng.next_u64()));
+        let mut second: Vec<u64> = Vec::new();
+        forall("det", 5, |rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}

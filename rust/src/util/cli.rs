@@ -1,0 +1,118 @@
+//! Tiny CLI argument parser (clap replacement).
+//!
+//! Supports the subset the `isplib` binary needs:
+//! `prog SUBCOMMAND [--flag value]... [--bool-flag]...`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed arguments: a subcommand plus `--key value` / `--switch` flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First positional token (the subcommand), if any.
+    pub subcommand: Option<String>,
+    /// `--key value` pairs.
+    pub flags: BTreeMap<String, String>,
+    /// Bare `--switch` flags.
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (usually `std::env::args().skip(1)`).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Config("bare '--' not supported".into()));
+                }
+                // `--key=value` form
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                // `--key value` form if the next token isn't a flag
+                match iter.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let v = iter.next().unwrap();
+                        out.flags.insert(name.to_string(), v);
+                    }
+                    _ => out.switches.push(name.to_string()),
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                return Err(Error::Config(format!("unexpected positional argument '{tok}'")));
+            }
+        }
+        Ok(out)
+    }
+
+    /// String flag with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Parsed numeric flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("flag --{key}: cannot parse '{v}'"))),
+        }
+    }
+
+    /// Boolean switch present?
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["bench", "--models", "gcn,gin", "--epochs", "10", "--json"]);
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.get("models", ""), "gcn,gin");
+        assert_eq!(a.get_parse("epochs", 0usize).unwrap(), 10);
+        assert!(a.has("json"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["tune", "--scale=64", "--ks=16,32"]);
+        assert_eq!(a.get_parse("scale", 0usize).unwrap(), 64);
+        assert_eq!(a.get("ks", ""), "16,32");
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["train"]);
+        assert_eq!(a.get("model", "gcn"), "gcn");
+        assert_eq!(a.get_parse("epochs", 30usize).unwrap(), 30);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse(&["tune", "--json"]);
+        assert!(a.has("json"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(vec!["a".into(), "b".into()]).is_err()); // two positionals
+        let a = parse(&["x", "--epochs", "ten"]);
+        assert!(a.get_parse("epochs", 0usize).is_err());
+    }
+}

@@ -1,0 +1,24 @@
+//! In-crate utility substrates.
+//!
+//! This repository builds fully offline with a single external dependency
+//! (the `xla` PJRT binding), so the usual ecosystem crates are implemented
+//! here from scratch:
+//!
+//! * [`rng`] — splitmix64-seeded xoshiro256** PRNG (replaces `rand`).
+//! * [`json`] — JSON value model, parser and printer (replaces `serde_json`);
+//!   the artifact manifest and tuning DB go through this.
+//! * [`parallel`] — scoped fork-join helpers over `std::thread` (replaces
+//!   `rayon` for the kernels' row-partitioned parallelism).
+//! * [`cli`] — a small `--flag value` argument parser (replaces `clap`).
+//! * [`bench`] — timing harness used by `cargo bench` targets (replaces
+//!   `criterion`): warmup + repetitions + median/mean/min reporting.
+//! * [`check`] — seeded property-testing loop (replaces `proptest`).
+//! * [`tmp`] — unique temp directories for tests (replaces `tempfile`).
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod parallel;
+pub mod rng;
+pub mod tmp;

@@ -1,0 +1,112 @@
+//! Scoped fork-join parallelism over `std::thread` — the rayon replacement
+//! backing the kernels' NNZ-balanced row partitioning.
+//!
+//! The kernels need exactly one primitive: *run N closures, each owning a
+//! disjoint `&mut` slice of the output, and wait for all of them*.
+//! [`join_all`] provides it with `std::thread::scope`. A process-wide
+//! default thread budget ([`current_num_threads`]) mirrors rayon's global
+//! pool size; on this 1-core testbed it degrades to serial execution
+//! without spawning.
+
+use std::sync::OnceLock;
+
+/// Default worker budget: `ISPLIB_THREADS` env var, else the number of
+/// available cores.
+pub fn current_num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("ISPLIB_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Run every closure in `jobs`, in parallel when more than one, and wait
+/// for all. Jobs run on fresh scoped threads (cheap relative to the O(nnz)
+/// kernel work they carry); a single job runs inline with zero spawn cost
+/// — the common case on a 1-core host where the partitioner emits one
+/// range.
+pub fn join_all<F>(jobs: Vec<F>)
+where
+    F: FnOnce() + Send,
+{
+    match jobs.len() {
+        0 => {}
+        1 => {
+            for job in jobs {
+                job();
+            }
+        }
+        _ => {
+            std::thread::scope(|scope| {
+                let mut iter = jobs.into_iter();
+                let first = iter.next().unwrap();
+                let handles: Vec<_> =
+                    iter.map(|job| scope.spawn(job)).collect();
+                // run the first job on this thread instead of idling
+                first();
+                for h in handles {
+                    h.join().expect("kernel worker panicked");
+                }
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn budget_is_positive() {
+        assert!(current_num_threads() >= 1);
+    }
+
+    #[test]
+    fn join_all_runs_everything() {
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..8)
+            .map(|_| {
+                let c = &counter;
+                move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        join_all(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn join_all_disjoint_mut_slices() {
+        let mut data = vec![0u32; 100];
+        let mut rest: &mut [u32] = &mut data;
+        let mut jobs: Vec<Box<dyn FnOnce() + Send>> = Vec::new();
+        for i in 0..4 {
+            let (head, tail) = rest.split_at_mut(25);
+            rest = tail;
+            jobs.push(Box::new(move || {
+                for v in head.iter_mut() {
+                    *v = i + 1;
+                }
+            }));
+        }
+        join_all(jobs);
+        assert!(data[..25].iter().all(|&v| v == 1));
+        assert!(data[75..].iter().all(|&v| v == 4));
+    }
+
+    #[test]
+    fn empty_and_single() {
+        join_all(Vec::<fn()>::new());
+        let ran = AtomicUsize::new(0);
+        join_all(vec![|| {
+            ran.fetch_add(1, Ordering::SeqCst);
+        }]);
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,127 @@
+//! CLI integration: drive the `isplib` binary end-to-end as a user would.
+
+use std::process::Command;
+
+fn isplib(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_isplib"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn isplib");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn help_lists_commands() {
+    let (ok, stdout, _) = isplib(&["help"]);
+    assert!(ok);
+    for cmd in ["probe", "datasets", "tune", "train", "bench"] {
+        assert!(stdout.contains(cmd), "help missing '{cmd}'");
+    }
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let (ok, _, stderr) = isplib(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"));
+    assert!(stderr.contains("USAGE"));
+}
+
+#[test]
+fn probe_reports_three_profiles() {
+    let (ok, stdout, _) = isplib(&["probe"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("host"));
+    assert!(stdout.contains("intel-skylake"));
+    assert!(stdout.contains("amd-epyc"));
+    assert!(stdout.contains("best_kb"));
+}
+
+#[test]
+fn datasets_prints_table1() {
+    let (ok, stdout, _) = isplib(&["datasets", "--scale", "8192"]);
+    assert!(ok, "{stdout}");
+    for name in ["reddit", "reddit2", "ogbn-mag", "ogbn-products", "amazon", "ogbn-protein"] {
+        assert!(stdout.contains(name), "table missing {name}:\n{stdout}");
+    }
+    assert!(stdout.contains("232965")); // paper-scale reddit nodes
+}
+
+#[test]
+fn train_karate_prints_report() {
+    let (ok, stdout, stderr) = isplib(&[
+        "train", "--model", "gcn", "--dataset", "karate", "--backend", "pt2", "--epochs", "5",
+        "--hidden", "8",
+    ]);
+    assert!(ok, "stdout: {stdout}\nstderr: {stderr}");
+    assert!(stdout.contains("backend=PT2"));
+    assert!(stdout.contains("final_loss="));
+}
+
+#[test]
+fn train_json_output_parses() {
+    let (ok, stdout, stderr) = isplib(&[
+        "train", "--model", "gin", "--dataset", "karate", "--backend", "dense", "--epochs", "3",
+        "--hidden", "8", "--json",
+    ]);
+    assert!(ok, "stdout: {stdout}\nstderr: {stderr}");
+    let json = isplib::util::json::Json::parse(&stdout).expect("valid json");
+    assert_eq!(json.get("model").unwrap().as_str().unwrap(), "gin");
+    assert_eq!(json.get("losses").unwrap().as_arr().unwrap().len(), 3);
+}
+
+#[test]
+fn tune_quick_sweep_renders_chart() {
+    let (ok, stdout, stderr) = isplib(&[
+        "tune",
+        "--datasets",
+        "ogbn-protein",
+        "--profiles",
+        "amd-epyc",
+        "--ks",
+        "16,32",
+        "--scale",
+        "4096",
+    ]);
+    assert!(ok, "stdout: {stdout}\nstderr: {stderr}");
+    assert!(stdout.contains("tuning graph"));
+    assert!(stdout.contains("ideal K"));
+}
+
+#[test]
+fn bench_single_cell_reports_speedup() {
+    let (ok, stdout, stderr) = isplib(&[
+        "bench",
+        "--models",
+        "gcn",
+        "--datasets",
+        "ogbn-protein",
+        "--frameworks",
+        "isplib,pt2",
+        "--epochs",
+        "2",
+        "--hidden",
+        "16",
+        "--scale",
+        "4096",
+    ]);
+    assert!(ok, "stdout: {stdout}\nstderr: {stderr}");
+    assert!(stdout.contains("iSpLib"));
+    assert!(stdout.contains("PT2"));
+    assert!(stdout.contains("headline speedups"));
+}
+
+#[test]
+fn train_rejects_unknown_names() {
+    let (ok, _, stderr) = isplib(&["train", "--model", "gat"]);
+    assert!(!ok);
+    assert!(stderr.contains("gat"));
+    let (ok, _, stderr) = isplib(&["train", "--dataset", "cora"]);
+    assert!(!ok);
+    assert!(stderr.contains("cora"));
+}
