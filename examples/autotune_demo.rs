@@ -27,10 +27,11 @@ fn main() -> Result<()> {
     for profile_name in ["intel-skylake", "amd-epyc", "host"] {
         let profile = HardwareProfile::named(profile_name)?;
         println!(
-            "\nprofile {}: VLEN={} f32 lanes, candidate K-blocks {:?}",
+            "\nprofile {}: VLEN={} f32 lanes, candidate K-blocks {:?}, candidate K-tiles {:?}",
             profile.name,
             profile.vlen(),
-            profile.candidate_kbs()
+            profile.candidate_kbs(),
+            profile.candidate_kts()
         );
         let tuner = Tuner::with_config(
             profile,

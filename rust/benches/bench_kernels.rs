@@ -1,0 +1,204 @@
+//! Machine-readable kernel performance snapshot — `scripts/bench_kernels.sh`
+//! runs this and commits the resulting `BENCH_kernels.json` so the perf
+//! trajectory of the kernels is trackable PR-over-PR.
+//!
+//! Two sections:
+//!
+//! * `kernels` — ns/iter for every (op, kernel label, threads) cell of a
+//!   fixed SpMM workload matrix (trusted / best generated / tiled, serial
+//!   and parallel).
+//! * `overhead` — the repeated-SpMM microbenchmark behind this PR's
+//!   acceptance bar: the same small graph, 100 back-to-back parallel
+//!   calls, comparing the persistent worker pool against the legacy
+//!   spawn-per-call path. The workload is sized so fixed costs (thread
+//!   startup vs. enqueue+wake, partitioning, allocation) dominate; the
+//!   `speedup` field is pool-over-spawn per-call time.
+//!
+//! ```text
+//! cargo bench --bench bench_kernels          # writes BENCH_kernels.json
+//! ISPLIB_BENCH_OUT=/tmp/b.json cargo bench --bench bench_kernels
+//! ```
+
+use std::time::Instant;
+
+use isplib::data::spec_by_name;
+use isplib::dense::Dense;
+use isplib::kernels::{
+    spmm, spmm_with_workspace, KernelChoice, KernelWorkspace, Semiring, TILED_KTS,
+};
+use isplib::sparse::{Coo, Csr};
+use isplib::util::bench::{time_case, BenchConfig};
+use isplib::util::json::Json;
+use isplib::util::parallel::{join_all, join_all_spawn_per_call};
+use isplib::util::rng::Rng;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// ns/iter for one SpMM cell.
+fn time_spmm_ns(
+    cfg: BenchConfig,
+    a: &Csr,
+    x: &Dense,
+    op: Semiring,
+    choice: KernelChoice,
+    threads: usize,
+) -> f64 {
+    let r = time_case(cfg, &choice.label(), || {
+        std::hint::black_box(spmm(a, x, op, choice, threads).unwrap());
+    });
+    r.median_secs * 1e9
+}
+
+/// Per-call seconds for `calls` back-to-back parallel SpMMs on a shared
+/// workspace, with the given fork-join primitive underneath. Both paths
+/// run the identical kernel body; only the parallelism substrate differs,
+/// so the delta is pure per-call overhead.
+fn per_call_secs(a: &Csr, x: &Dense, calls: usize, spawn_legacy: bool) -> f64 {
+    let threads = 2;
+    let ws = KernelWorkspace::new();
+    // warm the partition cache + buffer pool so the measured loop sees the
+    // steady state a training run sees
+    let warm = spmm_with_workspace(a, x, Semiring::Sum, KernelChoice::Trusted, threads, Some((&ws, 1)))
+        .unwrap();
+    ws.recycle(warm.data);
+
+    let t0 = Instant::now();
+    for _ in 0..calls {
+        if spawn_legacy {
+            // legacy substrate: partition + disjoint split as the kernels
+            // do, but one fresh scoped thread per range
+            let ranges = isplib::kernels::nnz_balanced_partition(a, threads);
+            let mut y = Dense::zeros(a.rows, x.cols);
+            let k = x.cols;
+            join_all_spawn_per_call(
+                isplib::kernels::split_rows_mut(&mut y.data, &ranges, k)
+                    .into_iter()
+                    .map(|(range, out)| move || spmm_rows_sum(a, x, range.start, range.end, out))
+                    .collect(),
+            );
+            std::hint::black_box(&y.data[0]);
+        } else {
+            let y = spmm_with_workspace(a, x, Semiring::Sum, KernelChoice::Trusted, threads, Some((&ws, 1)))
+                .unwrap();
+            std::hint::black_box(&y.data[0]);
+            ws.recycle(y.data);
+        }
+    }
+    t0.elapsed().as_secs_f64() / calls as f64
+}
+
+/// Reference row loop (sum semiring) used by the legacy-substrate arm so
+/// both arms execute the same O(nnz·K) math.
+fn spmm_rows_sum(a: &Csr, x: &Dense, start: usize, end: usize, out: &mut [f32]) {
+    let k = x.cols;
+    for r in start..end {
+        let orow = &mut out[(r - start) * k..(r - start + 1) * k];
+        for (&c, &v) in a.row_cols(r).iter().zip(a.row_vals(r)) {
+            let xrow = x.row(c);
+            for (o, &xv) in orow.iter_mut().zip(xrow.iter()) {
+                *o += v * xv;
+            }
+        }
+    }
+}
+
+fn main() {
+    let out_path = std::env::var("ISPLIB_BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".into());
+    let scale = env_usize("ISPLIB_BENCH_SCALE", 512);
+    let cfg = BenchConfig::default();
+
+    let ds = spec_by_name("reddit").unwrap().instantiate(scale, 7).unwrap();
+    let a = &ds.adj;
+    let mut rng = Rng::seed_from_u64(11);
+    println!(
+        "workload: scaled reddit, {} nodes, {} nnz; reps={} (ISPLIB_BENCH_QUICK trims)",
+        a.rows,
+        a.nnz(),
+        cfg.reps
+    );
+
+    // --- kernel matrix: (op × kernel × threads) --------------------------
+    let mut rows = Vec::new();
+    for &k in &[32usize, 128] {
+        let x = Dense::uniform(a.rows, k, 1.0, &mut rng);
+        let mut choices = vec![KernelChoice::Trusted];
+        for kb in [8usize, 32] {
+            let c = KernelChoice::Generated { kb };
+            if c.applicable(k, Semiring::Sum) {
+                choices.push(c);
+            }
+        }
+        for kt in TILED_KTS {
+            let c = KernelChoice::Tiled { kt };
+            if c.applicable(k, Semiring::Sum) {
+                choices.push(c);
+            }
+        }
+        for op in [Semiring::Sum, Semiring::Mean] {
+            for choice in &choices {
+                if !choice.applicable(k, op) {
+                    continue;
+                }
+                for threads in [1usize, 2, 4] {
+                    let ns = time_spmm_ns(cfg, a, &x, op, *choice, threads);
+                    println!(
+                        "k={k:<4} op={:<5} kernel={:<18} threads={threads} {ns:>14.0} ns/iter",
+                        op.name(),
+                        choice.label()
+                    );
+                    rows.push(Json::obj(vec![
+                        ("k", Json::num(k as f64)),
+                        ("op", Json::str(op.name())),
+                        ("kernel", Json::str(&choice.label())),
+                        ("threads", Json::num(threads as f64)),
+                        ("ns_per_iter", Json::num(ns)),
+                    ]));
+                }
+            }
+        }
+    }
+
+    // --- repeated-SpMM per-call overhead: pool vs spawn-per-call ---------
+    // Small, low-work graph: fixed costs dominate the O(nnz·K) math.
+    let mut coo = Coo::new(2048, 2048);
+    let mut g = Rng::seed_from_u64(13);
+    for r in 0..2048 {
+        for _ in 0..2 {
+            coo.push(r, g.gen_range(2048), 1.0);
+        }
+    }
+    let small = coo.to_csr();
+    let xs = Dense::uniform(2048, 8, 1.0, &mut rng);
+    let calls = env_usize("ISPLIB_BENCH_CALLS", 100);
+    // prime the global pool outside the timed region
+    join_all((0..2).map(|_| || {}).collect::<Vec<_>>());
+    let pooled = per_call_secs(&small, &xs, calls, false);
+    let spawned = per_call_secs(&small, &xs, calls, true);
+    let speedup = spawned / pooled.max(1e-12);
+    println!(
+        "\nrepeated-SpMM overhead ({calls} calls, threads=2): pool {:.1} µs/call, \
+         spawn-per-call {:.1} µs/call → {speedup:.2}x lower per-call overhead",
+        pooled * 1e6,
+        spawned * 1e6
+    );
+
+    let doc = Json::obj(vec![
+        ("workload", Json::obj(vec![
+            ("dataset", Json::str(&ds.name)),
+            ("nodes", Json::num(a.rows as f64)),
+            ("nnz", Json::num(a.nnz() as f64)),
+        ])),
+        ("kernels", Json::Arr(rows)),
+        ("overhead", Json::obj(vec![
+            ("calls", Json::num(calls as f64)),
+            ("threads", Json::num(2.0)),
+            ("pool_ns_per_call", Json::num(pooled * 1e9)),
+            ("spawn_ns_per_call", Json::num(spawned * 1e9)),
+            ("speedup", Json::num(speedup)),
+        ])),
+    ]);
+    std::fs::write(&out_path, doc.pretty()).expect("write BENCH_kernels.json");
+    println!("wrote {out_path}");
+}

@@ -11,6 +11,7 @@ use isplib::data::spec_by_name;
 use isplib::dense::Dense;
 use isplib::kernels::{
     fusedmm, sddmm, spmm, spmm_dense_ref, EdgeOp, KernelChoice, Semiring, GENERATED_KBS,
+    TILED_KTS,
 };
 use isplib::util::bench::BenchSet;
 use isplib::util::rng::Rng;
@@ -47,6 +48,13 @@ fn main() {
         set.case(&format!("spmm/generated kb={kb}"), || {
             std::hint::black_box(
                 spmm(a, &x, Semiring::Sum, KernelChoice::Generated { kb }, 1).unwrap(),
+            );
+        });
+    }
+    for kt in TILED_KTS {
+        set.case(&format!("spmm/tiled kt={kt}"), || {
+            std::hint::black_box(
+                spmm(a, &x, Semiring::Sum, KernelChoice::Tiled { kt }, 1).unwrap(),
             );
         });
     }

@@ -16,5 +16,5 @@
 mod ops;
 mod tape;
 
-pub use ops::{SpmmImpl, SpmmOperand};
+pub use ops::{context_graph_id, SpmmImpl, SpmmOperand};
 pub use tape::{Tape, Var};

@@ -4,7 +4,20 @@ use std::sync::Arc;
 
 use crate::dense::Dense;
 use crate::error::Result;
+use crate::kernels::KernelWorkspace;
 use crate::sparse::{Coo, Csr};
+
+/// Stable in-process identity for a graph operand, derived from the
+/// registry context string. The [`crate::cache::BackpropCache`] and the
+/// [`KernelWorkspace`] key their per-graph entries with the same scheme,
+/// so "one graph" means the same thing at every caching layer.
+pub fn context_graph_id(context: &str) -> u64 {
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+    let mut h = DefaultHasher::new();
+    context.hash(&mut h);
+    h.finish()
+}
 
 /// How the tape's `spmm` node executes the aggregation — this is the
 /// "framework" axis of the paper's Figure 3.
@@ -45,6 +58,13 @@ pub struct SpmmOperand {
     pub coo: Option<Arc<Coo>>,
     /// Densified adjacency (Dense only).
     pub dense: Option<Arc<Dense>>,
+    /// Graph identity used to key per-graph workspace entries (cached NNZ
+    /// partitions); defaults to [`context_graph_id`] of `context`.
+    pub graph_id: u64,
+    /// Shared kernel workspace (partition cache + output-buffer pool).
+    /// `None` — the default for ad-hoc operands — means every SpMM call
+    /// allocates and partitions from scratch.
+    pub workspace: Option<Arc<KernelWorkspace>>,
 }
 
 impl SpmmOperand {
@@ -58,6 +78,8 @@ impl SpmmOperand {
             impl_kind: SpmmImpl::Kernel,
             coo: None,
             dense: None,
+            graph_id: context_graph_id(context),
+            workspace: None,
         }
     }
 
@@ -71,6 +93,8 @@ impl SpmmOperand {
             impl_kind: SpmmImpl::Kernel,
             coo: None,
             dense: None,
+            graph_id: context_graph_id(context),
+            workspace: None,
         }
     }
 
@@ -83,6 +107,8 @@ impl SpmmOperand {
             impl_kind: SpmmImpl::Kernel,
             coo: None,
             dense: None,
+            graph_id: context_graph_id(context),
+            workspace: None,
         }
     }
 
@@ -96,6 +122,8 @@ impl SpmmOperand {
             impl_kind: SpmmImpl::EdgeWise,
             coo: Some(Arc::new(coo)),
             dense: None,
+            graph_id: context_graph_id(context),
+            workspace: None,
         }
     }
 
@@ -109,7 +137,20 @@ impl SpmmOperand {
             impl_kind: SpmmImpl::Dense,
             coo: None,
             dense: Some(Arc::new(dense)),
+            graph_id: context_graph_id(context),
+            workspace: None,
         }
+    }
+
+    /// Attach a shared [`KernelWorkspace`] under an explicit graph id (the
+    /// trainer passes the same id it keys the
+    /// [`BackpropCache`](crate::cache::BackpropCache) with). All SpMM
+    /// calls issued through this operand then reuse cached partitions and
+    /// pooled output buffers.
+    pub fn with_workspace(mut self, workspace: Arc<KernelWorkspace>, graph_id: u64) -> Self {
+        self.workspace = Some(workspace);
+        self.graph_id = graph_id;
+        self
     }
 
     /// Get `Aᵀ` — from the cache, or recomputed (the §3.3 cost difference
@@ -230,5 +271,25 @@ mod tests {
         let a = toy();
         let op = SpmmOperand::densified(a.clone(), "toy");
         assert!(op.dense.as_ref().unwrap().allclose(&a.to_dense(), 0.0));
+    }
+
+    #[test]
+    fn graph_ids_are_stable_and_context_keyed() {
+        let a = toy();
+        let op1 = SpmmOperand::cached(a.clone(), "ctx-a");
+        let op2 = SpmmOperand::uncached(a.clone(), "ctx-a");
+        let op3 = SpmmOperand::cached(a.clone(), "ctx-b");
+        assert_eq!(op1.graph_id, op2.graph_id);
+        assert_ne!(op1.graph_id, op3.graph_id);
+        assert_eq!(op1.graph_id, context_graph_id("ctx-a"));
+    }
+
+    #[test]
+    fn with_workspace_attaches() {
+        use crate::kernels::KernelWorkspace;
+        let ws = Arc::new(KernelWorkspace::new());
+        let op = SpmmOperand::cached(toy(), "toy").with_workspace(Arc::clone(&ws), 42);
+        assert_eq!(op.graph_id, 42);
+        assert!(op.workspace.is_some());
     }
 }

@@ -30,7 +30,7 @@
 
 use crate::dense::Dense;
 use crate::error::{Error, Result};
-use crate::kernels::{spmm, Semiring};
+use crate::kernels::{spmm_with_workspace, KernelWorkspace, Semiring};
 
 use crate::autotune::KernelRegistry;
 
@@ -75,12 +75,22 @@ struct Node {
 pub struct Tape {
     nodes: Vec<Node>,
     threads: usize,
+    /// When set, node buffers are recycled into this workspace as the tape
+    /// drops, so the next epoch's tape allocates (almost) nothing.
+    workspace: Option<std::sync::Arc<KernelWorkspace>>,
 }
 
 impl Tape {
     /// New tape; `threads` is the budget for sparse kernels (1 = serial).
     pub fn new(threads: usize) -> Self {
-        Tape { nodes: Vec::new(), threads }
+        Tape { nodes: Vec::new(), threads, workspace: None }
+    }
+
+    /// New tape whose node buffers are returned to `workspace` on drop —
+    /// the trainer pairs this with operands carrying the same workspace so
+    /// each epoch's outputs become the next epoch's buffers.
+    pub fn with_workspace(threads: usize, workspace: std::sync::Arc<KernelWorkspace>) -> Self {
+        Tape { nodes: Vec::new(), threads, workspace: Some(workspace) }
     }
 
     fn push_with(&mut self, op: Op, value: std::sync::Arc<Dense>, needs_grad: bool) -> Var {
@@ -144,7 +154,8 @@ impl Tape {
             SpmmImpl::Kernel => {
                 let choice =
                     KernelRegistry::global().resolve(&operand.context, xv.cols, Semiring::Sum);
-                spmm(&operand.a, xv, Semiring::Sum, choice, self.threads)?
+                let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_id));
+                spmm_with_workspace(&operand.a, xv, Semiring::Sum, choice, self.threads, ws)?
             }
             SpmmImpl::EdgeWise => operand.edgewise_forward(xv)?,
             SpmmImpl::Dense => {
@@ -299,7 +310,13 @@ impl Tape {
                                 gout.cols,
                                 Semiring::Sum,
                             );
-                            spmm(&at, &gout, Semiring::Sum, choice, self.threads)?
+                            // Aᵀ is a different matrix than A: its partition
+                            // caches under the derived transpose id.
+                            let ws = operand
+                                .workspace
+                                .as_deref()
+                                .map(|w| (w, KernelWorkspace::transpose_id(operand.graph_id)));
+                            spmm_with_workspace(&at, &gout, Semiring::Sum, choice, self.threads, ws)?
                         }
                         SpmmImpl::EdgeWise => operand.edgewise_backward(&gout)?,
                         SpmmImpl::Dense => {
@@ -362,6 +379,25 @@ impl Tape {
             }
         }
         Ok(())
+    }
+}
+
+impl Drop for Tape {
+    fn drop(&mut self) {
+        let Some(ws) = self.workspace.take() else { return };
+        for node in self.nodes.drain(..) {
+            if let Some(g) = node.grad {
+                ws.recycle(g.data);
+            }
+            // values shared outside the tape (e.g. the trainer's feature
+            // matrix) keep their Arc and are skipped
+            if let Ok(value) = std::sync::Arc::try_unwrap(node.value) {
+                ws.recycle(value.data);
+            }
+            if let Op::SoftmaxXent { probs, .. } = node.op {
+                ws.recycle(probs.data);
+            }
+        }
     }
 }
 
@@ -511,6 +547,51 @@ mod tests {
         let gx = tape.grad(x).unwrap().clone();
         let gz = tape.grad(z).unwrap().clone();
         assert!((gx.get(0, 0) - 4.0 * gz.get(0, 0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn workspace_tape_recycles_and_stays_correct() {
+        use crate::kernels::KernelWorkspace;
+        use std::sync::Arc;
+
+        let a = graph(12, 65);
+        let mut rng = Rng::seed_from_u64(66);
+        let x0 = Dense::uniform(12, 6, 1.0, &mut rng);
+        let labels: Vec<usize> = (0..12).map(|i| i % 3).collect();
+        let ws = Arc::new(KernelWorkspace::new());
+        let operand =
+            SpmmOperand::cached(a.clone(), "ws-tape").with_workspace(Arc::clone(&ws), 77);
+
+        let run = |with_ws: bool| {
+            let mut tape = if with_ws {
+                Tape::with_workspace(2, Arc::clone(&ws))
+            } else {
+                Tape::new(2)
+            };
+            let op = if with_ws {
+                operand.clone()
+            } else {
+                SpmmOperand::cached(a.clone(), "ws-tape")
+            };
+            let x = tape.input(x0.clone());
+            let h = tape.spmm(&op, x).unwrap();
+            let loss = tape.softmax_xent(h, &labels, None).unwrap();
+            tape.backward(loss).unwrap();
+            tape.grad(x).unwrap().clone()
+        };
+
+        let plain = run(false);
+        // several "epochs" through the pooled path: identical gradients
+        for _ in 0..4 {
+            let pooled = run(true);
+            assert!(pooled.allclose(&plain, 0.0));
+        }
+        let stats = ws.stats();
+        // partitions: one for A, one for Aᵀ, the rest hits
+        assert_eq!(stats.partition_misses, 2);
+        assert!(stats.partition_hits >= 6, "{stats:?}");
+        // after the first epoch the tape's recycled buffers feed later ones
+        assert!(stats.buffer_reuses > 0, "{stats:?}");
     }
 
     #[test]

@@ -17,4 +17,4 @@ mod tuner;
 pub use probe::{detect_host, HardwareProfile, SimdClass};
 pub use registry::{KernelRegistry, RegistryEntry};
 pub use report::{render_ascii_chart, TuningPoint, TuningReport};
-pub use tuner::{TuneConfig, Tuner, TuningDb};
+pub use tuner::{DbEntry, TuneConfig, Tuner, TuningDb};

@@ -11,7 +11,7 @@
 //! would be on that CPU, while wall-clock comes from wherever we run.
 
 use crate::error::{Error, Result};
-use crate::kernels::GENERATED_KBS;
+use crate::kernels::{GENERATED_KBS, TILED_KTS};
 
 /// SIMD instruction class → f32 lanes per vector register.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -121,6 +121,22 @@ impl HardwareProfile {
         out
     }
 
+    /// The K-tiles the tuner searches for the cache-blocked trusted
+    /// variant ([`crate::kernels::KernelChoice::Tiled`]): tile widths
+    /// whose hot X-panel (≈64 resident X rows × kt × 4 B) fits this
+    /// machine's L2, and always at least the smallest tile. Unlike
+    /// [`HardwareProfile::candidate_kbs`] this is cache-geometry-driven,
+    /// not register-driven — tiling trades loop overhead for locality, not
+    /// for SIMD width.
+    pub fn candidate_kts(&self) -> Vec<usize> {
+        let cap = self.l2_bytes / (64 * std::mem::size_of::<f32>());
+        let mut out: Vec<usize> = TILED_KTS.iter().copied().filter(|&kt| kt <= cap).collect();
+        if out.is_empty() {
+            out.push(TILED_KTS[0]);
+        }
+        out
+    }
+
     /// Predicted sweet-spot K-block for this machine (peak of the bell
     /// curve): the largest candidate within the register budget.
     pub fn predicted_best_kb(&self) -> usize {
@@ -198,6 +214,10 @@ mod tests {
         // AVX2, 16 regs → budget 64; plus one spilling candidate (128)
         assert_eq!(amd.candidate_kbs(), vec![8, 16, 32, 64, 128]);
         assert_eq!(amd.predicted_best_kb(), 64);
+
+        // both modelled L2 sizes admit the full tiled family
+        assert_eq!(intel.candidate_kts(), TILED_KTS.to_vec());
+        assert_eq!(amd.candidate_kts(), TILED_KTS.to_vec());
     }
 
     #[test]

@@ -12,11 +12,16 @@ use crate::util::json::Json;
 pub struct TuningPoint {
     /// Embedding size K that was benchmarked.
     pub k: usize,
-    /// K-block of the best generated kernel at this K.
+    /// K-block of the best *generated* kernel at this K (0 when another
+    /// family won; kept for backward-compatible JSON consumers).
     pub best_kb: usize,
+    /// Label of the overall winning kernel at this K — "trusted",
+    /// "generated(kb=…)" or "tiled(kt=…)".
+    pub best_label: String,
     /// Trusted-kernel time (seconds, median of reps).
     pub trusted_secs: f64,
-    /// Best generated-kernel time (seconds, median of reps).
+    /// Best specialised-kernel time (generated or tiled; seconds, median
+    /// of reps).
     pub generated_secs: f64,
 }
 
@@ -71,6 +76,7 @@ impl TuningReport {
                             Json::obj(vec![
                                 ("k", Json::num(p.k as f64)),
                                 ("best_kb", Json::num(p.best_kb as f64)),
+                                ("best_label", Json::str(&p.best_label)),
                                 ("trusted_secs", Json::num(p.trusted_secs)),
                                 ("generated_secs", Json::num(p.generated_secs)),
                                 ("speedup", Json::num(p.speedup())),
@@ -96,9 +102,9 @@ pub fn render_ascii_chart(report: &TuningReport) -> String {
         let sp = p.speedup();
         let bars = ((sp / maxsp) * width as f64).round() as usize;
         out.push_str(&format!(
-            "  K={:<5} kb={:<4} {:>6.2}x |{}\n",
+            "  K={:<5} {:<18} {:>6.2}x |{}\n",
             p.k,
-            p.best_kb,
+            p.best_label,
             sp,
             "#".repeat(bars)
         ));
@@ -118,9 +124,27 @@ mod tests {
             dataset: "reddit".into(),
             profile: "intel-skylake".into(),
             points: vec![
-                TuningPoint { k: 16, best_kb: 16, trusted_secs: 1.0, generated_secs: 0.8 },
-                TuningPoint { k: 32, best_kb: 32, trusted_secs: 1.0, generated_secs: 0.5 },
-                TuningPoint { k: 64, best_kb: 32, trusted_secs: 1.0, generated_secs: 0.7 },
+                TuningPoint {
+                    k: 16,
+                    best_kb: 16,
+                    best_label: "generated(kb=16)".into(),
+                    trusted_secs: 1.0,
+                    generated_secs: 0.8,
+                },
+                TuningPoint {
+                    k: 32,
+                    best_kb: 32,
+                    best_label: "generated(kb=32)".into(),
+                    trusted_secs: 1.0,
+                    generated_secs: 0.5,
+                },
+                TuningPoint {
+                    k: 64,
+                    best_kb: 0,
+                    best_label: "tiled(kt=64)".into(),
+                    trusted_secs: 1.0,
+                    generated_secs: 0.7,
+                },
             ],
         }
     }
@@ -134,16 +158,23 @@ mod tests {
 
     #[test]
     fn speedup_handles_zero_time() {
-        let p = TuningPoint { k: 8, best_kb: 8, trusted_secs: 1.0, generated_secs: 0.0 };
+        let p = TuningPoint {
+            k: 8,
+            best_kb: 8,
+            best_label: "generated(kb=8)".into(),
+            trusted_secs: 1.0,
+            generated_secs: 0.0,
+        };
         assert_eq!(p.speedup(), 1.0);
     }
 
     #[test]
-    fn chart_contains_every_k() {
+    fn chart_contains_every_k_and_labels() {
         let r = sample();
         let chart = render_ascii_chart(&r);
         for p in &r.points {
             assert!(chart.contains(&format!("K={:<5}", p.k)));
+            assert!(chart.contains(&p.best_label), "chart missing {}", p.best_label);
         }
         assert!(chart.contains("ideal K = 32"));
     }

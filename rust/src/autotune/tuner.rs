@@ -52,13 +52,37 @@ pub struct TuningDb {
     pub entries: HashMap<String, DbEntry>,
 }
 
-/// One persisted tuning decision.
+/// One persisted tuning decision. At most one of `kb`/`kt` is set; both
+/// `None` means the trusted kernel won.
 #[derive(Clone, Debug)]
 pub struct DbEntry {
-    /// Winning kernel ("trusted" or a generated kb).
+    /// Winning generated K-block, if the register-blocked family won.
     pub kb: Option<usize>,
+    /// Winning tile width, if the cache-blocked (tiled) family won.
+    pub kt: Option<usize>,
     /// Measured speedup over trusted.
     pub speedup: f64,
+}
+
+impl DbEntry {
+    /// The kernel choice this entry encodes.
+    pub fn choice(&self) -> KernelChoice {
+        match (self.kb, self.kt) {
+            (Some(kb), _) => KernelChoice::Generated { kb },
+            (None, Some(kt)) => KernelChoice::Tiled { kt },
+            (None, None) => KernelChoice::Trusted,
+        }
+    }
+
+    /// Encode a tuning decision.
+    pub fn from_choice(choice: KernelChoice, speedup: f64) -> DbEntry {
+        let (kb, kt) = match choice {
+            KernelChoice::Generated { kb } => (Some(kb), None),
+            KernelChoice::Tiled { kt } => (None, Some(kt)),
+            KernelChoice::Trusted => (None, None),
+        };
+        DbEntry { kb, kt, speedup }
+    }
 }
 
 impl TuningDb {
@@ -80,8 +104,13 @@ impl TuningDb {
                     Some(Json::Null) | None => None,
                     Some(v) => Some(v.as_usize()?),
                 };
+                // `kt` is absent in pre-tiled DBs; treat missing as None
+                let kt = match val.get_opt("kt") {
+                    Some(Json::Null) | None => None,
+                    Some(v) => Some(v.as_usize()?),
+                };
                 let speedup = val.get("speedup")?.as_f64()?;
-                entries.insert(key.clone(), DbEntry { kb, speedup });
+                entries.insert(key.clone(), DbEntry { kb, kt, speedup });
             }
         }
         Ok(TuningDb { entries })
@@ -98,9 +127,13 @@ impl TuningDb {
                 Some(kb) => Json::num(kb as f64),
                 None => Json::Null,
             };
+            let kt = match e.kt {
+                Some(kt) => Json::num(kt as f64),
+                None => Json::Null,
+            };
             map.insert(
                 key.clone(),
-                Json::obj(vec![("kb", kb), ("speedup", Json::num(e.speedup))]),
+                Json::obj(vec![("kb", kb), ("kt", kt), ("speedup", Json::num(e.speedup))]),
             );
         }
         let doc = Json::obj(vec![("entries", Json::Obj(map))]);
@@ -154,6 +187,27 @@ impl Tuner {
         Ok(times[times.len() / 2])
     }
 
+    /// The specialised candidates searched for embedding size `k` on this
+    /// profile: every applicable register-blocked (generated) kernel plus
+    /// every applicable cache-blocked (tiled) kernel. The trusted kernel is
+    /// the implicit baseline, always measured alongside.
+    pub fn candidates(&self, k: usize) -> Vec<KernelChoice> {
+        let mut out = Vec::new();
+        for kb in self.profile.candidate_kbs() {
+            let choice = KernelChoice::Generated { kb };
+            if choice.applicable(k, Semiring::Sum) {
+                out.push(choice);
+            }
+        }
+        for kt in self.profile.candidate_kts() {
+            let choice = KernelChoice::Tiled { kt };
+            if choice.applicable(k, Semiring::Sum) {
+                out.push(choice);
+            }
+        }
+        out
+    }
+
     /// Run the full tuning sweep for one dataset adjacency — the Figure 2
     /// curve. Feature matrices are synthesised per K (contents don't affect
     /// kernel timing, only shape does).
@@ -162,20 +216,26 @@ impl Tuner {
         for &k in &self.config.ks {
             let x = deterministic_features(a.cols, k);
             let trusted_secs = self.time_choice(a, &x, KernelChoice::Trusted)?;
-            // best applicable generated kernel for this K on this profile
-            let mut best: Option<(usize, f64)> = None;
-            for kb in self.profile.candidate_kbs() {
-                let choice = KernelChoice::Generated { kb };
-                if !choice.applicable(k, Semiring::Sum) {
-                    continue;
-                }
+            // best specialised kernel (generated or tiled) at this K
+            let mut best: Option<(KernelChoice, f64)> = None;
+            for choice in self.candidates(k) {
                 let t = self.time_choice(a, &x, choice)?;
                 if best.map(|(_, bt)| t < bt).unwrap_or(true) {
-                    best = Some((kb, t));
+                    best = Some((choice, t));
                 }
             }
-            let (best_kb, generated_secs) = best.unwrap_or((0, trusted_secs));
-            points.push(TuningPoint { k, best_kb, trusted_secs, generated_secs });
+            let (best_choice, generated_secs) =
+                best.unwrap_or((KernelChoice::Trusted, trusted_secs));
+            let best_kb = match best_choice {
+                KernelChoice::Generated { kb } => kb,
+                _ => 0,
+            };
+            let best_label = if generated_secs < trusted_secs {
+                best_choice.label()
+            } else {
+                KernelChoice::Trusted.label()
+            };
+            points.push(TuningPoint { k, best_kb, best_label, trusted_secs, generated_secs });
         }
         Ok(TuningReport { dataset: dataset.to_string(), profile: self.profile.name.clone(), points })
     }
@@ -191,10 +251,7 @@ impl Tuner {
         db: &mut TuningDb,
     ) -> Result<KernelChoice> {
         if let Some(e) = db.get(dataset, &self.profile.name, k) {
-            let choice = match e.kb {
-                Some(kb) => KernelChoice::Generated { kb },
-                None => KernelChoice::Trusted,
-            };
+            let choice = e.choice();
             registry.bind(dataset, k, Semiring::Sum, RegistryEntry {
                 choice,
                 speedup: e.speedup,
@@ -206,11 +263,7 @@ impl Tuner {
         let trusted = self.time_choice(a, &x, KernelChoice::Trusted)?;
         let mut best_choice = KernelChoice::Trusted;
         let mut best_time = trusted;
-        for kb in self.profile.candidate_kbs() {
-            let choice = KernelChoice::Generated { kb };
-            if !choice.applicable(k, Semiring::Sum) {
-                continue;
-            }
+        for choice in self.candidates(k) {
             let t = self.time_choice(a, &x, choice)?;
             if t < best_time {
                 best_time = t;
@@ -219,13 +272,7 @@ impl Tuner {
         }
         let speedup = if best_time > 0.0 { trusted / best_time } else { 1.0 };
         registry.bind(dataset, k, Semiring::Sum, RegistryEntry { choice: best_choice, speedup });
-        db.put(dataset, &self.profile.name, k, DbEntry {
-            kb: match best_choice {
-                KernelChoice::Generated { kb } => Some(kb),
-                KernelChoice::Trusted => None,
-            },
-            speedup,
-        });
+        db.put(dataset, &self.profile.name, k, DbEntry::from_choice(best_choice, speedup));
         Ok(best_choice)
     }
 }
@@ -290,10 +337,44 @@ mod tests {
         let registry = KernelRegistry::new();
         registry.set_patched(true);
         let mut db = TuningDb::default();
-        db.put("toy", "amd-epyc", 32, DbEntry { kb: Some(8), speedup: 3.0 });
+        db.put("toy", "amd-epyc", 32, DbEntry { kb: Some(8), kt: None, speedup: 3.0 });
         let choice = tuner.tune("toy", &a, 32, &registry, &mut db).unwrap();
         assert_eq!(choice, KernelChoice::Generated { kb: 8 });
         assert_eq!(registry.resolve("toy", 32, Semiring::Sum), choice);
+        // a persisted tiled decision resolves the same way
+        db.put("toy", "amd-epyc", 64, DbEntry { kb: None, kt: Some(64), speedup: 1.4 });
+        let choice = tuner.tune("toy", &a, 64, &registry, &mut db).unwrap();
+        assert_eq!(choice, KernelChoice::Tiled { kt: 64 });
+        assert_eq!(registry.resolve("toy", 64, Semiring::Sum), choice);
+    }
+
+    #[test]
+    fn search_space_includes_all_three_families() {
+        let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+        let candidates = tuner.candidates(256);
+        assert!(
+            candidates.iter().any(|c| matches!(c, KernelChoice::Generated { .. })),
+            "{candidates:?}"
+        );
+        assert!(
+            candidates.iter().any(|c| matches!(c, KernelChoice::Tiled { .. })),
+            "{candidates:?}"
+        );
+        // K not a multiple of any block: generated drops out, tiled stays
+        let candidates = tuner.candidates(17);
+        assert!(!candidates.iter().any(|c| matches!(c, KernelChoice::Generated { .. })));
+        assert!(candidates.iter().any(|c| matches!(c, KernelChoice::Tiled { .. })));
+    }
+
+    #[test]
+    fn db_entry_choice_roundtrip() {
+        for choice in [
+            KernelChoice::Trusted,
+            KernelChoice::Generated { kb: 16 },
+            KernelChoice::Tiled { kt: 64 },
+        ] {
+            assert_eq!(DbEntry::from_choice(choice, 1.0).choice(), choice);
+        }
     }
 
     #[test]
@@ -301,12 +382,15 @@ mod tests {
         let dir = crate::util::tmp::TempDir::new().unwrap();
         let path = dir.path().join("tune.json");
         let mut db = TuningDb::default();
-        db.put("d", "p", 64, DbEntry { kb: None, speedup: 1.0 });
-        db.put("d", "p", 32, DbEntry { kb: Some(16), speedup: 2.5 });
+        db.put("d", "p", 64, DbEntry { kb: None, kt: None, speedup: 1.0 });
+        db.put("d", "p", 32, DbEntry { kb: Some(16), kt: None, speedup: 2.5 });
+        db.put("d", "p", 512, DbEntry { kb: None, kt: Some(256), speedup: 1.8 });
         db.save(&path).unwrap();
         let back = TuningDb::load(&path).unwrap();
         assert!(back.get("d", "p", 64).unwrap().kb.is_none());
         assert_eq!(back.get("d", "p", 32).unwrap().kb, Some(16));
+        assert_eq!(back.get("d", "p", 512).unwrap().kt, Some(256));
+        assert_eq!(back.get("d", "p", 512).unwrap().choice(), KernelChoice::Tiled { kt: 256 });
         // missing file is fine
         let empty = TuningDb::load(&dir.path().join("missing.json")).unwrap();
         assert!(empty.entries.is_empty());

@@ -16,7 +16,7 @@ use crate::error::{Error, Result};
 use crate::sparse::Csr;
 use crate::util::parallel;
 
-use super::nnz_balanced_partition;
+use super::{nnz_balanced_partition, split_rows_mut};
 
 /// Per-edge scalar function applied before aggregation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -93,22 +93,19 @@ pub fn fusedmm(
     }
 
     let ranges = nnz_balanced_partition(a, threads);
-    let mut slices: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(ranges.len());
-    let mut rest: &mut [f32] = &mut y.data;
-    for r in &ranges {
-        let (head, tail) = rest.split_at_mut((r.end - r.start) * k);
-        slices.push((r.start, r.end, head));
-        rest = tail;
-    }
     parallel::join_all(
-        slices
+        split_rows_mut(&mut y.data, &ranges, k)
             .into_iter()
-            .map(|(start, end, out)| move || fused_rows(a, x, u, v, op, start, end, out))
+            .map(|(range, out)| move || fused_rows(a, x, u, v, op, range.start, range.end, out))
             .collect(),
     );
     Ok(y)
 }
 
+/// Row-range body. The edge-op kind is resolved **once** out here, not per
+/// non-zero: `EdgeOp::Copy` (plain SpMM) takes a specialised loop with no
+/// U/V lookups, no dot product, and no per-edge match; the dot-based ops
+/// unwrap U/V a single time and run the sampling loop.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn fused_rows(
@@ -122,17 +119,32 @@ fn fused_rows(
     out: &mut [f32],
 ) {
     let k = x.cols;
+    if !op.needs_uv() {
+        // Copy fast path: g = A[r,c]; skip the dot machinery entirely.
+        for r in start..end {
+            let orow = &mut out[(r - start) * k..(r - start + 1) * k];
+            for (&c, &aval) in a.row_cols(r).iter().zip(a.row_vals(r)) {
+                if aval == 0.0 {
+                    continue;
+                }
+                let xrow = x.row(c);
+                for (o, &xv) in orow.iter_mut().zip(xrow.iter()) {
+                    *o += aval * xv;
+                }
+            }
+        }
+        return;
+    }
+
+    // caller validated U/V presence for dot-based ops
+    let u = u.expect("fusedmm: edge op needs U");
+    let v = v.expect("fusedmm: edge op needs V");
     for r in start..end {
         let orow = &mut out[(r - start) * k..(r - start + 1) * k];
-        let urow = u.map(|u| u.row(r));
+        let urow = u.row(r);
         for (&c, &aval) in a.row_cols(r).iter().zip(a.row_vals(r)) {
-            let dot = match (op.needs_uv(), urow, v) {
-                (true, Some(ur), Some(v)) => {
-                    let vr = v.row(c);
-                    ur.iter().zip(vr.iter()).map(|(x, y)| x * y).sum()
-                }
-                _ => 0.0,
-            };
+            let vrow = v.row(c);
+            let dot: f32 = urow.iter().zip(vrow.iter()).map(|(x, y)| x * y).sum();
             let g = op.apply(aval, dot);
             if g == 0.0 {
                 continue;

@@ -21,7 +21,7 @@ use crate::error::{Error, Result};
 use crate::sparse::Csr;
 use crate::util::parallel;
 
-use super::nnz_balanced_partition;
+use super::{nnz_balanced_partition, split_rows_mut, RowRange};
 
 /// K-block widths with generated kernels. 4/8 suit 128/256-bit SIMD
 /// (NEON/AVX2, f32×4/×8); 16 suits AVX-512; 32/64/128 probe the
@@ -87,8 +87,7 @@ fn dispatch_blocked(
 pub fn spmm_generated(a: &Csr, x: &Dense, kb: usize) -> Result<Dense> {
     check(a, x, kb)?;
     let mut y = Dense::zeros(a.rows, x.cols);
-    let ok = dispatch_blocked(kb, a, x, 0, a.rows, &mut y.data);
-    debug_assert!(ok);
+    spmm_generated_serial_into(a, x, kb, &mut y);
     Ok(y)
 }
 
@@ -98,29 +97,37 @@ pub fn spmm_generated_parallel(a: &Csr, x: &Dense, kb: usize, threads: usize) ->
     check(a, x, kb)?;
     let threads = if threads == 0 { parallel::current_num_threads() } else { threads };
     let ranges = nnz_balanced_partition(a, threads);
-    let k = x.cols;
-    let mut y = Dense::zeros(a.rows, k);
+    let mut y = Dense::zeros(a.rows, x.cols);
+    spmm_generated_partitioned_into(a, x, kb, &ranges, &mut y);
+    Ok(y)
+}
 
-    let mut slices: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(ranges.len());
-    let mut rest: &mut [f32] = &mut y.data;
-    for r in &ranges {
-        let (head, tail) = rest.split_at_mut((r.end - r.start) * k);
-        slices.push((r.start, r.end, head));
-        rest = tail;
-    }
+/// Serial body writing into a pre-sized output (callers validate `kb`).
+pub(crate) fn spmm_generated_serial_into(a: &Csr, x: &Dense, kb: usize, y: &mut Dense) {
+    let ok = dispatch_blocked(kb, a, x, 0, a.rows, &mut y.data);
+    debug_assert!(ok);
+}
 
+/// Parallel body over caller-provided (possibly cached) row ranges.
+pub(crate) fn spmm_generated_partitioned_into(
+    a: &Csr,
+    x: &Dense,
+    kb: usize,
+    ranges: &[RowRange],
+    y: &mut Dense,
+) {
+    let k = y.cols;
     parallel::join_all(
-        slices
+        split_rows_mut(&mut y.data, ranges, k)
             .into_iter()
-            .map(|(start, end, out)| {
+            .map(|(range, out)| {
                 move || {
-                    let ok = dispatch_blocked(kb, a, x, start, end, out);
+                    let ok = dispatch_blocked(kb, a, x, range.start, range.end, out);
                     debug_assert!(ok);
                 }
             })
             .collect(),
     );
-    Ok(y)
 }
 
 fn check(a: &Csr, x: &Dense, kb: usize) -> Result<()> {

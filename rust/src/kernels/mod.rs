@@ -1,17 +1,24 @@
 //! Sparse kernels — the paper's §3.2 contribution.
 //!
-//! Two kernel families, mirroring iSpLib's code generator:
+//! Three kernel families, mirroring (and extending) iSpLib's code
+//! generator:
 //!
 //! * **trusted** ([`trusted`]) — a generic SpMM that handles any embedding
 //!   size `K` and any [`Semiring`]. "Still efficient with balanced
 //!   multithreading, but does not use loop unrolling" (paper §3.2).
 //! * **generated** ([`generated`]) — register-blocked kernels monomorphised
 //!   over a compile-time K-block `KB` (the analogue of iSpLib's
-//!   VLEN-multiple generated C kernels). The auto-tuner picks between the
-//!   two families per `(dataset, K, machine)`.
+//!   VLEN-multiple generated C kernels).
+//! * **tiled** ([`tiled`]) — the trusted kernel cache-blocked over the K
+//!   dimension ([`TILED_KTS`] tile widths), for embeddings too wide for
+//!   the row strip to stay L1/L2-resident.
+//!
+//! The auto-tuner picks between the families per `(dataset, K, machine)`.
 //!
 //! Plus the two other primitives the paper names: [`sddmm`] (sampled
-//! dense-dense matmul) and [`fusedmm`] (the FusedMM SDDMM+SpMM fusion [8]).
+//! dense-dense matmul) and [`fusedmm`] (the FusedMM SDDMM+SpMM fusion [8]),
+//! and the [`KernelWorkspace`] that amortises per-call fixed costs
+//! (partitioning, output allocation) across a training run.
 //!
 //! All kernels are deterministic: parallelism partitions output rows, never
 //! reduction order within a row.
@@ -23,16 +30,20 @@ mod partition;
 mod sddmm;
 mod semiring;
 mod spmm_dispatch;
+mod tiled;
 mod trusted;
+mod workspace;
 
 pub use dense_ref::spmm_dense_ref;
 pub use fusedmm::{fusedmm, EdgeOp};
 pub use generated::{spmm_generated, spmm_generated_parallel, GENERATED_KBS};
-pub use partition::{nnz_balanced_partition, RowRange};
+pub use partition::{nnz_balanced_partition, split_rows_mut, RowRange};
 pub use sddmm::sddmm;
 pub use semiring::Semiring;
-pub use spmm_dispatch::{spmm, KernelChoice};
+pub use spmm_dispatch::{spmm, spmm_with_workspace, KernelChoice};
+pub use tiled::{spmm_tiled, spmm_tiled_parallel, TILED_KTS};
 pub use trusted::{spmm_trusted, spmm_trusted_parallel};
+pub use workspace::{KernelWorkspace, WorkspaceStats};
 
 #[cfg(test)]
 mod proptests;

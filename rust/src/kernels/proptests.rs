@@ -8,7 +8,7 @@
 use crate::dense::Dense;
 use crate::kernels::{
     fusedmm, nnz_balanced_partition, sddmm, spmm, spmm_dense_ref, EdgeOp, KernelChoice, Semiring,
-    GENERATED_KBS,
+    GENERATED_KBS, TILED_KTS,
 };
 use crate::sparse::{Coo, Csr};
 use crate::util::check::forall;
@@ -59,6 +59,38 @@ fn prop_generated_matches_trusted() {
         let want = spmm(&a, &x, Semiring::Sum, KernelChoice::Trusted, 1).unwrap();
         let got = spmm(&a, &x, Semiring::Sum, KernelChoice::Generated { kb }, 1).unwrap();
         assert!(got.allclose(&want, 1e-3), "kb={kb} k={k}");
+    });
+}
+
+#[test]
+fn prop_tiled_matches_trusted_all_semirings() {
+    // The tiled family must be routing-invariant across *every* semiring
+    // and arbitrary (non-multiple) K — and in fact bitwise equal to
+    // trusted, since only the element traversal order changes.
+    forall("tiled == trusted, bitwise, any semiring/K", 48, |rng| {
+        let a = arb_csr(rng, 22, 18);
+        let k = 1 + rng.gen_range(70);
+        let x = arb_dense(rng, 18, k);
+        let op = arb_semiring(rng);
+        let kt = TILED_KTS[rng.gen_range(TILED_KTS.len())];
+        let threads = 1 + rng.gen_range(4);
+        let want = spmm(&a, &x, op, KernelChoice::Trusted, threads).unwrap();
+        let got = spmm(&a, &x, op, KernelChoice::Tiled { kt }, threads).unwrap();
+        assert_eq!(got.data, want.data, "kt={kt} k={k} op={op:?} threads={threads}");
+    });
+}
+
+#[test]
+fn prop_tiled_matches_reference() {
+    forall("tiled == dense reference", 48, |rng| {
+        let a = arb_csr(rng, 20, 20);
+        let k = 1 + rng.gen_range(40);
+        let x = arb_dense(rng, 20, k);
+        let op = arb_semiring(rng);
+        let kt = TILED_KTS[rng.gen_range(TILED_KTS.len())];
+        let got = spmm(&a, &x, op, KernelChoice::Tiled { kt }, 1).unwrap();
+        let want = spmm_dense_ref(&a, &x, op).unwrap();
+        assert!(got.allclose(&want, 1e-3), "kt={kt} k={k} op={op:?}");
     });
 }
 

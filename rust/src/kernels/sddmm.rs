@@ -13,6 +13,7 @@ use crate::sparse::Csr;
 use crate::util::parallel;
 
 use super::nnz_balanced_partition;
+use super::partition::split_by_lens;
 
 /// Serial/parallel SDDMM: returns a CSR with `A`'s pattern and values
 /// `A[r,c] * dot(U[r], V[c])`. `threads == 1` runs serial; `0` uses the
@@ -46,23 +47,20 @@ pub fn sddmm(a: &Csr, u: &Dense, v: &Dense, threads: usize) -> Result<Csr> {
     }
 
     let ranges = nnz_balanced_partition(a, threads);
-    // Slice the value buffer along nnz boundaries of the row ranges.
-    let mut slices: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(ranges.len());
-    let mut rest: &mut [f32] = &mut out.values;
-    let mut consumed = 0usize;
-    for r in &ranges {
-        let len = a.row_ptr[r.end] - a.row_ptr[r.start];
-        let (head, tail) = rest.split_at_mut(len);
-        slices.push((r.start, r.end, head));
-        rest = tail;
-        consumed += len;
-    }
-    debug_assert_eq!(consumed, a.nnz());
-
+    // Slice the value buffer along nnz boundaries of the row ranges (the
+    // shared splitter, fed nnz lengths instead of row×K lengths).
+    let chunks = split_by_lens(
+        &mut out.values,
+        ranges.iter().map(|r| a.row_ptr[r.end] - a.row_ptr[r.start]),
+    );
     parallel::join_all(
-        slices
-            .into_iter()
-            .map(|(start, end, vals)| move || sddmm_rows_into(a, u, v, start, end, vals))
+        ranges
+            .iter()
+            .zip(chunks)
+            .map(|(range, vals)| {
+                let (start, end) = (range.start, range.end);
+                move || sddmm_rows_into(a, u, v, start, end, vals)
+            })
             .collect(),
     );
     Ok(out)

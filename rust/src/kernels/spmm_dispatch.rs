@@ -1,18 +1,22 @@
-//! The public SpMM entry point: routes between the trusted and generated
-//! kernel families.
+//! The public SpMM entry point: routes between the trusted, generated and
+//! tiled kernel families.
 //!
 //! This is the seam the auto-tuner (and `patch()`/`unpatch()`) controls: a
 //! [`KernelChoice`] says *which* kernel handles a call; numerics never
-//! depend on the choice (a property-tested invariant).
+//! depend on the choice (a property-tested invariant). The workspace-aware
+//! variant ([`spmm_with_workspace`]) additionally reuses cached NNZ
+//! partitions and pooled output buffers, turning per-call fixed costs into
+//! per-graph ones.
 
 use crate::dense::Dense;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::sparse::Csr;
+use crate::util::parallel;
 
-use super::{
-    spmm_generated, spmm_generated_parallel, spmm_trusted, spmm_trusted_parallel, Semiring,
-    GENERATED_KBS,
-};
+use super::generated::{spmm_generated_partitioned_into, spmm_generated_serial_into};
+use super::tiled::{spmm_tiled_partitioned_into, spmm_tiled_serial_into};
+use super::trusted::{spmm_trusted_partitioned_into, spmm_trusted_serial_into};
+use super::{nnz_balanced_partition, KernelWorkspace, Semiring, GENERATED_KBS, TILED_KTS};
 
 /// Which kernel implementation to route an SpMM call to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -25,18 +29,30 @@ pub enum KernelChoice {
         /// K-block width (one of [`GENERATED_KBS`]).
         kb: usize,
     },
+    /// Cache-blocked trusted kernel tiling the K dimension. Any semiring;
+    /// applicable when `K > kt` (multiple tiles), i.e. when K is large
+    /// enough that a row's output strip plus its gathered X rows fall out
+    /// of L1/L2.
+    Tiled {
+        /// Column-tile width (one of [`TILED_KTS`]).
+        kt: usize,
+    },
 }
 
 impl KernelChoice {
     /// Can this choice execute a call with embedding size `k` and semiring
     /// `op`? (The tuner consults this before routing; the paper falls back
-    /// to the trusted kernel whenever the generated one doesn't apply.)
+    /// to the trusted kernel whenever a specialised one doesn't apply.)
     pub fn applicable(&self, k: usize, op: Semiring) -> bool {
         match *self {
             KernelChoice::Trusted => true,
             KernelChoice::Generated { kb } => {
                 op == Semiring::Sum && GENERATED_KBS.contains(&kb) && k % kb == 0 && k > 0
             }
+            // Tiling only does anything when there is more than one tile;
+            // at k ≤ kt it degenerates to the trusted kernel, so routing
+            // falls back rather than letting the tuner time duplicates.
+            KernelChoice::Tiled { kt } => TILED_KTS.contains(&kt) && k > kt,
         }
     }
 
@@ -45,6 +61,7 @@ impl KernelChoice {
         match *self {
             KernelChoice::Trusted => "trusted".to_string(),
             KernelChoice::Generated { kb } => format!("generated(kb={kb})"),
+            KernelChoice::Tiled { kt } => format!("tiled(kt={kt})"),
         }
     }
 }
@@ -60,23 +77,60 @@ pub fn spmm(
     choice: KernelChoice,
     threads: usize,
 ) -> Result<Dense> {
-    let choice = if choice.applicable(x.cols, op) { choice } else { KernelChoice::Trusted };
-    match choice {
-        KernelChoice::Trusted => {
-            if threads <= 1 {
-                spmm_trusted(a, x, op)
-            } else {
-                spmm_trusted_parallel(a, x, op, threads)
-            }
-        }
-        KernelChoice::Generated { kb } => {
-            if threads <= 1 {
-                spmm_generated(a, x, kb)
-            } else {
-                spmm_generated_parallel(a, x, kb, threads)
-            }
-        }
+    spmm_with_workspace(a, x, op, choice, threads, None)
+}
+
+/// [`spmm`] with a shared [`KernelWorkspace`]: `ws` is the workspace plus
+/// the caller's graph identity for `a` (the same id keying the
+/// [`BackpropCache`](crate::cache::BackpropCache)). With a workspace, the
+/// NNZ-balanced partition is served from the per-graph cache and the
+/// output buffer comes from the recycle pool instead of a fresh
+/// allocation.
+pub fn spmm_with_workspace(
+    a: &Csr,
+    x: &Dense,
+    op: Semiring,
+    choice: KernelChoice,
+    threads: usize,
+    ws: Option<(&KernelWorkspace, u64)>,
+) -> Result<Dense> {
+    if a.cols != x.rows {
+        return Err(Error::ShapeMismatch(format!(
+            "spmm: A {}x{} @ X {}x{}",
+            a.rows, a.cols, x.rows, x.cols
+        )));
     }
+    let choice = if choice.applicable(x.cols, op) { choice } else { KernelChoice::Trusted };
+    let threads = if threads == 0 { parallel::current_num_threads() } else { threads };
+    let k = x.cols;
+
+    // Output: pooled (pre-zeroed) when a workspace is supplied.
+    let mut y = match ws {
+        Some((w, _)) => Dense { rows: a.rows, cols: k, data: w.take_buffer(a.rows * k) },
+        None => Dense::zeros(a.rows, k),
+    };
+
+    if threads <= 1 {
+        match choice {
+            KernelChoice::Trusted => spmm_trusted_serial_into(a, x, op, &mut y),
+            KernelChoice::Generated { kb } => spmm_generated_serial_into(a, x, kb, &mut y),
+            KernelChoice::Tiled { kt } => spmm_tiled_serial_into(a, x, op, kt, &mut y),
+        }
+        return Ok(y);
+    }
+
+    // Parallel: the partition is the other per-call fixed cost the
+    // workspace amortises.
+    let ranges = match ws {
+        Some((w, graph_id)) => w.partition(graph_id, a, threads),
+        None => std::sync::Arc::new(nnz_balanced_partition(a, threads)),
+    };
+    match choice {
+        KernelChoice::Trusted => spmm_trusted_partitioned_into(a, x, op, &ranges, &mut y),
+        KernelChoice::Generated { kb } => spmm_generated_partitioned_into(a, x, kb, &ranges, &mut y),
+        KernelChoice::Tiled { kt } => spmm_tiled_partitioned_into(a, x, op, kt, &ranges, &mut y),
+    }
+    Ok(y)
 }
 
 #[cfg(test)]
@@ -106,6 +160,15 @@ mod tests {
         assert!(!g8.applicable(64, Semiring::Mean)); // only sum
         assert!(!KernelChoice::Generated { kb: 5 }.applicable(10, Semiring::Sum)); // no kernel
         assert!(!g8.applicable(0, Semiring::Sum));
+        // tiled: any semiring, known tile widths, and only when K is wide
+        // enough for more than one tile
+        let t64 = KernelChoice::Tiled { kt: 64 };
+        assert!(t64.applicable(1024, Semiring::Sum));
+        assert!(t64.applicable(65, Semiring::Max));
+        assert!(!t64.applicable(64, Semiring::Sum)); // single tile = trusted
+        assert!(!t64.applicable(17, Semiring::Max));
+        assert!(!t64.applicable(0, Semiring::Sum));
+        assert!(!KernelChoice::Tiled { kt: 7 }.applicable(64, Semiring::Sum));
     }
 
     #[test]
@@ -115,6 +178,9 @@ mod tests {
         let x = Dense::uniform(30, 17, 1.0, &mut rng); // 17 not a multiple of 8
         let want = spmm_dense_ref(&a, &x, Semiring::Sum).unwrap();
         let got = spmm(&a, &x, Semiring::Sum, KernelChoice::Generated { kb: 8 }, 1).unwrap();
+        assert!(got.allclose(&want, 1e-4));
+        // unknown tile width also falls back to trusted
+        let got = spmm(&a, &x, Semiring::Sum, KernelChoice::Tiled { kt: 3 }, 1).unwrap();
         assert!(got.allclose(&want, 1e-4));
     }
 
@@ -129,6 +195,9 @@ mod tests {
             KernelChoice::Generated { kb: 8 },
             KernelChoice::Generated { kb: 16 },
             KernelChoice::Generated { kb: 32 },
+            KernelChoice::Tiled { kt: 16 },
+            KernelChoice::Tiled { kt: 64 },
+            KernelChoice::Tiled { kt: 256 },
         ] {
             for threads in [1, 3] {
                 let got = spmm(&a, &x, Semiring::Sum, choice, threads).unwrap();
@@ -141,8 +210,51 @@ mod tests {
     }
 
     #[test]
+    fn workspace_path_matches_plain_and_caches() {
+        let mut rng = Rng::seed_from_u64(45);
+        let a = graph(60, 46);
+        let x = Dense::uniform(60, 24, 1.0, &mut rng);
+        let ws = KernelWorkspace::new();
+        let plain = spmm(&a, &x, Semiring::Sum, KernelChoice::Trusted, 3).unwrap();
+        for round in 0..5 {
+            let pooled =
+                spmm_with_workspace(&a, &x, Semiring::Sum, KernelChoice::Trusted, 3, Some((&ws, 9)))
+                    .unwrap();
+            assert_eq!(pooled.data, plain.data, "round {round}");
+            // outputs go back to the pool, as the tape does on drop
+            ws.recycle(pooled.data);
+        }
+        let stats = ws.stats();
+        assert_eq!(stats.partition_misses, 1);
+        assert_eq!(stats.partition_hits, 4);
+        assert_eq!(stats.buffer_allocs, 1);
+        assert_eq!(stats.buffer_reuses, 4);
+    }
+
+    #[test]
+    fn workspace_serial_path_pools_buffers() {
+        let mut rng = Rng::seed_from_u64(47);
+        let a = graph(20, 48);
+        // K=24 > kt=16 so the tiled kernel really runs (not the fallback)
+        let x = Dense::uniform(20, 24, 1.0, &mut rng);
+        let ws = KernelWorkspace::new();
+        for op in Semiring::ALL {
+            let want = spmm_dense_ref(&a, &x, op).unwrap();
+            let got =
+                spmm_with_workspace(&a, &x, op, KernelChoice::Tiled { kt: 16 }, 1, Some((&ws, 1)))
+                    .unwrap();
+            assert!(got.allclose(&want, 1e-4), "op={op:?}");
+            ws.recycle(got.data);
+        }
+        // 4 semirings, one buffer cycling through
+        assert_eq!(ws.stats().buffer_allocs, 1);
+        assert_eq!(ws.stats().buffer_reuses, 3);
+    }
+
+    #[test]
     fn labels() {
         assert_eq!(KernelChoice::Trusted.label(), "trusted");
         assert_eq!(KernelChoice::Generated { kb: 16 }.label(), "generated(kb=16)");
+        assert_eq!(KernelChoice::Tiled { kt: 64 }.label(), "tiled(kt=64)");
     }
 }

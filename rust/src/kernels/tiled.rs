@@ -1,0 +1,238 @@
+//! Cache-blocked ("tiled") trusted SpMM — the third kernel family in the
+//! tuner's search space.
+//!
+//! The trusted kernel streams a row's whole `K`-wide output strip through
+//! every neighbour update. For large embeddings (the right half of the
+//! paper's Figure 2 sweep, K ≥ 256) that strip plus the gathered X rows no
+//! longer fit in L1/L2, so every neighbour access misses. The tiled
+//! variant blocks the **K dimension** into `kt`-wide column tiles and
+//! finishes a full tile before moving to the next: within one tile, the
+//! working set is `kt` floats of output per row plus `kt`-wide slices of
+//! the gathered X rows — small enough for X-row reuse across output rows
+//! that share neighbours to stay resident in cache.
+//!
+//! Numerics are **bitwise identical** to the trusted kernel: per output
+//! element, the neighbour stream is combined in exactly the same order —
+//! only the traversal order *across* elements changes. That keeps the
+//! library's central routing-invariance property intact (the tuner can
+//! pick this kernel freely; see `proptests`).
+//!
+//! Like the generated family's [`super::GENERATED_KBS`], the tile widths
+//! the tuner searches are a fixed constant set, [`TILED_KTS`].
+
+use crate::dense::Dense;
+use crate::error::{Error, Result};
+use crate::sparse::Csr;
+use crate::util::parallel;
+
+use super::{nnz_balanced_partition, split_rows_mut, RowRange, Semiring};
+
+/// Tile widths (in f32 columns) with tiled instantiations. 16 covers one
+/// 64-byte cache line of output per row; 64/256 trade tile-loop overhead
+/// against X-panel residency (a 256-wide tile of 64 hot X rows is 64 KiB —
+/// L2-resident on every profile we model).
+pub const TILED_KTS: [usize; 3] = [16, 64, 256];
+
+/// Serial tiled SpMM, any semiring. `kt` is the column-tile width; any
+/// `kt ≥ 1` executes, [`TILED_KTS`] is what the tuner searches.
+pub fn spmm_tiled(a: &Csr, x: &Dense, op: Semiring, kt: usize) -> Result<Dense> {
+    check(a, x, kt)?;
+    let mut y = Dense::zeros(a.rows, x.cols);
+    spmm_tiled_serial_into(a, x, op, kt, &mut y);
+    Ok(y)
+}
+
+/// Parallel tiled SpMM: NNZ-balanced row ranges, disjoint output slices,
+/// tiles processed independently per range (0 threads → the pool size).
+pub fn spmm_tiled_parallel(
+    a: &Csr,
+    x: &Dense,
+    op: Semiring,
+    kt: usize,
+    threads: usize,
+) -> Result<Dense> {
+    check(a, x, kt)?;
+    let threads = if threads == 0 { parallel::current_num_threads() } else { threads };
+    let ranges = nnz_balanced_partition(a, threads);
+    let mut y = Dense::zeros(a.rows, x.cols);
+    spmm_tiled_partitioned_into(a, x, op, kt, &ranges, &mut y);
+    Ok(y)
+}
+
+/// Serial body writing into a pre-sized **zeroed** output (the sum path
+/// accumulates straight into it, like the trusted kernel).
+pub(crate) fn spmm_tiled_serial_into(a: &Csr, x: &Dense, op: Semiring, kt: usize, y: &mut Dense) {
+    spmm_tiled_rows_into(a, x, op, kt, 0, a.rows, &mut y.data);
+}
+
+/// Parallel body over caller-provided (possibly cached) row ranges.
+pub(crate) fn spmm_tiled_partitioned_into(
+    a: &Csr,
+    x: &Dense,
+    op: Semiring,
+    kt: usize,
+    ranges: &[RowRange],
+    y: &mut Dense,
+) {
+    let k = y.cols;
+    parallel::join_all(
+        split_rows_mut(&mut y.data, ranges, k)
+            .into_iter()
+            .map(|(range, out)| {
+                move || spmm_tiled_rows_into(a, x, op, kt, range.start, range.end, out)
+            })
+            .collect(),
+    );
+}
+
+/// Compute rows `[start, end)` tile-by-tile into a buffer whose row 0 is
+/// `start`. Per element, the combine order over the neighbour stream is
+/// identical to the trusted kernel's — bitwise-equal results.
+fn spmm_tiled_rows_into(
+    a: &Csr,
+    x: &Dense,
+    op: Semiring,
+    kt: usize,
+    start: usize,
+    end: usize,
+    out: &mut [f32],
+) {
+    let k = x.cols;
+    let kt = kt.max(1);
+    let mut t0 = 0usize;
+    while t0 < k {
+        let t1 = (t0 + kt).min(k);
+        match op {
+            // Fast path mirrors trusted: zeroed output is the sum identity,
+            // no finalize pass.
+            Semiring::Sum => {
+                for r in start..end {
+                    let base = (r - start) * k;
+                    let orow = &mut out[base + t0..base + t1];
+                    for (&c, &v) in a.row_cols(r).iter().zip(a.row_vals(r)) {
+                        let xrow = &x.data[c * k + t0..c * k + t1];
+                        for (o, &xv) in orow.iter_mut().zip(xrow.iter()) {
+                            *o += v * xv;
+                        }
+                    }
+                }
+            }
+            _ => {
+                for r in start..end {
+                    let nnz = a.row_nnz(r);
+                    let base = (r - start) * k;
+                    let orow = &mut out[base + t0..base + t1];
+                    for slot in orow.iter_mut() {
+                        *slot = op.identity();
+                    }
+                    for (&c, &v) in a.row_cols(r).iter().zip(a.row_vals(r)) {
+                        let xrow = &x.data[c * k + t0..c * k + t1];
+                        for (o, &xv) in orow.iter_mut().zip(xrow.iter()) {
+                            *o = op.combine(*o, v * xv);
+                        }
+                    }
+                    for slot in orow.iter_mut() {
+                        *slot = op.finalize(*slot, nnz);
+                    }
+                }
+            }
+        }
+        t0 = t1;
+    }
+}
+
+fn check(a: &Csr, x: &Dense, kt: usize) -> Result<()> {
+    if a.cols != x.rows {
+        return Err(Error::ShapeMismatch(format!(
+            "spmm_tiled: A {}x{} @ X {}x{}",
+            a.rows, a.cols, x.rows, x.cols
+        )));
+    }
+    if kt == 0 {
+        return Err(Error::Config("spmm_tiled: tile width kt must be ≥ 1".into()));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{spmm_dense_ref, spmm_trusted, spmm_trusted_parallel};
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn random_graph(n: usize, avg_deg: usize, seed: u64) -> Csr {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            for _ in 0..avg_deg {
+                coo.push(r, rng.gen_range(n), rng.gen_range_f32(0.1, 1.0));
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn matches_reference_all_semirings_and_tiles() {
+        let mut rng = Rng::seed_from_u64(71);
+        let a = random_graph(40, 5, 72);
+        // K values straddling every tile width: smaller, equal, non-multiple, larger
+        for k in [1, 7, 16, 33, 64, 100] {
+            let x = Dense::uniform(40, k, 1.0, &mut rng);
+            for op in Semiring::ALL {
+                let want = spmm_dense_ref(&a, &x, op).unwrap();
+                for kt in TILED_KTS {
+                    let got = spmm_tiled(&a, &x, op, kt).unwrap();
+                    assert!(got.allclose(&want, 1e-4), "k={k} kt={kt} op={op:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bitwise_identical_to_trusted() {
+        let mut rng = Rng::seed_from_u64(73);
+        let a = random_graph(60, 6, 74);
+        let x = Dense::uniform(60, 50, 1.0, &mut rng);
+        for op in Semiring::ALL {
+            let trusted = spmm_trusted(&a, &x, op).unwrap();
+            for kt in TILED_KTS {
+                let tiled = spmm_tiled(&a, &x, op, kt).unwrap();
+                assert_eq!(tiled.data, trusted.data, "kt={kt} op={op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let mut rng = Rng::seed_from_u64(75);
+        let a = random_graph(90, 7, 76);
+        let x = Dense::uniform(90, 48, 1.0, &mut rng);
+        for op in Semiring::ALL {
+            let serial = spmm_tiled(&a, &x, op, 16).unwrap();
+            for threads in [2, 3, 8] {
+                let par = spmm_tiled_parallel(&a, &x, op, 16, threads).unwrap();
+                assert_eq!(par.data, serial.data, "threads={threads} op={op:?}");
+            }
+        }
+        // parallel tiled also agrees with parallel trusted
+        let t = spmm_trusted_parallel(&a, &x, Semiring::Sum, 3).unwrap();
+        let got = spmm_tiled_parallel(&a, &x, Semiring::Sum, 64, 3).unwrap();
+        assert_eq!(got.data, t.data);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let a = random_graph(10, 2, 77);
+        assert!(spmm_tiled(&a, &Dense::zeros(11, 8), Semiring::Sum, 16).is_err());
+        assert!(spmm_tiled(&a, &Dense::zeros(10, 8), Semiring::Sum, 0).is_err());
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = Csr::empty(4, 4);
+        let x = Dense::zeros(4, 8);
+        let y = spmm_tiled(&a, &x, Semiring::Max, 16).unwrap();
+        assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+}

@@ -9,53 +9,49 @@ use crate::error::{Error, Result};
 use crate::sparse::Csr;
 use crate::util::parallel;
 
-use super::{nnz_balanced_partition, Semiring};
+use super::{nnz_balanced_partition, split_rows_mut, RowRange, Semiring};
 
 /// Serial trusted kernel.
 pub fn spmm_trusted(a: &Csr, x: &Dense, op: Semiring) -> Result<Dense> {
     check_shapes(a, x)?;
     let mut y = Dense::zeros(a.rows, x.cols);
-    spmm_trusted_rows(a, x, op, 0, a.rows, &mut y.data);
+    spmm_trusted_serial_into(a, x, op, &mut y);
     Ok(y)
 }
 
 /// Parallel trusted kernel: NNZ-balanced row ranges over `threads` workers
-/// (0 → rayon's current pool size).
+/// (0 → the worker pool's size).
 pub fn spmm_trusted_parallel(a: &Csr, x: &Dense, op: Semiring, threads: usize) -> Result<Dense> {
     check_shapes(a, x)?;
     let threads = if threads == 0 { parallel::current_num_threads() } else { threads };
     let ranges = nnz_balanced_partition(a, threads);
-    let k = x.cols;
-    let mut y = Dense::zeros(a.rows, k);
-
-    // Split the output buffer along the same row boundaries so each worker
-    // owns a disjoint &mut slice — no locks on the hot path.
-    let mut slices: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(ranges.len());
-    let mut rest: &mut [f32] = &mut y.data;
-    let mut offset = 0usize;
-    for r in &ranges {
-        let len = (r.end - r.start) * k;
-        let (head, tail) = rest.split_at_mut(len);
-        slices.push((r.start, r.end, head));
-        rest = tail;
-        offset += len;
-    }
-    debug_assert_eq!(offset, a.rows * k);
-
-    parallel::join_all(
-        slices
-            .into_iter()
-            .map(|(start, end, out)| move || spmm_trusted_rows_into(a, x, op, start, end, out))
-            .collect(),
-    );
+    let mut y = Dense::zeros(a.rows, x.cols);
+    spmm_trusted_partitioned_into(a, x, op, &ranges, &mut y);
     Ok(y)
 }
 
-/// Compute rows `[start, end)` into the global output buffer `y_data`
-/// (indexed from row 0).
-fn spmm_trusted_rows(a: &Csr, x: &Dense, op: Semiring, start: usize, end: usize, y_data: &mut [f32]) {
-    let k = x.cols;
-    spmm_trusted_rows_into(a, x, op, start, end, &mut y_data[start * k..end * k]);
+/// Serial body writing into a pre-sized (zeroed) output — the allocation-
+/// free entry point the workspace-aware dispatcher uses.
+pub(crate) fn spmm_trusted_serial_into(a: &Csr, x: &Dense, op: Semiring, y: &mut Dense) {
+    spmm_trusted_rows_into(a, x, op, 0, a.rows, &mut y.data);
+}
+
+/// Parallel body over caller-provided (possibly cached) row ranges,
+/// writing into a pre-sized (zeroed) output.
+pub(crate) fn spmm_trusted_partitioned_into(
+    a: &Csr,
+    x: &Dense,
+    op: Semiring,
+    ranges: &[RowRange],
+    y: &mut Dense,
+) {
+    let k = y.cols;
+    parallel::join_all(
+        split_rows_mut(&mut y.data, ranges, k)
+            .into_iter()
+            .map(|(range, out)| move || spmm_trusted_rows_into(a, x, op, range.start, range.end, out))
+            .collect(),
+    );
 }
 
 /// Compute rows `[start, end)` into a buffer whose row 0 is `start`.

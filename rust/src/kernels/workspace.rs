@@ -1,0 +1,269 @@
+//! Per-training-run kernel workspace — the paper's §3.3 caching thesis
+//! applied one level below the math.
+//!
+//! Training runs the *same* graph through thousands of SpMM calls. Two
+//! fixed costs used to be re-paid on every one of them:
+//!
+//! * **Partitioning** — `nnz_balanced_partition` walks all rows to produce
+//!   the NNZ-balanced ranges, which are a pure function of
+//!   `(graph, thread count)`. [`KernelWorkspace::partition`] memoises them
+//!   under the same graph-identity keys the
+//!   [`BackpropCache`](crate::cache::BackpropCache) uses, so a training
+//!   run computes each graph's ranges once.
+//! * **Output allocation** — every call built a fresh `Dense::zeros`
+//!   (page-faulting in `rows × K` floats). [`KernelWorkspace::take_buffer`]
+//!   / [`KernelWorkspace::recycle`] keep a small pool of retired buffers;
+//!   an epoch's outputs are recycled when its tape drops and reused by the
+//!   next epoch, converting per-call page faults into a warm `memset`.
+//!
+//! The workspace is shared (`Mutex`-guarded, `Arc`-cloned) between the
+//! trainer, the autodiff tape, and the dispatcher
+//! ([`spmm_with_workspace`](super::spmm)); hit/miss counters make its
+//! effect measurable the same way `CacheStats` does for the backprop
+//! cache.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::sparse::Csr;
+
+use super::partition::{nnz_balanced_partition, RowRange};
+
+/// Maximum number of retired buffers the pool retains; beyond this,
+/// recycled buffers are simply freed. A GNN tape produces ~2 buffers per
+/// layer per epoch, so this comfortably covers the paper's model zoo.
+const MAX_POOLED_BUFFERS: usize = 32;
+
+/// Counters for workspace effectiveness (mirrors `cache::CacheStats`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkspaceStats {
+    /// Partition lookups served from the cache.
+    pub partition_hits: u64,
+    /// Partition lookups that had to compute.
+    pub partition_misses: u64,
+    /// Output buffers served from the pool.
+    pub buffer_reuses: u64,
+    /// Output buffers freshly allocated.
+    pub buffer_allocs: u64,
+}
+
+struct CachedPartition {
+    /// Row/nnz fingerprint of the graph the ranges were computed for;
+    /// guards against graph-id collisions or a mutated graph.
+    rows: usize,
+    nnz: usize,
+    ranges: Arc<Vec<RowRange>>,
+}
+
+#[derive(Default)]
+struct Inner {
+    partitions: HashMap<(u64, usize), CachedPartition>,
+    buffers: Vec<Vec<f32>>,
+    stats: WorkspaceStats,
+}
+
+/// See the module docs.
+pub struct KernelWorkspace {
+    inner: Mutex<Inner>,
+}
+
+impl KernelWorkspace {
+    /// A fresh, empty workspace.
+    pub fn new() -> Self {
+        KernelWorkspace { inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Derived identity for a graph's transpose, so `A` and `Aᵀ` (same
+    /// caller-supplied id, different matrices) get distinct partition
+    /// entries.
+    pub fn transpose_id(graph_id: u64) -> u64 {
+        graph_id ^ 0x9e37_79b9_7f4a_7c15
+    }
+
+    /// NNZ-balanced row ranges for `(graph_id, threads)`, memoised. The
+    /// cached entry is validated against the graph's row/nnz counts and
+    /// recomputed on mismatch, so a stale or colliding id degrades to a
+    /// miss, never to wrong routing.
+    pub fn partition(&self, graph_id: u64, a: &Csr, threads: usize) -> Arc<Vec<RowRange>> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            let hit = g
+                .partitions
+                .get(&(graph_id, threads))
+                .filter(|hit| hit.rows == a.rows && hit.nnz == a.nnz())
+                .map(|hit| Arc::clone(&hit.ranges));
+            if let Some(ranges) = hit {
+                g.stats.partition_hits += 1;
+                return ranges;
+            }
+            g.stats.partition_misses += 1;
+        }
+        // compute outside the lock — O(rows) walk
+        let ranges = Arc::new(nnz_balanced_partition(a, threads));
+        let mut g = self.inner.lock().unwrap();
+        g.partitions.insert(
+            (graph_id, threads),
+            CachedPartition { rows: a.rows, nnz: a.nnz(), ranges: Arc::clone(&ranges) },
+        );
+        ranges
+    }
+
+    /// A zeroed `len`-element buffer: best-fit from the pool (smallest
+    /// retired buffer whose capacity covers `len`) or freshly allocated.
+    pub fn take_buffer(&self, len: usize) -> Vec<f32> {
+        let reclaimed = {
+            let mut g = self.inner.lock().unwrap();
+            let mut best: Option<(usize, usize)> = None;
+            for (i, b) in g.buffers.iter().enumerate() {
+                let cap = b.capacity();
+                if cap >= len && best.map(|(_, c)| cap < c).unwrap_or(true) {
+                    best = Some((i, cap));
+                }
+            }
+            match best {
+                Some((i, _)) => {
+                    g.stats.buffer_reuses += 1;
+                    Some(g.buffers.swap_remove(i))
+                }
+                None => {
+                    g.stats.buffer_allocs += 1;
+                    None
+                }
+            }
+        };
+        match reclaimed {
+            Some(mut buf) => {
+                buf.clear();
+                buf.resize(len, 0.0);
+                buf
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// Return a retired buffer to the pool (dropped if the pool is full or
+    /// the buffer has no capacity worth keeping).
+    pub fn recycle(&self, mut buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        buf.clear();
+        let mut g = self.inner.lock().unwrap();
+        if g.buffers.len() < MAX_POOLED_BUFFERS {
+            g.buffers.push(buf);
+        }
+    }
+
+    /// Snapshot of the counters.
+    pub fn stats(&self) -> WorkspaceStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Drop all cached partitions and pooled buffers; reset counters.
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.partitions.clear();
+        g.buffers.clear();
+        g.stats = WorkspaceStats::default();
+    }
+}
+
+impl Default for KernelWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn graph(n: usize) -> Csr {
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            coo.push_sym(i, (i + 1) % n, 1.0);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn partition_second_lookup_hits_and_matches_direct() {
+        let ws = KernelWorkspace::new();
+        let a = graph(40);
+        let r1 = ws.partition(7, &a, 4);
+        let r2 = ws.partition(7, &a, 4);
+        assert_eq!(*r1, nnz_balanced_partition(&a, 4));
+        assert_eq!(*r1, *r2);
+        let s = ws.stats();
+        assert_eq!(s.partition_hits, 1);
+        assert_eq!(s.partition_misses, 1);
+    }
+
+    #[test]
+    fn partition_keys_on_threads_and_id() {
+        let ws = KernelWorkspace::new();
+        let a = graph(40);
+        ws.partition(7, &a, 2);
+        ws.partition(7, &a, 4); // different thread count → new entry
+        ws.partition(KernelWorkspace::transpose_id(7), &a, 2); // transpose id → new entry
+        assert_eq!(ws.stats().partition_misses, 3);
+        assert_ne!(KernelWorkspace::transpose_id(7), 7);
+    }
+
+    #[test]
+    fn mismatched_graph_invalidates_hit() {
+        let ws = KernelWorkspace::new();
+        let small = graph(10);
+        let big = graph(20);
+        ws.partition(1, &small, 2);
+        // same id, different graph: must recompute, and must be correct
+        let ranges = ws.partition(1, &big, 2);
+        assert_eq!(*ranges, nnz_balanced_partition(&big, 2));
+        assert_eq!(ws.stats().partition_misses, 2);
+    }
+
+    #[test]
+    fn buffers_recycle_zeroed() {
+        let ws = KernelWorkspace::new();
+        let mut b = ws.take_buffer(100);
+        assert_eq!(b.len(), 100);
+        b.iter_mut().for_each(|v| *v = 7.0);
+        ws.recycle(b);
+        // reuse must come back zeroed, even at a smaller size
+        let b2 = ws.take_buffer(50);
+        assert_eq!(b2.len(), 50);
+        assert!(b2.iter().all(|&v| v == 0.0));
+        let s = ws.stats();
+        assert_eq!(s.buffer_allocs, 1);
+        assert_eq!(s.buffer_reuses, 1);
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let ws = KernelWorkspace::new();
+        for _ in 0..(MAX_POOLED_BUFFERS + 10) {
+            ws.recycle(vec![0.0; 8]);
+        }
+        // the pool absorbed at most MAX_POOLED_BUFFERS; taking that many
+        // +1 buffers allocates exactly once
+        for _ in 0..MAX_POOLED_BUFFERS {
+            let _ = ws.take_buffer(4);
+        }
+        assert_eq!(ws.stats().buffer_allocs, 0);
+        let _ = ws.take_buffer(4);
+        assert_eq!(ws.stats().buffer_allocs, 1);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let ws = KernelWorkspace::new();
+        let a = graph(12);
+        ws.partition(3, &a, 2);
+        ws.recycle(vec![0.0; 16]);
+        ws.clear();
+        assert_eq!(ws.stats(), WorkspaceStats::default());
+        let _ = ws.take_buffer(8);
+        assert_eq!(ws.stats().buffer_allocs, 1);
+    }
+}

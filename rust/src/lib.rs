@@ -56,7 +56,7 @@ pub mod prelude {
     pub use crate::dense::Dense;
     pub use crate::error::{Error, Result};
     pub use crate::gnn::GnnModel;
-    pub use crate::kernels::{spmm, EdgeOp, KernelChoice, Semiring};
+    pub use crate::kernels::{spmm, EdgeOp, KernelChoice, KernelWorkspace, Semiring};
     pub use crate::sparse::{Coo, Csc, Csr, NormKind};
     pub use crate::train::{Backend, TrainConfig, TrainReport, Trainer};
 }

@@ -77,13 +77,14 @@ fn probe() -> Result<()> {
     for name in ["host", "intel-skylake", "amd-epyc"] {
         let p = HardwareProfile::named(name)?;
         println!(
-            "{:<14} simd={:?} vlen_f32={} vregs={} cores={} kbs={:?} best_kb={}",
+            "{:<14} simd={:?} vlen_f32={} vregs={} cores={} kbs={:?} kts={:?} best_kb={}",
             p.name,
             p.simd,
             p.vlen(),
             p.vector_registers,
             p.cores,
             p.candidate_kbs(),
+            p.candidate_kts(),
             p.predicted_best_kb()
         );
     }

@@ -5,28 +5,42 @@
 //! models to HLO *text* once (text, not serialized proto — jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids). This module loads that text with
-//! [`xla::HloModuleProto::from_text_file`], compiles it on the PJRT CPU
+//! `xla::HloModuleProto::from_text_file`, compiles it on the PJRT CPU
 //! client, and runs it with device-resident parameter buffers.
 //!
+//! The PJRT pieces need the out-of-tree `xla` crate and are gated behind
+//! the `xla` cargo feature so the default build stays offline; without the
+//! feature a [`stub`] provides an [`HloGnnTrainer`] whose `load` fails with
+//! a descriptive error. The format pieces ([`ell`], [`manifest`]) are pure
+//! Rust and always compiled.
+//!
 //! Contents:
-//! * [`client`] — thin wrappers over the `xla` crate (compile, execute,
-//!   Dense↔Literal conversion, ELL packing).
+//! * `client` (feature `xla`) — thin wrappers over the `xla` crate
+//!   (compile, execute, Dense↔Literal conversion).
 //! * [`manifest`] — the JSON manifest `aot.py` writes next to the HLO
 //!   files: one entry per compiled executable with its exact shapes.
-//! * [`gnn_step`] — [`HloGnnTrainer`]: a whole GNN training step compiled
-//!   to one executable (the PT2-Compile analogue), with parameters kept
-//!   device-side between steps and static inputs staged exactly once (the
-//!   runtime-layer analogue of the paper's §3.3 caching).
+//! * `gnn_step` (feature `xla`) — [`HloGnnTrainer`]: a whole GNN training
+//!   step compiled to one executable (the PT2-Compile analogue), with
+//!   parameters kept device-side between steps and static inputs staged
+//!   exactly once (the runtime-layer analogue of the paper's §3.3 caching).
 
+#[cfg(feature = "xla")]
 mod client;
 mod ell;
+#[cfg(feature = "xla")]
 mod gnn_step;
 mod manifest;
+#[cfg(not(feature = "xla"))]
+mod stub;
 
+#[cfg(feature = "xla")]
 pub use client::{
     dense_to_literal, f32_mat_literal, f32_vec_literal, i32_mat_literal, i32_vec_literal,
     literal_to_dense, HloExecutable,
 };
 pub use ell::EllMatrix;
+#[cfg(feature = "xla")]
 pub use gnn_step::HloGnnTrainer;
 pub use manifest::{ArtifactManifest, ManifestEntry};
+#[cfg(not(feature = "xla"))]
+pub use stub::HloGnnTrainer;

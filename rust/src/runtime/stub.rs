@@ -1,0 +1,61 @@
+//! Build-time stub for the HLO/PJRT runtime, compiled when the `xla`
+//! feature is off (the default, dependency-free configuration).
+//!
+//! The native training stack — kernels, tuner, cache, tape, trainer — is
+//! fully functional without it; only [`crate::train::Backend::Hlo`] needs
+//! the real runtime. Every entry point here returns a descriptive
+//! [`Error::Artifact`]/[`Error::Runtime`] instead of linking against the
+//! out-of-tree `xla` crate, so `cargo build` / `cargo test` stay offline
+//! (the `hlo_runtime` integration tests are gated on the feature).
+
+use std::path::Path;
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::gnn::{GnnModel, ParamSet};
+
+const MSG: &str = "isplib was built without the `xla` feature; vendor the `xla` \
+                   crate, add it under [dependencies], and rebuild with \
+                   `--features xla` to execute HLO artifacts";
+
+/// Stub of the compiled whole-step GNN trainer (see `runtime::gnn_step` in
+/// `--features xla` builds).
+pub struct HloGnnTrainer;
+
+impl HloGnnTrainer {
+    /// Always fails: the runtime is not compiled in.
+    pub fn load(
+        _artifacts_dir: &Path,
+        _model: GnnModel,
+        _dataset: &Dataset,
+        _hidden: usize,
+        _seed: u64,
+    ) -> Result<Self> {
+        Err(Error::Artifact(MSG.into()))
+    }
+
+    /// Unreachable in practice ([`HloGnnTrainer::load`] never succeeds).
+    pub fn step(&mut self) -> Result<f32> {
+        Err(Error::Runtime(MSG.into()))
+    }
+
+    /// Unreachable in practice ([`HloGnnTrainer::load`] never succeeds).
+    pub fn params_to_host(&self) -> Result<ParamSet> {
+        Err(Error::Runtime(MSG.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::karate_club;
+
+    #[test]
+    fn stub_load_errors_with_feature_hint() {
+        let ds = karate_club();
+        let err = HloGnnTrainer::load(Path::new("/nonexistent"), GnnModel::Gcn, &ds, 8, 1)
+            .err()
+            .expect("stub must not load");
+        assert!(err.to_string().contains("xla"));
+    }
+}

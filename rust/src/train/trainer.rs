@@ -17,6 +17,7 @@ use crate::cache::BackpropCache;
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::gnn::{masked_accuracy, GnnModel, ModelParams, ParamSet};
+use crate::kernels::KernelWorkspace;
 use crate::runtime::HloGnnTrainer;
 
 use super::{Backend, Optimizer, OptimizerKind};
@@ -128,6 +129,10 @@ pub struct Trainer {
     /// Feature matrix shared with every step's tape (no per-epoch copy;
     /// registered as a no-grad input so backward skips its dX GEMM).
     features: Arc<crate::dense::Dense>,
+    /// Kernel workspace shared by the operand and every epoch's tape:
+    /// NNZ partitions cached per graph (keyed like the [`BackpropCache`]),
+    /// output buffers recycled across epochs.
+    workspace: Arc<KernelWorkspace>,
 }
 
 impl Trainer {
@@ -145,21 +150,17 @@ impl Trainer {
         } else {
             BackpropCache::disabled()
         };
-        // graph identity for the cache: dataset name hash (stable within a
-        // process; datasets are immutable once built)
-        let graph_id = {
-            use std::collections::hash_map::DefaultHasher;
-            use std::hash::{Hash, Hasher};
-            let mut h = DefaultHasher::new();
-            dataset.name.hash(&mut h);
-            h.finish()
-        };
+        // graph identity shared by the backprop cache and the kernel
+        // workspace (stable within a process; datasets are immutable once
+        // built)
+        let graph_id = crate::autodiff::context_graph_id(&dataset.name);
 
         let dims = ModelParams {
             in_dim: dataset.feature_dim(),
             hidden: cfg.hidden,
             classes: dataset.num_classes,
         };
+        let workspace = Arc::new(KernelWorkspace::new());
 
         let engine = match backend {
             Backend::Hlo => {
@@ -170,7 +171,8 @@ impl Trainer {
                 Engine::Hlo(Box::new(hlo))
             }
             _ => {
-                let operand = Self::build_operand(model, backend, dataset, &cache, graph_id)?;
+                let operand =
+                    Self::build_operand(model, backend, dataset, &cache, graph_id, &workspace)?;
                 // NativeTuned: bind tuned kernels for the Ks this model will
                 // actually run SpMM at, then engage routing (= patch()).
                 if backend.uses_tuned_kernels() && !cfg.skip_tuning {
@@ -206,40 +208,46 @@ impl Trainer {
             setup_secs: t0.elapsed().as_secs_f64(),
             graph_id,
             features: Arc::new(dataset.features.clone()),
+            workspace,
         })
     }
 
-    /// Build the SpMM operand a backend trains with.
+    /// Build the SpMM operand a backend trains with. Kernel operands share
+    /// the trainer's workspace under the same graph id that keys the
+    /// backprop cache; the baseline strategies carry it too (harmless —
+    /// only the kernel path consults it).
     fn build_operand(
         model: GnnModel,
         backend: Backend,
         dataset: &Dataset,
         cache: &BackpropCache,
         graph_id: u64,
+        workspace: &Arc<KernelWorkspace>,
     ) -> Result<SpmmOperand> {
         let norm = model.norm_kind();
         let context = dataset.name.clone();
-        match backend {
+        let operand = match backend {
             Backend::NativeTuned => {
                 // cached: normalised adjacency AND its transpose memoised
                 let a = cache.normalized(graph_id, &dataset.adj, norm)?;
                 let at = cache.transposed(graph_id, &a, norm)?;
-                Ok(SpmmOperand::from_cached_parts(Arc::new(a), Arc::new(at), &context))
+                SpmmOperand::from_cached_parts(Arc::new(a), Arc::new(at), &context)
             }
             Backend::NativeTrusted | Backend::NativeLegacy => {
                 let a = norm.apply(&dataset.adj)?;
-                Ok(SpmmOperand::uncached(a, &context))
+                SpmmOperand::uncached(a, &context)
             }
             Backend::MessagePassing => {
                 let a = norm.apply(&dataset.adj)?;
-                Ok(SpmmOperand::edgewise(a, &context))
+                SpmmOperand::edgewise(a, &context)
             }
             Backend::DenseFallback => {
                 let a = norm.apply(&dataset.adj)?;
-                Ok(SpmmOperand::densified(a, &context))
+                SpmmOperand::densified(a, &context)
             }
             Backend::Hlo => unreachable!("Hlo handled in Trainer::new"),
-        }
+        };
+        Ok(operand.with_workspace(Arc::clone(workspace), graph_id))
     }
 
     /// Run the training loop; returns the report.
@@ -279,6 +287,7 @@ impl Trainer {
                 dataset,
                 &self.cache,
                 self.graph_id,
+                &self.workspace,
             )?;
             if let Engine::Native { operand: op, .. } = &mut self.engine {
                 *op = operand;
@@ -288,7 +297,7 @@ impl Trainer {
         match &mut self.engine {
             Engine::Hlo(hlo) => hlo.step(),
             Engine::Native { operand, params, optimizer } => {
-                let mut tape = Tape::new(self.cfg.threads);
+                let mut tape = Tape::with_workspace(self.cfg.threads, Arc::clone(&self.workspace));
                 let x = tape.input_no_grad(Arc::clone(&self.features));
                 let mut vars = BTreeMap::new();
                 for (name, value) in params.iter() {
@@ -343,6 +352,11 @@ impl Trainer {
     /// The backprop cache (for stats assertions in tests/benches).
     pub fn cache(&self) -> &BackpropCache {
         &self.cache
+    }
+
+    /// The kernel workspace (for stats assertions in tests/benches).
+    pub fn workspace(&self) -> &KernelWorkspace {
+        &self.workspace
     }
 
     /// Current parameters (native engines).
@@ -423,6 +437,22 @@ mod tests {
         // normalized + transposed were memoised at setup
         assert!(t.cache().stats().misses >= 2);
         assert!(t.cache().memory_bytes() > 0);
+    }
+
+    #[test]
+    fn workspace_amortizes_across_epochs() {
+        let ds = karate_club();
+        // threads ≥ 2 so the partition cache is on the path too
+        let cfg = TrainConfig { threads: 2, ..quick_cfg() };
+        let mut t = Trainer::new(GnnModel::Gcn, Backend::NativeTuned, cfg, &ds).unwrap();
+        let report = t.fit(&ds).unwrap();
+        assert!(report.final_loss < report.losses[0]);
+        let stats = t.workspace().stats();
+        // 40 epochs over one graph: partitions computed once per matrix
+        // (A and Aᵀ), then served from the cache
+        assert!(stats.partition_hits > stats.partition_misses, "{stats:?}");
+        // epoch outputs recycle into later epochs' buffers
+        assert!(stats.buffer_reuses > stats.buffer_allocs, "{stats:?}");
     }
 
     #[test]

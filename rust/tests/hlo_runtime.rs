@@ -4,7 +4,10 @@
 //!
 //! These tests are skipped (not failed) when `artifacts/` has not been
 //! built, so `cargo test` works on a fresh clone; CI runs `make test`
-//! which builds artifacts first.
+//! which builds artifacts first. The whole file is additionally gated on
+//! the `xla` cargo feature: without it the PJRT runtime is stubbed out and
+//! there is nothing to exercise.
+#![cfg(feature = "xla")]
 
 use std::path::{Path, PathBuf};
 

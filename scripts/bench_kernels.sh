@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Emit BENCH_kernels.json — the machine-readable kernel perf snapshot
+# (op, kernel label, threads, ns/iter, and the pool-vs-spawn per-call
+# overhead microbenchmark). Run from anywhere; extra args pass through to
+# cargo bench. Set ISPLIB_BENCH_QUICK=1 for a fast smoke run.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+export ISPLIB_BENCH_OUT="${ISPLIB_BENCH_OUT:-$(cd .. && pwd)/BENCH_kernels.json}"
+cargo bench --bench bench_kernels "$@"
+echo "bench_kernels.sh: wrote ${ISPLIB_BENCH_OUT}"

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 verify: release build, clippy with warnings promoted to errors,
+# then the full test suite. CI and pre-merge both run exactly this.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+cargo build --release
+cargo clippy --all-targets -- -D warnings
+cargo test -q
