@@ -75,8 +75,10 @@ struct Node {
 pub struct Tape {
     nodes: Vec<Node>,
     threads: usize,
-    /// When set, node buffers are recycled into this workspace as the tape
-    /// drops, so the next epoch's tape allocates (almost) nothing.
+    /// When set, dense-op node buffers (matmul/bias/relu/add) are drawn
+    /// from this workspace's pool and every node buffer is recycled back
+    /// into it as the tape drops, so the next epoch's tape allocates
+    /// (almost) nothing.
     workspace: Option<std::sync::Arc<KernelWorkspace>>,
 }
 
@@ -138,9 +140,32 @@ impl Tape {
         self.nodes[v.0].grad.as_ref()
     }
 
-    /// Dense matmul node.
+    /// Allocate a node-value matrix: pooled (pre-zeroed) from the attached
+    /// workspace, else fresh. Paired with the recycling in `Drop`, this
+    /// extends the zero-steady-state-allocation story from the SpMM nodes
+    /// to the dense ops — matmul/bias/relu/add outputs of one epoch become
+    /// the next epoch's buffers.
+    fn alloc_value(&self, rows: usize, cols: usize) -> Dense {
+        match &self.workspace {
+            Some(ws) => ws.take_dense(rows, cols),
+            None => Dense::zeros(rows, cols),
+        }
+    }
+
+    /// Dense matmul node. With a workspace attached the output buffer
+    /// comes from the recycle pool ([`Dense::matmul_into`] is
+    /// bitwise-equal to [`Dense::matmul`]).
     pub fn matmul(&mut self, a: Var, b: Var) -> Result<Var> {
-        let value = self.nodes[a.0].value.matmul(&self.nodes[b.0].value)?;
+        let av = std::sync::Arc::clone(&self.nodes[a.0].value);
+        let bv = std::sync::Arc::clone(&self.nodes[b.0].value);
+        if av.cols != bv.rows {
+            return Err(Error::ShapeMismatch(format!(
+                "matmul: {}x{} @ {}x{}",
+                av.rows, av.cols, bv.rows, bv.cols
+            )));
+        }
+        let mut value = self.alloc_value(av.rows, bv.cols);
+        av.matmul_into(&bv, &mut value)?;
         Ok(self.push(Op::Matmul(a, b), value))
     }
 
@@ -165,25 +190,43 @@ impl Tape {
         Ok(self.push(Op::Spmm { operand: operand.clone(), x }, value))
     }
 
-    /// Bias-broadcast node: `X + b` with `b` a 1×C parameter.
+    /// Bias-broadcast node: `X + b` with `b` a 1×C parameter. Output
+    /// buffer pooled when a workspace is attached.
     pub fn add_bias(&mut self, x: Var, bias: Var) -> Result<Var> {
-        let b = &self.nodes[bias.0].value;
+        let xv = std::sync::Arc::clone(&self.nodes[x.0].value);
+        let b = std::sync::Arc::clone(&self.nodes[bias.0].value);
         if b.rows != 1 {
             return Err(Error::ShapeMismatch(format!("bias must be 1xC, got {}x{}", b.rows, b.cols)));
         }
-        let value = self.nodes[x.0].value.add_row_broadcast(&b.data)?;
+        if b.cols != xv.cols {
+            return Err(Error::ShapeMismatch(format!("bias: len {} vs cols {}", b.cols, xv.cols)));
+        }
+        let mut value = self.alloc_value(xv.rows, xv.cols);
+        xv.add_row_broadcast_into(&b.data, &mut value)?;
         Ok(self.push(Op::AddBias(x, bias), value))
     }
 
-    /// ReLU node.
+    /// ReLU node. Output buffer pooled when a workspace is attached.
     pub fn relu(&mut self, x: Var) -> Result<Var> {
-        let value = self.nodes[x.0].value.relu();
+        let xv = std::sync::Arc::clone(&self.nodes[x.0].value);
+        let mut value = self.alloc_value(xv.rows, xv.cols);
+        xv.relu_into(&mut value)?;
         Ok(self.push(Op::Relu(x), value))
     }
 
-    /// Elementwise add node.
+    /// Elementwise add node. Output buffer pooled when a workspace is
+    /// attached.
     pub fn add(&mut self, a: Var, b: Var) -> Result<Var> {
-        let value = self.nodes[a.0].value.add(&self.nodes[b.0].value)?;
+        let av = std::sync::Arc::clone(&self.nodes[a.0].value);
+        let bv = std::sync::Arc::clone(&self.nodes[b.0].value);
+        if av.rows != bv.rows || av.cols != bv.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "elementwise: {}x{} vs {}x{}",
+                av.rows, av.cols, bv.rows, bv.cols
+            )));
+        }
+        let mut value = self.alloc_value(av.rows, av.cols);
+        av.add_into(&bv, &mut value)?;
         Ok(self.push(Op::Add(a, b), value))
     }
 
@@ -591,6 +634,42 @@ mod tests {
         assert_eq!(stats.partition_misses, 2);
         assert!(stats.partition_hits >= 6, "{stats:?}");
         // after the first epoch the tape's recycled buffers feed later ones
+        assert!(stats.buffer_reuses > 0, "{stats:?}");
+    }
+
+    #[test]
+    fn dense_ops_draw_from_workspace_pool() {
+        use crate::kernels::KernelWorkspace;
+        use std::sync::Arc;
+        let mut rng = Rng::seed_from_u64(67);
+        let x0 = Dense::uniform(6, 4, 1.0, &mut rng);
+        let w0 = Dense::uniform(4, 5, 0.5, &mut rng);
+        let b0 = Dense::uniform(1, 5, 0.5, &mut rng);
+        let labels: Vec<usize> = (0..6).map(|i| i % 2).collect();
+        let run = |ws: Option<Arc<KernelWorkspace>>| {
+            let mut tape = match ws {
+                Some(ws) => Tape::with_workspace(1, ws),
+                None => Tape::new(1),
+            };
+            let x = tape.input(x0.clone());
+            let w = tape.input(w0.clone());
+            let b = tape.input(b0.clone());
+            let h = tape.matmul(x, w).unwrap();
+            let h = tape.add_bias(h, b).unwrap();
+            let h = tape.relu(h).unwrap();
+            let h2 = tape.add(h, h).unwrap();
+            let loss = tape.softmax_xent(h2, &labels, None).unwrap();
+            tape.backward(loss).unwrap();
+            tape.grad(w).unwrap().clone()
+        };
+        let plain = run(None);
+        let ws = Arc::new(KernelWorkspace::new());
+        for _ in 0..3 {
+            let pooled = run(Some(Arc::clone(&ws)));
+            assert!(pooled.allclose(&plain, 0.0), "workspace must not change numerics");
+        }
+        let stats = ws.stats();
+        // epoch 2+ matmul/bias/relu/add node buffers come from the pool
         assert!(stats.buffer_reuses > 0, "{stats:?}");
     }
 

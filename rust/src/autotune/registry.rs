@@ -83,6 +83,14 @@ impl KernelRegistry {
         }
     }
 
+    /// Look up the stored binding for `(context, k, op)` verbatim — no
+    /// patched gate, no applicability fallback. Serving metrics use this to
+    /// report what a session's warm-start actually bound, separately from
+    /// what [`KernelRegistry::resolve`] would route to.
+    pub fn binding(&self, context: &str, k: usize, op: Semiring) -> Option<RegistryEntry> {
+        self.inner.lock().unwrap().bindings.get(&(context.to_string(), k, op)).cloned()
+    }
+
     /// Engage iSpLib routing (paper `patch()`).
     pub fn set_patched(&self, on: bool) {
         self.inner.lock().unwrap().patched = on;
@@ -101,6 +109,19 @@ impl KernelRegistry {
     /// True when no bindings exist.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Drop every binding under one context key (all Ks, all semirings),
+    /// returning how many were removed. The serving registry calls this
+    /// when a session closes so a later same-named session cannot
+    /// silently inherit a different graph's tuned choices, and a
+    /// long-lived server doesn't accumulate bindings for churned
+    /// sessions.
+    pub fn unbind_context(&self, context: &str) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let before = g.bindings.len();
+        g.bindings.retain(|(ctx, _, _), _| ctx != context);
+        before - g.bindings.len()
     }
 
     /// Drop all bindings (used between experiments).
@@ -162,6 +183,34 @@ mod tests {
             speedup: 2.0,
         });
         assert_eq!(r.resolve("d", 64, Semiring::Max), KernelChoice::Trusted);
+    }
+
+    #[test]
+    fn binding_reads_raw_entry() {
+        let r = KernelRegistry::new();
+        assert!(r.binding("d", 64, Semiring::Sum).is_none());
+        r.bind("d", 64, Semiring::Sum, RegistryEntry {
+            choice: KernelChoice::Tiled { kt: 64 },
+            speedup: 1.3,
+        });
+        // raw binding is visible even though the registry is unpatched
+        let e = r.binding("d", 64, Semiring::Sum).unwrap();
+        assert_eq!(e.choice, KernelChoice::Tiled { kt: 64 });
+        assert_eq!(r.resolve("d", 64, Semiring::Sum), KernelChoice::Trusted);
+    }
+
+    #[test]
+    fn unbind_context_removes_only_that_context() {
+        let r = KernelRegistry::new();
+        r.set_patched(true);
+        let entry = RegistryEntry { choice: KernelChoice::Generated { kb: 8 }, speedup: 2.0 };
+        r.bind("a", 8, Semiring::Sum, entry.clone());
+        r.bind("a", 16, Semiring::Sum, entry.clone());
+        r.bind("b", 8, Semiring::Sum, entry);
+        assert_eq!(r.unbind_context("a"), 2);
+        assert!(r.binding("a", 8, Semiring::Sum).is_none());
+        assert!(r.binding("b", 8, Semiring::Sum).is_some());
+        assert_eq!(r.unbind_context("a"), 0);
     }
 
     #[test]

@@ -240,6 +240,25 @@ impl Tuner {
         Ok(TuningReport { dataset: dataset.to_string(), profile: self.profile.name.clone(), points })
     }
 
+    /// Warm-start from a persisted DB only: bind the recorded winner for
+    /// `(dataset, K)` into the registry **without any measurement**.
+    /// Returns the bound choice, or `None` when the DB has no entry. The
+    /// serving path registers sessions through this so inference setup
+    /// never pays a tuning sweep — per-graph kernel selection keeps paying
+    /// off at inference time, but the measuring happened at training time.
+    pub fn warm_start(
+        &self,
+        dataset: &str,
+        k: usize,
+        registry: &KernelRegistry,
+        db: &TuningDb,
+    ) -> Option<KernelChoice> {
+        let e = db.get(dataset, &self.profile.name, k)?;
+        let choice = e.choice();
+        registry.bind(dataset, k, Semiring::Sum, RegistryEntry { choice, speedup: e.speedup });
+        Some(choice)
+    }
+
     /// Tune a single `(dataset, K)` pair: consult the DB, measure on a miss,
     /// bind the winner into the registry, and record it in the DB.
     pub fn tune(
@@ -250,12 +269,7 @@ impl Tuner {
         registry: &KernelRegistry,
         db: &mut TuningDb,
     ) -> Result<KernelChoice> {
-        if let Some(e) = db.get(dataset, &self.profile.name, k) {
-            let choice = e.choice();
-            registry.bind(dataset, k, Semiring::Sum, RegistryEntry {
-                choice,
-                speedup: e.speedup,
-            });
+        if let Some(choice) = self.warm_start(dataset, k, registry, db) {
             return Ok(choice);
         }
 
@@ -364,6 +378,25 @@ mod tests {
         let candidates = tuner.candidates(17);
         assert!(!candidates.iter().any(|c| matches!(c, KernelChoice::Generated { .. })));
         assert!(candidates.iter().any(|c| matches!(c, KernelChoice::Tiled { .. })));
+    }
+
+    #[test]
+    fn warm_start_binds_without_measuring() {
+        let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+        let registry = KernelRegistry::new();
+        registry.set_patched(true);
+        let mut db = TuningDb::default();
+        // empty DB → no binding, registry untouched
+        assert!(tuner.warm_start("toy", 16, &registry, &db).is_none());
+        assert!(registry.is_empty());
+        // persisted decision → bound verbatim, no kernel ever timed
+        db.put("toy", "amd-epyc", 16, DbEntry { kb: Some(8), kt: None, speedup: 2.0 });
+        assert_eq!(
+            tuner.warm_start("toy", 16, &registry, &db),
+            Some(KernelChoice::Generated { kb: 8 })
+        );
+        assert_eq!(registry.resolve("toy", 16, Semiring::Sum), KernelChoice::Generated { kb: 8 });
+        assert_eq!(registry.binding("toy", 16, Semiring::Sum).unwrap().speedup, 2.0);
     }
 
     #[test]

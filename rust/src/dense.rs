@@ -88,17 +88,34 @@ impl Dense {
     /// two AVX2) are accumulated in a `[f32; 16]` local; the remainder
     /// falls back to the plain loop.
     pub fn matmul(&self, other: &Dense) -> Result<Dense> {
+        let mut out = Dense::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Dense::matmul`] writing into a caller-provided output of shape
+    /// `self.rows × other.cols` (contents are overwritten, like the other
+    /// `*_into` siblings — a recycled buffer needs no re-zeroing). Same
+    /// arithmetic as `matmul`, bit for bit; only the allocation differs —
+    /// this is the seam the workspace-aware tape and the serving forward
+    /// path use to keep dense projections allocation-free.
+    pub fn matmul_into(&self, other: &Dense, out: &mut Dense) -> Result<()> {
         if self.cols != other.rows {
             return Err(Error::ShapeMismatch(format!(
                 "matmul: {}x{} @ {}x{}",
                 self.rows, self.cols, other.rows, other.cols
             )));
         }
+        if out.rows != self.rows || out.cols != other.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "matmul_into: out {}x{} for a {}x{} product",
+                out.rows, out.cols, self.rows, other.cols
+            )));
+        }
         const BW: usize = 16;
         let n = other.cols;
         let blocks = n / BW;
         let tail = blocks * BW;
-        let mut out = Dense::zeros(self.rows, n);
         for i in 0..self.rows {
             let a_row = self.row(i);
             let out_row = out.row_mut(i);
@@ -114,6 +131,11 @@ impl Dense {
                 out_row[base..base + BW].copy_from_slice(&acc);
             }
             if tail < n {
+                // the tail lanes accumulate, so clear them first — the
+                // blocked lanes above already overwrite
+                for o in out_row[tail..].iter_mut() {
+                    *o = 0.0;
+                }
                 for (k, &a) in a_row.iter().enumerate() {
                     if a == 0.0 {
                         continue;
@@ -125,7 +147,7 @@ impl Dense {
                 }
             }
         }
-        Ok(out)
+        Ok(())
     }
 
     /// `self^T @ other` without materialising the transpose.
@@ -177,6 +199,27 @@ impl Dense {
     /// Element-wise addition (shape-checked).
     pub fn add(&self, other: &Dense) -> Result<Dense> {
         self.zip_with(other, |a, b| a + b)
+    }
+
+    /// [`Dense::add`] writing into a caller-provided same-shape output
+    /// (contents are overwritten).
+    pub fn add_into(&self, other: &Dense, out: &mut Dense) -> Result<()> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "elementwise: {}x{} vs {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        if out.rows != self.rows || out.cols != self.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "add_into: out {}x{} vs {}x{}",
+                out.rows, out.cols, self.rows, self.cols
+            )));
+        }
+        for ((o, &a), &b) in out.data.iter_mut().zip(self.data.iter()).zip(other.data.iter()) {
+            *o = a + b;
+        }
+        Ok(())
     }
 
     /// Element-wise subtraction.
@@ -231,22 +274,60 @@ impl Dense {
         self.map(|v| v.max(0.0))
     }
 
-    /// Add a broadcast row vector (bias) to every row.
-    pub fn add_row_broadcast(&self, bias: &[f32]) -> Result<Dense> {
-        if bias.len() != self.cols {
+    /// [`Dense::relu`] writing into a caller-provided same-shape output
+    /// (contents are overwritten).
+    pub fn relu_into(&self, out: &mut Dense) -> Result<()> {
+        if out.rows != self.rows || out.cols != self.cols {
             return Err(Error::ShapeMismatch(format!(
-                "bias: len {} vs cols {}",
-                bias.len(),
-                self.cols
+                "relu_into: out {}x{} vs {}x{}",
+                out.rows, out.cols, self.rows, self.cols
             )));
         }
+        for (o, &v) in out.data.iter_mut().zip(self.data.iter()) {
+            *o = v.max(0.0);
+        }
+        Ok(())
+    }
+
+    /// Add a broadcast row vector (bias) to every row.
+    pub fn add_row_broadcast(&self, bias: &[f32]) -> Result<Dense> {
+        Self::check_bias_len(bias, self.cols)?;
         let mut out = self.clone();
+        Self::add_row_broadcast_in_place(&mut out, bias);
+        Ok(out)
+    }
+
+    /// [`Dense::add_row_broadcast`] writing into a caller-provided
+    /// same-shape output (contents are overwritten).
+    pub fn add_row_broadcast_into(&self, bias: &[f32], out: &mut Dense) -> Result<()> {
+        Self::check_bias_len(bias, self.cols)?;
+        if out.rows != self.rows || out.cols != self.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "add_row_broadcast_into: out {}x{} vs {}x{}",
+                out.rows, out.cols, self.rows, self.cols
+            )));
+        }
+        out.data.copy_from_slice(&self.data);
+        Self::add_row_broadcast_in_place(out, bias);
+        Ok(())
+    }
+
+    fn check_bias_len(bias: &[f32], cols: usize) -> Result<()> {
+        if bias.len() != cols {
+            return Err(Error::ShapeMismatch(format!(
+                "bias: len {} vs cols {cols}",
+                bias.len()
+            )));
+        }
+        Ok(())
+    }
+
+    fn add_row_broadcast_in_place(out: &mut Dense, bias: &[f32]) {
         for r in 0..out.rows {
             for (o, &b) in out.row_mut(r).iter_mut().zip(bias.iter()) {
                 *o += b;
             }
         }
-        Ok(out)
     }
 
     /// Column-sum → vector of length `cols` (used for bias gradients).
@@ -376,6 +457,59 @@ mod tests {
         assert_eq!(with_bias.data, vec![11.0, 22.0, 13.0, 24.0]);
         assert_eq!(a.col_sum(), vec![4.0, 6.0]);
         assert!(a.add_row_broadcast(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn into_variants_match_allocating() {
+        let mut rng = Rng::seed_from_u64(21);
+        let a = Dense::uniform(5, 7, 1.0, &mut rng);
+        let b = Dense::uniform(7, 19, 1.0, &mut rng); // 19 exercises block + tail
+        let want = a.matmul(&b).unwrap();
+        let mut out = Dense::zeros(5, 19);
+        a.matmul_into(&b, &mut out).unwrap();
+        assert_eq!(out.data, want.data, "matmul_into must be bitwise-equal");
+
+        let bias: Vec<f32> = (0..19).map(|i| i as f32 * 0.1).collect();
+        let want = out.add_row_broadcast(&bias).unwrap();
+        let mut biased = Dense::zeros(5, 19);
+        out.add_row_broadcast_into(&bias, &mut biased).unwrap();
+        assert_eq!(biased.data, want.data);
+
+        let want = biased.relu();
+        let mut relued = Dense::zeros(5, 19);
+        biased.relu_into(&mut relued).unwrap();
+        assert_eq!(relued.data, want.data);
+
+        let want = relued.add(&biased).unwrap();
+        let mut summed = Dense::zeros(5, 19);
+        relued.add_into(&biased, &mut summed).unwrap();
+        assert_eq!(summed.data, want.data);
+    }
+
+    #[test]
+    fn matmul_into_overwrites_dirty_buffer() {
+        let mut rng = Rng::seed_from_u64(22);
+        let a = Dense::uniform(4, 6, 1.0, &mut rng);
+        let b = Dense::uniform(6, 19, 1.0, &mut rng); // tail lanes present
+        let want = a.matmul(&b).unwrap();
+        let mut out = Dense::from_vec(4, 19, vec![7.5; 4 * 19]).unwrap();
+        // same call twice into the same dirty buffer: still exact
+        a.matmul_into(&b, &mut out).unwrap();
+        a.matmul_into(&b, &mut out).unwrap();
+        assert_eq!(out.data, want.data, "matmul_into must not depend on prior contents");
+    }
+
+    #[test]
+    fn into_variants_reject_bad_shapes() {
+        let a = Dense::zeros(2, 3);
+        let b = Dense::zeros(3, 4);
+        assert!(a.matmul_into(&b, &mut Dense::zeros(2, 5)).is_err());
+        assert!(a.matmul_into(&Dense::zeros(2, 4), &mut Dense::zeros(2, 4)).is_err());
+        assert!(a.add_row_broadcast_into(&[0.0; 2], &mut Dense::zeros(2, 3)).is_err());
+        assert!(a.add_row_broadcast_into(&[0.0; 3], &mut Dense::zeros(3, 3)).is_err());
+        assert!(a.relu_into(&mut Dense::zeros(3, 2)).is_err());
+        assert!(a.add_into(&Dense::zeros(2, 3), &mut Dense::zeros(2, 2)).is_err());
+        assert!(a.add_into(&Dense::zeros(2, 2), &mut Dense::zeros(2, 3)).is_err());
     }
 
     #[test]

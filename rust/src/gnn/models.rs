@@ -77,6 +77,42 @@ impl GnnModel {
         matches!(self, GnnModel::Gcn)
     }
 
+    /// The embedding widths this model's forward (and, by symmetry of
+    /// `dX = spmm(Aᵀ, dY)`, backward) pass runs SpMM at, for the given
+    /// dimensions — the Ks a tuner must cover before kernel routing pays
+    /// off. GCN projects before aggregating, so its SpMMs run at the
+    /// hidden/class widths; SAGE and GIN aggregate raw features in layer 0
+    /// (`in_dim` on the first SpMM) and hidden activations in layer 1.
+    /// Sorted and deduplicated.
+    pub fn spmm_widths(self, dims: ModelParams) -> Vec<usize> {
+        let mut ks = match self {
+            GnnModel::Gcn => vec![dims.hidden, dims.classes],
+            GnnModel::SageSum | GnnModel::SageMean | GnnModel::Gin => {
+                vec![dims.in_dim, dims.hidden]
+            }
+        };
+        ks.sort_unstable();
+        ks.dedup();
+        ks
+    }
+
+    /// [`GnnModel::spmm_widths`] extended with every coalesced multiple up
+    /// to `max_batch` — the widths batched inference
+    /// ([`crate::serve`]) actually runs SpMM at when `b` same-graph
+    /// requests share one call. Tune these at training time and serving
+    /// warm-starts them without measurement. Sorted and deduplicated.
+    pub fn serving_spmm_widths(self, dims: ModelParams, max_batch: usize) -> Vec<usize> {
+        let mut ks = Vec::new();
+        for base in self.spmm_widths(dims) {
+            for b in 1..=max_batch.max(1) {
+                ks.push(base * b);
+            }
+        }
+        ks.sort_unstable();
+        ks.dedup();
+        ks
+    }
+
     /// Initialise parameters for the given dimensions.
     pub fn init_params(self, dims: ModelParams, seed: u64) -> ParamSet {
         let mut p = ParamSet::new();
@@ -219,6 +255,28 @@ mod tests {
         assert_eq!(GnnModel::Gin.norm_kind(), NormKind::None);
         assert!(GnnModel::Gcn.projects_before_spmm());
         assert!(!GnnModel::SageSum.projects_before_spmm());
+    }
+
+    #[test]
+    fn spmm_widths_match_forward_structure() {
+        let dims = ModelParams { in_dim: 50, hidden: 16, classes: 3 };
+        assert_eq!(GnnModel::Gcn.spmm_widths(dims), vec![3, 16]);
+        assert_eq!(GnnModel::SageSum.spmm_widths(dims), vec![16, 50]);
+        assert_eq!(GnnModel::SageMean.spmm_widths(dims), vec![16, 50]);
+        assert_eq!(GnnModel::Gin.spmm_widths(dims), vec![16, 50]);
+        // duplicates collapse (hidden == in_dim)
+        let square = ModelParams { in_dim: 16, hidden: 16, classes: 2 };
+        assert_eq!(GnnModel::Gin.spmm_widths(square), vec![16]);
+    }
+
+    #[test]
+    fn serving_widths_cover_coalesced_multiples() {
+        let dims = ModelParams { in_dim: 50, hidden: 16, classes: 3 };
+        // GCN bases {3, 16} × batch 1..=2, deduped and sorted
+        assert_eq!(GnnModel::Gcn.serving_spmm_widths(dims, 2), vec![3, 6, 16, 32]);
+        // max_batch 1 (and the 0 clamp) degenerate to the base widths
+        assert_eq!(GnnModel::Gcn.serving_spmm_widths(dims, 1), vec![3, 16]);
+        assert_eq!(GnnModel::Gcn.serving_spmm_widths(dims, 0), vec![3, 16]);
     }
 
     #[test]

@@ -106,7 +106,7 @@ pub fn spmm_with_workspace(
 
     // Output: pooled (pre-zeroed) when a workspace is supplied.
     let mut y = match ws {
-        Some((w, _)) => Dense { rows: a.rows, cols: k, data: w.take_buffer(a.rows * k) },
+        Some((w, _)) => w.take_dense(a.rows, k),
         None => Dense::zeros(a.rows, k),
     };
 

@@ -17,14 +17,20 @@
 //!   next epoch, converting per-call page faults into a warm `memset`.
 //!
 //! The workspace is shared (`Mutex`-guarded, `Arc`-cloned) between the
-//! trainer, the autodiff tape, and the dispatcher
-//! ([`spmm_with_workspace`](super::spmm)); hit/miss counters make its
-//! effect measurable the same way `CacheStats` does for the backprop
-//! cache.
+//! trainer, the autodiff tape, the dispatcher
+//! ([`spmm_with_workspace`](super::spmm)) — and, since the serving
+//! subsystem landed, between *all* sessions of the multi-graph inference
+//! server. Multi-tenancy shapes the API: partitions are keyed per graph and
+//! individually evictable ([`KernelWorkspace::evict`]) when a session
+//! closes, and the buffer pool is binned by size class so `take_buffer`
+//! stays O(bins) under the shared lock instead of walking every retired
+//! buffer. Hit/miss counters make its effect measurable the same way
+//! `CacheStats` does for the backprop cache.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
 
+use crate::dense::Dense;
 use crate::sparse::Csr;
 
 use super::partition::{nnz_balanced_partition, RowRange};
@@ -33,6 +39,13 @@ use super::partition::{nnz_balanced_partition, RowRange};
 /// recycled buffers are simply freed. A GNN tape produces ~2 buffers per
 /// layer per epoch, so this comfortably covers the paper's model zoo.
 const MAX_POOLED_BUFFERS: usize = 32;
+
+/// Size class of a buffer capacity: `floor(log2(cap))`, so class `c` holds
+/// buffers with capacity in `[2^c, 2^(c+1))`. Bin lookup replaces the old
+/// O(pool) best-fit walk under the lock with a bounded range scan.
+fn size_class(cap: usize) -> u32 {
+    usize::BITS - 1 - cap.max(1).leading_zeros()
+}
 
 /// Counters for workspace effectiveness (mirrors `cache::CacheStats`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -58,7 +71,12 @@ struct CachedPartition {
 #[derive(Default)]
 struct Inner {
     partitions: HashMap<(u64, usize), CachedPartition>,
-    buffers: Vec<Vec<f32>>,
+    /// Retired buffers, binned by [`size_class`] of their capacity. Serving
+    /// mixes many sizes (per-graph node counts × per-request widths) in one
+    /// shared pool, so `take_buffer` must not scan every buffer per call.
+    bins: BTreeMap<u32, Vec<Vec<f32>>>,
+    /// Total buffers across all bins (bounded by `MAX_POOLED_BUFFERS`).
+    pooled: usize,
     stats: WorkspaceStats,
 }
 
@@ -108,22 +126,42 @@ impl KernelWorkspace {
         ranges
     }
 
-    /// A zeroed `len`-element buffer: best-fit from the pool (smallest
-    /// retired buffer whose capacity covers `len`) or freshly allocated.
+    /// A zeroed `len`-element buffer: smallest-class fit from the binned
+    /// pool or freshly allocated. The scan touches at most one bin's
+    /// contents (the same-class bin, whose buffers may still be smaller
+    /// than `len`) plus the first non-empty higher bin — not the whole
+    /// pool.
     pub fn take_buffer(&self, len: usize) -> Vec<f32> {
         let reclaimed = {
             let mut g = self.inner.lock().unwrap();
-            let mut best: Option<(usize, usize)> = None;
-            for (i, b) in g.buffers.iter().enumerate() {
-                let cap = b.capacity();
-                if cap >= len && best.map(|(_, c)| cap < c).unwrap_or(true) {
-                    best = Some((i, cap));
+            let start = size_class(len.max(1));
+            let mut hit: Option<(u32, Option<usize>)> = None;
+            for (&class, bin) in g.bins.range(start..) {
+                if class == start {
+                    if let Some(i) = bin.iter().position(|b| b.capacity() >= len) {
+                        hit = Some((class, Some(i)));
+                        break;
+                    }
+                } else if !bin.is_empty() {
+                    // any buffer in a higher class has capacity ≥ 2^class > len
+                    hit = Some((class, None));
+                    break;
                 }
             }
-            match best {
-                Some((i, _)) => {
+            match hit {
+                Some((class, idx)) => {
+                    let bin = g.bins.get_mut(&class).unwrap();
+                    let buf = match idx {
+                        Some(i) => bin.swap_remove(i),
+                        None => bin.pop().unwrap(),
+                    };
+                    let emptied = bin.is_empty();
+                    if emptied {
+                        g.bins.remove(&class);
+                    }
+                    g.pooled -= 1;
                     g.stats.buffer_reuses += 1;
-                    Some(g.buffers.swap_remove(i))
+                    Some(buf)
                 }
                 None => {
                     g.stats.buffer_allocs += 1;
@@ -141,6 +179,15 @@ impl KernelWorkspace {
         }
     }
 
+    /// A zeroed `rows × cols` [`Dense`] over a pooled buffer — the one
+    /// place the pooled-matrix construction lives, so every consumer (the
+    /// SpMM dispatcher, the tape's dense ops, the serving forward path)
+    /// shares a single definition of the zeroed-buffer contract. Recycle
+    /// the matrix's `data` when retired.
+    pub fn take_dense(&self, rows: usize, cols: usize) -> Dense {
+        Dense { rows, cols, data: self.take_buffer(rows * cols) }
+    }
+
     /// Return a retired buffer to the pool (dropped if the pool is full or
     /// the buffer has no capacity worth keeping).
     pub fn recycle(&self, mut buf: Vec<f32>) {
@@ -148,10 +195,36 @@ impl KernelWorkspace {
             return;
         }
         buf.clear();
+        let class = size_class(buf.capacity());
         let mut g = self.inner.lock().unwrap();
-        if g.buffers.len() < MAX_POOLED_BUFFERS {
-            g.buffers.push(buf);
+        if g.pooled < MAX_POOLED_BUFFERS {
+            g.pooled += 1;
+            g.bins.entry(class).or_default().push(buf);
         }
+    }
+
+    /// Drop every cached partition belonging to `graph_id` (including its
+    /// derived transpose identity). Serving churns graphs — a closed
+    /// session must release its partition entries without nuking the other
+    /// tenants' (whole-pool [`KernelWorkspace::clear`] was the only option
+    /// before). Pooled buffers are graph-agnostic and survive eviction.
+    /// Returns the number of partition entries removed.
+    pub fn evict(&self, graph_id: u64) -> usize {
+        let tid = Self::transpose_id(graph_id);
+        let mut g = self.inner.lock().unwrap();
+        let before = g.partitions.len();
+        g.partitions.retain(|&(id, _), _| id != graph_id && id != tid);
+        before - g.partitions.len()
+    }
+
+    /// Number of cached partition entries (diagnostics).
+    pub fn cached_partitions(&self) -> usize {
+        self.inner.lock().unwrap().partitions.len()
+    }
+
+    /// Number of buffers currently resting in the pool (diagnostics).
+    pub fn pooled_buffers(&self) -> usize {
+        self.inner.lock().unwrap().pooled
     }
 
     /// Snapshot of the counters.
@@ -163,7 +236,8 @@ impl KernelWorkspace {
     pub fn clear(&self) {
         let mut g = self.inner.lock().unwrap();
         g.partitions.clear();
-        g.buffers.clear();
+        g.bins.clear();
+        g.pooled = 0;
         g.stats = WorkspaceStats::default();
     }
 }
@@ -253,6 +327,65 @@ mod tests {
         assert_eq!(ws.stats().buffer_allocs, 0);
         let _ = ws.take_buffer(4);
         assert_eq!(ws.stats().buffer_allocs, 1);
+    }
+
+    #[test]
+    fn evict_removes_one_graph_only() {
+        let ws = KernelWorkspace::new();
+        let a = graph(16);
+        ws.partition(1, &a, 2);
+        ws.partition(1, &a, 4);
+        ws.partition(KernelWorkspace::transpose_id(1), &a, 2);
+        ws.partition(2, &a, 2);
+        ws.recycle(vec![0.0; 64]);
+        assert_eq!(ws.cached_partitions(), 4);
+        // graph 1 and its transpose identity go; graph 2 survives
+        assert_eq!(ws.evict(1), 3);
+        assert_eq!(ws.cached_partitions(), 1);
+        // buffers are graph-agnostic: eviction leaves the pool alone
+        assert_eq!(ws.pooled_buffers(), 1);
+        // graph 2 still hits; graph 1 recomputes
+        let misses = ws.stats().partition_misses;
+        ws.partition(2, &a, 2);
+        assert_eq!(ws.stats().partition_misses, misses);
+        ws.partition(1, &a, 2);
+        assert_eq!(ws.stats().partition_misses, misses + 1);
+        // evicting an unknown graph is a no-op
+        assert_eq!(ws.evict(999), 0);
+    }
+
+    #[test]
+    fn binned_pool_reuses_exact_and_larger_classes() {
+        let ws = KernelWorkspace::new();
+        // exact-size steady state (the training loop's shape): a buffer of
+        // capacity == len must be reused for the same len
+        ws.recycle(vec![0.0; 1440]);
+        let b = ws.take_buffer(1440);
+        assert_eq!(b.len(), 1440);
+        assert_eq!(ws.stats().buffer_reuses, 1);
+        ws.recycle(b);
+        // a higher size class serves smaller requests
+        let b = ws.take_buffer(100);
+        assert_eq!(b.len(), 100);
+        assert_eq!(ws.stats().buffer_reuses, 2);
+        assert_eq!(ws.stats().buffer_allocs, 0);
+        // nothing pooled is big enough → fresh allocation
+        ws.recycle(b);
+        let big = ws.take_buffer(1 << 20);
+        assert_eq!(big.len(), 1 << 20);
+        assert_eq!(ws.stats().buffer_allocs, 1);
+    }
+
+    #[test]
+    fn size_class_boundaries() {
+        assert_eq!(size_class(1), 0);
+        assert_eq!(size_class(2), 1);
+        assert_eq!(size_class(3), 1);
+        assert_eq!(size_class(4), 2);
+        assert_eq!(size_class(1023), 9);
+        assert_eq!(size_class(1024), 10);
+        // degenerate input clamps instead of panicking
+        assert_eq!(size_class(0), 0);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! isplib tune [--profiles P] [...]   # regenerate Figure 2 tuning graphs
 //! isplib train --model gcn --dataset reddit --backend isplib [...]
 //! isplib bench [...]                 # regenerate the Figure 3 grid
+//! isplib serve-bench [...]           # multi-graph serving bench → BENCH_serving.json
 //! ```
 
 use isplib::autotune::{render_ascii_chart, HardwareProfile};
@@ -37,6 +38,16 @@ COMMANDS:
   bench      Regenerate Figure 3    [--models gcn,sage-sum,gin]
              [--datasets all] [--frameworks all] [--epochs 10]
              [--hidden 32] [--scale 256] [--json]
+  serve-bench  Batched multi-graph inference serving bench: trains one
+             model per dataset, registers warm-started sessions sharing
+             one worker pool + kernel workspace, drives a skewed load
+             through the DRR scheduler, verifies batched == per-request
+             bitwise and that inference leaves the backprop cache
+             untouched, and emits BENCH_serving.json.
+             [--datasets ogbn-protein,reddit] [--models gcn,sage-sum]
+             [--requests 24] [--skew 4] [--max-batch 8] [--quantum 4]
+             [--threads 2] [--epochs 3] [--hidden 16] [--scale 2048]
+             [--out BENCH_serving.json] [--json]
 
 Models:     gcn | sage-sum | sage-mean | gin
 Backends:   isplib | pt2 | pt1 | pt2-mp | dense | hlo
@@ -65,6 +76,7 @@ fn run(args: Args) -> Result<()> {
         Some("tune") => tune(&args),
         Some("train") => train(&args),
         Some("bench") => bench(&args),
+        Some("serve-bench") => serve_bench(&args),
         Some("help") | None => {
             println!("{USAGE}");
             Ok(())
@@ -184,6 +196,246 @@ fn bench(args: &Args) -> Result<()> {
             println!("  {model}: {speedup:.1}x");
         }
     }
+    Ok(())
+}
+
+/// The serving acceptance bench: ≥2 graph sessions over one pool/workspace,
+/// skewed load through the DRR scheduler, bitwise + cache-untouched checks,
+/// `BENCH_serving.json` out. Errors (non-zero exit) if any check fails.
+fn serve_bench(args: &Args) -> Result<()> {
+    use std::time::Instant;
+
+    use isplib::autotune::{KernelRegistry, TuneConfig, Tuner, TuningDb};
+    use isplib::dense::Dense;
+    use isplib::gnn::ModelParams;
+    use isplib::kernels::Semiring;
+    use isplib::serve::{InferenceServer, ServeConfig};
+    use isplib::util::parallel::WorkerPool;
+    use isplib::util::rng::Rng;
+
+    let scale = args.get_parse("scale", 2048usize)?;
+    let hidden = args.get_parse("hidden", 16usize)?;
+    let epochs = args.get_parse("epochs", 3usize)?;
+    let requests = args.get_parse("requests", 24usize)?;
+    let skew = args.get_parse("skew", 4usize)?.max(1);
+    let cfg = ServeConfig {
+        max_batch: args.get_parse("max-batch", 8usize)?,
+        quantum: args.get_parse("quantum", 4usize)?,
+        threads: args.get_parse("threads", 2usize)?,
+    };
+    let out_path = args.get("out", "BENCH_serving.json");
+    let datasets_arg = args.get("datasets", "ogbn-protein,reddit");
+    let names: Vec<&str> = datasets_arg.split(',').map(|s| s.trim()).collect();
+    if names.len() < 2 {
+        return Err(Error::Config("serve-bench needs ≥ 2 sessions (--datasets a,b)".into()));
+    }
+    let model_list = parse_models(&args.get("models", "gcn,sage-sum"))?;
+
+    // --- train one model per dataset: the sessions' frozen params --------
+    let mut trained = Vec::new();
+    for (i, name) in names.iter().enumerate() {
+        let ds = if *name == "karate" {
+            karate_club()
+        } else {
+            spec_by_name(name)
+                .ok_or_else(|| Error::UnknownName(format!("dataset '{name}'")))?
+                .instantiate(scale, 7)?
+        };
+        let model = model_list[i % model_list.len()];
+        let tcfg = TrainConfig {
+            epochs,
+            hidden,
+            threads: cfg.threads,
+            skip_tuning: true,
+            ..TrainConfig::default()
+        };
+        let mut trainer = Trainer::new(model, Backend::NativeTuned, tcfg, &ds)?;
+        trainer.fit(&ds)?;
+        trained.push((ds, model, trainer));
+    }
+
+    // --- tune at "training time", persisting decisions into a DB. Cover
+    // the coalesced batch widths too: that is what the sessions warm-start
+    // and what batched inference actually runs SpMM at. ------------------
+    let tuner = Tuner::with_config(
+        HardwareProfile::named("host")?,
+        TuneConfig { ks: vec![], reps: 1, warmup: 0, threads: cfg.threads },
+    );
+    let registry = KernelRegistry::global();
+    registry.set_patched(true);
+    let mut db = TuningDb::default();
+    for (ds, model, _) in &trained {
+        let dims = ModelParams { in_dim: ds.feature_dim(), hidden, classes: ds.num_classes };
+        let a = model.norm_kind().apply(&ds.adj)?;
+        for k in model.serving_spmm_widths(dims, cfg.max_batch) {
+            tuner.tune(&ds.name, &a, k, registry, &mut db)?;
+        }
+    }
+
+    // --- register sessions: warm-started, no serving-time measurement ----
+    let mut server = InferenceServer::new(cfg);
+    let mut sids = Vec::new();
+    for (ds, model, trainer) in &trained {
+        let dims = ModelParams { in_dim: ds.feature_dim(), hidden, classes: ds.num_classes };
+        let sid = server.register_session(
+            &ds.name,
+            *model,
+            dims,
+            trainer.export_params()?,
+            &ds.adj,
+            Some((&tuner, &db)),
+        )?;
+        sids.push(sid);
+    }
+
+    // --- offered load: session 0 floods skew×, everyone else 1× ----------
+    let mut rng = Rng::seed_from_u64(17);
+    let mut offered = vec![0usize; sids.len()];
+    for (i, &sid) in sids.iter().enumerate() {
+        let count = if i == 0 { requests * skew } else { requests };
+        let (n, f) = {
+            let s = server.session(sid)?;
+            (s.nodes(), s.dims.in_dim)
+        };
+        for _ in 0..count {
+            server.submit(sid, Dense::uniform(n, f, 1.0, &mut rng))?;
+        }
+        offered[i] = count;
+    }
+    let total: usize = offered.iter().sum();
+
+    let cache_before: Vec<_> = trained.iter().map(|(_, _, t)| t.cache().stats()).collect();
+    let jobs_before = WorkerPool::global().jobs_executed();
+    let t0 = Instant::now();
+    let done = server.run_until_drained()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let pool_jobs = WorkerPool::global().jobs_executed() - jobs_before;
+
+    // --- acceptance checks ------------------------------------------------
+    if done.len() != total {
+        return Err(Error::Runtime(format!(
+            "serve-bench: {} of {total} requests completed",
+            done.len()
+        )));
+    }
+    let mut checked = 0usize;
+    for &sid in &sids {
+        for c in done.iter().filter(|c| c.session == sid).take(4) {
+            let solo = server.infer_now(sid, &c.features)?;
+            if solo.data != c.output.data {
+                return Err(Error::Runtime(format!(
+                    "serve-bench: batched output for request {} diverged from per-request inference",
+                    c.id
+                )));
+            }
+            checked += 1;
+        }
+    }
+    let cache_after: Vec<_> = trained.iter().map(|(_, _, t)| t.cache().stats()).collect();
+    if cache_before != cache_after {
+        return Err(Error::Runtime(
+            "serve-bench: the inference path touched a BackpropCache".into(),
+        ));
+    }
+
+    // --- report -----------------------------------------------------------
+    let wstats = server.workspace().stats();
+    let spread = server.p99_spread();
+    println!(
+        "serve-bench: {} sessions sharing 1 pool/workspace; {} requests ({checked} verified \
+         bitwise vs per-request), {wall:.3}s wall, {pool_jobs} pool jobs, cache untouched",
+        sids.len(),
+        done.len()
+    );
+    let mut sessions_json = Vec::new();
+    for (i, &sid) in sids.iter().enumerate() {
+        let s = server.session(sid)?;
+        let m = server.metrics(sid)?;
+        let (p50_ns, p99_ns) = m.latency_percentiles();
+        let kernels: Vec<String> = s
+            .model
+            .spmm_widths(s.dims)
+            .into_iter()
+            .map(|k| format!("K{k}:{}", registry.resolve(&s.name, k, Semiring::Sum).label()))
+            .collect();
+        println!(
+            "  {:<16} model={:<9} nodes={:<6} requests={:<4} batches={:<3} occupancy={:.2} \
+             p50={:.1}µs p99={:.1}µs warm={} kernels=[{}]",
+            s.name,
+            s.model.name(),
+            s.nodes(),
+            m.requests,
+            m.batches,
+            m.occupancy(),
+            p50_ns / 1e3,
+            p99_ns / 1e3,
+            s.warm_started,
+            kernels.join(" ")
+        );
+        sessions_json.push(Json::obj(vec![
+            ("name", Json::str(&s.name)),
+            ("model", Json::str(s.model.name())),
+            ("nodes", Json::num(s.nodes() as f64)),
+            ("nnz", Json::num(s.nnz() as f64)),
+            ("offered", Json::num(offered[i] as f64)),
+            ("warm_started", Json::num(s.warm_started as f64)),
+            ("kernels", Json::Arr(kernels.iter().map(|k| Json::str(k)).collect())),
+            ("metrics", m.to_json()),
+        ]));
+    }
+    println!("  fairness p99 spread: {spread:.2}x; workspace: {wstats:?}");
+
+    // eviction demo: churn the last session out of the shared workspace
+    let last = *sids.last().unwrap();
+    let evicted = server.close_session(last)?;
+    println!(
+        "  closed 1 session → evicted {evicted} partition entries ({} remain)",
+        server.workspace().cached_partitions()
+    );
+
+    let doc = Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("sessions", Json::num(sids.len() as f64)),
+                ("requests_light", Json::num(requests as f64)),
+                ("skew", Json::num(skew as f64)),
+                ("max_batch", Json::num(cfg.max_batch as f64)),
+                ("quantum", Json::num(cfg.quantum as f64)),
+                ("threads", Json::num(cfg.threads as f64)),
+                ("scale", Json::num(scale as f64)),
+                ("hidden", Json::num(hidden as f64)),
+            ]),
+        ),
+        ("sessions", Json::Arr(sessions_json)),
+        ("fairness", Json::obj(vec![("p99_spread", Json::num(spread))])),
+        (
+            "checks",
+            Json::obj(vec![
+                ("completed", Json::num(done.len() as f64)),
+                ("bitwise_checked", Json::num(checked as f64)),
+                ("batched_bitwise_equal", Json::bool(true)),
+                ("backprop_cache_untouched", Json::bool(true)),
+                ("shared_pool_jobs", Json::num(pool_jobs as f64)),
+                ("evicted_on_close", Json::num(evicted as f64)),
+            ]),
+        ),
+        (
+            "workspace",
+            Json::obj(vec![
+                ("partition_hits", Json::num(wstats.partition_hits as f64)),
+                ("partition_misses", Json::num(wstats.partition_misses as f64)),
+                ("buffer_reuses", Json::num(wstats.buffer_reuses as f64)),
+                ("buffer_allocs", Json::num(wstats.buffer_allocs as f64)),
+            ]),
+        ),
+        ("wall_secs", Json::num(wall)),
+    ]);
+    std::fs::write(&out_path, doc.pretty())?;
+    if args.has("json") {
+        println!("{}", doc.pretty());
+    }
+    println!("serve-bench: wrote {out_path}");
     Ok(())
 }
 

@@ -1,0 +1,174 @@
+//! Per-session serving metrics: request latency percentiles, batch
+//! occupancy, and the cross-session fairness spread.
+//!
+//! Latency is measured enqueue → batch completion, so it includes queueing
+//! delay — exactly the quantity the scheduler's fairness is supposed to
+//! bound for light sessions under a heavy co-tenant. The percentile
+//! definition is shared with the bench harness
+//! ([`crate::util::bench::percentile`]) so `BENCH_serving.json` snapshots
+//! stay comparable PR-over-PR.
+
+use std::collections::VecDeque;
+
+use crate::util::bench::percentiles;
+use crate::util::json::Json;
+
+/// Latency samples retained per session (a sliding window over the most
+/// recent requests). Bounds a long-lived session's metric memory and keeps
+/// percentile reads O(window), while still covering far more traffic than
+/// one scheduler round.
+const MAX_LATENCY_SAMPLES: usize = 4096;
+
+/// Rolling counters for one serving session.
+#[derive(Clone, Debug, Default)]
+pub struct SessionMetrics {
+    /// Completed requests (lifetime count, not windowed).
+    pub requests: u64,
+    /// Executed batches (one coalesced SpMM chain each; lifetime count).
+    pub batches: u64,
+    /// Sliding window of per-request latencies in nanoseconds (enqueue →
+    /// completion), most recent [`MAX_LATENCY_SAMPLES`].
+    latencies_ns: VecDeque<f64>,
+    /// Σ batch_size / max_batch — occupancy numerator.
+    occupancy_sum: f64,
+}
+
+impl SessionMetrics {
+    /// Record one executed batch and its requests' latencies.
+    pub fn record_batch(&mut self, batch_size: usize, max_batch: usize, latencies_ns: &[f64]) {
+        self.requests += batch_size as u64;
+        self.batches += 1;
+        self.occupancy_sum += batch_size as f64 / max_batch.max(1) as f64;
+        for &l in latencies_ns {
+            if self.latencies_ns.len() == MAX_LATENCY_SAMPLES {
+                self.latencies_ns.pop_front();
+            }
+            self.latencies_ns.push_back(l);
+        }
+    }
+
+    /// Latency samples currently in the window.
+    pub fn latency_samples(&self) -> usize {
+        self.latencies_ns.len()
+    }
+
+    fn window(&self) -> Vec<f64> {
+        self.latencies_ns.iter().copied().collect()
+    }
+
+    /// `(p50, p99)` request latency in nanoseconds over the sample window
+    /// (zeros with no traffic), computed with one sort — snapshots read
+    /// both, so this is the cheap path.
+    pub fn latency_percentiles(&self) -> (f64, f64) {
+        let v = percentiles(&self.window(), &[50.0, 99.0]);
+        (v[0], v[1])
+    }
+
+    /// Median request latency in nanoseconds over the sample window (0
+    /// with no traffic).
+    pub fn p50_ns(&self) -> f64 {
+        self.latency_percentiles().0
+    }
+
+    /// 99th-percentile request latency in nanoseconds over the sample
+    /// window (0 with no traffic).
+    pub fn p99_ns(&self) -> f64 {
+        self.latency_percentiles().1
+    }
+
+    /// Mean requests per executed batch.
+    pub fn avg_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Mean batch fill ratio in `[0, 1]` (1 = every batch hit `max_batch`).
+    pub fn occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.occupancy_sum / self.batches as f64
+        }
+    }
+
+    /// JSON snapshot for the serving bench.
+    pub fn to_json(&self) -> Json {
+        let (p50, p99) = self.latency_percentiles();
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("avg_batch", Json::num(self.avg_batch())),
+            ("occupancy", Json::num(self.occupancy())),
+            ("p50_ns", Json::num(p50)),
+            ("p99_ns", Json::num(p99)),
+        ])
+    }
+}
+
+/// Fairness spread across sessions: max/min ratio of per-session p99
+/// latencies (≥ 1.0; 1.0 = perfectly even). Sessions with no completed
+/// requests are skipped; fewer than two active sessions → 1.0 (nothing to
+/// be unfair between).
+pub fn fairness_spread(p99s_ns: &[f64]) -> f64 {
+    let active: Vec<f64> = p99s_ns.iter().copied().filter(|&v| v > 0.0).collect();
+    if active.len() < 2 {
+        return 1.0;
+    }
+    let max = active.iter().cloned().fold(f64::MIN, f64::max);
+    let min = active.iter().cloned().fold(f64::MAX, f64::min);
+    max / min
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = SessionMetrics::default();
+        assert_eq!(m.p50_ns(), 0.0);
+        assert_eq!(m.p99_ns(), 0.0);
+        assert_eq!(m.avg_batch(), 0.0);
+        assert_eq!(m.occupancy(), 0.0);
+    }
+
+    #[test]
+    fn record_batch_accumulates() {
+        let mut m = SessionMetrics::default();
+        m.record_batch(4, 8, &[100.0, 200.0, 300.0, 400.0]);
+        m.record_batch(2, 8, &[500.0, 600.0]);
+        assert_eq!(m.requests, 6);
+        assert_eq!(m.batches, 2);
+        assert!((m.avg_batch() - 3.0).abs() < 1e-12);
+        assert!((m.occupancy() - (0.5 + 0.25) / 2.0).abs() < 1e-12);
+        assert!(m.p50_ns() >= 300.0 && m.p50_ns() <= 400.0);
+        assert!(m.p99_ns() <= 600.0 && m.p99_ns() > 500.0);
+        let json = m.to_json();
+        assert_eq!(json.get("requests").unwrap().as_f64().unwrap(), 6.0);
+    }
+
+    #[test]
+    fn latency_window_is_bounded() {
+        let mut m = SessionMetrics::default();
+        let batch: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        for _ in 0..60 {
+            m.record_batch(batch.len(), 8, &batch);
+        }
+        // 6000 samples offered, window holds the most recent 4096
+        assert_eq!(m.requests, 6000);
+        assert_eq!(m.latency_samples(), MAX_LATENCY_SAMPLES);
+        assert!(m.p99_ns() <= 99.0);
+    }
+
+    #[test]
+    fn fairness_spread_ratio() {
+        assert_eq!(fairness_spread(&[]), 1.0);
+        assert_eq!(fairness_spread(&[5.0]), 1.0);
+        assert_eq!(fairness_spread(&[0.0, 5.0]), 1.0); // idle session skipped
+        assert!((fairness_spread(&[100.0, 400.0]) - 4.0).abs() < 1e-12);
+        assert!((fairness_spread(&[300.0, 300.0]) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,52 @@
+//! Batched multi-graph inference serving — the "many graphs, one pool"
+//! subsystem.
+//!
+//! Training (the paper's subject) runs one graph at a time; production
+//! serving interleaves requests against **many** registered graphs, all
+//! contending for the same CPU. This module turns the kernel library into
+//! that infrastructure. The flow is **session → batcher → scheduler**:
+//!
+//! 1. **Session** ([`SessionRegistry`], [`ServeSession`]) — a frozen
+//!    `(graph, trained model)` pair: adjacency normalised once at
+//!    registration, parameters cloned out of a trainer, and tuned kernel
+//!    choices *warm-started* from a persisted
+//!    [`TuningDb`](crate::autotune::TuningDb) — per-graph kernel selection
+//!    keeps paying off at inference time, but no measurement runs at
+//!    serving time. Every session shares one
+//!    [`KernelWorkspace`](crate::kernels::KernelWorkspace) (partitions
+//!    keyed per graph, evicted per graph on close; buffers pooled across
+//!    graphs) and, transitively, the one process-wide
+//!    [`WorkerPool`](crate::util::parallel::WorkerPool).
+//! 2. **Batcher** ([`SessionQueue`], [`concat_cols`]/[`split_cols`]) —
+//!    same-graph requests are micro-batched by column-concatenating their
+//!    feature matrices, so `m` requests share **one** SpMM per aggregation
+//!    point. Every kernel family accumulates each output element
+//!    independently along the row's non-zero stream, so the coalesced
+//!    result is **bitwise-equal** to per-request execution.
+//! 3. **Scheduler** ([`InferenceServer`]) — deficit round robin across
+//!    sessions (request-count costs) so a flooding session cannot starve a
+//!    light co-tenant of the shared pool. Per-session
+//!    [`SessionMetrics`] record p50/p99 latency and batch occupancy;
+//!    [`fairness_spread`] summarises cross-session evenness.
+//!
+//! The inference path is **cache-free**: it records no tape, computes no
+//! gradients, and never touches a
+//! [`BackpropCache`](crate::cache::BackpropCache) — a serving run leaves
+//! `CacheStats` unchanged (the `serve-bench` CLI subcommand asserts this,
+//! along with the bitwise batching equality, and emits
+//! `BENCH_serving.json`).
+
+mod batch;
+mod forward;
+mod metrics;
+mod scheduler;
+mod session;
+
+pub use batch::{
+    concat_cols, concat_cols_into, split_cols, split_cols_into, CompletedInference,
+    InferenceRequest, SessionQueue,
+};
+pub use forward::{infer_batched, infer_one};
+pub use metrics::{fairness_spread, SessionMetrics};
+pub use scheduler::{InferenceServer, ServeConfig};
+pub use session::{ServeSession, SessionId, SessionRegistry};

@@ -1,0 +1,482 @@
+//! Deficit-round-robin scheduling of batched inference over the shared
+//! worker pool.
+//!
+//! Cross-graph fairness is the whole point of this layer: every session's
+//! kernel calls land on the **one** process-wide
+//! [`WorkerPool`](crate::util::parallel::WorkerPool) and the **one** shared
+//! [`KernelWorkspace`], so without admission control a flooding session
+//! would starve its co-tenants. The scheduler runs classic deficit round
+//! robin with request-count costs: each backlogged session banks `quantum`
+//! credits per round and serves micro-batches (up to `max_batch` requests
+//! coalesced into one SpMM chain) while credit lasts; idle sessions bank
+//! nothing. A session that offers 10× the load gets the same per-round
+//! service as its neighbours — heavy sessions queue behind their own
+//! backlog, light sessions stay fast.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::autotune::{Tuner, TuningDb};
+use crate::dense::Dense;
+use crate::error::{Error, Result};
+use crate::gnn::{GnnModel, ModelParams, ParamSet};
+use crate::kernels::KernelWorkspace;
+use crate::sparse::Csr;
+
+use super::batch::{CompletedInference, InferenceRequest, SessionQueue};
+use super::forward::{infer_batched, infer_one};
+use super::metrics::{fairness_spread, SessionMetrics};
+use super::session::{ServeSession, SessionId, SessionRegistry};
+
+/// Serving configuration. Zero values are clamped to their minimum (1)
+/// except `threads`, where 0 means the worker-pool default.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Max same-graph requests coalesced into one SpMM chain.
+    pub max_batch: usize,
+    /// DRR credit (in requests) granted per backlogged session per round.
+    pub quantum: usize,
+    /// Kernel thread budget per batch (0 → worker-pool default).
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 8, quantum: 4, threads: 0 }
+    }
+}
+
+/// The multi-graph inference server: session registry + per-session
+/// request queues + the DRR scheduler. See the module docs for the
+/// fairness model and [`super`] for the subsystem overview.
+pub struct InferenceServer {
+    cfg: ServeConfig,
+    registry: SessionRegistry,
+    queues: Vec<SessionQueue>,
+    deficits: Vec<usize>,
+    metrics: Vec<SessionMetrics>,
+    next_request: u64,
+    rr_start: usize,
+}
+
+impl InferenceServer {
+    /// A fresh server with its own shared workspace.
+    pub fn new(cfg: ServeConfig) -> Self {
+        InferenceServer {
+            cfg,
+            registry: SessionRegistry::new(),
+            queues: Vec::new(),
+            deficits: Vec::new(),
+            metrics: Vec::new(),
+            next_request: 1,
+            rr_start: 0,
+        }
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> ServeConfig {
+        self.cfg
+    }
+
+    /// The workspace all sessions share.
+    pub fn workspace(&self) -> &Arc<KernelWorkspace> {
+        self.registry.workspace()
+    }
+
+    /// Register a `(graph, trained model)` session; see
+    /// [`SessionRegistry::register`]. `warm` warm-starts kernel bindings
+    /// from a persisted tuning DB for every width inference will hit (up
+    /// to this server's `max_batch` coalescing).
+    pub fn register_session(
+        &mut self,
+        name: &str,
+        model: GnnModel,
+        dims: ModelParams,
+        params: ParamSet,
+        adj: &Csr,
+        warm: Option<(&Tuner, &TuningDb)>,
+    ) -> Result<SessionId> {
+        let warm = warm.map(|(t, db)| (t, db, self.cfg.max_batch.max(1)));
+        let id = self.registry.register(name, model, dims, params, adj, warm)?;
+        debug_assert_eq!(id.0, self.queues.len());
+        self.queues.push(SessionQueue::default());
+        self.deficits.push(0);
+        self.metrics.push(SessionMetrics::default());
+        Ok(id)
+    }
+
+    /// Look up an open session.
+    pub fn session(&self, id: SessionId) -> Result<&ServeSession> {
+        self.registry.get(id)
+    }
+
+    /// Ids of the open sessions, in registration order.
+    pub fn sessions(&self) -> Vec<SessionId> {
+        self.registry.ids()
+    }
+
+    /// A session's metrics so far.
+    pub fn metrics(&self, id: SessionId) -> Result<&SessionMetrics> {
+        self.registry.get(id)?;
+        Ok(&self.metrics[id.0])
+    }
+
+    /// Max/min ratio of per-session p99 latencies across **open** sessions
+    /// with traffic (1.0 = perfectly even; see
+    /// [`fairness_spread`](super::metrics::fairness_spread)). Closed
+    /// sessions' frozen metrics are excluded — the spread describes the
+    /// tenants that are still contending.
+    pub fn p99_spread(&self) -> f64 {
+        let p99s: Vec<f64> =
+            self.registry.ids().into_iter().map(|id| self.metrics[id.0].p99_ns()).collect();
+        fairness_spread(&p99s)
+    }
+
+    /// Enqueue an inference request; returns its request id. The request
+    /// runs when the scheduler next serves this session.
+    pub fn submit(&mut self, id: SessionId, features: Dense) -> Result<u64> {
+        let session = self.registry.get(id)?;
+        Self::validate_features(session, &features)?;
+        let rid = self.next_request;
+        self.next_request += 1;
+        self.queues[id.0].push(InferenceRequest {
+            id: rid,
+            session: id,
+            features: Arc::new(features),
+            enqueued: Instant::now(),
+        });
+        Ok(rid)
+    }
+
+    /// Total pending requests across all sessions.
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Run one request immediately, bypassing the queue and the batcher —
+    /// the sequential reference the bitwise acceptance check compares
+    /// coalesced batches against. Does not touch metrics.
+    pub fn infer_now(&self, id: SessionId, features: &Dense) -> Result<Dense> {
+        let session = self.registry.get(id)?;
+        Self::validate_features(session, features)?;
+        infer_one(session.model, session.operand(), session.params(), features, self.cfg.threads)
+    }
+
+    /// Drain every queue under DRR fairness; returns completions in
+    /// execution order (the order the scheduler served them — fairness
+    /// tests read interleaving straight off this). On error the failing
+    /// batch is re-queued, but completions already produced by this call
+    /// are dropped with the `Err` — a caller that must keep partial
+    /// results under failure should use [`InferenceServer::drain_into`],
+    /// which this delegates to.
+    pub fn run_until_drained(&mut self) -> Result<Vec<CompletedInference>> {
+        let mut completed = Vec::new();
+        self.drain_into(&mut completed)?;
+        Ok(completed)
+    }
+
+    /// [`InferenceServer::run_until_drained`] with an out-parameter:
+    /// completions are appended to `completed` as batches finish, so they
+    /// survive an error on a later batch. On error the failing batch is
+    /// re-queued first — [`InferenceServer::pending`] still accounts for
+    /// every unserved request and the drain can be retried.
+    pub fn drain_into(&mut self, completed: &mut Vec<CompletedInference>) -> Result<()> {
+        let n = self.queues.len();
+        if n == 0 {
+            return Ok(());
+        }
+        let quantum = self.cfg.quantum.max(1);
+        let max_batch = self.cfg.max_batch.max(1);
+        while self.pending() > 0 {
+            let start = self.rr_start;
+            for off in 0..n {
+                let s = (start + off) % n;
+                if self.queues[s].is_empty() {
+                    // idle sessions bank no credit (classic DRR reset)
+                    self.deficits[s] = 0;
+                    continue;
+                }
+                self.deficits[s] += quantum;
+                // Serve only batches the banked deficit can afford, and
+                // carry the remainder to the next round (classic DRR).
+                // Crucially the deficit gates *whether* a batch runs, it
+                // does not shrink one: with quantum < max_batch a session
+                // banks credit across rounds and still executes full
+                // max_batch coalesced batches — the whole point of the
+                // batcher — at the same quantum-per-round fair rate.
+                loop {
+                    let want = self.queues[s].len().min(max_batch);
+                    if want == 0 || self.deficits[s] < want {
+                        break;
+                    }
+                    self.run_batch(SessionId(s), want, completed)?;
+                    self.deficits[s] -= want;
+                }
+            }
+            self.rr_start = (start + 1) % n;
+        }
+        Ok(())
+    }
+
+    /// Close a session (rejects while requests are pending); returns the
+    /// number of workspace partition entries evicted.
+    pub fn close_session(&mut self, id: SessionId) -> Result<usize> {
+        if self.queues.get(id.0).map(|q| !q.is_empty()).unwrap_or(false) {
+            return Err(Error::Config(format!(
+                "serving session #{} still has pending requests",
+                id.0
+            )));
+        }
+        self.registry.close(id)
+    }
+
+    fn validate_features(session: &ServeSession, x: &Dense) -> Result<()> {
+        if x.rows != session.nodes() || x.cols != session.dims.in_dim {
+            return Err(Error::ShapeMismatch(format!(
+                "session '{}' expects {}x{} features, got {}x{}",
+                session.name,
+                session.nodes(),
+                session.dims.in_dim,
+                x.rows,
+                x.cols
+            )));
+        }
+        Ok(())
+    }
+
+    /// Execute one micro-batch of `b` requests for `id`. If inference
+    /// fails, the batch is re-queued at the head (nothing is lost — the
+    /// requests stay pending) and the error propagates.
+    fn run_batch(
+        &mut self,
+        id: SessionId,
+        b: usize,
+        completed: &mut Vec<CompletedInference>,
+    ) -> Result<()> {
+        let batch = self.queues[id.0].drain_batch(b);
+        debug_assert_eq!(batch.len(), b);
+        let session = match self.registry.get(id) {
+            Ok(s) => s,
+            Err(e) => {
+                self.queues[id.0].requeue_front(batch);
+                return Err(e);
+            }
+        };
+        let xs: Vec<&Dense> = batch.iter().map(|r| r.features.as_ref()).collect();
+        let outputs = match infer_batched(
+            session.model,
+            session.operand(),
+            session.params(),
+            &xs,
+            self.cfg.threads,
+        ) {
+            Ok(outputs) => outputs,
+            Err(e) => {
+                self.queues[id.0].requeue_front(batch);
+                return Err(e);
+            }
+        };
+        let done = Instant::now();
+        let mut latencies = Vec::with_capacity(b);
+        for (req, output) in batch.into_iter().zip(outputs) {
+            let latency_ns = done.duration_since(req.enqueued).as_nanos() as f64;
+            latencies.push(latency_ns);
+            completed.push(CompletedInference {
+                id: req.id,
+                session: id,
+                features: req.features,
+                output,
+                latency_ns,
+                batch_size: b,
+            });
+        }
+        self.metrics[id.0].record_batch(b, self.cfg.max_batch.max(1), &latencies);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::karate_club;
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn ring_graph(n: usize) -> Csr {
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            coo.push_sym(i, (i + 1) % n, 1.0);
+        }
+        coo.to_csr()
+    }
+
+    fn add_session(server: &mut InferenceServer, name: &str, adj: &Csr, in_dim: usize) -> SessionId {
+        let dims = ModelParams { in_dim, hidden: 8, classes: 3 };
+        let params = GnnModel::Gcn.init_params(dims, 11);
+        server.register_session(name, GnnModel::Gcn, dims, params, adj, None).unwrap()
+    }
+
+    fn feats(n: usize, k: usize, rng: &mut Rng) -> Dense {
+        Dense::uniform(n, k, 1.0, rng)
+    }
+
+    #[test]
+    fn drains_everything_and_batches() {
+        let mut server =
+            InferenceServer::new(ServeConfig { max_batch: 4, quantum: 4, threads: 1 });
+        let adj = ring_graph(20);
+        let sid = add_session(&mut server, "drain-one", &adj, 6);
+        let mut rng = Rng::seed_from_u64(81);
+        for _ in 0..10 {
+            server.submit(sid, feats(20, 6, &mut rng)).unwrap();
+        }
+        assert_eq!(server.pending(), 10);
+        let done = server.run_until_drained().unwrap();
+        assert_eq!(done.len(), 10);
+        assert_eq!(server.pending(), 0);
+        let m = server.metrics(sid).unwrap();
+        assert_eq!(m.requests, 10);
+        // 10 requests under max_batch=4 → batches of 4, 4, 2
+        assert_eq!(m.batches, 3);
+        assert!(m.p99_ns() >= m.p50_ns());
+        for c in &done {
+            assert_eq!(c.output.rows, 20);
+            assert_eq!(c.output.cols, 3);
+            assert!(c.output.data.iter().all(|v| v.is_finite()));
+            assert!(c.latency_ns >= 0.0);
+        }
+        // completions preserve FIFO order within one session
+        let ids: Vec<u64> = done.iter().map(|c| c.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted);
+    }
+
+    #[test]
+    fn deficit_banks_toward_full_batches() {
+        // quantum 2 < max_batch 4: credit carries across rounds (classic
+        // DRR), so the session still executes FULL 4-wide coalesced
+        // batches instead of quantum-capped fragments
+        let mut server =
+            InferenceServer::new(ServeConfig { max_batch: 4, quantum: 2, threads: 1 });
+        let adj = ring_graph(10);
+        let sid = add_session(&mut server, "bank", &adj, 4);
+        let mut rng = Rng::seed_from_u64(85);
+        for _ in 0..8 {
+            server.submit(sid, feats(10, 4, &mut rng)).unwrap();
+        }
+        let done = server.run_until_drained().unwrap();
+        assert_eq!(done.len(), 8);
+        assert!(done.iter().all(|c| c.batch_size == 4), "batches must reach max_batch");
+        let m = server.metrics(sid).unwrap();
+        assert_eq!(m.batches, 2);
+        assert!((m.occupancy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn submit_validates_shapes_and_session() {
+        let mut server = InferenceServer::new(ServeConfig::default());
+        let adj = ring_graph(10);
+        let sid = add_session(&mut server, "validate", &adj, 4);
+        assert!(server.submit(sid, Dense::zeros(10, 5)).is_err()); // wrong in_dim
+        assert!(server.submit(sid, Dense::zeros(9, 4)).is_err()); // wrong nodes
+        assert!(server.submit(SessionId(99), Dense::zeros(10, 4)).is_err());
+        assert!(server.submit(sid, Dense::zeros(10, 4)).is_ok());
+        // close is refused while a request is pending
+        assert!(server.close_session(sid).is_err());
+        server.run_until_drained().unwrap();
+        server.close_session(sid).unwrap();
+        assert!(server.submit(sid, Dense::zeros(10, 4)).is_err());
+    }
+
+    #[test]
+    fn batched_queue_path_matches_infer_now() {
+        let mut server =
+            InferenceServer::new(ServeConfig { max_batch: 8, quantum: 8, threads: 2 });
+        let ds = karate_club();
+        let dims = ModelParams { in_dim: ds.feature_dim(), hidden: 8, classes: ds.num_classes };
+        let params = GnnModel::Gcn.init_params(dims, 13);
+        let sid = server
+            .register_session("queue-vs-now", GnnModel::Gcn, dims, params, &ds.adj, None)
+            .unwrap();
+        let mut rng = Rng::seed_from_u64(82);
+        for _ in 0..6 {
+            server.submit(sid, feats(34, dims.in_dim, &mut rng)).unwrap();
+        }
+        let done = server.run_until_drained().unwrap();
+        assert_eq!(done.len(), 6);
+        assert!(done.iter().all(|c| c.batch_size == 6), "one coalesced batch expected");
+        for c in &done {
+            let solo = server.infer_now(sid, &c.features).unwrap();
+            assert_eq!(solo.data, c.output.data, "batched must be bitwise-equal");
+        }
+    }
+
+    #[test]
+    fn skewed_load_does_not_starve_light_session() {
+        let mut server =
+            InferenceServer::new(ServeConfig { max_batch: 4, quantum: 4, threads: 1 });
+        let heavy_adj = ring_graph(16);
+        let light_adj = ring_graph(12);
+        let heavy = add_session(&mut server, "heavy", &heavy_adj, 5);
+        let light = add_session(&mut server, "light", &light_adj, 5);
+        let mut rng = Rng::seed_from_u64(83);
+        // the heavy session floods 40 requests BEFORE the light one files 4
+        for _ in 0..40 {
+            server.submit(heavy, feats(16, 5, &mut rng)).unwrap();
+        }
+        for _ in 0..4 {
+            server.submit(light, feats(12, 5, &mut rng)).unwrap();
+        }
+        let done = server.run_until_drained().unwrap();
+        assert_eq!(done.len(), 44);
+        // DRR: the light session's entire backlog completes within the
+        // first round (≤ quantum heavy + quantum light executions), long
+        // before the heavy backlog drains
+        let last_light = done
+            .iter()
+            .rposition(|c| c.session == light)
+            .expect("light session completed");
+        assert!(
+            last_light < 8,
+            "light session starved: last completion at position {last_light} of 44"
+        );
+        assert_eq!(server.metrics(light).unwrap().requests, 4);
+        assert_eq!(server.metrics(heavy).unwrap().requests, 40);
+        assert!(server.p99_spread() >= 1.0);
+    }
+
+    #[test]
+    fn two_graphs_share_one_workspace() {
+        let mut server =
+            InferenceServer::new(ServeConfig { max_batch: 4, quantum: 4, threads: 2 });
+        let a1 = ring_graph(24);
+        let a2 = ring_graph(30);
+        let s1 = add_session(&mut server, "shared-ws-1", &a1, 6);
+        let s2 = add_session(&mut server, "shared-ws-2", &a2, 6);
+        let mut rng = Rng::seed_from_u64(84);
+        for _ in 0..6 {
+            server.submit(s1, feats(24, 6, &mut rng)).unwrap();
+            server.submit(s2, feats(30, 6, &mut rng)).unwrap();
+        }
+        server.run_until_drained().unwrap();
+        let ws = server.workspace();
+        // both graphs' partitions live in the one workspace
+        assert!(ws.cached_partitions() >= 2, "{}", ws.cached_partitions());
+        let stats = ws.stats();
+        assert!(stats.partition_hits > 0, "{stats:?}");
+        assert!(stats.buffer_reuses > 0, "{stats:?}");
+        // closing one session evicts only its partitions
+        let before = ws.cached_partitions();
+        let evicted = server.close_session(s1).unwrap();
+        assert!(evicted > 0);
+        assert_eq!(ws.cached_partitions(), before - evicted);
+        // the surviving session keeps serving
+        server.submit(s2, feats(30, 6, &mut rng)).unwrap();
+        let done = server.run_until_drained().unwrap();
+        assert_eq!(done.len(), 1);
+        // closed sessions drop out of the fairness spread: one open
+        // session with traffic → nothing to be unfair between
+        assert_eq!(server.p99_spread(), 1.0);
+    }
+}

@@ -1,0 +1,298 @@
+//! Serving sessions: frozen `(graph, trained model)` pairs sharing one
+//! kernel workspace.
+//!
+//! A session is registered once — adjacency normalised, parameters frozen,
+//! tuned kernel choices warm-started from a persisted [`TuningDb`] — and
+//! then serves any number of inference requests. All sessions share the
+//! registry's single [`KernelWorkspace`]: partitions are keyed per graph
+//! (and evicted per graph when a session closes), buffers are pooled
+//! across graphs. The session *name* doubles as the tuning-DB dataset key
+//! and the kernel-registry context, so a model tuned at training time
+//! routes to the same kernels at serving time without re-measurement.
+
+use std::sync::Arc;
+
+use crate::autodiff::{context_graph_id, SpmmOperand};
+use crate::autotune::{KernelRegistry, Tuner, TuningDb};
+use crate::error::{Error, Result};
+use crate::gnn::{GnnModel, ModelParams, ParamSet};
+use crate::kernels::KernelWorkspace;
+use crate::sparse::Csr;
+
+/// Opaque handle to a registered serving session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SessionId(pub usize);
+
+/// One registered `(graph, trained model)` pair.
+pub struct ServeSession {
+    /// Unique session name — tuning-DB dataset key and registry context.
+    pub name: String,
+    /// Frozen architecture.
+    pub model: GnnModel,
+    /// Frozen dimensions.
+    pub dims: ModelParams,
+    /// Workspace/partition identity (derived from `name`).
+    pub graph_id: u64,
+    /// How many `(K)` bindings the tuner warm-start installed from the DB.
+    pub warm_started: usize,
+    params: ParamSet,
+    operand: SpmmOperand,
+}
+
+impl ServeSession {
+    /// The normalised-adjacency SpMM operand (workspace attached).
+    pub fn operand(&self) -> &SpmmOperand {
+        &self.operand
+    }
+
+    /// The frozen trained parameters.
+    pub fn params(&self) -> &ParamSet {
+        &self.params
+    }
+
+    /// Graph node count (rows a request's feature matrix must have).
+    pub fn nodes(&self) -> usize {
+        self.operand.a.rows
+    }
+
+    /// Stored non-zeros of the normalised adjacency.
+    pub fn nnz(&self) -> usize {
+        self.operand.a.nnz()
+    }
+}
+
+/// The session registry: sessions indexed by [`SessionId`], all sharing
+/// one workspace. Closed sessions leave a tombstone so ids stay stable.
+pub struct SessionRegistry {
+    workspace: Arc<KernelWorkspace>,
+    sessions: Vec<Option<ServeSession>>,
+}
+
+impl SessionRegistry {
+    /// An empty registry with a fresh shared workspace.
+    pub fn new() -> Self {
+        SessionRegistry { workspace: Arc::new(KernelWorkspace::new()), sessions: Vec::new() }
+    }
+
+    /// The workspace every session's kernel calls share.
+    pub fn workspace(&self) -> &Arc<KernelWorkspace> {
+        &self.workspace
+    }
+
+    /// Number of open sessions.
+    pub fn len(&self) -> usize {
+        self.sessions.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// True when no session is open.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Ids of the open sessions, in registration order.
+    pub fn ids(&self) -> Vec<SessionId> {
+        self.sessions
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|_| SessionId(i)))
+            .collect()
+    }
+
+    /// Look up an open session.
+    pub fn get(&self, id: SessionId) -> Result<&ServeSession> {
+        self.sessions
+            .get(id.0)
+            .and_then(|s| s.as_ref())
+            .ok_or_else(|| Error::UnknownName(format!("serving session #{}", id.0)))
+    }
+
+    /// Register a session: validate the frozen parameters against the
+    /// model/dims, normalise the adjacency once (no `BackpropCache` — this
+    /// is the serving path's only preprocessing), attach the shared
+    /// workspace under the session's graph id, and — when `warm` is given —
+    /// bind the tuning DB's recorded kernel choices for every embedding
+    /// width inference will hit (per-request widths and their coalesced
+    /// multiples up to `max_batch`), without any measurement.
+    pub fn register(
+        &mut self,
+        name: &str,
+        model: GnnModel,
+        dims: ModelParams,
+        params: ParamSet,
+        adj: &Csr,
+        warm: Option<(&Tuner, &TuningDb, usize)>,
+    ) -> Result<SessionId> {
+        if self.sessions.iter().flatten().any(|s| s.name == name) {
+            return Err(Error::Config(format!("serving session '{name}' already registered")));
+        }
+        if adj.rows != adj.cols {
+            return Err(Error::InvalidSparse(format!(
+                "serving adjacency must be square, got {}x{}",
+                adj.rows, adj.cols
+            )));
+        }
+        // shape-check the frozen params against a reference layout
+        let reference = model.init_params(dims, 0);
+        for (pname, want) in reference.iter() {
+            let got = params.get(pname).map_err(|_| {
+                Error::Config(format!("session '{name}': missing parameter '{pname}'"))
+            })?;
+            if got.rows != want.rows || got.cols != want.cols {
+                return Err(Error::ShapeMismatch(format!(
+                    "session '{name}': param '{pname}' is {}x{}, expected {}x{}",
+                    got.rows, got.cols, want.rows, want.cols
+                )));
+            }
+        }
+
+        let a = model.norm_kind().apply(adj)?;
+        let graph_id = context_graph_id(name);
+        // uncached operand: inference is forward-only, so the backward
+        // transpose is never materialised
+        let operand = SpmmOperand::uncached(a, name)
+            .with_workspace(Arc::clone(&self.workspace), graph_id);
+
+        let mut warm_started = 0;
+        if let Some((tuner, db, max_batch)) = warm {
+            let registry = KernelRegistry::global();
+            for k in model.serving_spmm_widths(dims, max_batch) {
+                if tuner.warm_start(name, k, registry, db).is_some() {
+                    warm_started += 1;
+                }
+            }
+        }
+
+        let id = SessionId(self.sessions.len());
+        self.sessions.push(Some(ServeSession {
+            name: name.to_string(),
+            model,
+            dims,
+            graph_id,
+            warm_started,
+            params,
+            operand,
+        }));
+        Ok(id)
+    }
+
+    /// Close a session: drop its frozen state, evict its partition entries
+    /// from the shared workspace (pooled buffers are graph-agnostic and
+    /// stay), and unbind its kernel-registry context so a later
+    /// same-named session cannot inherit this graph's tuned choices.
+    /// Returns the number of partition entries evicted.
+    pub fn close(&mut self, id: SessionId) -> Result<usize> {
+        let slot = self
+            .sessions
+            .get_mut(id.0)
+            .ok_or_else(|| Error::UnknownName(format!("serving session #{}", id.0)))?;
+        let session = slot
+            .take()
+            .ok_or_else(|| Error::Config(format!("serving session #{} already closed", id.0)))?;
+        KernelRegistry::global().unbind_context(&session.name);
+        Ok(self.workspace.evict(session.graph_id))
+    }
+}
+
+impl Default for SessionRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::{DbEntry, HardwareProfile, TuneConfig};
+    use crate::data::karate_club;
+    use crate::kernels::KernelChoice;
+    use crate::sparse::Coo;
+
+    fn dims_for(ds: &crate::data::Dataset, hidden: usize) -> ModelParams {
+        ModelParams { in_dim: ds.feature_dim(), hidden, classes: ds.num_classes }
+    }
+
+    #[test]
+    fn register_get_close_lifecycle() {
+        let ds = karate_club();
+        let dims = dims_for(&ds, 8);
+        let mut reg = SessionRegistry::new();
+        assert!(reg.is_empty());
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let id = reg
+            .register("sess-lifecycle", GnnModel::Gcn, dims, params, &ds.adj, None)
+            .unwrap();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.ids(), vec![id]);
+        let s = reg.get(id).unwrap();
+        assert_eq!(s.nodes(), 34);
+        assert!(s.nnz() > 0);
+        assert!(s.operand().workspace.is_some());
+        // duplicate name rejected
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        assert!(reg
+            .register("sess-lifecycle", GnnModel::Gcn, dims, params, &ds.adj, None)
+            .is_err());
+        // close: gone, double-close rejected
+        reg.close(id).unwrap();
+        assert!(reg.get(id).is_err());
+        assert!(reg.close(id).is_err());
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn register_validates_params_and_adjacency() {
+        let ds = karate_club();
+        let dims = dims_for(&ds, 8);
+        let mut reg = SessionRegistry::new();
+        // params from the wrong model → missing names
+        let wrong = GnnModel::SageSum.init_params(dims, 3);
+        assert!(reg
+            .register("sess-bad-params", GnnModel::Gcn, dims, wrong, &ds.adj, None)
+            .is_err());
+        // params with the wrong hidden width → shape mismatch
+        let narrow = GnnModel::Gcn.init_params(dims_for(&ds, 4), 3);
+        assert!(reg
+            .register("sess-bad-shape", GnnModel::Gcn, dims, narrow, &ds.adj, None)
+            .is_err());
+        // non-square adjacency rejected
+        let rect = Coo::new(4, 5).to_csr();
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        assert!(reg
+            .register("sess-bad-adj", GnnModel::Gcn, dims, params, &rect, None)
+            .is_err());
+    }
+
+    #[test]
+    fn warm_start_binds_db_entries_for_batched_widths() {
+        let ds = karate_club();
+        let dims = dims_for(&ds, 8);
+        let name = "sess-warm-start";
+        let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+        let mut db = TuningDb::default();
+        // per-request width (GCN: hidden=8) and its 2-batched width
+        db.put(name, "amd-epyc", 8, DbEntry { kb: Some(8), kt: None, speedup: 2.0 });
+        db.put(name, "amd-epyc", 16, DbEntry { kb: Some(16), kt: None, speedup: 1.5 });
+        let mut reg = SessionRegistry::new();
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let id = reg
+            .register(name, GnnModel::Gcn, dims, params, &ds.adj, Some((&tuner, &db, 4)))
+            .unwrap();
+        assert_eq!(reg.get(id).unwrap().warm_started, 2);
+        let registry = KernelRegistry::global();
+        use crate::kernels::Semiring;
+        assert_eq!(
+            registry.binding(name, 8, Semiring::Sum).unwrap().choice,
+            KernelChoice::Generated { kb: 8 }
+        );
+        assert_eq!(
+            registry.binding(name, 16, Semiring::Sum).unwrap().choice,
+            KernelChoice::Generated { kb: 16 }
+        );
+        // widths with no DB entry are simply not bound
+        assert!(registry.binding(name, 24, Semiring::Sum).is_none());
+        // closing the session unbinds its whole context
+        reg.close(id).unwrap();
+        assert!(registry.binding(name, 8, Semiring::Sum).is_none());
+        assert!(registry.binding(name, 16, Semiring::Sum).is_none());
+    }
+}

@@ -183,13 +183,8 @@ impl Trainer {
                     let registry = KernelRegistry::global();
                     registry.set_patched(true);
                     let mut db = TuningDb::default();
-                    let mut ks = vec![cfg.hidden, dataset.num_classes];
-                    if !model.projects_before_spmm() {
-                        ks.push(dataset.feature_dim());
-                    }
-                    ks.sort_unstable();
-                    ks.dedup();
-                    for k in ks {
+                    // exactly the widths this model's SpMM calls will hit
+                    for k in model.spmm_widths(dims) {
                         tuner.tune(&dataset.name, &operand.a, k, registry, &mut db)?;
                     }
                 }
@@ -366,6 +361,20 @@ impl Trainer {
             Engine::Hlo(_) => None,
         }
     }
+
+    /// The model this trainer was built for.
+    pub fn model(&self) -> GnnModel {
+        self.model
+    }
+
+    /// Clone out the current parameters so they can be frozen into a
+    /// serving session ([`crate::serve`]) after training. Errors for the
+    /// HLO engine, whose parameters live on-device.
+    pub fn export_params(&self) -> Result<ParamSet> {
+        self.params().cloned().ok_or_else(|| {
+            Error::Config("export_params: HLO engine holds parameters on device".into())
+        })
+    }
 }
 
 #[cfg(test)]
@@ -453,6 +462,15 @@ mod tests {
         assert!(stats.partition_hits > stats.partition_misses, "{stats:?}");
         // epoch outputs recycle into later epochs' buffers
         assert!(stats.buffer_reuses > stats.buffer_allocs, "{stats:?}");
+    }
+
+    #[test]
+    fn export_params_clones_native_engine() {
+        let ds = karate_club();
+        let t = Trainer::new(GnnModel::Gcn, Backend::NativeTrusted, quick_cfg(), &ds).unwrap();
+        assert_eq!(t.model(), GnnModel::Gcn);
+        let p = t.export_params().unwrap();
+        assert_eq!(p.len(), 4);
     }
 
     #[test]

@@ -33,6 +33,34 @@ impl BenchResult {
     }
 }
 
+/// Linear-interpolated percentiles (`ps` in `[0, 100]`) of one sample
+/// set, computed with a **single sort** — use this when reading several
+/// quantiles from the same window (a metrics snapshot reads p50 and p99).
+/// Returns `0.0` per requested point for an empty slice. The serving
+/// metrics and the serving bench share this definition so the JSON
+/// snapshots stay comparable PR-over-PR.
+pub fn percentiles(samples: &[f64], ps: &[f64]) -> Vec<f64> {
+    if samples.is_empty() {
+        return vec![0.0; ps.len()];
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ps.iter()
+        .map(|&p| {
+            let rank = (p / 100.0).clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            let frac = rank - lo as f64;
+            sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+        })
+        .collect()
+}
+
+/// Single-percentile convenience over [`percentiles`].
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    percentiles(samples, &[p])[0]
+}
+
 /// Timing configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct BenchConfig {
@@ -144,6 +172,22 @@ mod tests {
         assert_eq!(set.results().len(), 2);
         assert!(set.median("a").unwrap() <= set.median("b").unwrap());
         assert!(set.median("c").is_none());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+        let s = [4.0, 1.0, 3.0, 2.0]; // unsorted on purpose
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 100.0), 4.0);
+        assert!((percentile(&s, 50.0) - 2.5).abs() < 1e-12);
+        // clamp out-of-range p instead of panicking
+        assert_eq!(percentile(&s, 150.0), 4.0);
+        assert_eq!(percentile(&s, -5.0), 1.0);
+        // multi-point form: one sort, same definition
+        assert_eq!(percentiles(&s, &[0.0, 100.0]), vec![1.0, 4.0]);
+        assert_eq!(percentiles(&[], &[50.0, 99.0]), vec![0.0, 0.0]);
     }
 
     #[test]

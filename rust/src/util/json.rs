@@ -178,6 +178,19 @@ impl Json {
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
+
+    /// Build a boolean value (check flags in `BENCH_*.json` emitters).
+    pub fn bool(b: bool) -> Json {
+        Json::Bool(b)
+    }
+
+    /// Read a boolean value.
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => Err(Error::Json(format!("not a bool: {self:?}"))),
+        }
+    }
 }
 
 fn write_escaped(out: &mut String, s: &str) {
@@ -459,5 +472,13 @@ mod tests {
     fn integer_formatting() {
         assert_eq!(Json::Num(34.0).compact(), "34");
         assert_eq!(Json::Num(0.5).compact(), "0.5");
+    }
+
+    #[test]
+    fn bool_constructor_and_accessor() {
+        assert_eq!(Json::bool(true), Json::Bool(true));
+        assert!(Json::parse("true").unwrap().as_bool().unwrap());
+        assert!(!Json::parse("false").unwrap().as_bool().unwrap());
+        assert!(Json::Num(1.0).as_bool().is_err());
     }
 }

@@ -35,7 +35,7 @@
 use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
 
@@ -95,6 +95,10 @@ struct PoolInner {
     available: Condvar,
     /// Set when the owning `WorkerPool` drops; idle workers exit.
     shutdown: AtomicBool,
+    /// Lifetime count of jobs routed through `join_all` (including the
+    /// caller-inlined lane). The serving bench reads this to show many
+    /// graph sessions really share one pool.
+    jobs: AtomicU64,
 }
 
 impl PoolInner {
@@ -121,6 +125,7 @@ impl WorkerPool {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            jobs: AtomicU64::new(0),
         });
         for i in 0..workers {
             let inner = Arc::clone(&inner);
@@ -145,6 +150,13 @@ impl WorkerPool {
         self.workers
     }
 
+    /// Lifetime count of jobs this pool has executed through
+    /// [`WorkerPool::join_all`], including the caller-inlined lane and the
+    /// zero-worker inline path. Monotone; diagnostic only.
+    pub fn jobs_executed(&self) -> u64 {
+        self.inner.jobs.load(Ordering::Relaxed)
+    }
+
     /// Run every closure in `jobs` and wait for all of them. The calling
     /// thread always executes at least the first job; the rest are handed
     /// to parked workers. Propagates the first panic after the whole batch
@@ -157,6 +169,7 @@ impl WorkerPool {
         if n == 0 {
             return;
         }
+        self.inner.jobs.fetch_add(n as u64, Ordering::Relaxed);
         // Inline fast paths: single job, or a pool with no workers
         // (thread budget 1). No queue traffic, no synchronisation.
         if n == 1 || self.workers == 0 {
@@ -479,6 +492,21 @@ mod tests {
             .collect();
         pool.join_all(jobs);
         assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn jobs_executed_counts_every_lane() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.jobs_executed(), 0);
+        pool.join_all(vec![|| {}, || {}, || {}]);
+        assert_eq!(pool.jobs_executed(), 3);
+        pool.join_all(vec![|| {}]); // single-job inline fast path counts too
+        assert_eq!(pool.jobs_executed(), 4);
+        pool.join_all(Vec::<fn()>::new()); // empty batch does not
+        assert_eq!(pool.jobs_executed(), 4);
+        let inline = WorkerPool::new(0);
+        inline.join_all(vec![|| {}, || {}]);
+        assert_eq!(inline.jobs_executed(), 2);
     }
 
     #[test]

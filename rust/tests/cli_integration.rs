@@ -19,7 +19,7 @@ fn isplib(args: &[&str]) -> (bool, String, String) {
 fn help_lists_commands() {
     let (ok, stdout, _) = isplib(&["help"]);
     assert!(ok);
-    for cmd in ["probe", "datasets", "tune", "train", "bench"] {
+    for cmd in ["probe", "datasets", "tune", "train", "bench", "serve-bench"] {
         assert!(stdout.contains(cmd), "help missing '{cmd}'");
     }
 }
@@ -114,6 +114,55 @@ fn bench_single_cell_reports_speedup() {
     assert!(stdout.contains("iSpLib"));
     assert!(stdout.contains("PT2"));
     assert!(stdout.contains("headline speedups"));
+}
+
+#[test]
+fn serve_bench_two_sessions_emit_json() {
+    let dir = isplib::util::tmp::TempDir::new().unwrap();
+    let out = dir.path().join("BENCH_serving.json");
+    let out_str = out.to_str().unwrap();
+    let (ok, stdout, stderr) = isplib(&[
+        "serve-bench",
+        "--datasets",
+        "ogbn-protein,reddit",
+        "--models",
+        "gcn,sage-sum",
+        "--requests",
+        "6",
+        "--skew",
+        "3",
+        "--epochs",
+        "2",
+        "--hidden",
+        "8",
+        "--scale",
+        "8192",
+        "--out",
+        out_str,
+    ]);
+    assert!(ok, "stdout: {stdout}\nstderr: {stderr}");
+    // the bench's own acceptance checks passed (it exits non-zero otherwise)
+    assert!(stdout.contains("verified"), "{stdout}");
+    assert!(stdout.contains("cache untouched"), "{stdout}");
+    assert!(stdout.contains("fairness p99 spread"), "{stdout}");
+    let json = isplib::util::json::Json::parse(&std::fs::read_to_string(&out).unwrap())
+        .expect("valid BENCH_serving.json");
+    let sessions = json.get("sessions").unwrap().as_arr().unwrap();
+    assert_eq!(sessions.len(), 2);
+    let checks = json.get("checks").unwrap();
+    assert!(checks.get("batched_bitwise_equal").unwrap().as_bool().unwrap());
+    assert!(checks.get("backprop_cache_untouched").unwrap().as_bool().unwrap());
+    assert!(checks.get("shared_pool_jobs").unwrap().as_f64().unwrap() > 0.0);
+    // skewed offered load actually reached the scheduler
+    assert!(sessions[0].get("offered").unwrap().as_f64().unwrap() == 18.0);
+    assert!(sessions[1].get("offered").unwrap().as_f64().unwrap() == 6.0);
+}
+
+#[test]
+fn serve_bench_rejects_single_session() {
+    let (ok, _, stderr) = isplib(&["serve-bench", "--datasets", "reddit"]);
+    assert!(!ok);
+    assert!(stderr.contains("2 sessions"), "{stderr}");
 }
 
 #[test]

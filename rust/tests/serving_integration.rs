@@ -1,0 +1,191 @@
+//! Serving subsystem integration: scheduler fairness, batch-coalescing
+//! bitwise equality, concurrent multi-graph workspace use, and the
+//! train → freeze → serve hand-off.
+
+use std::sync::Arc;
+
+use isplib::autodiff::context_graph_id;
+use isplib::data::karate_club;
+use isplib::dense::Dense;
+use isplib::gnn::{GnnModel, ModelParams};
+use isplib::kernels::{
+    spmm, spmm_with_workspace, KernelChoice, KernelWorkspace, Semiring,
+};
+use isplib::serve::{concat_cols, split_cols, InferenceServer, ServeConfig};
+use isplib::sparse::{Coo, Csr};
+use isplib::train::{Backend, TrainConfig, Trainer};
+use isplib::util::rng::Rng;
+
+fn random_graph(n: usize, deg: usize, seed: u64) -> Csr {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut coo = Coo::new(n, n);
+    for r in 0..n {
+        for _ in 0..deg {
+            coo.push(r, rng.gen_range(n), rng.gen_range_f32(0.1, 1.0));
+        }
+    }
+    coo.to_csr()
+}
+
+/// The identity the batcher rests on, checked against every kernel family:
+/// one SpMM over column-concatenated inputs is bitwise-equal to per-input
+/// SpMMs — for serial and partitioned execution alike.
+#[test]
+fn coalesced_spmm_bitwise_equal_across_kernels() {
+    let a = random_graph(48, 5, 91);
+    let mut rng = Rng::seed_from_u64(92);
+    let xs: Vec<Dense> = (0..4).map(|_| Dense::uniform(48, 16, 1.0, &mut rng)).collect();
+    let x_refs: Vec<&Dense> = xs.iter().collect();
+    let packed = concat_cols(&x_refs).unwrap(); // 48 × 64
+    for choice in [
+        KernelChoice::Trusted,
+        KernelChoice::Generated { kb: 16 },
+        KernelChoice::Tiled { kt: 16 },
+    ] {
+        for threads in [1, 3] {
+            let y = spmm(&a, &packed, Semiring::Sum, choice, threads).unwrap();
+            let split = split_cols(&y, &[16; 4]).unwrap();
+            for (x, part) in xs.iter().zip(&split) {
+                let solo = spmm(&a, x, Semiring::Sum, choice, threads).unwrap();
+                assert_eq!(
+                    solo.data, part.data,
+                    "coalesced SpMM diverged: choice={choice:?} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+/// Many threads hammering one shared workspace with two distinct graphs:
+/// results stay correct, partitions cache per graph, buffers pool across
+/// graphs.
+#[test]
+fn concurrent_multi_graph_workspace_use() {
+    let g1 = Arc::new(random_graph(40, 4, 93));
+    let g2 = Arc::new(random_graph(56, 4, 94));
+    let mut rng = Rng::seed_from_u64(95);
+    let x1 = Arc::new(Dense::uniform(40, 8, 1.0, &mut rng));
+    let x2 = Arc::new(Dense::uniform(56, 8, 1.0, &mut rng));
+    let want1 = spmm(&g1, &x1, Semiring::Sum, KernelChoice::Trusted, 2).unwrap();
+    let want2 = spmm(&g2, &x2, Semiring::Sum, KernelChoice::Trusted, 2).unwrap();
+    let ws = Arc::new(KernelWorkspace::new());
+
+    std::thread::scope(|scope| {
+        for t in 0..4 {
+            let (graph, x, want, id) = if t % 2 == 0 {
+                (Arc::clone(&g1), Arc::clone(&x1), want1.clone(), 1u64)
+            } else {
+                (Arc::clone(&g2), Arc::clone(&x2), want2.clone(), 2u64)
+            };
+            let ws = Arc::clone(&ws);
+            scope.spawn(move || {
+                for round in 0..10 {
+                    let y = spmm_with_workspace(
+                        &graph,
+                        &x,
+                        Semiring::Sum,
+                        KernelChoice::Trusted,
+                        2,
+                        Some((&ws, id)),
+                    )
+                    .unwrap();
+                    assert_eq!(y.data, want.data, "thread {t} round {round}");
+                    ws.recycle(y.data);
+                }
+            });
+        }
+    });
+
+    let stats = ws.stats();
+    // 40 calls total over 2 (graph, threads) keys: overwhelmingly hits
+    // (concurrent first-misses may compute a partition twice, never wrongly)
+    assert!(stats.partition_hits >= 30, "{stats:?}");
+    assert!(stats.partition_misses >= 2, "{stats:?}");
+    assert!(stats.buffer_reuses > 0, "{stats:?}");
+    assert!(ws.cached_partitions() >= 2);
+    // per-graph eviction leaves the other tenant's entries intact
+    let evicted = ws.evict(1);
+    assert!(evicted >= 1);
+    assert!(ws.cached_partitions() >= 1);
+    let y = spmm_with_workspace(&g2, &x2, Semiring::Sum, KernelChoice::Trusted, 2, Some((&ws, 2)))
+        .unwrap();
+    assert_eq!(y.data, want2.data);
+}
+
+/// Three sessions, one flooding: deficit round robin keeps every light
+/// session's completions near the front — nobody starves.
+#[test]
+fn scheduler_fairness_three_way_skew() {
+    let mut server = InferenceServer::new(ServeConfig { max_batch: 4, quantum: 4, threads: 1 });
+    let graphs = [random_graph(20, 3, 96), random_graph(24, 3, 97), random_graph(28, 3, 98)];
+    let mut sids = Vec::new();
+    for (i, g) in graphs.iter().enumerate() {
+        let dims = ModelParams { in_dim: 6, hidden: 8, classes: 3 };
+        let params = GnnModel::Gin.init_params(dims, 5 + i as u64);
+        let sid = server
+            .register_session(&format!("skew-{i}"), GnnModel::Gin, dims, params, g, None)
+            .unwrap();
+        sids.push(sid);
+    }
+    let mut rng = Rng::seed_from_u64(99);
+    // session 0 floods 48 before sessions 1 and 2 submit 4 each
+    for _ in 0..48 {
+        server.submit(sids[0], Dense::uniform(20, 6, 1.0, &mut rng)).unwrap();
+    }
+    for _ in 0..4 {
+        server.submit(sids[1], Dense::uniform(24, 6, 1.0, &mut rng)).unwrap();
+        server.submit(sids[2], Dense::uniform(28, 6, 1.0, &mut rng)).unwrap();
+    }
+    let done = server.run_until_drained().unwrap();
+    assert_eq!(done.len(), 56);
+    for light in [sids[1], sids[2]] {
+        let last = done.iter().rposition(|c| c.session == light).unwrap();
+        // both light sessions finish within the first DRR round
+        // (3 sessions × quantum 4 = 12 completions)
+        assert!(last < 12, "session {light:?} starved: last completion at {last}");
+    }
+    // every session's work completed exactly
+    assert_eq!(server.metrics(sids[0]).unwrap().requests, 48);
+    assert_eq!(server.metrics(sids[1]).unwrap().requests, 4);
+    assert_eq!(server.metrics(sids[2]).unwrap().requests, 4);
+}
+
+/// Train on karate, freeze the params into a session, and check the
+/// serving forward agrees with the trainer's own predict — while leaving
+/// the trainer's backprop cache untouched.
+#[test]
+fn train_freeze_serve_roundtrip() {
+    let ds = karate_club();
+    let cfg = TrainConfig { epochs: 20, hidden: 8, skip_tuning: true, ..TrainConfig::default() };
+    let mut trainer = Trainer::new(GnnModel::Gcn, Backend::NativeTuned, cfg, &ds).unwrap();
+    trainer.fit(&ds).unwrap();
+    let dims = ModelParams { in_dim: ds.feature_dim(), hidden: 8, classes: ds.num_classes };
+
+    let mut server = InferenceServer::new(ServeConfig { max_batch: 4, quantum: 4, threads: 2 });
+    let sid = server
+        .register_session(
+            "karate-roundtrip",
+            trainer.model(),
+            dims,
+            trainer.export_params().unwrap(),
+            &ds.adj,
+            None,
+        )
+        .unwrap();
+
+    let cache_before = trainer.cache().stats();
+    // serving the training features must reproduce the trainer's logits
+    for _ in 0..3 {
+        server.submit(sid, ds.features.clone()).unwrap();
+    }
+    let done = server.run_until_drained().unwrap();
+    let want = trainer.predict(&ds).unwrap();
+    for c in &done {
+        assert!(c.output.allclose(&want, 1e-5), "serving logits diverge from predict");
+        assert_eq!(c.batch_size, 3);
+    }
+    // inference is cache-free: the trainer's BackpropCache saw nothing
+    assert_eq!(trainer.cache().stats(), cache_before);
+    // and the session's workspace id is derived exactly like training's
+    assert_eq!(server.session(sid).unwrap().graph_id, context_graph_id("karate-roundtrip"));
+}

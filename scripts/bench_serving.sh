@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Emit BENCH_serving.json — the machine-readable serving snapshot: per
+# session p50/p99 request latency (ns), batch occupancy, warm-start count,
+# and the cross-session fairness spread, plus the subsystem's acceptance
+# checks (batched == per-request bitwise, backprop cache untouched, shared
+# pool job count). The underlying `isplib serve-bench` exits non-zero if
+# any check fails, so this doubles as a serving smoke gate. Run from
+# anywhere; extra args pass through (e.g. --scale 256 --requests 64 for a
+# heavier run).
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+OUT="${ISPLIB_SERVE_OUT:-$(cd .. && pwd)/BENCH_serving.json}"
+cargo run --release --bin isplib -- serve-bench --out "$OUT" "$@"
+echo "bench_serving.sh: wrote ${OUT}"

@@ -1,6 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 verify: release build, clippy with warnings promoted to errors,
 # then the full test suite. CI and pre-merge both run exactly this.
+# `--all-targets` keeps the serve/ subsystem and its integration tests
+# (tests/serving_integration.rs) under the -D warnings gate, and the
+# unfiltered `cargo test` run below executes them.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
