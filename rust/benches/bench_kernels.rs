@@ -4,11 +4,16 @@
 //!
 //! Two sections:
 //!
-//! * `kernels` — ns/iter for every (op, kernel label, threads) cell of a
-//!   fixed SpMM workload matrix (trusted / best generated / tiled, serial
-//!   and parallel).
-//! * `overhead` — the repeated-SpMM microbenchmark behind this PR's
-//!   acceptance bar: the same small graph, 100 back-to-back parallel
+//! * `kernels` — ns/iter for every (graph, op, kernel label, threads) cell
+//!   of a fixed SpMM workload matrix across **two graph shapes** (the
+//!   scaled power-law reddit and a short-row/hub-skewed graph) and every
+//!   kernel family *including the sparse-format axis* (SELL-C-σ, sorted
+//!   CSR — conversions served from a warmed `KernelWorkspace`, exactly as
+//!   training/serving see them). Each row carries a `format` field and a
+//!   `speedup` vs the trusted-CSR baseline at the same
+//!   (graph, k, op, threads), so the format win is trackable PR-over-PR.
+//! * `overhead` — the repeated-SpMM microbenchmark behind the worker-pool
+//!   PR's acceptance bar: the same small graph, 100 back-to-back parallel
 //!   calls, comparing the persistent worker pool against the legacy
 //!   spawn-per-call path. The workload is sized so fixed costs (thread
 //!   startup vs. enqueue+wake, partitioning, allocation) dominate; the
@@ -24,7 +29,7 @@ use std::time::Instant;
 use isplib::data::spec_by_name;
 use isplib::dense::Dense;
 use isplib::kernels::{
-    spmm, spmm_with_workspace, KernelChoice, KernelWorkspace, Semiring, TILED_KTS,
+    prepare_format, spmm_with_workspace, KernelChoice, KernelWorkspace, Semiring, TILED_KTS,
 };
 use isplib::sparse::{Coo, Csr};
 use isplib::util::bench::{time_case, BenchConfig};
@@ -36,7 +41,10 @@ fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-/// ns/iter for one SpMM cell.
+/// ns/iter for one SpMM cell. Runs over a shared warmed workspace so the
+/// format choices measure steady-state cached conversions (the per-graph
+/// setup cost training/serving actually pay once) and every family shares
+/// the same partition cache + buffer pool.
 fn time_spmm_ns(
     cfg: BenchConfig,
     a: &Csr,
@@ -44,11 +52,32 @@ fn time_spmm_ns(
     op: Semiring,
     choice: KernelChoice,
     threads: usize,
+    ws: &KernelWorkspace,
+    graph_id: u64,
 ) -> f64 {
+    prepare_format(a, choice, ws, graph_id);
     let r = time_case(cfg, &choice.label(), || {
-        std::hint::black_box(spmm(a, x, op, choice, threads).unwrap());
+        let y =
+            spmm_with_workspace(a, x, op, choice, threads, Some((ws, graph_id))).unwrap();
+        std::hint::black_box(&y.data[..]);
+        ws.recycle(y.data);
     });
     r.median_secs * 1e9
+}
+
+/// A hub-skewed short-row graph — the shape the SELL-C-σ format targets:
+/// a long tail of degree-2 rows plus a few huge hubs, so CSR's per-row
+/// loop overhead dominates and slice-lockstep execution can win.
+fn short_row_graph(n: usize, seed: u64) -> Csr {
+    let mut coo = Coo::new(n, n);
+    let mut rng = Rng::seed_from_u64(seed);
+    for r in 0..n {
+        let deg = if r % 256 == 0 { 192 } else { 2 };
+        for _ in 0..deg {
+            coo.push(r, rng.gen_range(n), 1.0);
+        }
+    }
+    coo.to_csr()
 }
 
 /// Per-call seconds for `calls` back-to-back parallel SpMMs on a shared
@@ -110,51 +139,90 @@ fn main() {
     let cfg = BenchConfig::default();
 
     let ds = spec_by_name("reddit").unwrap().instantiate(scale, 7).unwrap();
-    let a = &ds.adj;
+    let short = short_row_graph(env_usize("ISPLIB_BENCH_SHORT_NODES", 4096), 19);
     let mut rng = Rng::seed_from_u64(11);
     println!(
-        "workload: scaled reddit, {} nodes, {} nnz; reps={} (ISPLIB_BENCH_QUICK trims)",
-        a.rows,
-        a.nnz(),
+        "workloads: scaled reddit ({} nodes, {} nnz) + short-row ({} nodes, {} nnz); \
+         reps={} (ISPLIB_BENCH_QUICK trims)",
+        ds.adj.rows,
+        ds.adj.nnz(),
+        short.rows,
+        short.nnz(),
         cfg.reps
     );
 
-    // --- kernel matrix: (op × kernel × threads) --------------------------
+    // --- kernel matrix: (graph × op × kernel/format × threads) -----------
+    // One workspace per graph: format conversions + partitions are cached
+    // once (the real per-graph cost model), every timed cell is steady
+    // state. `speedup` is trusted-CSR-over-this-cell at identical
+    // (graph, k, op, threads) — the per-format win the format axis is
+    // tracked by.
     let mut rows = Vec::new();
-    for &k in &[32usize, 128] {
-        let x = Dense::uniform(a.rows, k, 1.0, &mut rng);
-        let mut choices = vec![KernelChoice::Trusted];
-        for kb in [8usize, 32] {
-            let c = KernelChoice::Generated { kb };
-            if c.applicable(k, Semiring::Sum) {
-                choices.push(c);
-            }
-        }
-        for kt in TILED_KTS {
-            let c = KernelChoice::Tiled { kt };
-            if c.applicable(k, Semiring::Sum) {
-                choices.push(c);
-            }
-        }
-        for op in [Semiring::Sum, Semiring::Mean] {
-            for choice in &choices {
-                if !choice.applicable(k, op) {
-                    continue;
+    let graphs: [(&str, &Csr); 2] = [("reddit", &ds.adj), ("short-row", &short)];
+    for (gi, (gname, a)) in graphs.iter().enumerate() {
+        let ws = KernelWorkspace::new();
+        let graph_id = gi as u64 + 1;
+        let stats = a.row_len_stats();
+        println!(
+            "graph={gname}: row-len mean={:.1} p99={} max={} (format axis {})",
+            stats.mean,
+            stats.p99,
+            stats.max,
+            if stats.format_promising() { "promising" } else { "unpromising" }
+        );
+        for &k in &[32usize, 128] {
+            let x = Dense::uniform(a.rows, k, 1.0, &mut rng);
+            let mut choices = vec![KernelChoice::Trusted];
+            for kb in [8usize, 32] {
+                let c = KernelChoice::Generated { kb };
+                if c.applicable(k, Semiring::Sum) {
+                    choices.push(c);
                 }
+            }
+            for kt in TILED_KTS {
+                let c = KernelChoice::Tiled { kt };
+                if c.applicable(k, Semiring::Sum) {
+                    choices.push(c);
+                }
+            }
+            // the sparse-format axis: both SELL heights with a mid sort
+            // window, plus sorted CSR
+            for (c, sigma) in [(4usize, 32usize), (8, 64)] {
+                choices.push(KernelChoice::Sell { c, sigma });
+            }
+            choices.push(KernelChoice::SortedCsr);
+            for op in [Semiring::Sum, Semiring::Mean] {
                 for threads in [1usize, 2, 4] {
-                    let ns = time_spmm_ns(cfg, a, &x, op, *choice, threads);
-                    println!(
-                        "k={k:<4} op={:<5} kernel={:<18} threads={threads} {ns:>14.0} ns/iter",
-                        op.name(),
-                        choice.label()
-                    );
-                    rows.push(Json::obj(vec![
-                        ("k", Json::num(k as f64)),
-                        ("op", Json::str(op.name())),
-                        ("kernel", Json::str(&choice.label())),
-                        ("threads", Json::num(threads as f64)),
-                        ("ns_per_iter", Json::num(ns)),
-                    ]));
+                    let baseline_ns =
+                        time_spmm_ns(cfg, a, &x, op, KernelChoice::Trusted, threads, &ws, graph_id);
+                    for choice in &choices {
+                        if !choice.applicable(k, op) {
+                            continue;
+                        }
+                        let ns = if *choice == KernelChoice::Trusted {
+                            baseline_ns
+                        } else {
+                            time_spmm_ns(cfg, a, &x, op, *choice, threads, &ws, graph_id)
+                        };
+                        let speedup = baseline_ns / ns.max(1e-9);
+                        println!(
+                            "graph={gname:<9} k={k:<4} op={:<5} kernel={:<18} format={:<15} \
+                             threads={threads} {ns:>14.0} ns/iter  {speedup:>5.2}x",
+                            op.name(),
+                            choice.label(),
+                            choice.format_label()
+                        );
+                        rows.push(Json::obj(vec![
+                            ("graph", Json::str(gname)),
+                            ("k", Json::num(k as f64)),
+                            ("op", Json::str(op.name())),
+                            ("kernel", Json::str(&choice.label())),
+                            ("format", Json::str(&choice.format_label())),
+                            ("threads", Json::num(threads as f64)),
+                            ("ns_per_iter", Json::num(ns)),
+                            ("speedup", Json::num(speedup)),
+                        ]));
+                    }
                 }
             }
         }
@@ -184,12 +252,23 @@ fn main() {
         spawned * 1e6
     );
 
+    let workloads = Json::Arr(
+        graphs
+            .iter()
+            .map(|(gname, g)| {
+                let stats = g.row_len_stats();
+                Json::obj(vec![
+                    ("graph", Json::str(gname)),
+                    ("nodes", Json::num(g.rows as f64)),
+                    ("nnz", Json::num(g.nnz() as f64)),
+                    ("row_len_mean", Json::num(stats.mean)),
+                    ("row_len_p99", Json::num(stats.p99 as f64)),
+                ])
+            })
+            .collect(),
+    );
     let doc = Json::obj(vec![
-        ("workload", Json::obj(vec![
-            ("dataset", Json::str(&ds.name)),
-            ("nodes", Json::num(a.rows as f64)),
-            ("nnz", Json::num(a.nnz() as f64)),
-        ])),
+        ("workloads", workloads),
         ("kernels", Json::Arr(rows)),
         ("overhead", Json::obj(vec![
             ("calls", Json::num(calls as f64)),

@@ -11,7 +11,7 @@
 //! would be on that CPU, while wall-clock comes from wherever we run.
 
 use crate::error::{Error, Result};
-use crate::kernels::{GENERATED_KBS, TILED_KTS};
+use crate::kernels::{GENERATED_KBS, SELL_SLICE_HEIGHTS, TILED_KTS};
 
 /// SIMD instruction class → f32 lanes per vector register.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -137,6 +137,22 @@ impl HardwareProfile {
         out
     }
 
+    /// The `(C, σ)` SELL-C-σ parameter pairs the tuner searches on this
+    /// machine — the sparse-format axis. The slice height C tracks the
+    /// SIMD group the lane loop wants to fill (clamped into the shipped
+    /// [`SELL_SLICE_HEIGHTS`]); two sort windows bracket the
+    /// locality-vs-padding trade: a tight window (σ = 8·C) keeps the
+    /// output permutation near-local, a wide one (σ = 32·C) groups row
+    /// lengths more aggressively for less padding.
+    pub fn candidate_sell_params(&self) -> Vec<(usize, usize)> {
+        let c = self
+            .vlen()
+            .clamp(SELL_SLICE_HEIGHTS[0], SELL_SLICE_HEIGHTS[SELL_SLICE_HEIGHTS.len() - 1]);
+        // clamp lands between shipped heights for exotic vlens; snap down
+        let c = SELL_SLICE_HEIGHTS.iter().copied().filter(|&h| h <= c).max().unwrap_or(c);
+        vec![(c, c * 8), (c, c * 32)]
+    }
+
     /// Predicted sweet-spot K-block for this machine (peak of the bell
     /// curve): the largest candidate within the register budget.
     pub fn predicted_best_kb(&self) -> usize {
@@ -218,6 +234,30 @@ mod tests {
         // both modelled L2 sizes admit the full tiled family
         assert_eq!(intel.candidate_kts(), TILED_KTS.to_vec());
         assert_eq!(amd.candidate_kts(), TILED_KTS.to_vec());
+
+        // SELL params: slice height tracks the SIMD group (clamped into
+        // the shipped heights), two sort windows per height
+        assert_eq!(intel.candidate_sell_params(), vec![(8, 64), (8, 256)]); // vlen 16 clamps to 8
+        assert_eq!(amd.candidate_sell_params(), vec![(8, 64), (8, 256)]); // vlen 8
+        for (c, sigma) in intel.candidate_sell_params() {
+            assert!(SELL_SLICE_HEIGHTS.contains(&c));
+            assert_eq!(sigma % c, 0);
+        }
+    }
+
+    #[test]
+    fn sell_params_on_narrow_simd() {
+        // a scalar/NEON-class machine gets the small slice height
+        let narrow = HardwareProfile {
+            name: "narrow".into(),
+            simd: SimdClass::V128,
+            vector_registers: 16,
+            cores: 4,
+            l2_bytes: 256 * 1024,
+        };
+        assert_eq!(narrow.candidate_sell_params(), vec![(4, 32), (4, 128)]);
+        let scalar = HardwareProfile { simd: SimdClass::Scalar, ..narrow };
+        assert_eq!(scalar.candidate_sell_params(), vec![(4, 32), (4, 128)]);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! dataset + hardware profile. [`render_ascii_chart`] draws the bell curve
 //! in the terminal; the JSON form feeds plotting scripts.
 
+use crate::sparse::RowLenStats;
 use crate::util::json::Json;
 
 /// One point of the tuning curve.
@@ -43,6 +44,10 @@ pub struct TuningReport {
     pub dataset: String,
     /// Hardware profile name.
     pub profile: String,
+    /// Row-length statistics of the tuned adjacency — the signal behind
+    /// the sparse-format pruning decision (`None` for reports built
+    /// before the format axis or without access to the graph).
+    pub row_len: Option<RowLenStats>,
     /// Points, ascending in K.
     pub points: Vec<TuningPoint>,
 }
@@ -64,9 +69,21 @@ impl TuningReport {
 
     /// JSON form (for `isplib tune --json` and plotting scripts).
     pub fn to_json(&self) -> Json {
+        let row_len = match &self.row_len {
+            Some(s) => Json::obj(vec![
+                ("mean", Json::num(s.mean)),
+                ("p50", Json::num(s.p50 as f64)),
+                ("p99", Json::num(s.p99 as f64)),
+                ("max", Json::num(s.max as f64)),
+                ("skew", Json::num(s.skew())),
+                ("format_promising", Json::bool(s.format_promising())),
+            ]),
+            None => Json::Null,
+        };
         Json::obj(vec![
             ("dataset", Json::str(&self.dataset)),
             ("profile", Json::str(&self.profile)),
+            ("row_len", row_len),
             (
                 "points",
                 Json::Arr(
@@ -96,6 +113,17 @@ pub fn render_ascii_chart(report: &TuningReport) -> String {
         "tuning graph — dataset={} profile={}\n",
         report.dataset, report.profile
     ));
+    if let Some(s) = &report.row_len {
+        out.push_str(&format!(
+            "  rows: mean={:.1} p50={} p99={} max={} skew={:.1} → format axis {}\n",
+            s.mean,
+            s.p50,
+            s.p99,
+            s.max,
+            s.skew(),
+            if s.format_promising() { "searched" } else { "pruned" }
+        ));
+    }
     let maxsp = report.peak_speedup().max(1.0);
     let width = 48usize;
     for p in &report.points {
@@ -123,6 +151,7 @@ mod tests {
         TuningReport {
             dataset: "reddit".into(),
             profile: "intel-skylake".into(),
+            row_len: Some(RowLenStats { mean: 2.5, p50: 2, p99: 30, max: 90 }),
             points: vec![
                 TuningPoint {
                     k: 16,
@@ -192,9 +221,29 @@ mod tests {
 
     #[test]
     fn empty_report() {
-        let r = TuningReport { dataset: "x".into(), profile: "y".into(), points: vec![] };
+        let r = TuningReport {
+            dataset: "x".into(),
+            profile: "y".into(),
+            row_len: None,
+            points: vec![],
+        };
         assert_eq!(r.ideal_k(), None);
         assert_eq!(r.peak_speedup(), 1.0);
-        let _ = render_ascii_chart(&r);
+        let chart = render_ascii_chart(&r);
+        assert!(!chart.contains("rows:"), "no stats line without stats");
+        // stats-less reports serialise row_len as null
+        assert!(matches!(r.to_json().get("row_len").unwrap(), Json::Null));
+    }
+
+    #[test]
+    fn chart_and_json_carry_row_stats() {
+        let r = sample();
+        let chart = render_ascii_chart(&r);
+        assert!(chart.contains("rows: mean=2.5 p50=2 p99=30 max=90"), "{chart}");
+        assert!(chart.contains("format axis searched"));
+        let j = r.to_json();
+        let rl = j.get("row_len").unwrap();
+        assert_eq!(rl.get("p99").unwrap().as_usize().unwrap(), 30);
+        assert!(rl.get("format_promising").unwrap().as_bool().unwrap());
     }
 }

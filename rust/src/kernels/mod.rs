@@ -12,6 +12,11 @@
 //! * **tiled** ([`tiled`]) — the trusted kernel cache-blocked over the K
 //!   dimension ([`TILED_KTS`] tile widths), for embeddings too wide for
 //!   the row strip to stay L1/L2-resident.
+//! * **sell / sorted-csr** ([`sell`]) — kernels over alternative matrix
+//!   *representations* (SELL-C-σ slices, row-length-sorted CSR), the
+//!   tuner's sparse-format axis. Bitwise-equal to trusted for every
+//!   semiring; conversions are cached per graph in the
+//!   [`KernelWorkspace`].
 //!
 //! The auto-tuner picks between the families per `(dataset, K, machine)`.
 //!
@@ -28,6 +33,7 @@ mod fusedmm;
 mod generated;
 mod partition;
 mod sddmm;
+mod sell;
 mod semiring;
 mod spmm_dispatch;
 mod tiled;
@@ -39,8 +45,9 @@ pub use fusedmm::{fusedmm, EdgeOp};
 pub use generated::{spmm_generated, spmm_generated_parallel, GENERATED_KBS};
 pub use partition::{nnz_balanced_partition, split_rows_mut, RowRange};
 pub use sddmm::sddmm;
+pub use sell::{sell_window_ranges, SELL_SLICE_HEIGHTS};
 pub use semiring::Semiring;
-pub use spmm_dispatch::{spmm, spmm_with_workspace, KernelChoice};
+pub use spmm_dispatch::{prepare_format, spmm, spmm_with_workspace, KernelChoice};
 pub use tiled::{spmm_tiled, spmm_tiled_parallel, TILED_KTS};
 pub use trusted::{spmm_trusted, spmm_trusted_parallel};
 pub use workspace::{KernelWorkspace, WorkspaceStats};

@@ -7,10 +7,10 @@
 
 use crate::dense::Dense;
 use crate::kernels::{
-    fusedmm, nnz_balanced_partition, sddmm, spmm, spmm_dense_ref, EdgeOp, KernelChoice, Semiring,
-    GENERATED_KBS, TILED_KTS,
+    fusedmm, nnz_balanced_partition, sddmm, spmm, spmm_dense_ref, spmm_with_workspace, EdgeOp,
+    KernelChoice, KernelWorkspace, Semiring, GENERATED_KBS, SELL_SLICE_HEIGHTS, TILED_KTS,
 };
-use crate::sparse::{Coo, Csr};
+use crate::sparse::{Coo, Csr, Sell, SortedCsr};
 use crate::util::check::forall;
 use crate::util::rng::Rng;
 
@@ -104,6 +104,59 @@ fn prop_parallel_bit_identical() {
         let serial = spmm(&a, &x, op, KernelChoice::Trusted, 1).unwrap();
         let par = spmm(&a, &x, op, KernelChoice::Trusted, threads).unwrap();
         assert_eq!(serial.data, par.data, "threads={threads} op={op:?}");
+    });
+}
+
+#[test]
+fn prop_sell_roundtrip() {
+    // SELL-C-σ ↔ CSR is exact for arbitrary sparsity (including empty
+    // rows, all-empty slices) and arbitrary (C, σ) — σ below, above, and
+    // not a multiple of C.
+    forall("sell ↔ csr exact round-trip", 64, |rng| {
+        let rows = 1 + rng.gen_range(40);
+        let a = arb_csr(rng, rows, 16);
+        let c = 1 + rng.gen_range(9);
+        let sigma = 1 + rng.gen_range(3 * rows);
+        let sell = Sell::from_csr(&a, c, sigma);
+        sell.validate().unwrap();
+        assert_eq!(sell.to_csr(), a, "c={c} sigma={sigma} rows={rows}");
+    });
+}
+
+#[test]
+fn prop_sorted_csr_roundtrip() {
+    forall("sorted-csr ↔ csr exact round-trip", 64, |rng| {
+        let a = arb_csr(rng, 1 + rng.gen_range(40), 12);
+        let sc = SortedCsr::from_csr(&a);
+        sc.csr.validate().unwrap();
+        assert_eq!(sc.to_csr(), a);
+    });
+}
+
+#[test]
+fn prop_format_choices_bitwise_equal_trusted() {
+    // The sparse-format axis must preserve the library's central routing
+    // invariance — and, stronger, be BITWISE equal to trusted for every
+    // semiring, serial and pooled, with and without a workspace cache.
+    forall("sell/sorted == trusted, bitwise, any semiring", 48, |rng| {
+        let rows = 1 + rng.gen_range(36);
+        let a = arb_csr(rng, rows, rows.max(2));
+        let k = 1 + rng.gen_range(20);
+        let x = arb_dense(rng, rows.max(2), k);
+        let op = arb_semiring(rng);
+        let threads = 1 + rng.gen_range(4);
+        let c = SELL_SLICE_HEIGHTS[rng.gen_range(SELL_SLICE_HEIGHTS.len())];
+        let sigma = 1 + rng.gen_range(2 * rows + 8);
+        let want = spmm(&a, &x, op, KernelChoice::Trusted, threads).unwrap();
+        let ws = KernelWorkspace::new();
+        for choice in [KernelChoice::Sell { c, sigma }, KernelChoice::SortedCsr] {
+            let got = spmm(&a, &x, op, choice, threads).unwrap();
+            assert_eq!(got.data, want.data, "{choice:?} op={op:?} threads={threads}");
+            let pooled =
+                spmm_with_workspace(&a, &x, op, choice, threads, Some((&ws, 3))).unwrap();
+            assert_eq!(pooled.data, want.data, "pooled {choice:?} op={op:?}");
+            ws.recycle(pooled.data);
+        }
     });
 }
 

@@ -1,0 +1,328 @@
+//! SpMM kernels over the sparse-format axis: SELL-C-σ and sorted CSR.
+//!
+//! Both formats are exact row permutations of the CSR input with unchanged
+//! within-row entry order (see [`crate::sparse::Sell`]'s module docs), so
+//! every output element's neighbour stream combines in exactly the trusted
+//! kernel's order — results are **bitwise identical** to trusted for every
+//! semiring, serial and pooled (property-tested in `kernels::proptests`).
+//!
+//! Parallel decomposition differs per format:
+//!
+//! * **SELL** — the σ-window sort keeps rows inside their window, so
+//!   σ-aligned boundaries are simultaneously slice boundaries *and*
+//!   contiguous output-row boundaries. [`sell_window_ranges`] produces
+//!   NNZ-balanced, window-aligned [`RowRange`]s; each worker owns the
+//!   slices of its windows and a disjoint contiguous output block
+//!   (zero-copy, no scatter).
+//! * **Sorted CSR** — the permutation is global, so workers compute
+//!   NNZ-balanced contiguous *permuted* row blocks into a (pooled) scratch
+//!   and the rows are scattered back through `perm` in one row-memcpy
+//!   pass.
+
+use crate::dense::Dense;
+use crate::sparse::{Sell, SortedCsr};
+use crate::util::parallel;
+
+use super::trusted::spmm_trusted_partitioned_into;
+use super::{split_rows_mut, RowRange, Semiring};
+
+/// Slice heights C with SELL instantiations the tuner searches. 4 matches
+/// a 128-bit f32 SIMD group, 8 a 256-bit one; the hardware profile picks
+/// per machine ([`crate::autotune::HardwareProfile::candidate_sell_params`]).
+pub const SELL_SLICE_HEIGHTS: [usize; 2] = [4, 8];
+
+/// Serial SELL-C-σ SpMM into a pre-sized **zeroed** output (rows in
+/// original order — the kernel un-permutes as it writes).
+pub(crate) fn spmm_sell_serial_into(a: &Sell, x: &Dense, op: Semiring, y: &mut Dense) {
+    spmm_sell_slices_into(a, x, op, 0, a.n_slices(), 0, &mut y.data);
+}
+
+/// Parallel SELL body over window-aligned row ranges (from
+/// [`sell_window_ranges`]): each range's slices write only into that
+/// range's disjoint output block.
+pub(crate) fn spmm_sell_partitioned_into(
+    a: &Sell,
+    x: &Dense,
+    op: Semiring,
+    ranges: &[RowRange],
+    y: &mut Dense,
+) {
+    let k = y.cols;
+    parallel::join_all(
+        split_rows_mut(&mut y.data, ranges, k)
+            .into_iter()
+            .map(|(range, out)| {
+                move || {
+                    debug_assert_eq!(range.start % a.sigma, 0, "range not window-aligned");
+                    let s0 = range.start / a.c;
+                    let s1 = range.end.div_ceil(a.c);
+                    spmm_sell_slices_into(a, x, op, s0, s1, range.start, out)
+                }
+            })
+            .collect(),
+    );
+}
+
+/// Compute slices `[s0, s1)` into a buffer whose row 0 is original row
+/// `row_offset`. The inner loop walks a slice's lanes in lockstep per
+/// entry column `j`; because lens are non-increasing within a slice
+/// (SELL invariant 2), the active lanes at each `j` are a prefix whose
+/// length only shrinks — no per-lane branch in the hot loop.
+fn spmm_sell_slices_into(
+    a: &Sell,
+    x: &Dense,
+    op: Semiring,
+    s0: usize,
+    s1: usize,
+    row_offset: usize,
+    out: &mut [f32],
+) {
+    let k = x.cols;
+    for s in s0..s1 {
+        let base = s * a.c;
+        let lanes = a.slice_lanes(s);
+        let width = a.slice_width(s);
+        let off = a.slice_ptr[s];
+        let lens = &a.lens[base..base + lanes];
+
+        if op != Semiring::Sum {
+            // identity fill (the zeroed buffer is already sum's identity)
+            for &orig in &a.perm[base..base + lanes] {
+                row_mut(out, orig - row_offset, k).fill(op.identity());
+            }
+        }
+
+        let mut nact = lanes;
+        for j in 0..width {
+            while nact > 0 && lens[nact - 1] <= j {
+                nact -= 1;
+            }
+            let slot0 = off + j * lanes;
+            match op {
+                Semiring::Sum => {
+                    for i in 0..nact {
+                        let c = a.col_idx[slot0 + i];
+                        let v = a.values[slot0 + i];
+                        let orow = row_mut(out, a.perm[base + i] - row_offset, k);
+                        for (o, &xv) in orow.iter_mut().zip(x.row(c)) {
+                            *o += v * xv;
+                        }
+                    }
+                }
+                _ => {
+                    for i in 0..nact {
+                        let c = a.col_idx[slot0 + i];
+                        let v = a.values[slot0 + i];
+                        let orow = row_mut(out, a.perm[base + i] - row_offset, k);
+                        for (o, &xv) in orow.iter_mut().zip(x.row(c)) {
+                            *o = op.combine(*o, v * xv);
+                        }
+                    }
+                }
+            }
+        }
+
+        if op != Semiring::Sum {
+            for (&orig, &nnz) in a.perm[base..base + lanes].iter().zip(lens) {
+                let orow = row_mut(out, orig - row_offset, k);
+                for slot in orow.iter_mut() {
+                    *slot = op.finalize(*slot, nnz);
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn row_mut(out: &mut [f32], local_row: usize, k: usize) -> &mut [f32] {
+    &mut out[local_row * k..(local_row + 1) * k]
+}
+
+/// NNZ-balanced partition of a SELL matrix's rows into at most `parts`
+/// contiguous ranges whose boundaries land on σ-window edges — the only
+/// cut points where permuted rows stay inside their range. O(#windows),
+/// cheap enough to run per call (no caching needed, unlike the O(rows)
+/// CSR partition).
+pub fn sell_window_ranges(a: &Sell, parts: usize) -> Vec<RowRange> {
+    let parts = parts.max(1);
+    if a.rows == 0 {
+        return vec![];
+    }
+    let total = a.nnz();
+    let windows = a.window_nnz.len();
+    if total == 0 || parts == 1 || windows <= 1 {
+        return vec![RowRange { start: 0, end: a.rows }];
+    }
+    let target = total.div_ceil(parts);
+    let mut out = Vec::with_capacity(parts.min(windows));
+    let mut start = 0usize;
+    let mut acc = 0usize;
+    for (w, &wn) in a.window_nnz.iter().enumerate() {
+        acc += wn;
+        let end = ((w + 1) * a.sigma).min(a.rows);
+        if acc >= target && out.len() + 1 < parts && end < a.rows {
+            out.push(RowRange { start, end });
+            start = end;
+            acc = 0;
+        }
+    }
+    if start < a.rows {
+        out.push(RowRange { start, end: a.rows });
+    }
+    out
+}
+
+/// Serial sorted-CSR SpMM into a pre-sized **zeroed** output: the trusted
+/// row loop over the permuted matrix, writing each finished row straight
+/// to its original position (no scratch, no scatter pass).
+pub(crate) fn spmm_sorted_serial_into(a: &SortedCsr, x: &Dense, op: Semiring, y: &mut Dense) {
+    let m = &a.csr;
+    for p in 0..m.rows {
+        let orow = y.row_mut(a.perm[p]);
+        match op {
+            Semiring::Sum => {
+                for (&c, &v) in m.row_cols(p).iter().zip(m.row_vals(p)) {
+                    for (o, &xv) in orow.iter_mut().zip(x.row(c)) {
+                        *o += v * xv;
+                    }
+                }
+            }
+            _ => {
+                let nnz = m.row_nnz(p);
+                orow.fill(op.identity());
+                for (&c, &v) in m.row_cols(p).iter().zip(m.row_vals(p)) {
+                    for (o, &xv) in orow.iter_mut().zip(x.row(c)) {
+                        *o = op.combine(*o, v * xv);
+                    }
+                }
+                for slot in orow.iter_mut() {
+                    *slot = op.finalize(*slot, nnz);
+                }
+            }
+        }
+    }
+}
+
+/// Parallel sorted-CSR body: workers fill NNZ-balanced contiguous blocks
+/// of `scratch` in *permuted* row order (the trusted partitioned kernel,
+/// verbatim), then one serial pass scatters rows back to original order.
+/// `scratch` must be a zeroed `rows × k` buffer (pooled by the caller).
+pub(crate) fn spmm_sorted_partitioned_into(
+    a: &SortedCsr,
+    x: &Dense,
+    op: Semiring,
+    ranges: &[RowRange],
+    scratch: &mut Dense,
+    y: &mut Dense,
+) {
+    spmm_trusted_partitioned_into(&a.csr, x, op, ranges, scratch);
+    for (p, &orig) in a.perm.iter().enumerate() {
+        y.row_mut(orig).copy_from_slice(scratch.row(p));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{nnz_balanced_partition, spmm_trusted};
+    use crate::sparse::{Coo, Csr};
+    use crate::util::rng::Rng;
+
+    fn skewed(n: usize, seed: u64) -> Csr {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            let deg = if r % 13 == 0 {
+                10
+            } else if r % 4 == 0 {
+                0
+            } else {
+                1 + rng.gen_range(3)
+            };
+            for _ in 0..deg {
+                coo.push(r, rng.gen_range(n), rng.gen_range_f32(0.1, 1.0));
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn sell_serial_bitwise_equals_trusted_all_semirings() {
+        let mut rng = Rng::seed_from_u64(91);
+        let a = skewed(60, 92);
+        for k in [1, 7, 16] {
+            let x = Dense::uniform(60, k, 1.0, &mut rng);
+            for op in Semiring::ALL {
+                let want = spmm_trusted(&a, &x, op).unwrap();
+                for (c, sigma) in [(4, 4), (4, 32), (8, 64), (3, 5)] {
+                    let sell = Sell::from_csr(&a, c, sigma);
+                    let mut y = Dense::zeros(60, k);
+                    spmm_sell_serial_into(&sell, &x, op, &mut y);
+                    assert_eq!(y.data, want.data, "c={c} σ={sigma} k={k} op={op:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sell_partitioned_bitwise_equals_serial() {
+        let mut rng = Rng::seed_from_u64(93);
+        let a = skewed(90, 94);
+        let x = Dense::uniform(90, 9, 1.0, &mut rng);
+        let sell = Sell::from_csr(&a, 4, 16);
+        for op in Semiring::ALL {
+            let mut serial = Dense::zeros(90, 9);
+            spmm_sell_serial_into(&sell, &x, op, &mut serial);
+            for parts in [2, 3, 7] {
+                let ranges = sell_window_ranges(&sell, parts);
+                let mut y = Dense::zeros(90, 9);
+                spmm_sell_partitioned_into(&sell, &x, op, &ranges, &mut y);
+                assert_eq!(y.data, serial.data, "parts={parts} op={op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn window_ranges_are_aligned_and_cover() {
+        let a = skewed(101, 95); // deliberately not a multiple of σ
+        let sell = Sell::from_csr(&a, 4, 8);
+        for parts in [1, 2, 5, 64] {
+            let ranges = sell_window_ranges(&sell, parts);
+            let mut cursor = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, cursor);
+                assert_eq!(r.start % sell.sigma, 0, "unaligned start at parts={parts}");
+                assert!(r.end > r.start);
+                cursor = r.end;
+            }
+            assert_eq!(cursor, 101);
+            assert!(ranges.len() <= parts.max(1));
+        }
+        // degenerate shapes
+        let empty = Sell::from_csr(&Csr::empty(0, 4), 4, 8);
+        assert!(sell_window_ranges(&empty, 4).is_empty());
+        let zeros = Sell::from_csr(&Csr::empty(6, 6), 4, 8);
+        assert_eq!(sell_window_ranges(&zeros, 4), vec![RowRange { start: 0, end: 6 }]);
+    }
+
+    #[test]
+    fn sorted_serial_and_parallel_bitwise_equal_trusted() {
+        let mut rng = Rng::seed_from_u64(96);
+        let a = skewed(70, 97);
+        let x = Dense::uniform(70, 11, 1.0, &mut rng);
+        let sc = SortedCsr::from_csr(&a);
+        for op in Semiring::ALL {
+            let want = spmm_trusted(&a, &x, op).unwrap();
+            let mut y = Dense::zeros(70, 11);
+            spmm_sorted_serial_into(&sc, &x, op, &mut y);
+            assert_eq!(y.data, want.data, "serial op={op:?}");
+            for parts in [2, 5] {
+                let ranges = nnz_balanced_partition(&sc.csr, parts);
+                let mut scratch = Dense::zeros(70, 11);
+                let mut y = Dense::zeros(70, 11);
+                spmm_sorted_partitioned_into(&sc, &x, op, &ranges, &mut scratch, &mut y);
+                assert_eq!(y.data, want.data, "parts={parts} op={op:?}");
+            }
+        }
+    }
+}

@@ -1,27 +1,41 @@
 //! The public SpMM entry point: routes between the trusted, generated and
-//! tiled kernel families.
+//! tiled kernel families — and, since the tuner grew a **sparse-format
+//! axis**, between matrix *representations* (CSR, SELL-C-σ, sorted CSR).
 //!
 //! This is the seam the auto-tuner (and `patch()`/`unpatch()`) controls: a
 //! [`KernelChoice`] says *which* kernel handles a call; numerics never
-//! depend on the choice (a property-tested invariant). The workspace-aware
-//! variant ([`spmm_with_workspace`]) additionally reuses cached NNZ
-//! partitions and pooled output buffers, turning per-call fixed costs into
-//! per-graph ones.
+//! depend on the choice (a property-tested invariant — format choices are
+//! bitwise-equal to trusted by the inverse-permutation argument in
+//! [`crate::sparse::Sell`]). The workspace-aware variant
+//! ([`spmm_with_workspace`]) additionally reuses cached NNZ partitions,
+//! cached format conversions, and pooled output buffers, turning per-call
+//! fixed costs into per-graph ones. Degenerate inputs (0 rows, 0 nnz,
+//! K = 0) are handled once here, uniformly for every kernel family.
+
+use std::sync::Arc;
 
 use crate::dense::Dense;
 use crate::error::{Error, Result};
-use crate::sparse::Csr;
+use crate::sparse::{Csr, Sell, SortedCsr};
 use crate::util::parallel;
 
 use super::generated::{spmm_generated_partitioned_into, spmm_generated_serial_into};
+use super::sell::{
+    sell_window_ranges, spmm_sell_partitioned_into, spmm_sell_serial_into,
+    spmm_sorted_partitioned_into, spmm_sorted_serial_into,
+};
 use super::tiled::{spmm_tiled_partitioned_into, spmm_tiled_serial_into};
 use super::trusted::{spmm_trusted_partitioned_into, spmm_trusted_serial_into};
-use super::{nnz_balanced_partition, KernelWorkspace, Semiring, GENERATED_KBS, TILED_KTS};
+use super::{
+    nnz_balanced_partition, KernelWorkspace, Semiring, GENERATED_KBS, SELL_SLICE_HEIGHTS,
+    TILED_KTS,
+};
 
-/// Which kernel implementation to route an SpMM call to.
+/// Which kernel implementation — and matrix representation — to route an
+/// SpMM call to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum KernelChoice {
-    /// Generic kernel, any K / any semiring.
+    /// Generic CSR kernel, any K / any semiring.
     Trusted,
     /// Register-blocked generated kernel with the given K-block width.
     /// Sum semiring only; K must be a multiple of the block.
@@ -37,6 +51,20 @@ pub enum KernelChoice {
         /// Column-tile width (one of [`TILED_KTS`]).
         kt: usize,
     },
+    /// SELL-C-σ representation (slice height C, sort window σ): short and
+    /// skewed rows processed C at a time with a branch-free lane loop. Any
+    /// semiring; bitwise-equal to trusted. Conversion is cached per graph
+    /// in the [`KernelWorkspace`].
+    Sell {
+        /// Slice height (one of [`SELL_SLICE_HEIGHTS`]).
+        c: usize,
+        /// Sort-window size (rounded up to a multiple of `c` internally).
+        sigma: usize,
+    },
+    /// Row-length-sorted CSR: the trusted kernel over globally
+    /// descending-length rows, un-permuted on write. Any semiring;
+    /// bitwise-equal to trusted. Conversion cached per graph.
+    SortedCsr,
 }
 
 impl KernelChoice {
@@ -53,7 +81,19 @@ impl KernelChoice {
             // at k ≤ kt it degenerates to the trusted kernel, so routing
             // falls back rather than letting the tuner time duplicates.
             KernelChoice::Tiled { kt } => TILED_KTS.contains(&kt) && k > kt,
+            // Format choices work for any semiring and any K — the format
+            // reshapes the *matrix*, not the feature panel.
+            KernelChoice::Sell { c, sigma } => {
+                SELL_SLICE_HEIGHTS.contains(&c) && sigma >= 1 && k > 0
+            }
+            KernelChoice::SortedCsr => k > 0,
         }
+    }
+
+    /// True when this choice routes through an alternative sparse *format*
+    /// (needing a cached conversion) rather than a CSR kernel variant.
+    pub fn is_format(&self) -> bool {
+        matches!(self, KernelChoice::Sell { .. } | KernelChoice::SortedCsr)
     }
 
     /// Short display name for reports.
@@ -62,7 +102,40 @@ impl KernelChoice {
             KernelChoice::Trusted => "trusted".to_string(),
             KernelChoice::Generated { kb } => format!("generated(kb={kb})"),
             KernelChoice::Tiled { kt } => format!("tiled(kt={kt})"),
+            KernelChoice::Sell { c, sigma } => format!("sell(c={c},s={sigma})"),
+            KernelChoice::SortedCsr => "sorted-csr".to_string(),
         }
+    }
+
+    /// The matrix representation this choice consumes — the `format` field
+    /// of `BENCH_kernels.json` rows.
+    pub fn format_label(&self) -> String {
+        match *self {
+            KernelChoice::Sell { c, sigma } => format!("sell(c={c},s={sigma})"),
+            KernelChoice::SortedCsr => "sorted-csr".to_string(),
+            _ => "csr".to_string(),
+        }
+    }
+}
+
+/// Materialise (and cache, when `ws` is supplied) the sparse format a
+/// choice needs, without running any SpMM. Returns `true` for format
+/// choices (a conversion was performed or was already cached), `false`
+/// for CSR-kernel choices. The tuner primes conversions through this
+/// before timing — conversion is a per-graph setup cost, not a per-call
+/// one — and serving sessions pre-convert at registration so the first
+/// request pays nothing.
+pub fn prepare_format(a: &Csr, choice: KernelChoice, ws: &KernelWorkspace, graph_id: u64) -> bool {
+    match choice {
+        KernelChoice::Sell { c, sigma } => {
+            ws.sell(graph_id, a, c, sigma);
+            true
+        }
+        KernelChoice::SortedCsr => {
+            ws.sorted_csr(graph_id, a);
+            true
+        }
+        _ => false,
     }
 }
 
@@ -110,27 +183,99 @@ pub fn spmm_with_workspace(
         None => Dense::zeros(a.rows, k),
     };
 
+    // Uniform degenerate guard, once for every kernel family: no rows, no
+    // output columns, or an all-zero adjacency all produce an all-zero
+    // output (every semiring finalises an empty row to 0), which is
+    // exactly what the zeroed buffer already holds. Kernels below may
+    // assume nnz > 0 and K > 0.
+    if a.rows == 0 || k == 0 || a.nnz() == 0 {
+        return Ok(y);
+    }
+
     if threads <= 1 {
         match choice {
             KernelChoice::Trusted => spmm_trusted_serial_into(a, x, op, &mut y),
             KernelChoice::Generated { kb } => spmm_generated_serial_into(a, x, kb, &mut y),
             KernelChoice::Tiled { kt } => spmm_tiled_serial_into(a, x, op, kt, &mut y),
+            KernelChoice::Sell { c, sigma } => {
+                let sell = cached_sell(a, c, sigma, ws);
+                spmm_sell_serial_into(&sell, x, op, &mut y);
+            }
+            KernelChoice::SortedCsr => {
+                let sc = cached_sorted(a, ws);
+                spmm_sorted_serial_into(&sc, x, op, &mut y);
+            }
         }
         return Ok(y);
     }
 
     // Parallel: the partition is the other per-call fixed cost the
-    // workspace amortises.
-    let ranges = match ws {
-        Some((w, graph_id)) => w.partition(graph_id, a, threads),
-        None => std::sync::Arc::new(nnz_balanced_partition(a, threads)),
-    };
+    // workspace amortises. Format choices partition their own layout —
+    // SELL at σ-window granularity (window boundaries are the only cuts
+    // where the local permutation stays inside a worker's output block),
+    // sorted CSR over the permuted rows with a pooled scratch + scatter.
     match choice {
-        KernelChoice::Trusted => spmm_trusted_partitioned_into(a, x, op, &ranges, &mut y),
-        KernelChoice::Generated { kb } => spmm_generated_partitioned_into(a, x, kb, &ranges, &mut y),
-        KernelChoice::Tiled { kt } => spmm_tiled_partitioned_into(a, x, op, kt, &ranges, &mut y),
+        KernelChoice::Sell { c, sigma } => {
+            let sell = cached_sell(a, c, sigma, ws);
+            let ranges = sell_window_ranges(&sell, threads);
+            spmm_sell_partitioned_into(&sell, x, op, &ranges, &mut y);
+        }
+        KernelChoice::SortedCsr => {
+            let sc = cached_sorted(a, ws);
+            let ranges = match ws {
+                Some((w, graph_id)) => {
+                    w.partition(KernelWorkspace::sorted_partition_id(graph_id), &sc.csr, threads)
+                }
+                None => Arc::new(nnz_balanced_partition(&sc.csr, threads)),
+            };
+            let mut scratch = match ws {
+                Some((w, _)) => w.take_dense(a.rows, k),
+                None => Dense::zeros(a.rows, k),
+            };
+            spmm_sorted_partitioned_into(&sc, x, op, &ranges, &mut scratch, &mut y);
+            if let Some((w, _)) = ws {
+                w.recycle(scratch.data);
+            }
+        }
+        _ => {
+            let ranges = match ws {
+                Some((w, graph_id)) => w.partition(graph_id, a, threads),
+                None => Arc::new(nnz_balanced_partition(a, threads)),
+            };
+            match choice {
+                KernelChoice::Trusted => spmm_trusted_partitioned_into(a, x, op, &ranges, &mut y),
+                KernelChoice::Generated { kb } => {
+                    spmm_generated_partitioned_into(a, x, kb, &ranges, &mut y)
+                }
+                KernelChoice::Tiled { kt } => {
+                    spmm_tiled_partitioned_into(a, x, op, kt, &ranges, &mut y)
+                }
+                KernelChoice::Sell { .. } | KernelChoice::SortedCsr => unreachable!(),
+            }
+        }
     }
     Ok(y)
+}
+
+/// The (possibly cached) SELL-C-σ conversion for this call.
+fn cached_sell(
+    a: &Csr,
+    c: usize,
+    sigma: usize,
+    ws: Option<(&KernelWorkspace, u64)>,
+) -> Arc<Sell> {
+    match ws {
+        Some((w, graph_id)) => w.sell(graph_id, a, c, sigma),
+        None => Arc::new(Sell::from_csr(a, c, sigma)),
+    }
+}
+
+/// The (possibly cached) sorted-CSR conversion for this call.
+fn cached_sorted(a: &Csr, ws: Option<(&KernelWorkspace, u64)>) -> Arc<SortedCsr> {
+    match ws {
+        Some((w, graph_id)) => w.sorted_csr(graph_id, a),
+        None => Arc::new(SortedCsr::from_csr(a)),
+    }
 }
 
 #[cfg(test)]
@@ -169,6 +314,20 @@ mod tests {
         assert!(!t64.applicable(17, Semiring::Max));
         assert!(!t64.applicable(0, Semiring::Sum));
         assert!(!KernelChoice::Tiled { kt: 7 }.applicable(64, Semiring::Sum));
+        // format choices: any semiring, any K ≥ 1, known slice heights
+        let sell = KernelChoice::Sell { c: 4, sigma: 32 };
+        assert!(sell.applicable(17, Semiring::Max));
+        assert!(sell.applicable(1, Semiring::Mean));
+        assert!(!sell.applicable(0, Semiring::Sum));
+        assert!(!KernelChoice::Sell { c: 5, sigma: 32 }.applicable(16, Semiring::Sum));
+        assert!(!KernelChoice::Sell { c: 4, sigma: 0 }.applicable(16, Semiring::Sum));
+        assert!(KernelChoice::SortedCsr.applicable(17, Semiring::Min));
+        assert!(!KernelChoice::SortedCsr.applicable(0, Semiring::Sum));
+        // format predicate
+        assert!(sell.is_format());
+        assert!(KernelChoice::SortedCsr.is_format());
+        assert!(!KernelChoice::Trusted.is_format());
+        assert!(!KernelChoice::Tiled { kt: 64 }.is_format());
     }
 
     #[test]
@@ -198,6 +357,9 @@ mod tests {
             KernelChoice::Tiled { kt: 16 },
             KernelChoice::Tiled { kt: 64 },
             KernelChoice::Tiled { kt: 256 },
+            KernelChoice::Sell { c: 4, sigma: 32 },
+            KernelChoice::Sell { c: 8, sigma: 64 },
+            KernelChoice::SortedCsr,
         ] {
             for threads in [1, 3] {
                 let got = spmm(&a, &x, Semiring::Sum, choice, threads).unwrap();
@@ -207,6 +369,104 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn format_choices_bitwise_equal_trusted_through_dispatch() {
+        let mut rng = Rng::seed_from_u64(46);
+        let a = graph(48, 47);
+        let x = Dense::uniform(48, 13, 1.0, &mut rng);
+        for op in Semiring::ALL {
+            for threads in [1, 4] {
+                let want = spmm(&a, &x, op, KernelChoice::Trusted, threads).unwrap();
+                for choice in [
+                    KernelChoice::Sell { c: 4, sigma: 8 },
+                    KernelChoice::Sell { c: 8, sigma: 256 },
+                    KernelChoice::SortedCsr,
+                ] {
+                    let got = spmm(&a, &x, op, choice, threads).unwrap();
+                    assert_eq!(got.data, want.data, "choice={choice:?} op={op:?} t={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn format_conversions_cached_in_workspace() {
+        let mut rng = Rng::seed_from_u64(48);
+        let a = graph(40, 49);
+        let x = Dense::uniform(40, 6, 1.0, &mut rng);
+        let ws = KernelWorkspace::new();
+        let choice = KernelChoice::Sell { c: 4, sigma: 16 };
+        // prepare_format primes the cache without running a kernel
+        assert!(prepare_format(&a, choice, &ws, 7));
+        assert!(!prepare_format(&a, KernelChoice::Trusted, &ws, 7));
+        assert_eq!(ws.stats().format_misses, 1);
+        for _ in 0..3 {
+            let y = spmm_with_workspace(&a, &x, Semiring::Sum, choice, 2, Some((&ws, 7))).unwrap();
+            ws.recycle(y.data);
+        }
+        let stats = ws.stats();
+        assert_eq!(stats.format_misses, 1, "conversion must be cached, not per-call");
+        assert_eq!(stats.format_hits, 3);
+        // sorted-csr caches both the format and its permuted partition
+        let ys = spmm_with_workspace(&a, &x, Semiring::Sum, KernelChoice::SortedCsr, 2, Some((&ws, 7)))
+            .unwrap();
+        ws.recycle(ys.data);
+        assert_eq!(ws.cached_formats(), 2);
+        let misses = ws.stats().partition_misses;
+        let yt = spmm_with_workspace(&a, &x, Semiring::Sum, KernelChoice::SortedCsr, 2, Some((&ws, 7)))
+            .unwrap();
+        ws.recycle(yt.data);
+        assert_eq!(ws.stats().partition_misses, misses, "permuted partition cached");
+        // eviction drops the graph's formats with its partitions
+        assert!(ws.evict(7) >= 2);
+        assert_eq!(ws.cached_formats(), 0);
+    }
+
+    #[test]
+    fn degenerate_inputs_guarded_uniformly() {
+        // 0 rows, 0 nnz and K=0 are handled at the dispatch seam for every
+        // kernel family (regression: these used to rely on each kernel's
+        // own handling)
+        let all_choices = [
+            KernelChoice::Trusted,
+            KernelChoice::Generated { kb: 8 },
+            KernelChoice::Tiled { kt: 16 },
+            KernelChoice::Sell { c: 4, sigma: 32 },
+            KernelChoice::SortedCsr,
+        ];
+        for choice in all_choices {
+            for threads in [1, 3] {
+                for op in Semiring::ALL {
+                    // 0 rows
+                    let y = spmm(&Csr::empty(0, 5), &Dense::zeros(5, 8), op, choice, threads)
+                        .unwrap();
+                    assert_eq!((y.rows, y.cols), (0, 8), "{choice:?}");
+                    // 0 nnz: all-zero output, even for max/min (empty rows
+                    // finalise to 0, not ±inf)
+                    let y = spmm(&Csr::empty(4, 4), &Dense::zeros(4, 8), op, choice, threads)
+                        .unwrap();
+                    assert!(y.data.iter().all(|&v| v == 0.0), "{choice:?} op={op:?}");
+                    // K = 0
+                    let a = graph(6, 50);
+                    let y = spmm(&a, &Dense::zeros(6, 0), op, choice, threads).unwrap();
+                    assert_eq!((y.rows, y.cols), (6, 0), "{choice:?}");
+                    assert!(y.data.is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn format_labels() {
+        assert_eq!(KernelChoice::Sell { c: 4, sigma: 32 }.label(), "sell(c=4,s=32)");
+        assert_eq!(KernelChoice::SortedCsr.label(), "sorted-csr");
+        assert_eq!(KernelChoice::Trusted.format_label(), "csr");
+        assert_eq!(KernelChoice::Generated { kb: 8 }.format_label(), "csr");
+        assert_eq!(KernelChoice::Tiled { kt: 64 }.format_label(), "csr");
+        assert_eq!(KernelChoice::Sell { c: 8, sigma: 64 }.format_label(), "sell(c=8,s=64)");
+        assert_eq!(KernelChoice::SortedCsr.format_label(), "sorted-csr");
     }
 
     #[test]

@@ -15,6 +15,12 @@
 //!   / [`KernelWorkspace::recycle`] keep a small pool of retired buffers;
 //!   an epoch's outputs are recycled when its tape drops and reused by the
 //!   next epoch, converting per-call page faults into a warm `memset`.
+//! * **Format conversion** — since the tuner grew a sparse-format axis,
+//!   a tuned choice may route to a SELL-C-σ or sorted-CSR representation
+//!   of the graph. The O(nnz) conversions are memoised per
+//!   `(graph, format params)` ([`KernelWorkspace::sell`] /
+//!   [`KernelWorkspace::sorted_csr`]) so training and serving convert once
+//!   per graph, never per call.
 //!
 //! The workspace is shared (`Mutex`-guarded, `Arc`-cloned) between the
 //! trainer, the autodiff tape, the dispatcher
@@ -31,7 +37,7 @@ use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
 
 use crate::dense::Dense;
-use crate::sparse::Csr;
+use crate::sparse::{Csr, Sell, SortedCsr};
 
 use super::partition::{nnz_balanced_partition, RowRange};
 
@@ -58,6 +64,10 @@ pub struct WorkspaceStats {
     pub buffer_reuses: u64,
     /// Output buffers freshly allocated.
     pub buffer_allocs: u64,
+    /// Sparse-format lookups served from the cache.
+    pub format_hits: u64,
+    /// Sparse-format lookups that had to convert (O(nnz)).
+    pub format_misses: u64,
 }
 
 struct CachedPartition {
@@ -68,9 +78,69 @@ struct CachedPartition {
     ranges: Arc<Vec<RowRange>>,
 }
 
+/// Cache key for a converted sparse format of one graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum FormatKey {
+    /// SELL-C-σ with the *requested* (C, σ) — the tuner's choice params,
+    /// before σ is rounded up by the constructor.
+    Sell { c: usize, sigma: usize },
+    /// Row-length-sorted CSR (parameterless).
+    Sorted,
+}
+
+#[derive(Clone)]
+enum FormatVal {
+    Sell(Arc<Sell>),
+    Sorted(Arc<SortedCsr>),
+}
+
+struct CachedFormat {
+    /// Structural fingerprint of the source matrix ([`csr_fingerprint`]).
+    /// Stronger than [`CachedPartition`]'s `(rows, nnz)` pair on purpose:
+    /// a colliding-id partition hit merely unbalances load (any cover of
+    /// `0..rows` is still correct), but a format entry carries the other
+    /// matrix's *contents* — a false hit would compute with the wrong
+    /// edges.
+    fp: u64,
+    val: FormatVal,
+}
+
+/// O(1) structural fingerprint of a CSR: shape plus a constant number of
+/// sampled structure/value probes, FNV-folded. Cannot prove equality, but
+/// combined with the caller's graph id it makes silently reusing a
+/// different matrix's cached conversion vanishingly unlikely even when
+/// two graphs share `(rows, nnz)`. The real contract remains that graph
+/// ids are unique per matrix (they derive from distinct context strings);
+/// the fingerprint is the safety net for violations of it.
+fn csr_fingerprint(a: &Csr) -> u64 {
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |v: u64| h = (h ^ v).wrapping_mul(FNV_PRIME);
+    let n = a.nnz();
+    mix(a.rows as u64);
+    mix(a.cols as u64);
+    mix(n as u64);
+    if n > 0 {
+        for i in [0, n / 2, n - 1] {
+            mix(a.col_idx[i] as u64);
+            mix(a.values[i].to_bits() as u64);
+        }
+    }
+    if a.rows > 0 {
+        for r in [0, a.rows / 2, a.rows - 1] {
+            mix(a.row_ptr[r] as u64);
+        }
+    }
+    h
+}
+
 #[derive(Default)]
 struct Inner {
     partitions: HashMap<(u64, usize), CachedPartition>,
+    /// Converted sparse formats (SELL-C-σ / sorted CSR), keyed per graph —
+    /// the conversion is O(nnz), so like partitions it must be a per-graph
+    /// cost, not a per-call one. Evicted with the graph.
+    formats: HashMap<(u64, FormatKey), CachedFormat>,
     /// Retired buffers, binned by [`size_class`] of their capacity. Serving
     /// mixes many sizes (per-graph node counts × per-request widths) in one
     /// shared pool, so `take_buffer` must not scan every buffer per call.
@@ -124,6 +194,63 @@ impl KernelWorkspace {
             CachedPartition { rows: a.rows, nnz: a.nnz(), ranges: Arc::clone(&ranges) },
         );
         ranges
+    }
+
+    /// The memoised conversion under `(graph_id, key)`: fingerprint-
+    /// validated hit, or `convert()` outside the lock and insert. Shared
+    /// by every format — a stale or colliding id fails the
+    /// [`csr_fingerprint`] check and degrades to a miss (recompute), so it
+    /// cannot silently return a different matrix's conversion.
+    fn cached_format(
+        &self,
+        key: (u64, FormatKey),
+        a: &Csr,
+        convert: impl FnOnce() -> FormatVal,
+    ) -> FormatVal {
+        let fp = csr_fingerprint(a);
+        {
+            let mut g = self.inner.lock().unwrap();
+            let hit = g.formats.get(&key).filter(|f| f.fp == fp).map(|f| f.val.clone());
+            if let Some(v) = hit {
+                g.stats.format_hits += 1;
+                return v;
+            }
+            g.stats.format_misses += 1;
+        }
+        let val = convert();
+        let mut g = self.inner.lock().unwrap();
+        g.formats.insert(key, CachedFormat { fp, val: val.clone() });
+        val
+    }
+
+    /// The SELL-C-σ conversion of `a` under `(graph_id, c, sigma)`,
+    /// memoised (O(nnz) conversion runs outside the lock, once per graph).
+    pub fn sell(&self, graph_id: u64, a: &Csr, c: usize, sigma: usize) -> Arc<Sell> {
+        let key = (graph_id, FormatKey::Sell { c, sigma });
+        match self.cached_format(key, a, || FormatVal::Sell(Arc::new(Sell::from_csr(a, c, sigma))))
+        {
+            FormatVal::Sell(s) => s,
+            // a Sell key only ever maps to a Sell value
+            FormatVal::Sorted(_) => unreachable!("sell key held a sorted-csr value"),
+        }
+    }
+
+    /// The sorted-CSR conversion of `a` under `graph_id`, memoised — same
+    /// contract as [`KernelWorkspace::sell`].
+    pub fn sorted_csr(&self, graph_id: u64, a: &Csr) -> Arc<SortedCsr> {
+        let key = (graph_id, FormatKey::Sorted);
+        match self.cached_format(key, a, || FormatVal::Sorted(Arc::new(SortedCsr::from_csr(a)))) {
+            FormatVal::Sorted(s) => s,
+            // the Sorted key only ever maps to a sorted-csr value
+            FormatVal::Sell(_) => unreachable!("sorted key held a sell value"),
+        }
+    }
+
+    /// Derived identity for the *permuted* matrix inside a graph's sorted
+    /// CSR, so its NNZ partition gets its own cache entry (the permuted
+    /// row order balances differently than the original).
+    pub fn sorted_partition_id(graph_id: u64) -> u64 {
+        graph_id ^ 0x517c_c1b7_2722_0a95
     }
 
     /// A zeroed `len`-element buffer: smallest-class fit from the binned
@@ -203,23 +330,31 @@ impl KernelWorkspace {
         }
     }
 
-    /// Drop every cached partition belonging to `graph_id` (including its
-    /// derived transpose identity). Serving churns graphs — a closed
-    /// session must release its partition entries without nuking the other
-    /// tenants' (whole-pool [`KernelWorkspace::clear`] was the only option
-    /// before). Pooled buffers are graph-agnostic and survive eviction.
-    /// Returns the number of partition entries removed.
+    /// Drop every cached partition **and converted sparse format**
+    /// belonging to `graph_id` (including its derived transpose and
+    /// sorted-partition identities). Serving churns graphs — a closed
+    /// session must release its entries without nuking the other tenants'
+    /// (whole-pool [`KernelWorkspace::clear`] was the only option before).
+    /// Pooled buffers are graph-agnostic and survive eviction. Returns the
+    /// number of entries removed (partitions + formats).
     pub fn evict(&self, graph_id: u64) -> usize {
         let tid = Self::transpose_id(graph_id);
+        let sid = Self::sorted_partition_id(graph_id);
         let mut g = self.inner.lock().unwrap();
-        let before = g.partitions.len();
-        g.partitions.retain(|&(id, _), _| id != graph_id && id != tid);
-        before - g.partitions.len()
+        let before = g.partitions.len() + g.formats.len();
+        g.partitions.retain(|&(id, _), _| id != graph_id && id != tid && id != sid);
+        g.formats.retain(|&(id, _), _| id != graph_id && id != tid);
+        before - g.partitions.len() - g.formats.len()
     }
 
     /// Number of cached partition entries (diagnostics).
     pub fn cached_partitions(&self) -> usize {
         self.inner.lock().unwrap().partitions.len()
+    }
+
+    /// Number of cached converted sparse formats (diagnostics).
+    pub fn cached_formats(&self) -> usize {
+        self.inner.lock().unwrap().formats.len()
     }
 
     /// Number of buffers currently resting in the pool (diagnostics).
@@ -232,10 +367,12 @@ impl KernelWorkspace {
         self.inner.lock().unwrap().stats
     }
 
-    /// Drop all cached partitions and pooled buffers; reset counters.
+    /// Drop all cached partitions, formats and pooled buffers; reset
+    /// counters.
     pub fn clear(&self) {
         let mut g = self.inner.lock().unwrap();
         g.partitions.clear();
+        g.formats.clear();
         g.bins.clear();
         g.pooled = 0;
         g.stats = WorkspaceStats::default();
@@ -389,13 +526,79 @@ mod tests {
     }
 
     #[test]
+    fn format_cache_hits_validates_and_evicts() {
+        let ws = KernelWorkspace::new();
+        let a = graph(24);
+        let s1 = ws.sell(5, &a, 4, 16);
+        let s2 = ws.sell(5, &a, 4, 16);
+        assert!(Arc::ptr_eq(&s1, &s2), "second lookup must be the cached Arc");
+        assert_eq!(ws.stats().format_misses, 1);
+        assert_eq!(ws.stats().format_hits, 1);
+        // different params → distinct entry
+        let _ = ws.sell(5, &a, 8, 16);
+        let _ = ws.sorted_csr(5, &a);
+        assert_eq!(ws.cached_formats(), 3);
+        assert_eq!(ws.stats().format_misses, 3);
+        // same id, different graph: fingerprint mismatch recomputes
+        let b = graph(30);
+        let sb = ws.sell(5, &b, 4, 16);
+        assert_eq!(sb.rows, 30);
+        assert_eq!(ws.stats().format_misses, 4);
+        // eviction drops this graph's formats (and partitions) only
+        ws.partition(5, &b, 2);
+        ws.sorted_csr(6, &b);
+        let evicted = ws.evict(5);
+        assert_eq!(evicted, 4); // 3 formats + 1 partition
+        assert_eq!(ws.cached_formats(), 1); // graph 6 survives
+        assert_eq!(ws.evict(6), 1);
+        assert_eq!(ws.cached_formats(), 0);
+    }
+
+    #[test]
+    fn cached_sell_and_sorted_roundtrip_the_graph() {
+        let ws = KernelWorkspace::new();
+        let a = graph(20);
+        assert_eq!(ws.sell(1, &a, 4, 8).to_csr(), a);
+        assert_eq!(ws.sorted_csr(1, &a).to_csr(), a);
+    }
+
+    #[test]
+    fn format_cache_rejects_same_shape_different_edges() {
+        // regression: a graph-id collision between two matrices with EQUAL
+        // (rows, nnz) but different edges must miss — a format entry
+        // carries the matrix's contents, so a false hit would compute with
+        // the wrong graph
+        fn ring_stride(n: usize, stride: usize) -> Csr {
+            let mut coo = Coo::new(n, n);
+            for i in 0..n {
+                coo.push_sym(i, (i + stride) % n, 1.0);
+            }
+            coo.to_csr()
+        }
+        let a = ring_stride(16, 1);
+        let b = ring_stride(16, 3); // same rows, same nnz, different edges
+        assert_eq!((a.rows, a.nnz()), (b.rows, b.nnz()));
+        assert_ne!(a, b);
+        let ws = KernelWorkspace::new();
+        assert_eq!(ws.sell(1, &a, 4, 8).to_csr(), a);
+        // same id, same shape, different matrix: must recompute B's
+        assert_eq!(ws.sell(1, &b, 4, 8).to_csr(), b);
+        assert_eq!(ws.stats().format_misses, 2);
+        assert_eq!(ws.sorted_csr(1, &a).to_csr(), a);
+        assert_eq!(ws.sorted_csr(1, &b).to_csr(), b);
+        assert_eq!(ws.stats().format_misses, 4);
+    }
+
+    #[test]
     fn clear_resets_everything() {
         let ws = KernelWorkspace::new();
         let a = graph(12);
         ws.partition(3, &a, 2);
+        ws.sell(3, &a, 4, 8);
         ws.recycle(vec![0.0; 16]);
         ws.clear();
         assert_eq!(ws.stats(), WorkspaceStats::default());
+        assert_eq!(ws.cached_formats(), 0);
         let _ = ws.take_buffer(8);
         assert_eq!(ws.stats().buffer_allocs, 1);
     }

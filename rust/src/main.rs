@@ -46,8 +46,8 @@ COMMANDS:
              untouched, and emits BENCH_serving.json.
              [--datasets ogbn-protein,reddit] [--models gcn,sage-sum]
              [--requests 24] [--skew 4] [--max-batch 8] [--quantum 4]
-             [--threads 2] [--epochs 3] [--hidden 16] [--scale 2048]
-             [--out BENCH_serving.json] [--json]
+             [--max-wait-ms 5] [--threads 2] [--epochs 3] [--hidden 16]
+             [--scale 2048] [--out BENCH_serving.json] [--json]
 
 Models:     gcn | sage-sum | sage-mean | gin
 Backends:   isplib | pt2 | pt1 | pt2-mp | dense | hlo
@@ -89,7 +89,7 @@ fn probe() -> Result<()> {
     for name in ["host", "intel-skylake", "amd-epyc"] {
         let p = HardwareProfile::named(name)?;
         println!(
-            "{:<14} simd={:?} vlen_f32={} vregs={} cores={} kbs={:?} kts={:?} best_kb={}",
+            "{:<14} simd={:?} vlen_f32={} vregs={} cores={} kbs={:?} kts={:?} sell={:?} best_kb={}",
             p.name,
             p.simd,
             p.vlen(),
@@ -97,6 +97,7 @@ fn probe() -> Result<()> {
             p.cores,
             p.candidate_kbs(),
             p.candidate_kts(),
+            p.candidate_sell_params(),
             p.predicted_best_kb()
         );
     }
@@ -222,6 +223,9 @@ fn serve_bench(args: &Args) -> Result<()> {
         max_batch: args.get_parse("max-batch", 8usize)?,
         quantum: args.get_parse("quantum", 4usize)?,
         threads: args.get_parse("threads", 2usize)?,
+        // arrival-driven batching deadline: the bench drains through
+        // run_ready, so underfull tail batches are held until this expires
+        max_wait: std::time::Duration::from_millis(args.get_parse("max-wait-ms", 5u64)?),
     };
     let out_path = args.get("out", "BENCH_serving.json");
     let datasets_arg = args.get("datasets", "ogbn-protein,reddit");
@@ -306,8 +310,19 @@ fn serve_bench(args: &Args) -> Result<()> {
 
     let cache_before: Vec<_> = trained.iter().map(|(_, _, t)| t.cache().stats()).collect();
     let jobs_before = WorkerPool::global().jobs_executed();
+    // Drain through the arrival-driven scheduler: run_ready serves full
+    // batches immediately and holds underfull tails until --max-wait-ms
+    // expires — the skewed backlog's tail batch is exactly the
+    // lone-request case the deadline exists for, so the knob is exercised
+    // end-to-end on every bench run.
     let t0 = Instant::now();
-    let done = server.run_until_drained()?;
+    let mut done = Vec::new();
+    while server.pending() > 0 {
+        done.extend(server.run_ready()?);
+        if server.pending() > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
     let wall = t0.elapsed().as_secs_f64();
     let pool_jobs = WorkerPool::global().jobs_executed() - jobs_before;
 
@@ -379,6 +394,7 @@ fn serve_bench(args: &Args) -> Result<()> {
             ("nnz", Json::num(s.nnz() as f64)),
             ("offered", Json::num(offered[i] as f64)),
             ("warm_started", Json::num(s.warm_started as f64)),
+            ("preconverted_formats", Json::num(s.preconverted as f64)),
             ("kernels", Json::Arr(kernels.iter().map(|k| Json::str(k)).collect())),
             ("metrics", m.to_json()),
         ]));
@@ -402,6 +418,7 @@ fn serve_bench(args: &Args) -> Result<()> {
                 ("skew", Json::num(skew as f64)),
                 ("max_batch", Json::num(cfg.max_batch as f64)),
                 ("quantum", Json::num(cfg.quantum as f64)),
+                ("max_wait_ms", Json::num(cfg.max_wait.as_secs_f64() * 1e3)),
                 ("threads", Json::num(cfg.threads as f64)),
                 ("scale", Json::num(scale as f64)),
                 ("hidden", Json::num(hidden as f64)),

@@ -76,6 +76,12 @@ impl SessionQueue {
         self.q.drain(..n).collect()
     }
 
+    /// Enqueue time of the oldest pending request — the arrival-driven
+    /// batching deadline is measured against this.
+    pub fn oldest_enqueued(&self) -> Option<Instant> {
+        self.q.front().map(|r| r.enqueued)
+    }
+
     /// Put a drained batch back at the head of the queue, preserving its
     /// order — the scheduler uses this so a batch whose inference failed
     /// is never silently lost (it stays pending and can be retried).

@@ -12,11 +12,15 @@
 //!    choices *warm-started* from a persisted
 //!    [`TuningDb`](crate::autotune::TuningDb) — per-graph kernel selection
 //!    keeps paying off at inference time, but no measurement runs at
-//!    serving time. Every session shares one
+//!    serving time. When the tuner's decision is a sparse *format*
+//!    (SELL-C-σ / sorted CSR), the converted representation is
+//!    materialised into the workspace at registration too, so requests
+//!    serve from the tuned format with zero conversion on the hot path.
+//!    Every session shares one
 //!    [`KernelWorkspace`](crate::kernels::KernelWorkspace) (partitions
-//!    keyed per graph, evicted per graph on close; buffers pooled across
-//!    graphs) and, transitively, the one process-wide
-//!    [`WorkerPool`](crate::util::parallel::WorkerPool).
+//!    and format conversions keyed per graph, evicted per graph on close;
+//!    buffers pooled across graphs) and, transitively, the one
+//!    process-wide [`WorkerPool`](crate::util::parallel::WorkerPool).
 //! 2. **Batcher** ([`SessionQueue`], [`concat_cols`]/[`split_cols`]) —
 //!    same-graph requests are micro-batched by column-concatenating their
 //!    feature matrices, so `m` requests share **one** SpMM per aggregation
@@ -25,9 +29,12 @@
 //!    result is **bitwise-equal** to per-request execution.
 //! 3. **Scheduler** ([`InferenceServer`]) — deficit round robin across
 //!    sessions (request-count costs) so a flooding session cannot starve a
-//!    light co-tenant of the shared pool. Per-session
-//!    [`SessionMetrics`] record p50/p99 latency and batch occupancy;
-//!    [`fairness_spread`] summarises cross-session evenness.
+//!    light co-tenant of the shared pool. Batching is arrival-driven:
+//!    `run_ready` holds underfull batches only until the `max_wait`
+//!    deadline, so a lone request on a quiet session is bounded by the
+//!    knob, not by co-tenant traffic. Per-session [`SessionMetrics`]
+//!    record p50/p99 latency and batch occupancy; [`fairness_spread`]
+//!    summarises cross-session evenness.
 //!
 //! The inference path is **cache-free**: it records no tape, computes no
 //! gradients, and never touches a

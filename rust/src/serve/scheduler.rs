@@ -14,7 +14,7 @@
 //! backlog, light sessions stay fast.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::autotune::{Tuner, TuningDb};
 use crate::dense::Dense;
@@ -38,11 +38,18 @@ pub struct ServeConfig {
     pub quantum: usize,
     /// Kernel thread budget per batch (0 → worker-pool default).
     pub threads: usize,
+    /// Arrival-driven batching deadline for [`InferenceServer::run_ready`]:
+    /// an underfull batch runs as soon as its oldest request has waited
+    /// this long, instead of holding out for `max_batch` coalescing. A
+    /// lone request on a quiet session is therefore bounded by `max_wait`,
+    /// not by co-tenant traffic. `Duration::ZERO` disables holding
+    /// entirely (serve whatever is queued).
+    pub max_wait: Duration,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 8, quantum: 4, threads: 0 }
+        ServeConfig { max_batch: 8, quantum: 4, threads: 0, max_wait: Duration::from_millis(5) }
     }
 }
 
@@ -181,45 +188,96 @@ impl InferenceServer {
     /// re-queued first — [`InferenceServer::pending`] still accounts for
     /// every unserved request and the drain can be retried.
     pub fn drain_into(&mut self, completed: &mut Vec<CompletedInference>) -> Result<()> {
+        // the drain's readiness gate is simply "has work": batch whatever
+        // is queued until nothing is
+        while self.pending() > 0 {
+            self.drr_pass(|q| !q.is_empty(), completed)?;
+        }
+        Ok(())
+    }
+
+    /// One deficit-round-robin pass over all sessions, serving only
+    /// batches the `ready` predicate admits. This is the single encoding
+    /// of the fairness invariants both schedulers share: idle sessions
+    /// reset their deficit; a backlogged-but-not-ready session is skipped
+    /// *without* banking credit (so a readiness gate cannot be used to
+    /// bank an unbounded burst); a ready session banks `quantum` once per
+    /// pass and serves while credit lasts. The deficit gates *whether* a
+    /// batch runs, it does not shrink one: with quantum < max_batch a
+    /// session banks credit across passes and still executes full
+    /// max_batch coalesced batches — the whole point of the batcher — at
+    /// the same quantum-per-pass fair rate.
+    fn drr_pass(
+        &mut self,
+        ready: impl Fn(&SessionQueue) -> bool,
+        completed: &mut Vec<CompletedInference>,
+    ) -> Result<()> {
         let n = self.queues.len();
         if n == 0 {
             return Ok(());
         }
         let quantum = self.cfg.quantum.max(1);
         let max_batch = self.cfg.max_batch.max(1);
-        while self.pending() > 0 {
-            let start = self.rr_start;
-            for off in 0..n {
-                let s = (start + off) % n;
-                if self.queues[s].is_empty() {
-                    // idle sessions bank no credit (classic DRR reset)
-                    self.deficits[s] = 0;
-                    continue;
-                }
-                self.deficits[s] += quantum;
-                // Serve only batches the banked deficit can afford, and
-                // carry the remainder to the next round (classic DRR).
-                // Crucially the deficit gates *whether* a batch runs, it
-                // does not shrink one: with quantum < max_batch a session
-                // banks credit across rounds and still executes full
-                // max_batch coalesced batches — the whole point of the
-                // batcher — at the same quantum-per-round fair rate.
-                loop {
-                    let want = self.queues[s].len().min(max_batch);
-                    if want == 0 || self.deficits[s] < want {
-                        break;
-                    }
-                    self.run_batch(SessionId(s), want, completed)?;
-                    self.deficits[s] -= want;
-                }
+        let start = self.rr_start;
+        for off in 0..n {
+            let s = (start + off) % n;
+            if self.queues[s].is_empty() {
+                // idle sessions bank no credit (classic DRR reset)
+                self.deficits[s] = 0;
+                continue;
             }
-            self.rr_start = (start + 1) % n;
+            if !ready(&self.queues[s]) {
+                // deliberately not served: no credit accrues either
+                continue;
+            }
+            self.deficits[s] += quantum;
+            while !self.queues[s].is_empty() && ready(&self.queues[s]) {
+                let want = self.queues[s].len().min(max_batch);
+                if self.deficits[s] < want {
+                    break; // out of credit this pass; banks for the next
+                }
+                self.run_batch(SessionId(s), want, completed)?;
+                self.deficits[s] -= want;
+            }
         }
+        self.rr_start = (start + 1) % n;
         Ok(())
     }
 
+    /// One arrival-driven scheduling pass (the serving loop's steady-state
+    /// tick, vs. [`InferenceServer::run_until_drained`]'s batch-drain):
+    /// visits every session once in DRR order and serves only batches that
+    /// are **ready** — either a full `max_batch` coalescing is available,
+    /// or the session's oldest request has waited at least
+    /// `config().max_wait`. Underfull batches younger than the deadline
+    /// keep queueing (coalescing improves throughput), but a lone request
+    /// on a quiet session is released by the deadline instead of being
+    /// stuck waiting for co-traffic that may never come. DRR credit is
+    /// banked only on passes where the session has a ready batch — a held
+    /// (not-yet-due) queue accrues nothing (see [`Self::drr_pass`]), so
+    /// the deadline cannot be used to bank an unbounded burst; like the
+    /// drain path, leftover credit stays below one batch per pass and a
+    /// flooding session cannot monopolise a pass.
+    pub fn run_ready(&mut self) -> Result<Vec<CompletedInference>> {
+        let max_batch = self.cfg.max_batch.max(1);
+        let max_wait = self.cfg.max_wait;
+        let now = Instant::now();
+        let mut completed = Vec::new();
+        self.drr_pass(
+            move |q| {
+                q.len() >= max_batch
+                    || q.oldest_enqueued()
+                        .map(|t| now.duration_since(t) >= max_wait)
+                        .unwrap_or(false)
+            },
+            &mut completed,
+        )?;
+        Ok(completed)
+    }
+
     /// Close a session (rejects while requests are pending); returns the
-    /// number of workspace partition entries evicted.
+    /// number of workspace entries (partitions + converted formats)
+    /// evicted.
     pub fn close_session(&mut self, id: SessionId) -> Result<usize> {
         if self.queues.get(id.0).map(|q| !q.is_empty()).unwrap_or(false) {
             return Err(Error::Config(format!(
@@ -323,7 +381,7 @@ mod tests {
     #[test]
     fn drains_everything_and_batches() {
         let mut server =
-            InferenceServer::new(ServeConfig { max_batch: 4, quantum: 4, threads: 1 });
+            InferenceServer::new(ServeConfig { max_batch: 4, quantum: 4, threads: 1, ..ServeConfig::default() });
         let adj = ring_graph(20);
         let sid = add_session(&mut server, "drain-one", &adj, 6);
         let mut rng = Rng::seed_from_u64(81);
@@ -358,7 +416,7 @@ mod tests {
         // DRR), so the session still executes FULL 4-wide coalesced
         // batches instead of quantum-capped fragments
         let mut server =
-            InferenceServer::new(ServeConfig { max_batch: 4, quantum: 2, threads: 1 });
+            InferenceServer::new(ServeConfig { max_batch: 4, quantum: 2, threads: 1, ..ServeConfig::default() });
         let adj = ring_graph(10);
         let sid = add_session(&mut server, "bank", &adj, 4);
         let mut rng = Rng::seed_from_u64(85);
@@ -392,7 +450,7 @@ mod tests {
     #[test]
     fn batched_queue_path_matches_infer_now() {
         let mut server =
-            InferenceServer::new(ServeConfig { max_batch: 8, quantum: 8, threads: 2 });
+            InferenceServer::new(ServeConfig { max_batch: 8, quantum: 8, threads: 2, ..ServeConfig::default() });
         let ds = karate_club();
         let dims = ModelParams { in_dim: ds.feature_dim(), hidden: 8, classes: ds.num_classes };
         let params = GnnModel::Gcn.init_params(dims, 13);
@@ -415,7 +473,7 @@ mod tests {
     #[test]
     fn skewed_load_does_not_starve_light_session() {
         let mut server =
-            InferenceServer::new(ServeConfig { max_batch: 4, quantum: 4, threads: 1 });
+            InferenceServer::new(ServeConfig { max_batch: 4, quantum: 4, threads: 1, ..ServeConfig::default() });
         let heavy_adj = ring_graph(16);
         let light_adj = ring_graph(12);
         let heavy = add_session(&mut server, "heavy", &heavy_adj, 5);
@@ -447,9 +505,139 @@ mod tests {
     }
 
     #[test]
+    fn run_ready_releases_lone_request_at_deadline() {
+        // max_wait = 0: a lone request is served on the very next pass,
+        // not held hostage waiting for a full max_batch coalescing
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 4,
+            quantum: 4,
+            threads: 1,
+            max_wait: Duration::ZERO,
+        });
+        let adj = ring_graph(10);
+        let sid = add_session(&mut server, "lone", &adj, 4);
+        let mut rng = Rng::seed_from_u64(86);
+        server.submit(sid, feats(10, 4, &mut rng)).unwrap();
+        let done = server.run_ready().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].batch_size, 1);
+        assert_eq!(server.pending(), 0);
+        // an empty pass is a no-op
+        assert!(server.run_ready().unwrap().is_empty());
+    }
+
+    #[test]
+    fn run_ready_holds_underfull_batches_before_deadline() {
+        // a very long max_wait: underfull batches keep coalescing, full
+        // batches run immediately
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 4,
+            quantum: 8,
+            threads: 1,
+            max_wait: Duration::from_secs(3600),
+        });
+        let adj = ring_graph(10);
+        let sid = add_session(&mut server, "hold", &adj, 4);
+        let mut rng = Rng::seed_from_u64(87);
+        for _ in 0..2 {
+            server.submit(sid, feats(10, 4, &mut rng)).unwrap();
+        }
+        assert!(server.run_ready().unwrap().is_empty(), "underfull batch must wait");
+        assert_eq!(server.pending(), 2);
+        // two more make a full batch — released regardless of age
+        for _ in 0..2 {
+            server.submit(sid, feats(10, 4, &mut rng)).unwrap();
+        }
+        let done = server.run_ready().unwrap();
+        assert_eq!(done.len(), 4);
+        assert!(done.iter().all(|c| c.batch_size == 4));
+    }
+
+    #[test]
+    fn held_sessions_bank_no_burst_credit() {
+        // regression: ticking run_ready against a held (not-yet-due) queue
+        // must not accumulate DRR credit — once batches are ready, the
+        // session serves at the same quantum-bounded rate as everyone
+        // else, not in a banked burst
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 4,
+            quantum: 4,
+            threads: 1,
+            max_wait: Duration::from_secs(3600),
+        });
+        let adj = ring_graph(10);
+        let sid = add_session(&mut server, "no-burst", &adj, 4);
+        let mut rng = Rng::seed_from_u64(89);
+        server.submit(sid, feats(10, 4, &mut rng)).unwrap();
+        // many held passes: deliberately unserved, so no credit accrues
+        for _ in 0..50 {
+            assert!(server.run_ready().unwrap().is_empty());
+        }
+        // flood to 12 pending (3 full batches)
+        for _ in 0..11 {
+            server.submit(sid, feats(10, 4, &mut rng)).unwrap();
+        }
+        // one pass banks one quantum → exactly ONE 4-wide batch runs; a
+        // banked burst would have drained all 12 in this single visit
+        let done = server.run_ready().unwrap();
+        assert_eq!(done.len(), 4);
+        assert_eq!(server.pending(), 8);
+    }
+
+    #[test]
+    fn single_slow_tenant_not_stuck_behind_batching() {
+        // one heavy tenant with full batches, one slow tenant with a lone
+        // request: the heavy traffic flows every pass, and the lone
+        // request is released once its deadline expires — it never waits
+        // for a coalescing partner that isn't coming. The deadline is
+        // generous (400ms) so the submit → first-pass window cannot
+        // spuriously expire on a slow CI runner.
+        let max_wait = Duration::from_millis(400);
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 4,
+            quantum: 4,
+            threads: 1,
+            max_wait,
+        });
+        let heavy_adj = ring_graph(12);
+        let slow_adj = ring_graph(8);
+        let heavy = add_session(&mut server, "ready-heavy", &heavy_adj, 4);
+        let slow = add_session(&mut server, "ready-slow", &slow_adj, 4);
+        let mut rng = Rng::seed_from_u64(88);
+        for _ in 0..8 {
+            server.submit(heavy, feats(12, 4, &mut rng)).unwrap();
+        }
+        server.submit(slow, feats(8, 4, &mut rng)).unwrap();
+
+        // first pass: heavy's full batch runs; slow's lone request is
+        // younger than the deadline and stays queued
+        let first = server.run_ready().unwrap();
+        assert!(!first.is_empty());
+        assert!(first.iter().all(|c| c.session == heavy && c.batch_size == 4));
+        assert_eq!(server.metrics(slow).unwrap().requests, 0);
+
+        // once the deadline passes, the next pass releases it (batch of 1)
+        std::thread::sleep(max_wait + Duration::from_millis(50));
+        let mut later = Vec::new();
+        for _ in 0..3 {
+            later.extend(server.run_ready().unwrap());
+            if server.pending() == 0 {
+                break;
+            }
+        }
+        let slow_done: Vec<_> = later.iter().filter(|c| c.session == slow).collect();
+        assert_eq!(slow_done.len(), 1, "slow tenant's lone request must complete");
+        assert_eq!(slow_done[0].batch_size, 1);
+        assert_eq!(server.pending(), 0);
+        // bitwise: the deadline path is still the same inference
+        let solo = server.infer_now(slow, &slow_done[0].features).unwrap();
+        assert_eq!(solo.data, slow_done[0].output.data);
+    }
+
+    #[test]
     fn two_graphs_share_one_workspace() {
         let mut server =
-            InferenceServer::new(ServeConfig { max_batch: 4, quantum: 4, threads: 2 });
+            InferenceServer::new(ServeConfig { max_batch: 4, quantum: 4, threads: 2, ..ServeConfig::default() });
         let a1 = ring_graph(24);
         let a2 = ring_graph(30);
         let s1 = add_session(&mut server, "shared-ws-1", &a1, 6);

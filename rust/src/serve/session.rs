@@ -16,7 +16,7 @@ use crate::autodiff::{context_graph_id, SpmmOperand};
 use crate::autotune::{KernelRegistry, Tuner, TuningDb};
 use crate::error::{Error, Result};
 use crate::gnn::{GnnModel, ModelParams, ParamSet};
-use crate::kernels::KernelWorkspace;
+use crate::kernels::{prepare_format, KernelChoice, KernelWorkspace};
 use crate::sparse::Csr;
 
 /// Opaque handle to a registered serving session.
@@ -35,6 +35,11 @@ pub struct ServeSession {
     pub graph_id: u64,
     /// How many `(K)` bindings the tuner warm-start installed from the DB.
     pub warm_started: usize,
+    /// How many distinct tuned sparse formats (SELL-C-σ / sorted CSR) were
+    /// pre-converted into the shared workspace at registration — those
+    /// requests serve from the tuned representation with **zero**
+    /// conversion at request time.
+    pub preconverted: usize,
     params: ParamSet,
     operand: SpmmOperand,
 }
@@ -153,11 +158,24 @@ impl SessionRegistry {
             .with_workspace(Arc::clone(&self.workspace), graph_id);
 
         let mut warm_started = 0;
+        let mut preconverted = 0;
         if let Some((tuner, db, max_batch)) = warm {
             let registry = KernelRegistry::global();
+            let mut prepared: Vec<KernelChoice> = Vec::new();
             for k in model.serving_spmm_widths(dims, max_batch) {
-                if tuner.warm_start(name, k, registry, db).is_some() {
+                if let Some(choice) = tuner.warm_start(name, k, registry, db) {
                     warm_started += 1;
+                    // A tuned format choice is materialised into the shared
+                    // workspace NOW (registration is the session's one
+                    // setup moment), so request-time SpMM hits the cached
+                    // conversion — never an O(nnz) convert on the serving
+                    // hot path.
+                    if !prepared.contains(&choice)
+                        && prepare_format(&operand.a, choice, &self.workspace, graph_id)
+                    {
+                        prepared.push(choice);
+                        preconverted += 1;
+                    }
                 }
             }
         }
@@ -169,6 +187,7 @@ impl SessionRegistry {
             dims,
             graph_id,
             warm_started,
+            preconverted,
             params,
             operand,
         }));
@@ -176,10 +195,11 @@ impl SessionRegistry {
     }
 
     /// Close a session: drop its frozen state, evict its partition entries
-    /// from the shared workspace (pooled buffers are graph-agnostic and
-    /// stay), and unbind its kernel-registry context so a later
-    /// same-named session cannot inherit this graph's tuned choices.
-    /// Returns the number of partition entries evicted.
+    /// and converted sparse formats from the shared workspace (pooled
+    /// buffers are graph-agnostic and stay), and unbind its
+    /// kernel-registry context so a later same-named session cannot
+    /// inherit this graph's tuned choices. Returns the number of
+    /// workspace entries evicted.
     pub fn close(&mut self, id: SessionId) -> Result<usize> {
         let slot = self
             .sessions
@@ -270,8 +290,8 @@ mod tests {
         let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
         let mut db = TuningDb::default();
         // per-request width (GCN: hidden=8) and its 2-batched width
-        db.put(name, "amd-epyc", 8, DbEntry { kb: Some(8), kt: None, speedup: 2.0 });
-        db.put(name, "amd-epyc", 16, DbEntry { kb: Some(16), kt: None, speedup: 1.5 });
+        db.put(name, "amd-epyc", 8, DbEntry { kb: Some(8), speedup: 2.0, ..DbEntry::default() });
+        db.put(name, "amd-epyc", 16, DbEntry { kb: Some(16), speedup: 1.5, ..DbEntry::default() });
         let mut reg = SessionRegistry::new();
         let params = GnnModel::Gcn.init_params(dims, 3);
         let id = reg
@@ -290,9 +310,54 @@ mod tests {
         );
         // widths with no DB entry are simply not bound
         assert!(registry.binding(name, 24, Semiring::Sum).is_none());
+        // CSR-kernel choices need no conversion
+        assert_eq!(reg.get(id).unwrap().preconverted, 0);
+        assert_eq!(reg.workspace().cached_formats(), 0);
         // closing the session unbinds its whole context
         reg.close(id).unwrap();
         assert!(registry.binding(name, 8, Semiring::Sum).is_none());
         assert!(registry.binding(name, 16, Semiring::Sum).is_none());
+    }
+
+    #[test]
+    fn warm_start_preconverts_tuned_formats() {
+        let ds = karate_club();
+        let dims = dims_for(&ds, 8);
+        let name = "sess-warm-format";
+        let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+        let mut db = TuningDb::default();
+        db.put(
+            name,
+            "amd-epyc",
+            8,
+            DbEntry { sell: Some((4, 32)), speedup: 1.5, ..DbEntry::default() },
+        );
+        db.put(name, "amd-epyc", 16, DbEntry { sorted: true, speedup: 1.2, ..DbEntry::default() });
+        let mut reg = SessionRegistry::new();
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let id = reg
+            .register(name, GnnModel::Gcn, dims, params, &ds.adj, Some((&tuner, &db, 4)))
+            .unwrap();
+        let s = reg.get(id).unwrap();
+        assert_eq!(s.warm_started, 2);
+        // both tuned formats were materialised into the shared workspace
+        // at registration — the serving hot path never converts
+        assert_eq!(s.preconverted, 2);
+        assert_eq!(reg.workspace().cached_formats(), 2);
+        assert_eq!(reg.workspace().stats().format_misses, 2);
+        let registry = KernelRegistry::global();
+        use crate::kernels::Semiring;
+        assert_eq!(
+            registry.binding(name, 8, Semiring::Sum).unwrap().choice,
+            KernelChoice::Sell { c: 4, sigma: 32 }
+        );
+        assert_eq!(
+            registry.binding(name, 16, Semiring::Sum).unwrap().choice,
+            KernelChoice::SortedCsr
+        );
+        // closing the session evicts its converted formats with the graph
+        reg.close(id).unwrap();
+        assert_eq!(reg.workspace().cached_formats(), 0);
+        assert!(registry.binding(name, 8, Semiring::Sum).is_none());
     }
 }

@@ -271,6 +271,79 @@ impl Csr {
             + self.col_idx.len() * std::mem::size_of::<usize>()
             + self.values.len() * std::mem::size_of::<f32>()
     }
+
+    /// Log₂-bucketed row-length histogram: bucket 0 counts empty rows,
+    /// bucket `i ≥ 1` counts rows with length in `[2^(i-1), 2^i)`. One
+    /// O(rows) pass — cheap enough for the tuner to run per dataset. The
+    /// bucket count is `⌈log₂(max_len)⌉ + 2` at most.
+    pub fn row_len_histogram(&self) -> Vec<usize> {
+        let mut hist = Vec::new();
+        for r in 0..self.rows {
+            let len = self.row_nnz(r);
+            let bucket = if len == 0 { 0 } else { len.ilog2() as usize + 1 };
+            if bucket >= hist.len() {
+                hist.resize(bucket + 1, 0);
+            }
+            hist[bucket] += 1;
+        }
+        hist
+    }
+
+    /// Mean / median / tail row-length statistics (see [`RowLenStats`]).
+    /// O(rows log rows); drives the tuner's sparse-format pruning
+    /// heuristic and the tuning reports.
+    pub fn row_len_stats(&self) -> RowLenStats {
+        if self.rows == 0 {
+            return RowLenStats { mean: 0.0, p50: 0, p99: 0, max: 0 };
+        }
+        let mut lens: Vec<usize> = (0..self.rows).map(|r| self.row_nnz(r)).collect();
+        lens.sort_unstable();
+        let n = lens.len();
+        RowLenStats {
+            mean: self.nnz() as f64 / n as f64,
+            p50: lens[(n - 1) / 2],
+            p99: lens[(n - 1) * 99 / 100],
+            max: lens[n - 1],
+        }
+    }
+}
+
+/// Row-length summary of a sparse matrix — the shape signal behind the
+/// tuner's sparse-format axis. Power-law GNN graphs show a small mean with
+/// a heavy tail (`p99 ≫ mean`); that is exactly when sorted/sliced formats
+/// (SELL-C-σ, sorted CSR) beat plain CSR.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RowLenStats {
+    /// Mean row length (`nnz / rows`).
+    pub mean: f64,
+    /// Median row length.
+    pub p50: usize,
+    /// 99th-percentile row length (nearest-rank).
+    pub p99: usize,
+    /// Longest row.
+    pub max: usize,
+}
+
+impl RowLenStats {
+    /// Tail skew: `p99 / mean` (0 for an empty matrix).
+    pub fn skew(&self) -> f64 {
+        if self.mean <= 0.0 {
+            0.0
+        } else {
+            self.p99 as f64 / self.mean
+        }
+    }
+
+    /// Cheap pruning heuristic for the tuner's format axis: sliced/sorted
+    /// formats amortise per-row loop overhead (wins on short rows) and
+    /// group skewed lengths (wins on heavy tails); on long uniform rows
+    /// CSR's streaming inner loop already saturates and the format
+    /// candidates would only burn tuning time. Thresholds are deliberately
+    /// permissive — the tuner still *measures*, this only prunes the
+    /// clearly hopeless case.
+    pub fn format_promising(&self) -> bool {
+        self.max > 0 && (self.mean <= 32.0 || self.skew() >= 2.0)
+    }
 }
 
 #[cfg(test)]
@@ -371,5 +444,55 @@ mod tests {
         let bytes = m.memory_bytes();
         // row_ptr: 4 usize, col_idx: 4 usize, values: 4 f32
         assert_eq!(bytes, 4 * 8 + 4 * 8 + 4 * 4);
+    }
+
+    #[test]
+    fn row_len_histogram_buckets() {
+        // sample rows have lengths 2, 0, 2
+        let m = sample();
+        assert_eq!(m.row_len_histogram(), vec![1, 0, 2]); // 1 empty, 0 of len 1, 2 of len 2..3
+        // empty matrix → empty histogram
+        assert!(Csr::empty(0, 3).row_len_histogram().is_empty());
+        // all-empty rows land in bucket 0
+        assert_eq!(Csr::empty(4, 4).row_len_histogram(), vec![4]);
+        // a length-8 row lands in bucket 4 ([8, 16))
+        let hub = Csr::from_parts(1, 8, vec![0, 8], (0..8).collect(), vec![1.0; 8]).unwrap();
+        assert_eq!(hub.row_len_histogram(), vec![0, 0, 0, 0, 1]);
+        // histogram totals always cover every row
+        assert_eq!(m.row_len_histogram().iter().sum::<usize>(), m.rows);
+    }
+
+    #[test]
+    fn row_len_stats_and_heuristic() {
+        let m = sample();
+        let s = m.row_len_stats();
+        assert!((s.mean - 4.0 / 3.0).abs() < 1e-9);
+        assert_eq!(s.p50, 2);
+        assert_eq!(s.p99, 2);
+        assert_eq!(s.max, 2);
+        assert!(s.skew() > 1.0);
+        assert!(s.format_promising()); // short rows
+
+        // empty matrix: all zeros, formats pruned
+        let e = Csr::empty(0, 0).row_len_stats();
+        assert_eq!(e, RowLenStats { mean: 0.0, p50: 0, p99: 0, max: 0 });
+        assert_eq!(e.skew(), 0.0);
+        assert!(!e.format_promising());
+        assert!(!Csr::empty(5, 5).row_len_stats().format_promising());
+
+        // long uniform rows: formats pruned
+        let wide = 100usize;
+        let long = Csr::from_parts(
+            2,
+            wide,
+            vec![0, wide, 2 * wide],
+            (0..wide).chain(0..wide).collect(),
+            vec![1.0; 2 * wide],
+        )
+        .unwrap();
+        let s = long.row_len_stats();
+        assert_eq!(s.mean, 100.0);
+        assert!(s.skew() < 2.0);
+        assert!(!s.format_promising());
     }
 }

@@ -10,16 +10,25 @@
 //! `row_ptr: Vec<usize>` of length `rows+1`, column indices sorted within
 //! each row, explicit `f32` values (GNN adjacencies are weighted after GCN
 //! normalisation).
+//!
+//! Beyond the kernel-input CSR, the auto-tuner can choose alternative
+//! *representations* of the same matrix: [`Sell`] (SELL-C-σ, sliced and
+//! window-sorted for branch-free short-row inner loops) and [`SortedCsr`]
+//! (globally row-length-sorted CSR). Both are exact row permutations with
+//! an exact inverse, so kernels over them stay bitwise-equal to the
+//! trusted CSR path — see `sell.rs` for the argument.
 
 mod coo;
 mod csc;
 mod csr;
 mod norm;
+mod sell;
 
 pub use coo::Coo;
 pub use csc::Csc;
-pub use csr::Csr;
+pub use csr::{Csr, RowLenStats};
 pub use norm::{degree_counts, degree_vector, gcn_normalize, row_normalize, NormKind};
+pub use sell::{Sell, SortedCsr};
 
 #[cfg(test)]
 mod proptests;

@@ -2,7 +2,7 @@
 //! normalisation identities). Kernel-level properties live in
 //! `kernels::proptests`.
 
-use super::{degree_vector, gcn_normalize, row_normalize, Coo, Csr};
+use super::{degree_vector, gcn_normalize, row_normalize, Coo, Csr, Sell, SortedCsr};
 use crate::util::check::forall;
 use crate::util::rng::Rng;
 
@@ -94,5 +94,42 @@ fn prop_nnz_conserved() {
         assert_eq!(g.transpose().nnz(), g.nnz());
         assert_eq!(g.to_coo().nnz(), g.nnz());
         assert_eq!(g.to_csc().nnz(), g.nnz());
+        assert_eq!(Sell::from_csr(&g, 4, 8).nnz(), g.nnz());
+        assert_eq!(SortedCsr::from_csr(&g).nnz(), g.nnz());
+    });
+}
+
+#[test]
+fn prop_sell_and_sorted_invert_exactly() {
+    // The format axis rests on these being *exact* inverses (bit-for-bit
+    // CSR equality), for any graph — including empty rows and graphs
+    // whose row count is no multiple of C or σ.
+    forall("sell/sorted-csr exact inverses", 64, |rng| {
+        let g = arb_sym_graph(rng, 1 + rng.gen_range(30));
+        let c = 1 + rng.gen_range(8);
+        let sigma = 1 + rng.gen_range(50);
+        let sell = Sell::from_csr(&g, c, sigma);
+        sell.validate().unwrap();
+        assert_eq!(sell.to_csr(), g, "c={c} sigma={sigma}");
+        assert_eq!(SortedCsr::from_csr(&g).to_csr(), g);
+    });
+}
+
+#[test]
+fn prop_row_len_stats_consistent_with_histogram() {
+    forall("row-length stats ↔ histogram consistency", 64, |rng| {
+        let g = arb_sym_graph(rng, 1 + rng.gen_range(24));
+        let hist = g.row_len_histogram();
+        assert_eq!(hist.iter().sum::<usize>(), g.rows);
+        let stats = g.row_len_stats();
+        assert!(stats.p50 <= stats.p99);
+        assert!(stats.p99 <= stats.max);
+        assert!(stats.mean <= stats.max as f64);
+        // the histogram's top bucket agrees with max
+        if stats.max > 0 {
+            let top = hist.len() - 1;
+            assert!(stats.max >= 1 << (top - 1), "max {} bucket {top}", stats.max);
+            assert!(stats.max < 1 << top);
+        }
     });
 }

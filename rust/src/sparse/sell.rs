@@ -1,0 +1,483 @@
+//! SELL-C-σ and row-length-sorted CSR — the tuner's sparse-format axis.
+//!
+//! CSR's row-oriented inner loop degrades on power-law GNN graphs: most
+//! rows are short (the loop over a 2-entry row is all overhead) while a
+//! few hub rows are enormous. Qiu et al. show the matrix *representation*
+//! — not just the kernel implementation — is the dominant SpMM lever on
+//! such graphs. This module provides the two representations the
+//! auto-tuner can now choose:
+//!
+//! * [`Sell`] — **SELL-C-σ** (sliced ELL with sorting): rows are sorted by
+//!   descending length inside windows of σ consecutive rows, then packed
+//!   into slices of C rows each. A slice stores its entries column-major,
+//!   padded to the slice's longest row, so the kernel walks `C` rows in
+//!   lockstep with a branch-free lane loop — short skewed rows amortise
+//!   loop overhead across the slice instead of paying it per row. σ bounds
+//!   how far a row may move from its home position, keeping the output
+//!   permutation *local* (a property the parallel kernel exploits: σ-window
+//!   boundaries are also valid contiguous output-partition boundaries).
+//! * [`SortedCsr`] — plain CSR with rows globally sorted by descending
+//!   length (the σ → ∞ limit). No padding, perfect NNZ balance at the top
+//!   of the matrix where the hubs cluster, at the cost of a global output
+//!   permutation.
+//!
+//! ## The inverse-permutation equality argument
+//!
+//! Both formats are **pure row permutations with unchanged within-row entry
+//! order**: position `p` of the permuted layout holds exactly the entries
+//! of original row `perm[p]`, in the same column-sorted order CSR stores
+//! them. An SpMM kernel over either format therefore combines each output
+//! element's neighbour stream in *exactly* the trusted CSR kernel's order —
+//! only the traversal order **across** rows (and the memory layout) change
+//! — and scatters each finished row back through `perm`. Padding entries
+//! are never read (the kernels track per-lane lengths), so they cannot
+//! perturb any semiring. The result is **bitwise identical** to the
+//! trusted kernel for every semiring, which is what lets the tuner pick a
+//! format as freely as it picks a kernel implementation (asserted by the
+//! kernel proptests).
+//!
+//! Conversions are O(nnz) and cached per graph in the
+//! [`KernelWorkspace`](crate::kernels::KernelWorkspace), so training and
+//! serving pay them once per graph, never per call.
+
+use std::cmp::Reverse;
+
+use super::Csr;
+
+/// SELL-C-σ matrix. See the module docs for the layout; invariants:
+///
+/// 1. `perm` is a permutation of `0..rows` in which every index stays
+///    inside its σ-window: `perm[p] / sigma == p / sigma`.
+/// 2. `sigma` is a positive multiple of `c` (the constructor rounds the
+///    requested window up), so slices never straddle windows and `lens`
+///    is non-increasing within every slice.
+/// 3. Slice `s` holds `lanes = min(c, rows - s*c)` rows; its storage is
+///    `width * lanes` entries at `slice_ptr[s]`, column-major: entry `j`
+///    of lane `i` lives at `slice_ptr[s] + j*lanes + i`. Entries past a
+///    lane's `lens` are padding (col 0, value 0.0) and are never read.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sell {
+    /// Number of rows (of the original matrix).
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Slice height C.
+    pub c: usize,
+    /// Effective sort-window σ: a positive multiple of `c`.
+    pub sigma: usize,
+    /// Stored non-zeros (excluding padding).
+    nnz: usize,
+    /// `perm[p]` = original row held at permuted position `p`.
+    pub perm: Vec<usize>,
+    /// Row length (nnz) per permuted position.
+    pub lens: Vec<usize>,
+    /// Per-slice start offset into `col_idx`/`values`, length
+    /// `n_slices + 1`.
+    pub slice_ptr: Vec<usize>,
+    /// Column index per slot (padding slots hold 0).
+    pub col_idx: Vec<usize>,
+    /// Value per slot (padding slots hold 0.0).
+    pub values: Vec<f32>,
+    /// Stored non-zeros per σ-window (for window-granular partitioning).
+    pub window_nnz: Vec<usize>,
+}
+
+impl Sell {
+    /// The window the constructor actually sorts with: the requested σ
+    /// rounded up to a positive multiple of `c`. This is what keeps
+    /// slices from straddling windows (invariant 2).
+    pub fn effective_sigma(c: usize, sigma: usize) -> usize {
+        let c = c.max(1);
+        sigma.max(1).div_ceil(c) * c
+    }
+
+    /// Convert from CSR. `c` and `sigma` are clamped to ≥ 1 and σ is
+    /// rounded up to a multiple of C (see [`Sell::effective_sigma`]).
+    pub fn from_csr(a: &Csr, c: usize, sigma: usize) -> Sell {
+        let c = c.max(1);
+        let sigma = Self::effective_sigma(c, sigma);
+        let rows = a.rows;
+
+        // σ-window sort: stable descending by row length, so equal-length
+        // rows keep their original order (deterministic layout).
+        let mut perm: Vec<usize> = (0..rows).collect();
+        let mut window_nnz = Vec::with_capacity(rows.div_ceil(sigma.max(1)));
+        let mut w0 = 0;
+        while w0 < rows {
+            let w1 = (w0 + sigma).min(rows);
+            perm[w0..w1].sort_by_key(|&r| Reverse(a.row_nnz(r)));
+            window_nnz.push(perm[w0..w1].iter().map(|&r| a.row_nnz(r)).sum());
+            w0 = w1;
+        }
+        let lens: Vec<usize> = perm.iter().map(|&r| a.row_nnz(r)).collect();
+
+        // slice extents: each slice is padded to its longest lane
+        let n_slices = rows.div_ceil(c);
+        let mut slice_ptr = Vec::with_capacity(n_slices + 1);
+        slice_ptr.push(0usize);
+        for s in 0..n_slices {
+            let base = s * c;
+            let lanes = c.min(rows - base);
+            let width = lens[base..base + lanes].iter().copied().max().unwrap_or(0);
+            slice_ptr.push(slice_ptr[s] + width * lanes);
+        }
+
+        // column-major fill; padding slots keep (0, 0.0) and are never read
+        let padded = *slice_ptr.last().unwrap();
+        let mut col_idx = vec![0usize; padded];
+        let mut values = vec![0.0f32; padded];
+        for s in 0..n_slices {
+            let base = s * c;
+            let lanes = c.min(rows - base);
+            let off = slice_ptr[s];
+            for i in 0..lanes {
+                let orig = perm[base + i];
+                for (j, (&cc, &v)) in a.row_cols(orig).iter().zip(a.row_vals(orig)).enumerate() {
+                    col_idx[off + j * lanes + i] = cc;
+                    values[off + j * lanes + i] = v;
+                }
+            }
+        }
+
+        Sell {
+            rows,
+            cols: a.cols,
+            c,
+            sigma,
+            nnz: a.nnz(),
+            perm,
+            lens,
+            slice_ptr,
+            col_idx,
+            values,
+            window_nnz,
+        }
+    }
+
+    /// Stored non-zeros (excluding padding).
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Number of C-row slices.
+    #[inline]
+    pub fn n_slices(&self) -> usize {
+        self.slice_ptr.len() - 1
+    }
+
+    /// Rows held by slice `s` (the last slice may be partial).
+    #[inline]
+    pub fn slice_lanes(&self, s: usize) -> usize {
+        self.c.min(self.rows - s * self.c)
+    }
+
+    /// Padded width (longest lane) of slice `s`.
+    #[inline]
+    pub fn slice_width(&self, s: usize) -> usize {
+        let lanes = self.slice_lanes(s);
+        if lanes == 0 {
+            0
+        } else {
+            (self.slice_ptr[s + 1] - self.slice_ptr[s]) / lanes
+        }
+    }
+
+    /// Total slots including padding.
+    pub fn padded_nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// `padded / stored` — 1.0 means zero padding waste. The tuning report
+    /// surfaces this so a bad (C, σ) choice is visible.
+    pub fn padding_ratio(&self) -> f64 {
+        if self.nnz == 0 {
+            1.0
+        } else {
+            self.padded_nnz() as f64 / self.nnz as f64
+        }
+    }
+
+    /// Exact inverse conversion: rebuilds the original CSR (bit-for-bit —
+    /// the permutation is inverted and within-row entry order was never
+    /// changed).
+    pub fn to_csr(&self) -> Csr {
+        let mut row_ptr = vec![0usize; self.rows + 1];
+        for (p, &orig) in self.perm.iter().enumerate() {
+            row_ptr[orig + 1] = self.lens[p];
+        }
+        for i in 0..self.rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut col_idx = vec![0usize; self.nnz];
+        let mut values = vec![0.0f32; self.nnz];
+        for s in 0..self.n_slices() {
+            let base = s * self.c;
+            let lanes = self.slice_lanes(s);
+            let off = self.slice_ptr[s];
+            for i in 0..lanes {
+                let p = base + i;
+                let dst = row_ptr[self.perm[p]];
+                for j in 0..self.lens[p] {
+                    col_idx[dst + j] = self.col_idx[off + j * lanes + i];
+                    values[dst + j] = self.values[off + j * lanes + i];
+                }
+            }
+        }
+        Csr::from_parts_unchecked(self.rows, self.cols, row_ptr, col_idx, values)
+    }
+
+    /// Check the structural invariants (module docs) — test/debug helper.
+    pub fn validate(&self) -> crate::error::Result<()> {
+        use crate::error::Error;
+        if self.sigma == 0 || self.c == 0 || self.sigma % self.c != 0 {
+            return Err(Error::InvalidSparse(format!(
+                "sell: sigma {} not a positive multiple of c {}",
+                self.sigma, self.c
+            )));
+        }
+        if self.perm.len() != self.rows || self.lens.len() != self.rows {
+            return Err(Error::InvalidSparse("sell: perm/lens length mismatch".into()));
+        }
+        let mut seen = vec![false; self.rows];
+        for (p, &orig) in self.perm.iter().enumerate() {
+            if orig >= self.rows || seen[orig] {
+                return Err(Error::InvalidSparse(format!("sell: bad permutation at {p}")));
+            }
+            if orig / self.sigma != p / self.sigma {
+                return Err(Error::InvalidSparse(format!(
+                    "sell: row {orig} escaped its σ-window (position {p})"
+                )));
+            }
+            seen[orig] = true;
+        }
+        for s in 0..self.n_slices() {
+            let base = s * self.c;
+            let lanes = self.slice_lanes(s);
+            let width = self.slice_width(s);
+            for i in 0..lanes {
+                if self.lens[base + i] > width {
+                    return Err(Error::InvalidSparse(format!("sell: lane overflows slice {s}")));
+                }
+                if i > 0 && self.lens[base + i] > self.lens[base + i - 1] {
+                    return Err(Error::InvalidSparse(format!(
+                        "sell: lens not non-increasing within slice {s}"
+                    )));
+                }
+            }
+        }
+        if self.lens.iter().sum::<usize>() != self.nnz {
+            return Err(Error::InvalidSparse("sell: lens don't sum to nnz".into()));
+        }
+        Ok(())
+    }
+
+    /// Total bytes of the arrays — cache-budget accounting, mirroring
+    /// [`Csr::memory_bytes`].
+    pub fn memory_bytes(&self) -> usize {
+        let us = std::mem::size_of::<usize>();
+        (self.perm.len() + self.lens.len() + self.slice_ptr.len() + self.col_idx.len()) * us
+            + self.values.len() * std::mem::size_of::<f32>()
+            + self.window_nnz.len() * us
+    }
+}
+
+/// CSR with rows stably sorted by descending length — the σ → ∞ limit of
+/// SELL-C-σ. `csr` row `p` holds original row `perm[p]` verbatim (same
+/// within-row entry order), so SpMM over it is bitwise-equal to trusted
+/// after scattering rows back through `perm`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SortedCsr {
+    /// The permuted matrix (row `p` = original row `perm[p]`).
+    pub csr: Csr,
+    /// `perm[p]` = original row held at permuted position `p`.
+    pub perm: Vec<usize>,
+}
+
+impl SortedCsr {
+    /// Convert from CSR: stable descending row-length sort.
+    pub fn from_csr(a: &Csr) -> SortedCsr {
+        let mut perm: Vec<usize> = (0..a.rows).collect();
+        perm.sort_by_key(|&r| Reverse(a.row_nnz(r)));
+        let mut row_ptr = Vec::with_capacity(a.rows + 1);
+        row_ptr.push(0usize);
+        let mut col_idx = Vec::with_capacity(a.nnz());
+        let mut values = Vec::with_capacity(a.nnz());
+        for &orig in &perm {
+            col_idx.extend_from_slice(a.row_cols(orig));
+            values.extend_from_slice(a.row_vals(orig));
+            row_ptr.push(col_idx.len());
+        }
+        SortedCsr {
+            csr: Csr::from_parts_unchecked(a.rows, a.cols, row_ptr, col_idx, values),
+            perm,
+        }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.csr.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.csr.cols
+    }
+
+    /// Stored non-zeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.csr.nnz()
+    }
+
+    /// Exact inverse conversion back to the original row order.
+    pub fn to_csr(&self) -> Csr {
+        let rows = self.csr.rows;
+        let mut row_ptr = vec![0usize; rows + 1];
+        for (p, &orig) in self.perm.iter().enumerate() {
+            row_ptr[orig + 1] = self.csr.row_nnz(p);
+        }
+        for i in 0..rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut col_idx = vec![0usize; self.nnz()];
+        let mut values = vec![0.0f32; self.nnz()];
+        for (p, &orig) in self.perm.iter().enumerate() {
+            let dst = row_ptr[orig];
+            let n = self.csr.row_nnz(p);
+            col_idx[dst..dst + n].copy_from_slice(self.csr.row_cols(p));
+            values[dst..dst + n].copy_from_slice(self.csr.row_vals(p));
+        }
+        Csr::from_parts_unchecked(rows, self.csr.cols, row_ptr, col_idx, values)
+    }
+
+    /// Total bytes — cache-budget accounting.
+    pub fn memory_bytes(&self) -> usize {
+        self.csr.memory_bytes() + self.perm.len() * std::mem::size_of::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn skewed(n: usize, seed: u64) -> Csr {
+        // a few hubs, many short rows, some empty rows
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            let deg = if r % 17 == 0 {
+                12
+            } else if r % 3 == 0 {
+                0
+            } else {
+                1 + rng.gen_range(3)
+            };
+            for _ in 0..deg {
+                coo.push(r, rng.gen_range(n), rng.gen_range_f32(0.1, 1.0));
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn sell_roundtrip_exact() {
+        let a = skewed(50, 1);
+        for (c, sigma) in [(1, 1), (4, 4), (4, 32), (8, 8), (8, 64), (3, 7), (16, 1000)] {
+            let s = Sell::from_csr(&a, c, sigma);
+            s.validate().unwrap();
+            assert_eq!(s.to_csr(), a, "c={c} sigma={sigma}");
+            assert_eq!(s.nnz(), a.nnz());
+            assert!(s.padding_ratio() >= 1.0);
+        }
+    }
+
+    #[test]
+    fn sell_sigma_rounds_to_multiple_of_c() {
+        assert_eq!(Sell::effective_sigma(4, 4), 4);
+        assert_eq!(Sell::effective_sigma(4, 5), 8);
+        assert_eq!(Sell::effective_sigma(4, 32), 32);
+        assert_eq!(Sell::effective_sigma(8, 1), 8);
+        // degenerate params clamp instead of panicking
+        assert_eq!(Sell::effective_sigma(0, 0), 1);
+        let a = skewed(20, 2);
+        let s = Sell::from_csr(&a, 0, 0);
+        s.validate().unwrap();
+        assert_eq!(s.to_csr(), a);
+    }
+
+    #[test]
+    fn sell_sorting_reduces_padding() {
+        let a = skewed(64, 3);
+        // σ = C leaves every slice holding its original 4 rows (sorting a
+        // window of exactly one slice cannot change that slice's max). A
+        // larger σ sorts across slices, and descending order minimises the
+        // sum of per-slice maxima over a window — so padding can only
+        // shrink or stay.
+        let tight = Sell::from_csr(&a, 4, 64);
+        let unsorted_bound = Sell::from_csr(&a, 4, 4);
+        assert!(tight.padded_nnz() <= unsorted_bound.padded_nnz());
+        // within every slice, lens are non-increasing (the kernel's
+        // branch-free active-lane trick depends on this)
+        tight.validate().unwrap();
+    }
+
+    #[test]
+    fn sell_degenerate_shapes() {
+        let empty = Csr::empty(0, 5);
+        let s = Sell::from_csr(&empty, 4, 32);
+        s.validate().unwrap();
+        assert_eq!(s.n_slices(), 0);
+        assert_eq!(s.to_csr(), empty);
+
+        // all-empty rows → all-empty slices with zero storage
+        let zeros = Csr::empty(10, 10);
+        let s = Sell::from_csr(&zeros, 4, 8);
+        s.validate().unwrap();
+        assert_eq!(s.padded_nnz(), 0);
+        assert_eq!(s.to_csr(), zeros);
+        assert_eq!(s.padding_ratio(), 1.0);
+    }
+
+    #[test]
+    fn sell_window_nnz_accounts_everything() {
+        let a = skewed(40, 4);
+        let s = Sell::from_csr(&a, 4, 8);
+        assert_eq!(s.window_nnz.iter().sum::<usize>(), a.nnz());
+        assert_eq!(s.window_nnz.len(), a.rows.div_ceil(s.sigma));
+    }
+
+    #[test]
+    fn sorted_csr_roundtrip_and_order() {
+        let a = skewed(50, 5);
+        let sc = SortedCsr::from_csr(&a);
+        sc.csr.validate().unwrap();
+        assert_eq!(sc.to_csr(), a);
+        assert_eq!(sc.nnz(), a.nnz());
+        // rows are in non-increasing length order
+        for p in 1..sc.rows() {
+            assert!(sc.csr.row_nnz(p) <= sc.csr.row_nnz(p - 1));
+        }
+        // stable: equal-length rows keep original relative order
+        let mut last_seen = vec![];
+        for p in 0..sc.rows() {
+            last_seen.push((sc.csr.row_nnz(p), sc.perm[p]));
+        }
+        for w in last_seen.windows(2) {
+            if w[0].0 == w[1].0 {
+                assert!(w[0].1 < w[1].1, "stable sort violated");
+            }
+        }
+    }
+
+    #[test]
+    fn memory_accounting_positive() {
+        let a = skewed(30, 6);
+        assert!(Sell::from_csr(&a, 4, 16).memory_bytes() > 0);
+        assert!(SortedCsr::from_csr(&a).memory_bytes() > a.memory_bytes());
+    }
+}

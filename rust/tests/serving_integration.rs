@@ -5,6 +5,7 @@
 use std::sync::Arc;
 
 use isplib::autodiff::context_graph_id;
+use isplib::autotune::{DbEntry, HardwareProfile, KernelRegistry, TuneConfig, Tuner, TuningDb};
 use isplib::data::karate_club;
 use isplib::dense::Dense;
 use isplib::gnn::{GnnModel, ModelParams};
@@ -41,6 +42,8 @@ fn coalesced_spmm_bitwise_equal_across_kernels() {
         KernelChoice::Trusted,
         KernelChoice::Generated { kb: 16 },
         KernelChoice::Tiled { kt: 16 },
+        KernelChoice::Sell { c: 4, sigma: 32 },
+        KernelChoice::SortedCsr,
     ] {
         for threads in [1, 3] {
             let y = spmm(&a, &packed, Semiring::Sum, choice, threads).unwrap();
@@ -116,7 +119,7 @@ fn concurrent_multi_graph_workspace_use() {
 /// session's completions near the front — nobody starves.
 #[test]
 fn scheduler_fairness_three_way_skew() {
-    let mut server = InferenceServer::new(ServeConfig { max_batch: 4, quantum: 4, threads: 1 });
+    let mut server = InferenceServer::new(ServeConfig { max_batch: 4, quantum: 4, threads: 1, ..ServeConfig::default() });
     let graphs = [random_graph(20, 3, 96), random_graph(24, 3, 97), random_graph(28, 3, 98)];
     let mut sids = Vec::new();
     for (i, g) in graphs.iter().enumerate() {
@@ -161,7 +164,7 @@ fn train_freeze_serve_roundtrip() {
     trainer.fit(&ds).unwrap();
     let dims = ModelParams { in_dim: ds.feature_dim(), hidden: 8, classes: ds.num_classes };
 
-    let mut server = InferenceServer::new(ServeConfig { max_batch: 4, quantum: 4, threads: 2 });
+    let mut server = InferenceServer::new(ServeConfig { max_batch: 4, quantum: 4, threads: 2, ..ServeConfig::default() });
     let sid = server
         .register_session(
             "karate-roundtrip",
@@ -188,4 +191,74 @@ fn train_freeze_serve_roundtrip() {
     assert_eq!(trainer.cache().stats(), cache_before);
     // and the session's workspace id is derived exactly like training's
     assert_eq!(server.session(sid).unwrap().graph_id, context_graph_id("karate-roundtrip"));
+}
+
+/// A session warm-started onto a tuned SELL-C-σ decision serves from the
+/// converted representation with ZERO conversions at request time: the
+/// format is materialised once at registration, every request hits the
+/// cache, and outputs stay bitwise-equal to the per-request reference.
+#[test]
+fn session_serves_from_tuned_format_without_request_time_conversion() {
+    let ds = karate_club();
+    let name = "karate-sell-serving";
+    let dims = ModelParams { in_dim: ds.feature_dim(), hidden: 8, classes: ds.num_classes };
+    let model = GnnModel::Gcn;
+
+    // a "training-time" tuning DB that picked SELL for every width this
+    // model's serving SpMMs will hit (per-request and coalesced)
+    let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+    let mut db = TuningDb::default();
+    let max_batch = 4usize;
+    for k in model.serving_spmm_widths(dims, max_batch) {
+        db.put(
+            name,
+            "amd-epyc",
+            k,
+            DbEntry { sell: Some((4, 32)), speedup: 1.5, ..DbEntry::default() },
+        );
+    }
+    KernelRegistry::global().set_patched(true);
+
+    let mut server = InferenceServer::new(ServeConfig {
+        max_batch,
+        quantum: 4,
+        threads: 2,
+        ..ServeConfig::default()
+    });
+    let params = model.init_params(dims, 21);
+    let sid = server
+        .register_session(name, model, dims, params, &ds.adj, Some((&tuner, &db)))
+        .unwrap();
+    let session = server.session(sid).unwrap();
+    assert!(session.warm_started > 0);
+    assert_eq!(session.preconverted, 1, "one distinct SELL conversion at registration");
+    let ws = Arc::clone(server.workspace());
+    assert_eq!(ws.cached_formats(), 1);
+    let misses_after_register = ws.stats().format_misses;
+    assert_eq!(misses_after_register, 1);
+
+    // serve a few batches; every SpMM routes to the SELL kernel via the
+    // warm-started binding and hits the cached conversion
+    let mut rng = Rng::seed_from_u64(23);
+    let xs: Vec<Dense> =
+        (0..6).map(|_| Dense::uniform(34, dims.in_dim, 1.0, &mut rng)).collect();
+    for x in &xs {
+        server.submit(sid, x.clone()).unwrap();
+    }
+    let done = server.run_until_drained().unwrap();
+    assert_eq!(done.len(), 6);
+    let stats = ws.stats();
+    assert_eq!(
+        stats.format_misses, misses_after_register,
+        "request-time conversions must be zero: {stats:?}"
+    );
+    assert!(stats.format_hits > 0, "serving SpMMs must consume the cached format: {stats:?}");
+    // bitwise: the tuned-format path equals the per-request reference
+    for c in &done {
+        let solo = server.infer_now(sid, &c.features).unwrap();
+        assert_eq!(solo.data, c.output.data, "tuned-format serving diverged");
+    }
+    // closing the session evicts the converted format with the graph
+    server.close_session(sid).unwrap();
+    assert_eq!(ws.cached_formats(), 0);
 }

@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
-# Emit BENCH_kernels.json — the machine-readable kernel perf snapshot
-# (op, kernel label, threads, ns/iter, and the pool-vs-spawn per-call
-# overhead microbenchmark). Run from anywhere; extra args pass through to
-# cargo bench. Set ISPLIB_BENCH_QUICK=1 for a fast smoke run.
+# Emit BENCH_kernels.json — the machine-readable kernel perf snapshot:
+# per (graph, op, kernel, threads) cell a `format` field (csr / sell(C,σ)
+# / sorted-csr) and `speedup` vs the trusted-CSR baseline, so the
+# sparse-format axis is tracked PR-over-PR, plus the pool-vs-spawn
+# per-call overhead microbenchmark. Run from anywhere; extra args pass
+# through to cargo bench. Set ISPLIB_BENCH_QUICK=1 for a fast smoke run.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
