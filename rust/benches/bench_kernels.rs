@@ -2,7 +2,7 @@
 //! runs this and commits the resulting `BENCH_kernels.json` so the perf
 //! trajectory of the kernels is trackable PR-over-PR.
 //!
-//! Two sections:
+//! Three sections:
 //!
 //! * `kernels` — ns/iter for every (graph, op, kernel label, threads) cell
 //!   of a fixed SpMM workload matrix across **two graph shapes** (the
@@ -12,6 +12,12 @@
 //!   training/serving see them). Each row carries a `format` field and a
 //!   `speedup` vs the trusted-CSR baseline at the same
 //!   (graph, k, op, threads), so the format win is trackable PR-over-PR.
+//! * `plan` — fused-vs-unfused epilogue speedup per (graph, model): the
+//!   full inference `ExecutionPlan`, once lowered and once with the
+//!   `Spmm→Relu` fusion pass applied everywhere, timed end-to-end through
+//!   `execute_inference` over a warmed workspace. Models with no fusable
+//!   edge report `fused_ops = 0` and a 1.0× speedup — coverage is
+//!   explicit, not silently dropped.
 //! * `overhead` — the repeated-SpMM microbenchmark behind the worker-pool
 //!   PR's acceptance bar: the same small graph, 100 back-to-back parallel
 //!   calls, comparing the persistent worker pool against the legacy
@@ -24,13 +30,17 @@
 //! ISPLIB_BENCH_OUT=/tmp/b.json cargo bench --bench bench_kernels
 //! ```
 
+use std::sync::Arc;
 use std::time::Instant;
 
+use isplib::autodiff::{context_graph_id, SpmmOperand};
 use isplib::data::spec_by_name;
 use isplib::dense::Dense;
+use isplib::gnn::{GnnModel, ModelParams};
 use isplib::kernels::{
     prepare_format, spmm_with_workspace, KernelChoice, KernelWorkspace, Semiring, TILED_KTS,
 };
+use isplib::plan::{execute_inference, ExecutionPlan};
 use isplib::sparse::{Coo, Csr};
 use isplib::util::bench::{time_case, BenchConfig};
 use isplib::util::json::Json;
@@ -228,6 +238,55 @@ fn main() {
         }
     }
 
+    // --- plan workload: fused vs unfused epilogue per (graph, model) -----
+    // The whole inference plan end-to-end, so the row measures what the
+    // fusion pass actually buys a serving session: the eliminated
+    // bias/relu passes over the n × K activation, amortised against
+    // everything else the model does.
+    let mut plan_rows = Vec::new();
+    let plan_dims = ModelParams { in_dim: 32, hidden: 64, classes: 16 };
+    for (gname, a) in graphs.iter() {
+        for model in GnnModel::ALL {
+            let plan = model.lower(plan_dims, model.norm_kind());
+            let fused = plan.fuse_spmm_relu(|_| true);
+            let params = model.init_params(plan_dims, 5);
+            let norm = model.norm_kind().apply(a).expect("normalise bench graph");
+            let ctx = format!("bench-plan-{gname}-{}", model.name());
+            let ws = Arc::new(KernelWorkspace::new());
+            let operand =
+                SpmmOperand::uncached(norm, &ctx).with_workspace(ws, context_graph_id(&ctx));
+            let x = Dense::uniform(a.rows, plan_dims.in_dim, 1.0, &mut rng);
+            let time_plan = |p: &ExecutionPlan, label: &str| {
+                let r = time_case(cfg, label, || {
+                    let outs = execute_inference(p, &operand, &params, &[&x], 2).unwrap();
+                    std::hint::black_box(&outs[0].data[..]);
+                });
+                r.median_secs * 1e9
+            };
+            let unfused_ns = time_plan(&plan, "plan-unfused");
+            let fused_ns = if fused.fused_op_count() > 0 {
+                time_plan(&fused, "plan-fused")
+            } else {
+                unfused_ns // nothing to fuse: identical plan, identical cost
+            };
+            let speedup = unfused_ns / fused_ns.max(1e-9);
+            println!(
+                "plan graph={gname:<9} model={:<9} fused_ops={} unfused {unfused_ns:>12.0} \
+                 ns/iter  fused {fused_ns:>12.0} ns/iter  {speedup:>5.2}x",
+                model.name(),
+                fused.fused_op_count()
+            );
+            plan_rows.push(Json::obj(vec![
+                ("graph", Json::str(gname)),
+                ("model", Json::str(model.name())),
+                ("fused_ops", Json::num(fused.fused_op_count() as f64)),
+                ("unfused_ns_per_iter", Json::num(unfused_ns)),
+                ("fused_ns_per_iter", Json::num(fused_ns)),
+                ("speedup", Json::num(speedup)),
+            ]));
+        }
+    }
+
     // --- repeated-SpMM per-call overhead: pool vs spawn-per-call ---------
     // Small, low-work graph: fixed costs dominate the O(nnz·K) math.
     let mut coo = Coo::new(2048, 2048);
@@ -270,6 +329,7 @@ fn main() {
     let doc = Json::obj(vec![
         ("workloads", workloads),
         ("kernels", Json::Arr(rows)),
+        ("plan", Json::Arr(plan_rows)),
         ("overhead", Json::obj(vec![
             ("calls", Json::num(calls as f64)),
             ("threads", Json::num(2.0)),

@@ -30,7 +30,10 @@
 
 use crate::dense::Dense;
 use crate::error::{Error, Result};
-use crate::kernels::{spmm_with_workspace, KernelWorkspace, Semiring};
+use crate::kernels::{
+    fused_relu_epilogue, spmm_fused_relu_with_workspace, spmm_with_workspace, KernelWorkspace,
+    Semiring,
+};
 
 use crate::autotune::KernelRegistry;
 
@@ -47,6 +50,10 @@ enum Op {
     Matmul(Var, Var),
     /// `Y = spmm(A, X)`, sum semiring, kernel via registry
     Spmm { operand: SpmmOperand, x: Var },
+    /// `Y = relu(spmm(A, X) + 1·bᵀ)` in one fused kernel pass — the plan
+    /// fusion pass's target op ([`crate::plan`]). `bias` is optional: a
+    /// bare `Spmm→Relu` edge fuses without one.
+    SpmmFusedRelu { operand: SpmmOperand, x: Var, bias: Option<Var> },
     /// `Y = X + 1·bᵀ` (bias is a 1×C node)
     AddBias(Var, Var),
     /// `Y = max(X, 0)`
@@ -111,6 +118,7 @@ impl Tape {
             Op::Input => true,
             Op::Matmul(a, b) => ng(a) || ng(b),
             Op::Spmm { x, .. } => ng(x),
+            Op::SpmmFusedRelu { x, bias, .. } => ng(x) || bias.as_ref().map(ng).unwrap_or(false),
             Op::AddBias(x, b) => ng(x) || ng(b),
             Op::Relu(x) | Op::Scale(x, _) => ng(x),
             Op::Add(a, b) => ng(a) || ng(b),
@@ -169,25 +177,105 @@ impl Tape {
         Ok(self.push(Op::Matmul(a, b), value))
     }
 
-    /// SpMM node (sum semiring). For kernel operands the implementation is
-    /// resolved through the global registry at call time, so
-    /// `patch()`/tuning affect live training; EdgeWise/Dense operands model
-    /// the PT2-MP and vanilla-dense baselines.
-    pub fn spmm(&mut self, operand: &SpmmOperand, x: Var) -> Result<Var> {
-        let xv = &self.nodes[x.0].value;
-        let value = match operand.impl_kind {
+    /// Forward aggregation for one SpMM call — the single encoding of the
+    /// strategy dispatch shared by the plain and fused SpMM nodes. Kernel
+    /// operands resolve their routing through the global registry at call
+    /// time, so `patch()`/tuning affect live training; EdgeWise/Dense
+    /// operands model the PT2-MP and vanilla-dense baselines.
+    fn spmm_forward_value(&self, operand: &SpmmOperand, xv: &Dense) -> Result<Dense> {
+        match operand.impl_kind {
             SpmmImpl::Kernel => {
                 let choice =
                     KernelRegistry::global().resolve(&operand.context, xv.cols, Semiring::Sum);
                 let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_id));
-                spmm_with_workspace(&operand.a, xv, Semiring::Sum, choice, self.threads, ws)?
+                spmm_with_workspace(&operand.a, xv, Semiring::Sum, choice, self.threads, ws)
             }
-            SpmmImpl::EdgeWise => operand.edgewise_forward(xv)?,
-            SpmmImpl::Dense => {
-                operand.dense.as_ref().expect("dense operand").matmul(xv)?
+            SpmmImpl::EdgeWise => operand.edgewise_forward(xv),
+            SpmmImpl::Dense => operand.dense.as_ref().expect("dense operand").matmul(xv),
+        }
+    }
+
+    /// Backward of one SpMM call: `dX = spmm(Aᵀ, dY)` under the operand's
+    /// strategy — shared by the plain and fused SpMM nodes so their
+    /// gradients are computed by identical code.
+    fn spmm_backward_value(&self, operand: &SpmmOperand, gout: &Dense) -> Result<Dense> {
+        match operand.impl_kind {
+            SpmmImpl::Kernel => {
+                // dX = spmm(Aᵀ, G) — Aᵀ cached or recomputed (§3.3)
+                let at = operand.transpose();
+                let choice =
+                    KernelRegistry::global().resolve(&operand.context, gout.cols, Semiring::Sum);
+                // Aᵀ is a different matrix than A: its partition caches
+                // under the derived transpose id.
+                let ws = operand
+                    .workspace
+                    .as_deref()
+                    .map(|w| (w, KernelWorkspace::transpose_id(operand.graph_id)));
+                spmm_with_workspace(&at, gout, Semiring::Sum, choice, self.threads, ws)
+            }
+            SpmmImpl::EdgeWise => operand.edgewise_backward(gout),
+            SpmmImpl::Dense => operand.dense.as_ref().expect("dense operand").t_matmul(gout),
+        }
+    }
+
+    /// SpMM node (sum semiring); see [`Tape::spmm_forward_value`] for the
+    /// strategy dispatch.
+    pub fn spmm(&mut self, operand: &SpmmOperand, x: Var) -> Result<Var> {
+        let xv = std::sync::Arc::clone(&self.nodes[x.0].value);
+        let value = self.spmm_forward_value(operand, &xv)?;
+        Ok(self.push(Op::Spmm { operand: operand.clone(), x }, value))
+    }
+
+    /// Fused `relu(spmm(A, X) + bias)` node — one kernel pass on the
+    /// forward (the FusedMM epilogue fusion,
+    /// [`spmm_fused_relu_with_workspace`]), one masked sweep on the
+    /// backward. Gradients are bitwise-identical to the unfused
+    /// `spmm → add_bias → relu` chain: the relu mask read off the fused
+    /// *output* (`y > 0`) is exactly the mask read off the unfused relu
+    /// *input* (`x > 0`), because `relu` is the identity on positives and
+    /// pins everything else to zero. Baseline (EdgeWise/Dense) operands
+    /// aggregate their usual way and apply the epilogue afterwards — the
+    /// fused *op* exists on every backend, the fused *loop* only on the
+    /// kernel path.
+    pub fn spmm_fused_relu(
+        &mut self,
+        operand: &SpmmOperand,
+        x: Var,
+        bias: Option<Var>,
+    ) -> Result<Var> {
+        let xv = std::sync::Arc::clone(&self.nodes[x.0].value);
+        let bv = match bias {
+            Some(b) => {
+                let bv = std::sync::Arc::clone(&self.nodes[b.0].value);
+                if bv.rows != 1 {
+                    return Err(Error::ShapeMismatch(format!(
+                        "fused bias must be 1xC, got {}x{}",
+                        bv.rows, bv.cols
+                    )));
+                }
+                if bv.cols != xv.cols {
+                    return Err(Error::ShapeMismatch(format!(
+                        "fused bias: len {} vs cols {}",
+                        bv.cols, xv.cols
+                    )));
+                }
+                Some(bv)
+            }
+            None => None,
+        };
+        let bias_row = bv.as_ref().map(|b| &b.data[..]);
+        let value = match operand.impl_kind {
+            SpmmImpl::Kernel => {
+                let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_id));
+                spmm_fused_relu_with_workspace(&operand.a, &xv, bias_row, self.threads, ws)?
+            }
+            _ => {
+                let mut y = self.spmm_forward_value(operand, &xv)?;
+                fused_relu_epilogue(&mut y, bias_row)?;
+                y
             }
         };
-        Ok(self.push(Op::Spmm { operand: operand.clone(), x }, value))
+        Ok(self.push(Op::SpmmFusedRelu { operand: operand.clone(), x, bias }, value))
     }
 
     /// Bias-broadcast node: `X + b` with `b` a 1×C parameter. Output
@@ -344,29 +432,31 @@ impl Tape {
                     if !self.nodes[x.0].needs_grad {
                         continue;
                     }
-                    let dx = match operand.impl_kind {
-                        SpmmImpl::Kernel => {
-                            // dX = spmm(Aᵀ, G) — Aᵀ cached or recomputed (§3.3)
-                            let at = operand.transpose();
-                            let choice = KernelRegistry::global().resolve(
-                                &operand.context,
-                                gout.cols,
-                                Semiring::Sum,
-                            );
-                            // Aᵀ is a different matrix than A: its partition
-                            // caches under the derived transpose id.
-                            let ws = operand
-                                .workspace
-                                .as_deref()
-                                .map(|w| (w, KernelWorkspace::transpose_id(operand.graph_id)));
-                            spmm_with_workspace(&at, &gout, Semiring::Sum, choice, self.threads, ws)?
-                        }
-                        SpmmImpl::EdgeWise => operand.edgewise_backward(&gout)?,
-                        SpmmImpl::Dense => {
-                            operand.dense.as_ref().expect("dense operand").t_matmul(&gout)?
-                        }
-                    };
+                    let dx = self.spmm_backward_value(&operand, &gout)?;
                     self.accumulate(x, dx);
+                }
+                Op::SpmmFusedRelu { operand, x, bias } => {
+                    let (operand, x, bias) = (operand.clone(), *x, *bias);
+                    // relu mask off the fused output: y == 0 ⟺ the unfused
+                    // pre-relu value was ≤ 0 (identical to the unfused
+                    // chain's mask, which reads the relu input)
+                    let value = std::sync::Arc::clone(&self.nodes[i].value);
+                    let mut masked = gout.clone();
+                    for (d, &v) in masked.data.iter_mut().zip(value.data.iter()) {
+                        if v <= 0.0 {
+                            *d = 0.0;
+                        }
+                    }
+                    if let Some(b) = bias {
+                        if self.nodes[b.0].needs_grad {
+                            let db = Dense::from_vec(1, masked.cols, masked.col_sum())?;
+                            self.accumulate(b, db);
+                        }
+                    }
+                    if self.nodes[x.0].needs_grad {
+                        let dx = self.spmm_backward_value(&operand, &masked)?;
+                        self.accumulate(x, dx);
+                    }
                 }
                 Op::AddBias(x, bias) => {
                     let (x, bias) = (*x, *bias);
@@ -671,6 +761,125 @@ mod tests {
         let stats = ws.stats();
         // epoch 2+ matmul/bias/relu/add node buffers come from the pool
         assert!(stats.buffer_reuses > 0, "{stats:?}");
+    }
+
+    /// The fused node's whole contract: value AND gradients bitwise-equal
+    /// to the unfused spmm → add_bias → relu chain — for cached/uncached
+    /// operands, with and without a bias, serial and pooled.
+    #[test]
+    fn fused_spmm_relu_matches_unfused_chain_bitwise() {
+        let a = graph(14, 71);
+        let mut rng = Rng::seed_from_u64(72);
+        let x0 = Dense::uniform(14, 6, 1.0, &mut rng).map(|v| v - 0.5);
+        let b0 = Dense::uniform(1, 6, 0.5, &mut rng).map(|v| v - 0.25);
+        let labels: Vec<usize> = (0..14).map(|i| i % 3).collect();
+
+        for threads in [1usize, 3] {
+            for with_bias in [true, false] {
+                let run = |fused: bool| {
+                    let operand = SpmmOperand::cached(a.clone(), "fused-tape");
+                    let mut tape = Tape::new(threads);
+                    let x = tape.input(x0.clone());
+                    let b = tape.input(b0.clone());
+                    let h = if fused {
+                        tape.spmm_fused_relu(&operand, x, with_bias.then_some(b)).unwrap()
+                    } else {
+                        let agg = tape.spmm(&operand, x).unwrap();
+                        let agg = if with_bias { tape.add_bias(agg, b).unwrap() } else { agg };
+                        tape.relu(agg).unwrap()
+                    };
+                    let loss = tape.softmax_xent(h, &labels, None).unwrap();
+                    tape.backward(loss).unwrap();
+                    (
+                        tape.value(h).clone(),
+                        tape.grad(x).unwrap().clone(),
+                        tape.grad(b).cloned(),
+                    )
+                };
+                let (fv, fgx, fgb) = run(true);
+                let (uv, ugx, ugb) = run(false);
+                assert_eq!(fv.data, uv.data, "value t={threads} bias={with_bias}");
+                assert_eq!(fgx.data, ugx.data, "dX t={threads} bias={with_bias}");
+                match (with_bias, fgb, ugb) {
+                    (true, Some(fb), Some(ub)) => {
+                        assert_eq!(fb.data, ub.data, "dB t={threads}")
+                    }
+                    (false, None, None) => {}
+                    other => panic!("bias grad presence diverged: {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_spmm_relu_pooled_and_uncached_agree() {
+        use crate::kernels::KernelWorkspace;
+        use std::sync::Arc;
+        let a = graph(10, 73);
+        let mut rng = Rng::seed_from_u64(74);
+        let x0 = Dense::uniform(10, 4, 1.0, &mut rng).map(|v| v - 0.5);
+        let b0 = Dense::uniform(1, 4, 0.5, &mut rng);
+        let labels: Vec<usize> = (0..10).map(|i| i % 2).collect();
+        let ws = Arc::new(KernelWorkspace::new());
+        let run = |operand: SpmmOperand, pooled: bool| {
+            let mut tape = if pooled {
+                Tape::with_workspace(2, Arc::clone(&ws))
+            } else {
+                Tape::new(2)
+            };
+            let x = tape.input(x0.clone());
+            let b = tape.input(b0.clone());
+            let h = tape.spmm_fused_relu(&operand, x, Some(b)).unwrap();
+            let loss = tape.softmax_xent(h, &labels, None).unwrap();
+            tape.backward(loss).unwrap();
+            (tape.value(h).clone(), tape.grad(x).unwrap().clone())
+        };
+        let (v1, g1) = run(SpmmOperand::cached(a.clone(), "fp"), false);
+        let (v2, g2) = run(SpmmOperand::uncached(a.clone(), "fp"), false);
+        let pooled_op =
+            SpmmOperand::cached(a.clone(), "fp").with_workspace(Arc::clone(&ws), 31);
+        let (v3, g3) = run(pooled_op, true);
+        assert_eq!(v1.data, v2.data);
+        assert_eq!(g1.data, g2.data);
+        assert_eq!(v1.data, v3.data);
+        assert_eq!(g1.data, g3.data);
+        assert!(ws.stats().buffer_allocs > 0);
+    }
+
+    #[test]
+    fn fused_spmm_relu_validates_bias_shape() {
+        let a = graph(6, 75);
+        let operand = SpmmOperand::cached(a, "fb");
+        let mut tape = Tape::new(1);
+        let x = tape.input(Dense::zeros(6, 4));
+        let wide = tape.input(Dense::zeros(1, 5)); // wrong length
+        assert!(tape.spmm_fused_relu(&operand, x, Some(wide)).is_err());
+        let tall = tape.input(Dense::zeros(2, 4)); // not a 1×C row
+        assert!(tape.spmm_fused_relu(&operand, x, Some(tall)).is_err());
+        let ok = tape.input(Dense::zeros(1, 4));
+        assert!(tape.spmm_fused_relu(&operand, x, Some(ok)).is_ok());
+    }
+
+    #[test]
+    fn fused_spmm_relu_on_baseline_operands() {
+        // EdgeWise and Dense operands support the fused op too (aggregate
+        // then epilogue) and agree with the kernel path to fp tolerance
+        let a = graph(12, 76);
+        let mut rng = Rng::seed_from_u64(77);
+        let x0 = Dense::uniform(12, 5, 1.0, &mut rng).map(|v| v - 0.5);
+        let b0 = Dense::uniform(1, 5, 0.5, &mut rng);
+        let run = |operand: SpmmOperand| {
+            let mut tape = Tape::new(1);
+            let x = tape.input(x0.clone());
+            let b = tape.input(b0.clone());
+            let h = tape.spmm_fused_relu(&operand, x, Some(b)).unwrap();
+            tape.value(h).clone()
+        };
+        let kernel = run(SpmmOperand::cached(a.clone(), "fbase"));
+        let edge = run(SpmmOperand::edgewise(a.clone(), "fbase"));
+        let dense = run(SpmmOperand::densified(a.clone(), "fbase"));
+        assert!(edge.allclose(&kernel, 1e-5));
+        assert!(dense.allclose(&kernel, 1e-5));
     }
 
     #[test]

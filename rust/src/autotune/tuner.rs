@@ -69,8 +69,18 @@ pub struct DbEntry {
     pub sell: Option<(usize, usize)>,
     /// True when the row-length-sorted CSR format won.
     pub sorted: bool,
-    /// Measured speedup over trusted.
+    /// Measured speedup over trusted. `0.0` (the default) marks an entry
+    /// whose kernel-family search has **not** run — e.g. a placeholder
+    /// created by [`Tuner::tune_fused_relu`] on an untuned width —
+    /// and is never treated as a warm-startable decision.
     pub speedup: f64,
+    /// Measured speedup of the fused SpMM+bias+ReLU epilogue kernel over
+    /// the unfused chain (this entry's SpMM choice followed by separate
+    /// bias-broadcast and ReLU passes) at this width. `None` means the
+    /// fused family was never measured here — the plan fusion pass then
+    /// leaves the edge unfused. Absent from pre-fusion DBs (JSON
+    /// back-compatible: a missing key loads as `None`).
+    pub fuse_relu: Option<f64>,
 }
 
 impl DbEntry {
@@ -138,7 +148,13 @@ impl TuningDb {
                     Some(v) => v.as_bool()?,
                 };
                 let speedup = val.get("speedup")?.as_f64()?;
-                entries.insert(key.clone(), DbEntry { kb, kt, sell, sorted, speedup });
+                // `fuse_relu` is absent in pre-fusion DBs; missing → None.
+                let fuse_relu = match val.get_opt("fuse_relu") {
+                    Some(Json::Null) | None => None,
+                    Some(v) => Some(v.as_f64()?),
+                };
+                entries
+                    .insert(key.clone(), DbEntry { kb, kt, sell, sorted, speedup, fuse_relu });
             }
         }
         Ok(TuningDb { entries })
@@ -163,6 +179,10 @@ impl TuningDb {
                 Some((c, s)) => (Json::num(c as f64), Json::num(s as f64)),
                 None => (Json::Null, Json::Null),
             };
+            let fuse_relu = match e.fuse_relu {
+                Some(s) => Json::num(s),
+                None => Json::Null,
+            };
             map.insert(
                 key.clone(),
                 Json::obj(vec![
@@ -172,6 +192,7 @@ impl TuningDb {
                     ("sell_sigma", sell_sigma),
                     ("sorted", Json::bool(e.sorted)),
                     ("speedup", Json::num(e.speedup)),
+                    ("fuse_relu", fuse_relu),
                 ]),
             );
         }
@@ -188,6 +209,18 @@ impl TuningDb {
     /// Record a decision.
     pub fn put(&mut self, dataset: &str, profile: &str, k: usize, entry: DbEntry) {
         self.entries.insert(Self::key(dataset, profile, k), entry);
+    }
+
+    /// Did the fused SpMM+bias+ReLU epilogue measure faster than the
+    /// unfused chain at this width? This is the predicate the plan fusion
+    /// pass ([`crate::plan::ExecutionPlan::fuse_spmm_relu`]) consults: an
+    /// unmeasured width (or a pre-fusion DB) answers `false`, so fusion
+    /// only rewrites edges where it actually measured faster.
+    pub fn fused_relu_profitable(&self, dataset: &str, profile: &str, k: usize) -> bool {
+        self.get(dataset, profile, k)
+            .and_then(|e| e.fuse_relu)
+            .map(|s| s > 1.0)
+            .unwrap_or(false)
     }
 }
 
@@ -350,6 +383,13 @@ impl Tuner {
         db: &TuningDb,
     ) -> Option<KernelChoice> {
         let e = db.get(dataset, &self.profile.name, k)?;
+        if e.speedup <= 0.0 {
+            // placeholder entry (e.g. only the fused family was measured
+            // here, via tune_fused_relu): the kernel search never ran, so
+            // there is no decision to warm-start — and a later tune() must
+            // not mistake it for one either
+            return None;
+        }
         let choice = e.choice();
         registry.bind(dataset, k, Semiring::Sum, RegistryEntry { choice, speedup: e.speedup });
         Some(choice)
@@ -384,8 +424,97 @@ impl Tuner {
         }
         let speedup = if best_time > 0.0 { trusted / best_time } else { 1.0 };
         registry.bind(dataset, k, Semiring::Sum, RegistryEntry { choice: best_choice, speedup });
-        db.put(dataset, &self.profile.name, k, DbEntry::from_choice(best_choice, speedup));
+        // a fused-epilogue measurement recorded before the kernel search
+        // ran (tune_fused_relu on this width) survives the overwrite —
+        // the two families compose in either call order
+        let mut entry = DbEntry::from_choice(best_choice, speedup);
+        entry.fuse_relu = db.get(dataset, &self.profile.name, k).and_then(|e| e.fuse_relu);
+        db.put(dataset, &self.profile.name, k, entry);
         Ok(best_choice)
+    }
+
+    /// Measure the **fused epilogue family** at `(dataset, K)`: the fused
+    /// SpMM+bias+ReLU kernel
+    /// ([`spmm_fused_relu_with_workspace`](crate::kernels::spmm_fused_relu_with_workspace))
+    /// against the unfused chain — this entry's tuned SpMM choice followed
+    /// by separate bias-broadcast and ReLU passes, i.e. exactly what an
+    /// unfused plan executes. The measured fused-over-unfused speedup is
+    /// recorded in the entry's `fuse_relu` field (creating a trusted entry
+    /// if `(dataset, K)` was never tuned) and returned; the plan fusion
+    /// pass rewrites only edges whose recorded speedup exceeds 1. A DB
+    /// entry that already carries a measurement is returned as-is — like
+    /// [`Tuner::tune`], warm DBs skip re-measurement.
+    pub fn tune_fused_relu(
+        &self,
+        dataset: &str,
+        a: &Csr,
+        k: usize,
+        db: &mut TuningDb,
+    ) -> Result<f64> {
+        let existing = db.get(dataset, &self.profile.name, k).cloned().unwrap_or_default();
+        if let Some(s) = existing.fuse_relu {
+            return Ok(s);
+        }
+        let choice = existing.choice();
+        let ws = KernelWorkspace::new();
+        let x = deterministic_features(a.cols, k);
+        let bias = vec![0.1f32; k]; // values are irrelevant to timing
+        prepare_format(a, choice, &ws, TUNE_GRAPH_ID);
+
+        let time_unfused = || -> Result<f64> {
+            let t0 = Instant::now();
+            let y = spmm_with_workspace(
+                a,
+                &x,
+                Semiring::Sum,
+                choice,
+                self.config.threads,
+                Some((&ws, TUNE_GRAPH_ID)),
+            )?;
+            let mut h = ws.take_dense(y.rows, y.cols);
+            y.add_row_broadcast_into(&bias, &mut h)?;
+            let mut r = ws.take_dense(y.rows, y.cols);
+            h.relu_into(&mut r)?;
+            let dt = t0.elapsed().as_secs_f64();
+            std::hint::black_box(&r.data[..]);
+            ws.recycle(y.data);
+            ws.recycle(h.data);
+            ws.recycle(r.data);
+            Ok(dt)
+        };
+        let time_fused = || -> Result<f64> {
+            let t0 = Instant::now();
+            let y = crate::kernels::spmm_fused_relu_with_workspace(
+                a,
+                &x,
+                Some(&bias),
+                self.config.threads,
+                Some((&ws, TUNE_GRAPH_ID)),
+            )?;
+            let dt = t0.elapsed().as_secs_f64();
+            std::hint::black_box(&y.data[..]);
+            ws.recycle(y.data);
+            Ok(dt)
+        };
+
+        for _ in 0..self.config.warmup {
+            time_unfused()?;
+            time_fused()?;
+        }
+        let reps = self.config.reps.max(1);
+        let mut unfused = Vec::with_capacity(reps);
+        let mut fused = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            unfused.push(time_unfused()?);
+            fused.push(time_fused()?);
+        }
+        unfused.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        fused.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        let (u, f) = (unfused[reps / 2], fused[reps / 2]);
+        let speedup = if f > 0.0 { u / f } else { 1.0 };
+        let entry = DbEntry { fuse_relu: Some(speedup), ..existing };
+        db.put(dataset, &self.profile.name, k, entry);
+        Ok(speedup)
     }
 }
 
@@ -574,11 +703,75 @@ mod tests {
     }
 
     #[test]
+    fn tune_fused_relu_records_and_warm_starts() {
+        let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+        let a = graph(48, 3, 57);
+        let mut db = TuningDb::default();
+        // no prior entry: measures and creates one on top of trusted
+        let s = tuner.tune_fused_relu("toy", &a, 16, &mut db).unwrap();
+        assert!(s > 0.0);
+        let e = db.get("toy", "amd-epyc", 16).unwrap();
+        assert_eq!(e.fuse_relu, Some(s));
+        assert_eq!(e.choice(), KernelChoice::Trusted);
+        assert_eq!(db.fused_relu_profitable("toy", "amd-epyc", 16), s > 1.0);
+        // a second call is a DB hit: the recorded value is returned verbatim
+        let again = tuner.tune_fused_relu("toy", &a, 16, &mut db).unwrap();
+        assert_eq!(again, s);
+        // a pre-recorded measurement is honoured without measuring, and
+        // the fused field composes with a kernel-choice decision
+        db.put(
+            "toy",
+            "amd-epyc",
+            32,
+            DbEntry { kb: Some(8), speedup: 2.0, fuse_relu: Some(1.7), ..DbEntry::default() },
+        );
+        assert_eq!(tuner.tune_fused_relu("toy", &a, 32, &mut db).unwrap(), 1.7);
+        assert!(db.fused_relu_profitable("toy", "amd-epyc", 32));
+        assert_eq!(db.get("toy", "amd-epyc", 32).unwrap().choice(), KernelChoice::Generated {
+            kb: 8
+        });
+        // unmeasured widths and slower-than-unfused measurements say no
+        assert!(!db.fused_relu_profitable("toy", "amd-epyc", 999));
+        db.put("toy", "amd-epyc", 48, DbEntry { fuse_relu: Some(0.8), ..DbEntry::default() });
+        assert!(!db.fused_relu_profitable("toy", "amd-epyc", 48));
+    }
+
+    #[test]
+    fn fused_then_kernel_tuning_composes_in_either_order() {
+        // regression: tune_fused_relu on an untuned width creates a
+        // placeholder entry (speedup 0.0); a later tune() must still run
+        // the kernel search instead of warm-starting the placeholder, and
+        // must preserve the fused measurement it overwrites
+        let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+        let a = graph(48, 3, 58);
+        let registry = KernelRegistry::new();
+        registry.set_patched(true);
+        let mut db = TuningDb::default();
+        let fused = tuner.tune_fused_relu("order", &a, 16, &mut db).unwrap();
+        // the placeholder is not a warm-startable kernel decision
+        assert!(tuner.warm_start("order", 16, &registry, &db).is_none());
+        assert!(registry.binding("order", 16, Semiring::Sum).is_none());
+        let choice = tuner.tune("order", &a, 16, &registry, &mut db).unwrap();
+        let e = db.get("order", "amd-epyc", 16).unwrap();
+        assert_eq!(e.choice(), choice);
+        assert!(e.speedup > 0.0, "kernel search must have really run: {e:?}");
+        assert_eq!(e.fuse_relu, Some(fused), "fused measurement survives the kernel tune");
+        // and the registry now carries the measured decision
+        assert!(registry.binding("order", 16, Semiring::Sum).is_some());
+    }
+
+    #[test]
     fn db_save_load_roundtrip() {
         let dir = crate::util::tmp::TempDir::new().unwrap();
         let path = dir.path().join("tune.json");
         let mut db = TuningDb::default();
         db.put("d", "p", 64, DbEntry { speedup: 1.0, ..DbEntry::default() });
+        db.put(
+            "d",
+            "p",
+            96,
+            DbEntry { kt: Some(64), speedup: 1.3, fuse_relu: Some(1.4), ..DbEntry::default() },
+        );
         db.put("d", "p", 32, DbEntry { kb: Some(16), speedup: 2.5, ..DbEntry::default() });
         db.put("d", "p", 512, DbEntry { kt: Some(256), speedup: 1.8, ..DbEntry::default() });
         db.put("d", "p", 16, DbEntry { sell: Some((4, 32)), speedup: 1.9, ..DbEntry::default() });
@@ -596,6 +789,10 @@ mod tests {
         );
         assert!(back.get("d", "p", 8).unwrap().sorted);
         assert_eq!(back.get("d", "p", 8).unwrap().choice(), KernelChoice::SortedCsr);
+        // the fused-epilogue measurement round-trips; unmeasured stays None
+        assert_eq!(back.get("d", "p", 96).unwrap().fuse_relu, Some(1.4));
+        assert_eq!(back.get("d", "p", 96).unwrap().choice(), KernelChoice::Tiled { kt: 64 });
+        assert!(back.get("d", "p", 64).unwrap().fuse_relu.is_none());
         // missing file is fine
         let empty = TuningDb::load(&dir.path().join("missing.json")).unwrap();
         assert!(empty.entries.is_empty());
@@ -608,5 +805,8 @@ mod tests {
         assert_eq!(e.choice(), KernelChoice::Generated { kb: 16 });
         assert!(e.sell.is_none());
         assert!(!e.sorted);
+        // pre-fusion DBs (no fuse_relu key) load as "never measured"
+        assert!(e.fuse_relu.is_none());
+        assert!(!old.fused_relu_profitable("d", "p", 32));
     }
 }

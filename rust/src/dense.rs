@@ -374,6 +374,86 @@ impl Dense {
     }
 }
 
+/// Concatenate matrices column-wise into `out` (shape `rows × Σ cols`,
+/// contents overwritten). All inputs must share `rows`.
+///
+/// This is the micro-batch coalescing primitive: by the identity
+/// `Â · [X₁ | … | Xₘ] = [Â·X₁ | … | Â·Xₘ]`, a column-concatenated panel
+/// shares one SpMM call — bitwise-equal to per-panel calls because every
+/// kernel family accumulates each output element independently along the
+/// row's non-zero stream. Both the plan executor
+/// ([`crate::plan::execute_inference`]) and the serving batcher build on
+/// it.
+pub fn concat_cols_into(xs: &[&Dense], out: &mut Dense) -> Result<()> {
+    let rows = match xs.first() {
+        Some(x) => x.rows,
+        None => return Err(Error::Config("concat_cols: empty batch".into())),
+    };
+    let total: usize = xs.iter().map(|x| x.cols).sum();
+    if xs.iter().any(|x| x.rows != rows) {
+        return Err(Error::ShapeMismatch("concat_cols: row counts differ".into()));
+    }
+    if out.rows != rows || out.cols != total {
+        return Err(Error::ShapeMismatch(format!(
+            "concat_cols: out {}x{} vs {}x{}",
+            out.rows, out.cols, rows, total
+        )));
+    }
+    for r in 0..rows {
+        let orow = out.row_mut(r);
+        let mut base = 0;
+        for x in xs {
+            orow[base..base + x.cols].copy_from_slice(x.row(r));
+            base += x.cols;
+        }
+    }
+    Ok(())
+}
+
+/// Allocating form of [`concat_cols_into`].
+pub fn concat_cols(xs: &[&Dense]) -> Result<Dense> {
+    let rows = xs.first().map(|x| x.rows).unwrap_or(0);
+    let total: usize = xs.iter().map(|x| x.cols).sum();
+    let mut out = Dense::zeros(rows, total);
+    concat_cols_into(xs, &mut out)?;
+    Ok(out)
+}
+
+/// Split a column-concatenated matrix into caller-provided per-panel
+/// matrices (contents overwritten; their widths must sum to `y.cols` and
+/// rows must match). The caller owns allocation, so pooled buffers can be
+/// handed in.
+pub fn split_cols_into(y: &Dense, outs: &mut [Dense]) -> Result<()> {
+    let total: usize = outs.iter().map(|o| o.cols).sum();
+    if total != y.cols {
+        return Err(Error::ShapeMismatch(format!(
+            "split_cols: widths sum {} vs cols {}",
+            total, y.cols
+        )));
+    }
+    if outs.iter().any(|o| o.rows != y.rows) {
+        return Err(Error::ShapeMismatch("split_cols: row counts differ".into()));
+    }
+    for r in 0..y.rows {
+        let yrow = y.row(r);
+        let mut base = 0;
+        for out in outs.iter_mut() {
+            let w = out.cols;
+            out.row_mut(r).copy_from_slice(&yrow[base..base + w]);
+            base += w;
+        }
+    }
+    Ok(())
+}
+
+/// Allocating form of [`split_cols_into`]: split into per-panel matrices
+/// of the given widths (`Σ widths == y.cols`).
+pub fn split_cols(y: &Dense, widths: &[usize]) -> Result<Vec<Dense>> {
+    let mut outs: Vec<Dense> = widths.iter().map(|&w| Dense::zeros(y.rows, w)).collect();
+    split_cols_into(y, &mut outs)?;
+    Ok(outs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -527,5 +607,40 @@ mod tests {
         assert!(a.data.iter().all(|v| v.abs() <= bound));
         // and it isn't all zeros
         assert!(a.frobenius() > 0.0);
+    }
+
+    #[test]
+    fn concat_split_roundtrip() {
+        let mut rng = Rng::seed_from_u64(31);
+        let a = Dense::uniform(4, 3, 1.0, &mut rng);
+        let b = Dense::uniform(4, 5, 1.0, &mut rng);
+        let c = Dense::uniform(4, 1, 1.0, &mut rng);
+        let packed = concat_cols(&[&a, &b, &c]).unwrap();
+        assert_eq!(packed.rows, 4);
+        assert_eq!(packed.cols, 9);
+        assert_eq!(packed.get(2, 0), a.get(2, 0));
+        assert_eq!(packed.get(2, 3), b.get(2, 0));
+        assert_eq!(packed.get(2, 8), c.get(2, 0));
+        let back = split_cols(&packed, &[3, 5, 1]).unwrap();
+        assert_eq!(back[0].data, a.data);
+        assert_eq!(back[1].data, b.data);
+        assert_eq!(back[2].data, c.data);
+    }
+
+    #[test]
+    fn concat_rejects_bad_inputs() {
+        let a = Dense::zeros(4, 3);
+        let b = Dense::zeros(5, 3);
+        assert!(concat_cols(&[&a, &b]).is_err()); // row mismatch
+        assert!(concat_cols(&[]).is_err()); // empty batch
+        let mut out = Dense::zeros(4, 5); // wrong total width
+        assert!(concat_cols_into(&[&a], &mut out).is_err());
+    }
+
+    #[test]
+    fn split_rejects_bad_widths() {
+        let y = Dense::zeros(3, 6);
+        assert!(split_cols(&y, &[3, 2]).is_err());
+        assert!(split_cols(&y, &[3, 3]).is_ok());
     }
 }

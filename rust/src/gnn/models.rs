@@ -1,8 +1,13 @@
-//! Two-layer GNN model definitions over the autodiff tape.
+//! Two-layer GNN model definitions: architecture metadata and parameter
+//! initialisation.
+//!
+//! Models no longer carry a hand-written forward pass — every execution
+//! path lowers through [`GnnModel::lower`] (defined in [`crate::plan`]) to
+//! the shared [`ExecutionPlan`](crate::plan::ExecutionPlan) IR, which the
+//! training tape and the serving executor both interpret. What remains
+//! here is what a plan cannot derive: the parameter layout, the adjacency
+//! normalisation, and the CLI surface.
 
-use std::collections::BTreeMap;
-
-use crate::autodiff::{SpmmOperand, Tape, Var};
 use crate::error::{Error, Result};
 use crate::sparse::NormKind;
 
@@ -77,42 +82,6 @@ impl GnnModel {
         matches!(self, GnnModel::Gcn)
     }
 
-    /// The embedding widths this model's forward (and, by symmetry of
-    /// `dX = spmm(Aᵀ, dY)`, backward) pass runs SpMM at, for the given
-    /// dimensions — the Ks a tuner must cover before kernel routing pays
-    /// off. GCN projects before aggregating, so its SpMMs run at the
-    /// hidden/class widths; SAGE and GIN aggregate raw features in layer 0
-    /// (`in_dim` on the first SpMM) and hidden activations in layer 1.
-    /// Sorted and deduplicated.
-    pub fn spmm_widths(self, dims: ModelParams) -> Vec<usize> {
-        let mut ks = match self {
-            GnnModel::Gcn => vec![dims.hidden, dims.classes],
-            GnnModel::SageSum | GnnModel::SageMean | GnnModel::Gin => {
-                vec![dims.in_dim, dims.hidden]
-            }
-        };
-        ks.sort_unstable();
-        ks.dedup();
-        ks
-    }
-
-    /// [`GnnModel::spmm_widths`] extended with every coalesced multiple up
-    /// to `max_batch` — the widths batched inference
-    /// ([`crate::serve`]) actually runs SpMM at when `b` same-graph
-    /// requests share one call. Tune these at training time and serving
-    /// warm-starts them without measurement. Sorted and deduplicated.
-    pub fn serving_spmm_widths(self, dims: ModelParams, max_batch: usize) -> Vec<usize> {
-        let mut ks = Vec::new();
-        for base in self.spmm_widths(dims) {
-            for b in 1..=max_batch.max(1) {
-                ks.push(base * b);
-            }
-        }
-        ks.sort_unstable();
-        ks.dedup();
-        ks
-    }
-
     /// Initialise parameters for the given dimensions.
     pub fn init_params(self, dims: ModelParams, seed: u64) -> ParamSet {
         let mut p = ParamSet::new();
@@ -145,73 +114,15 @@ impl GnnModel {
         }
         p
     }
-
-    /// Record the forward pass on `tape`; returns the logits node.
-    ///
-    /// `vars` maps parameter names to their tape handles (the trainer
-    /// inserts every parameter at the start of each step).
-    pub fn forward(
-        self,
-        tape: &mut Tape,
-        operand: &SpmmOperand,
-        x: Var,
-        vars: &BTreeMap<String, Var>,
-    ) -> Result<Var> {
-        let get = |name: &str| -> Result<Var> {
-            vars.get(name).copied().ok_or_else(|| Error::UnknownName(format!("param var '{name}'")))
-        };
-        match self {
-            GnnModel::Gcn => {
-                // layer 0: project *then* aggregate (K = hidden in the SpMM)
-                let xw = tape.matmul(x, get("w0")?)?;
-                let agg = tape.spmm(operand, xw)?;
-                let h = tape.add_bias(agg, get("b0")?)?;
-                let h = tape.relu(h)?;
-                // layer 1
-                let hw = tape.matmul(h, get("w1")?)?;
-                let agg = tape.spmm(operand, hw)?;
-                tape.add_bias(agg, get("b1")?)
-            }
-            GnnModel::SageSum | GnnModel::SageMean => {
-                // layer 0: aggregate raw features *then* project (K = in_dim)
-                let neigh = tape.spmm(operand, x)?;
-                let neigh = tape.matmul(neigh, get("w0_neigh")?)?;
-                let selfp = tape.matmul(x, get("w0_self")?)?;
-                let h = tape.add(selfp, neigh)?;
-                let h = tape.add_bias(h, get("b0")?)?;
-                let h = tape.relu(h)?;
-                // layer 1
-                let neigh = tape.spmm(operand, h)?;
-                let neigh = tape.matmul(neigh, get("w1_neigh")?)?;
-                let selfp = tape.matmul(h, get("w1_self")?)?;
-                let out = tape.add(selfp, neigh)?;
-                tape.add_bias(out, get("b1")?)
-            }
-            GnnModel::Gin => {
-                // layer 0: z = (1+ε)x + Σ_neigh x, ε = 0
-                let agg = tape.spmm(operand, x)?;
-                let z = tape.add(x, agg)?;
-                let h = tape.matmul(z, get("w0a")?)?;
-                let h = tape.add_bias(h, get("b0a")?)?;
-                let h = tape.relu(h)?;
-                let h = tape.matmul(h, get("w0b")?)?;
-                let h = tape.add_bias(h, get("b0b")?)?;
-                let h = tape.relu(h)?;
-                // layer 1
-                let agg = tape.spmm(operand, h)?;
-                let z = tape.add(h, agg)?;
-                let out = tape.matmul(z, get("w1")?)?;
-                tape.add_bias(out, get("b1")?)
-            }
-        }
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::autodiff::SpmmOperand;
     use crate::data::karate_club;
     use crate::dense::Dense;
+    use crate::plan::execute_inference;
 
     fn run_forward(model: GnnModel) -> Dense {
         let ds = karate_club();
@@ -219,14 +130,10 @@ mod tests {
         let params = model.init_params(dims, 42);
         let a = model.norm_kind().apply(&ds.adj).unwrap();
         let operand = SpmmOperand::cached(a, "test");
-        let mut tape = Tape::new(1);
-        let x = tape.input(ds.features.clone());
-        let mut vars = BTreeMap::new();
-        for (name, value) in params.iter() {
-            vars.insert(name.clone(), tape.input(value.clone()));
-        }
-        let logits = model.forward(&mut tape, &operand, x, &vars).unwrap();
-        tape.value(logits).clone()
+        let plan = model.lower(dims, model.norm_kind());
+        let mut out =
+            execute_inference(&plan, &operand, &params, &[&ds.features], 1).unwrap();
+        out.pop().unwrap()
     }
 
     #[test]
@@ -258,28 +165,6 @@ mod tests {
     }
 
     #[test]
-    fn spmm_widths_match_forward_structure() {
-        let dims = ModelParams { in_dim: 50, hidden: 16, classes: 3 };
-        assert_eq!(GnnModel::Gcn.spmm_widths(dims), vec![3, 16]);
-        assert_eq!(GnnModel::SageSum.spmm_widths(dims), vec![16, 50]);
-        assert_eq!(GnnModel::SageMean.spmm_widths(dims), vec![16, 50]);
-        assert_eq!(GnnModel::Gin.spmm_widths(dims), vec![16, 50]);
-        // duplicates collapse (hidden == in_dim)
-        let square = ModelParams { in_dim: 16, hidden: 16, classes: 2 };
-        assert_eq!(GnnModel::Gin.spmm_widths(square), vec![16]);
-    }
-
-    #[test]
-    fn serving_widths_cover_coalesced_multiples() {
-        let dims = ModelParams { in_dim: 50, hidden: 16, classes: 3 };
-        // GCN bases {3, 16} × batch 1..=2, deduped and sorted
-        assert_eq!(GnnModel::Gcn.serving_spmm_widths(dims, 2), vec![3, 6, 16, 32]);
-        // max_batch 1 (and the 0 clamp) degenerate to the base widths
-        assert_eq!(GnnModel::Gcn.serving_spmm_widths(dims, 1), vec![3, 16]);
-        assert_eq!(GnnModel::Gcn.serving_spmm_widths(dims, 0), vec![3, 16]);
-    }
-
-    #[test]
     fn param_counts() {
         let dims = ModelParams { in_dim: 10, hidden: 4, classes: 3 };
         assert_eq!(GnnModel::Gcn.init_params(dims, 1).len(), 4);
@@ -288,13 +173,27 @@ mod tests {
     }
 
     #[test]
-    fn missing_param_errors() {
-        let ds = karate_club();
-        let a = NormKind::GcnSym.apply(&ds.adj).unwrap();
-        let operand = SpmmOperand::cached(a, "test");
-        let mut tape = Tape::new(1);
-        let x = tape.input(ds.features.clone());
-        let vars = BTreeMap::new(); // empty!
-        assert!(GnnModel::Gcn.forward(&mut tape, &operand, x, &vars).is_err());
+    fn params_cover_every_plan_reference() {
+        // the parameter layout and the lowering must agree: every name a
+        // plan op references exists with a compatible shape
+        let dims = ModelParams { in_dim: 10, hidden: 4, classes: 3 };
+        for model in GnnModel::ALL {
+            let params = model.init_params(dims, 1);
+            let plan = model.lower(dims, model.norm_kind());
+            for op in plan.ops() {
+                match op {
+                    crate::plan::Op::MatMul { w, .. } => {
+                        assert!(params.get(w).is_ok(), "{model:?}: missing '{w}'");
+                    }
+                    crate::plan::Op::BiasAdd { b, .. } => {
+                        let bias = params.get(b).unwrap_or_else(|_| {
+                            panic!("{model:?}: missing '{b}'");
+                        });
+                        assert_eq!(bias.rows, 1, "{model:?}: '{b}' is not a bias row");
+                    }
+                    _ => {}
+                }
+            }
+        }
     }
 }

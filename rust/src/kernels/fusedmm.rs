@@ -11,12 +11,14 @@
 //! with `g` an [`EdgeOp`]. `EdgeOp::Copy` degenerates to plain SpMM;
 //! `EdgeOp::Dot` is the attention-style SDDMM·SpMM fusion.
 
+use std::sync::Arc;
+
 use crate::dense::Dense;
 use crate::error::{Error, Result};
 use crate::sparse::Csr;
 use crate::util::parallel;
 
-use super::{nnz_balanced_partition, split_rows_mut};
+use super::{nnz_balanced_partition, split_rows_mut, KernelWorkspace};
 
 /// Per-edge scalar function applied before aggregation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -37,7 +39,9 @@ impl EdgeOp {
             "copy" => Ok(EdgeOp::Copy),
             "dot" => Ok(EdgeOp::Dot),
             "sigmoid" | "sigmoid_dot" => Ok(EdgeOp::SigmoidDot),
-            other => Err(Error::UnknownName(format!("edge op '{other}'"))),
+            other => Err(Error::UnknownName(format!(
+                "edge op '{other}' (valid: copy, dot, sigmoid|sigmoid_dot)"
+            ))),
         }
     }
 
@@ -100,6 +104,146 @@ pub fn fusedmm(
             .collect(),
     );
     Ok(y)
+}
+
+/// Fused SpMM + (optional bias +) ReLU — the FusedMM idiom applied to the
+/// GNN layer *epilogue* instead of the SDDMM prologue: each output row is
+/// aggregated and then biased + rectified while it is still cache-hot, so
+/// the unfused chain's two extra full passes over the `n × K` activation
+/// (one for the bias broadcast, one for the ReLU) disappear.
+///
+/// Bitwise contract: the accumulation is the trusted kernel's sum loop
+/// verbatim (every kernel family — generated, tiled, SELL, sorted CSR —
+/// accumulates each output element in the same non-zero-stream order, so
+/// they are all bitwise-equal for the sum semiring), and the epilogue
+/// applies exactly `(y + b).max(0)` per element, the same scalar ops
+/// [`Dense::add_row_broadcast_into`] followed by [`Dense::relu_into`]
+/// perform. Fusing therefore **cannot** change numerics — the plan-rewrite
+/// pass ([`crate::plan`]) relies on this being equality by construction,
+/// not by tolerance.
+///
+/// `bias`, when present, must have length `x.cols` (a `1 × K` broadcast
+/// row; batched callers tile it per coalesced request). Rows with no
+/// stored non-zeros still receive the epilogue — `relu(0 + b)` — exactly
+/// as the unfused chain would.
+pub fn spmm_fused_relu(a: &Csr, x: &Dense, bias: Option<&[f32]>, threads: usize) -> Result<Dense> {
+    spmm_fused_relu_with_workspace(a, x, bias, threads, None)
+}
+
+/// [`spmm_fused_relu`] drawing the output buffer from a shared
+/// [`KernelWorkspace`] and serving the NNZ partition from its per-graph
+/// cache — the same amortisation contract as
+/// [`spmm_with_workspace`](super::spmm_with_workspace).
+pub fn spmm_fused_relu_with_workspace(
+    a: &Csr,
+    x: &Dense,
+    bias: Option<&[f32]>,
+    threads: usize,
+    ws: Option<(&KernelWorkspace, u64)>,
+) -> Result<Dense> {
+    if a.cols != x.rows {
+        return Err(Error::ShapeMismatch(format!(
+            "spmm_fused_relu: A {}x{} @ X {}x{}",
+            a.rows, a.cols, x.rows, x.cols
+        )));
+    }
+    if let Some(b) = bias {
+        if b.len() != x.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "spmm_fused_relu: bias len {} vs K {}",
+                b.len(),
+                x.cols
+            )));
+        }
+    }
+    let threads = if threads == 0 { parallel::current_num_threads() } else { threads };
+    let k = x.cols;
+    let mut y = match ws {
+        Some((w, _)) => w.take_dense(a.rows, k),
+        None => Dense::zeros(a.rows, k),
+    };
+    if a.rows == 0 || k == 0 {
+        return Ok(y);
+    }
+    // nnz == 0 runs the serial body too: the epilogue still visits every
+    // row (relu(0 + b)), but there is no aggregation work to balance.
+    if threads <= 1 || a.nnz() == 0 {
+        fused_relu_rows(a, x, bias, 0, a.rows, &mut y.data);
+        return Ok(y);
+    }
+    let ranges = match ws {
+        Some((w, graph_id)) => w.partition(graph_id, a, threads),
+        None => Arc::new(nnz_balanced_partition(a, threads)),
+    };
+    parallel::join_all(
+        split_rows_mut(&mut y.data, &ranges, k)
+            .into_iter()
+            .map(|(range, out)| move || fused_relu_rows(a, x, bias, range.start, range.end, out))
+            .collect(),
+    );
+    Ok(y)
+}
+
+/// The epilogue alone: `y = max(y + b, 0)` in place, element-for-element
+/// the same scalar ops as bias-broadcast-then-ReLU. The tape's baseline
+/// SpMM strategies (edge-wise, densified) apply this after their own
+/// aggregation so the fused *op* stays available on every backend even
+/// though only the kernel path fuses the *loops*.
+pub fn fused_relu_epilogue(y: &mut Dense, bias: Option<&[f32]>) -> Result<()> {
+    if let Some(b) = bias {
+        if b.len() != y.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "fused_relu_epilogue: bias len {} vs cols {}",
+                b.len(),
+                y.cols
+            )));
+        }
+    }
+    epilogue_rows(&mut y.data, y.cols, bias);
+    Ok(())
+}
+
+/// Row-range body: trusted-order sum accumulation, then the epilogue on
+/// the completed row.
+fn fused_relu_rows(
+    a: &Csr,
+    x: &Dense,
+    bias: Option<&[f32]>,
+    start: usize,
+    end: usize,
+    out: &mut [f32],
+) {
+    let k = x.cols;
+    for r in start..end {
+        let orow = &mut out[(r - start) * k..(r - start + 1) * k];
+        // identical op sequence to the trusted kernel's sum fast path —
+        // no zero-skip, so the result is bitwise-equal to every family
+        for (&c, &v) in a.row_cols(r).iter().zip(a.row_vals(r)) {
+            let xrow = x.row(c);
+            for (o, &xv) in orow.iter_mut().zip(xrow.iter()) {
+                *o += v * xv;
+            }
+        }
+        epilogue_rows(orow, k, bias);
+    }
+}
+
+#[inline]
+fn epilogue_rows(out: &mut [f32], k: usize, bias: Option<&[f32]>) {
+    match bias {
+        Some(b) => {
+            for row in out.chunks_mut(k) {
+                for (o, &bv) in row.iter_mut().zip(b.iter()) {
+                    *o = (*o + bv).max(0.0);
+                }
+            }
+        }
+        None => {
+            for o in out.iter_mut() {
+                *o = o.max(0.0);
+            }
+        }
+    }
 }
 
 /// Row-range body. The edge-op kind is resolved **once** out here, not per
@@ -248,5 +392,102 @@ mod tests {
         assert_eq!(EdgeOp::parse("dot").unwrap(), EdgeOp::Dot);
         assert_eq!(EdgeOp::parse("sigmoid").unwrap(), EdgeOp::SigmoidDot);
         assert!(EdgeOp::parse("relu").is_err());
+    }
+
+    #[test]
+    fn edge_op_parse_error_lists_valid_ops() {
+        // regression: the error used to be an opaque UnknownName with no
+        // hint at what IS accepted
+        let msg = EdgeOp::parse("relu").unwrap_err().to_string();
+        for valid in ["copy", "dot", "sigmoid"] {
+            assert!(msg.contains(valid), "error '{msg}' does not list '{valid}'");
+        }
+        assert!(msg.contains("relu"), "error '{msg}' does not echo the bad input");
+    }
+
+    /// The fused epilogue kernel's bitwise contract: identical to the
+    /// unfused spmm → bias-broadcast → relu chain, for serial and
+    /// partitioned execution, with and without a bias.
+    #[test]
+    fn fused_relu_bitwise_equals_unfused_chain() {
+        let mut rng = Rng::seed_from_u64(41);
+        let a = random_graph(50, 5, 42);
+        let x = Dense::uniform(50, 12, 1.0, &mut rng);
+        // mixed-sign inputs so the relu actually clips
+        let x = x.map(|v| v - 0.5);
+        let bias: Vec<f32> = (0..12).map(|i| (i as f32) * 0.1 - 0.6).collect();
+        let agg = spmm_trusted(&a, &x, Semiring::Sum).unwrap();
+        for threads in [1usize, 3] {
+            // with bias
+            let mut want = Dense::zeros(50, 12);
+            agg.add_row_broadcast_into(&bias, &mut want).unwrap();
+            let mut want_relu = Dense::zeros(50, 12);
+            want.relu_into(&mut want_relu).unwrap();
+            let got = spmm_fused_relu(&a, &x, Some(&bias), threads).unwrap();
+            assert_eq!(got.data, want_relu.data, "threads={threads}");
+            // without bias
+            let mut want_plain = Dense::zeros(50, 12);
+            agg.relu_into(&mut want_plain).unwrap();
+            let got = spmm_fused_relu(&a, &x, None, threads).unwrap();
+            assert_eq!(got.data, want_plain.data, "threads={threads} (no bias)");
+        }
+    }
+
+    #[test]
+    fn fused_relu_applies_epilogue_to_empty_rows() {
+        // a graph with stored-zero rows: relu(0 + b) must land in them too
+        let mut coo = Coo::new(6, 6);
+        coo.push(0, 1, 1.0);
+        let a = coo.to_csr();
+        let mut rng = Rng::seed_from_u64(43);
+        let x = Dense::uniform(6, 4, 1.0, &mut rng);
+        let bias = vec![0.5, -0.5, 1.0, -1.0];
+        for threads in [1, 2] {
+            let y = spmm_fused_relu(&a, &x, Some(&bias), threads).unwrap();
+            for r in 1..6 {
+                assert_eq!(y.row(r), &[0.5, 0.0, 1.0, 0.0], "row {r} threads={threads}");
+            }
+        }
+        // fully empty graph: pure epilogue
+        let empty = Csr::empty(4, 4);
+        let y = spmm_fused_relu(&empty, &Dense::zeros(4, 4), Some(&bias), 3).unwrap();
+        for r in 0..4 {
+            assert_eq!(y.row(r), &[0.5, 0.0, 1.0, 0.0]);
+        }
+    }
+
+    #[test]
+    fn fused_relu_workspace_caches_partition_and_pools_buffers() {
+        use crate::kernels::KernelWorkspace;
+        let mut rng = Rng::seed_from_u64(44);
+        let a = random_graph(40, 4, 45);
+        let x = Dense::uniform(40, 8, 1.0, &mut rng).map(|v| v - 0.5);
+        let bias = vec![0.05; 8];
+        let plain = spmm_fused_relu(&a, &x, Some(&bias), 2).unwrap();
+        let ws = KernelWorkspace::new();
+        for round in 0..4 {
+            let y =
+                spmm_fused_relu_with_workspace(&a, &x, Some(&bias), 2, Some((&ws, 5))).unwrap();
+            assert_eq!(y.data, plain.data, "round {round}");
+            ws.recycle(y.data);
+        }
+        let stats = ws.stats();
+        assert_eq!(stats.partition_misses, 1, "{stats:?}");
+        assert_eq!(stats.partition_hits, 3, "{stats:?}");
+        assert!(stats.buffer_reuses >= 3, "{stats:?}");
+    }
+
+    #[test]
+    fn fused_relu_rejects_bad_shapes() {
+        let a = random_graph(5, 2, 46);
+        let x = Dense::zeros(5, 4);
+        // bias length must match K
+        assert!(spmm_fused_relu(&a, &x, Some(&[0.0; 3]), 1).is_err());
+        // A @ X shape mismatch
+        assert!(spmm_fused_relu(&a, &Dense::zeros(6, 4), None, 1).is_err());
+        // epilogue helper validates too
+        let mut y = Dense::zeros(5, 4);
+        assert!(fused_relu_epilogue(&mut y, Some(&[0.0; 2])).is_err());
+        assert!(fused_relu_epilogue(&mut y, Some(&[0.0; 4])).is_ok());
     }
 }

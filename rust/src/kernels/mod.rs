@@ -21,9 +21,12 @@
 //! The auto-tuner picks between the families per `(dataset, K, machine)`.
 //!
 //! Plus the two other primitives the paper names: [`sddmm`] (sampled
-//! dense-dense matmul) and [`fusedmm`] (the FusedMM SDDMM+SpMM fusion [8]),
-//! and the [`KernelWorkspace`] that amortises per-call fixed costs
-//! (partitioning, output allocation) across a training run.
+//! dense-dense matmul) and [`fusedmm`] (the FusedMM SDDMM+SpMM fusion [8])
+//! — extended here with [`spmm_fused_relu`], the FusedMM idiom applied to
+//! the GNN layer *epilogue* (SpMM + bias + ReLU in one pass, bitwise-equal
+//! to the unfused chain; the plan fusion pass's target) — and the
+//! [`KernelWorkspace`] that amortises per-call fixed costs (partitioning,
+//! output allocation) across a training run.
 //!
 //! All kernels are deterministic: parallelism partitions output rows, never
 //! reduction order within a row.
@@ -41,7 +44,9 @@ mod trusted;
 mod workspace;
 
 pub use dense_ref::spmm_dense_ref;
-pub use fusedmm::{fusedmm, EdgeOp};
+pub use fusedmm::{
+    fused_relu_epilogue, fusedmm, spmm_fused_relu, spmm_fused_relu_with_workspace, EdgeOp,
+};
 pub use generated::{spmm_generated, spmm_generated_parallel, GENERATED_KBS};
 pub use partition::{nnz_balanced_partition, split_rows_mut, RowRange};
 pub use sddmm::sddmm;

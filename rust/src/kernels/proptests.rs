@@ -7,8 +7,9 @@
 
 use crate::dense::Dense;
 use crate::kernels::{
-    fusedmm, nnz_balanced_partition, sddmm, spmm, spmm_dense_ref, spmm_with_workspace, EdgeOp,
-    KernelChoice, KernelWorkspace, Semiring, GENERATED_KBS, SELL_SLICE_HEIGHTS, TILED_KTS,
+    fusedmm, nnz_balanced_partition, sddmm, spmm, spmm_dense_ref, spmm_fused_relu,
+    spmm_fused_relu_with_workspace, spmm_with_workspace, EdgeOp, KernelChoice, KernelWorkspace,
+    Semiring, GENERATED_KBS, SELL_SLICE_HEIGHTS, TILED_KTS,
 };
 use crate::sparse::{Coo, Csr, Sell, SortedCsr};
 use crate::util::check::forall;
@@ -206,6 +207,57 @@ fn prop_fusion_equivalence() {
         let unfused = spmm_dense_ref(&s, &x, Semiring::Sum).unwrap();
         let fused = fusedmm(&a, &x, Some(&u), Some(&v), EdgeOp::Dot, 1).unwrap();
         assert!(fused.allclose(&unfused, 1e-2));
+    });
+}
+
+#[test]
+fn prop_fused_relu_bitwise_across_families() {
+    // The plan fusion pass's load-bearing invariant: the fused
+    // SpMM+bias+ReLU kernel is bitwise-equal to spmm → bias-broadcast →
+    // relu no matter WHICH kernel family or sparse format the unfused SpMM
+    // routes through (they all accumulate each element in non-zero-stream
+    // order), serial and pooled, with and without a bias.
+    forall("spmm_fused_relu == any-family spmm → bias → relu", 40, |rng| {
+        let rows = 1 + rng.gen_range(30);
+        let a = arb_csr(rng, rows, rows.max(2));
+        let kb = GENERATED_KBS[rng.gen_range(2)]; // 4 or 8: keep K small
+        let k = kb * (1 + rng.gen_range(3));
+        let x = arb_dense(rng, rows.max(2), k);
+        let bias: Vec<f32> = (0..k).map(|_| rng.gen_range_f32(-1.0, 1.0)).collect();
+        let bias = if rng.gen_range(3) == 0 { None } else { Some(bias) };
+        let threads = 1 + rng.gen_range(4);
+        let c = SELL_SLICE_HEIGHTS[rng.gen_range(SELL_SLICE_HEIGHTS.len())];
+        let choices = [
+            KernelChoice::Trusted,
+            KernelChoice::Generated { kb },
+            KernelChoice::Tiled { kt: TILED_KTS[rng.gen_range(TILED_KTS.len())] },
+            KernelChoice::Sell { c, sigma: 1 + rng.gen_range(2 * rows + 4) },
+            KernelChoice::SortedCsr,
+        ];
+        let ws = KernelWorkspace::new();
+        let fused = spmm_fused_relu(&a, &x, bias.as_deref(), threads).unwrap();
+        let pooled_fused =
+            spmm_fused_relu_with_workspace(&a, &x, bias.as_deref(), threads, Some((&ws, 9)))
+                .unwrap();
+        assert_eq!(pooled_fused.data, fused.data, "pooled fused != plain fused");
+        ws.recycle(pooled_fused.data);
+        for choice in choices {
+            let agg = spmm(&a, &x, Semiring::Sum, choice, threads).unwrap();
+            let mut unfused = Dense::zeros(agg.rows, agg.cols);
+            match &bias {
+                Some(b) => {
+                    let mut biased = Dense::zeros(agg.rows, agg.cols);
+                    agg.add_row_broadcast_into(b, &mut biased).unwrap();
+                    biased.relu_into(&mut unfused).unwrap();
+                }
+                None => agg.relu_into(&mut unfused).unwrap(),
+            }
+            assert_eq!(
+                fused.data, unfused.data,
+                "fused != unfused via {choice:?} (k={k} threads={threads} bias={})",
+                bias.is_some()
+            );
+        }
     });
 }
 

@@ -7,10 +7,11 @@
 //!
 //! * **L3 (this crate)** — the coordinator: sparse substrate, the
 //!   trusted/generated kernel families, the auto-tuner, the backprop cache,
-//!   a reverse-mode autodiff tape, the GNN zoo, the trainer, dataset
-//!   generators, the batched multi-graph inference server ([`serve`]), and
-//!   the experiment harness that regenerates every table and figure of the
-//!   paper.
+//!   a reverse-mode autodiff tape, the GNN zoo, the shared ExecutionPlan IR
+//!   ([`plan`]) that training and serving both execute, the trainer,
+//!   dataset generators, the batched multi-graph inference server
+//!   ([`serve`]), and the experiment harness that regenerates every table
+//!   and figure of the paper.
 //! * **L2 (python/compile)** — JAX models (GCN/SAGE/GIN) AOT-lowered to HLO
 //!   text, loaded and executed from Rust through [`runtime`] (PJRT).
 //! * **L1 (python/compile/kernels)** — Pallas SpMM/SDDMM/FusedMM kernels
@@ -41,6 +42,7 @@ pub mod dense;
 pub mod error;
 pub mod gnn;
 pub mod kernels;
+pub mod plan;
 pub mod runtime;
 pub mod serve;
 pub mod sparse;
@@ -59,6 +61,7 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::gnn::GnnModel;
     pub use crate::kernels::{spmm, EdgeOp, KernelChoice, KernelWorkspace, Semiring};
+    pub use crate::plan::ExecutionPlan;
     pub use crate::serve::{InferenceServer, ServeConfig, SessionId};
     pub use crate::sparse::{Coo, Csc, Csr, NormKind};
     pub use crate::train::{Backend, TrainConfig, TrainReport, Trainer};

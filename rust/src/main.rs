@@ -46,7 +46,8 @@ COMMANDS:
              untouched, and emits BENCH_serving.json.
              [--datasets ogbn-protein,reddit] [--models gcn,sage-sum]
              [--requests 24] [--skew 4] [--max-batch 8] [--quantum 4]
-             [--max-wait-ms 5] [--threads 2] [--epochs 3] [--hidden 16]
+             [--max-wait-ms 5] [--threads 2] [--session-threads 0]
+             [--epochs 3] [--hidden 16]
              [--scale 2048] [--out BENCH_serving.json] [--json]
 
 Models:     gcn | sage-sum | sage-mean | gin
@@ -223,6 +224,9 @@ fn serve_bench(args: &Args) -> Result<()> {
         max_batch: args.get_parse("max-batch", 8usize)?,
         quantum: args.get_parse("quantum", 4usize)?,
         threads: args.get_parse("threads", 2usize)?,
+        // per-session kernel budget (0 inherits --threads); 1 pins every
+        // session inline, off the shared pool
+        session_threads: args.get_parse("session-threads", 0usize)?,
         // arrival-driven batching deadline: the bench drains through
         // run_ready, so underfull tail batches are held until this expires
         max_wait: std::time::Duration::from_millis(args.get_parse("max-wait-ms", 5u64)?),
@@ -271,8 +275,15 @@ fn serve_bench(args: &Args) -> Result<()> {
     for (ds, model, _) in &trained {
         let dims = ModelParams { in_dim: ds.feature_dim(), hidden, classes: ds.num_classes };
         let a = model.norm_kind().apply(&ds.adj)?;
-        for k in model.serving_spmm_widths(dims, cfg.max_batch) {
+        // tune exactly the widths the lowered plan will run SpMM at —
+        // per-request and coalesced — plus the fused-epilogue family at
+        // every fusable width, so sessions can warm-start fusion decisions
+        let plan = model.lower(dims, model.norm_kind());
+        for k in plan.spmm_shapes_batched(cfg.max_batch) {
             tuner.tune(&ds.name, &a, k, registry, &mut db)?;
+        }
+        for k in plan.fusable_spmm_widths() {
+            tuner.tune_fused_relu(&ds.name, &a, k, &mut db)?;
         }
     }
 
@@ -368,14 +379,14 @@ fn serve_bench(args: &Args) -> Result<()> {
         let m = server.metrics(sid)?;
         let (p50_ns, p99_ns) = m.latency_percentiles();
         let kernels: Vec<String> = s
-            .model
-            .spmm_widths(s.dims)
+            .plan()
+            .spmm_shapes()
             .into_iter()
             .map(|k| format!("K{k}:{}", registry.resolve(&s.name, k, Semiring::Sum).label()))
             .collect();
         println!(
             "  {:<16} model={:<9} nodes={:<6} requests={:<4} batches={:<3} occupancy={:.2} \
-             p50={:.1}µs p99={:.1}µs warm={} kernels=[{}]",
+             p50={:.1}µs p99={:.1}µs warm={} fused_ops={} kernels=[{}]",
             s.name,
             s.model.name(),
             s.nodes(),
@@ -385,6 +396,7 @@ fn serve_bench(args: &Args) -> Result<()> {
             p50_ns / 1e3,
             p99_ns / 1e3,
             s.warm_started,
+            s.fused_ops(),
             kernels.join(" ")
         );
         sessions_json.push(Json::obj(vec![
@@ -395,6 +407,7 @@ fn serve_bench(args: &Args) -> Result<()> {
             ("offered", Json::num(offered[i] as f64)),
             ("warm_started", Json::num(s.warm_started as f64)),
             ("preconverted_formats", Json::num(s.preconverted as f64)),
+            ("fused_ops", Json::num(s.fused_ops() as f64)),
             ("kernels", Json::Arr(kernels.iter().map(|k| Json::str(k)).collect())),
             ("metrics", m.to_json()),
         ]));
@@ -420,6 +433,7 @@ fn serve_bench(args: &Args) -> Result<()> {
                 ("quantum", Json::num(cfg.quantum as f64)),
                 ("max_wait_ms", Json::num(cfg.max_wait.as_secs_f64() * 1e3)),
                 ("threads", Json::num(cfg.threads as f64)),
+                ("session_threads", Json::num(cfg.session_threads as f64)),
                 ("scale", Json::num(scale as f64)),
                 ("hidden", Json::num(hidden as f64)),
             ]),

@@ -1,0 +1,529 @@
+//! The two plan executors: tape-recording training and tape-free batched
+//! inference — one op list, two interpreters.
+
+use std::collections::BTreeMap;
+
+use crate::autodiff::{SpmmImpl, SpmmOperand, Tape, Var};
+use crate::autotune::KernelRegistry;
+use crate::dense::{concat_cols_into, split_cols_into, Dense};
+use crate::error::{Error, Result};
+use crate::gnn::ParamSet;
+use crate::kernels::{
+    fused_relu_epilogue, spmm_fused_relu_with_workspace, spmm_with_workspace, KernelWorkspace,
+    Semiring,
+};
+
+use super::ir::{ExecutionPlan, Op, ValueId, INPUT_VALUE};
+
+/// Record the plan's forward pass onto `tape`; returns the logits node.
+///
+/// `x` is the feature-matrix node and `vars` maps parameter names to their
+/// tape handles (the trainer inserts every parameter at the start of each
+/// step). This is the training executor: every op lands as a tape node, so
+/// [`Tape::backward`] sees exactly the structure the plan describes —
+/// including the fused op, whose backward is bitwise-equal to the unfused
+/// chain's.
+pub fn execute_taped(
+    plan: &ExecutionPlan,
+    tape: &mut Tape,
+    operand: &SpmmOperand,
+    x: Var,
+    vars: &BTreeMap<String, Var>,
+) -> Result<Var> {
+    let get = |name: &str| -> Result<Var> {
+        vars.get(name).copied().ok_or_else(|| Error::UnknownName(format!("param var '{name}'")))
+    };
+    let mut vals: Vec<Var> = Vec::with_capacity(plan.num_values());
+    vals.push(x);
+    for op in plan.ops() {
+        let var = match op {
+            Op::Spmm { x } => tape.spmm(operand, vals[*x])?,
+            Op::MatMul { x, w } => tape.matmul(vals[*x], get(w)?)?,
+            Op::BiasAdd { x, b } => tape.add_bias(vals[*x], get(b)?)?,
+            Op::Relu { x } => tape.relu(vals[*x])?,
+            Op::Add { a, b } => tape.add(vals[*a], vals[*b])?,
+            Op::SpmmFusedRelu { x, bias } => {
+                let bias = match bias {
+                    Some(name) => Some(get(name)?),
+                    None => None,
+                };
+                tape.spmm_fused_relu(operand, vals[*x], bias)?
+            }
+        };
+        vals.push(var);
+    }
+    Ok(vals[plan.output()])
+}
+
+/// Scratch allocator over the operand's (optional) shared workspace: every
+/// intermediate is drawn from and retired into the pool, so a warm
+/// execution allocates (almost) nothing. Final outputs are allocated
+/// outside the pool — they leave with the caller.
+struct Scratch<'a> {
+    ws: Option<&'a KernelWorkspace>,
+}
+
+impl Scratch<'_> {
+    fn alloc(&self, rows: usize, cols: usize) -> Dense {
+        match self.ws {
+            Some(ws) => ws.take_dense(rows, cols),
+            None => Dense::zeros(rows, cols),
+        }
+    }
+
+    fn free(&self, d: Dense) {
+        if let Some(ws) = self.ws {
+            ws.recycle(d.data);
+        }
+    }
+
+    fn free_all(&self, v: Vec<Dense>) {
+        for d in v {
+            self.free(d);
+        }
+    }
+}
+
+/// One SpMM under the operand's strategy — kernel calls route through the
+/// registry per `(context, K)` exactly as the training tape does, with
+/// workspace-cached partitions and pooled outputs.
+fn spmm_call(operand: &SpmmOperand, x: &Dense, threads: usize) -> Result<Dense> {
+    match operand.impl_kind {
+        SpmmImpl::Kernel => {
+            let choice = KernelRegistry::global().resolve(&operand.context, x.cols, Semiring::Sum);
+            let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_id));
+            spmm_with_workspace(&operand.a, x, Semiring::Sum, choice, threads, ws)
+        }
+        SpmmImpl::EdgeWise => operand.edgewise_forward(x),
+        SpmmImpl::Dense => operand.dense.as_ref().expect("dense operand").matmul(x),
+    }
+}
+
+/// One fused SpMM+bias+ReLU under the operand's strategy (baseline
+/// strategies aggregate their usual way, then apply the epilogue — same
+/// numerics, unfused loops).
+fn fused_call(
+    operand: &SpmmOperand,
+    x: &Dense,
+    bias: Option<&[f32]>,
+    threads: usize,
+) -> Result<Dense> {
+    match operand.impl_kind {
+        SpmmImpl::Kernel => {
+            let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_id));
+            spmm_fused_relu_with_workspace(&operand.a, x, bias, threads, ws)
+        }
+        _ => {
+            let mut y = spmm_call(operand, x, threads)?;
+            fused_relu_epilogue(&mut y, bias)?;
+            Ok(y)
+        }
+    }
+}
+
+/// Aggregate every request's panel in **one** kernel call (the micro-batch
+/// coalescing), then split the result back per request. A batch of one
+/// skips the pack/unpack entirely. `bias`, when present, is tiled across
+/// the coalesced panel (into a pooled scratch row, not a fresh allocation)
+/// so the fused epilogue applies each request's identical bias —
+/// bitwise-equal to per-request execution because every output element is
+/// produced by the same scalar ops either way. With `owned` the results
+/// land in caller-owned (unpooled) buffers — the plan-output case.
+fn aggregate_many(
+    operand: &SpmmOperand,
+    xs: &[&Dense],
+    fused_bias: Option<Option<&[f32]>>,
+    threads: usize,
+    scratch: &Scratch<'_>,
+    owned: bool,
+) -> Result<Vec<Dense>> {
+    let one = |x: &Dense| match fused_bias {
+        Some(bias) => fused_call(operand, x, bias, threads),
+        None => spmm_call(operand, x, threads),
+    };
+    if xs.len() == 1 {
+        let y = one(xs[0])?;
+        if owned {
+            // one copy into a caller-owned buffer; the pooled original
+            // goes back to the pool
+            let out = y.clone();
+            scratch.free(y);
+            return Ok(vec![out]);
+        }
+        return Ok(vec![y]);
+    }
+    let rows = xs[0].rows;
+    let total: usize = xs.iter().map(|x| x.cols).sum();
+    let mut packed = scratch.alloc(rows, total);
+    concat_cols_into(xs, &mut packed)?;
+    let y = match fused_bias {
+        None => spmm_call(operand, &packed, threads)?,
+        Some(None) => fused_call(operand, &packed, None, threads)?,
+        Some(Some(bias)) => {
+            let mut tiled = scratch.alloc(1, total);
+            for chunk in tiled.data.chunks_mut(bias.len()) {
+                chunk.copy_from_slice(bias);
+            }
+            let out = fused_call(operand, &packed, Some(&tiled.data), threads)?;
+            scratch.free(tiled);
+            out
+        }
+    };
+    scratch.free(packed);
+    // per-request slices split straight into pooled buffers (or
+    // caller-owned ones for the plan output — no intermediate copy)
+    let mut outs: Vec<Dense> = xs
+        .iter()
+        .map(|x| {
+            if owned {
+                Dense::zeros(rows, x.cols)
+            } else {
+                scratch.alloc(rows, x.cols)
+            }
+        })
+        .collect();
+    split_cols_into(&y, &mut outs)?;
+    scratch.free(y);
+    Ok(outs)
+}
+
+/// Execute the plan tape-free for `m` same-graph requests: one logits
+/// matrix per request, in request order. This is the inference executor
+/// behind [`crate::serve`]:
+///
+/// * **Explicit thread budget** — `threads` caps the kernel parallelism of
+///   every op in this execution (serving passes the per-session budget; 1
+///   runs fully inline on the calling thread, touching no pool worker).
+/// * **Coalesced aggregation** — at every SpMM point the per-request
+///   panels are column-concatenated and aggregated in one kernel call;
+///   dense projections/bias/activation stay per-request. Bitwise-equal to
+///   per-request execution (asserted in tests and by `serve-bench`).
+/// * **No tape, no gradients, no `BackpropCache`** — a serving run leaves
+///   `CacheStats` untouched.
+/// * **Pooled intermediates** — buffers are drawn from the operand's
+///   shared workspace and retired at each value's precomputed last use,
+///   so a warm execution cycles through at most
+///   [`ExecutionPlan::num_slots`] buffers per request.
+pub fn execute_inference(
+    plan: &ExecutionPlan,
+    operand: &SpmmOperand,
+    params: &ParamSet,
+    xs: &[&Dense],
+    threads: usize,
+) -> Result<Vec<Dense>> {
+    if xs.is_empty() {
+        return Ok(Vec::new());
+    }
+    let n = operand.a.rows;
+    for x in xs {
+        if x.rows != n || x.cols != plan.in_dim() {
+            return Err(Error::ShapeMismatch(format!(
+                "execute_inference: expected {}x{} features, got {}x{}",
+                n,
+                plan.in_dim(),
+                x.rows,
+                x.cols
+            )));
+        }
+    }
+    let scratch = Scratch { ws: operand.workspace.as_deref() };
+    let b = xs.len();
+    let mut vals: Vec<Option<Vec<Dense>>> = (0..plan.num_values()).map(|_| None).collect();
+    // The plan's slot assignment, realised: when a value dies, its buffers
+    // park under the value's precomputed slot; the next same-slot (same
+    // width, disjoint lifetime — guaranteed by the linear scan) value
+    // takes them over directly, with no pool round-trip. The dense `_into`
+    // ops overwrite their output completely, so dirty reuse is safe;
+    // kernel outputs instead recycle the parked buffers into the pool the
+    // dispatch draws zeroed buffers from. At the end everything parked
+    // returns to the shared pool for the next execution.
+    let mut slots: Vec<Option<Vec<Dense>>> = (0..plan.num_slots()).map(|_| None).collect();
+
+    for (i, op) in plan.ops().iter().enumerate() {
+        let out_id = i + 1;
+        let is_output = out_id == plan.output();
+        let out_slot = plan.slot_of(out_id);
+        let outs: Vec<Dense> = match op {
+            Op::Spmm { x } | Op::SpmmFusedRelu { x, .. } => {
+                let fused_bias = match op {
+                    Op::SpmmFusedRelu { bias, .. } => Some(match bias {
+                        Some(name) => Some(&params.get(name)?.data[..]),
+                        None => None,
+                    }),
+                    _ => None,
+                };
+                // the kernel dispatch needs zeroed buffers from the pool —
+                // feed it this slot's parked buffers via a recycle
+                scratch.free_all(take_slot(&mut slots, out_slot));
+                let srcs = value_refs(&vals, xs, *x);
+                aggregate_many(operand, &srcs, fused_bias, threads, &scratch, is_output)?
+            }
+            Op::MatMul { x, w } => {
+                let w = params.get(w)?;
+                let mut reuse = take_slot(&mut slots, out_slot);
+                let srcs = value_refs(&vals, xs, *x);
+                let mut outs = Vec::with_capacity(srcs.len());
+                for src in srcs {
+                    let mut out =
+                        next_buf(&mut reuse, &scratch, is_output, src.rows, w.cols);
+                    src.matmul_into(w, &mut out)?;
+                    outs.push(out);
+                }
+                scratch.free_all(reuse);
+                outs
+            }
+            Op::BiasAdd { x, b: bias } => {
+                let bias = params.get(bias)?;
+                let mut reuse = take_slot(&mut slots, out_slot);
+                let srcs = value_refs(&vals, xs, *x);
+                let mut outs = Vec::with_capacity(srcs.len());
+                for src in srcs {
+                    let mut out =
+                        next_buf(&mut reuse, &scratch, is_output, src.rows, src.cols);
+                    src.add_row_broadcast_into(&bias.data, &mut out)?;
+                    outs.push(out);
+                }
+                scratch.free_all(reuse);
+                outs
+            }
+            Op::Relu { x } => {
+                let mut reuse = take_slot(&mut slots, out_slot);
+                let srcs = value_refs(&vals, xs, *x);
+                let mut outs = Vec::with_capacity(srcs.len());
+                for src in srcs {
+                    let mut out =
+                        next_buf(&mut reuse, &scratch, is_output, src.rows, src.cols);
+                    src.relu_into(&mut out)?;
+                    outs.push(out);
+                }
+                scratch.free_all(reuse);
+                outs
+            }
+            Op::Add { a, b: rhs } => {
+                let mut reuse = take_slot(&mut slots, out_slot);
+                let lhs = value_refs(&vals, xs, *a);
+                let rhs = value_refs(&vals, xs, *rhs);
+                let mut outs = Vec::with_capacity(lhs.len());
+                for (l, r) in lhs.iter().zip(rhs.iter()) {
+                    let mut out = next_buf(&mut reuse, &scratch, is_output, l.rows, l.cols);
+                    l.add_into(r, &mut out)?;
+                    outs.push(out);
+                }
+                scratch.free_all(reuse);
+                outs
+            }
+        };
+        debug_assert_eq!(outs.len(), b);
+        vals[out_id] = Some(outs);
+
+        // retire every value whose last use this instruction was: its
+        // buffers park under its slot for the next same-slot value
+        for v in op.operands() {
+            if v != INPUT_VALUE && plan.last_use(v) == i {
+                if let Some(bufs) = vals[v].take() {
+                    park(&mut slots, &scratch, plan.slot_of(v), bufs);
+                }
+            }
+        }
+        if !is_output && plan.last_use(out_id) == i {
+            // dead code (never produced by lowering, possible in synthetic
+            // plans): retire immediately
+            if let Some(bufs) = vals[out_id].take() {
+                park(&mut slots, &scratch, out_slot, bufs);
+            }
+        }
+    }
+
+    let out = vals[plan.output()].take().expect("plan output computed");
+    // parked buffers feed the next execution through the shared pool
+    for bufs in slots.into_iter().flatten() {
+        scratch.free_all(bufs);
+    }
+    Ok(out)
+}
+
+/// Per-request read access to a value: the borrowed input panels for
+/// [`INPUT_VALUE`], the computed buffers otherwise.
+fn value_refs<'a>(
+    vals: &'a [Option<Vec<Dense>>],
+    xs: &'a [&Dense],
+    v: ValueId,
+) -> Vec<&'a Dense> {
+    if v == INPUT_VALUE {
+        xs.to_vec()
+    } else {
+        vals[v].as_ref().expect("plan executes in SSA order").iter().collect()
+    }
+}
+
+/// Take the buffers parked under a slot (empty when the slot has no dead
+/// predecessor yet, or for the unslotted input/output values).
+fn take_slot(slots: &mut [Option<Vec<Dense>>], slot: Option<usize>) -> Vec<Dense> {
+    slot.and_then(|s| slots[s].take()).unwrap_or_default()
+}
+
+/// Park a dead value's buffers under its slot; anything unslotted (or a
+/// somehow-occupied slot, which the linear-scan invariant rules out) goes
+/// back to the pool instead.
+fn park(
+    slots: &mut [Option<Vec<Dense>>],
+    scratch: &Scratch<'_>,
+    slot: Option<usize>,
+    bufs: Vec<Dense>,
+) {
+    match slot {
+        Some(s) if slots[s].is_none() => slots[s] = Some(bufs),
+        _ => scratch.free_all(bufs),
+    }
+}
+
+/// The next output buffer for a dense op: a parked same-slot buffer
+/// (dirty — the `_into` ops overwrite completely), else pooled, else (for
+/// the plan output) caller-owned.
+fn next_buf(
+    reuse: &mut Vec<Dense>,
+    scratch: &Scratch<'_>,
+    is_output: bool,
+    rows: usize,
+    cols: usize,
+) -> Dense {
+    if let Some(buf) = reuse.pop() {
+        debug_assert_eq!((buf.rows, buf.cols), (rows, cols));
+        return buf;
+    }
+    if is_output {
+        Dense::zeros(rows, cols)
+    } else {
+        scratch.alloc(rows, cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::karate_club;
+    use crate::gnn::{GnnModel, ModelParams};
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn setup(model: GnnModel) -> (ExecutionPlan, SpmmOperand, ParamSet, usize) {
+        let ds = karate_club();
+        let dims = ModelParams { in_dim: ds.feature_dim(), hidden: 8, classes: ds.num_classes };
+        let plan = model.lower(dims, model.norm_kind());
+        let params = model.init_params(dims, 7);
+        let a = model.norm_kind().apply(&ds.adj).unwrap();
+        let n = a.rows;
+        let ws = Arc::new(KernelWorkspace::new());
+        let operand = SpmmOperand::uncached(a, "plan-exec-test")
+            .with_workspace(ws, crate::autodiff::context_graph_id("plan-exec-test"));
+        (plan, operand, params, n)
+    }
+
+    #[test]
+    fn taped_and_inference_agree_bitwise() {
+        for model in GnnModel::ALL {
+            let (plan, operand, params, n) = setup(model);
+            let mut rng = Rng::seed_from_u64(51);
+            let x = Dense::uniform(n, plan.in_dim(), 1.0, &mut rng);
+            let inf = execute_inference(&plan, &operand, &params, &[&x], 1).unwrap();
+            let mut tape = Tape::new(1);
+            let xv = tape.input(x.clone());
+            let mut vars = BTreeMap::new();
+            for (name, value) in params.iter() {
+                vars.insert(name.clone(), tape.input(value.clone()));
+            }
+            let logits = execute_taped(&plan, &mut tape, &operand, xv, &vars).unwrap();
+            assert_eq!(inf[0].data, tape.value(logits).data, "{model:?}");
+            assert_eq!(inf[0].rows, n, "{model:?}");
+            assert_eq!(inf[0].cols, plan.dims().classes, "{model:?}");
+        }
+    }
+
+    #[test]
+    fn batched_inference_is_bitwise_equal_to_solo() {
+        for model in GnnModel::ALL {
+            let (plan, operand, params, n) = setup(model);
+            let mut rng = Rng::seed_from_u64(52);
+            let xs: Vec<Dense> =
+                (0..5).map(|_| Dense::uniform(n, plan.in_dim(), 1.0, &mut rng)).collect();
+            let refs: Vec<&Dense> = xs.iter().collect();
+            let batched = execute_inference(&plan, &operand, &params, &refs, 2).unwrap();
+            assert_eq!(batched.len(), 5, "{model:?}");
+            for (x, got) in xs.iter().zip(&batched) {
+                let solo = execute_inference(&plan, &operand, &params, &[x], 2).unwrap();
+                assert_eq!(solo[0].data, got.data, "{model:?}: batched diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_plan_inference_is_bitwise_equal_to_unfused() {
+        let (plan, operand, params, n) = setup(GnnModel::Gcn);
+        let fused = plan.fuse_spmm_relu(|_| true);
+        assert_eq!(fused.fused_op_count(), 1);
+        let mut rng = Rng::seed_from_u64(53);
+        let xs: Vec<Dense> =
+            (0..3).map(|_| Dense::uniform(n, plan.in_dim(), 1.0, &mut rng)).collect();
+        let refs: Vec<&Dense> = xs.iter().collect();
+        for threads in [1usize, 3] {
+            let want = execute_inference(&plan, &operand, &params, &refs, threads).unwrap();
+            let got = execute_inference(&fused, &operand, &params, &refs, threads).unwrap();
+            for (w, g) in want.iter().zip(&got) {
+                assert_eq!(w.data, g.data, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let (plan, operand, params, _) = setup(GnnModel::Gcn);
+        assert!(execute_inference(&plan, &operand, &params, &[], 1).unwrap().is_empty());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let (plan, operand, params, n) = setup(GnnModel::Gcn);
+        let wrong_cols = Dense::zeros(n, plan.in_dim() + 1);
+        assert!(execute_inference(&plan, &operand, &params, &[&wrong_cols], 1).is_err());
+        let wrong_rows = Dense::zeros(n + 1, plan.in_dim());
+        assert!(execute_inference(&plan, &operand, &params, &[&wrong_rows], 1).is_err());
+    }
+
+    #[test]
+    fn missing_param_errors() {
+        let (plan, operand, _, n) = setup(GnnModel::Gcn);
+        let empty = ParamSet::new();
+        let x = Dense::zeros(n, plan.in_dim());
+        assert!(execute_inference(&plan, &operand, &empty, &[&x], 1).is_err());
+        // taped executor surfaces the same error for a missing var
+        let mut tape = Tape::new(1);
+        let xv = tape.input(x);
+        let vars = BTreeMap::new();
+        assert!(execute_taped(&plan, &mut tape, &operand, xv, &vars).is_err());
+    }
+
+    #[test]
+    fn warm_execution_reuses_workspace_buffers() {
+        let (plan, operand, params, n) = setup(GnnModel::Gcn);
+        let ws = Arc::clone(operand.workspace.as_ref().unwrap());
+        let mut rng = Rng::seed_from_u64(54);
+        let xs: Vec<Dense> =
+            (0..3).map(|_| Dense::uniform(n, plan.in_dim(), 1.0, &mut rng)).collect();
+        let refs: Vec<&Dense> = xs.iter().collect();
+        let first = execute_inference(&plan, &operand, &params, &refs, 2).unwrap();
+        let allocs_after_first = ws.stats().buffer_allocs;
+        let second = execute_inference(&plan, &operand, &params, &refs, 2).unwrap();
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.data, b.data);
+        }
+        let stats = ws.stats();
+        // the second batch runs on retired-at-last-use buffers — the
+        // precomputed lifetimes keep the pool population at the slot bound
+        assert!(stats.buffer_reuses > 0, "{stats:?}");
+        assert!(
+            stats.buffer_allocs <= allocs_after_first + 2,
+            "second batch re-allocated: {stats:?}"
+        );
+        assert!(stats.partition_hits > 0, "{stats:?}");
+    }
+}

@@ -1,0 +1,234 @@
+//! The `Spmm→Relu` fusion pass.
+//!
+//! Rewrites single-consumer chains
+//!
+//! * `v = Spmm(x); y = Relu(v)`            → `y = SpmmFusedRelu(x)`
+//! * `v = Spmm(x); w = BiasAdd(v, b); y = Relu(w)`
+//!                                         → `y = SpmmFusedRelu(x, bias=b)`
+//!
+//! into the FusedMM-backed fused op, eliminating one (or two) full passes
+//! over the `n × K` activation per rewritten layer. The rewrite is sound
+//! only when the intermediate values have **no other consumer** — the pass
+//! checks use counts (the plan output counts as a use) and leaves shared
+//! values alone.
+//!
+//! Bitwise invariant: the fused kernel performs exactly the unfused
+//! chain's per-element operations in the same order (see
+//! [`spmm_fused_relu`](crate::kernels::spmm_fused_relu)), so a fused plan
+//! is bitwise-equal to its unfused source for every kernel family and
+//! sparse format — equality by construction, property-tested in
+//! `tests/plan_integration.rs`.
+//!
+//! Whether to rewrite an edge is a *tuning* decision: callers pass a
+//! per-SpMM-width `profitable` predicate, normally backed by the
+//! [`TuningDb`](crate::autotune::TuningDb)'s measured `fuse_relu` entries
+//! ([`TuningDb::fused_relu_profitable`](crate::autotune::TuningDb::fused_relu_profitable)),
+//! so fusion only happens where the fused kernel actually measured faster
+//! on this graph and machine.
+
+use super::ir::{ExecutionPlan, Op, ValueId, INPUT_VALUE};
+
+#[derive(Clone)]
+enum Action {
+    Keep,
+    Drop,
+    Fused { x: ValueId, bias: Option<String> },
+}
+
+impl ExecutionPlan {
+    /// Rewrite fusable `Spmm→[BiasAdd→]Relu` chains whose SpMM width `k`
+    /// satisfies `profitable(k)` into [`Op::SpmmFusedRelu`]; returns the
+    /// rewritten plan (lifetimes and slots recomputed). A plan with no
+    /// fusable or profitable edges is returned structurally unchanged.
+    pub fn fuse_spmm_relu(&self, profitable: impl Fn(usize) -> bool) -> ExecutionPlan {
+        let ops = self.ops();
+        let cols = self.cols_slice();
+        let nvals = self.num_values();
+
+        let mut uses = vec![0usize; nvals];
+        for op in ops {
+            for v in op.operands() {
+                uses[v] += 1;
+            }
+        }
+        // the logits leave the plan: that is a use
+        uses[self.output()] += 1;
+        // for single-use values, the index of their one consuming instr
+        let mut consumer = vec![usize::MAX; nvals];
+        for (i, op) in ops.iter().enumerate() {
+            for v in op.operands() {
+                consumer[v] = i;
+            }
+        }
+
+        let mut actions: Vec<Action> = vec![Action::Keep; ops.len()];
+        for (i, op) in ops.iter().enumerate() {
+            let Op::Spmm { x } = op else { continue };
+            let vi = i + 1;
+            if uses[vi] != 1 || !profitable(cols[*x]) {
+                continue;
+            }
+            let j = consumer[vi];
+            if j == usize::MAX {
+                continue; // the spmm value IS the output
+            }
+            match &ops[j] {
+                Op::Relu { .. } => {
+                    actions[i] = Action::Drop;
+                    actions[j] = Action::Fused { x: *x, bias: None };
+                }
+                Op::BiasAdd { b, .. } => {
+                    let vj = j + 1;
+                    if uses[vj] != 1 {
+                        continue;
+                    }
+                    let l = consumer[vj];
+                    if l != usize::MAX && matches!(ops[l], Op::Relu { .. }) {
+                        actions[i] = Action::Drop;
+                        actions[j] = Action::Drop;
+                        actions[l] = Action::Fused { x: *x, bias: Some(b.clone()) };
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // rebuild, remapping value ids across the dropped instructions
+        let mut builder = self.rebuilder();
+        let mut remap: Vec<ValueId> = vec![usize::MAX; nvals];
+        remap[INPUT_VALUE] = INPUT_VALUE;
+        for (i, op) in ops.iter().enumerate() {
+            let old_out = i + 1;
+            let new = match (&actions[i], op) {
+                (Action::Drop, _) => continue,
+                (Action::Fused { x, bias }, _) => builder.spmm_fused_relu(remap[*x], bias.clone()),
+                (Action::Keep, Op::Spmm { x }) => builder.spmm(remap[*x]),
+                (Action::Keep, Op::MatMul { x, w }) => builder.matmul(remap[*x], w, cols[old_out]),
+                (Action::Keep, Op::BiasAdd { x, b }) => builder.bias_add(remap[*x], b),
+                (Action::Keep, Op::Relu { x }) => builder.relu(remap[*x]),
+                (Action::Keep, Op::Add { a, b }) => builder.add(remap[*a], remap[*b]),
+                (Action::Keep, Op::SpmmFusedRelu { x, bias }) => {
+                    builder.spmm_fused_relu(remap[*x], bias.clone())
+                }
+            }
+            .expect("fusion rewrite preserves plan validity");
+            remap[old_out] = new;
+        }
+        builder.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ir::{PlanBuilder, INPUT_VALUE};
+    use super::*;
+    use crate::gnn::{GnnModel, ModelParams};
+    use crate::sparse::NormKind;
+
+    fn dims() -> ModelParams {
+        ModelParams { in_dim: 50, hidden: 16, classes: 3 }
+    }
+
+    #[test]
+    fn gcn_layer0_chain_fuses_and_layer1_does_not() {
+        let plan = GnnModel::Gcn.lower(dims(), NormKind::GcnSym);
+        let fused = plan.fuse_spmm_relu(|_| true);
+        // layer 0's spmm → bias_add → relu collapses into one op; layer
+        // 1's spmm → bias_add (no relu) stays
+        assert_eq!(fused.fused_op_count(), 1);
+        assert_eq!(fused.ops().len(), plan.ops().len() - 2);
+        let f = fused
+            .ops()
+            .iter()
+            .find_map(|op| match op {
+                Op::SpmmFusedRelu { bias, .. } => Some(bias.clone()),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(f.as_deref(), Some("b0"), "the layer-0 bias folds into the epilogue");
+        // the tuner's width view is unchanged by fusion
+        assert_eq!(fused.spmm_shapes(), plan.spmm_shapes());
+        assert_eq!(plan.fusable_spmm_widths(), vec![16], "GCN fuses at the hidden width");
+    }
+
+    #[test]
+    fn sage_and_gin_have_no_fusable_chain() {
+        // SAGE's relu consumes an Add-fed BiasAdd; GIN's relus consume
+        // MatMul-fed BiasAdds — no Spmm feeds a relu chain directly
+        for model in [GnnModel::SageSum, GnnModel::SageMean, GnnModel::Gin] {
+            let plan = model.lower(dims(), model.norm_kind());
+            let fused = plan.fuse_spmm_relu(|_| true);
+            assert_eq!(fused.fused_op_count(), 0, "{model:?}");
+            assert_eq!(fused.ops().len(), plan.ops().len(), "{model:?}");
+            assert!(plan.fusable_spmm_widths().is_empty(), "{model:?}");
+        }
+    }
+
+    #[test]
+    fn profitability_predicate_gates_the_rewrite() {
+        let plan = GnnModel::Gcn.lower(dims(), NormKind::GcnSym);
+        // GCN's fusable edge runs at K = hidden = 16; refuse that width
+        let fused = plan.fuse_spmm_relu(|k| k != 16);
+        assert_eq!(fused.fused_op_count(), 0);
+        assert_eq!(fused.ops().len(), plan.ops().len());
+        let fused = plan.fuse_spmm_relu(|k| k == 16);
+        assert_eq!(fused.fused_op_count(), 1);
+    }
+
+    #[test]
+    fn bare_spmm_relu_edge_fuses_without_bias() {
+        let mut b = PlanBuilder::new(GnnModel::Gcn, dims(), NormKind::None);
+        let agg = b.spmm(INPUT_VALUE).unwrap();
+        let r = b.relu(agg).unwrap();
+        b.matmul(r, "w0", 16).unwrap();
+        let plan = b.finish();
+        let fused = plan.fuse_spmm_relu(|_| true);
+        assert_eq!(fused.fused_op_count(), 1);
+        assert!(matches!(fused.ops()[0], Op::SpmmFusedRelu { bias: None, .. }));
+        assert_eq!(fused.ops().len(), 2);
+    }
+
+    #[test]
+    fn shared_intermediates_are_not_fused() {
+        // the spmm value feeds BOTH a relu and an add — fusing would
+        // delete a value another op still needs
+        let mut b = PlanBuilder::new(GnnModel::Gcn, dims(), NormKind::None);
+        let agg = b.spmm(INPUT_VALUE).unwrap();
+        let r = b.relu(agg).unwrap();
+        b.add(r, agg).unwrap();
+        let plan = b.finish();
+        let fused = plan.fuse_spmm_relu(|_| true);
+        assert_eq!(fused.fused_op_count(), 0);
+        assert_eq!(fused.ops().len(), plan.ops().len());
+
+        // likewise when the bias_add intermediate is shared
+        let mut b = PlanBuilder::new(GnnModel::Gcn, dims(), NormKind::None);
+        let agg = b.spmm(INPUT_VALUE).unwrap();
+        let h = b.bias_add(agg, "b0").unwrap();
+        let r = b.relu(h).unwrap();
+        b.add(r, h).unwrap();
+        let plan = b.finish();
+        assert_eq!(plan.fuse_spmm_relu(|_| true).fused_op_count(), 0);
+    }
+
+    #[test]
+    fn output_spmm_is_never_fused() {
+        // a plan ending in a bare spmm: its value is the output, not a
+        // fusable edge
+        let mut b = PlanBuilder::new(GnnModel::Gcn, dims(), NormKind::None);
+        b.spmm(INPUT_VALUE).unwrap();
+        let plan = b.finish();
+        let fused = plan.fuse_spmm_relu(|_| true);
+        assert_eq!(fused.fused_op_count(), 0);
+        assert_eq!(fused.ops().len(), 1);
+    }
+
+    #[test]
+    fn fusing_twice_is_idempotent() {
+        let plan = GnnModel::Gcn.lower(dims(), NormKind::GcnSym);
+        let once = plan.fuse_spmm_relu(|_| true);
+        let twice = once.fuse_spmm_relu(|_| true);
+        assert_eq!(once.ops(), twice.ops());
+        assert_eq!(once.num_slots(), twice.num_slots());
+    }
+}

@@ -1,0 +1,391 @@
+//! The ExecutionPlan IR: a small SSA-style op graph with precomputed
+//! value lifetimes and workspace slot assignments.
+
+use crate::error::{Error, Result};
+use crate::gnn::{GnnModel, ModelParams};
+use crate::sparse::NormKind;
+
+/// Index of a plan value. Value [`INPUT_VALUE`] is the feature matrix;
+/// instruction `i` defines value `i + 1`.
+pub type ValueId = usize;
+
+/// The reserved value id of the input feature matrix (`n × in_dim`).
+pub const INPUT_VALUE: ValueId = 0;
+
+/// Sentinel `last_use` for the plan output: never retired.
+pub(crate) const LIVE_OUT: usize = usize::MAX;
+
+/// One plan instruction. Every op reads values (and parameters, by their
+/// [`ParamSet`](crate::gnn::ParamSet) name) and defines exactly one new
+/// value; row counts are always the graph's node count `n`, so only the
+/// column width varies per value.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// `y = spmm(Â, x)` — sum-semiring aggregation over the operand's
+    /// normalised adjacency, kernel routed through the registry.
+    Spmm {
+        /// Feature panel to aggregate.
+        x: ValueId,
+    },
+    /// `y = x @ params[w]`.
+    MatMul {
+        /// Left operand.
+        x: ValueId,
+        /// Parameter name of the weight matrix.
+        w: String,
+    },
+    /// `y = x + 1·params[b]ᵀ` (bias is a `1 × C` parameter row).
+    BiasAdd {
+        /// Input activation.
+        x: ValueId,
+        /// Parameter name of the bias row.
+        b: String,
+    },
+    /// `y = max(x, 0)`.
+    Relu {
+        /// Input activation.
+        x: ValueId,
+    },
+    /// `y = a + b` elementwise.
+    Add {
+        /// Left addend.
+        a: ValueId,
+        /// Right addend.
+        b: ValueId,
+    },
+    /// `y = relu(spmm(Â, x) + params[bias]ᵀ)` in one fused kernel pass —
+    /// produced only by the fusion pass
+    /// ([`ExecutionPlan::fuse_spmm_relu`]), never by lowering.
+    SpmmFusedRelu {
+        /// Feature panel to aggregate.
+        x: ValueId,
+        /// Optional bias parameter folded into the epilogue.
+        bias: Option<String>,
+    },
+}
+
+impl Op {
+    /// The value ids this op reads (operands only, not parameters).
+    pub fn operands(&self) -> Vec<ValueId> {
+        match self {
+            Op::Spmm { x }
+            | Op::MatMul { x, .. }
+            | Op::BiasAdd { x, .. }
+            | Op::Relu { x }
+            | Op::SpmmFusedRelu { x, .. } => vec![*x],
+            Op::Add { a, b } => vec![*a, *b],
+        }
+    }
+
+    /// True for the aggregation ops (the ones the tuner routes).
+    pub fn is_spmm(&self) -> bool {
+        matches!(self, Op::Spmm { .. } | Op::SpmmFusedRelu { .. })
+    }
+
+    /// Short display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Spmm { .. } => "spmm",
+            Op::MatMul { .. } => "matmul",
+            Op::BiasAdd { .. } => "bias_add",
+            Op::Relu { .. } => "relu",
+            Op::Add { .. } => "add",
+            Op::SpmmFusedRelu { .. } => "spmm_fused_relu",
+        }
+    }
+}
+
+/// A lowered model: the op list plus everything both executors need
+/// precomputed — per-value column widths, value lifetimes, and the
+/// linear-scan workspace slot assignment. See the [module docs](super).
+#[derive(Clone, Debug)]
+pub struct ExecutionPlan {
+    model: GnnModel,
+    dims: ModelParams,
+    norm: NormKind,
+    ops: Vec<Op>,
+    /// Column width of every value (rows are always the node count).
+    cols: Vec<usize>,
+    /// Per value: index of the last instruction reading it ([`LIVE_OUT`]
+    /// for the plan output; the defining instruction for never-read
+    /// values). Executors retire a value's buffer the moment it dies.
+    last_use: Vec<usize>,
+    /// Per value: the workspace size-class slot it shares with other
+    /// equal-width values whose lifetimes don't overlap. `None` for the
+    /// input (caller-owned) and the output (leaves with the caller).
+    slot_of: Vec<Option<usize>>,
+    /// Column width of each slot.
+    slot_cols: Vec<usize>,
+}
+
+/// Incrementally builds a plan; used by lowering and the fusion pass.
+pub(crate) struct PlanBuilder {
+    model: GnnModel,
+    dims: ModelParams,
+    norm: NormKind,
+    ops: Vec<Op>,
+    cols: Vec<usize>,
+}
+
+impl PlanBuilder {
+    pub(crate) fn new(model: GnnModel, dims: ModelParams, norm: NormKind) -> Self {
+        PlanBuilder { model, dims, norm, ops: Vec::new(), cols: vec![dims.in_dim] }
+    }
+
+    fn value(&mut self, op: Op, out_cols: usize) -> Result<ValueId> {
+        for v in op.operands() {
+            if v >= self.cols.len() {
+                return Err(Error::Config(format!(
+                    "plan: op {} reads undefined value {v}",
+                    op.name()
+                )));
+            }
+        }
+        self.ops.push(op);
+        self.cols.push(out_cols);
+        Ok(self.cols.len() - 1)
+    }
+
+    pub(crate) fn spmm(&mut self, x: ValueId) -> Result<ValueId> {
+        let c = self.cols[x];
+        self.value(Op::Spmm { x }, c)
+    }
+
+    /// `out_cols` is the weight's column count — the lowering knows the
+    /// architecture, so no parameter matrices are materialised here.
+    pub(crate) fn matmul(&mut self, x: ValueId, w: &str, out_cols: usize) -> Result<ValueId> {
+        self.value(Op::MatMul { x, w: w.to_string() }, out_cols)
+    }
+
+    pub(crate) fn bias_add(&mut self, x: ValueId, b: &str) -> Result<ValueId> {
+        let c = self.cols[x];
+        self.value(Op::BiasAdd { x, b: b.to_string() }, c)
+    }
+
+    pub(crate) fn relu(&mut self, x: ValueId) -> Result<ValueId> {
+        let c = self.cols[x];
+        self.value(Op::Relu { x }, c)
+    }
+
+    pub(crate) fn add(&mut self, a: ValueId, b: ValueId) -> Result<ValueId> {
+        if self.cols[a] != self.cols[b] {
+            return Err(Error::ShapeMismatch(format!(
+                "plan add: value {a} has {} cols, value {b} has {}",
+                self.cols[a], self.cols[b]
+            )));
+        }
+        let c = self.cols[a];
+        self.value(Op::Add { a, b }, c)
+    }
+
+    pub(crate) fn spmm_fused_relu(&mut self, x: ValueId, bias: Option<String>) -> Result<ValueId> {
+        let c = self.cols[x];
+        self.value(Op::SpmmFusedRelu { x, bias }, c)
+    }
+
+    /// Seal the plan: compute lifetimes and the slot assignment.
+    pub(crate) fn finish(self) -> ExecutionPlan {
+        let PlanBuilder { model, dims, norm, ops, cols } = self;
+        let nvals = cols.len();
+        let output = nvals - 1;
+
+        // last use: defining point by default, overwritten by later reads
+        let mut last_use: Vec<usize> = (0..nvals).map(|v| v.saturating_sub(1)).collect();
+        for (i, op) in ops.iter().enumerate() {
+            for v in op.operands() {
+                last_use[v] = i;
+            }
+        }
+        last_use[output] = LIVE_OUT;
+
+        // linear-scan slot assignment: a dying value's slot is reusable by
+        // the next same-width value born after it. Operands are released
+        // AFTER the instruction's own output is placed, so an op's output
+        // never aliases one of its inputs.
+        let mut slot_of: Vec<Option<usize>> = vec![None; nvals];
+        let mut slot_cols: Vec<usize> = Vec::new();
+        let mut free: std::collections::HashMap<usize, Vec<usize>> =
+            std::collections::HashMap::new();
+        for (i, op) in ops.iter().enumerate() {
+            let out = i + 1;
+            if out != output {
+                let c = cols[out];
+                let slot = match free.get_mut(&c).and_then(|f| f.pop()) {
+                    Some(s) => s,
+                    None => {
+                        slot_cols.push(c);
+                        slot_cols.len() - 1
+                    }
+                };
+                slot_of[out] = Some(slot);
+            }
+            let mut seen = Vec::new();
+            for v in op.operands() {
+                if v == INPUT_VALUE || last_use[v] != i || seen.contains(&v) {
+                    continue;
+                }
+                seen.push(v);
+                if let Some(s) = slot_of[v] {
+                    free.entry(cols[v]).or_default().push(s);
+                }
+            }
+        }
+
+        ExecutionPlan { model, dims, norm, ops, cols, last_use, slot_of, slot_cols }
+    }
+}
+
+impl ExecutionPlan {
+    /// The model this plan was lowered from.
+    pub fn model(&self) -> GnnModel {
+        self.model
+    }
+
+    /// The dimensions the plan was lowered for.
+    pub fn dims(&self) -> ModelParams {
+        self.dims
+    }
+
+    /// The adjacency normalisation the plan's SpMM ops expect the operand
+    /// to carry (recorded at lowering; the executors consume an already
+    /// normalised operand).
+    pub fn norm(&self) -> NormKind {
+        self.norm
+    }
+
+    /// The instruction list, in execution order.
+    pub fn ops(&self) -> &[Op] {
+        &self.ops
+    }
+
+    /// Total number of values (input + one per instruction).
+    pub fn num_values(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// The value id holding the logits.
+    pub fn output(&self) -> ValueId {
+        self.cols.len() - 1
+    }
+
+    /// Column width of a value.
+    pub fn value_cols(&self, v: ValueId) -> usize {
+        self.cols[v]
+    }
+
+    /// The input feature width the plan expects.
+    pub fn in_dim(&self) -> usize {
+        self.cols[INPUT_VALUE]
+    }
+
+    /// Index of the last instruction reading `v` (its defining instruction
+    /// if never read; `usize::MAX` for the output).
+    pub fn last_use(&self, v: ValueId) -> usize {
+        self.last_use[v]
+    }
+
+    /// The workspace slot assigned to `v` (`None` for the input and the
+    /// output, which are caller-owned).
+    pub fn slot_of(&self, v: ValueId) -> Option<usize> {
+        self.slot_of[v]
+    }
+
+    /// Number of workspace size-class slots the plan needs concurrently —
+    /// the steady-state pooled-buffer bound per request.
+    pub fn num_slots(&self) -> usize {
+        self.slot_cols.len()
+    }
+
+    /// Column width of each slot.
+    pub fn slot_widths(&self) -> &[usize] {
+        &self.slot_cols
+    }
+
+    /// The embedding widths the plan's aggregation ops run SpMM at —
+    /// sorted and deduplicated. By symmetry of `dX = spmm(Aᵀ, dY)`, the
+    /// backward pass hits exactly the same widths, so this is the complete
+    /// set a tuner must cover before kernel routing pays off. Replaces the
+    /// hand-maintained per-model width lists.
+    pub fn spmm_shapes(&self) -> Vec<usize> {
+        let mut ks: Vec<usize> = self
+            .ops
+            .iter()
+            .filter(|op| op.is_spmm())
+            .flat_map(|op| op.operands())
+            .map(|v| self.cols[v])
+            .collect();
+        ks.sort_unstable();
+        ks.dedup();
+        ks
+    }
+
+    /// [`ExecutionPlan::spmm_shapes`] extended with every coalesced
+    /// multiple up to `max_batch` — the widths batched inference
+    /// ([`crate::serve`]) actually runs SpMM at when `b` same-graph
+    /// requests share one call. Sorted and deduplicated.
+    pub fn spmm_shapes_batched(&self, max_batch: usize) -> Vec<usize> {
+        let mut ks = Vec::new();
+        for base in self.spmm_shapes() {
+            for b in 1..=max_batch.max(1) {
+                ks.push(base * b);
+            }
+        }
+        ks.sort_unstable();
+        ks.dedup();
+        ks
+    }
+
+    /// Number of [`Op::SpmmFusedRelu`] instructions in the plan.
+    pub fn fused_op_count(&self) -> usize {
+        self.ops.iter().filter(|op| matches!(op, Op::SpmmFusedRelu { .. })).count()
+    }
+
+    /// The SpMM widths at which this plan has a fusable `Spmm→Relu` /
+    /// `Spmm→BiasAdd→Relu` chain — the widths the tuner should measure the
+    /// fused epilogue at. Computed by running the fusion matcher with an
+    /// always-profitable predicate.
+    pub fn fusable_spmm_widths(&self) -> Vec<usize> {
+        let fused = self.fuse_spmm_relu(|_| true);
+        let mut ks: Vec<usize> = fused
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                Op::SpmmFusedRelu { x, .. } => Some(fused.cols[*x]),
+                _ => None,
+            })
+            .collect();
+        ks.sort_unstable();
+        ks.dedup();
+        ks
+    }
+
+    /// Rebuild helper for plan-rewrite passes.
+    pub(crate) fn rebuilder(&self) -> PlanBuilder {
+        PlanBuilder::new(self.model, self.dims, self.norm)
+    }
+
+    /// Internal accessor for rewrite passes.
+    pub(crate) fn cols_slice(&self) -> &[usize] {
+        &self.cols
+    }
+
+    /// One-line-per-op description (debugging, bench logs).
+    pub fn describe(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "plan {} (in={} hidden={} classes={}, {} ops, {} slots)",
+            self.model.name(),
+            self.dims.in_dim,
+            self.dims.hidden,
+            self.dims.classes,
+            self.ops.len(),
+            self.num_slots()
+        );
+        for (i, op) in self.ops.iter().enumerate() {
+            let _ = writeln!(s, "  v{} = {:?}  [cols={}]", i + 1, op, self.cols[i + 1]);
+        }
+        s
+    }
+}

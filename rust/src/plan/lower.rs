@@ -1,0 +1,171 @@
+//! Lowering: [`GnnModel`] → [`ExecutionPlan`].
+//!
+//! Each model lowers to the exact dataflow its hand-written tape forward
+//! used to record, op for op, so the plan-driven executors reproduce the
+//! pre-plan numerics bitwise. Lowering never emits the fused op — fusion
+//! is a separate, tuning-gated rewrite ([`ExecutionPlan::fuse_spmm_relu`]).
+
+use crate::gnn::{GnnModel, ModelParams};
+use crate::sparse::NormKind;
+
+use super::ir::{ExecutionPlan, PlanBuilder, INPUT_VALUE};
+
+impl GnnModel {
+    /// Lower this model to an [`ExecutionPlan`] for the given dimensions.
+    ///
+    /// `norm` is the adjacency normalisation the plan's SpMM operand must
+    /// carry — pass [`GnnModel::norm_kind`] unless deliberately training
+    /// against a different normalisation. The plan records it so executors
+    /// and sessions can audit the pairing; it does not normalise anything
+    /// itself.
+    pub fn lower(self, dims: ModelParams, norm: NormKind) -> ExecutionPlan {
+        let mut p = PlanBuilder::new(self, dims, norm);
+        // the builder only errors on malformed value references, which a
+        // lowering bug would hit on the very first unit test — expect here
+        // keeps every caller infallible
+        self.lower_ops(&mut p, dims).expect("model lowering is structurally valid");
+        p.finish()
+    }
+
+    fn lower_ops(self, p: &mut PlanBuilder, dims: ModelParams) -> crate::error::Result<()> {
+        let x = INPUT_VALUE;
+        let ModelParams { hidden, classes, .. } = dims;
+        match self {
+            GnnModel::Gcn => {
+                // layer 0: project *then* aggregate (K = hidden in the SpMM)
+                let xw = p.matmul(x, "w0", hidden)?;
+                let agg = p.spmm(xw)?;
+                let h = p.bias_add(agg, "b0")?;
+                let h = p.relu(h)?;
+                // layer 1
+                let hw = p.matmul(h, "w1", classes)?;
+                let agg = p.spmm(hw)?;
+                p.bias_add(agg, "b1")?;
+            }
+            GnnModel::SageSum | GnnModel::SageMean => {
+                // layer 0: aggregate raw features *then* project (K = in_dim)
+                let neigh = p.spmm(x)?;
+                let neigh = p.matmul(neigh, "w0_neigh", hidden)?;
+                let selfp = p.matmul(x, "w0_self", hidden)?;
+                let h = p.add(selfp, neigh)?;
+                let h = p.bias_add(h, "b0")?;
+                let h = p.relu(h)?;
+                // layer 1
+                let neigh = p.spmm(h)?;
+                let neigh = p.matmul(neigh, "w1_neigh", classes)?;
+                let selfp = p.matmul(h, "w1_self", classes)?;
+                let out = p.add(selfp, neigh)?;
+                p.bias_add(out, "b1")?;
+            }
+            GnnModel::Gin => {
+                // layer 0: z = (1+ε)x + Σ_neigh x, ε = 0, then the 2-layer MLP
+                let agg = p.spmm(x)?;
+                let z = p.add(x, agg)?;
+                let h = p.matmul(z, "w0a", hidden)?;
+                let h = p.bias_add(h, "b0a")?;
+                let h = p.relu(h)?;
+                let h = p.matmul(h, "w0b", hidden)?;
+                let h = p.bias_add(h, "b0b")?;
+                let h = p.relu(h)?;
+                // layer 1
+                let agg = p.spmm(h)?;
+                let z = p.add(h, agg)?;
+                let out = p.matmul(z, "w1", classes)?;
+                p.bias_add(out, "b1")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Op;
+    use crate::gnn::{GnnModel, ModelParams};
+
+    fn dims() -> ModelParams {
+        ModelParams { in_dim: 50, hidden: 16, classes: 3 }
+    }
+
+    #[test]
+    fn spmm_shapes_match_forward_structure() {
+        // the widths the deleted GnnModel::spmm_widths used to report
+        assert_eq!(GnnModel::Gcn.lower(dims(), GnnModel::Gcn.norm_kind()).spmm_shapes(), vec![
+            3, 16
+        ]);
+        for m in [GnnModel::SageSum, GnnModel::SageMean, GnnModel::Gin] {
+            assert_eq!(m.lower(dims(), m.norm_kind()).spmm_shapes(), vec![16, 50], "{m:?}");
+        }
+        // duplicates collapse (hidden == in_dim)
+        let square = ModelParams { in_dim: 16, hidden: 16, classes: 2 };
+        assert_eq!(
+            GnnModel::Gin.lower(square, GnnModel::Gin.norm_kind()).spmm_shapes(),
+            vec![16]
+        );
+    }
+
+    #[test]
+    fn batched_shapes_cover_coalesced_multiples() {
+        // the widths the deleted serving_spmm_widths used to report
+        let plan = GnnModel::Gcn.lower(dims(), GnnModel::Gcn.norm_kind());
+        assert_eq!(plan.spmm_shapes_batched(2), vec![3, 6, 16, 32]);
+        assert_eq!(plan.spmm_shapes_batched(1), vec![3, 16]);
+        assert_eq!(plan.spmm_shapes_batched(0), vec![3, 16]);
+    }
+
+    #[test]
+    fn lowered_plans_have_expected_structure() {
+        let gcn = GnnModel::Gcn.lower(dims(), GnnModel::Gcn.norm_kind());
+        assert_eq!(gcn.ops().len(), 7);
+        assert_eq!(gcn.output(), 7);
+        assert_eq!(gcn.in_dim(), 50);
+        assert_eq!(gcn.value_cols(gcn.output()), 3);
+        assert!(matches!(gcn.ops()[0], Op::MatMul { .. }));
+        assert!(matches!(gcn.ops().last().unwrap(), Op::BiasAdd { .. }));
+        assert_eq!(gcn.fused_op_count(), 0, "lowering never fuses");
+
+        let sage = GnnModel::SageSum.lower(dims(), GnnModel::SageSum.norm_kind());
+        assert_eq!(sage.ops().iter().filter(|o| o.is_spmm()).count(), 2);
+        assert_eq!(sage.value_cols(sage.output()), 3);
+
+        let gin = GnnModel::Gin.lower(dims(), GnnModel::Gin.norm_kind());
+        assert_eq!(gin.ops().iter().filter(|o| matches!(o, Op::Relu { .. })).count(), 2);
+        assert_eq!(gin.value_cols(gin.output()), 3);
+        assert!(!gin.describe().is_empty());
+    }
+
+    #[test]
+    fn lifetimes_and_slots_are_consistent() {
+        for model in GnnModel::ALL {
+            let plan = model.lower(dims(), model.norm_kind());
+            // the output is permanently live and unslotted; the input is
+            // caller-owned
+            assert_eq!(plan.last_use(plan.output()), usize::MAX, "{model:?}");
+            assert!(plan.slot_of(plan.output()).is_none(), "{model:?}");
+            assert!(plan.slot_of(0).is_none(), "{model:?}");
+            // every intermediate has a slot whose width matches the value
+            for v in 1..plan.output() {
+                let slot = plan.slot_of(v).expect("intermediate values are slotted");
+                assert_eq!(plan.slot_widths()[slot], plan.value_cols(v), "{model:?} v{v}");
+                // a value is read at or after its definition
+                assert!(plan.last_use(v) >= v - 1, "{model:?} v{v}");
+            }
+            // slot sharing is real: fewer slots than intermediates
+            assert!(plan.num_slots() < plan.output() - 1, "{model:?}: {}", plan.describe());
+            // two live-at-once values never share a slot
+            for v in 1..plan.num_values() {
+                for w in (v + 1)..plan.num_values() {
+                    if let (Some(sv), Some(sw)) = (plan.slot_of(v), plan.slot_of(w)) {
+                        if sv == sw {
+                            // w is born at instr w-1; v must be dead by then
+                            assert!(
+                                plan.last_use(v) < w,
+                                "{model:?}: v{v} and v{w} share slot {sv} while overlapping"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

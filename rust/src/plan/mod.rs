@@ -1,0 +1,66 @@
+//! The shared ExecutionPlan IR — **one lowering, every execution path**.
+//!
+//! Before this subsystem the repo carried three hand-written GNN forwards
+//! that had to be kept bitwise-consistent by hand: the tape-recording
+//! training forward, the cache-free serving forward, and the AOT HLO step.
+//! `plan` replaces the first two (the HLO step stays a compiled artifact)
+//! with a single lowering point, the way DGL lowers message passing to a
+//! small g-SpMM op set so cross-path optimisation becomes tractable:
+//!
+//! * **IR** ([`ExecutionPlan`], [`Op`]) — a small SSA-style op graph.
+//!   Value 0 is the feature matrix; instruction `i` defines value `i + 1`;
+//!   the last instruction defines the logits. Parameters are referenced by
+//!   name (the [`ParamSet`](crate::gnn::ParamSet) keys), so one plan
+//!   serves any parameter values — train-time or frozen. Alongside the
+//!   ops, the plan precomputes **value lifetimes** (`last_use`) and a
+//!   linear-scan **slot assignment** mapping values of equal width onto
+//!   shared size-class slots. The inference executor realises the
+//!   assignment directly: a dying value's buffers park under its slot and
+//!   the next same-slot value takes them over without touching the
+//!   [`KernelWorkspace`](crate::kernels::KernelWorkspace) pool (kernel
+//!   outputs recycle through the pool instead, which draws zeroed
+//!   buffers), so a warm serving batch cycles through at most
+//!   [`ExecutionPlan::num_slots`] buffers per request and allocates
+//!   (almost) nothing. The training executor records values onto the tape
+//!   — they must all outlive the backward sweep — and the tape recycles
+//!   them into the same pool on drop.
+//! * **Lowering** ([`GnnModel::lower`](crate::gnn::GnnModel)) — each model
+//!   of the zoo lowers to the op set `{Spmm, MatMul, BiasAdd, Relu, Add}`
+//!   in exactly the dataflow the deleted hand-written forwards had, so
+//!   numerics are unchanged by construction.
+//! * **Fusion pass** ([`ExecutionPlan::fuse_spmm_relu`]) — rewrites
+//!   `Spmm→Relu` and `Spmm→BiasAdd→Relu` single-consumer chains into the
+//!   FusedMM-backed [`Op::SpmmFusedRelu`]
+//!   ([`spmm_fused_relu`](crate::kernels::spmm_fused_relu)), eliminating
+//!   up to two full passes over the `n × K` activation per layer.
+//!   **Invariant: fusion never changes numerics.** The fused kernel
+//!   accumulates in the same per-element non-zero-stream order as every
+//!   kernel family and applies exactly the unfused epilogue's scalar ops,
+//!   so fused and unfused plans are bitwise-equal — property-tested across
+//!   all kernel families and sparse formats. Which edges to rewrite is a
+//!   *tuning* decision: the pass takes a per-width profitability predicate
+//!   fed from the [`TuningDb`](crate::autotune::TuningDb)'s measured
+//!   `fuse_relu` entries (or a policy override), so fusion only happens
+//!   where it measured faster.
+//! * **Executors** — two thin interpreters over the same plan:
+//!   [`execute_taped`] records the ops onto the autodiff
+//!   [`Tape`](crate::autodiff::Tape) (cache-enabled backprop; the
+//!   [`Trainer`](crate::train::Trainer) consumes it), and
+//!   [`execute_inference`] runs tape-free with an **explicit thread
+//!   budget** (so serving can cap per-session parallelism), coalescing
+//!   same-graph requests into one SpMM per aggregation point exactly as
+//!   the serving batcher requires. Both paths execute the identical op
+//!   list, so "training forward == serving forward" is a structural fact,
+//!   not a test-enforced convention.
+//!
+//! The tuner consumes [`ExecutionPlan::spmm_shapes`] (and its batched
+//! variant) instead of hand-maintained per-model width lists: whatever the
+//! plan will execute is, by definition, what gets tuned.
+
+mod exec;
+mod fuse;
+mod ir;
+mod lower;
+
+pub use exec::{execute_inference, execute_taped};
+pub use ir::{ExecutionPlan, Op, ValueId, INPUT_VALUE};

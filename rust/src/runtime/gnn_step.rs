@@ -6,6 +6,14 @@
 //! labels, mask) are staged to device buffers **once**; parameters live in
 //! device buffers that round-trip from output to input without touching
 //! the host; only the scalar loss is copied back each epoch.
+//!
+//! Note on the plan IR: both *native* forwards (training tape and serving)
+//! now interpret the shared [`ExecutionPlan`](crate::plan::ExecutionPlan);
+//! this module is the remaining third path, an AOT-compiled artifact whose
+//! step is fused at compile time rather than interpreted. The parity tests
+//! in `tests/hlo_runtime.rs` pin it to the plan-driven native trainer, and
+//! `Trainer::predict` for this backend pulls parameters to the host and
+//! runs the plan executor.
 
 use std::path::Path;
 

@@ -1,261 +1,46 @@
-//! The cache-free batched inference forward path.
+//! Serving-side batching glue around the shared plan executor.
 //!
-//! Mirrors [`GnnModel::forward`](crate::gnn::GnnModel::forward) layer for
-//! layer, with three serving-specific differences:
-//!
-//! * **No tape, no gradients, no `BackpropCache`.** Inference never needs
-//!   the backward transpose or the normalisation memo, so the path touches
-//!   neither — a serving run leaves `CacheStats` untouched (asserted by
-//!   `serve-bench`).
-//! * **Coalesced aggregation.** At every SpMM point the per-request
-//!   matrices are column-concatenated and aggregated in **one** kernel
-//!   call ([`spmm_many`]); dense projections/bias/activation stay
-//!   per-request. Because every kernel family accumulates each output
-//!   element independently along the row's non-zero stream, the coalesced
-//!   result is bitwise-equal to per-request execution.
-//! * **Pooled intermediates.** Every intermediate matrix is drawn from and
-//!   recycled into the operand's shared [`KernelWorkspace`], so a warm
-//!   server allocates (almost) nothing per batch.
+//! The hand-written per-model inference forward that used to live here is
+//! gone: serving executes the same [`ExecutionPlan`] training records onto
+//! the tape, through [`execute_inference`](crate::plan::execute_inference)
+//! — tape-free, cache-free (a serving run leaves `CacheStats` untouched,
+//! asserted by `serve-bench`), micro-batch-coalescing at every SpMM point
+//! (bitwise-equal to per-request execution), and pooling every
+//! intermediate in the operand's shared
+//! [`KernelWorkspace`](crate::kernels::KernelWorkspace). What remains here
+//! is the serving-shaped surface the scheduler calls.
 
 use crate::autodiff::SpmmOperand;
-use crate::autotune::KernelRegistry;
 use crate::dense::Dense;
 use crate::error::Result;
-use crate::gnn::{GnnModel, ParamSet};
-use crate::kernels::{spmm_with_workspace, KernelWorkspace, Semiring};
-
-use super::batch::{concat_cols_into, split_cols_into};
-
-/// Scratch allocator over the operand's (optional) shared workspace.
-struct Scratch<'a> {
-    ws: Option<&'a KernelWorkspace>,
-}
-
-impl Scratch<'_> {
-    fn alloc(&self, rows: usize, cols: usize) -> Dense {
-        match self.ws {
-            Some(ws) => ws.take_dense(rows, cols),
-            None => Dense::zeros(rows, cols),
-        }
-    }
-
-    fn free(&self, d: Dense) {
-        if let Some(ws) = self.ws {
-            ws.recycle(d.data);
-        }
-    }
-
-    fn free_all(&self, v: Vec<Dense>) {
-        for d in v {
-            self.free(d);
-        }
-    }
-}
-
-/// One SpMM through the registry seam, exactly as the training tape routes
-/// it: kernel choice resolved per `(context, K)`, workspace-cached
-/// partitions, pooled output.
-fn spmm_call(operand: &SpmmOperand, x: &Dense, threads: usize) -> Result<Dense> {
-    let choice = KernelRegistry::global().resolve(&operand.context, x.cols, Semiring::Sum);
-    let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_id));
-    spmm_with_workspace(&operand.a, x, Semiring::Sum, choice, threads, ws)
-}
-
-/// Aggregate every request's matrix in **one** SpMM call (the micro-batch
-/// coalescing), then split the result back per request. A batch of one
-/// skips the pack/unpack entirely.
-fn spmm_many(
-    operand: &SpmmOperand,
-    xs: &[&Dense],
-    threads: usize,
-    scratch: &Scratch<'_>,
-) -> Result<Vec<Dense>> {
-    if xs.len() == 1 {
-        return Ok(vec![spmm_call(operand, xs[0], threads)?]);
-    }
-    let rows = xs[0].rows;
-    let total: usize = xs.iter().map(|x| x.cols).sum();
-    let mut packed = scratch.alloc(rows, total);
-    concat_cols_into(xs, &mut packed)?;
-    let y = spmm_call(operand, &packed, threads)?;
-    scratch.free(packed);
-    // per-request slices land in pooled buffers too — a warm server's
-    // pack/aggregate/unpack cycle allocates nothing
-    let mut outs: Vec<Dense> = xs.iter().map(|x| scratch.alloc(rows, x.cols)).collect();
-    split_cols_into(&y, &mut outs)?;
-    scratch.free(y);
-    Ok(outs)
-}
-
-/// `a @ b` into a pooled buffer.
-fn mm(scratch: &Scratch<'_>, a: &Dense, b: &Dense) -> Result<Dense> {
-    let mut out = scratch.alloc(a.rows, b.cols);
-    a.matmul_into(b, &mut out)?;
-    Ok(out)
-}
-
-fn refs(v: &[Dense]) -> Vec<&Dense> {
-    v.iter().collect()
-}
-
-#[inline]
-fn relu_in_place(d: &mut Dense) {
-    for v in &mut d.data {
-        *v = v.max(0.0);
-    }
-}
+use crate::gnn::ParamSet;
+use crate::plan::{execute_inference, ExecutionPlan};
 
 /// Batched forward pass for `m` same-graph requests: one output per
 /// request, in request order. Bitwise-equal to running [`infer_one`] per
-/// request (the serving acceptance criterion).
+/// request (the serving acceptance criterion). `threads` is the kernel
+/// budget for this batch — the scheduler passes the per-session budget.
 pub fn infer_batched(
-    model: GnnModel,
+    plan: &ExecutionPlan,
     operand: &SpmmOperand,
     params: &ParamSet,
     xs: &[&Dense],
     threads: usize,
 ) -> Result<Vec<Dense>> {
-    if xs.is_empty() {
-        return Ok(Vec::new());
-    }
-    let scratch = Scratch { ws: operand.workspace.as_deref() };
-    match model {
-        GnnModel::Gcn => {
-            let w0 = params.get("w0")?;
-            let b0 = params.get("b0")?;
-            let w1 = params.get("w1")?;
-            let b1 = params.get("b1")?;
-            // layer 0: project per request, aggregate coalesced
-            let xw: Vec<Dense> =
-                xs.iter().map(|x| mm(&scratch, x, w0)).collect::<Result<_>>()?;
-            let aggs = spmm_many(operand, &refs(&xw), threads, &scratch)?;
-            scratch.free_all(xw);
-            let mut hs = Vec::with_capacity(aggs.len());
-            for a in &aggs {
-                let mut h = scratch.alloc(a.rows, a.cols);
-                a.add_row_broadcast_into(&b0.data, &mut h)?;
-                relu_in_place(&mut h);
-                hs.push(h);
-            }
-            scratch.free_all(aggs);
-            // layer 1
-            let hw: Vec<Dense> =
-                hs.iter().map(|h| mm(&scratch, h, w1)).collect::<Result<_>>()?;
-            scratch.free_all(hs);
-            let aggs = spmm_many(operand, &refs(&hw), threads, &scratch)?;
-            scratch.free_all(hw);
-            let mut outs = Vec::with_capacity(aggs.len());
-            for a in &aggs {
-                // final outputs leave with the caller, not the pool
-                let mut o = Dense::zeros(a.rows, a.cols);
-                a.add_row_broadcast_into(&b1.data, &mut o)?;
-                outs.push(o);
-            }
-            scratch.free_all(aggs);
-            Ok(outs)
-        }
-        GnnModel::SageSum | GnnModel::SageMean => {
-            let w0_self = params.get("w0_self")?;
-            let w0_neigh = params.get("w0_neigh")?;
-            let b0 = params.get("b0")?;
-            let w1_self = params.get("w1_self")?;
-            let w1_neigh = params.get("w1_neigh")?;
-            let b1 = params.get("b1")?;
-            // layer 0: aggregate raw features coalesced, then project
-            let aggs = spmm_many(operand, xs, threads, &scratch)?;
-            let mut hs = Vec::with_capacity(aggs.len());
-            for (&x, agg) in xs.iter().zip(&aggs) {
-                let neigh = mm(&scratch, agg, w0_neigh)?;
-                let selfp = mm(&scratch, x, w0_self)?;
-                let mut sum = scratch.alloc(selfp.rows, selfp.cols);
-                selfp.add_into(&neigh, &mut sum)?;
-                scratch.free(neigh);
-                scratch.free(selfp);
-                let mut h = scratch.alloc(sum.rows, sum.cols);
-                sum.add_row_broadcast_into(&b0.data, &mut h)?;
-                scratch.free(sum);
-                relu_in_place(&mut h);
-                hs.push(h);
-            }
-            scratch.free_all(aggs);
-            // layer 1
-            let aggs = spmm_many(operand, &refs(&hs), threads, &scratch)?;
-            let mut outs = Vec::with_capacity(aggs.len());
-            for (h, agg) in hs.iter().zip(&aggs) {
-                let neigh = mm(&scratch, agg, w1_neigh)?;
-                let selfp = mm(&scratch, h, w1_self)?;
-                let mut sum = scratch.alloc(selfp.rows, selfp.cols);
-                selfp.add_into(&neigh, &mut sum)?;
-                scratch.free(neigh);
-                scratch.free(selfp);
-                let mut o = Dense::zeros(sum.rows, sum.cols);
-                sum.add_row_broadcast_into(&b1.data, &mut o)?;
-                scratch.free(sum);
-                outs.push(o);
-            }
-            scratch.free_all(hs);
-            scratch.free_all(aggs);
-            Ok(outs)
-        }
-        GnnModel::Gin => {
-            let w0a = params.get("w0a")?;
-            let b0a = params.get("b0a")?;
-            let w0b = params.get("w0b")?;
-            let b0b = params.get("b0b")?;
-            let w1 = params.get("w1")?;
-            let b1 = params.get("b1")?;
-            // layer 0: z = x + Σ_neigh x (ε = 0), then the 2-layer MLP
-            let aggs = spmm_many(operand, xs, threads, &scratch)?;
-            let mut hs = Vec::with_capacity(aggs.len());
-            for (&x, agg) in xs.iter().zip(&aggs) {
-                let mut z = scratch.alloc(x.rows, x.cols);
-                x.add_into(agg, &mut z)?;
-                let h = mm(&scratch, &z, w0a)?;
-                scratch.free(z);
-                let mut hb = scratch.alloc(h.rows, h.cols);
-                h.add_row_broadcast_into(&b0a.data, &mut hb)?;
-                scratch.free(h);
-                relu_in_place(&mut hb);
-                let h2 = mm(&scratch, &hb, w0b)?;
-                scratch.free(hb);
-                let mut h2b = scratch.alloc(h2.rows, h2.cols);
-                h2.add_row_broadcast_into(&b0b.data, &mut h2b)?;
-                scratch.free(h2);
-                relu_in_place(&mut h2b);
-                hs.push(h2b);
-            }
-            scratch.free_all(aggs);
-            // layer 1
-            let aggs = spmm_many(operand, &refs(&hs), threads, &scratch)?;
-            let mut outs = Vec::with_capacity(aggs.len());
-            for (h, agg) in hs.iter().zip(&aggs) {
-                let mut z = scratch.alloc(h.rows, h.cols);
-                h.add_into(agg, &mut z)?;
-                let zw = mm(&scratch, &z, w1)?;
-                scratch.free(z);
-                let mut o = Dense::zeros(zw.rows, zw.cols);
-                zw.add_row_broadcast_into(&b1.data, &mut o)?;
-                scratch.free(zw);
-                outs.push(o);
-            }
-            scratch.free_all(hs);
-            scratch.free_all(aggs);
-            Ok(outs)
-        }
-    }
+    execute_inference(plan, operand, params, xs, threads)
 }
 
 /// Single-request inference — exactly the batch-of-one path (no
 /// concatenation, one SpMM per aggregation point). The serving acceptance
 /// check compares coalesced batches against this, bitwise.
 pub fn infer_one(
-    model: GnnModel,
+    plan: &ExecutionPlan,
     operand: &SpmmOperand,
     params: &ParamSet,
     x: &Dense,
     threads: usize,
 ) -> Result<Dense> {
-    let mut outs = infer_batched(model, operand, params, &[x], threads)?;
+    let mut outs = execute_inference(plan, operand, params, &[x], threads)?;
     Ok(outs.pop().expect("batch of one produces one output"))
 }
 
@@ -263,82 +48,101 @@ pub fn infer_one(
 mod tests {
     use super::*;
     use crate::data::karate_club;
-    use crate::gnn::ModelParams;
+    use crate::gnn::{GnnModel, ModelParams};
     use crate::kernels::KernelWorkspace;
+    use crate::plan::execute_taped;
     use crate::util::rng::Rng;
     use std::collections::BTreeMap;
     use std::sync::Arc;
 
-    fn setup(model: GnnModel) -> (SpmmOperand, ParamSet, ModelParams, usize) {
+    fn setup(model: GnnModel) -> (ExecutionPlan, SpmmOperand, ParamSet, ModelParams, usize) {
         let ds = karate_club();
         let dims =
             ModelParams { in_dim: ds.feature_dim(), hidden: 8, classes: ds.num_classes };
+        let plan = model.lower(dims, model.norm_kind());
         let params = model.init_params(dims, 7);
         let a = model.norm_kind().apply(&ds.adj).unwrap();
         let n = a.rows;
         let ws = Arc::new(KernelWorkspace::new());
         let operand = SpmmOperand::uncached(a, "serve-fwd-test")
             .with_workspace(ws, crate::autodiff::context_graph_id("serve-fwd-test"));
-        (operand, params, dims, n)
+        (plan, operand, params, dims, n)
     }
 
     #[test]
     fn infer_one_matches_tape_forward() {
-        // the serving forward must agree with the training-tape forward
+        // the serving path and the training tape execute the SAME plan —
+        // their outputs must be bitwise-equal, not merely close
         for model in GnnModel::ALL {
-            let (operand, params, dims, n) = setup(model);
+            let (plan, operand, params, dims, n) = setup(model);
             let mut rng = Rng::seed_from_u64(71);
             let x = Dense::uniform(n, dims.in_dim, 1.0, &mut rng);
-            let got = infer_one(model, &operand, &params, &x, 1).unwrap();
+            let got = infer_one(&plan, &operand, &params, &x, 1).unwrap();
             let mut tape = crate::autodiff::Tape::new(1);
             let xv = tape.input(x.clone());
             let mut vars = BTreeMap::new();
             for (name, value) in params.iter() {
                 vars.insert(name.clone(), tape.input(value.clone()));
             }
-            let logits = model.forward(&mut tape, &operand, xv, &vars).unwrap();
+            let logits = execute_taped(&plan, &mut tape, &operand, xv, &vars).unwrap();
             let want = tape.value(logits);
             assert_eq!(got.rows, n, "{model:?}");
             assert_eq!(got.cols, dims.classes, "{model:?}");
-            assert!(got.allclose(want, 1e-5), "{model:?}");
+            assert_eq!(got.data, want.data, "{model:?}: serving diverged from tape");
         }
     }
 
     #[test]
     fn batched_is_bitwise_equal_to_sequential() {
         for model in GnnModel::ALL {
-            let (operand, params, dims, n) = setup(model);
+            let (plan, operand, params, dims, n) = setup(model);
             let mut rng = Rng::seed_from_u64(72);
             let xs: Vec<Dense> =
                 (0..5).map(|_| Dense::uniform(n, dims.in_dim, 1.0, &mut rng)).collect();
             let x_refs: Vec<&Dense> = xs.iter().collect();
-            let batched = infer_batched(model, &operand, &params, &x_refs, 2).unwrap();
+            let batched = infer_batched(&plan, &operand, &params, &x_refs, 2).unwrap();
             assert_eq!(batched.len(), 5, "{model:?}");
             for (x, b) in xs.iter().zip(&batched) {
-                let solo = infer_one(model, &operand, &params, x, 2).unwrap();
+                let solo = infer_one(&plan, &operand, &params, x, 2).unwrap();
                 assert_eq!(solo.data, b.data, "{model:?}: batched output diverged");
             }
         }
     }
 
     #[test]
+    fn fused_plan_serves_bitwise_equal_outputs() {
+        let (plan, operand, params, dims, n) = setup(GnnModel::Gcn);
+        let fused = plan.fuse_spmm_relu(|_| true);
+        assert_eq!(fused.fused_op_count(), 1);
+        let mut rng = Rng::seed_from_u64(73);
+        let xs: Vec<Dense> =
+            (0..4).map(|_| Dense::uniform(n, dims.in_dim, 1.0, &mut rng)).collect();
+        let x_refs: Vec<&Dense> = xs.iter().collect();
+        let want = infer_batched(&plan, &operand, &params, &x_refs, 2).unwrap();
+        let got = infer_batched(&fused, &operand, &params, &x_refs, 2).unwrap();
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.data, g.data, "fused serving diverged");
+        }
+    }
+
+    #[test]
     fn empty_batch_is_empty() {
-        let (operand, params, _, _) = setup(GnnModel::Gcn);
-        let out = infer_batched(GnnModel::Gcn, &operand, &params, &[], 1).unwrap();
+        let (plan, operand, params, _, _) = setup(GnnModel::Gcn);
+        let out = infer_batched(&plan, &operand, &params, &[], 1).unwrap();
         assert!(out.is_empty());
     }
 
     #[test]
     fn warm_forward_reuses_workspace_buffers() {
-        let (operand, params, dims, n) = setup(GnnModel::Gcn);
+        let (plan, operand, params, dims, n) = setup(GnnModel::Gcn);
         let mut rng = Rng::seed_from_u64(73);
         let xs: Vec<Dense> =
             (0..3).map(|_| Dense::uniform(n, dims.in_dim, 1.0, &mut rng)).collect();
         let x_refs: Vec<&Dense> = xs.iter().collect();
         let ws = Arc::clone(operand.workspace.as_ref().unwrap());
-        let first = infer_batched(GnnModel::Gcn, &operand, &params, &x_refs, 2).unwrap();
+        let first = infer_batched(&plan, &operand, &params, &x_refs, 2).unwrap();
         let allocs_after_first = ws.stats().buffer_allocs;
-        let second = infer_batched(GnnModel::Gcn, &operand, &params, &x_refs, 2).unwrap();
+        let second = infer_batched(&plan, &operand, &params, &x_refs, 2).unwrap();
         let stats = ws.stats();
         for (a, b) in first.iter().zip(&second) {
             assert_eq!(a.data, b.data);

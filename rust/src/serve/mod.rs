@@ -32,12 +32,21 @@
 //!    light co-tenant of the shared pool. Batching is arrival-driven:
 //!    `run_ready` holds underfull batches only until the `max_wait`
 //!    deadline, so a lone request on a quiet session is bounded by the
-//!    knob, not by co-tenant traffic. Per-session [`SessionMetrics`]
-//!    record p50/p99 latency and batch occupancy; [`fairness_spread`]
-//!    summarises cross-session evenness.
+//!    knob, not by co-tenant traffic. Each batch runs under a
+//!    **per-session thread budget** (`ServeConfig.session_threads`,
+//!    overridable via [`InferenceServer::set_session_threads`]) plumbed
+//!    into the plan executor — a budget-1 session runs inline and never
+//!    occupies a pool worker. Per-session [`SessionMetrics`] record
+//!    p50/p99 latency and batch occupancy; [`fairness_spread`] summarises
+//!    cross-session evenness.
 //!
-//! The inference path is **cache-free**: it records no tape, computes no
-//! gradients, and never touches a
+//! The inference forward is **not hand-written here**: every session
+//! freezes the same [`ExecutionPlan`](crate::plan::ExecutionPlan) training
+//! lowers to — fused per the tuning DB's measured `fuse_relu` wins at
+//! registration — and requests are served by
+//! [`execute_inference`](crate::plan::execute_inference), the plan's
+//! tape-free executor. The path is **cache-free**: it records no tape,
+//! computes no gradients, and never touches a
 //! [`BackpropCache`](crate::cache::BackpropCache) — a serving run leaves
 //! `CacheStats` unchanged (the `serve-bench` CLI subcommand asserts this,
 //! along with the bitwise batching equality, and emits
@@ -49,10 +58,11 @@ mod metrics;
 mod scheduler;
 mod session;
 
-pub use batch::{
-    concat_cols, concat_cols_into, split_cols, split_cols_into, CompletedInference,
-    InferenceRequest, SessionQueue,
-};
+pub use batch::{CompletedInference, InferenceRequest, SessionQueue};
+// re-exported for back-compat: the pack/unpack primitives moved to
+// `crate::dense` so the plan executor can use them without a
+// plan ↔ serve module cycle
+pub use crate::dense::{concat_cols, concat_cols_into, split_cols, split_cols_into};
 pub use forward::{infer_batched, infer_one};
 pub use metrics::{fairness_spread, SessionMetrics};
 pub use scheduler::{InferenceServer, ServeConfig};

@@ -38,6 +38,14 @@ pub struct ServeConfig {
     pub quantum: usize,
     /// Kernel thread budget per batch (0 → worker-pool default).
     pub threads: usize,
+    /// Default **per-session** kernel thread budget, plumbed into the plan
+    /// executor's explicit budget for every batch (and `infer_now` call)
+    /// of a session. 0 inherits `threads`. A budget of 1 runs a session's
+    /// kernels inline on the scheduler thread — it never occupies a pool
+    /// worker, so a multi-tenant server can pin noisy sessions without
+    /// starving co-tenants of the shared pool. Override per session with
+    /// [`InferenceServer::set_session_threads`].
+    pub session_threads: usize,
     /// Arrival-driven batching deadline for [`InferenceServer::run_ready`]:
     /// an underfull batch runs as soon as its oldest request has waited
     /// this long, instead of holding out for `max_batch` coalescing. A
@@ -49,7 +57,13 @@ pub struct ServeConfig {
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 8, quantum: 4, threads: 0, max_wait: Duration::from_millis(5) }
+        ServeConfig {
+            max_batch: 8,
+            quantum: 4,
+            threads: 0,
+            session_threads: 0,
+            max_wait: Duration::from_millis(5),
+        }
     }
 }
 
@@ -62,6 +76,9 @@ pub struct InferenceServer {
     queues: Vec<SessionQueue>,
     deficits: Vec<usize>,
     metrics: Vec<SessionMetrics>,
+    /// Per-session thread-budget override; `None` falls back to
+    /// `cfg.session_threads`, then `cfg.threads`.
+    thread_budgets: Vec<Option<usize>>,
     next_request: u64,
     rr_start: usize,
 }
@@ -75,6 +92,7 @@ impl InferenceServer {
             queues: Vec::new(),
             deficits: Vec::new(),
             metrics: Vec::new(),
+            thread_budgets: Vec::new(),
             next_request: 1,
             rr_start: 0,
         }
@@ -109,7 +127,28 @@ impl InferenceServer {
         self.queues.push(SessionQueue::default());
         self.deficits.push(0);
         self.metrics.push(SessionMetrics::default());
+        self.thread_budgets.push(None);
         Ok(id)
+    }
+
+    /// Override one session's kernel thread budget (the ROADMAP
+    /// "per-session thread budgets" knob): every subsequent batch and
+    /// `infer_now` call for `id` runs the plan executor with this budget.
+    /// `threads == 0` clears the override back to the configured default
+    /// (`session_threads`, then `threads`).
+    pub fn set_session_threads(&mut self, id: SessionId, threads: usize) -> Result<()> {
+        self.registry.get(id)?;
+        self.thread_budgets[id.0] = (threads > 0).then_some(threads);
+        Ok(())
+    }
+
+    /// The effective kernel thread budget for a session's batches.
+    pub fn session_threads(&self, id: SessionId) -> usize {
+        match self.thread_budgets.get(id.0).copied().flatten() {
+            Some(t) => t,
+            None if self.cfg.session_threads > 0 => self.cfg.session_threads,
+            None => self.cfg.threads,
+        }
     }
 
     /// Look up an open session.
@@ -166,7 +205,8 @@ impl InferenceServer {
     pub fn infer_now(&self, id: SessionId, features: &Dense) -> Result<Dense> {
         let session = self.registry.get(id)?;
         Self::validate_features(session, features)?;
-        infer_one(session.model, session.operand(), session.params(), features, self.cfg.threads)
+        let threads = self.session_threads(id);
+        infer_one(session.plan(), session.operand(), session.params(), features, threads)
     }
 
     /// Drain every queue under DRR fairness; returns completions in
@@ -313,6 +353,7 @@ impl InferenceServer {
     ) -> Result<()> {
         let batch = self.queues[id.0].drain_batch(b);
         debug_assert_eq!(batch.len(), b);
+        let threads = self.session_threads(id);
         let session = match self.registry.get(id) {
             Ok(s) => s,
             Err(e) => {
@@ -322,11 +363,11 @@ impl InferenceServer {
         };
         let xs: Vec<&Dense> = batch.iter().map(|r| r.features.as_ref()).collect();
         let outputs = match infer_batched(
-            session.model,
+            session.plan(),
             session.operand(),
             session.params(),
             &xs,
-            self.cfg.threads,
+            threads,
         ) {
             Ok(outputs) => outputs,
             Err(e) => {
@@ -513,6 +554,7 @@ mod tests {
             quantum: 4,
             threads: 1,
             max_wait: Duration::ZERO,
+            ..ServeConfig::default()
         });
         let adj = ring_graph(10);
         let sid = add_session(&mut server, "lone", &adj, 4);
@@ -535,6 +577,7 @@ mod tests {
             quantum: 8,
             threads: 1,
             max_wait: Duration::from_secs(3600),
+            ..ServeConfig::default()
         });
         let adj = ring_graph(10);
         let sid = add_session(&mut server, "hold", &adj, 4);
@@ -564,6 +607,7 @@ mod tests {
             quantum: 4,
             threads: 1,
             max_wait: Duration::from_secs(3600),
+            ..ServeConfig::default()
         });
         let adj = ring_graph(10);
         let sid = add_session(&mut server, "no-burst", &adj, 4);
@@ -598,6 +642,7 @@ mod tests {
             quantum: 4,
             threads: 1,
             max_wait,
+            ..ServeConfig::default()
         });
         let heavy_adj = ring_graph(12);
         let slow_adj = ring_graph(8);
@@ -632,6 +677,72 @@ mod tests {
         // bitwise: the deadline path is still the same inference
         let solo = server.infer_now(slow, &slow_done[0].features).unwrap();
         assert_eq!(solo.data, slow_done[0].output.data);
+    }
+
+    #[test]
+    fn budget_one_session_never_occupies_a_pool_worker() {
+        // session_threads = 1 while the server-wide budget is 4: every
+        // kernel call for the session must run inline on the scheduler
+        // thread. Evidence: the parallel kernel path is the only thing
+        // that partitions a graph into the server's (private) workspace —
+        // a budget-1 session leaves the partition cache untouched.
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 4,
+            quantum: 4,
+            threads: 4,
+            session_threads: 1,
+            ..ServeConfig::default()
+        });
+        let adj = ring_graph(24);
+        let sid = add_session(&mut server, "budget-one", &adj, 6);
+        assert_eq!(server.session_threads(sid), 1);
+        let mut rng = Rng::seed_from_u64(90);
+        for _ in 0..8 {
+            server.submit(sid, feats(24, 6, &mut rng)).unwrap();
+        }
+        let done = server.run_until_drained().unwrap();
+        assert_eq!(done.len(), 8);
+        let _ = server.infer_now(sid, &feats(24, 6, &mut rng)).unwrap();
+        let ws = server.workspace();
+        assert_eq!(
+            ws.cached_partitions(),
+            0,
+            "budget-1 session took the parallel path: {:?}",
+            ws.stats()
+        );
+        assert_eq!(ws.stats().partition_misses, 0, "{:?}", ws.stats());
+
+        // raising the budget via the per-session override engages the
+        // pool (partitions appear), with identical outputs
+        server.set_session_threads(sid, 3).unwrap();
+        assert_eq!(server.session_threads(sid), 3);
+        let x = feats(24, 6, &mut rng);
+        let wide = server.infer_now(sid, &x).unwrap();
+        assert!(server.workspace().cached_partitions() > 0);
+        server.set_session_threads(sid, 0).unwrap(); // back to the default
+        assert_eq!(server.session_threads(sid), 1);
+        let narrow = server.infer_now(sid, &x).unwrap();
+        assert_eq!(wide.data, narrow.data, "thread budget must not change numerics");
+    }
+
+    #[test]
+    fn session_thread_budget_resolution_order() {
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 2,
+            quantum: 2,
+            threads: 3,
+            session_threads: 0, // inherit `threads`
+            ..ServeConfig::default()
+        });
+        let adj = ring_graph(8);
+        let sid = add_session(&mut server, "budget-order", &adj, 4);
+        assert_eq!(server.session_threads(sid), 3);
+        server.set_session_threads(sid, 2).unwrap();
+        assert_eq!(server.session_threads(sid), 2);
+        server.set_session_threads(sid, 0).unwrap();
+        assert_eq!(server.session_threads(sid), 3);
+        // unknown sessions are rejected
+        assert!(server.set_session_threads(SessionId(99), 1).is_err());
     }
 
     #[test]

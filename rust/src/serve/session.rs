@@ -17,6 +17,7 @@ use crate::autotune::{KernelRegistry, Tuner, TuningDb};
 use crate::error::{Error, Result};
 use crate::gnn::{GnnModel, ModelParams, ParamSet};
 use crate::kernels::{prepare_format, KernelChoice, KernelWorkspace};
+use crate::plan::ExecutionPlan;
 use crate::sparse::Csr;
 
 /// Opaque handle to a registered serving session.
@@ -42,12 +43,27 @@ pub struct ServeSession {
     pub preconverted: usize,
     params: ParamSet,
     operand: SpmmOperand,
+    /// The frozen execution plan every request interprets — the same IR
+    /// training executes, fused per the tuning DB's measured `fuse_relu`
+    /// wins when the session was warm-started.
+    plan: ExecutionPlan,
 }
 
 impl ServeSession {
     /// The normalised-adjacency SpMM operand (workspace attached).
     pub fn operand(&self) -> &SpmmOperand {
         &self.operand
+    }
+
+    /// The frozen execution plan requests are served with.
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
+    }
+
+    /// How many `Spmm→Relu` edges the tuning DB justified fusing in this
+    /// session's plan.
+    pub fn fused_ops(&self) -> usize {
+        self.plan.fused_op_count()
     }
 
     /// The frozen trained parameters.
@@ -157,12 +173,16 @@ impl SessionRegistry {
         let operand = SpmmOperand::uncached(a, name)
             .with_workspace(Arc::clone(&self.workspace), graph_id);
 
+        // one lowering point: the same plan training executed, re-lowered
+        // for this session's frozen dims — its width view drives both the
+        // warm-start loop and the fusion decision below
+        let mut plan = model.lower(dims, model.norm_kind());
         let mut warm_started = 0;
         let mut preconverted = 0;
         if let Some((tuner, db, max_batch)) = warm {
             let registry = KernelRegistry::global();
             let mut prepared: Vec<KernelChoice> = Vec::new();
-            for k in model.serving_spmm_widths(dims, max_batch) {
+            for k in plan.spmm_shapes_batched(max_batch) {
                 if let Some(choice) = tuner.warm_start(name, k, registry, db) {
                     warm_started += 1;
                     // A tuned format choice is materialised into the shared
@@ -178,6 +198,12 @@ impl SessionRegistry {
                     }
                 }
             }
+            // fuse exactly the edges the training-time tuner measured
+            // faster (per-request widths; coalesced batches inherit the
+            // decision) — no serving-time measurement, like the kernel
+            // warm-start above
+            let profile = tuner.profile.name.clone();
+            plan = plan.fuse_spmm_relu(|k| db.fused_relu_profitable(name, &profile, k));
         }
 
         let id = SessionId(self.sessions.len());
@@ -190,6 +216,7 @@ impl SessionRegistry {
             preconverted,
             params,
             operand,
+            plan,
         }));
         Ok(id)
     }
@@ -359,5 +386,48 @@ mod tests {
         reg.close(id).unwrap();
         assert_eq!(reg.workspace().cached_formats(), 0);
         assert!(registry.binding(name, 8, Semiring::Sum).is_none());
+    }
+
+    #[test]
+    fn warm_start_fuses_plan_where_db_measured_a_win() {
+        let ds = karate_club();
+        let dims = dims_for(&ds, 8);
+        let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+        // GCN's fusable edge runs at K = hidden = 8: a recorded win there
+        // fuses the session plan; anything else leaves it unfused
+        let mut db = TuningDb::default();
+        db.put(
+            "sess-fused",
+            "amd-epyc",
+            8,
+            DbEntry { fuse_relu: Some(1.8), ..DbEntry::default() },
+        );
+        let mut reg = SessionRegistry::new();
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let id = reg
+            .register("sess-fused", GnnModel::Gcn, dims, params, &ds.adj, Some((&tuner, &db, 2)))
+            .unwrap();
+        assert_eq!(reg.get(id).unwrap().fused_ops(), 1);
+
+        // a measured loss keeps the plan unfused
+        let mut db = TuningDb::default();
+        db.put(
+            "sess-unfused",
+            "amd-epyc",
+            8,
+            DbEntry { fuse_relu: Some(0.7), ..DbEntry::default() },
+        );
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let id = reg
+            .register("sess-unfused", GnnModel::Gcn, dims, params, &ds.adj, Some((&tuner, &db, 2)))
+            .unwrap();
+        assert_eq!(reg.get(id).unwrap().fused_ops(), 0);
+
+        // no warm-start, no measurements → never fused
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let id =
+            reg.register("sess-cold", GnnModel::Gcn, dims, params, &ds.adj, None).unwrap();
+        assert_eq!(reg.get(id).unwrap().fused_ops(), 0);
+        assert_eq!(reg.get(id).unwrap().plan().spmm_shapes(), vec![2, 8]);
     }
 }

@@ -7,4 +7,4 @@ mod trainer;
 
 pub use backend::Backend;
 pub use optimizer::{Optimizer, OptimizerKind};
-pub use trainer::{TrainConfig, TrainReport, Trainer};
+pub use trainer::{FusePolicy, TrainConfig, TrainReport, Trainer};

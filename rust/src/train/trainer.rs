@@ -18,9 +18,26 @@ use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::gnn::{masked_accuracy, GnnModel, ModelParams, ParamSet};
 use crate::kernels::KernelWorkspace;
+use crate::plan::{execute_taped, ExecutionPlan};
 use crate::runtime::HloGnnTrainer;
 
 use super::{Backend, Optimizer, OptimizerKind};
+
+/// When to rewrite fusable `Spmm→Relu` chains in the lowered plan
+/// ([`ExecutionPlan::fuse_spmm_relu`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FusePolicy {
+    /// Fuse exactly the edges the tuner measured faster (the `fuse_relu`
+    /// entries a `NativeTuned` setup records); backends that don't tune
+    /// stay unfused. The production default.
+    #[default]
+    Auto,
+    /// Fuse every fusable edge, unmeasured — deterministic fusion for
+    /// tests and the fused-vs-unfused bench.
+    Always,
+    /// Never fuse.
+    Never,
+}
 
 /// Trainer configuration.
 #[derive(Clone, Debug)]
@@ -39,6 +56,8 @@ pub struct TrainConfig {
     pub artifacts_dir: Option<PathBuf>,
     /// Skip the tuning step for `NativeTuned` (use registry as-is).
     pub skip_tuning: bool,
+    /// Fusion policy for the lowered plan.
+    pub fuse: FusePolicy,
 }
 
 impl Default for TrainConfig {
@@ -51,6 +70,7 @@ impl Default for TrainConfig {
             threads: 1,
             artifacts_dir: None,
             skip_tuning: false,
+            fuse: FusePolicy::Auto,
         }
     }
 }
@@ -126,6 +146,9 @@ pub struct Trainer {
     cache: BackpropCache,
     setup_secs: f64,
     graph_id: u64,
+    /// The lowered (and, per [`FusePolicy`], fused) execution plan every
+    /// native forward — training step and predict alike — interprets.
+    plan: ExecutionPlan,
     /// Feature matrix shared with every step's tape (no per-epoch copy;
     /// registered as a no-grad input so backward skips its dX GEMM).
     features: Arc<crate::dense::Dense>,
@@ -161,6 +184,9 @@ impl Trainer {
             classes: dataset.num_classes,
         };
         let workspace = Arc::new(KernelWorkspace::new());
+        // ONE lowering point: training, predict, and (via the tuner's
+        // width view) kernel selection all consume this plan.
+        let mut plan = model.lower(dims, model.norm_kind());
 
         let engine = match backend {
             Backend::Hlo => {
@@ -173,9 +199,10 @@ impl Trainer {
             _ => {
                 let operand =
                     Self::build_operand(model, backend, dataset, &cache, graph_id, &workspace)?;
-                // NativeTuned: bind tuned kernels for the Ks this model will
+                // NativeTuned: bind tuned kernels for the Ks this plan will
                 // actually run SpMM at, then engage routing (= patch()).
-                if backend.uses_tuned_kernels() && !cfg.skip_tuning {
+                let tuned = backend.uses_tuned_kernels() && !cfg.skip_tuning;
+                if tuned {
                     let tuner = Tuner::with_config(
                         HardwareProfile::named("host")?,
                         TuneConfig { ks: vec![], reps: 1, warmup: 0, threads: cfg.threads },
@@ -183,9 +210,21 @@ impl Trainer {
                     let registry = KernelRegistry::global();
                     registry.set_patched(true);
                     let mut db = TuningDb::default();
-                    // exactly the widths this model's SpMM calls will hit
-                    for k in model.spmm_widths(dims) {
+                    // exactly the widths this plan's SpMM ops will hit
+                    for k in plan.spmm_shapes() {
                         tuner.tune(&dataset.name, &operand.a, k, registry, &mut db)?;
+                    }
+                    if cfg.fuse == FusePolicy::Auto {
+                        // measure the fused-epilogue family at each fusable
+                        // width; the rewrite below only takes edges that
+                        // measured faster
+                        for k in plan.fusable_spmm_widths() {
+                            tuner.tune_fused_relu(&dataset.name, &operand.a, k, &mut db)?;
+                        }
+                        let profile = tuner.profile.name.clone();
+                        plan = plan.fuse_spmm_relu(|k| {
+                            db.fused_relu_profitable(&dataset.name, &profile, k)
+                        });
                     }
                 }
                 let params = model.init_params(dims, cfg.seed);
@@ -193,6 +232,10 @@ impl Trainer {
                 Engine::Native { operand, params, optimizer }
             }
         };
+        match cfg.fuse {
+            FusePolicy::Always => plan = plan.fuse_spmm_relu(|_| true),
+            FusePolicy::Auto | FusePolicy::Never => {}
+        }
 
         Ok(Trainer {
             model,
@@ -202,6 +245,7 @@ impl Trainer {
             cache,
             setup_secs: t0.elapsed().as_secs_f64(),
             graph_id,
+            plan,
             features: Arc::new(dataset.features.clone()),
             workspace,
         })
@@ -298,7 +342,7 @@ impl Trainer {
                 for (name, value) in params.iter() {
                     vars.insert(name.clone(), tape.input(value.clone()));
                 }
-                let logits = self.model.forward(&mut tape, operand, x, &vars)?;
+                let logits = execute_taped(&self.plan, &mut tape, operand, x, &vars)?;
                 let loss =
                     tape.softmax_xent(logits, &dataset.labels, Some(&dataset.train_mask))?;
                 tape.backward(loss)?;
@@ -340,7 +384,7 @@ impl Trainer {
         for (name, value) in params.iter() {
             vars.insert(name.clone(), tape.input(value.clone()));
         }
-        let logits = self.model.forward(&mut tape, &operand, x, &vars)?;
+        let logits = execute_taped(&self.plan, &mut tape, &operand, x, &vars)?;
         Ok(tape.value(logits).clone())
     }
 
@@ -365,6 +409,12 @@ impl Trainer {
     /// The model this trainer was built for.
     pub fn model(&self) -> GnnModel {
         self.model
+    }
+
+    /// The execution plan every native forward interprets (lowered at
+    /// construction; fused per the configured [`FusePolicy`]).
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
     }
 
     /// Clone out the current parameters so they can be frozen into a
@@ -462,6 +512,42 @@ mod tests {
         assert!(stats.partition_hits > stats.partition_misses, "{stats:?}");
         // epoch outputs recycle into later epochs' buffers
         assert!(stats.buffer_reuses > stats.buffer_allocs, "{stats:?}");
+    }
+
+    /// The fusion pass end-to-end in training: a fused-plan trainer's
+    /// whole loss trajectory and final parameters are identical to the
+    /// unfused trainer's — the fused op changes cost, never numerics.
+    #[test]
+    fn fused_training_trajectory_is_identical() {
+        let ds = karate_club();
+        let run = |fuse: FusePolicy| {
+            let cfg = TrainConfig { fuse, ..quick_cfg() };
+            let mut t = Trainer::new(GnnModel::Gcn, Backend::NativeTuned, cfg, &ds).unwrap();
+            let report = t.fit(&ds).unwrap();
+            (report, t.export_params().unwrap(), t.plan().fused_op_count())
+        };
+        let (fused_report, fused_params, fused_ops) = run(FusePolicy::Always);
+        let (plain_report, plain_params, plain_ops) = run(FusePolicy::Never);
+        assert_eq!(fused_ops, 1, "GCN layer 0 must fuse under Always");
+        assert_eq!(plain_ops, 0);
+        assert_eq!(fused_report.losses, plain_report.losses, "loss trajectories diverged");
+        assert!(fused_report.final_loss < fused_report.losses[0]);
+        for (name, want) in plain_params.iter() {
+            let got = fused_params.get(name).unwrap();
+            assert_eq!(got.data, want.data, "param '{name}' diverged under fusion");
+        }
+    }
+
+    #[test]
+    fn auto_fusion_only_rewrites_measured_wins() {
+        // skip_tuning leaves Auto with no measurements → no fusion
+        let ds = karate_club();
+        let t = Trainer::new(GnnModel::Gcn, Backend::NativeTrusted, quick_cfg(), &ds).unwrap();
+        assert_eq!(t.plan().fused_op_count(), 0);
+        // models with no fusable chain never fuse, whatever the policy
+        let cfg = TrainConfig { fuse: FusePolicy::Always, ..quick_cfg() };
+        let t = Trainer::new(GnnModel::Gin, Backend::NativeTrusted, cfg, &ds).unwrap();
+        assert_eq!(t.plan().fused_op_count(), 0);
     }
 
     #[test]

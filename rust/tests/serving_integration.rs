@@ -209,7 +209,7 @@ fn session_serves_from_tuned_format_without_request_time_conversion() {
     let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
     let mut db = TuningDb::default();
     let max_batch = 4usize;
-    for k in model.serving_spmm_widths(dims, max_batch) {
+    for k in model.lower(dims, model.norm_kind()).spmm_shapes_batched(max_batch) {
         db.put(
             name,
             "amd-epyc",

@@ -2,9 +2,11 @@
 # Emit BENCH_kernels.json — the machine-readable kernel perf snapshot:
 # per (graph, op, kernel, threads) cell a `format` field (csr / sell(C,σ)
 # / sorted-csr) and `speedup` vs the trusted-CSR baseline, so the
-# sparse-format axis is tracked PR-over-PR, plus the pool-vs-spawn
-# per-call overhead microbenchmark. Run from anywhere; extra args pass
-# through to cargo bench. Set ISPLIB_BENCH_QUICK=1 for a fast smoke run.
+# sparse-format axis is tracked PR-over-PR; a `plan` section with the
+# fused-vs-unfused Spmm→Relu epilogue speedup per (graph, model) through
+# the whole inference ExecutionPlan; plus the pool-vs-spawn per-call
+# overhead microbenchmark. Run from anywhere; extra args pass through to
+# cargo bench. Set ISPLIB_BENCH_QUICK=1 for a fast smoke run.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
