@@ -18,6 +18,14 @@
 //!   `execute_inference` over a warmed workspace. Models with no fusable
 //!   edge report `fused_ops = 0` and a 1.0× speedup — coverage is
 //!   explicit, not silently dropped.
+//! * `fused_formats` — per (graph × matrix format): the fused
+//!   SpMM+bias+ReLU epilogue kernel vs the same format's unfused chain
+//!   (SpMM then separate bias/relu passes), `speedup` = unfused/fused —
+//!   the cell-level evidence behind the tuner's joint (format, fuse)
+//!   decision.
+//! * `inplace` — copying (`_into`) vs in-place dense-op kernels
+//!   (relu / bias_add / add), `speedup` = copy/in-place — what in-place
+//!   slot execution saves per eligible plan op.
 //! * `overhead` — the repeated-SpMM microbenchmark behind the worker-pool
 //!   PR's acceptance bar: the same small graph, 100 back-to-back parallel
 //!   calls, comparing the persistent worker pool against the legacy
@@ -38,7 +46,8 @@ use isplib::data::spec_by_name;
 use isplib::dense::Dense;
 use isplib::gnn::{GnnModel, ModelParams};
 use isplib::kernels::{
-    prepare_format, spmm_with_workspace, KernelChoice, KernelWorkspace, Semiring, TILED_KTS,
+    prepare_format, spmm_fused_relu_with_workspace, spmm_with_workspace, KernelChoice,
+    KernelWorkspace, Semiring, TILED_KTS,
 };
 use isplib::plan::{execute_inference, ExecutionPlan};
 use isplib::sparse::{Coo, Csr};
@@ -287,6 +296,154 @@ fn main() {
         }
     }
 
+    // --- fused_formats: fused epilogue vs unfused chain, per format ------
+    // The joint format×fusion question the tuner answers, measured
+    // directly: on each graph and each matrix representation, the fused
+    // SpMM+bias+ReLU kernel against the SAME representation's unfused
+    // chain (SpMM, then separate bias-broadcast and ReLU passes). The
+    // `speedup` field is unfused-over-fused — > 1 means fusing pays on
+    // that format, which is what the acceptance bar checks on the
+    // short-row hub graph for SELL/sorted-CSR.
+    let mut ff_rows = Vec::new();
+    for (gi, (gname, a)) in graphs.iter().enumerate() {
+        let ws = KernelWorkspace::new();
+        let graph_id = 100 + gi as u64;
+        let k = 64usize;
+        let x = Dense::uniform(a.rows, k, 1.0, &mut rng).map(|v| v - 0.5);
+        let bias: Vec<f32> = (0..k).map(|i| (i as f32) * 0.01 - 0.3).collect();
+        for choice in [
+            KernelChoice::Trusted,
+            KernelChoice::Sell { c: 4, sigma: 32 },
+            KernelChoice::Sell { c: 8, sigma: 64 },
+            KernelChoice::SortedCsr,
+        ] {
+            prepare_format(a, choice, &ws, graph_id);
+            for threads in [1usize, 4] {
+                let unfused_ns = time_case(cfg, "fused-formats-unfused", || {
+                    let y = spmm_with_workspace(
+                        a,
+                        &x,
+                        Semiring::Sum,
+                        choice,
+                        threads,
+                        Some((&ws, graph_id)),
+                    )
+                    .unwrap();
+                    let mut h = ws.take_dense(y.rows, y.cols);
+                    y.add_row_broadcast_into(&bias, &mut h).unwrap();
+                    let mut r = ws.take_dense(y.rows, y.cols);
+                    h.relu_into(&mut r).unwrap();
+                    std::hint::black_box(&r.data[..]);
+                    ws.recycle(y.data);
+                    ws.recycle(h.data);
+                    ws.recycle(r.data);
+                })
+                .median_secs
+                    * 1e9;
+                let fused_ns = time_case(cfg, "fused-formats-fused", || {
+                    let y = spmm_fused_relu_with_workspace(
+                        a,
+                        &x,
+                        Some(&bias),
+                        choice,
+                        threads,
+                        Some((&ws, graph_id)),
+                    )
+                    .unwrap();
+                    std::hint::black_box(&y.data[..]);
+                    ws.recycle(y.data);
+                })
+                .median_secs
+                    * 1e9;
+                let speedup = unfused_ns / fused_ns.max(1e-9);
+                println!(
+                    "fused_formats graph={gname:<9} format={:<15} k={k} threads={threads} \
+                     unfused {unfused_ns:>12.0} ns/iter  fused {fused_ns:>12.0} ns/iter  \
+                     {speedup:>5.2}x",
+                    choice.format_label()
+                );
+                ff_rows.push(Json::obj(vec![
+                    ("graph", Json::str(gname)),
+                    ("format", Json::str(&choice.format_label())),
+                    ("kernel", Json::str(&choice.label())),
+                    ("k", Json::num(k as f64)),
+                    ("threads", Json::num(threads as f64)),
+                    ("unfused_ns_per_iter", Json::num(unfused_ns)),
+                    ("fused_ns_per_iter", Json::num(fused_ns)),
+                    ("speedup", Json::num(speedup)),
+                ]));
+            }
+        }
+    }
+
+    // --- inplace: copying vs in-place dense ops --------------------------
+    // What in-place slot execution buys per eligible plan op: the `_into`
+    // kernels write a second matrix the next op immediately re-reads; the
+    // `_inplace` twins mutate the dying input. `speedup` is copy-over-
+    // in-place ns.
+    let mut ip_rows = Vec::new();
+    let (ip_rows_n, ip_cols_n) = (env_usize("ISPLIB_BENCH_INPLACE_ROWS", 8192), 64usize);
+    let src = Dense::uniform(ip_rows_n, ip_cols_n, 1.0, &mut rng).map(|v| v - 0.5);
+    let rhs = Dense::uniform(ip_rows_n, ip_cols_n, 1.0, &mut rng);
+    let bias_row: Vec<f32> = (0..ip_cols_n).map(|i| i as f32 * 0.01).collect();
+    let mut out = Dense::zeros(ip_rows_n, ip_cols_n);
+    let mut buf = src.clone();
+    let mut cases: Vec<(&str, f64, f64)> = Vec::new();
+    let relu_copy = time_case(cfg, "relu_into", || {
+        src.relu_into(&mut out).unwrap();
+        std::hint::black_box(&out.data[..]);
+    })
+    .median_secs
+        * 1e9;
+    let relu_inplace = time_case(cfg, "relu_inplace", || {
+        buf.relu_inplace();
+        std::hint::black_box(&buf.data[..]);
+    })
+    .median_secs
+        * 1e9;
+    cases.push(("relu", relu_copy, relu_inplace));
+    let bias_copy = time_case(cfg, "bias_into", || {
+        src.add_row_broadcast_into(&bias_row, &mut out).unwrap();
+        std::hint::black_box(&out.data[..]);
+    })
+    .median_secs
+        * 1e9;
+    let bias_inplace = time_case(cfg, "bias_inplace", || {
+        buf.add_row_broadcast_inplace(&bias_row).unwrap();
+        std::hint::black_box(&buf.data[..]);
+    })
+    .median_secs
+        * 1e9;
+    cases.push(("bias_add", bias_copy, bias_inplace));
+    let add_copy = time_case(cfg, "add_into", || {
+        src.add_into(&rhs, &mut out).unwrap();
+        std::hint::black_box(&out.data[..]);
+    })
+    .median_secs
+        * 1e9;
+    let add_inplace = time_case(cfg, "add_inplace", || {
+        buf.add_inplace(&rhs).unwrap();
+        std::hint::black_box(&buf.data[..]);
+    })
+    .median_secs
+        * 1e9;
+    cases.push(("add", add_copy, add_inplace));
+    for (op, copy_ns, inplace_ns) in cases {
+        let speedup = copy_ns / inplace_ns.max(1e-9);
+        println!(
+            "inplace op={op:<9} ({ip_rows_n}x{ip_cols_n}) copy {copy_ns:>12.0} ns/iter  \
+             in-place {inplace_ns:>12.0} ns/iter  {speedup:>5.2}x"
+        );
+        ip_rows.push(Json::obj(vec![
+            ("op", Json::str(op)),
+            ("rows", Json::num(ip_rows_n as f64)),
+            ("cols", Json::num(ip_cols_n as f64)),
+            ("copy_ns_per_iter", Json::num(copy_ns)),
+            ("inplace_ns_per_iter", Json::num(inplace_ns)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+
     // --- repeated-SpMM per-call overhead: pool vs spawn-per-call ---------
     // Small, low-work graph: fixed costs dominate the O(nnz·K) math.
     let mut coo = Coo::new(2048, 2048);
@@ -330,6 +487,8 @@ fn main() {
         ("workloads", workloads),
         ("kernels", Json::Arr(rows)),
         ("plan", Json::Arr(plan_rows)),
+        ("fused_formats", Json::Arr(ff_rows)),
+        ("inplace", Json::Arr(ip_rows)),
         ("overhead", Json::obj(vec![
             ("calls", Json::num(calls as f64)),
             ("threads", Json::num(2.0)),

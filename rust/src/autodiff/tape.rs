@@ -266,8 +266,14 @@ impl Tape {
         let bias_row = bv.as_ref().map(|b| &b.data[..]);
         let value = match operand.impl_kind {
             SpmmImpl::Kernel => {
+                // the fused family is format-routed exactly like the plain
+                // one: the tuner's joint (format, fuse) decision resolves
+                // through the registry, so a SELL- or sorted-CSR-tuned
+                // graph keeps its layout through the fused epilogue
+                let choice =
+                    KernelRegistry::global().resolve(&operand.context, xv.cols, Semiring::Sum);
                 let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_id));
-                spmm_fused_relu_with_workspace(&operand.a, &xv, bias_row, self.threads, ws)?
+                spmm_fused_relu_with_workspace(&operand.a, &xv, bias_row, choice, self.threads, ws)?
             }
             _ => {
                 let mut y = self.spmm_forward_value(operand, &xv)?;

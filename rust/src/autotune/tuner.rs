@@ -15,7 +15,7 @@ use crate::dense::Dense;
 use crate::error::Result;
 use crate::util::json::Json;
 use crate::kernels::{prepare_format, spmm_with_workspace, KernelChoice, KernelWorkspace, Semiring};
-use crate::sparse::{Csr, RowLenStats};
+use crate::sparse::{Csr, RowLenStats, Sell};
 
 use super::{HardwareProfile, KernelRegistry, RegistryEntry, TuningPoint, TuningReport};
 
@@ -70,13 +70,18 @@ pub struct DbEntry {
     /// True when the row-length-sorted CSR format won.
     pub sorted: bool,
     /// Measured speedup over trusted. `0.0` (the default) marks an entry
-    /// whose kernel-family search has **not** run — e.g. a placeholder
-    /// created by [`Tuner::tune_fused_relu`] on an untuned width —
-    /// and is never treated as a warm-startable decision.
+    /// whose kernel search has **not** run — a legacy placeholder from DBs
+    /// written before [`Tuner::tune_fused_relu`] became the joint
+    /// format×fusion search — and is never treated as a warm-startable
+    /// decision.
     pub speedup: f64,
     /// Measured speedup of the fused SpMM+bias+ReLU epilogue kernel over
     /// the unfused chain (this entry's SpMM choice followed by separate
-    /// bias-broadcast and ReLU passes) at this width. `None` means the
+    /// bias-broadcast and ReLU passes), both routed through this entry's
+    /// format, at this width. Since the joint search
+    /// ([`Tuner::tune_fused_relu`]) picks `(choice, fuse_relu)` as one
+    /// decision, this exceeds 1 exactly when the winning cell of the
+    /// format×{fused, unfused} cross product was fused. `None` means the
     /// fused family was never measured here — the plan fusion pass then
     /// leaves the edge unfused. Absent from pre-fusion DBs (JSON
     /// back-compatible: a missing key loads as `None`).
@@ -305,9 +310,31 @@ impl Tuner {
         out
     }
 
+    /// The `(C, σ)` SELL-C-σ pairs searched for THIS dataset: the
+    /// profile's fixed pairs (σ ∈ {8C, 32C}) plus, when the row-length
+    /// tail is heavy (`skew ≥ 2`), one **data-driven "p99 window"** per
+    /// slice height — σ = 100·C, the window length at which the ~1% tail
+    /// of ≥ p99-length rows fills exactly one C-row slice, so every
+    /// window's hubs pack together instead of inflating several slices'
+    /// padding. Whatever wins is persisted in the [`DbEntry`] like any
+    /// other `(C, σ)` decision, so the per-dataset σ warm-starts.
+    pub fn candidate_sell_params(&self, stats: &RowLenStats) -> Vec<(usize, usize)> {
+        let mut out = self.profile.candidate_sell_params();
+        if stats.skew() >= 2.0 {
+            for (c, _) in self.profile.candidate_sell_params() {
+                let p99_window = (c, Sell::effective_sigma(c, c * 100));
+                if !out.contains(&p99_window) {
+                    out.push(p99_window);
+                }
+            }
+        }
+        out
+    }
+
     /// [`Tuner::candidates`] plus the sparse-format axis, pruned by the
-    /// graph's row-length statistics: SELL-C-σ (profile-chosen `(C, σ)`
-    /// pairs) and sorted CSR join the search only when
+    /// graph's row-length statistics: SELL-C-σ
+    /// ([`Tuner::candidate_sell_params`] — profile pairs plus the
+    /// data-driven σ) and sorted CSR join the search only when
     /// [`RowLenStats::format_promising`] says the shape can pay — short
     /// mean rows or a heavy tail. Long uniform rows skip the format
     /// candidates entirely, so the search space doesn't explode on graphs
@@ -315,7 +342,7 @@ impl Tuner {
     pub fn candidates_with_formats(&self, k: usize, stats: &RowLenStats) -> Vec<KernelChoice> {
         let mut out = self.candidates(k);
         if stats.format_promising() {
-            for (c, sigma) in self.profile.candidate_sell_params() {
+            for (c, sigma) in self.candidate_sell_params(stats) {
                 let choice = KernelChoice::Sell { c, sigma };
                 if choice.applicable(k, Semiring::Sum) {
                     out.push(choice);
@@ -384,8 +411,8 @@ impl Tuner {
     ) -> Option<KernelChoice> {
         let e = db.get(dataset, &self.profile.name, k)?;
         if e.speedup <= 0.0 {
-            // placeholder entry (e.g. only the fused family was measured
-            // here, via tune_fused_relu): the kernel search never ran, so
+            // legacy placeholder entry (a pre-joint-search DB that only
+            // measured the fused family): the kernel search never ran, so
             // there is no decision to warm-start — and a later tune() must
             // not mistake it for one either
             return None;
@@ -433,70 +460,61 @@ impl Tuner {
         Ok(best_choice)
     }
 
-    /// Measure the **fused epilogue family** at `(dataset, K)`: the fused
-    /// SpMM+bias+ReLU kernel
-    /// ([`spmm_fused_relu_with_workspace`](crate::kernels::spmm_fused_relu_with_workspace))
-    /// against the unfused chain — this entry's tuned SpMM choice followed
-    /// by separate bias-broadcast and ReLU passes, i.e. exactly what an
-    /// unfused plan executes. The measured fused-over-unfused speedup is
-    /// recorded in the entry's `fuse_relu` field (creating a trusted entry
-    /// if `(dataset, K)` was never tuned) and returned; the plan fusion
-    /// pass rewrites only edges whose recorded speedup exceeds 1. A DB
-    /// entry that already carries a measurement is returned as-is — like
-    /// [`Tuner::tune`], warm DBs skip re-measurement.
-    pub fn tune_fused_relu(
+    /// Median-of-reps chain timings for one candidate at a fusable width:
+    /// `(unfused_chain_secs, fused_secs)` where the unfused chain is this
+    /// choice's SpMM followed by separate bias-broadcast and ReLU passes
+    /// (exactly what an unfused plan executes) and the fused arm is the
+    /// format-routed fused kernel over the SAME choice. Conversions are
+    /// primed outside the timed region like [`Tuner::time_choice`].
+    fn time_fused_pair(
         &self,
-        dataset: &str,
         a: &Csr,
-        k: usize,
-        db: &mut TuningDb,
-    ) -> Result<f64> {
-        let existing = db.get(dataset, &self.profile.name, k).cloned().unwrap_or_default();
-        if let Some(s) = existing.fuse_relu {
-            return Ok(s);
-        }
-        let choice = existing.choice();
-        let ws = KernelWorkspace::new();
-        let x = deterministic_features(a.cols, k);
-        let bias = vec![0.1f32; k]; // values are irrelevant to timing
-        prepare_format(a, choice, &ws, TUNE_GRAPH_ID);
-
-        let time_unfused = || -> Result<f64> {
+        x: &Dense,
+        bias: &[f32],
+        choice: KernelChoice,
+        ws: &KernelWorkspace,
+    ) -> Result<(f64, f64)> {
+        prepare_format(a, choice, ws, TUNE_GRAPH_ID);
+        // the unfused chain's bias/relu outputs model the plan executor's
+        // parked slot buffers: allocated once, reused DIRTY across reps
+        // (the `_into` ops overwrite completely). Drawing zeroed buffers
+        // inside the timed region would overcharge the unfused arm by two
+        // full-matrix zero-fills the real executor never pays and bias
+        // the joint decision toward fusion.
+        let mut h = Dense::zeros(a.rows, x.cols);
+        let mut r = Dense::zeros(a.rows, x.cols);
+        let mut time_unfused = || -> Result<f64> {
             let t0 = Instant::now();
             let y = spmm_with_workspace(
                 a,
-                &x,
+                x,
                 Semiring::Sum,
                 choice,
                 self.config.threads,
-                Some((&ws, TUNE_GRAPH_ID)),
+                Some((ws, TUNE_GRAPH_ID)),
             )?;
-            let mut h = ws.take_dense(y.rows, y.cols);
-            y.add_row_broadcast_into(&bias, &mut h)?;
-            let mut r = ws.take_dense(y.rows, y.cols);
+            y.add_row_broadcast_into(bias, &mut h)?;
             h.relu_into(&mut r)?;
             let dt = t0.elapsed().as_secs_f64();
             std::hint::black_box(&r.data[..]);
             ws.recycle(y.data);
-            ws.recycle(h.data);
-            ws.recycle(r.data);
             Ok(dt)
         };
         let time_fused = || -> Result<f64> {
             let t0 = Instant::now();
             let y = crate::kernels::spmm_fused_relu_with_workspace(
                 a,
-                &x,
-                Some(&bias),
+                x,
+                Some(bias),
+                choice,
                 self.config.threads,
-                Some((&ws, TUNE_GRAPH_ID)),
+                Some((ws, TUNE_GRAPH_ID)),
             )?;
             let dt = t0.elapsed().as_secs_f64();
             std::hint::black_box(&y.data[..]);
             ws.recycle(y.data);
             Ok(dt)
         };
-
         for _ in 0..self.config.warmup {
             time_unfused()?;
             time_fused()?;
@@ -510,11 +528,81 @@ impl Tuner {
         }
         unfused.sort_by(|p, q| p.partial_cmp(q).unwrap());
         fused.sort_by(|p, q| p.partial_cmp(q).unwrap());
-        let (u, f) = (unfused[reps / 2], fused[reps / 2]);
-        let speedup = if f > 0.0 { u / f } else { 1.0 };
-        let entry = DbEntry { fuse_relu: Some(speedup), ..existing };
+        Ok((unfused[reps / 2], fused[reps / 2]))
+    }
+
+    /// **Joint format × fusion search** at a fusable `(dataset, K)`: every
+    /// candidate — trusted plus [`Tuner::candidates_with_formats`] — is
+    /// timed BOTH ways, as the unfused chain (SpMM → bias → ReLU over that
+    /// choice) and as the format-routed fused epilogue kernel. The winning
+    /// *cell* of that cross product decides the entry's kernel/format
+    /// choice AND its `fuse_relu` field in one stroke, so a graph whose
+    /// fastest fused cell is SELL-C-σ no longer loses fusion to a
+    /// CSR-only fused family (and vice versa: fusion can no longer pin a
+    /// width to CSR when SELL-fused is faster still).
+    ///
+    /// The recorded `fuse_relu` is the winner format's
+    /// unfused-chain-over-fused ratio, so it exceeds 1 **iff** the winning
+    /// cell is fused — [`TuningDb::fused_relu_profitable`] then gates the
+    /// plan rewrite, whatever the format. The entry's `speedup` is the
+    /// winner's unfused-chain speedup over the trusted chain (> 0, so the
+    /// decision warm-starts), the choice is (re)bound into `registry` —
+    /// overriding a prior spmm-only [`Tuner::tune`] decision at this
+    /// width, which is the point: one joint decision per shape. A DB entry
+    /// that already carries a `fuse_relu` measurement is honoured without
+    /// re-measurement — its kernel decision is warm-started into the
+    /// registry and the recorded ratio returned — so callers skip the
+    /// plain [`Tuner::tune`] at fusable widths entirely: this one call is
+    /// the whole decision there, cold or warm.
+    pub fn tune_fused_relu(
+        &self,
+        dataset: &str,
+        a: &Csr,
+        k: usize,
+        registry: &KernelRegistry,
+        db: &mut TuningDb,
+    ) -> Result<f64> {
+        if let Some(e) = db.get(dataset, &self.profile.name, k) {
+            // honour the warm entry only when it carries a real kernel
+            // decision too (speedup > 0): a legacy fuse_relu-only
+            // placeholder (pre-joint-search DB) would otherwise leave the
+            // width with no binding at all now that callers skip the
+            // plain tune() here — those fall through and get upgraded to
+            // a full joint entry by the measurement below.
+            if e.speedup > 0.0 {
+                if let Some(s) = e.fuse_relu {
+                    let _ = self.warm_start(dataset, k, registry, db);
+                    return Ok(s);
+                }
+            }
+        }
+        let stats = a.row_len_stats();
+        let ws = KernelWorkspace::new();
+        let x = deterministic_features(a.cols, k);
+        let bias = vec![0.1f32; k]; // values are irrelevant to timing
+
+        let mut candidates = vec![KernelChoice::Trusted];
+        for c in self.candidates_with_formats(k, &stats) {
+            if !candidates.contains(&c) {
+                candidates.push(c);
+            }
+        }
+        let trusted_pair = self.time_fused_pair(a, &x, &bias, KernelChoice::Trusted, &ws)?;
+        let mut winner = (KernelChoice::Trusted, trusted_pair.0, trusted_pair.1);
+        for &choice in candidates.iter().skip(1) {
+            let (u, f) = self.time_fused_pair(a, &x, &bias, choice, &ws)?;
+            if u.min(f) < winner.1.min(winner.2) {
+                winner = (choice, u, f);
+            }
+        }
+        let (choice, u, f) = winner;
+        let fuse_relu = if f > 0.0 { u / f } else { 1.0 };
+        let speedup = if u > 0.0 { trusted_pair.0 / u } else { 1.0 };
+        registry.bind(dataset, k, Semiring::Sum, RegistryEntry { choice, speedup });
+        let mut entry = DbEntry::from_choice(choice, speedup);
+        entry.fuse_relu = Some(fuse_relu);
         db.put(dataset, &self.profile.name, k, entry);
-        Ok(speedup)
+        Ok(fuse_relu)
     }
 }
 
@@ -627,7 +715,7 @@ mod tests {
         let candidates = tuner.candidates_with_formats(64, &skewed);
         let sell: Vec<_> =
             candidates.iter().filter(|c| matches!(c, KernelChoice::Sell { .. })).collect();
-        assert_eq!(sell.len(), tuner.profile.candidate_sell_params().len(), "{candidates:?}");
+        assert_eq!(sell.len(), tuner.candidate_sell_params(&skewed).len(), "{candidates:?}");
         assert!(candidates.contains(&KernelChoice::SortedCsr));
         // every format candidate routes (applicable) at this K
         for c in &candidates {
@@ -703,20 +791,37 @@ mod tests {
     }
 
     #[test]
-    fn tune_fused_relu_records_and_warm_starts() {
+    fn tune_fused_relu_joint_search_records_one_decision() {
         let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
         let a = graph(48, 3, 57);
+        let registry = KernelRegistry::new();
+        registry.set_patched(true);
         let mut db = TuningDb::default();
-        // no prior entry: measures and creates one on top of trusted
-        let s = tuner.tune_fused_relu("toy", &a, 16, &mut db).unwrap();
+        // no prior entry: the joint search measures the full
+        // format × {fused, unfused} cross product and records BOTH the
+        // kernel/format choice and the fused verdict in one entry
+        let s = tuner.tune_fused_relu("toy", &a, 16, &registry, &mut db).unwrap();
         assert!(s > 0.0);
-        let e = db.get("toy", "amd-epyc", 16).unwrap();
+        let e = db.get("toy", "amd-epyc", 16).unwrap().clone();
         assert_eq!(e.fuse_relu, Some(s));
-        assert_eq!(e.choice(), KernelChoice::Trusted);
+        assert!(e.speedup > 0.0, "the joint search IS a kernel decision: {e:?}");
+        assert!(e.choice().applicable(16, Semiring::Sum));
         assert_eq!(db.fused_relu_profitable("toy", "amd-epyc", 16), s > 1.0);
-        // a second call is a DB hit: the recorded value is returned verbatim
-        let again = tuner.tune_fused_relu("toy", &a, 16, &mut db).unwrap();
+        // ...which the registry carries and a later tune() warm-starts
+        // without re-measuring (the fused measurement survives)
+        assert_eq!(registry.binding("toy", 16, Semiring::Sum).unwrap().choice, e.choice());
+        let choice = tuner.tune("toy", &a, 16, &registry, &mut db).unwrap();
+        assert_eq!(choice, e.choice());
+        assert_eq!(db.get("toy", "amd-epyc", 16).unwrap().fuse_relu, Some(s));
+        // a second call is a DB hit: the recorded value is returned
+        // verbatim AND the joint decision warm-starts into a fresh
+        // registry (callers skip tune() at fusable widths, so this call
+        // is the only binding point there)
+        let fresh = KernelRegistry::new();
+        fresh.set_patched(true);
+        let again = tuner.tune_fused_relu("toy", &a, 16, &fresh, &mut db).unwrap();
         assert_eq!(again, s);
+        assert_eq!(fresh.binding("toy", 16, Semiring::Sum).unwrap().choice, e.choice());
         // a pre-recorded measurement is honoured without measuring, and
         // the fused field composes with a kernel-choice decision
         db.put(
@@ -725,7 +830,7 @@ mod tests {
             32,
             DbEntry { kb: Some(8), speedup: 2.0, fuse_relu: Some(1.7), ..DbEntry::default() },
         );
-        assert_eq!(tuner.tune_fused_relu("toy", &a, 32, &mut db).unwrap(), 1.7);
+        assert_eq!(tuner.tune_fused_relu("toy", &a, 32, &registry, &mut db).unwrap(), 1.7);
         assert!(db.fused_relu_profitable("toy", "amd-epyc", 32));
         assert_eq!(db.get("toy", "amd-epyc", 32).unwrap().choice(), KernelChoice::Generated {
             kb: 8
@@ -737,27 +842,67 @@ mod tests {
     }
 
     #[test]
-    fn fused_then_kernel_tuning_composes_in_either_order() {
-        // regression: tune_fused_relu on an untuned width creates a
-        // placeholder entry (speedup 0.0); a later tune() must still run
-        // the kernel search instead of warm-starting the placeholder, and
-        // must preserve the fused measurement it overwrites
+    fn joint_search_overrides_a_prior_spmm_only_decision() {
+        // tune() first (spmm-only axis), then the joint pass: whatever the
+        // joint winner is, DB and registry must agree afterwards — one
+        // decision per shape, never a format the fused verdict didn't see
         let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
         let a = graph(48, 3, 58);
         let registry = KernelRegistry::new();
         registry.set_patched(true);
         let mut db = TuningDb::default();
-        let fused = tuner.tune_fused_relu("order", &a, 16, &mut db).unwrap();
-        // the placeholder is not a warm-startable kernel decision
-        assert!(tuner.warm_start("order", 16, &registry, &db).is_none());
-        assert!(registry.binding("order", 16, Semiring::Sum).is_none());
-        let choice = tuner.tune("order", &a, 16, &registry, &mut db).unwrap();
+        tuner.tune("order", &a, 16, &registry, &mut db).unwrap();
+        assert!(db.get("order", "amd-epyc", 16).unwrap().fuse_relu.is_none());
+        let fused = tuner.tune_fused_relu("order", &a, 16, &registry, &mut db).unwrap();
         let e = db.get("order", "amd-epyc", 16).unwrap();
-        assert_eq!(e.choice(), choice);
-        assert!(e.speedup > 0.0, "kernel search must have really run: {e:?}");
-        assert_eq!(e.fuse_relu, Some(fused), "fused measurement survives the kernel tune");
-        // and the registry now carries the measured decision
-        assert!(registry.binding("order", 16, Semiring::Sum).is_some());
+        assert_eq!(e.fuse_relu, Some(fused));
+        assert!(e.speedup > 0.0);
+        assert_eq!(
+            registry.binding("order", 16, Semiring::Sum).unwrap().choice,
+            e.choice(),
+            "registry must carry the joint decision"
+        );
+        // a legacy placeholder (pre-joint DB: fuse_relu recorded, no
+        // kernel decision) is not warm-startable — and the joint pass
+        // re-measures and UPGRADES it to a full entry instead of
+        // honouring it (callers skip tune() here, so honouring it would
+        // leave the width unbound forever)
+        db.put("order", "amd-epyc", 64, DbEntry { fuse_relu: Some(1.2), ..DbEntry::default() });
+        assert!(tuner.warm_start("order", 64, &registry, &db).is_none());
+        let upgraded = tuner.tune_fused_relu("order", &a, 64, &registry, &mut db).unwrap();
+        let e64 = db.get("order", "amd-epyc", 64).unwrap();
+        assert_eq!(e64.fuse_relu, Some(upgraded));
+        assert!(e64.speedup > 0.0, "placeholder upgraded to a joint entry: {e64:?}");
+        assert!(registry.binding("order", 64, Semiring::Sum).is_some());
+    }
+
+    #[test]
+    fn sell_sigma_candidates_include_a_data_driven_window() {
+        let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+        // heavy tail: the p99 window (σ = 100·C, rounded to a C multiple)
+        // joins the profile's fixed pairs
+        let skewed = crate::sparse::RowLenStats { mean: 3.0, p50: 2, p99: 40, max: 120 };
+        let params = tuner.candidate_sell_params(&skewed);
+        let profile = tuner.profile.candidate_sell_params();
+        assert_eq!(&params[..profile.len()], &profile[..], "profile pairs stay first");
+        assert!(params.len() > profile.len(), "{params:?}");
+        for &(c, sigma) in &params[profile.len()..] {
+            assert_eq!(sigma, Sell::effective_sigma(c, c * 100), "{params:?}");
+            assert_eq!(sigma % c, 0);
+        }
+        // every pair is a valid, applicable SELL candidate
+        for &(c, sigma) in &params {
+            assert!(KernelChoice::Sell { c, sigma }.applicable(16, Semiring::Sum));
+        }
+        // the search space contains them
+        let cands = tuner.candidates_with_formats(16, &skewed);
+        for &(c, sigma) in &params {
+            assert!(cands.contains(&KernelChoice::Sell { c, sigma }), "{cands:?}");
+        }
+        // uniform rows: profile pairs only (and the format axis prunes
+        // entirely in candidates_with_formats)
+        let uniform = crate::sparse::RowLenStats { mean: 200.0, p50: 200, p99: 210, max: 220 };
+        assert_eq!(tuner.candidate_sell_params(&uniform), profile);
     }
 
     #[test]

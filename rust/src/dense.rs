@@ -274,6 +274,16 @@ impl Dense {
         self.map(|v| v.max(0.0))
     }
 
+    /// In-place ReLU: `self = max(self, 0)` — per element exactly the op
+    /// [`Dense::relu_into`] performs, minus the full-matrix write+read of
+    /// a second buffer. The plan executor uses this when the relu's input
+    /// value dies at the relu itself (in-place slot execution).
+    pub fn relu_inplace(&mut self) {
+        for v in &mut self.data {
+            *v = v.max(0.0);
+        }
+    }
+
     /// [`Dense::relu`] writing into a caller-provided same-shape output
     /// (contents are overwritten).
     pub fn relu_into(&self, out: &mut Dense) -> Result<()> {
@@ -291,9 +301,8 @@ impl Dense {
 
     /// Add a broadcast row vector (bias) to every row.
     pub fn add_row_broadcast(&self, bias: &[f32]) -> Result<Dense> {
-        Self::check_bias_len(bias, self.cols)?;
         let mut out = self.clone();
-        Self::add_row_broadcast_in_place(&mut out, bias);
+        out.add_row_broadcast_inplace(bias)?;
         Ok(out)
     }
 
@@ -308,8 +317,7 @@ impl Dense {
             )));
         }
         out.data.copy_from_slice(&self.data);
-        Self::add_row_broadcast_in_place(out, bias);
-        Ok(())
+        out.add_row_broadcast_inplace(bias)
     }
 
     fn check_bias_len(bias: &[f32], cols: usize) -> Result<()> {
@@ -322,12 +330,51 @@ impl Dense {
         Ok(())
     }
 
-    fn add_row_broadcast_in_place(out: &mut Dense, bias: &[f32]) {
-        for r in 0..out.rows {
-            for (o, &b) in out.row_mut(r).iter_mut().zip(bias.iter()) {
+    /// In-place bias broadcast: `self += 1·biasᵀ` — per element exactly
+    /// the `+` that [`Dense::add_row_broadcast_into`] applies after its
+    /// copy, so the in-place form is bitwise-equal with the copy elided.
+    pub fn add_row_broadcast_inplace(&mut self, bias: &[f32]) -> Result<()> {
+        Self::check_bias_len(bias, self.cols)?;
+        for r in 0..self.rows {
+            for (o, &b) in self.row_mut(r).iter_mut().zip(bias.iter()) {
                 *o += b;
             }
         }
+        Ok(())
+    }
+
+    /// In-place elementwise add with `self` as the **left** addend:
+    /// `self = self + rhs`, element-for-element the sum
+    /// [`Dense::add_into`] computes for `self.add_into(rhs, out)`.
+    pub fn add_inplace(&mut self, rhs: &Dense) -> Result<()> {
+        if self.rows != rhs.rows || self.cols != rhs.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "add_inplace: {}x{} vs {}x{}",
+                self.rows, self.cols, rhs.rows, rhs.cols
+            )));
+        }
+        for (o, &r) in self.data.iter_mut().zip(rhs.data.iter()) {
+            *o += r;
+        }
+        Ok(())
+    }
+
+    /// In-place elementwise add with `self` as the **right** addend:
+    /// `self = lhs + self`, element-for-element the sum
+    /// [`Dense::add_into`] computes for `lhs.add_into(self, out)` — used
+    /// when only the right operand of a plan `Add` dies at the
+    /// instruction.
+    pub fn radd_inplace(&mut self, lhs: &Dense) -> Result<()> {
+        if self.rows != lhs.rows || self.cols != lhs.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "radd_inplace: {}x{} vs {}x{}",
+                lhs.rows, lhs.cols, self.rows, self.cols
+            )));
+        }
+        for (o, &l) in self.data.iter_mut().zip(lhs.data.iter()) {
+            *o = l + *o;
+        }
+        Ok(())
     }
 
     /// Column-sum → vector of length `cols` (used for bias gradients).
@@ -564,6 +611,56 @@ mod tests {
         let mut summed = Dense::zeros(5, 19);
         relued.add_into(&biased, &mut summed).unwrap();
         assert_eq!(summed.data, want.data);
+    }
+
+    /// The in-place dense kernels against their `_into` twins, property-
+    /// style: for random shapes and values, `relu_inplace` /
+    /// `add_row_broadcast_inplace` / `add_inplace` / `radd_inplace` must
+    /// be BITWISE-equal to the copying forms — the plan executor swaps
+    /// them in whenever an input value dies at its consuming instruction,
+    /// and that swap must never change numerics.
+    #[test]
+    fn prop_inplace_kernels_bitwise_equal_into_twins() {
+        crate::util::check::forall("inplace == _into, bitwise", 64, |rng| {
+            let rows = 1 + rng.gen_range(12);
+            let cols = 1 + rng.gen_range(17);
+            let mk = |rng: &mut Rng| {
+                let data =
+                    (0..rows * cols).map(|_| rng.gen_range_f32(-2.0, 2.0)).collect::<Vec<_>>();
+                Dense { rows, cols, data }
+            };
+            let a = mk(rng);
+            let b = mk(rng);
+            let bias: Vec<f32> = (0..cols).map(|_| rng.gen_range_f32(-1.0, 1.0)).collect();
+
+            let mut want = Dense::zeros(rows, cols);
+            a.relu_into(&mut want).unwrap();
+            let mut got = a.clone();
+            got.relu_inplace();
+            assert_eq!(got.data, want.data, "relu");
+
+            a.add_row_broadcast_into(&bias, &mut want).unwrap();
+            let mut got = a.clone();
+            got.add_row_broadcast_inplace(&bias).unwrap();
+            assert_eq!(got.data, want.data, "bias");
+
+            a.add_into(&b, &mut want).unwrap();
+            let mut got = a.clone();
+            got.add_inplace(&b).unwrap();
+            assert_eq!(got.data, want.data, "add (lhs accumulator)");
+            let mut got = b.clone();
+            got.radd_inplace(&a).unwrap();
+            assert_eq!(got.data, want.data, "add (rhs accumulator)");
+        });
+    }
+
+    #[test]
+    fn inplace_kernels_reject_bad_shapes() {
+        let mut a = Dense::zeros(2, 3);
+        assert!(a.add_row_broadcast_inplace(&[0.0; 2]).is_err());
+        assert!(a.add_inplace(&Dense::zeros(3, 2)).is_err());
+        assert!(a.radd_inplace(&Dense::zeros(2, 2)).is_err());
+        assert!(a.add_inplace(&Dense::zeros(2, 3)).is_ok());
     }
 
     #[test]

@@ -11,14 +11,12 @@
 //! with `g` an [`EdgeOp`]. `EdgeOp::Copy` degenerates to plain SpMM;
 //! `EdgeOp::Dot` is the attention-style SDDMM·SpMM fusion.
 
-use std::sync::Arc;
-
 use crate::dense::Dense;
 use crate::error::{Error, Result};
 use crate::sparse::Csr;
 use crate::util::parallel;
 
-use super::{nnz_balanced_partition, split_rows_mut, KernelWorkspace};
+use super::{nnz_balanced_partition, split_rows_mut};
 
 /// Per-edge scalar function applied before aggregation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -106,84 +104,6 @@ pub fn fusedmm(
     Ok(y)
 }
 
-/// Fused SpMM + (optional bias +) ReLU — the FusedMM idiom applied to the
-/// GNN layer *epilogue* instead of the SDDMM prologue: each output row is
-/// aggregated and then biased + rectified while it is still cache-hot, so
-/// the unfused chain's two extra full passes over the `n × K` activation
-/// (one for the bias broadcast, one for the ReLU) disappear.
-///
-/// Bitwise contract: the accumulation is the trusted kernel's sum loop
-/// verbatim (every kernel family — generated, tiled, SELL, sorted CSR —
-/// accumulates each output element in the same non-zero-stream order, so
-/// they are all bitwise-equal for the sum semiring), and the epilogue
-/// applies exactly `(y + b).max(0)` per element, the same scalar ops
-/// [`Dense::add_row_broadcast_into`] followed by [`Dense::relu_into`]
-/// perform. Fusing therefore **cannot** change numerics — the plan-rewrite
-/// pass ([`crate::plan`]) relies on this being equality by construction,
-/// not by tolerance.
-///
-/// `bias`, when present, must have length `x.cols` (a `1 × K` broadcast
-/// row; batched callers tile it per coalesced request). Rows with no
-/// stored non-zeros still receive the epilogue — `relu(0 + b)` — exactly
-/// as the unfused chain would.
-pub fn spmm_fused_relu(a: &Csr, x: &Dense, bias: Option<&[f32]>, threads: usize) -> Result<Dense> {
-    spmm_fused_relu_with_workspace(a, x, bias, threads, None)
-}
-
-/// [`spmm_fused_relu`] drawing the output buffer from a shared
-/// [`KernelWorkspace`] and serving the NNZ partition from its per-graph
-/// cache — the same amortisation contract as
-/// [`spmm_with_workspace`](super::spmm_with_workspace).
-pub fn spmm_fused_relu_with_workspace(
-    a: &Csr,
-    x: &Dense,
-    bias: Option<&[f32]>,
-    threads: usize,
-    ws: Option<(&KernelWorkspace, u64)>,
-) -> Result<Dense> {
-    if a.cols != x.rows {
-        return Err(Error::ShapeMismatch(format!(
-            "spmm_fused_relu: A {}x{} @ X {}x{}",
-            a.rows, a.cols, x.rows, x.cols
-        )));
-    }
-    if let Some(b) = bias {
-        if b.len() != x.cols {
-            return Err(Error::ShapeMismatch(format!(
-                "spmm_fused_relu: bias len {} vs K {}",
-                b.len(),
-                x.cols
-            )));
-        }
-    }
-    let threads = if threads == 0 { parallel::current_num_threads() } else { threads };
-    let k = x.cols;
-    let mut y = match ws {
-        Some((w, _)) => w.take_dense(a.rows, k),
-        None => Dense::zeros(a.rows, k),
-    };
-    if a.rows == 0 || k == 0 {
-        return Ok(y);
-    }
-    // nnz == 0 runs the serial body too: the epilogue still visits every
-    // row (relu(0 + b)), but there is no aggregation work to balance.
-    if threads <= 1 || a.nnz() == 0 {
-        fused_relu_rows(a, x, bias, 0, a.rows, &mut y.data);
-        return Ok(y);
-    }
-    let ranges = match ws {
-        Some((w, graph_id)) => w.partition(graph_id, a, threads),
-        None => Arc::new(nnz_balanced_partition(a, threads)),
-    };
-    parallel::join_all(
-        split_rows_mut(&mut y.data, &ranges, k)
-            .into_iter()
-            .map(|(range, out)| move || fused_relu_rows(a, x, bias, range.start, range.end, out))
-            .collect(),
-    );
-    Ok(y)
-}
-
 /// The epilogue alone: `y = max(y + b, 0)` in place, element-for-element
 /// the same scalar ops as bias-broadcast-then-ReLU. The tape's baseline
 /// SpMM strategies (edge-wise, densified) apply this after their own
@@ -203,9 +123,13 @@ pub fn fused_relu_epilogue(y: &mut Dense, bias: Option<&[f32]>) -> Result<()> {
     Ok(())
 }
 
-/// Row-range body: trusted-order sum accumulation, then the epilogue on
-/// the completed row.
-fn fused_relu_rows(
+/// CSR row-range body of the fused SpMM+bias+ReLU family
+/// ([`spmm_fused_relu`](super::spmm_fused_relu)): trusted-order sum
+/// accumulation, then the epilogue on the completed row. The dispatcher
+/// routes every CSR-layout [`KernelChoice`](super::KernelChoice) here; the
+/// SELL-C-σ and sorted-CSR layouts have their own fused bodies in
+/// [`sell`](super::sell) built on the same [`epilogue_elems`] scalar ops.
+pub(crate) fn fused_relu_rows(
     a: &Csr,
     x: &Dense,
     bias: Option<&[f32]>,
@@ -224,22 +148,38 @@ fn fused_relu_rows(
                 *o += v * xv;
             }
         }
-        epilogue_rows(orow, k, bias);
+        epilogue_elems(orow, bias);
     }
 }
 
 #[inline]
 fn epilogue_rows(out: &mut [f32], k: usize, bias: Option<&[f32]>) {
     match bias {
-        Some(b) => {
+        Some(_) => {
             for row in out.chunks_mut(k) {
-                for (o, &bv) in row.iter_mut().zip(b.iter()) {
-                    *o = (*o + bv).max(0.0);
-                }
+                epilogue_elems(row, bias);
+            }
+        }
+        None => epilogue_elems(out, None),
+    }
+}
+
+/// The one definition of the fused epilogue's scalar ops:
+/// `o = (o + b).max(0)` per element (`o = o.max(0)` without a bias).
+/// `bias`, when present, must cover exactly `row`'s columns — callers
+/// working on a column sub-range slice the bias to match. Every fused
+/// kernel body (CSR, SELL-C-σ, sorted CSR) funnels through this, so
+/// "fused == unfused, bitwise" is a property of one function.
+#[inline]
+pub(crate) fn epilogue_elems(row: &mut [f32], bias: Option<&[f32]>) {
+    match bias {
+        Some(b) => {
+            for (o, &bv) in row.iter_mut().zip(b.iter()) {
+                *o = (*o + bv).max(0.0);
             }
         }
         None => {
-            for o in out.iter_mut() {
+            for o in row.iter_mut() {
                 *o = o.max(0.0);
             }
         }
@@ -304,7 +244,10 @@ fn fused_rows(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::{sddmm, spmm_dense_ref, spmm_trusted, Semiring};
+    use crate::kernels::{
+        sddmm, spmm_dense_ref, spmm_fused_relu, spmm_fused_relu_with_workspace, spmm_trusted,
+        KernelChoice, Semiring,
+    };
     use crate::sparse::Coo;
     use crate::util::rng::Rng;
 
@@ -466,8 +409,15 @@ mod tests {
         let plain = spmm_fused_relu(&a, &x, Some(&bias), 2).unwrap();
         let ws = KernelWorkspace::new();
         for round in 0..4 {
-            let y =
-                spmm_fused_relu_with_workspace(&a, &x, Some(&bias), 2, Some((&ws, 5))).unwrap();
+            let y = spmm_fused_relu_with_workspace(
+                &a,
+                &x,
+                Some(&bias),
+                KernelChoice::Trusted,
+                2,
+                Some((&ws, 5)),
+            )
+            .unwrap();
             assert_eq!(y.data, plain.data, "round {round}");
             ws.recycle(y.data);
         }

@@ -24,9 +24,12 @@
 //! dense-dense matmul) and [`fusedmm`] (the FusedMM SDDMM+SpMM fusion [8])
 //! — extended here with [`spmm_fused_relu`], the FusedMM idiom applied to
 //! the GNN layer *epilogue* (SpMM + bias + ReLU in one pass, bitwise-equal
-//! to the unfused chain; the plan fusion pass's target) — and the
-//! [`KernelWorkspace`] that amortises per-call fixed costs (partitioning,
-//! output allocation) across a training run.
+//! to the unfused chain; the plan fusion pass's target). The fused family
+//! is routed by [`KernelChoice`] like the plain one, with format-native
+//! fused bodies for SELL-C-σ and sorted CSR, so the tuner's format and
+//! fusion decisions **compose** instead of fusion forcing a CSR fallback.
+//! The [`KernelWorkspace`] amortises per-call fixed costs (partitioning,
+//! format conversion, output allocation) across a training run.
 //!
 //! All kernels are deterministic: parallelism partitions output rows, never
 //! reduction order within a row.
@@ -44,15 +47,16 @@ mod trusted;
 mod workspace;
 
 pub use dense_ref::spmm_dense_ref;
-pub use fusedmm::{
-    fused_relu_epilogue, fusedmm, spmm_fused_relu, spmm_fused_relu_with_workspace, EdgeOp,
-};
+pub use fusedmm::{fused_relu_epilogue, fusedmm, EdgeOp};
 pub use generated::{spmm_generated, spmm_generated_parallel, GENERATED_KBS};
 pub use partition::{nnz_balanced_partition, split_rows_mut, RowRange};
 pub use sddmm::sddmm;
 pub use sell::{sell_window_ranges, SELL_SLICE_HEIGHTS};
 pub use semiring::Semiring;
-pub use spmm_dispatch::{prepare_format, spmm, spmm_with_workspace, KernelChoice};
+pub use spmm_dispatch::{
+    prepare_format, spmm, spmm_fused_relu, spmm_fused_relu_with_workspace, spmm_with_workspace,
+    KernelChoice,
+};
 pub use tiled::{spmm_tiled, spmm_tiled_parallel, TILED_KTS};
 pub use trusted::{spmm_trusted, spmm_trusted_parallel};
 pub use workspace::{KernelWorkspace, WorkspaceStats};

@@ -212,12 +212,14 @@ fn prop_fusion_equivalence() {
 
 #[test]
 fn prop_fused_relu_bitwise_across_families() {
-    // The plan fusion pass's load-bearing invariant: the fused
-    // SpMM+bias+ReLU kernel is bitwise-equal to spmm → bias-broadcast →
-    // relu no matter WHICH kernel family or sparse format the unfused SpMM
-    // routes through (they all accumulate each element in non-zero-stream
-    // order), serial and pooled, with and without a bias.
-    forall("spmm_fused_relu == any-family spmm → bias → relu", 40, |rng| {
+    // The plan fusion pass's load-bearing invariant, now per-format: the
+    // fused SpMM+bias+ReLU dispatch routed through ANY kernel family or
+    // sparse format is bitwise-equal to spmm → bias-broadcast → relu
+    // (whatever the unfused SpMM routes through — they all accumulate each
+    // element in non-zero-stream order), serial and pooled, with and
+    // without a bias. This is what lets the tuner make ONE joint
+    // (format, fuse) decision: fusing never constrains the format.
+    forall("fused(choice) == any-family spmm → bias → relu", 40, |rng| {
         let rows = 1 + rng.gen_range(30);
         let a = arb_csr(rng, rows, rows.max(2));
         let kb = GENERATED_KBS[rng.gen_range(2)]; // 4 or 8: keep K small
@@ -236,12 +238,27 @@ fn prop_fused_relu_bitwise_across_families() {
         ];
         let ws = KernelWorkspace::new();
         let fused = spmm_fused_relu(&a, &x, bias.as_deref(), threads).unwrap();
-        let pooled_fused =
-            spmm_fused_relu_with_workspace(&a, &x, bias.as_deref(), threads, Some((&ws, 9)))
-                .unwrap();
-        assert_eq!(pooled_fused.data, fused.data, "pooled fused != plain fused");
-        ws.recycle(pooled_fused.data);
         for choice in choices {
+            // fused, routed through this choice — plain and pooled
+            let fused_routed =
+                spmm_fused_relu_with_workspace(&a, &x, bias.as_deref(), choice, threads, None)
+                    .unwrap();
+            assert_eq!(
+                fused_routed.data, fused.data,
+                "fused via {choice:?} != fused via trusted"
+            );
+            let pooled_fused = spmm_fused_relu_with_workspace(
+                &a,
+                &x,
+                bias.as_deref(),
+                choice,
+                threads,
+                Some((&ws, 9)),
+            )
+            .unwrap();
+            assert_eq!(pooled_fused.data, fused.data, "pooled fused {choice:?}");
+            ws.recycle(pooled_fused.data);
+            // unfused chain, routed through this choice
             let agg = spmm(&a, &x, Semiring::Sum, choice, threads).unwrap();
             let mut unfused = Dense::zeros(agg.rows, agg.cols);
             match &bias {

@@ -23,6 +23,7 @@ use crate::dense::Dense;
 use crate::sparse::{Sell, SortedCsr};
 use crate::util::parallel;
 
+use super::fusedmm::epilogue_elems;
 use super::trusted::spmm_trusted_partitioned_into;
 use super::{split_rows_mut, RowRange, Semiring};
 
@@ -31,10 +32,71 @@ use super::{split_rows_mut, RowRange, Semiring};
 /// per machine ([`crate::autotune::HardwareProfile::candidate_sell_params`]).
 pub const SELL_SLICE_HEIGHTS: [usize; 2] = [4, 8];
 
+/// Fixed K-group width of the chunked slice body: one 256-bit f32 vector.
+/// The inner accumulation runs over `[f32; K_CHUNK]` arrays, so rustc sees
+/// constant trip counts and no bounds checks and autovectorizes the lane
+/// loop instead of emitting a dynamic-length gather-add per entry.
+const K_CHUNK: usize = 8;
+
+/// Tallest slice the chunked body's stack tile covers — the largest
+/// shipped [`SELL_SLICE_HEIGHTS`]. Custom conversions with taller slices
+/// fall back to the generic column-range body (same numerics).
+const MAX_TILE_LANES: usize = 8;
+
+/// Optional fused epilogue applied to every finished output row while it
+/// is still cache-hot — the structure shared by the fused and unfused SELL
+/// and sorted-CSR kernels. `Relu`'s scalar ops are exactly
+/// [`epilogue_elems`]'s `(y + b).max(0)`, so fusing cannot change
+/// numerics (see [`spmm_fused_relu`](super::spmm_fused_relu)).
+#[derive(Clone, Copy)]
+pub(crate) enum Epilogue<'a> {
+    /// Plain SpMM: write the finalized accumulator verbatim.
+    None,
+    /// `y = max(y + b, 0)` with an optional broadcast bias row of length K.
+    Relu {
+        /// Bias row (length = output columns), or `None` for bare ReLU.
+        bias: Option<&'a [f32]>,
+    },
+}
+
+impl Epilogue<'_> {
+    /// Apply to one finished output-row segment covering columns
+    /// `[k0, k1)` of the row (the bias is sliced to match).
+    #[inline]
+    fn apply(self, row: &mut [f32], k0: usize, k1: usize) {
+        match self {
+            Epilogue::None => {}
+            Epilogue::Relu { bias } => epilogue_elems(row, bias.map(|b| &b[k0..k1])),
+        }
+    }
+}
+
 /// Serial SELL-C-σ SpMM into a pre-sized **zeroed** output (rows in
 /// original order — the kernel un-permutes as it writes).
 pub(crate) fn spmm_sell_serial_into(a: &Sell, x: &Dense, op: Semiring, y: &mut Dense) {
-    spmm_sell_slices_into(a, x, op, 0, a.n_slices(), 0, &mut y.data);
+    spmm_sell_slices_into(a, x, op, 0, a.n_slices(), 0, &mut y.data, Epilogue::None);
+}
+
+/// Serial fused SpMM + bias + ReLU over SELL-C-σ (sum semiring): the
+/// epilogue lands on each lane's finished row segment **before** the
+/// kernel moves on — per-lane, at un-padding/write-out time — so rows
+/// never take the unfused chain's two extra full passes.
+pub(crate) fn spmm_sell_fused_relu_serial_into(
+    a: &Sell,
+    x: &Dense,
+    bias: Option<&[f32]>,
+    y: &mut Dense,
+) {
+    spmm_sell_slices_into(
+        a,
+        x,
+        Semiring::Sum,
+        0,
+        a.n_slices(),
+        0,
+        &mut y.data,
+        Epilogue::Relu { bias },
+    );
 }
 
 /// Parallel SELL body over window-aligned row ranges (from
@@ -47,6 +109,29 @@ pub(crate) fn spmm_sell_partitioned_into(
     ranges: &[RowRange],
     y: &mut Dense,
 ) {
+    spmm_sell_partitioned_epi(a, x, op, ranges, y, Epilogue::None);
+}
+
+/// Parallel fused SpMM + bias + ReLU over SELL-C-σ: the partitioned body
+/// with the relu epilogue applied inside each worker's disjoint block.
+pub(crate) fn spmm_sell_fused_relu_partitioned_into(
+    a: &Sell,
+    x: &Dense,
+    bias: Option<&[f32]>,
+    ranges: &[RowRange],
+    y: &mut Dense,
+) {
+    spmm_sell_partitioned_epi(a, x, Semiring::Sum, ranges, y, Epilogue::Relu { bias });
+}
+
+fn spmm_sell_partitioned_epi(
+    a: &Sell,
+    x: &Dense,
+    op: Semiring,
+    ranges: &[RowRange],
+    y: &mut Dense,
+    epi: Epilogue<'_>,
+) {
     let k = y.cols;
     parallel::join_all(
         split_rows_mut(&mut y.data, ranges, k)
@@ -56,18 +141,41 @@ pub(crate) fn spmm_sell_partitioned_into(
                     debug_assert_eq!(range.start % a.sigma, 0, "range not window-aligned");
                     let s0 = range.start / a.c;
                     let s1 = range.end.div_ceil(a.c);
-                    spmm_sell_slices_into(a, x, op, s0, s1, range.start, out)
+                    spmm_sell_slices_into(a, x, op, s0, s1, range.start, out, epi)
                 }
             })
             .collect(),
     );
 }
 
+/// Borrowed view of one slice's column-major storage plus its lane →
+/// original-row mapping; what the chunked and column-range bodies consume.
+struct SliceView<'a> {
+    lanes: usize,
+    width: usize,
+    /// Per-lane stored lengths (non-increasing — SELL invariant 2).
+    lens: &'a [usize],
+    /// Per-lane original row.
+    perm: &'a [usize],
+    /// Column index per slot, `j * lanes + i` layout.
+    cols: &'a [usize],
+    /// Value per slot, same layout.
+    vals: &'a [f32],
+}
+
 /// Compute slices `[s0, s1)` into a buffer whose row 0 is original row
-/// `row_offset`. The inner loop walks a slice's lanes in lockstep per
-/// entry column `j`; because lens are non-increasing within a slice
-/// (SELL invariant 2), the active lanes at each `j` are a prefix whose
-/// length only shrinks — no per-lane branch in the hot loop.
+/// `row_offset`, then apply the epilogue to every finished lane row.
+///
+/// The hot path is the **chunked tile body** ([`sell_slice_tile`]): the K
+/// dimension is walked in [`K_CHUNK`]-wide groups, each group accumulated
+/// for all of the slice's lanes in a stack-resident
+/// `MAX_TILE_LANES × K_CHUNK` tile of fixed-size arrays — constant trip
+/// counts, no per-element bounds checks, no output-row reloads per entry —
+/// which is the shape rustc autovectorizes. The K tail past the last full
+/// chunk (and slices taller than the tile, from custom conversions) runs
+/// the generic column-range body with identical accumulation order, so
+/// both paths stay bitwise-equal to trusted.
+#[allow(clippy::too_many_arguments)]
 fn spmm_sell_slices_into(
     a: &Sell,
     x: &Dense,
@@ -76,66 +184,190 @@ fn spmm_sell_slices_into(
     s1: usize,
     row_offset: usize,
     out: &mut [f32],
+    epi: Epilogue<'_>,
 ) {
     let k = x.cols;
     for s in s0..s1 {
         let base = s * a.c;
         let lanes = a.slice_lanes(s);
+        if lanes == 0 {
+            continue;
+        }
         let width = a.slice_width(s);
         let off = a.slice_ptr[s];
-        let lens = &a.lens[base..base + lanes];
-
-        if op != Semiring::Sum {
-            // identity fill (the zeroed buffer is already sum's identity)
-            for &orig in &a.perm[base..base + lanes] {
-                row_mut(out, orig - row_offset, k).fill(op.identity());
+        let sv = SliceView {
+            lanes,
+            width,
+            lens: &a.lens[base..base + lanes],
+            perm: &a.perm[base..base + lanes],
+            cols: &a.col_idx[off..off + width * lanes],
+            vals: &a.values[off..off + width * lanes],
+        };
+        if lanes <= MAX_TILE_LANES {
+            let main = k - k % K_CHUNK;
+            let mut k0 = 0;
+            while k0 < main {
+                sell_slice_tile(&sv, x, op, k0, row_offset, out, epi);
+                k0 += K_CHUNK;
             }
-        }
-
-        let mut nact = lanes;
-        for j in 0..width {
-            while nact > 0 && lens[nact - 1] <= j {
-                nact -= 1;
+            if main < k {
+                sell_slice_cols(&sv, x, op, main, k, row_offset, out, epi);
             }
-            let slot0 = off + j * lanes;
-            match op {
-                Semiring::Sum => {
-                    for i in 0..nact {
-                        let c = a.col_idx[slot0 + i];
-                        let v = a.values[slot0 + i];
-                        let orow = row_mut(out, a.perm[base + i] - row_offset, k);
-                        for (o, &xv) in orow.iter_mut().zip(x.row(c)) {
-                            *o += v * xv;
-                        }
-                    }
-                }
-                _ => {
-                    for i in 0..nact {
-                        let c = a.col_idx[slot0 + i];
-                        let v = a.values[slot0 + i];
-                        let orow = row_mut(out, a.perm[base + i] - row_offset, k);
-                        for (o, &xv) in orow.iter_mut().zip(x.row(c)) {
-                            *o = op.combine(*o, v * xv);
-                        }
-                    }
-                }
-            }
-        }
-
-        if op != Semiring::Sum {
-            for (&orig, &nnz) in a.perm[base..base + lanes].iter().zip(lens) {
-                let orow = row_mut(out, orig - row_offset, k);
-                for slot in orow.iter_mut() {
-                    *slot = op.finalize(*slot, nnz);
-                }
-            }
+        } else {
+            sell_slice_cols(&sv, x, op, 0, k, row_offset, out, epi);
         }
     }
 }
 
-#[inline]
-fn row_mut(out: &mut [f32], local_row: usize, k: usize) -> &mut [f32] {
-    &mut out[local_row * k..(local_row + 1) * k]
+/// Chunked tile body: columns `[k0, k0 + K_CHUNK)` of one slice, all lanes
+/// at once. Per output element the combine order is `j` ascending from the
+/// identity — exactly the trusted kernel's entry order (SELL preserves
+/// within-row order), so the result is bitwise-equal to trusted.
+fn sell_slice_tile(
+    sv: &SliceView<'_>,
+    x: &Dense,
+    op: Semiring,
+    k0: usize,
+    row_offset: usize,
+    out: &mut [f32],
+    epi: Epilogue<'_>,
+) {
+    let k = x.cols;
+    let mut acc = [[0.0f32; K_CHUNK]; MAX_TILE_LANES];
+    if op != Semiring::Sum {
+        for lane in acc.iter_mut().take(sv.lanes) {
+            lane.fill(op.identity());
+        }
+    }
+
+    // lens are non-increasing within a slice, so the active lanes at each
+    // j are a shrinking prefix — no per-lane branch in the hot loop
+    let mut nact = sv.lanes;
+    match op {
+        Semiring::Sum => {
+            for j in 0..sv.width {
+                while nact > 0 && sv.lens[nact - 1] <= j {
+                    nact -= 1;
+                }
+                let slot0 = j * sv.lanes;
+                for i in 0..nact {
+                    let c = sv.cols[slot0 + i];
+                    let v = sv.vals[slot0 + i];
+                    let start = c * k + k0;
+                    let xr: &[f32; K_CHUNK] =
+                        x.data[start..start + K_CHUNK].try_into().expect("chunk width");
+                    let accr = &mut acc[i];
+                    for t in 0..K_CHUNK {
+                        accr[t] += v * xr[t];
+                    }
+                }
+            }
+        }
+        _ => {
+            for j in 0..sv.width {
+                while nact > 0 && sv.lens[nact - 1] <= j {
+                    nact -= 1;
+                }
+                let slot0 = j * sv.lanes;
+                for i in 0..nact {
+                    let c = sv.cols[slot0 + i];
+                    let v = sv.vals[slot0 + i];
+                    let start = c * k + k0;
+                    let xr: &[f32; K_CHUNK] =
+                        x.data[start..start + K_CHUNK].try_into().expect("chunk width");
+                    let accr = &mut acc[i];
+                    for t in 0..K_CHUNK {
+                        accr[t] = op.combine(accr[t], v * xr[t]);
+                    }
+                }
+            }
+        }
+    }
+
+    // finalize + epilogue + un-pad (scatter to original rows) per lane
+    for i in 0..sv.lanes {
+        let dst0 = (sv.perm[i] - row_offset) * k + k0;
+        let dst: &mut [f32; K_CHUNK] =
+            (&mut out[dst0..dst0 + K_CHUNK]).try_into().expect("chunk width");
+        let accr = &acc[i];
+        if op == Semiring::Sum {
+            dst.copy_from_slice(accr);
+        } else {
+            let nnz = sv.lens[i];
+            for t in 0..K_CHUNK {
+                dst[t] = op.finalize(accr[t], nnz);
+            }
+        }
+        epi.apply(dst, k0, k0 + K_CHUNK);
+    }
+}
+
+/// Generic column-range body: columns `[k0, k1)` of one slice — the K
+/// tail past the last full chunk, and slices taller than the stack tile.
+/// Accumulates straight into the (zeroed) output like the pre-chunking
+/// kernel did; same combine order, bitwise-equal results.
+#[allow(clippy::too_many_arguments)]
+fn sell_slice_cols(
+    sv: &SliceView<'_>,
+    x: &Dense,
+    op: Semiring,
+    k0: usize,
+    k1: usize,
+    row_offset: usize,
+    out: &mut [f32],
+    epi: Epilogue<'_>,
+) {
+    let k = x.cols;
+    if op != Semiring::Sum {
+        // identity fill (the zeroed buffer is already sum's identity)
+        for &orig in sv.perm {
+            let o0 = (orig - row_offset) * k;
+            out[o0 + k0..o0 + k1].fill(op.identity());
+        }
+    }
+
+    let mut nact = sv.lanes;
+    for j in 0..sv.width {
+        while nact > 0 && sv.lens[nact - 1] <= j {
+            nact -= 1;
+        }
+        let slot0 = j * sv.lanes;
+        match op {
+            Semiring::Sum => {
+                for i in 0..nact {
+                    let c = sv.cols[slot0 + i];
+                    let v = sv.vals[slot0 + i];
+                    let o0 = (sv.perm[i] - row_offset) * k;
+                    let xrow = &x.data[c * k + k0..c * k + k1];
+                    for (o, &xv) in out[o0 + k0..o0 + k1].iter_mut().zip(xrow) {
+                        *o += v * xv;
+                    }
+                }
+            }
+            _ => {
+                for i in 0..nact {
+                    let c = sv.cols[slot0 + i];
+                    let v = sv.vals[slot0 + i];
+                    let o0 = (sv.perm[i] - row_offset) * k;
+                    let xrow = &x.data[c * k + k0..c * k + k1];
+                    for (o, &xv) in out[o0 + k0..o0 + k1].iter_mut().zip(xrow) {
+                        *o = op.combine(*o, v * xv);
+                    }
+                }
+            }
+        }
+    }
+
+    for (&orig, &nnz) in sv.perm.iter().zip(sv.lens) {
+        let o0 = (orig - row_offset) * k;
+        let row = &mut out[o0 + k0..o0 + k1];
+        if op != Semiring::Sum {
+            for slot in row.iter_mut() {
+                *slot = op.finalize(*slot, nnz);
+            }
+        }
+        epi.apply(row, k0, k1);
+    }
 }
 
 /// NNZ-balanced partition of a SELL matrix's rows into at most `parts`
@@ -203,6 +435,27 @@ pub(crate) fn spmm_sorted_serial_into(a: &SortedCsr, x: &Dense, op: Semiring, y:
     }
 }
 
+/// Serial fused SpMM + bias + ReLU over sorted CSR (sum semiring): each
+/// permuted row aggregates in trusted order, takes the epilogue while
+/// cache-hot, and lands at its original position in one pass.
+pub(crate) fn spmm_sorted_fused_relu_serial_into(
+    a: &SortedCsr,
+    x: &Dense,
+    bias: Option<&[f32]>,
+    y: &mut Dense,
+) {
+    let m = &a.csr;
+    for p in 0..m.rows {
+        let orow = y.row_mut(a.perm[p]);
+        for (&c, &v) in m.row_cols(p).iter().zip(m.row_vals(p)) {
+            for (o, &xv) in orow.iter_mut().zip(x.row(c)) {
+                *o += v * xv;
+            }
+        }
+        epilogue_elems(orow, bias);
+    }
+}
+
 /// Parallel sorted-CSR body: workers fill NNZ-balanced contiguous blocks
 /// of `scratch` in *permuted* row order (the trusted partitioned kernel,
 /// verbatim), then one serial pass scatters rows back to original order.
@@ -218,6 +471,38 @@ pub(crate) fn spmm_sorted_partitioned_into(
     spmm_trusted_partitioned_into(&a.csr, x, op, ranges, scratch);
     for (p, &orig) in a.perm.iter().enumerate() {
         y.row_mut(orig).copy_from_slice(scratch.row(p));
+    }
+}
+
+/// Parallel fused SpMM + bias + ReLU over sorted CSR: the trusted
+/// partitioned aggregation into `scratch`, then the epilogue is applied
+/// **during the scatter** — `y[perm[p]] = max(scratch[p] + b, 0)` — so the
+/// existing row permutation carries the fused result and the unfused
+/// chain's two extra passes fold into the copy that was happening anyway.
+pub(crate) fn spmm_sorted_fused_relu_partitioned_into(
+    a: &SortedCsr,
+    x: &Dense,
+    bias: Option<&[f32]>,
+    ranges: &[RowRange],
+    scratch: &mut Dense,
+    y: &mut Dense,
+) {
+    spmm_trusted_partitioned_into(&a.csr, x, Semiring::Sum, ranges, scratch);
+    for (p, &orig) in a.perm.iter().enumerate() {
+        let src = scratch.row(p);
+        let dst = y.row_mut(orig);
+        match bias {
+            Some(b) => {
+                for ((o, &s), &bv) in dst.iter_mut().zip(src).zip(b) {
+                    *o = (s + bv).max(0.0);
+                }
+            }
+            None => {
+                for (o, &s) in dst.iter_mut().zip(src) {
+                    *o = s.max(0.0);
+                }
+            }
+        }
     }
 }
 
@@ -303,6 +588,103 @@ mod tests {
         assert!(sell_window_ranges(&empty, 4).is_empty());
         let zeros = Sell::from_csr(&Csr::empty(6, 6), 4, 8);
         assert_eq!(sell_window_ranges(&zeros, 4), vec![RowRange { start: 0, end: 6 }]);
+    }
+
+    /// Fused-epilogue kernels for both formats: bitwise-equal to the
+    /// unfused chain (same-format SpMM → bias broadcast → relu), serial
+    /// and partitioned, with and without a bias — the joint format×fusion
+    /// contract the tuner and plan rewrite rely on.
+    #[test]
+    fn fused_relu_formats_bitwise_equal_unfused_chain() {
+        let mut rng = Rng::seed_from_u64(98);
+        let a = skewed(80, 99);
+        let k = 13; // not a multiple of K_CHUNK: exercises the tail body
+        let x = Dense::uniform(80, k, 1.0, &mut rng).map(|v| v - 0.5);
+        let bias: Vec<f32> = (0..k).map(|i| (i as f32) * 0.1 - 0.6).collect();
+        let agg = spmm_trusted(&a, &x, Semiring::Sum).unwrap();
+        for bias in [Some(&bias[..]), None] {
+            let mut want = agg.clone();
+            if let Some(b) = bias {
+                want.add_row_broadcast_inplace(b).unwrap();
+            }
+            want.relu_inplace();
+
+            for (c, sigma) in [(4, 16), (8, 64), (3, 5)] {
+                let sell = Sell::from_csr(&a, c, sigma);
+                let mut y = Dense::zeros(80, k);
+                spmm_sell_fused_relu_serial_into(&sell, &x, bias, &mut y);
+                assert_eq!(y.data, want.data, "sell serial c={c} σ={sigma}");
+                for parts in [2, 5] {
+                    let ranges = sell_window_ranges(&sell, parts);
+                    let mut y = Dense::zeros(80, k);
+                    spmm_sell_fused_relu_partitioned_into(&sell, &x, bias, &ranges, &mut y);
+                    assert_eq!(y.data, want.data, "sell parts={parts} c={c} σ={sigma}");
+                }
+            }
+
+            let sc = SortedCsr::from_csr(&a);
+            let mut y = Dense::zeros(80, k);
+            spmm_sorted_fused_relu_serial_into(&sc, &x, bias, &mut y);
+            assert_eq!(y.data, want.data, "sorted serial");
+            for parts in [2, 4] {
+                let ranges = nnz_balanced_partition(&sc.csr, parts);
+                let mut scratch = Dense::zeros(80, k);
+                let mut y = Dense::zeros(80, k);
+                spmm_sorted_fused_relu_partitioned_into(
+                    &sc, &x, bias, &ranges, &mut scratch, &mut y,
+                );
+                assert_eq!(y.data, want.data, "sorted parts={parts}");
+            }
+        }
+    }
+
+    /// A slice taller than the chunked tile (custom C > 8) takes the
+    /// generic body; a K wider than several chunks takes the tile body —
+    /// both stay bitwise-equal to trusted, fused and unfused.
+    #[test]
+    fn tall_slices_and_wide_k_stay_bitwise_equal() {
+        let mut rng = Rng::seed_from_u64(100);
+        let a = skewed(50, 101);
+        for k in [1, 8, 24, 35] {
+            let x = Dense::uniform(50, k, 1.0, &mut rng).map(|v| v - 0.5);
+            for op in Semiring::ALL {
+                let want = spmm_trusted(&a, &x, op).unwrap();
+                let sell = Sell::from_csr(&a, 12, 24); // lanes > MAX_TILE_LANES
+                let mut y = Dense::zeros(50, k);
+                spmm_sell_serial_into(&sell, &x, op, &mut y);
+                assert_eq!(y.data, want.data, "tall c=12 k={k} op={op:?}");
+            }
+            let mut want = spmm_trusted(&a, &x, Semiring::Sum).unwrap();
+            want.relu_inplace();
+            let tall = Sell::from_csr(&a, 12, 24);
+            let mut y = Dense::zeros(50, k);
+            spmm_sell_fused_relu_serial_into(&tall, &x, None, &mut y);
+            assert_eq!(y.data, want.data, "tall fused k={k}");
+        }
+    }
+
+    #[test]
+    fn fused_relu_formats_cover_empty_rows_and_graphs() {
+        // bias epilogue must land on rows with no stored entries — and on
+        // every row of an all-empty graph
+        let mut coo = Coo::new(9, 9);
+        coo.push(0, 1, 1.0);
+        let a = coo.to_csr();
+        let mut rng = Rng::seed_from_u64(102);
+        let x = Dense::uniform(9, 4, 1.0, &mut rng);
+        let bias = vec![0.5, -0.5, 1.0, -1.0];
+        let sell = Sell::from_csr(&a, 4, 8);
+        let mut y = Dense::zeros(9, 4);
+        spmm_sell_fused_relu_serial_into(&sell, &x, Some(&bias), &mut y);
+        for r in 1..9 {
+            assert_eq!(y.row(r), &[0.5, 0.0, 1.0, 0.0], "sell row {r}");
+        }
+        let sc = SortedCsr::from_csr(&Csr::empty(5, 5));
+        let mut y = Dense::zeros(5, 4);
+        spmm_sorted_fused_relu_serial_into(&sc, &x, Some(&bias), &mut y);
+        for r in 0..5 {
+            assert_eq!(y.row(r), &[0.5, 0.0, 1.0, 0.0], "sorted row {r}");
+        }
     }
 
     #[test]

@@ -19,10 +19,12 @@ use crate::error::{Error, Result};
 use crate::sparse::{Csr, Sell, SortedCsr};
 use crate::util::parallel;
 
+use super::fusedmm::fused_relu_rows;
 use super::generated::{spmm_generated_partitioned_into, spmm_generated_serial_into};
 use super::sell::{
-    sell_window_ranges, spmm_sell_partitioned_into, spmm_sell_serial_into,
-    spmm_sorted_partitioned_into, spmm_sorted_serial_into,
+    sell_window_ranges, spmm_sell_fused_relu_partitioned_into, spmm_sell_fused_relu_serial_into,
+    spmm_sell_partitioned_into, spmm_sell_serial_into, spmm_sorted_fused_relu_partitioned_into,
+    spmm_sorted_fused_relu_serial_into, spmm_sorted_partitioned_into, spmm_sorted_serial_into,
 };
 use super::tiled::{spmm_tiled_partitioned_into, spmm_tiled_serial_into};
 use super::trusted::{spmm_trusted_partitioned_into, spmm_trusted_serial_into};
@@ -257,6 +259,138 @@ pub fn spmm_with_workspace(
     Ok(y)
 }
 
+/// Fused SpMM + (optional bias +) ReLU — the FusedMM idiom applied to the
+/// GNN layer *epilogue*: each output row is aggregated and then biased +
+/// rectified while it is still cache-hot, so the unfused chain's two extra
+/// full passes over the `n × K` activation (one for the bias broadcast,
+/// one for the ReLU) disappear.
+///
+/// Bitwise contract: every layout's accumulation combines each output
+/// element's non-zero stream in the trusted kernel's order (the formats
+/// are pure row permutations with unchanged within-row order), and the
+/// epilogue applies exactly `(y + b).max(0)` per element — the same scalar
+/// ops [`Dense::add_row_broadcast_into`] followed by [`Dense::relu_into`]
+/// perform, via one shared definition
+/// ([`epilogue_elems`](super::fusedmm)). Fusing therefore **cannot**
+/// change numerics, whatever format the call routes through — the
+/// plan-rewrite pass ([`crate::plan`]) relies on this being equality by
+/// construction, not by tolerance.
+///
+/// `bias`, when present, must have length `x.cols` (a `1 × K` broadcast
+/// row; batched callers tile it per coalesced request). Rows with no
+/// stored non-zeros still receive the epilogue — `relu(0 + b)` — exactly
+/// as the unfused chain would.
+pub fn spmm_fused_relu(a: &Csr, x: &Dense, bias: Option<&[f32]>, threads: usize) -> Result<Dense> {
+    spmm_fused_relu_with_workspace(a, x, bias, KernelChoice::Trusted, threads, None)
+}
+
+/// [`spmm_fused_relu`] routed by [`KernelChoice`] — the seam that makes
+/// **fusion and format compose**: a graph tuned to SELL-C-σ or sorted CSR
+/// keeps its tuned layout through the fused epilogue instead of silently
+/// falling back to CSR. CSR-layout choices (trusted / generated / tiled)
+/// share the trusted-order CSR fused body, which is bitwise-equal to all
+/// of them for the sum semiring; `Sell` and `SortedCsr` route to their
+/// format-native fused kernels ([`super::sell`]). With a workspace, the
+/// output buffer is pooled, the NNZ partition (and, for sorted CSR, the
+/// permuted partition and scatter scratch) comes from the per-graph
+/// cache, and format conversions are served from the format cache — the
+/// same amortisation contract as [`spmm_with_workspace`].
+pub fn spmm_fused_relu_with_workspace(
+    a: &Csr,
+    x: &Dense,
+    bias: Option<&[f32]>,
+    choice: KernelChoice,
+    threads: usize,
+    ws: Option<(&KernelWorkspace, u64)>,
+) -> Result<Dense> {
+    if a.cols != x.rows {
+        return Err(Error::ShapeMismatch(format!(
+            "spmm_fused_relu: A {}x{} @ X {}x{}",
+            a.rows, a.cols, x.rows, x.cols
+        )));
+    }
+    if let Some(b) = bias {
+        if b.len() != x.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "spmm_fused_relu: bias len {} vs K {}",
+                b.len(),
+                x.cols
+            )));
+        }
+    }
+    // the fused family is sum-semiring; fall back like the plain dispatch
+    let choice =
+        if choice.applicable(x.cols, Semiring::Sum) { choice } else { KernelChoice::Trusted };
+    let threads = if threads == 0 { parallel::current_num_threads() } else { threads };
+    let k = x.cols;
+    let mut y = match ws {
+        Some((w, _)) => w.take_dense(a.rows, k),
+        None => Dense::zeros(a.rows, k),
+    };
+    if a.rows == 0 || k == 0 {
+        return Ok(y);
+    }
+    // nnz == 0 runs the serial bodies: the epilogue still visits every row
+    // (relu(0 + b)), but there is no aggregation work to balance.
+    let serial = threads <= 1 || a.nnz() == 0;
+    match choice {
+        KernelChoice::Sell { c, sigma } => {
+            let sell = cached_sell(a, c, sigma, ws);
+            if serial {
+                spmm_sell_fused_relu_serial_into(&sell, x, bias, &mut y);
+            } else {
+                let ranges = sell_window_ranges(&sell, threads);
+                spmm_sell_fused_relu_partitioned_into(&sell, x, bias, &ranges, &mut y);
+            }
+        }
+        KernelChoice::SortedCsr => {
+            let sc = cached_sorted(a, ws);
+            if serial {
+                spmm_sorted_fused_relu_serial_into(&sc, x, bias, &mut y);
+            } else {
+                let ranges = match ws {
+                    Some((w, graph_id)) => w.partition(
+                        KernelWorkspace::sorted_partition_id(graph_id),
+                        &sc.csr,
+                        threads,
+                    ),
+                    None => Arc::new(nnz_balanced_partition(&sc.csr, threads)),
+                };
+                let mut scratch = match ws {
+                    Some((w, _)) => w.take_dense(a.rows, k),
+                    None => Dense::zeros(a.rows, k),
+                };
+                spmm_sorted_fused_relu_partitioned_into(
+                    &sc, x, bias, &ranges, &mut scratch, &mut y,
+                );
+                if let Some((w, _)) = ws {
+                    w.recycle(scratch.data);
+                }
+            }
+        }
+        // CSR layouts share the trusted-order fused body
+        _ => {
+            if serial {
+                fused_relu_rows(a, x, bias, 0, a.rows, &mut y.data);
+            } else {
+                let ranges = match ws {
+                    Some((w, graph_id)) => w.partition(graph_id, a, threads),
+                    None => Arc::new(nnz_balanced_partition(a, threads)),
+                };
+                parallel::join_all(
+                    super::split_rows_mut(&mut y.data, &ranges, k)
+                        .into_iter()
+                        .map(|(range, out)| {
+                            move || fused_relu_rows(a, x, bias, range.start, range.end, out)
+                        })
+                        .collect(),
+                );
+            }
+        }
+    }
+    Ok(y)
+}
+
 /// The (possibly cached) SELL-C-σ conversion for this call.
 fn cached_sell(
     a: &Csr,
@@ -422,6 +556,136 @@ mod tests {
         // eviction drops the graph's formats with its partitions
         assert!(ws.evict(7) >= 2);
         assert_eq!(ws.cached_formats(), 0);
+    }
+
+    /// The fused dispatch's joint contract: for every routable choice —
+    /// CSR kernels AND the sparse formats — the fused epilogue is
+    /// bitwise-equal to the unfused chain routed through the SAME choice,
+    /// serial and pooled, with and without a bias.
+    #[test]
+    fn fused_dispatch_routes_formats_and_stays_bitwise() {
+        let mut rng = Rng::seed_from_u64(51);
+        let a = graph(64, 52);
+        let k = 24; // > kt=16, a kb=8 multiple: every family really routes
+        let x = Dense::uniform(64, k, 1.0, &mut rng).map(|v| v - 0.5);
+        let bias: Vec<f32> = (0..k).map(|i| (i as f32) * 0.05 - 0.3).collect();
+        let ws = KernelWorkspace::new();
+        for choice in [
+            KernelChoice::Trusted,
+            KernelChoice::Generated { kb: 8 },
+            KernelChoice::Tiled { kt: 16 },
+            KernelChoice::Sell { c: 4, sigma: 16 },
+            KernelChoice::Sell { c: 8, sigma: 64 },
+            KernelChoice::SortedCsr,
+        ] {
+            for threads in [1usize, 3] {
+                for bias in [Some(&bias[..]), None] {
+                    let agg = spmm(&a, &x, Semiring::Sum, choice, threads).unwrap();
+                    let mut want = agg.clone();
+                    if let Some(b) = bias {
+                        want.add_row_broadcast_inplace(b).unwrap();
+                    }
+                    want.relu_inplace();
+                    let got =
+                        spmm_fused_relu_with_workspace(&a, &x, bias, choice, threads, None)
+                            .unwrap();
+                    assert_eq!(
+                        got.data, want.data,
+                        "{choice:?} t={threads} bias={}",
+                        bias.is_some()
+                    );
+                    let pooled = spmm_fused_relu_with_workspace(
+                        &a,
+                        &x,
+                        bias,
+                        choice,
+                        threads,
+                        Some((&ws, 21)),
+                    )
+                    .unwrap();
+                    assert_eq!(pooled.data, want.data, "pooled {choice:?} t={threads}");
+                    ws.recycle(pooled.data);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_dispatch_caches_formats_and_sorted_partitions() {
+        let mut rng = Rng::seed_from_u64(53);
+        let a = graph(40, 54);
+        let x = Dense::uniform(40, 8, 1.0, &mut rng);
+        let ws = KernelWorkspace::new();
+        let bias = vec![0.1f32; 8];
+        for _ in 0..3 {
+            let y = spmm_fused_relu_with_workspace(
+                &a,
+                &x,
+                Some(&bias),
+                KernelChoice::Sell { c: 4, sigma: 16 },
+                2,
+                Some((&ws, 31)),
+            )
+            .unwrap();
+            ws.recycle(y.data);
+        }
+        assert_eq!(ws.stats().format_misses, 1, "SELL conversion must be cached");
+        assert_eq!(ws.stats().format_hits, 2);
+        // sorted CSR: conversion cached AND the permuted partition cached
+        // under the derived sorted-partition identity
+        for _ in 0..2 {
+            let y = spmm_fused_relu_with_workspace(
+                &a,
+                &x,
+                Some(&bias),
+                KernelChoice::SortedCsr,
+                2,
+                Some((&ws, 31)),
+            )
+            .unwrap();
+            ws.recycle(y.data);
+        }
+        assert_eq!(ws.stats().format_misses, 2);
+        assert!(ws.stats().partition_hits >= 1, "{:?}", ws.stats());
+        // everything the fused paths cached for this graph evicts with it
+        assert!(ws.evict(31) >= 3);
+        assert_eq!(ws.cached_formats(), 0);
+    }
+
+    #[test]
+    fn fused_dispatch_rejects_bad_shapes_and_guards_degenerates() {
+        let a = graph(5, 55);
+        let x = Dense::zeros(5, 4);
+        assert!(spmm_fused_relu(&a, &x, Some(&[0.0; 3]), 1).is_err());
+        assert!(spmm_fused_relu(&a, &Dense::zeros(6, 4), None, 1).is_err());
+        // bias epilogue reaches every row of an empty graph, per format
+        let empty = Csr::empty(4, 4);
+        let bias = [0.5f32, -0.5, 1.0, -1.0];
+        for choice in [
+            KernelChoice::Trusted,
+            KernelChoice::Sell { c: 4, sigma: 8 },
+            KernelChoice::SortedCsr,
+        ] {
+            for threads in [1, 3] {
+                let y = spmm_fused_relu_with_workspace(
+                    &empty,
+                    &Dense::zeros(4, 4),
+                    Some(&bias),
+                    choice,
+                    threads,
+                    None,
+                )
+                .unwrap();
+                for r in 0..4 {
+                    assert_eq!(y.row(r), &[0.5, 0.0, 1.0, 0.0], "{choice:?} t={threads}");
+                }
+            }
+        }
+        // 0 rows / K = 0 short-circuit for every choice
+        let y = spmm_fused_relu(&Csr::empty(0, 5), &Dense::zeros(5, 8), None, 2).unwrap();
+        assert_eq!((y.rows, y.cols), (0, 8));
+        let y = spmm_fused_relu(&a, &Dense::zeros(5, 0), None, 2).unwrap();
+        assert!(y.data.is_empty());
     }
 
     #[test]

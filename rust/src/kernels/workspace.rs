@@ -331,18 +331,25 @@ impl KernelWorkspace {
     }
 
     /// Drop every cached partition **and converted sparse format**
-    /// belonging to `graph_id` (including its derived transpose and
-    /// sorted-partition identities). Serving churns graphs — a closed
-    /// session must release its entries without nuking the other tenants'
-    /// (whole-pool [`KernelWorkspace::clear`] was the only option before).
-    /// Pooled buffers are graph-agnostic and survive eviction. Returns the
-    /// number of entries removed (partitions + formats).
+    /// belonging to `graph_id` — including every derived identity: the
+    /// transpose, the sorted-CSR permuted partition, and the sorted
+    /// partition of the *transpose* (the backward pass routes `Aᵀ` through
+    /// the tuned format too, so training caches entries under
+    /// `sorted_partition_id(transpose_id(g))`; a regression left those
+    /// behind). Serving churns graphs — a closed session must release its
+    /// entries without nuking the other tenants' (whole-pool
+    /// [`KernelWorkspace::clear`] was the only option before). Pooled
+    /// buffers — including the fused sorted-CSR scatter scratch — are
+    /// graph-agnostic and survive eviction. Returns the number of entries
+    /// removed (partitions + formats).
     pub fn evict(&self, graph_id: u64) -> usize {
         let tid = Self::transpose_id(graph_id);
         let sid = Self::sorted_partition_id(graph_id);
+        let stid = Self::sorted_partition_id(tid);
         let mut g = self.inner.lock().unwrap();
         let before = g.partitions.len() + g.formats.len();
-        g.partitions.retain(|&(id, _), _| id != graph_id && id != tid && id != sid);
+        g.partitions
+            .retain(|&(id, _), _| id != graph_id && id != tid && id != sid && id != stid);
         g.formats.retain(|&(id, _), _| id != graph_id && id != tid);
         before - g.partitions.len() - g.formats.len()
     }
@@ -489,6 +496,39 @@ mod tests {
         assert_eq!(ws.stats().partition_misses, misses + 1);
         // evicting an unknown graph is a no-op
         assert_eq!(ws.evict(999), 0);
+    }
+
+    /// Regression: eviction must leave ZERO per-graph entries — including
+    /// partitions cached under the sorted-partition identity of the
+    /// *transpose* (what a training run caches when the tuned choice is
+    /// sorted CSR and the backward pass runs over `Aᵀ`), which the old
+    /// retain predicate missed.
+    #[test]
+    fn evict_drops_every_derived_identity() {
+        let ws = KernelWorkspace::new();
+        let a = graph(24);
+        let gid = 11u64;
+        let tid = KernelWorkspace::transpose_id(gid);
+        // everything a format-tuned train + fused-serve cycle caches:
+        ws.partition(gid, &a, 2); // forward A
+        ws.partition(tid, &a, 2); // backward Aᵀ
+        ws.partition(KernelWorkspace::sorted_partition_id(gid), &a, 2); // sorted A
+        ws.partition(KernelWorkspace::sorted_partition_id(tid), &a, 2); // sorted Aᵀ
+        ws.sell(gid, &a, 4, 8);
+        ws.sorted_csr(gid, &a);
+        ws.sorted_csr(tid, &a);
+        // an unrelated tenant that must survive
+        ws.partition(99, &a, 2);
+        ws.sell(99, &a, 4, 8);
+        assert_eq!(ws.cached_partitions(), 5);
+        assert_eq!(ws.cached_formats(), 4);
+        assert_eq!(ws.evict(gid), 7, "4 partitions + 3 formats");
+        assert_eq!(ws.cached_partitions(), 1, "tenant 99's partition survives");
+        assert_eq!(ws.cached_formats(), 1, "tenant 99's format survives");
+        // re-touching the evicted graph misses across the board
+        let misses = ws.stats().partition_misses;
+        ws.partition(KernelWorkspace::sorted_partition_id(tid), &a, 2);
+        assert_eq!(ws.stats().partition_misses, misses + 1);
     }
 
     #[test]

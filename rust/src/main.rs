@@ -276,14 +276,20 @@ fn serve_bench(args: &Args) -> Result<()> {
         let dims = ModelParams { in_dim: ds.feature_dim(), hidden, classes: ds.num_classes };
         let a = model.norm_kind().apply(&ds.adj)?;
         // tune exactly the widths the lowered plan will run SpMM at —
-        // per-request and coalesced — plus the fused-epilogue family at
-        // every fusable width, so sessions can warm-start fusion decisions
+        // per-request and coalesced. Fusable widths skip the spmm-only
+        // sweep: the joint format × fusion search is the whole decision
+        // there, so sessions warm-start ONE (format, fuse) choice per
+        // shape without a redundant plain pass.
         let plan = model.lower(dims, model.norm_kind());
+        let fusable = plan.fusable_spmm_widths();
         for k in plan.spmm_shapes_batched(cfg.max_batch) {
+            if fusable.contains(&k) {
+                continue;
+            }
             tuner.tune(&ds.name, &a, k, registry, &mut db)?;
         }
-        for k in plan.fusable_spmm_widths() {
-            tuner.tune_fused_relu(&ds.name, &a, k, &mut db)?;
+        for k in fusable {
+            tuner.tune_fused_relu(&ds.name, &a, k, registry, &mut db)?;
         }
     }
 

@@ -99,9 +99,12 @@ fn spmm_call(operand: &SpmmOperand, x: &Dense, threads: usize) -> Result<Dense> 
     }
 }
 
-/// One fused SpMM+bias+ReLU under the operand's strategy (baseline
-/// strategies aggregate their usual way, then apply the epilogue — same
-/// numerics, unfused loops).
+/// One fused SpMM+bias+ReLU under the operand's strategy. Kernel operands
+/// route the fused family through the registry exactly like the plain one
+/// — the tuner's joint `(format, fuse)` decision — so a SELL- or
+/// sorted-CSR-tuned session serves fused from its tuned (pre-converted)
+/// layout. Baseline strategies aggregate their usual way, then apply the
+/// epilogue — same numerics, unfused loops.
 fn fused_call(
     operand: &SpmmOperand,
     x: &Dense,
@@ -110,8 +113,9 @@ fn fused_call(
 ) -> Result<Dense> {
     match operand.impl_kind {
         SpmmImpl::Kernel => {
+            let choice = KernelRegistry::global().resolve(&operand.context, x.cols, Semiring::Sum);
             let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_id));
-            spmm_fused_relu_with_workspace(&operand.a, x, bias, threads, ws)
+            spmm_fused_relu_with_workspace(&operand.a, x, bias, choice, threads, ws)
         }
         _ => {
             let mut y = spmm_call(operand, x, threads)?;
@@ -143,9 +147,11 @@ fn aggregate_many(
     };
     if xs.len() == 1 {
         let y = one(xs[0])?;
-        if owned {
+        if owned && scratch.ws.is_some() {
             // one copy into a caller-owned buffer; the pooled original
-            // goes back to the pool
+            // goes back to the pool. Without a workspace the kernel
+            // output is already a fresh unpooled allocation — hand it to
+            // the caller directly instead of copying it.
             let out = y.clone();
             scratch.free(y);
             return Ok(vec![out]);
@@ -272,46 +278,94 @@ pub fn execute_inference(
                 scratch.free_all(reuse);
                 outs
             }
+            // The elementwise ops execute IN PLACE when the plan says their
+            // operand dies here (in-place slot execution): the operand's
+            // buffers are taken over and overwritten by the `_inplace`
+            // kernels — bitwise-equal to the `_into` twins, minus a full
+            // matrix write+read per op. The plan output never runs in
+            // place (`inplace_operand` is None there), so caller-owned
+            // buffers are unaffected.
             Op::BiasAdd { x, b: bias } => {
                 let bias = params.get(bias)?;
-                let mut reuse = take_slot(&mut slots, out_slot);
-                let srcs = value_refs(&vals, xs, *x);
-                let mut outs = Vec::with_capacity(srcs.len());
-                for src in srcs {
-                    let mut out =
-                        next_buf(&mut reuse, &scratch, is_output, src.rows, src.cols);
-                    src.add_row_broadcast_into(&bias.data, &mut out)?;
-                    outs.push(out);
+                if let Some(v) = plan.inplace_operand(i) {
+                    debug_assert_eq!(v, *x);
+                    let mut bufs = vals[v].take().expect("in-place operand live");
+                    for buf in &mut bufs {
+                        buf.add_row_broadcast_inplace(&bias.data)?;
+                    }
+                    bufs
+                } else {
+                    let mut reuse = take_slot(&mut slots, out_slot);
+                    let srcs = value_refs(&vals, xs, *x);
+                    let mut outs = Vec::with_capacity(srcs.len());
+                    for src in srcs {
+                        let mut out =
+                            next_buf(&mut reuse, &scratch, is_output, src.rows, src.cols);
+                        src.add_row_broadcast_into(&bias.data, &mut out)?;
+                        outs.push(out);
+                    }
+                    scratch.free_all(reuse);
+                    outs
                 }
-                scratch.free_all(reuse);
-                outs
             }
             Op::Relu { x } => {
-                let mut reuse = take_slot(&mut slots, out_slot);
-                let srcs = value_refs(&vals, xs, *x);
-                let mut outs = Vec::with_capacity(srcs.len());
-                for src in srcs {
-                    let mut out =
-                        next_buf(&mut reuse, &scratch, is_output, src.rows, src.cols);
-                    src.relu_into(&mut out)?;
-                    outs.push(out);
+                if let Some(v) = plan.inplace_operand(i) {
+                    debug_assert_eq!(v, *x);
+                    let mut bufs = vals[v].take().expect("in-place operand live");
+                    for buf in &mut bufs {
+                        buf.relu_inplace();
+                    }
+                    bufs
+                } else {
+                    let mut reuse = take_slot(&mut slots, out_slot);
+                    let srcs = value_refs(&vals, xs, *x);
+                    let mut outs = Vec::with_capacity(srcs.len());
+                    for src in srcs {
+                        let mut out =
+                            next_buf(&mut reuse, &scratch, is_output, src.rows, src.cols);
+                        src.relu_into(&mut out)?;
+                        outs.push(out);
+                    }
+                    scratch.free_all(reuse);
+                    outs
                 }
-                scratch.free_all(reuse);
-                outs
             }
-            Op::Add { a, b: rhs } => {
-                let mut reuse = take_slot(&mut slots, out_slot);
-                let lhs = value_refs(&vals, xs, *a);
-                let rhs = value_refs(&vals, xs, *rhs);
-                let mut outs = Vec::with_capacity(lhs.len());
-                for (l, r) in lhs.iter().zip(rhs.iter()) {
-                    let mut out = next_buf(&mut reuse, &scratch, is_output, l.rows, l.cols);
-                    l.add_into(r, &mut out)?;
-                    outs.push(out);
+            Op::Add { a, b: rhs } => match plan.inplace_operand(i) {
+                // the dying LEFT operand is the accumulator: a += b
+                Some(v) if v == *a => {
+                    let mut bufs = vals[v].take().expect("in-place operand live");
+                    let rhs = value_refs(&vals, xs, *rhs);
+                    for (buf, r) in bufs.iter_mut().zip(rhs) {
+                        buf.add_inplace(r)?;
+                    }
+                    bufs
                 }
-                scratch.free_all(reuse);
-                outs
-            }
+                // only the RIGHT operand dies: b = a + b (same addend
+                // order as `add_into`, so still bitwise-equal)
+                Some(v) => {
+                    debug_assert_eq!(v, *rhs);
+                    let mut bufs = vals[v].take().expect("in-place operand live");
+                    let lhs = value_refs(&vals, xs, *a);
+                    for (buf, l) in bufs.iter_mut().zip(lhs) {
+                        buf.radd_inplace(l)?;
+                    }
+                    bufs
+                }
+                None => {
+                    let mut reuse = take_slot(&mut slots, out_slot);
+                    let lhs = value_refs(&vals, xs, *a);
+                    let rhs = value_refs(&vals, xs, *rhs);
+                    let mut outs = Vec::with_capacity(lhs.len());
+                    for (l, r) in lhs.iter().zip(rhs.iter()) {
+                        let mut out =
+                            next_buf(&mut reuse, &scratch, is_output, l.rows, l.cols);
+                        l.add_into(r, &mut out)?;
+                        outs.push(out);
+                    }
+                    scratch.free_all(reuse);
+                    outs
+                }
+            },
         };
         debug_assert_eq!(outs.len(), b);
         vals[out_id] = Some(outs);

@@ -116,6 +116,11 @@ pub struct ExecutionPlan {
     slot_of: Vec<Option<usize>>,
     /// Column width of each slot.
     slot_cols: Vec<usize>,
+    /// Per instruction: the operand value this op may execute **in place**
+    /// on (overwriting the operand's buffer instead of writing a fresh
+    /// one), or `None`. See [`ExecutionPlan::inplace_operand`] for the
+    /// eligibility rules.
+    inplace: Vec<Option<ValueId>>,
 }
 
 /// Incrementally builds a plan; used by lowering and the fusion pass.
@@ -199,25 +204,59 @@ impl PlanBuilder {
         last_use[output] = LIVE_OUT;
 
         // linear-scan slot assignment: a dying value's slot is reusable by
-        // the next same-width value born after it. Operands are released
-        // AFTER the instruction's own output is placed, so an op's output
-        // never aliases one of its inputs.
+        // the next same-width value born after it. Operands are normally
+        // released AFTER the instruction's own output is placed, so an
+        // op's output never aliases one of its inputs — EXCEPT for the
+        // in-place elementwise ops below, where the aliasing is the point:
+        // when a Relu/BiasAdd/Add operand dies at its consuming
+        // instruction, the output takes over the operand's slot (and, in
+        // the inference executor, its buffer), eliding one full matrix
+        // write+read per op. Kernel-backed ops (Spmm / MatMul / the fused
+        // op) never qualify — kernels need a zeroed output and read their
+        // input throughout the call.
         let mut slot_of: Vec<Option<usize>> = vec![None; nvals];
         let mut slot_cols: Vec<usize> = Vec::new();
+        let mut inplace: Vec<Option<ValueId>> = vec![None; ops.len()];
         let mut free: std::collections::HashMap<usize, Vec<usize>> =
             std::collections::HashMap::new();
         for (i, op) in ops.iter().enumerate() {
             let out = i + 1;
-            if out != output {
-                let c = cols[out];
-                let slot = match free.get_mut(&c).and_then(|f| f.pop()) {
-                    Some(s) => s,
-                    None => {
-                        slot_cols.push(c);
-                        slot_cols.len() - 1
-                    }
+            // in-place candidate: an elementwise op whose operand dies
+            // here. The plan output never executes in place (it must land
+            // in a caller-owned buffer); the input is caller-owned too.
+            // For Add either operand qualifies (the executor has both
+            // accumulator orders); the left one is preferred.
+            let chosen = if out == output {
+                None
+            } else {
+                let mut cands: Vec<ValueId> = match op {
+                    Op::Relu { x } | Op::BiasAdd { x, .. } => vec![*x],
+                    Op::Add { a, b } if a != b => vec![*a, *b],
+                    _ => Vec::new(),
                 };
-                slot_of[out] = Some(slot);
+                cands.retain(|&v| v != INPUT_VALUE && last_use[v] == i);
+                cands.first().copied()
+            };
+            if out != output {
+                match chosen {
+                    // the output inherits the dying operand's slot — all
+                    // in-place ops preserve width, so the class matches
+                    Some(v) => {
+                        slot_of[out] = slot_of[v];
+                        inplace[i] = Some(v);
+                    }
+                    None => {
+                        let c = cols[out];
+                        let slot = match free.get_mut(&c).and_then(|f| f.pop()) {
+                            Some(s) => s,
+                            None => {
+                                slot_cols.push(c);
+                                slot_cols.len() - 1
+                            }
+                        };
+                        slot_of[out] = Some(slot);
+                    }
+                }
             }
             let mut seen = Vec::new();
             for v in op.operands() {
@@ -225,13 +264,18 @@ impl PlanBuilder {
                     continue;
                 }
                 seen.push(v);
+                // the in-place operand's slot transferred to the output —
+                // it is NOT free
+                if chosen == Some(v) {
+                    continue;
+                }
                 if let Some(s) = slot_of[v] {
                     free.entry(cols[v]).or_default().push(s);
                 }
             }
         }
 
-        ExecutionPlan { model, dims, norm, ops, cols, last_use, slot_of, slot_cols }
+        ExecutionPlan { model, dims, norm, ops, cols, last_use, slot_of, slot_cols, inplace }
     }
 }
 
@@ -294,6 +338,23 @@ impl ExecutionPlan {
     /// the steady-state pooled-buffer bound per request.
     pub fn num_slots(&self) -> usize {
         self.slot_cols.len()
+    }
+
+    /// The operand instruction `i` may execute **in place** on, or `None`.
+    ///
+    /// Eligibility (computed once at plan sealing): the op is an
+    /// elementwise dense op (`Relu`, `BiasAdd`, `Add`), the operand is not
+    /// the plan input, it **dies at this instruction** (`last_use == i`,
+    /// so no later reader exists), it is not the same value as the op's
+    /// other operand, and the op does not define the plan output (which
+    /// must land in a caller-owned buffer). The output then shares the
+    /// operand's slot; the inference executor overwrites the operand's
+    /// buffer with the new in-place [`Dense`](crate::dense::Dense)
+    /// kernels instead of a `_into` copy. For `Add`, the returned id says
+    /// which side is the accumulator (left preferred; either works,
+    /// `a + b` evaluated in that order both ways).
+    pub fn inplace_operand(&self, i: usize) -> Option<ValueId> {
+        self.inplace[i]
     }
 
     /// Column width of each slot.

@@ -134,6 +134,57 @@ mod tests {
         assert!(!gin.describe().is_empty());
     }
 
+    /// In-place slot execution wiring: elementwise ops whose operand dies
+    /// at the defining instruction share the operand's slot; kernel ops,
+    /// the plan output, and the plan input never participate.
+    #[test]
+    fn inplace_assignment_follows_the_rules() {
+        for model in GnnModel::ALL {
+            let plan = model.lower(dims(), model.norm_kind());
+            for (i, op) in plan.ops().iter().enumerate() {
+                let out = i + 1;
+                match plan.inplace_operand(i) {
+                    Some(v) => {
+                        // only elementwise ops; operand from this op; dies here
+                        assert!(
+                            matches!(op, Op::Relu { .. } | Op::BiasAdd { .. } | Op::Add { .. }),
+                            "{model:?}: {op:?} cannot run in place"
+                        );
+                        assert!(op.operands().contains(&v), "{model:?} i={i}");
+                        assert_ne!(v, 0, "{model:?}: plan input must not be overwritten");
+                        assert_eq!(plan.last_use(v), i, "{model:?}: operand outlives op");
+                        assert_ne!(out, plan.output(), "{model:?}: output is caller-owned");
+                        // the output inherits the operand's slot
+                        assert_eq!(plan.slot_of(out), plan.slot_of(v), "{model:?} i={i}");
+                    }
+                    None => {
+                        if let (Op::Relu { x } | Op::BiasAdd { x, .. }) = op {
+                            // a skipped unary elementwise op means the
+                            // operand is shared, is the input, or the op
+                            // defines the output
+                            assert!(
+                                *x == 0 || plan.last_use(*x) > i || out == plan.output(),
+                                "{model:?} i={i}: missed in-place opportunity"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        // GCN layer 0: spmm's value dies at bias_add, bias_add's at relu —
+        // both run in place (the concrete case from the motivation)
+        let gcn = GnnModel::Gcn.lower(dims(), GnnModel::Gcn.norm_kind());
+        let inplace: Vec<bool> =
+            (0..gcn.ops().len()).map(|i| gcn.inplace_operand(i).is_some()).collect();
+        assert_eq!(inplace, vec![false, false, true, true, false, false, false]);
+        // GIN layer 0's z = add(x, agg): only the RIGHT operand (agg) is a
+        // non-input dying value — the radd accumulator case
+        let gin = GnnModel::Gin.lower(dims(), GnnModel::Gin.norm_kind());
+        let Op::Add { a, b } = &gin.ops()[1] else { panic!("GIN op 1 is the residual add") };
+        assert_eq!(*a, 0, "left operand is the plan input");
+        assert_eq!(gin.inplace_operand(1), Some(*b));
+    }
+
     #[test]
     fn lifetimes_and_slots_are_consistent() {
         for model in GnnModel::ALL {

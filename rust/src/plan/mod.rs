@@ -24,6 +24,32 @@
 //!   (almost) nothing. The training executor records values onto the tape
 //!   — they must all outlive the backward sweep — and the tape recycles
 //!   them into the same pool on drop.
+//!
+//!   **In-place slot rules** ([`ExecutionPlan::inplace_operand`]): an op
+//!   may reuse an operand's slot — and, in the inference executor, its
+//!   actual buffer, via the `Dense::{relu,add_row_broadcast,add,radd}_inplace`
+//!   kernels instead of a `_into` copy — exactly when ALL of these hold:
+//!
+//!   1. the op is **elementwise** (`Relu`, `BiasAdd`, `Add`): element
+//!      `t` of the output depends only on element `t` of the operand, so
+//!      overwriting as it reads is sound. Kernel-backed ops (`Spmm`,
+//!      `MatMul`, `SpmmFusedRelu`) never qualify — they need a zeroed
+//!      output and read their operand throughout the call;
+//!   2. the operand **dies at this instruction** (`last_use == i`): no
+//!      later reader observes the overwrite;
+//!   3. the operand is not the plan **input** (caller-owned, may be
+//!      shared) and the op does not define the plan **output** (which
+//!      must leave in a caller-owned, unpooled buffer);
+//!   4. for `Add`, the two operands are distinct values (either side may
+//!      be the accumulator; the left is preferred).
+//!
+//!   Future ops opt in by extending the candidate match in
+//!   `PlanBuilder::finish` — an op that reads element `t` of its operand
+//!   after writing element `u ≠ t` (anything with a reduction, a
+//!   broadcast over rows, or a neighbour gather) must NOT be added. The
+//!   in-place kernels are property-tested bitwise-equal to their `_into`
+//!   twins, so the rewrite never changes numerics; it cuts one full
+//!   `n × K` write+read per eligible op in steady state.
 //! * **Lowering** ([`GnnModel::lower`](crate::gnn::GnnModel)) — each model
 //!   of the zoo lowers to the op set `{Spmm, MatMul, BiasAdd, Relu, Add}`
 //!   in exactly the dataflow the deleted hand-written forwards had, so

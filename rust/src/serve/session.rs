@@ -198,10 +198,13 @@ impl SessionRegistry {
                     }
                 }
             }
-            // fuse exactly the edges the training-time tuner measured
-            // faster (per-request widths; coalesced batches inherit the
-            // decision) — no serving-time measurement, like the kernel
-            // warm-start above
+            // fuse exactly the edges whose joint (format, fuse) decision
+            // measured fused faster at training time (per-request widths;
+            // coalesced batches inherit the decision) — no serving-time
+            // measurement, like the kernel warm-start above. The fused
+            // dispatch routes through the same warm-started choice, so a
+            // fused SELL/sorted-CSR width serves from the representation
+            // pre-converted just above.
             let profile = tuner.profile.name.clone();
             plan = plan.fuse_spmm_relu(|k| db.fused_relu_profitable(name, &profile, k));
         }
@@ -386,6 +389,46 @@ mod tests {
         reg.close(id).unwrap();
         assert_eq!(reg.workspace().cached_formats(), 0);
         assert!(registry.binding(name, 8, Semiring::Sum).is_none());
+    }
+
+    /// A joint (format, fuse) DB entry: the session warm-starts the
+    /// format choice, pre-converts it, AND fuses the plan at that width —
+    /// fused serving runs from the tuned representation.
+    #[test]
+    fn warm_start_joint_format_and_fusion_decision() {
+        let ds = karate_club();
+        let dims = dims_for(&ds, 8);
+        let name = "sess-joint";
+        let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+        let mut db = TuningDb::default();
+        // GCN's fusable width is hidden = 8: the joint winner was
+        // (SELL(4,32), fused)
+        db.put(
+            name,
+            "amd-epyc",
+            8,
+            DbEntry {
+                sell: Some((4, 32)),
+                speedup: 1.4,
+                fuse_relu: Some(1.8),
+                ..DbEntry::default()
+            },
+        );
+        let mut reg = SessionRegistry::new();
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let id = reg
+            .register(name, GnnModel::Gcn, dims, params, &ds.adj, Some((&tuner, &db, 2)))
+            .unwrap();
+        let s = reg.get(id).unwrap();
+        assert_eq!(s.warm_started, 1);
+        assert_eq!(s.preconverted, 1, "the fused width's SELL conversion is pre-materialised");
+        assert_eq!(s.fused_ops(), 1, "the joint decision fuses the plan");
+        use crate::kernels::Semiring;
+        assert_eq!(
+            KernelRegistry::global().binding(name, 8, Semiring::Sum).unwrap().choice,
+            KernelChoice::Sell { c: 4, sigma: 32 }
+        );
+        reg.close(id).unwrap();
     }
 
     #[test]

@@ -210,16 +210,34 @@ impl Trainer {
                     let registry = KernelRegistry::global();
                     registry.set_patched(true);
                     let mut db = TuningDb::default();
-                    // exactly the widths this plan's SpMM ops will hit
+                    // exactly the widths this plan's SpMM ops will hit. At
+                    // fusable widths the joint format × fusion search below
+                    // IS the kernel decision (it times every candidate's
+                    // unfused chain anyway and would overwrite a plain
+                    // tune() here), so those skip the spmm-only sweep.
+                    let fusable = if cfg.fuse == FusePolicy::Auto {
+                        plan.fusable_spmm_widths()
+                    } else {
+                        Vec::new()
+                    };
                     for k in plan.spmm_shapes() {
+                        if fusable.contains(&k) {
+                            continue;
+                        }
                         tuner.tune(&dataset.name, &operand.a, k, registry, &mut db)?;
                     }
                     if cfg.fuse == FusePolicy::Auto {
-                        // measure the fused-epilogue family at each fusable
-                        // width; the rewrite below only takes edges that
-                        // measured faster
-                        for k in plan.fusable_spmm_widths() {
-                            tuner.tune_fused_relu(&dataset.name, &operand.a, k, &mut db)?;
+                        // one joint (format, fuse) decision per fusable
+                        // width; the rewrite below only takes edges whose
+                        // winning cell was fused
+                        for &k in &fusable {
+                            tuner.tune_fused_relu(
+                                &dataset.name,
+                                &operand.a,
+                                k,
+                                registry,
+                                &mut db,
+                            )?;
                         }
                         let profile = tuner.profile.name.clone();
                         plan = plan.fuse_spmm_relu(|k| {

@@ -6,7 +6,8 @@
 //! * `execute_taped` and `execute_inference` are **bitwise-equal** to each
 //!   other and to a hand-written oracle (the deleted per-model forward,
 //!   preserved here as the reference) for all four models × sparse format
-//!   {CSR, SELL-C-σ, sorted CSR} × serial/pooled execution.
+//!   {CSR, SELL-C-σ, sorted CSR} × {unfused, fused epilogue} ×
+//!   serial/pooled execution — the format-routed fused kernels included.
 //! * Gradients through the tape are bitwise-identical across every such
 //!   configuration.
 //! * The `Spmm→Relu` fusion pass changes **nothing** numerically — values
@@ -123,10 +124,13 @@ fn run_taped(
 }
 
 /// The satellite matrix: all four models × {CSR, SELL, sorted CSR} ×
-/// serial/pooled — taped and inference executors bitwise-equal to each
-/// other, to the oracle, and (gradients) to the trusted-serial reference.
+/// {unfused, fused} × serial/pooled — taped and inference executors
+/// bitwise-equal to each other, to the oracle, and (gradients) to the
+/// trusted-serial reference. The fused column exercises the format-routed
+/// fused epilogue kernels end-to-end: a SELL- or sorted-CSR-bound context
+/// runs the format-native fused body, and must change nothing.
 #[test]
-fn executors_bitwise_equal_across_models_formats_and_threading() {
+fn executors_bitwise_equal_across_models_formats_fusion_and_threading() {
     let formats = [
         ("csr", KernelChoice::Trusted),
         ("sell", KernelChoice::Sell { c: 4, sigma: 32 }),
@@ -134,8 +138,9 @@ fn executors_bitwise_equal_across_models_formats_and_threading() {
     ];
     for model in GnnModel::ALL {
         let (plan, a, params, _, x) = setup(model);
+        let fused_plan = plan.fuse_spmm_relu(|_| true);
         let want = oracle_forward(model, &a, &params, &x);
-        // the gradient reference: trusted kernel, serial, unpooled
+        // the gradient reference: trusted kernel, serial, unpooled, unfused
         let ref_ctx = format!("plan-matrix-ref-{}", model.name());
         bind_choice(&ref_ctx, &plan, KernelChoice::Trusted);
         let ref_operand = SpmmOperand::cached(a.clone(), &ref_ctx);
@@ -143,39 +148,46 @@ fn executors_bitwise_equal_across_models_formats_and_threading() {
         assert_eq!(ref_logits.data, want.data, "{model:?}: tape diverged from oracle");
 
         for (fname, choice) in formats {
-            for threads in [1usize, 3] {
-                for pooled in [false, true] {
-                    let label = format!("{model:?}/{fname}/t{threads}/pooled={pooled}");
-                    let ctx = format!("plan-matrix-{}-{fname}-{threads}-{pooled}", model.name());
-                    bind_choice(&ctx, &plan, choice);
-                    let ws = pooled.then(|| Arc::new(KernelWorkspace::new()));
-                    let mut operand = SpmmOperand::cached(a.clone(), &ctx);
-                    if let Some(ws) = &ws {
-                        operand =
-                            operand.with_workspace(Arc::clone(ws), context_graph_id(&ctx));
-                    }
-                    // tape-recording executor
-                    let (logits, grads) =
-                        run_taped(&plan, &operand, &params, &x, threads, ws.clone());
-                    assert_eq!(logits.data, want.data, "{label}: taped value");
-                    assert_eq!(grads.len(), ref_grads.len(), "{label}");
-                    for (name, g) in &grads {
-                        assert_eq!(
-                            g.data, ref_grads[name].data,
-                            "{label}: grad '{name}' diverged"
+            for fused in [false, true] {
+                let exec_plan = if fused { &fused_plan } else { &plan };
+                for threads in [1usize, 3] {
+                    for pooled in [false, true] {
+                        let label =
+                            format!("{model:?}/{fname}/fused={fused}/t{threads}/pooled={pooled}");
+                        let ctx = format!(
+                            "plan-matrix-{}-{fname}-{fused}-{threads}-{pooled}",
+                            model.name()
                         );
-                    }
-                    // tape-free executor, solo and coalesced
-                    let solo =
-                        execute_inference(&plan, &operand, &params, &[&x], threads).unwrap();
-                    assert_eq!(solo[0].data, want.data, "{label}: inference value");
-                    let batch =
-                        execute_inference(&plan, &operand, &params, &[&x, &x, &x], threads)
+                        bind_choice(&ctx, &plan, choice);
+                        let ws = pooled.then(|| Arc::new(KernelWorkspace::new()));
+                        let mut operand = SpmmOperand::cached(a.clone(), &ctx);
+                        if let Some(ws) = &ws {
+                            operand =
+                                operand.with_workspace(Arc::clone(ws), context_graph_id(&ctx));
+                        }
+                        // tape-recording executor
+                        let (logits, grads) =
+                            run_taped(exec_plan, &operand, &params, &x, threads, ws.clone());
+                        assert_eq!(logits.data, want.data, "{label}: taped value");
+                        assert_eq!(grads.len(), ref_grads.len(), "{label}");
+                        for (name, g) in &grads {
+                            assert_eq!(
+                                g.data, ref_grads[name].data,
+                                "{label}: grad '{name}' diverged"
+                            );
+                        }
+                        // tape-free executor, solo and coalesced
+                        let solo = execute_inference(exec_plan, &operand, &params, &[&x], threads)
                             .unwrap();
-                    for out in &batch {
-                        assert_eq!(out.data, want.data, "{label}: coalesced inference");
+                        assert_eq!(solo[0].data, want.data, "{label}: inference value");
+                        let batch =
+                            execute_inference(exec_plan, &operand, &params, &[&x, &x, &x], threads)
+                                .unwrap();
+                        for out in &batch {
+                            assert_eq!(out.data, want.data, "{label}: coalesced inference");
+                        }
+                        KernelRegistry::global().unbind_context(&ctx);
                     }
-                    KernelRegistry::global().unbind_context(&ctx);
                 }
             }
         }

@@ -4,9 +4,13 @@
 # / sorted-csr) and `speedup` vs the trusted-CSR baseline, so the
 # sparse-format axis is tracked PR-over-PR; a `plan` section with the
 # fused-vs-unfused Spmm→Relu epilogue speedup per (graph, model) through
-# the whole inference ExecutionPlan; plus the pool-vs-spawn per-call
-# overhead microbenchmark. Run from anywhere; extra args pass through to
-# cargo bench. Set ISPLIB_BENCH_QUICK=1 for a fast smoke run.
+# the whole inference ExecutionPlan; a `fused_formats` section timing the
+# fused epilogue against the unfused chain ON EACH sparse format (the
+# tuner's joint format×fusion cells); an `inplace` section timing the
+# copying `_into` dense ops against their in-place twins; plus the
+# pool-vs-spawn per-call overhead microbenchmark. Run from anywhere;
+# extra args pass through to cargo bench. Set ISPLIB_BENCH_QUICK=1 for a
+# fast smoke run.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
