@@ -30,6 +30,28 @@ pub enum Error {
     Io(std::io::Error),
     /// JSON (de)serialization error.
     Json(String),
+    /// A queued request's batch failed to execute (kernel error or caught
+    /// panic). The request is terminal — it was not retried — but the
+    /// server itself keeps serving; see the circuit-breaker notes in
+    /// [`crate::serve`]. Not retryable as-is: the same input may fail
+    /// again until the session leaves quarantine.
+    RequestFailed(String),
+    /// The server refused to queue the request — per-session queue bound
+    /// or FLOPs budget exceeded, or the session is quarantined. Retryable:
+    /// `retry_after_ms` is the server's backoff suggestion.
+    Overloaded {
+        /// Why admission was refused.
+        reason: String,
+        /// Suggested client backoff before resubmitting, in milliseconds.
+        retry_after_ms: u64,
+    },
+    /// The request's deadline expired while it was still queued; it was
+    /// shed before batch formation and never executed. Retryable only
+    /// with a fresh deadline.
+    DeadlineExceeded(String),
+    /// The owning session was closed (or quarantined) while the request
+    /// was queued; the request was drained without executing.
+    SessionClosed(String),
 }
 
 impl fmt::Display for Error {
@@ -43,6 +65,32 @@ impl fmt::Display for Error {
             Error::Config(s) => write!(f, "config error: {s}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Json(e) => write!(f, "json error: {e}"),
+            Error::RequestFailed(s) => write!(f, "request failed: {s}"),
+            Error::Overloaded { reason, retry_after_ms } => {
+                write!(f, "overloaded: {reason} (retry after {retry_after_ms}ms)")
+            }
+            Error::DeadlineExceeded(s) => write!(f, "deadline exceeded: {s}"),
+            Error::SessionClosed(s) => write!(f, "session closed: {s}"),
+        }
+    }
+}
+
+impl Error {
+    /// True when the failure is transient by contract and the caller
+    /// should retry (after [`Error::retry_after_ms`], when given). Only
+    /// [`Error::Overloaded`] qualifies: the server explicitly promised
+    /// capacity will free up. A `DeadlineExceeded` request may be
+    /// *resubmitted* with a fresh deadline, but replaying the expired one
+    /// cannot succeed, so it is not "retryable" in this sense.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, Error::Overloaded { .. })
+    }
+
+    /// The server's suggested backoff for a retryable error, if any.
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        match self {
+            Error::Overloaded { retry_after_ms, .. } => Some(*retry_after_ms),
+            _ => None,
         }
     }
 }
@@ -90,6 +138,28 @@ mod tests {
         let e: Error = ioe.into();
         assert!(matches!(e, Error::Io(_)));
         assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn serving_error_taxonomy() {
+        let e = Error::RequestFailed("kernel panicked".into());
+        assert!(e.to_string().contains("request failed"));
+        assert!(!e.is_retryable());
+        assert_eq!(e.retry_after_ms(), None);
+
+        let e = Error::Overloaded { reason: "queue full".into(), retry_after_ms: 25 };
+        assert!(e.to_string().contains("queue full"));
+        assert!(e.to_string().contains("25ms"));
+        assert!(e.is_retryable());
+        assert_eq!(e.retry_after_ms(), Some(25));
+
+        let e = Error::DeadlineExceeded("request 7".into());
+        assert!(e.to_string().contains("deadline exceeded"));
+        assert!(!e.is_retryable());
+
+        let e = Error::SessionClosed("session #2".into());
+        assert!(e.to_string().contains("session closed"));
+        assert!(!e.is_retryable());
     }
 
     #[test]

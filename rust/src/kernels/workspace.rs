@@ -315,9 +315,20 @@ impl KernelWorkspace {
         Dense { rows, cols, data: self.take_buffer(rows * cols) }
     }
 
+    /// Maximum number of buffers the pool will hold — the bound the chaos
+    /// suite asserts survives injected mid-batch panics.
+    pub fn max_pooled_buffers() -> usize {
+        MAX_POOLED_BUFFERS
+    }
+
     /// Return a retired buffer to the pool (dropped if the pool is full or
     /// the buffer has no capacity worth keeping).
     pub fn recycle(&self, mut buf: Vec<f32>) {
+        // failpoint: deliberately BEFORE the pool lock, so an injected
+        // panic abandons this one buffer (it drops, never entering the
+        // pool) without poisoning the shared workspace mutex — the
+        // recycling fault the pool-invariant proptest drives.
+        crate::util::failpoints::trigger("workspace.recycle", "");
         if buf.capacity() == 0 {
             return;
         }
@@ -641,5 +652,84 @@ mod tests {
         assert_eq!(ws.cached_formats(), 0);
         let _ = ws.take_buffer(8);
         assert_eq!(ws.stats().buffer_allocs, 1);
+    }
+}
+
+/// Property: the buffer pool's invariants survive a panic injected into
+/// the middle of a batch's buffer recycling — nothing leaks *into* the
+/// pool half-initialised, nothing poisons the lock, reuse still hands out
+/// zeroed buffers, and a clean rerun is bitwise-identical.
+#[cfg(all(test, feature = "failpoints"))]
+mod chaos_tests {
+    use super::*;
+    use crate::dense::Dense;
+    use crate::kernels::{spmm_with_workspace, KernelChoice, Semiring};
+    use crate::sparse::Coo;
+    use crate::util::check::{default_cases, forall};
+    use crate::util::failpoints::{self, FailAction, FailPlan};
+
+    #[test]
+    fn pool_invariants_survive_injected_recycle_panics() {
+        // "workspace.recycle" is an untagged site — serialise against any
+        // other failpoint test in this binary
+        let _guard = failpoints::exclusive();
+        failpoints::clear();
+        forall("pool survives mid-batch recycle panics", default_cases(), |rng| {
+            failpoints::clear();
+            let n = 8 + rng.gen_range(48);
+            let k = 1 + rng.gen_range(11);
+            let threads = 2 + rng.gen_range(3);
+            let mut coo = Coo::new(n, n);
+            for i in 0..n {
+                coo.push_sym(i, (i + 1) % n, 1.0);
+            }
+            let a = coo.to_csr();
+            let x = Dense::uniform(n, k, 1.0, rng);
+            let ws = KernelWorkspace::new();
+            let gid = 7u64;
+            // clean reference pass — the sorted-CSR parallel path both
+            // takes AND recycles a pooled scratch inside the call, which
+            // is exactly where the fault will land
+            let wsref = Some((&ws, gid));
+            let y0 =
+                spmm_with_workspace(&a, &x, Semiring::Sum, KernelChoice::SortedCsr, threads, wsref)
+                    .unwrap();
+            ws.recycle(y0.data.clone());
+            let parts = ws.cached_partitions();
+            let fmts = ws.cached_formats();
+            let pooled = ws.pooled_buffers();
+
+            // next recycle (the in-call scratch return) panics once
+            failpoints::configure(
+                "workspace.recycle",
+                FailPlan::always(FailAction::Panic).limit(1),
+            );
+            let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                spmm_with_workspace(&a, &x, Semiring::Sum, KernelChoice::SortedCsr, threads, wsref)
+            }));
+            assert!(attempt.is_err(), "the injected recycle panic must surface");
+            failpoints::clear();
+
+            // invariants after the mid-batch panic:
+            // 1. accounting is exact — the faulted call took two pooled
+            //    buffers (output + scratch) and returned neither; nothing
+            //    was half-inserted
+            assert_eq!(ws.pooled_buffers(), pooled.saturating_sub(2));
+            assert!(ws.pooled_buffers() <= KernelWorkspace::max_pooled_buffers());
+            // 2. the per-graph caches are untouched (the panic was
+            //    outside the lock, so no poisoning either)
+            assert_eq!(ws.cached_partitions(), parts);
+            assert_eq!(ws.cached_formats(), fmts);
+            // 3. the pool still hands out zeroed buffers
+            let b = ws.take_buffer(n * k);
+            assert!(b.iter().all(|&v| v == 0.0), "reused buffer must come back zeroed");
+            ws.recycle(b);
+            // 4. a clean rerun over the same workspace is bitwise-equal
+            let y1 =
+                spmm_with_workspace(&a, &x, Semiring::Sum, KernelChoice::SortedCsr, threads, wsref)
+                    .unwrap();
+            assert_eq!(y1.data, y0.data, "fault left no numerical residue");
+        });
+        failpoints::clear();
     }
 }

@@ -220,8 +220,15 @@ fn serve_bench(args: &Args) -> Result<()> {
     let epochs = args.get_parse("epochs", 3usize)?;
     let requests = args.get_parse("requests", 24usize)?;
     let skew = args.get_parse("skew", 4usize)?.max(1);
+    // --overload: drive the fault-isolation path instead of the happy
+    // path — a tight per-session queue cap plus a completion deadline, so
+    // the flooding session sheds at its own door (Overloaded rejections)
+    // and stale queued work sheds before batch formation
+    // (DeadlineExceeded). Counters + p99-under-overload land in the JSON.
+    let overload = args.has("overload");
+    let max_batch = args.get_parse("max-batch", 8usize)?;
     let cfg = ServeConfig {
-        max_batch: args.get_parse("max-batch", 8usize)?,
+        max_batch,
         quantum: args.get_parse("quantum", 4usize)?,
         threads: args.get_parse("threads", 2usize)?,
         // per-session kernel budget (0 inherits --threads); 1 pins every
@@ -230,6 +237,17 @@ fn serve_bench(args: &Args) -> Result<()> {
         // arrival-driven batching deadline: the bench drains through
         // run_ready, so underfull tail batches are held until this expires
         max_wait: std::time::Duration::from_millis(args.get_parse("max-wait-ms", 5u64)?),
+        queue_cap: if overload {
+            args.get_parse("queue-cap", max_batch.max(1) * 2)?
+        } else {
+            args.get_parse("queue-cap", 0usize)?
+        },
+        default_deadline: std::time::Duration::from_millis(if overload {
+            args.get_parse("deadline-ms", 50u64)?
+        } else {
+            args.get_parse("deadline-ms", 0u64)?
+        }),
+        ..ServeConfig::default()
     };
     let out_path = args.get("out", "BENCH_serving.json");
     let datasets_arg = args.get("datasets", "ogbn-protein,reddit");
@@ -309,9 +327,14 @@ fn serve_bench(args: &Args) -> Result<()> {
         sids.push(sid);
     }
 
-    // --- offered load: session 0 floods skew×, everyone else 1× ----------
+    // --- offered load: session 0 floods skew×, everyone else 1×. Under
+    // --overload the flood deliberately exceeds the queue cap: rejected
+    // submits are the admission-control path working, not a bench
+    // failure — they are counted, not retried. ---------------------------
     let mut rng = Rng::seed_from_u64(17);
     let mut offered = vec![0usize; sids.len()];
+    let mut accepted = vec![0usize; sids.len()];
+    let mut rejected_submits = 0usize;
     for (i, &sid) in sids.iter().enumerate() {
         let count = if i == 0 { requests * skew } else { requests };
         let (n, f) = {
@@ -319,11 +342,18 @@ fn serve_bench(args: &Args) -> Result<()> {
             (s.nodes(), s.dims.in_dim)
         };
         for _ in 0..count {
-            server.submit(sid, Dense::uniform(n, f, 1.0, &mut rng))?;
+            match server.submit(sid, Dense::uniform(n, f, 1.0, &mut rng)) {
+                Ok(_) => accepted[i] += 1,
+                Err(e @ Error::Overloaded { .. }) if overload => {
+                    debug_assert!(e.is_retryable());
+                    rejected_submits += 1;
+                }
+                Err(e) => return Err(e),
+            }
         }
         offered[i] = count;
     }
-    let total: usize = offered.iter().sum();
+    let total: usize = accepted.iter().sum();
 
     let cache_before: Vec<_> = trained.iter().map(|(_, _, t)| t.cache().stats()).collect();
     let jobs_before = WorkerPool::global().jobs_executed();
@@ -344,17 +374,37 @@ fn serve_bench(args: &Args) -> Result<()> {
     let pool_jobs = WorkerPool::global().jobs_executed() - jobs_before;
 
     // --- acceptance checks ------------------------------------------------
+    // every accepted request must terminate with a typed outcome — served
+    // logits, or (under --overload) DeadlineExceeded shed. Nothing may
+    // vanish, and nothing may fail untyped.
     if done.len() != total {
         return Err(Error::Runtime(format!(
-            "serve-bench: {} of {total} requests completed",
+            "serve-bench: {} of {total} accepted requests completed",
             done.len()
+        )));
+    }
+    let served = done.iter().filter(|c| c.output().is_some()).count();
+    let shed = done
+        .iter()
+        .filter(|c| matches!(c.outcome, Err(Error::DeadlineExceeded(_))))
+        .count();
+    if served + shed != total {
+        return Err(Error::Runtime(format!(
+            "serve-bench: {} served + {shed} shed ≠ {total} — some request \
+             terminated with an unexpected outcome",
+            served
+        )));
+    }
+    if !overload && served != total {
+        return Err(Error::Runtime(format!(
+            "serve-bench: only {served} of {total} requests served outside --overload"
         )));
     }
     let mut checked = 0usize;
     for &sid in &sids {
-        for c in done.iter().filter(|c| c.session == sid).take(4) {
+        for c in done.iter().filter(|c| c.session == sid && c.output().is_some()).take(4) {
             let solo = server.infer_now(sid, &c.features)?;
-            if solo.data != c.output.data {
+            if solo.data != c.output().unwrap().data {
                 return Err(Error::Runtime(format!(
                     "serve-bench: batched output for request {} diverged from per-request inference",
                     c.id
@@ -420,9 +470,39 @@ fn serve_bench(args: &Args) -> Result<()> {
     }
     println!("  fairness p99 spread: {spread:.2}x; workspace: {wstats:?}");
 
+    // overload economics: what was shed, rejected, or drained — and the
+    // tail latency of the work that DID get served under that pressure
+    let mut shed_deadline = 0u64;
+    let mut failed = 0u64;
+    let mut quarantine_trips = 0u64;
+    let mut closed_drained = 0u64;
+    for &sid in &sids {
+        let m = server.metrics(sid)?;
+        shed_deadline += m.shed_deadline;
+        failed += m.failed;
+        quarantine_trips += m.quarantine_trips;
+        closed_drained += m.closed_drained;
+    }
+    let mut served_lat: Vec<f64> =
+        done.iter().filter(|c| c.output().is_some()).map(|c| c.latency_ns).collect();
+    served_lat.sort_unstable_by(f64::total_cmp);
+    let p99_served_ns = if served_lat.is_empty() {
+        0.0
+    } else {
+        served_lat[(served_lat.len() - 1) * 99 / 100]
+    };
+    if overload {
+        println!(
+            "  overload: {served} served / {shed} shed / {rejected_submits} rejected at \
+             admission; failed={failed} trips={quarantine_trips} drained={closed_drained}; \
+             p99(served)={:.1}µs",
+            p99_served_ns / 1e3
+        );
+    }
+
     // eviction demo: churn the last session out of the shared workspace
     let last = *sids.last().unwrap();
-    let evicted = server.close_session(last)?;
+    let evicted = server.close_session(last)?.evicted;
     println!(
         "  closed 1 session → evicted {evicted} partition entries ({} remain)",
         server.workspace().cached_partitions()
@@ -442,10 +522,25 @@ fn serve_bench(args: &Args) -> Result<()> {
                 ("session_threads", Json::num(cfg.session_threads as f64)),
                 ("scale", Json::num(scale as f64)),
                 ("hidden", Json::num(hidden as f64)),
+                ("overload", Json::bool(overload)),
+                ("queue_cap", Json::num(cfg.queue_cap as f64)),
+                ("deadline_ms", Json::num(cfg.default_deadline.as_secs_f64() * 1e3)),
             ]),
         ),
         ("sessions", Json::Arr(sessions_json)),
         ("fairness", Json::obj(vec![("p99_spread", Json::num(spread))])),
+        (
+            "overload",
+            Json::obj(vec![
+                ("served", Json::num(served as f64)),
+                ("shed_deadline", Json::num(shed_deadline as f64)),
+                ("rejected_submits", Json::num(rejected_submits as f64)),
+                ("failed", Json::num(failed as f64)),
+                ("quarantine_trips", Json::num(quarantine_trips as f64)),
+                ("closed_drained", Json::num(closed_drained as f64)),
+                ("p99_served_us", Json::num(p99_served_ns / 1e3)),
+            ]),
+        ),
         (
             "checks",
             Json::obj(vec![

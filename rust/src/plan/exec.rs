@@ -88,6 +88,10 @@ impl Scratch<'_> {
 /// registry per `(context, K)` exactly as the training tape does, with
 /// workspace-cached partitions and pooled outputs.
 fn spmm_call(operand: &SpmmOperand, x: &Dense, threads: usize) -> Result<Dense> {
+    // failpoint: the chaos suite injects panics/errors/delays here, tagged
+    // with the operand context (= session name in serving), to fault one
+    // tenant's kernels while co-tenants run clean. No-op in normal builds.
+    crate::util::failpoints::check("kernels.spmm", &operand.context)?;
     match operand.impl_kind {
         SpmmImpl::Kernel => {
             let choice = KernelRegistry::global().resolve(&operand.context, x.cols, Semiring::Sum);
@@ -113,6 +117,9 @@ fn fused_call(
 ) -> Result<Dense> {
     match operand.impl_kind {
         SpmmImpl::Kernel => {
+            // same chaos site as the unfused dispatch: one plan covers
+            // both aggregation families of a faulted session
+            crate::util::failpoints::check("kernels.spmm", &operand.context)?;
             let choice = KernelRegistry::global().resolve(&operand.context, x.cols, Semiring::Sum);
             let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_id));
             spmm_fused_relu_with_workspace(&operand.a, x, bias, choice, threads, ws)

@@ -396,6 +396,37 @@ impl ExecutionPlan {
         ks
     }
 
+    /// Estimated floating-point operations for one execution of this plan
+    /// over a graph with `rows` nodes and `nnz` stored non-zeros — the
+    /// cost model behind the serving layer's FLOPs-based admission
+    /// control. Per-op costs follow the standard dense/sparse counts (an
+    /// SpMM at width `k` is `2·nnz·k`, a GEMM is `2·rows·k_in·k_out`,
+    /// elementwise ops are `rows·k`); the op-level GNN benchmarking
+    /// literature shows these shape/nnz products track measured per-op
+    /// time well, which is all an admission gate needs — relative cost,
+    /// not cycle accuracy.
+    pub fn estimated_flops(&self, rows: usize, nnz: usize) -> f64 {
+        let mut total = 0.0f64;
+        for (i, op) in self.ops.iter().enumerate() {
+            let out = i + 1;
+            total += match op {
+                Op::Spmm { x } => 2.0 * nnz as f64 * self.cols[*x] as f64,
+                Op::SpmmFusedRelu { x, .. } => {
+                    // the aggregation plus the fused bias+relu epilogue
+                    2.0 * nnz as f64 * self.cols[*x] as f64
+                        + 2.0 * rows as f64 * self.cols[out] as f64
+                }
+                Op::MatMul { x, .. } => {
+                    2.0 * rows as f64 * self.cols[*x] as f64 * self.cols[out] as f64
+                }
+                Op::BiasAdd { .. } | Op::Relu { .. } | Op::Add { .. } => {
+                    rows as f64 * self.cols[out] as f64
+                }
+            };
+        }
+        total
+    }
+
     /// Number of [`Op::SpmmFusedRelu`] instructions in the plan.
     pub fn fused_op_count(&self) -> usize {
         self.ops.iter().filter(|op| matches!(op, Op::SpmmFusedRelu { .. })).count()
@@ -448,5 +479,42 @@ impl ExecutionPlan {
             let _ = writeln!(s, "  v{} = {:?}  [cols={}]", i + 1, op, self.cols[i + 1]);
         }
         s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimated_flops_matches_hand_count_for_gcn() {
+        let dims = ModelParams { in_dim: 4, hidden: 8, classes: 3 };
+        let plan = GnnModel::Gcn.lower(dims, GnnModel::Gcn.norm_kind());
+        let (n, m) = (100usize, 500usize);
+        // GCN lowers to matmul→spmm→bias→relu→matmul→spmm→bias
+        let (nf, h, c, nnz, rows) = (4.0, 8.0, 3.0, m as f64, n as f64);
+        let want = 2.0 * rows * nf * h      // matmul 1
+            + 2.0 * nnz * h                 // spmm(hidden)
+            + rows * h                      // bias
+            + rows * h                      // relu
+            + 2.0 * rows * h * c            // matmul 2
+            + 2.0 * nnz * c                 // spmm(classes)
+            + rows * c; // bias
+        assert!((plan.estimated_flops(n, m) - want).abs() < 1e-6);
+        // more edges or more nodes always cost more
+        assert!(plan.estimated_flops(n, 2 * m) > plan.estimated_flops(n, m));
+        assert!(plan.estimated_flops(2 * n, m) > plan.estimated_flops(n, m));
+    }
+
+    #[test]
+    fn fusing_spmm_bias_relu_preserves_estimated_flops() {
+        // the fused op does the same arithmetic as its spmm→bias→relu
+        // chain, so the cost model must agree across the fusion pass
+        let dims = ModelParams { in_dim: 4, hidden: 8, classes: 3 };
+        let plan = GnnModel::Gcn.lower(dims, GnnModel::Gcn.norm_kind());
+        let fused = plan.fuse_spmm_relu(|_| true);
+        assert!(fused.fused_op_count() > 0);
+        let (a, b) = (plan.estimated_flops(64, 256), fused.estimated_flops(64, 256));
+        assert!((a - b).abs() < 1e-6, "unfused {a} vs fused {b}");
     }
 }

@@ -12,12 +12,22 @@
 //! friends) live in [`crate::dense`] — the plan executor
 //! ([`crate::plan::execute_inference`]) uses them too, independently of
 //! the serving layer; this module keeps the request/queue machinery.
+//!
+//! Every request that enters a [`SessionQueue`] leaves it with a **typed
+//! outcome**: a [`CompletedInference`] whose `outcome` is either the output
+//! logits or one of the serving errors
+//! ([`Error::RequestFailed`](crate::error::Error::RequestFailed),
+//! [`Error::DeadlineExceeded`](crate::error::Error::DeadlineExceeded),
+//! [`Error::SessionClosed`](crate::error::Error::SessionClosed)). There is
+//! deliberately no requeue path — a drained batch terminates, success or
+//! failure, so a poisoned request can never ride the queue forever.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::dense::Dense;
+use crate::error::Result;
 
 use super::session::SessionId;
 
@@ -33,9 +43,20 @@ pub struct InferenceRequest {
     pub features: Arc<Dense>,
     /// Enqueue time — latency is measured from here.
     pub enqueued: Instant,
+    /// Optional completion deadline. Work still queued past this instant
+    /// is shed before batch formation with
+    /// [`Error::DeadlineExceeded`](crate::error::Error::DeadlineExceeded).
+    pub deadline: Option<Instant>,
+    /// Estimated cost of this request in floating-point operations, from
+    /// [`ExecutionPlan::estimated_flops`](crate::plan::ExecutionPlan::estimated_flops).
+    /// Admission control sums these per queue.
+    pub cost_flops: f64,
 }
 
-/// A finished request: output logits plus the measured latency.
+/// A finished request: the typed outcome plus the measured latency.
+///
+/// `outcome` is `Ok(logits)` for a served request and a typed serving
+/// error otherwise; no request terminates without one or the other.
 pub struct CompletedInference {
     /// Request id from [`InferenceRequest`].
     pub id: u64,
@@ -43,23 +64,46 @@ pub struct CompletedInference {
     pub session: SessionId,
     /// The request's input features (for verification / re-runs).
     pub features: Arc<Dense>,
-    /// `nodes × classes` output logits.
-    pub output: Dense,
+    /// `nodes × classes` output logits, or the typed error that
+    /// terminated the request instead.
+    pub outcome: Result<Dense>,
     /// Enqueue → completion latency in nanoseconds.
     pub latency_ns: f64,
-    /// Size of the coalesced batch this request rode in.
+    /// Size of the coalesced batch this request rode in; `0` when the
+    /// request never reached a kernel (shed, rejected, or drained).
     pub batch_size: usize,
 }
 
+impl CompletedInference {
+    /// The output logits, when the request succeeded.
+    pub fn output(&self) -> Option<&Dense> {
+        self.outcome.as_ref().ok()
+    }
+
+    /// The output logits, panicking with the typed error otherwise —
+    /// the ergonomic accessor for tests and benches that expect success.
+    pub fn expect_output(&self) -> &Dense {
+        match &self.outcome {
+            Ok(d) => d,
+            Err(e) => panic!("request {} did not succeed: {e}", self.id),
+        }
+    }
+}
+
 /// FIFO queue of one session's pending requests.
+///
+/// Tracks the summed [`InferenceRequest::cost_flops`] of everything
+/// pending so admission control is O(1) per submit.
 #[derive(Default)]
 pub struct SessionQueue {
     q: VecDeque<InferenceRequest>,
+    queued_flops: f64,
 }
 
 impl SessionQueue {
     /// Enqueue a request.
     pub fn push(&mut self, r: InferenceRequest) {
+        self.queued_flops += r.cost_flops;
         self.q.push_back(r);
     }
 
@@ -73,10 +117,41 @@ impl SessionQueue {
         self.q.is_empty()
     }
 
+    /// Summed estimated cost (FLOPs) of all pending requests.
+    pub fn queued_flops(&self) -> f64 {
+        self.queued_flops
+    }
+
     /// Pop up to `max` requests, oldest first — one micro-batch.
     pub fn drain_batch(&mut self, max: usize) -> Vec<InferenceRequest> {
         let n = self.q.len().min(max);
-        self.q.drain(..n).collect()
+        let batch: Vec<_> = self.q.drain(..n).collect();
+        self.debit(&batch);
+        batch
+    }
+
+    /// Pop everything — used when a session closes or quarantines and
+    /// its pending work must terminate as typed completions.
+    pub fn drain_all(&mut self) -> Vec<InferenceRequest> {
+        let batch: Vec<_> = self.q.drain(..).collect();
+        self.queued_flops = 0.0;
+        batch
+    }
+
+    /// Remove every request whose deadline has passed at `now`,
+    /// preserving the FIFO order of the survivors. The scheduler sheds
+    /// these before batch formation so an expired request never burns a
+    /// kernel call.
+    pub fn drain_expired(&mut self, now: Instant) -> Vec<InferenceRequest> {
+        let expired: Vec<_> = {
+            let q = std::mem::take(&mut self.q);
+            let (dead, live): (Vec<_>, Vec<_>) =
+                q.into_iter().partition(|r| r.deadline.is_some_and(|d| d <= now));
+            self.q = live.into();
+            dead
+        };
+        self.debit(&expired);
+        expired
     }
 
     /// Enqueue time of the oldest pending request — the arrival-driven
@@ -85,12 +160,12 @@ impl SessionQueue {
         self.q.front().map(|r| r.enqueued)
     }
 
-    /// Put a drained batch back at the head of the queue, preserving its
-    /// order — the scheduler uses this so a batch whose inference failed
-    /// is never silently lost (it stays pending and can be retried).
-    pub fn requeue_front(&mut self, batch: Vec<InferenceRequest>) {
-        for r in batch.into_iter().rev() {
-            self.q.push_front(r);
+    fn debit(&mut self, removed: &[InferenceRequest]) {
+        for r in removed {
+            self.queued_flops -= r.cost_flops;
+        }
+        if self.q.is_empty() {
+            self.queued_flops = 0.0; // clamp float drift at the fixpoint
         }
     }
 }
@@ -98,6 +173,7 @@ impl SessionQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     fn req(id: u64) -> InferenceRequest {
         InferenceRequest {
@@ -105,33 +181,60 @@ mod tests {
             session: SessionId(0),
             features: std::sync::Arc::new(Dense::zeros(1, 1)),
             enqueued: Instant::now(),
+            deadline: None,
+            cost_flops: 100.0,
         }
     }
 
     #[test]
-    fn queue_drains_fifo() {
+    fn queue_drains_fifo_and_tracks_flops() {
         let mut q = SessionQueue::default();
         assert!(q.is_empty());
         for i in 0..5 {
             q.push(req(i));
         }
         assert_eq!(q.len(), 5);
+        assert_eq!(q.queued_flops(), 500.0);
         let batch = q.drain_batch(3);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(q.queued_flops(), 200.0);
         let batch = q.drain_batch(10); // over-ask drains the remainder
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 4]);
         assert!(q.is_empty());
+        assert_eq!(q.queued_flops(), 0.0);
     }
 
     #[test]
-    fn requeue_front_restores_fifo_order() {
+    fn drain_expired_shears_only_past_deadlines() {
+        let now = Instant::now();
         let mut q = SessionQueue::default();
         for i in 0..6 {
+            let mut r = req(i);
+            // even ids expired an hour ago, odd ids have an hour left
+            r.deadline = Some(if i % 2 == 0 {
+                now - Duration::from_secs(3600)
+            } else {
+                now + Duration::from_secs(3600)
+            });
+            q.push(r);
+        }
+        let dead = q.drain_expired(now);
+        assert_eq!(dead.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2, 4]);
+        // survivors keep FIFO order and their flops
+        assert_eq!(q.queued_flops(), 300.0);
+        let live = q.drain_batch(6);
+        assert_eq!(live.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn drain_all_empties_queue_and_flops() {
+        let mut q = SessionQueue::default();
+        for i in 0..4 {
             q.push(req(i));
         }
-        let batch = q.drain_batch(3); // takes [0, 1, 2]
-        q.requeue_front(batch); // a failed batch goes back to the head
-        let all = q.drain_batch(6);
-        assert_eq!(all.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4, 5]);
+        let all = q.drain_all();
+        assert_eq!(all.len(), 4);
+        assert!(q.is_empty());
+        assert_eq!(q.queued_flops(), 0.0);
     }
 }

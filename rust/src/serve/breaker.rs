@@ -1,0 +1,211 @@
+//! Per-session circuit breaker: panic/failure quarantine with probation.
+//!
+//! A session whose batches keep failing — kernel panics caught at the
+//! serve boundary, or errors out of the executor — should stop consuming
+//! scheduler passes and stop poisoning shared caches. The breaker is a
+//! three-state machine, advanced only by the scheduler thread:
+//!
+//! ```text
+//!            K consecutive failures
+//!   Closed ──────────────────────────▶ Quarantined
+//!     ▲                                    │ cooldown (scheduler passes)
+//!     │ first probe batch succeeds         ▼
+//!     └─────────────────────────────── Probation
+//!                                          │ probe batch fails
+//!                                          └──▶ Quarantined (again)
+//! ```
+//!
+//! * **Closed** — healthy; submits and batches flow normally. A success
+//!   resets the consecutive-failure count.
+//! * **Quarantined** — tripped; the scheduler drains the session's queue
+//!   as [`Error::SessionClosed`](crate::error::Error::SessionClosed)
+//!   completions, evicts its cached formats/partitions from the shared
+//!   [`KernelWorkspace`](crate::kernels::KernelWorkspace), and rejects new
+//!   submits with [`Error::Overloaded`](crate::error::Error::Overloaded).
+//!   Each scheduler pass ticks the cooldown down.
+//! * **Probation** — cooldown expired; one batch is admitted as a probe.
+//!   Success closes the breaker; failure re-quarantines with a fresh
+//!   cooldown.
+//!
+//! The breaker never blocks [`infer_now`](super::InferenceServer::infer_now)
+//! — the unbatched reference path stays available for diagnosis.
+
+/// Breaker state for one session. See the module docs for transitions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy; work flows normally.
+    Closed,
+    /// Tripped; submits rejected, queue drained, caches evicted.
+    Quarantined,
+    /// Cooldown expired; the next batch is a probe.
+    Probation,
+}
+
+/// Per-session failure tracker. Owned by the scheduler, one per session;
+/// all transitions happen on the scheduler thread so no locking beyond
+/// the server's own is needed.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    state: BreakerState,
+    /// Consecutive batch failures while Closed.
+    consecutive_failures: usize,
+    /// Failures needed to trip (`0` disables the breaker entirely).
+    trip_after: usize,
+    /// Scheduler passes a quarantined session waits before probation.
+    cooldown_passes: usize,
+    /// Passes remaining in the current quarantine.
+    cooldown_left: usize,
+    /// Total times this breaker has tripped (metrics).
+    trips: u64,
+}
+
+impl CircuitBreaker {
+    /// A breaker that trips after `trip_after` consecutive failures and
+    /// holds quarantine for `cooldown_passes` scheduler passes.
+    /// `trip_after == 0` disables tripping — failures are still counted
+    /// as typed completions but never quarantine the session.
+    pub fn new(trip_after: usize, cooldown_passes: usize) -> Self {
+        CircuitBreaker {
+            state: BreakerState::Closed,
+            consecutive_failures: 0,
+            trip_after,
+            cooldown_passes,
+            cooldown_left: 0,
+            trips: 0,
+        }
+    }
+
+    /// Current state.
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// True when new submits should be rejected.
+    pub fn rejects_submits(&self) -> bool {
+        self.state == BreakerState::Quarantined
+    }
+
+    /// True when the scheduler may form a batch for this session.
+    pub fn admits_batches(&self) -> bool {
+        self.state != BreakerState::Quarantined
+    }
+
+    /// Times this breaker has tripped into quarantine.
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    /// Record a successful batch. In probation this closes the breaker;
+    /// closed, it resets the consecutive-failure count.
+    pub fn record_success(&mut self) {
+        self.consecutive_failures = 0;
+        if self.state == BreakerState::Probation {
+            self.state = BreakerState::Closed;
+        }
+    }
+
+    /// Record a failed batch (panic or executor error). Returns `true`
+    /// when this failure **trips** the breaker into quarantine — the
+    /// caller then drains the queue and evicts workspace state.
+    pub fn record_failure(&mut self) -> bool {
+        match self.state {
+            BreakerState::Quarantined => false,
+            BreakerState::Probation => {
+                self.trip();
+                true
+            }
+            BreakerState::Closed => {
+                self.consecutive_failures += 1;
+                if self.trip_after > 0 && self.consecutive_failures >= self.trip_after {
+                    self.trip();
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Advance the quarantine cooldown by one scheduler pass. When it
+    /// reaches zero the breaker moves to probation and the next batch is
+    /// admitted as a probe.
+    pub fn tick(&mut self) {
+        if self.state == BreakerState::Quarantined {
+            self.cooldown_left = self.cooldown_left.saturating_sub(1);
+            if self.cooldown_left == 0 {
+                self.state = BreakerState::Probation;
+            }
+        }
+    }
+
+    fn trip(&mut self) {
+        self.state = BreakerState::Quarantined;
+        self.consecutive_failures = 0;
+        // at least one pass of quarantine, even with cooldown_passes == 0
+        self.cooldown_left = self.cooldown_passes.max(1);
+        self.trips += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trips_after_k_consecutive_failures_only() {
+        let mut b = CircuitBreaker::new(3, 2);
+        assert!(!b.record_failure());
+        assert!(!b.record_failure());
+        b.record_success(); // resets the streak
+        assert!(!b.record_failure());
+        assert!(!b.record_failure());
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.record_failure()); // third consecutive trips
+        assert_eq!(b.state(), BreakerState::Quarantined);
+        assert!(b.rejects_submits());
+        assert!(!b.admits_batches());
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn cooldown_ticks_into_probation_then_success_closes() {
+        let mut b = CircuitBreaker::new(1, 2);
+        assert!(b.record_failure());
+        b.tick();
+        assert_eq!(b.state(), BreakerState::Quarantined); // 1 pass left
+        b.tick();
+        assert_eq!(b.state(), BreakerState::Probation);
+        assert!(b.admits_batches());
+        assert!(!b.rejects_submits());
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn probation_failure_requarantines() {
+        let mut b = CircuitBreaker::new(1, 1);
+        assert!(b.record_failure());
+        b.tick();
+        assert_eq!(b.state(), BreakerState::Probation);
+        assert!(b.record_failure()); // probe failed — trip again immediately
+        assert_eq!(b.state(), BreakerState::Quarantined);
+        assert_eq!(b.trips(), 2);
+    }
+
+    #[test]
+    fn zero_trip_after_disables_the_breaker() {
+        let mut b = CircuitBreaker::new(0, 1);
+        for _ in 0..100 {
+            assert!(!b.record_failure());
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.trips(), 0);
+    }
+
+    #[test]
+    fn tick_is_a_no_op_outside_quarantine() {
+        let mut b = CircuitBreaker::new(1, 1);
+        b.tick();
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+}

@@ -26,6 +26,19 @@ pub struct SessionMetrics {
     pub requests: u64,
     /// Executed batches (one coalesced SpMM chain each; lifetime count).
     pub batches: u64,
+    /// Requests shed with `DeadlineExceeded` before batch formation.
+    pub shed_deadline: u64,
+    /// Requests terminated `RequestFailed` (batch panic or executor
+    /// error caught at the serve boundary).
+    pub failed: u64,
+    /// Submits rejected `Overloaded` (queue cap, FLOPs budget, or
+    /// quarantine) — these never entered the queue.
+    pub rejected: u64,
+    /// Queued requests drained as `SessionClosed` completions (session
+    /// close or quarantine trip).
+    pub closed_drained: u64,
+    /// Times this session's circuit breaker tripped into quarantine.
+    pub quarantine_trips: u64,
     /// Sliding window of per-request latencies in nanoseconds (enqueue →
     /// completion), most recent [`MAX_LATENCY_SAMPLES`].
     latencies_ns: VecDeque<f64>,
@@ -104,6 +117,11 @@ impl SessionMetrics {
             ("occupancy", Json::num(self.occupancy())),
             ("p50_ns", Json::num(p50)),
             ("p99_ns", Json::num(p99)),
+            ("shed_deadline", Json::num(self.shed_deadline as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("closed_drained", Json::num(self.closed_drained as f64)),
+            ("quarantine_trips", Json::num(self.quarantine_trips as f64)),
         ])
     }
 }
@@ -148,6 +166,22 @@ mod tests {
         assert!(m.p99_ns() <= 600.0 && m.p99_ns() > 500.0);
         let json = m.to_json();
         assert_eq!(json.get("requests").unwrap().as_f64().unwrap(), 6.0);
+    }
+
+    #[test]
+    fn fault_counters_surface_in_json() {
+        let mut m = SessionMetrics::default();
+        m.shed_deadline = 3;
+        m.failed = 2;
+        m.rejected = 5;
+        m.closed_drained = 1;
+        m.quarantine_trips = 1;
+        let json = m.to_json();
+        assert_eq!(json.get("shed_deadline").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(json.get("failed").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(json.get("rejected").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(json.get("closed_drained").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(json.get("quarantine_trips").unwrap().as_f64().unwrap(), 1.0);
     }
 
     #[test]

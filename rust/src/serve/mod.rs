@@ -51,19 +51,70 @@
 //! `CacheStats` unchanged (the `serve-bench` CLI subcommand asserts this,
 //! along with the bitwise batching equality, and emits
 //! `BENCH_serving.json`).
+//!
+//! # Error handling & overload behavior
+//!
+//! The serving layer's contract is that **no request ever terminates
+//! without a typed outcome** and **no tenant's fault escapes its
+//! session**. Concretely:
+//!
+//! * Every request accepted by [`InferenceServer::submit`] eventually
+//!   yields exactly one [`CompletedInference`], whose `outcome` is either
+//!   the output logits or one of the typed serving errors. Nothing is
+//!   silently dropped, and nothing is retried behind the caller's back —
+//!   there is no requeue path, so a poisoned batch cannot cycle forever.
+//! * **Rejection at the door** ([`Error::Overloaded`](crate::error::Error::Overloaded),
+//!   *retryable*, with a suggested backoff in `retry_after_ms`): the
+//!   session's queue is at `ServeConfig.queue_cap`, its queued work
+//!   exceeds `ServeConfig.flops_budget` (requests are priced by
+//!   [`ExecutionPlan::estimated_flops`](crate::plan::ExecutionPlan::estimated_flops)
+//!   at registration), or the session is quarantined. Overload is
+//!   per-session: a flooding tenant sheds at its own door while
+//!   co-tenants admit normally.
+//! * **Deadline shedding** ([`Error::DeadlineExceeded`](crate::error::Error::DeadlineExceeded)):
+//!   a request carrying a deadline ([`InferenceServer::submit_with_deadline`]
+//!   or `ServeConfig.default_deadline`) that expires while queued is shed
+//!   *before* batch formation — expired work never burns a kernel call,
+//!   and DRR deficits are untouched.
+//! * **Panic quarantine** ([`Error::RequestFailed`](crate::error::Error::RequestFailed)
+//!   then [`Error::SessionClosed`](crate::error::Error::SessionClosed)):
+//!   batch execution runs under `catch_unwind`, so a kernel panic
+//!   (re-raised by the shared worker pool on the scheduler thread) fails
+//!   only its own batch. After `ServeConfig.quarantine_after` consecutive
+//!   failures the session's [`CircuitBreaker`] trips: its cached
+//!   partitions/formats are evicted from the shared workspace, its queue
+//!   drains as `SessionClosed` completions, and submits bounce until a
+//!   cooldown plus one successful probation batch re-open it. Other
+//!   sessions keep serving from the same pool and workspace throughout,
+//!   and [`InferenceServer::infer_now`] stays available on a quarantined
+//!   session as the diagnostic reference path.
+//! * **Graph trust boundary** ([`Error::InvalidSparse`](crate::error::Error::InvalidSparse)):
+//!   [`SessionRegistry::register`] runs the full
+//!   [`Csr::validate`](crate::sparse::Csr::validate) — structure *and*
+//!   finite values — so a NaN/Inf-weighted adjacency is rejected once at
+//!   registration instead of poisoning every request.
+//!
+//! All of this is observable per session: [`SessionMetrics`] counts
+//! `shed_deadline`, `failed`, `rejected`, `closed_drained`, and
+//! `quarantine_trips` alongside the latency percentiles. The
+//! deterministic fault-injection harness behind the failure-path tests
+//! lives in [`crate::util::failpoints`] (compiled to no-ops unless the
+//! `failpoints` feature is on).
 
 mod batch;
+mod breaker;
 mod forward;
 mod metrics;
 mod scheduler;
 mod session;
 
 pub use batch::{CompletedInference, InferenceRequest, SessionQueue};
+pub use breaker::{BreakerState, CircuitBreaker};
 // re-exported for back-compat: the pack/unpack primitives moved to
 // `crate::dense` so the plan executor can use them without a
 // plan ↔ serve module cycle
 pub use crate::dense::{concat_cols, concat_cols_into, split_cols, split_cols_into};
 pub use forward::{infer_batched, infer_one};
 pub use metrics::{fairness_spread, SessionMetrics};
-pub use scheduler::{InferenceServer, ServeConfig};
+pub use scheduler::{CloseOutcome, InferenceServer, ServeConfig};
 pub use session::{ServeSession, SessionId, SessionRegistry};

@@ -1,5 +1,5 @@
 //! Deficit-round-robin scheduling of batched inference over the shared
-//! worker pool.
+//! worker pool, with fault isolation at the batch boundary.
 //!
 //! Cross-graph fairness is the whole point of this layer: every session's
 //! kernel calls land on the **one** process-wide
@@ -12,7 +12,32 @@
 //! nothing. A session that offers 10× the load gets the same per-round
 //! service as its neighbours — heavy sessions queue behind their own
 //! backlog, light sessions stay fast.
+//!
+//! Fairness alone does not isolate *faults*, so three more mechanisms run
+//! at the same boundary (see the [`super`] docs for the full error-handling
+//! contract):
+//!
+//! * **Panic quarantine** — batch execution runs under `catch_unwind`;
+//!   a panic (the worker pool re-raises kernel panics on this thread after
+//!   the batch drains) becomes [`Error::RequestFailed`] completions for
+//!   the batch, and a per-session [`CircuitBreaker`] trips after
+//!   `quarantine_after` consecutive failures: the session's cached
+//!   formats/partitions are evicted from the shared workspace, its queue
+//!   drains as [`Error::SessionClosed`] completions, and new submits are
+//!   rejected until a cooldown and a successful probation batch.
+//! * **Admission control** — submits against a full queue (`queue_cap`)
+//!   or over the per-session queued-FLOPs budget (`flops_budget`,
+//!   estimated from the session plan via
+//!   [`ExecutionPlan::estimated_flops`](crate::plan::ExecutionPlan::estimated_flops))
+//!   are rejected with retryable [`Error::Overloaded`] instead of queueing
+//!   unboundedly.
+//! * **Deadline shedding** — requests may carry a deadline
+//!   ([`InferenceServer::submit_with_deadline`], or `default_deadline`
+//!   for all); expired work is shed *before* batch formation as
+//!   [`Error::DeadlineExceeded`] completions, never burning a kernel call,
+//!   and DRR deficits are untouched.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -24,12 +49,14 @@ use crate::kernels::KernelWorkspace;
 use crate::sparse::Csr;
 
 use super::batch::{CompletedInference, InferenceRequest, SessionQueue};
+use super::breaker::{BreakerState, CircuitBreaker};
 use super::forward::{infer_batched, infer_one};
 use super::metrics::{fairness_spread, SessionMetrics};
 use super::session::{ServeSession, SessionId, SessionRegistry};
 
 /// Serving configuration. Zero values are clamped to their minimum (1)
-/// except `threads`, where 0 means the worker-pool default.
+/// except `threads`, where 0 means the worker-pool default, and the
+/// overload/fault knobs, where 0 disables the mechanism.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
     /// Max same-graph requests coalesced into one SpMM chain.
@@ -53,6 +80,32 @@ pub struct ServeConfig {
     /// not by co-tenant traffic. `Duration::ZERO` disables holding
     /// entirely (serve whatever is queued).
     pub max_wait: Duration,
+    /// Per-session pending-request bound: a submit against a queue already
+    /// holding this many requests is rejected with retryable
+    /// [`Error::Overloaded`] — a flooding tenant sheds at its own door
+    /// instead of growing an unbounded queue. 0 = unbounded.
+    pub queue_cap: usize,
+    /// Per-session queued-work budget in estimated FLOPs: a submit whose
+    /// cost would push the queue's summed
+    /// [`cost_flops`](super::batch::InferenceRequest::cost_flops) past
+    /// this is rejected with [`Error::Overloaded`]. Unlike `queue_cap`
+    /// this weighs big-graph/wide-feature requests by actual work, so one
+    /// budget number is meaningful across heterogeneous sessions.
+    /// 0.0 = disabled.
+    pub flops_budget: f64,
+    /// Deadline attached to every request submitted without an explicit
+    /// one: the request must *complete* within this of its enqueue or it
+    /// is shed with [`Error::DeadlineExceeded`] before batch formation.
+    /// `Duration::ZERO` = no default deadline.
+    pub default_deadline: Duration,
+    /// Consecutive batch failures (panics or executor errors) that trip a
+    /// session's circuit breaker into quarantine. 0 disables the breaker —
+    /// failures still complete typed, but never quarantine the session.
+    pub quarantine_after: usize,
+    /// Scheduler passes a quarantined session waits before one probe
+    /// batch is admitted (success re-opens the session, failure
+    /// re-quarantines). Clamped to at least 1 pass.
+    pub probation_passes: usize,
 }
 
 impl Default for ServeConfig {
@@ -63,19 +116,37 @@ impl Default for ServeConfig {
             threads: 0,
             session_threads: 0,
             max_wait: Duration::from_millis(5),
+            queue_cap: 1024,
+            flops_budget: 0.0,
+            default_deadline: Duration::ZERO,
+            quarantine_after: 3,
+            probation_passes: 2,
         }
     }
 }
 
+/// What [`InferenceServer::close_session`] did: workspace entries evicted
+/// plus the typed completions for any requests still queued at close time.
+pub struct CloseOutcome {
+    /// Workspace entries (partitions + converted formats) evicted.
+    pub evicted: usize,
+    /// Pending requests terminated with [`Error::SessionClosed`] — every
+    /// queued request still gets its typed outcome, never silently
+    /// dropped.
+    pub drained: Vec<CompletedInference>,
+}
+
 /// The multi-graph inference server: session registry + per-session
 /// request queues + the DRR scheduler. See the module docs for the
-/// fairness model and [`super`] for the subsystem overview.
+/// fairness and fault-isolation model and [`super`] for the subsystem
+/// overview.
 pub struct InferenceServer {
     cfg: ServeConfig,
     registry: SessionRegistry,
     queues: Vec<SessionQueue>,
     deficits: Vec<usize>,
     metrics: Vec<SessionMetrics>,
+    breakers: Vec<CircuitBreaker>,
     /// Per-session thread-budget override; `None` falls back to
     /// `cfg.session_threads`, then `cfg.threads`.
     thread_budgets: Vec<Option<usize>>,
@@ -92,6 +163,7 @@ impl InferenceServer {
             queues: Vec::new(),
             deficits: Vec::new(),
             metrics: Vec::new(),
+            breakers: Vec::new(),
             thread_budgets: Vec::new(),
             next_request: 1,
             rr_start: 0,
@@ -127,6 +199,8 @@ impl InferenceServer {
         self.queues.push(SessionQueue::default());
         self.deficits.push(0);
         self.metrics.push(SessionMetrics::default());
+        self.breakers
+            .push(CircuitBreaker::new(self.cfg.quarantine_after, self.cfg.probation_passes));
         self.thread_budgets.push(None);
         Ok(id)
     }
@@ -167,6 +241,13 @@ impl InferenceServer {
         Ok(&self.metrics[id.0])
     }
 
+    /// A session's circuit-breaker state (closed / quarantined /
+    /// probation).
+    pub fn breaker_state(&self, id: SessionId) -> Result<BreakerState> {
+        self.registry.get(id)?;
+        Ok(self.breakers[id.0].state())
+    }
+
     /// Max/min ratio of per-session p99 latencies across **open** sessions
     /// with traffic (1.0 = perfectly even; see
     /// [`fairness_spread`](super::metrics::fairness_spread)). Closed
@@ -179,10 +260,63 @@ impl InferenceServer {
     }
 
     /// Enqueue an inference request; returns its request id. The request
-    /// runs when the scheduler next serves this session.
+    /// runs when the scheduler next serves this session, carrying the
+    /// configured `default_deadline` (if any). Rejected with retryable
+    /// [`Error::Overloaded`] when the session is quarantined, its queue is
+    /// at `queue_cap`, or its queued FLOPs would exceed `flops_budget`.
     pub fn submit(&mut self, id: SessionId, features: Dense) -> Result<u64> {
+        self.submit_with_deadline(id, features, None)
+    }
+
+    /// [`InferenceServer::submit`] with an explicit completion deadline
+    /// (overriding `default_deadline`). Work still queued past its
+    /// deadline is shed with [`Error::DeadlineExceeded`] before batch
+    /// formation — it never occupies a kernel.
+    pub fn submit_with_deadline(
+        &mut self,
+        id: SessionId,
+        features: Dense,
+        deadline: Option<Instant>,
+    ) -> Result<u64> {
         let session = self.registry.get(id)?;
         Self::validate_features(session, &features)?;
+        let cost_flops = session.request_flops();
+        let name = session.name.clone();
+        if self.breakers[id.0].rejects_submits() {
+            self.metrics[id.0].rejected += 1;
+            return Err(Error::Overloaded {
+                reason: format!("session '{name}' is quarantined after repeated failures"),
+                retry_after_ms: self.retry_hint(id),
+            });
+        }
+        let q = &self.queues[id.0];
+        if self.cfg.queue_cap > 0 && q.len() >= self.cfg.queue_cap {
+            self.metrics[id.0].rejected += 1;
+            return Err(Error::Overloaded {
+                reason: format!(
+                    "session '{name}' queue full ({} pending, cap {})",
+                    q.len(),
+                    self.cfg.queue_cap
+                ),
+                retry_after_ms: self.retry_hint(id),
+            });
+        }
+        if self.cfg.flops_budget > 0.0 && q.queued_flops() + cost_flops > self.cfg.flops_budget {
+            self.metrics[id.0].rejected += 1;
+            return Err(Error::Overloaded {
+                reason: format!(
+                    "session '{name}' over FLOPs budget: {:.3e} queued + {:.3e} requested > {:.3e}",
+                    q.queued_flops(),
+                    cost_flops,
+                    self.cfg.flops_budget
+                ),
+                retry_after_ms: self.retry_hint(id),
+            });
+        }
+        let deadline = deadline.or_else(|| {
+            (self.cfg.default_deadline > Duration::ZERO)
+                .then(|| Instant::now() + self.cfg.default_deadline)
+        });
         let rid = self.next_request;
         self.next_request += 1;
         self.queues[id.0].push(InferenceRequest {
@@ -190,8 +324,19 @@ impl InferenceServer {
             session: id,
             features: Arc::new(features),
             enqueued: Instant::now(),
+            deadline,
+            cost_flops,
         });
         Ok(rid)
+    }
+
+    /// Suggested client backoff for an [`Error::Overloaded`] rejection:
+    /// roughly the passes needed to drain the current backlog, scaled by
+    /// the batching deadline (at least 1ms — "retry immediately" is never
+    /// a useful hint for an overloaded queue).
+    fn retry_hint(&self, id: SessionId) -> u64 {
+        let passes = (self.queues[id.0].len() / self.cfg.max_batch.max(1)).max(1) as u64;
+        passes * (self.cfg.max_wait.as_millis() as u64).max(1)
     }
 
     /// Total pending requests across all sessions.
@@ -201,7 +346,9 @@ impl InferenceServer {
 
     /// Run one request immediately, bypassing the queue and the batcher —
     /// the sequential reference the bitwise acceptance check compares
-    /// coalesced batches against. Does not touch metrics.
+    /// coalesced batches against. Does not touch metrics, and is **not**
+    /// gated by the circuit breaker: the reference path stays available
+    /// for diagnosing a quarantined session.
     pub fn infer_now(&self, id: SessionId, features: &Dense) -> Result<Dense> {
         let session = self.registry.get(id)?;
         Self::validate_features(session, features)?;
@@ -211,11 +358,10 @@ impl InferenceServer {
 
     /// Drain every queue under DRR fairness; returns completions in
     /// execution order (the order the scheduler served them — fairness
-    /// tests read interleaving straight off this). On error the failing
-    /// batch is re-queued, but completions already produced by this call
-    /// are dropped with the `Err` — a caller that must keep partial
-    /// results under failure should use [`InferenceServer::drain_into`],
-    /// which this delegates to.
+    /// tests read interleaving straight off this). Failures do not abort
+    /// the drain: a failed batch's requests appear in the result as
+    /// completions whose `outcome` is the typed error, and the drain keeps
+    /// serving everything else.
     pub fn run_until_drained(&mut self) -> Result<Vec<CompletedInference>> {
         let mut completed = Vec::new();
         self.drain_into(&mut completed)?;
@@ -223,15 +369,16 @@ impl InferenceServer {
     }
 
     /// [`InferenceServer::run_until_drained`] with an out-parameter:
-    /// completions are appended to `completed` as batches finish, so they
-    /// survive an error on a later batch. On error the failing batch is
-    /// re-queued first — [`InferenceServer::pending`] still accounts for
-    /// every unserved request and the drain can be retried.
+    /// completions are appended to `completed` as batches finish. Every
+    /// pending request terminates with a typed outcome — success,
+    /// [`Error::RequestFailed`], [`Error::DeadlineExceeded`], or
+    /// [`Error::SessionClosed`] — so the drain always makes progress and
+    /// always ends with [`InferenceServer::pending`] `== 0`.
     pub fn drain_into(&mut self, completed: &mut Vec<CompletedInference>) -> Result<()> {
         // the drain's readiness gate is simply "has work": batch whatever
         // is queued until nothing is
         while self.pending() > 0 {
-            self.drr_pass(|q| !q.is_empty(), completed)?;
+            self.drr_pass(|q| !q.is_empty(), completed);
         }
         Ok(())
     }
@@ -247,23 +394,45 @@ impl InferenceServer {
     /// session banks credit across passes and still executes full
     /// max_batch coalesced batches — the whole point of the batcher — at
     /// the same quantum-per-pass fair rate.
+    ///
+    /// Each visit also advances the session's breaker cooldown by one
+    /// tick and sheds expired-deadline requests before the readiness
+    /// check (shedding touches neither the deficit nor the readiness
+    /// decision of the survivors). Quarantined sessions are skipped
+    /// without banking credit.
     fn drr_pass(
         &mut self,
         ready: impl Fn(&SessionQueue) -> bool,
         completed: &mut Vec<CompletedInference>,
-    ) -> Result<()> {
+    ) {
         let n = self.queues.len();
         if n == 0 {
-            return Ok(());
+            return;
         }
         let quantum = self.cfg.quantum.max(1);
         let max_batch = self.cfg.max_batch.max(1);
+        let now = Instant::now();
         let start = self.rr_start;
         for off in 0..n {
             let s = (start + off) % n;
+            self.breakers[s].tick();
+            let expired = self.queues[s].drain_expired(now);
+            if !expired.is_empty() {
+                self.metrics[s].shed_deadline += expired.len() as u64;
+                Self::terminate(expired, completed, |r| {
+                    Error::DeadlineExceeded(format!(
+                        "request {} shed before batch formation",
+                        r.id
+                    ))
+                });
+            }
             if self.queues[s].is_empty() {
                 // idle sessions bank no credit (classic DRR reset)
                 self.deficits[s] = 0;
+                continue;
+            }
+            if !self.breakers[s].admits_batches() {
+                // quarantined: no service, no credit
                 continue;
             }
             if !ready(&self.queues[s]) {
@@ -271,17 +440,19 @@ impl InferenceServer {
                 continue;
             }
             self.deficits[s] += quantum;
-            while !self.queues[s].is_empty() && ready(&self.queues[s]) {
+            while !self.queues[s].is_empty()
+                && self.breakers[s].admits_batches()
+                && ready(&self.queues[s])
+            {
                 let want = self.queues[s].len().min(max_batch);
                 if self.deficits[s] < want {
                     break; // out of credit this pass; banks for the next
                 }
-                self.run_batch(SessionId(s), want, completed)?;
+                self.run_batch(SessionId(s), want, completed);
                 self.deficits[s] -= want;
             }
         }
         self.rr_start = (start + 1) % n;
-        Ok(())
     }
 
     /// One arrival-driven scheduling pass (the serving loop's steady-state
@@ -311,21 +482,25 @@ impl InferenceServer {
                         .unwrap_or(false)
             },
             &mut completed,
-        )?;
+        );
         Ok(completed)
     }
 
-    /// Close a session (rejects while requests are pending); returns the
-    /// number of workspace entries (partitions + converted formats)
-    /// evicted.
-    pub fn close_session(&mut self, id: SessionId) -> Result<usize> {
-        if self.queues.get(id.0).map(|q| !q.is_empty()).unwrap_or(false) {
-            return Err(Error::Config(format!(
-                "serving session #{} still has pending requests",
-                id.0
-            )));
-        }
-        self.registry.close(id)
+    /// Close a session. Requests still queued terminate as
+    /// [`Error::SessionClosed`] completions in the returned
+    /// [`CloseOutcome`] — closing never strands or silently drops pending
+    /// work — and the session's workspace entries (partitions + converted
+    /// formats) are evicted.
+    pub fn close_session(&mut self, id: SessionId) -> Result<CloseOutcome> {
+        let name = self.registry.get(id)?.name.clone();
+        let pending = self.queues[id.0].drain_all();
+        self.metrics[id.0].closed_drained += pending.len() as u64;
+        let mut drained = Vec::new();
+        Self::terminate(pending, &mut drained, |r| {
+            Error::SessionClosed(format!("session '{name}' closed with request {} queued", r.id))
+        });
+        let evicted = self.registry.close(id)?;
+        Ok(CloseOutcome { evicted, drained })
     }
 
     fn validate_features(session: &ServeSession, x: &Dense) -> Result<()> {
@@ -342,55 +517,135 @@ impl InferenceServer {
         Ok(())
     }
 
-    /// Execute one micro-batch of `b` requests for `id`. If inference
-    /// fails, the batch is re-queued at the head (nothing is lost — the
-    /// requests stay pending) and the error propagates.
-    fn run_batch(
-        &mut self,
-        id: SessionId,
-        b: usize,
+    /// Complete `reqs` with a typed error outcome (batch_size 0 — these
+    /// never reached a kernel).
+    fn terminate(
+        reqs: Vec<InferenceRequest>,
         completed: &mut Vec<CompletedInference>,
-    ) -> Result<()> {
+        err: impl Fn(&InferenceRequest) -> Error,
+    ) {
+        let done = Instant::now();
+        for req in reqs {
+            let e = err(&req);
+            completed.push(CompletedInference {
+                id: req.id,
+                session: req.session,
+                features: req.features,
+                outcome: Err(e),
+                latency_ns: done.duration_since(req.enqueued).as_nanos() as f64,
+                batch_size: 0,
+            });
+        }
+    }
+
+    /// Execute one micro-batch of `b` requests for `id`. The batch always
+    /// terminates: on success every request completes with its logits; on
+    /// executor error **or kernel panic** (caught here, at the serve
+    /// boundary) every request completes with [`Error::RequestFailed`]
+    /// and the session's breaker records the failure — tripping it evicts
+    /// the session's workspace entries and drains its queue as
+    /// [`Error::SessionClosed`]. There is no requeue: a poisoned batch
+    /// can never cycle through the scheduler forever.
+    fn run_batch(&mut self, id: SessionId, b: usize, completed: &mut Vec<CompletedInference>) {
         let batch = self.queues[id.0].drain_batch(b);
         debug_assert_eq!(batch.len(), b);
         let threads = self.session_threads(id);
-        let session = match self.registry.get(id) {
-            Ok(s) => s,
-            Err(e) => {
-                self.queues[id.0].requeue_front(batch);
-                return Err(e);
+        let (name, graph_id) = match self.registry.get(id) {
+            Ok(s) => (s.name.clone(), s.graph_id),
+            Err(_) => {
+                // session closed with requests in flight (defensive; close
+                // drains first) — still a typed terminal outcome
+                self.metrics[id.0].closed_drained += batch.len() as u64;
+                Self::terminate(batch, completed, |r| {
+                    Error::SessionClosed(format!("request {} raced a session close", r.id))
+                });
+                return;
             }
         };
-        let xs: Vec<&Dense> = batch.iter().map(|r| r.features.as_ref()).collect();
-        let outputs = match infer_batched(
-            session.plan(),
-            session.operand(),
-            session.params(),
-            &xs,
-            threads,
-        ) {
-            Ok(outputs) => outputs,
-            Err(e) => {
-                self.queues[id.0].requeue_front(batch);
-                return Err(e);
-            }
+        let result = {
+            let session = self.registry.get(id).expect("session checked above");
+            let xs: Vec<&Dense> = batch.iter().map(|r| r.features.as_ref()).collect();
+            // the unwind boundary: kernel panics (re-raised by the worker
+            // pool on this thread once the batch's tasks drain) and
+            // injected failpoint panics both land here instead of tearing
+            // down the server
+            catch_unwind(AssertUnwindSafe(|| -> Result<Vec<Dense>> {
+                crate::util::failpoints::check("serve.run_batch", &name)?;
+                infer_batched(session.plan(), session.operand(), session.params(), &xs, threads)
+            }))
+            .unwrap_or_else(|payload| {
+                Err(Error::RequestFailed(format!(
+                    "panic during batch execution for session '{name}': {}",
+                    panic_message(&payload)
+                )))
+            })
         };
         let done = Instant::now();
-        let mut latencies = Vec::with_capacity(b);
-        for (req, output) in batch.into_iter().zip(outputs) {
-            let latency_ns = done.duration_since(req.enqueued).as_nanos() as f64;
-            latencies.push(latency_ns);
-            completed.push(CompletedInference {
-                id: req.id,
-                session: id,
-                features: req.features,
-                output,
-                latency_ns,
-                batch_size: b,
-            });
+        match result {
+            Ok(outputs) => {
+                self.breakers[id.0].record_success();
+                let mut latencies = Vec::with_capacity(b);
+                for (req, output) in batch.into_iter().zip(outputs) {
+                    let latency_ns = done.duration_since(req.enqueued).as_nanos() as f64;
+                    latencies.push(latency_ns);
+                    completed.push(CompletedInference {
+                        id: req.id,
+                        session: id,
+                        features: req.features,
+                        outcome: Ok(output),
+                        latency_ns,
+                        batch_size: b,
+                    });
+                }
+                self.metrics[id.0].record_batch(b, self.cfg.max_batch.max(1), &latencies);
+            }
+            Err(e) => {
+                self.metrics[id.0].failed += b as u64;
+                let msg = match &e {
+                    Error::RequestFailed(m) => m.clone(),
+                    other => other.to_string(),
+                };
+                for req in batch {
+                    completed.push(CompletedInference {
+                        id: req.id,
+                        session: id,
+                        features: req.features,
+                        outcome: Err(Error::RequestFailed(msg.clone())),
+                        latency_ns: done.duration_since(req.enqueued).as_nanos() as f64,
+                        batch_size: b,
+                    });
+                }
+                if self.breakers[id.0].record_failure() {
+                    // tripped: isolate the tenant. Its cached partitions
+                    // and converted formats leave the shared workspace
+                    // (they may be poisoned by whatever panicked), and its
+                    // queue terminates typed — co-tenants keep serving
+                    // from the same pool and workspace untouched.
+                    self.metrics[id.0].quarantine_trips += 1;
+                    self.registry.workspace().evict(graph_id);
+                    let drained = self.queues[id.0].drain_all();
+                    self.metrics[id.0].closed_drained += drained.len() as u64;
+                    Self::terminate(drained, completed, |r| {
+                        Error::SessionClosed(format!(
+                            "session '{name}' quarantined with request {} queued",
+                            r.id
+                        ))
+                    });
+                }
+            }
         }
-        self.metrics[id.0].record_batch(b, self.cfg.max_batch.max(1), &latencies);
-        Ok(())
+    }
+}
+
+/// Best-effort human-readable panic payload (panics carry `&str` or
+/// `String` in practice).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -439,9 +694,10 @@ mod tests {
         assert_eq!(m.batches, 3);
         assert!(m.p99_ns() >= m.p50_ns());
         for c in &done {
-            assert_eq!(c.output.rows, 20);
-            assert_eq!(c.output.cols, 3);
-            assert!(c.output.data.iter().all(|v| v.is_finite()));
+            let out = c.expect_output();
+            assert_eq!(out.rows, 20);
+            assert_eq!(out.cols, 3);
+            assert!(out.data.iter().all(|v| v.is_finite()));
             assert!(c.latency_ns >= 0.0);
         }
         // completions preserve FIFO order within one session
@@ -481,10 +737,31 @@ mod tests {
         assert!(server.submit(sid, Dense::zeros(9, 4)).is_err()); // wrong nodes
         assert!(server.submit(SessionId(99), Dense::zeros(10, 4)).is_err());
         assert!(server.submit(sid, Dense::zeros(10, 4)).is_ok());
-        // close is refused while a request is pending
-        assert!(server.close_session(sid).is_err());
         server.run_until_drained().unwrap();
-        server.close_session(sid).unwrap();
+        let out = server.close_session(sid).unwrap();
+        assert!(out.drained.is_empty());
+        assert!(server.submit(sid, Dense::zeros(10, 4)).is_err());
+    }
+
+    #[test]
+    fn close_session_drains_pending_as_typed_completions() {
+        let mut server = InferenceServer::new(ServeConfig::default());
+        let adj = ring_graph(10);
+        let sid = add_session(&mut server, "close-drains", &adj, 4);
+        let mut rng = Rng::seed_from_u64(91);
+        for _ in 0..3 {
+            server.submit(sid, feats(10, 4, &mut rng)).unwrap();
+        }
+        let out = server.close_session(sid).unwrap();
+        assert_eq!(out.drained.len(), 3);
+        assert_eq!(server.pending(), 0);
+        for c in &out.drained {
+            assert!(matches!(c.outcome, Err(Error::SessionClosed(_))), "typed terminal outcome");
+            assert!(c.output().is_none());
+            assert_eq!(c.batch_size, 0);
+        }
+        // metrics survive on the tombstone path is not required; the drain
+        // count was recorded before close
         assert!(server.submit(sid, Dense::zeros(10, 4)).is_err());
     }
 
@@ -507,7 +784,7 @@ mod tests {
         assert!(done.iter().all(|c| c.batch_size == 6), "one coalesced batch expected");
         for c in &done {
             let solo = server.infer_now(sid, &c.features).unwrap();
-            assert_eq!(solo.data, c.output.data, "batched must be bitwise-equal");
+            assert_eq!(solo.data, c.expect_output().data, "batched must be bitwise-equal");
         }
     }
 
@@ -676,7 +953,7 @@ mod tests {
         assert_eq!(server.pending(), 0);
         // bitwise: the deadline path is still the same inference
         let solo = server.infer_now(slow, &slow_done[0].features).unwrap();
-        assert_eq!(solo.data, slow_done[0].output.data);
+        assert_eq!(solo.data, slow_done[0].expect_output().data);
     }
 
     #[test]
@@ -767,7 +1044,7 @@ mod tests {
         assert!(stats.buffer_reuses > 0, "{stats:?}");
         // closing one session evicts only its partitions
         let before = ws.cached_partitions();
-        let evicted = server.close_session(s1).unwrap();
+        let evicted = server.close_session(s1).unwrap().evicted;
         assert!(evicted > 0);
         assert_eq!(ws.cached_partitions(), before - evicted);
         // the surviving session keeps serving
@@ -777,5 +1054,237 @@ mod tests {
         // closed sessions drop out of the fairness spread: one open
         // session with traffic → nothing to be unfair between
         assert_eq!(server.p99_spread(), 1.0);
+    }
+
+    #[test]
+    fn queue_cap_rejects_with_retryable_overloaded() {
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 2,
+            quantum: 2,
+            threads: 1,
+            queue_cap: 2,
+            ..ServeConfig::default()
+        });
+        let adj = ring_graph(10);
+        let sid = add_session(&mut server, "capped", &adj, 4);
+        let mut rng = Rng::seed_from_u64(92);
+        server.submit(sid, feats(10, 4, &mut rng)).unwrap();
+        server.submit(sid, feats(10, 4, &mut rng)).unwrap();
+        let err = server.submit(sid, feats(10, 4, &mut rng)).unwrap_err();
+        assert!(matches!(err, Error::Overloaded { .. }), "{err}");
+        assert!(err.is_retryable());
+        assert!(err.retry_after_ms().unwrap() >= 1, "backoff hint must be actionable");
+        assert_eq!(server.metrics(sid).unwrap().rejected, 1);
+        // shedding the backlog re-opens the door
+        let done = server.run_until_drained().unwrap();
+        assert_eq!(done.len(), 2);
+        assert!(server.submit(sid, feats(10, 4, &mut rng)).is_ok());
+    }
+
+    #[test]
+    fn flops_budget_weighs_admission_by_work() {
+        let adj = ring_graph(10);
+        // measure one request's cost, then set the budget to admit
+        // exactly two
+        let probe = {
+            let mut s = InferenceServer::new(ServeConfig::default());
+            let sid = add_session(&mut s, "probe", &adj, 4);
+            s.session(sid).unwrap().request_flops()
+        };
+        assert!(probe > 0.0, "a GCN request must cost something");
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 4,
+            quantum: 4,
+            threads: 1,
+            flops_budget: probe * 2.5,
+            ..ServeConfig::default()
+        });
+        let sid = add_session(&mut server, "flops-cap", &adj, 4);
+        let mut rng = Rng::seed_from_u64(93);
+        server.submit(sid, feats(10, 4, &mut rng)).unwrap();
+        server.submit(sid, feats(10, 4, &mut rng)).unwrap();
+        let err = server.submit(sid, feats(10, 4, &mut rng)).unwrap_err();
+        assert!(matches!(err, Error::Overloaded { .. }), "{err}");
+        assert_eq!(server.metrics(sid).unwrap().rejected, 1);
+        // draining frees the budget
+        server.run_until_drained().unwrap();
+        assert!(server.submit(sid, feats(10, 4, &mut rng)).is_ok());
+    }
+
+    #[test]
+    fn expired_deadlines_shed_before_batch_formation() {
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 4,
+            quantum: 4,
+            threads: 1,
+            ..ServeConfig::default()
+        });
+        let adj = ring_graph(10);
+        let sid = add_session(&mut server, "deadlines", &adj, 4);
+        let mut rng = Rng::seed_from_u64(94);
+        let past = Instant::now() - Duration::from_secs(1);
+        let future = Instant::now() + Duration::from_secs(3600);
+        let doomed = server.submit_with_deadline(sid, feats(10, 4, &mut rng), Some(past)).unwrap();
+        let live = server.submit_with_deadline(sid, feats(10, 4, &mut rng), Some(future)).unwrap();
+        let none = server.submit(sid, feats(10, 4, &mut rng)).unwrap();
+        let done = server.run_until_drained().unwrap();
+        assert_eq!(done.len(), 3, "every request terminates, shed or served");
+        let by_id = |id: u64| done.iter().find(|c| c.id == id).unwrap();
+        assert!(matches!(by_id(doomed).outcome, Err(Error::DeadlineExceeded(_))));
+        assert_eq!(by_id(doomed).batch_size, 0, "shed work never reached a kernel");
+        assert!(by_id(live).output().is_some());
+        assert!(by_id(none).output().is_some());
+        // the survivors rode one batch together, without the shed request
+        assert_eq!(by_id(live).batch_size, 2);
+        let m = server.metrics(sid).unwrap();
+        assert_eq!(m.shed_deadline, 1);
+        assert_eq!(m.requests, 2, "latency metrics count served requests only");
+    }
+
+    #[test]
+    fn default_deadline_applies_to_plain_submits() {
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 4,
+            quantum: 4,
+            threads: 1,
+            default_deadline: Duration::from_nanos(1),
+            ..ServeConfig::default()
+        });
+        let adj = ring_graph(10);
+        let sid = add_session(&mut server, "default-deadline", &adj, 4);
+        let mut rng = Rng::seed_from_u64(95);
+        server.submit(sid, feats(10, 4, &mut rng)).unwrap();
+        // 1ns deadline has long expired by the time the pass runs
+        let done = server.run_until_drained().unwrap();
+        assert_eq!(done.len(), 1);
+        assert!(matches!(done[0].outcome, Err(Error::DeadlineExceeded(_))));
+        assert_eq!(server.metrics(sid).unwrap().shed_deadline, 1);
+    }
+}
+
+/// Quarantine-path tests need a way to make a healthy session's batches
+/// fail deterministically — that is exactly what the failpoint harness
+/// provides, so they compile only with `--features failpoints`.
+#[cfg(all(test, feature = "failpoints"))]
+mod chaos_tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::failpoints::{self, FailAction, FailPlan};
+    use crate::util::rng::Rng;
+
+    fn ring_graph(n: usize) -> Csr {
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            coo.push_sym(i, (i + 1) % n, 1.0);
+        }
+        coo.to_csr()
+    }
+
+    fn add_session(server: &mut InferenceServer, name: &str, adj: &Csr, in_dim: usize) -> SessionId {
+        let dims = ModelParams { in_dim, hidden: 8, classes: 3 };
+        let params = GnnModel::Gcn.init_params(dims, 11);
+        server.register_session(name, GnnModel::Gcn, dims, params, adj, None).unwrap()
+    }
+
+    #[test]
+    fn panicking_session_quarantines_then_recovers_on_probation() {
+        let _guard = failpoints::exclusive();
+        failpoints::clear();
+        let name = "quarantine-me";
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 2,
+            quantum: 2,
+            threads: 1,
+            quarantine_after: 2,
+            probation_passes: 1,
+            ..ServeConfig::default()
+        });
+        let adj = ring_graph(12);
+        let sid = add_session(&mut server, name, &adj, 4);
+        let mut rng = Rng::seed_from_u64(96);
+        let x = Dense::uniform(12, 4, 1.0, &mut rng);
+        let reference = server.infer_now(sid, &x).unwrap();
+
+        // the first two batches for THIS session panic, then the site
+        // goes quiet
+        failpoints::configure(
+            "serve.run_batch",
+            FailPlan::always(FailAction::Panic).with_tag(name).limit(2),
+        );
+
+        // failure 1: typed RequestFailed, breaker still closed
+        server.submit(sid, x.clone()).unwrap();
+        let done = server.run_until_drained().unwrap();
+        assert_eq!(done.len(), 1);
+        assert!(matches!(done[0].outcome, Err(Error::RequestFailed(_))), "typed panic outcome");
+        assert_eq!(server.breaker_state(sid).unwrap(), BreakerState::Closed);
+
+        // failure 2 trips the breaker; the second queued request drains
+        // as SessionClosed and new submits bounce with Overloaded
+        server.submit(sid, x.clone()).unwrap();
+        server.submit(sid, x.clone()).unwrap();
+        server.submit(sid, x.clone()).unwrap();
+        let done = server.run_until_drained().unwrap();
+        assert_eq!(done.len(), 3, "failed batch (2) + drained request (1)");
+        assert_eq!(
+            done.iter().filter(|c| matches!(c.outcome, Err(Error::RequestFailed(_)))).count(),
+            2
+        );
+        assert_eq!(
+            done.iter().filter(|c| matches!(c.outcome, Err(Error::SessionClosed(_)))).count(),
+            1
+        );
+        assert_eq!(server.breaker_state(sid).unwrap(), BreakerState::Quarantined);
+        let err = server.submit(sid, x.clone()).unwrap_err();
+        assert!(matches!(err, Error::Overloaded { .. }), "{err}");
+        assert_eq!(server.metrics(sid).unwrap().quarantine_trips, 1);
+        // the reference path stays open while quarantined
+        assert_eq!(server.infer_now(sid, &x).unwrap().data, reference.data);
+
+        // one empty pass ticks the cooldown → probation; the failpoint is
+        // exhausted, so the probe batch succeeds and re-opens the session
+        server.run_ready().unwrap();
+        assert_eq!(server.breaker_state(sid).unwrap(), BreakerState::Probation);
+        server.submit(sid, x.clone()).unwrap();
+        let done = server.run_until_drained().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].expect_output().data, reference.data, "recovery is bitwise-clean");
+        assert_eq!(server.breaker_state(sid).unwrap(), BreakerState::Closed);
+        failpoints::clear();
+    }
+
+    #[test]
+    fn transient_errors_count_toward_the_breaker_without_unwinding() {
+        let _guard = failpoints::exclusive();
+        failpoints::clear();
+        let name = "transient-sess";
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 2,
+            quantum: 2,
+            threads: 1,
+            quarantine_after: 3,
+            ..ServeConfig::default()
+        });
+        let adj = ring_graph(10);
+        let sid = add_session(&mut server, name, &adj, 4);
+        let mut rng = Rng::seed_from_u64(97);
+        let x = Dense::uniform(10, 4, 1.0, &mut rng);
+        failpoints::configure(
+            "serve.run_batch",
+            FailPlan::always(FailAction::TransientError).with_tag(name).limit(2),
+        );
+        for _ in 0..2 {
+            server.submit(sid, x.clone()).unwrap();
+            let done = server.run_until_drained().unwrap();
+            assert!(matches!(done[0].outcome, Err(Error::RequestFailed(_))));
+        }
+        // two failures < quarantine_after=3, then the site goes quiet: the
+        // streak resets on the next success and the session never trips
+        assert_eq!(server.breaker_state(sid).unwrap(), BreakerState::Closed);
+        server.submit(sid, x.clone()).unwrap();
+        let done = server.run_until_drained().unwrap();
+        assert!(done[0].output().is_some());
+        assert_eq!(server.metrics(sid).unwrap().quarantine_trips, 0);
+        failpoints::clear();
     }
 }

@@ -47,6 +47,11 @@ pub struct ServeSession {
     /// training executes, fused per the tuning DB's measured `fuse_relu`
     /// wins when the session was warm-started.
     plan: ExecutionPlan,
+    /// Estimated cost of one (unbatched) request against this session, in
+    /// FLOPs — [`ExecutionPlan::estimated_flops`] over the *fused* plan
+    /// and the normalised adjacency. Admission control prices requests
+    /// with this.
+    request_flops: f64,
 }
 
 impl ServeSession {
@@ -79,6 +84,13 @@ impl ServeSession {
     /// Stored non-zeros of the normalised adjacency.
     pub fn nnz(&self) -> usize {
         self.operand.a.nnz()
+    }
+
+    /// Estimated FLOPs of one request through this session's frozen plan
+    /// (see [`ExecutionPlan::estimated_flops`]) — the unit the server's
+    /// `flops_budget` admission control is denominated in.
+    pub fn request_flops(&self) -> f64 {
+        self.request_flops
     }
 }
 
@@ -152,6 +164,12 @@ impl SessionRegistry {
                 adj.rows, adj.cols
             )));
         }
+        // full structural + finite-values check at the trust boundary: a
+        // graph with NaN/Inf weights (or corrupt CSR indices) is rejected
+        // here, once, instead of poisoning every request's outputs
+        adj.validate().map_err(|e| {
+            Error::InvalidSparse(format!("serving session '{name}' adjacency rejected: {e}"))
+        })?;
         // shape-check the frozen params against a reference layout
         let reference = model.init_params(dims, 0);
         for (pname, want) in reference.iter() {
@@ -209,6 +227,10 @@ impl SessionRegistry {
             plan = plan.fuse_spmm_relu(|k| db.fused_relu_profitable(name, &profile, k));
         }
 
+        // price one request off the plan that will actually execute (post
+        // fusion) and the adjacency that will actually multiply
+        let request_flops = plan.estimated_flops(operand.a.rows, operand.a.nnz());
+
         let id = SessionId(self.sessions.len());
         self.sessions.push(Some(ServeSession {
             name: name.to_string(),
@@ -220,6 +242,7 @@ impl SessionRegistry {
             params,
             operand,
             plan,
+            request_flops,
         }));
         Ok(id)
     }
@@ -310,6 +333,30 @@ mod tests {
         assert!(reg
             .register("sess-bad-adj", GnnModel::Gcn, dims, params, &rect, None)
             .is_err());
+        // non-finite edge weights rejected at the trust boundary
+        let mut poisoned = ds.adj.clone();
+        poisoned.values[0] = f32::NAN;
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let err = reg
+            .register("sess-nan-adj", GnnModel::Gcn, dims, params, &poisoned, None)
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidSparse(_)), "{err}");
+        assert!(err.to_string().contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn register_prices_requests_in_flops() {
+        let ds = karate_club();
+        let dims = dims_for(&ds, 8);
+        let mut reg = SessionRegistry::new();
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let id = reg
+            .register("sess-flops", GnnModel::Gcn, dims, params, &ds.adj, None)
+            .unwrap();
+        let s = reg.get(id).unwrap();
+        let want = s.plan().estimated_flops(s.nodes(), s.nnz());
+        assert!(want > 0.0);
+        assert_eq!(s.request_flops(), want);
     }
 
     #[test]

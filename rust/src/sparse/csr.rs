@@ -9,6 +9,11 @@
 //! 3. Column indices are sorted strictly increasing within each row (no
 //!    duplicates) — the construction path via [`super::Coo::to_csr`]
 //!    guarantees this.
+//! 4. All values are finite (no NaN/Inf): one bad edge weight would
+//!    otherwise poison every output element its row touches. The serving
+//!    registry re-validates untrusted graphs at
+//!    [`SessionRegistry::register`](crate::serve::SessionRegistry::register)
+//!    against exactly these invariants.
 
 use crate::dense::Dense;
 use crate::error::{Error, Result};
@@ -140,6 +145,16 @@ impl Csr {
                     )));
                 }
             }
+        }
+        // NaN/Inf values poison every dot product they touch — an
+        // untrusted graph with one bad edge weight would otherwise turn
+        // into a full matrix of NaN logits (or a downstream panic) instead
+        // of a typed error at the trust boundary.
+        if let Some(i) = self.values.iter().position(|v| !v.is_finite()) {
+            return Err(Error::InvalidSparse(format!(
+                "non-finite value {} at nnz index {i}",
+                self.values[i]
+            )));
         }
         Ok(())
     }
@@ -374,6 +389,18 @@ mod tests {
         assert!(Csr::from_parts(1, 3, vec![0, 2], vec![1, 1], vec![1.0, 1.0]).is_err());
         // unsorted within row
         assert!(Csr::from_parts(1, 3, vec![0, 2], vec![2, 0], vec![1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn validate_catches_non_finite_values() {
+        assert!(Csr::from_parts(1, 2, vec![0, 1], vec![0], vec![f32::NAN]).is_err());
+        assert!(Csr::from_parts(1, 2, vec![0, 1], vec![0], vec![f32::INFINITY]).is_err());
+        assert!(Csr::from_parts(1, 2, vec![0, 1], vec![0], vec![f32::NEG_INFINITY]).is_err());
+        // a structurally valid matrix mutated to carry a NaN fails too
+        let mut m = sample();
+        m.values[2] = f32::NAN;
+        let err = m.validate().unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,372 @@
+//! Deterministic fault injection — named failpoints compiled to no-ops
+//! unless the `failpoints` feature is on.
+//!
+//! Production code marks the places where faults are *interesting* with a
+//! named site: [`check`] for `Result` contexts (can inject a transient
+//! error) and [`trigger`] for infallible ones (panic / delay only). The
+//! kernels mark the SpMM dispatch (`"kernels.spmm"`), the workspace marks
+//! buffer recycling (`"workspace.recycle"`), and the serving scheduler
+//! marks batch execution (`"serve.run_batch"`). Without the feature both
+//! functions are inlined empty — zero cost, zero behavior change — which
+//! is why `scripts/tier1.sh` runs the test suite both ways.
+//!
+//! With the feature on, a test installs a [`FailPlan`] per site. The
+//! schedule is **deterministic**: a plan fires from its own hit counter
+//! (`start_after` / `every` / `max_fires`) and, when `probability < 1`, a
+//! coin drawn from a per-plan PRNG seeded at [`configure`] time — so a
+//! fixed seed plus a fixed call order reproduces the exact same failure
+//! schedule, which is what lets the chaos suite assert bitwise invariants
+//! *under* fault load. Plans are keyed by `(site, tag)`: a tagged plan
+//! fires only for hits carrying that tag (the serving sites tag with the
+//! session name, so a chaos test can target one tenant while its
+//! co-tenant runs clean); an untagged plan matches every hit at the site.
+//!
+//! The registry is process-global. Concurrent tests in one binary should
+//! either use disjoint tags or serialise through [`exclusive`].
+
+#[cfg(feature = "failpoints")]
+pub use enabled::{
+    clear, configure, exclusive, fires, hits, FailAction, FailPlan,
+};
+
+use crate::error::Result;
+
+/// Evaluate the failpoint at `site` for `tag` in a `Result` context:
+/// a firing plan panics, sleeps, or returns the injected transient error.
+/// Compiled to an inline `Ok(())` without the `failpoints` feature.
+#[inline]
+pub fn check(site: &str, tag: &str) -> Result<()> {
+    #[cfg(feature = "failpoints")]
+    {
+        enabled::eval(site, tag, true)
+    }
+    #[cfg(not(feature = "failpoints"))]
+    {
+        let _ = (site, tag);
+        Ok(())
+    }
+}
+
+/// Evaluate the failpoint at `site` for `tag` in an infallible context:
+/// a firing plan panics or sleeps; a transient-error action is ignored
+/// (there is no `Result` to carry it). Compiled to an inline no-op
+/// without the `failpoints` feature.
+#[inline]
+pub fn trigger(site: &str, tag: &str) {
+    #[cfg(feature = "failpoints")]
+    {
+        let _ = enabled::eval(site, tag, false);
+    }
+    #[cfg(not(feature = "failpoints"))]
+    {
+        let _ = (site, tag);
+    }
+}
+
+#[cfg(feature = "failpoints")]
+mod enabled {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+    use std::time::Duration;
+
+    use crate::error::{Error, Result};
+    use crate::util::rng::Rng;
+
+    /// What a firing failpoint does to the caller.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum FailAction {
+        /// Panic with a message naming the site (models a kernel bug).
+        Panic,
+        /// Return `Error::Runtime` from [`super::check`] sites (models a
+        /// transient execution failure). Ignored at [`super::trigger`]
+        /// sites.
+        TransientError,
+        /// Sleep before continuing normally (models a slow batch).
+        Delay(Duration),
+    }
+
+    /// One injection plan: when the matching site+tag is hit, fire
+    /// according to a counter-and-coin schedule that is a pure function
+    /// of (hit index, seed) — deterministic across runs.
+    #[derive(Clone, Debug)]
+    pub struct FailPlan {
+        /// What to do when the plan fires.
+        pub action: FailAction,
+        /// Only hits carrying this tag match; `None` matches every hit.
+        pub tag: Option<String>,
+        /// Skip the first `start_after` matching hits.
+        pub start_after: u64,
+        /// After the skip, fire on every `every`-th matching hit
+        /// (1 = every hit; 0 is clamped to 1).
+        pub every: u64,
+        /// Stop after this many fires (0 = unlimited).
+        pub max_fires: u64,
+        /// Additional firing probability in `[0, 1]`; draws come from a
+        /// PRNG seeded with `seed`, so the coin sequence is reproducible.
+        pub probability: f64,
+        /// Seed for the probability coin.
+        pub seed: u64,
+    }
+
+    impl FailPlan {
+        /// A plan that fires `action` on every matching hit.
+        pub fn always(action: FailAction) -> FailPlan {
+            FailPlan {
+                action,
+                tag: None,
+                start_after: 0,
+                every: 1,
+                max_fires: 0,
+                probability: 1.0,
+                seed: 0,
+            }
+        }
+
+        /// Restrict the plan to hits carrying `tag`.
+        pub fn with_tag(mut self, tag: &str) -> FailPlan {
+            self.tag = Some(tag.to_string());
+            self
+        }
+
+        /// Skip the first `n` matching hits before the schedule starts.
+        pub fn after(mut self, n: u64) -> FailPlan {
+            self.start_after = n;
+            self
+        }
+
+        /// Fire on every `n`-th matching hit past the skip.
+        pub fn every_nth(mut self, n: u64) -> FailPlan {
+            self.every = n.max(1);
+            self
+        }
+
+        /// Stop firing after `n` fires.
+        pub fn limit(mut self, n: u64) -> FailPlan {
+            self.max_fires = n;
+            self
+        }
+
+        /// Gate each scheduled fire by a seeded coin.
+        pub fn with_probability(mut self, p: f64, seed: u64) -> FailPlan {
+            self.probability = p;
+            self.seed = seed;
+            self
+        }
+    }
+
+    struct PlanState {
+        plan: FailPlan,
+        hits: u64,
+        fires: u64,
+        coin: Rng,
+    }
+
+    #[derive(Default)]
+    struct Registry {
+        /// Keyed by `(site, tag-filter)` so tagged plans from concurrent
+        /// tests never collide.
+        plans: HashMap<(String, Option<String>), PlanState>,
+    }
+
+    fn registry() -> &'static Mutex<Registry> {
+        static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+        REG.get_or_init(|| Mutex::new(Registry::default()))
+    }
+
+    /// Serialisation guard for tests that install untagged plans: two such
+    /// tests running concurrently in one binary would fire into each
+    /// other's kernel calls.
+    pub fn exclusive() -> MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        let m = LOCK.get_or_init(|| Mutex::new(()));
+        // a poisoned guard (a previous test panicked while holding it) is
+        // fine: the protected state is the failpoint registry, which each
+        // test re-configures from scratch
+        m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Install (or replace) the plan for `(site, plan.tag)`.
+    pub fn configure(site: &str, plan: FailPlan) {
+        let coin = Rng::seed_from_u64(plan.seed);
+        let key = (site.to_string(), plan.tag.clone());
+        registry()
+            .lock()
+            .unwrap()
+            .plans
+            .insert(key, PlanState { plan, hits: 0, fires: 0, coin });
+    }
+
+    /// Remove every installed plan (chaos tests call this in setup *and*
+    /// teardown so a panicking test cannot leak schedule into the next).
+    pub fn clear() {
+        registry().lock().unwrap().plans.clear();
+    }
+
+    /// Total matching hits recorded at `site`, across its plans.
+    pub fn hits(site: &str) -> u64 {
+        let g = registry().lock().unwrap();
+        g.plans.iter().filter(|((s, _), _)| s == site).map(|(_, p)| p.hits).sum()
+    }
+
+    /// Total fires at `site`, across its plans.
+    pub fn fires(site: &str) -> u64 {
+        let g = registry().lock().unwrap();
+        g.plans.iter().filter(|((s, _), _)| s == site).map(|(_, p)| p.fires).sum()
+    }
+
+    /// Core evaluation: find the matching plan (exact tag wins over
+    /// untagged), advance its counters, and perform its action. Panics and
+    /// sleeps happen here; a transient error is returned only when the
+    /// site `can_err`.
+    pub(super) fn eval(site: &str, tag: &str, can_err: bool) -> Result<()> {
+        let fired = {
+            let mut g = registry().lock().unwrap();
+            let key_tagged = (site.to_string(), Some(tag.to_string()));
+            let key_any = (site.to_string(), None);
+            let state = match g.plans.get_mut(&key_tagged) {
+                Some(s) => Some(s),
+                None => g.plans.get_mut(&key_any),
+            };
+            match state {
+                None => None,
+                Some(s) => {
+                    s.hits += 1;
+                    let scheduled = s.hits > s.plan.start_after
+                        && (s.hits - s.plan.start_after - 1) % s.plan.every.max(1) == 0
+                        && (s.plan.max_fires == 0 || s.fires < s.plan.max_fires);
+                    let fires = scheduled
+                        && (s.plan.probability >= 1.0
+                            || s.coin.gen_bool(s.plan.probability));
+                    if fires {
+                        s.fires += 1;
+                        Some(s.plan.action)
+                    } else {
+                        None
+                    }
+                }
+            }
+        };
+        // act OUTSIDE the registry lock: a panic must not poison it, and a
+        // delay must not serialise unrelated sites
+        match fired {
+            None => Ok(()),
+            Some(FailAction::Panic) => {
+                panic!("failpoint '{site}' fired: injected panic (tag '{tag}')")
+            }
+            Some(FailAction::Delay(d)) => {
+                std::thread::sleep(d);
+                Ok(())
+            }
+            Some(FailAction::TransientError) => {
+                if can_err {
+                    Err(Error::Runtime(format!(
+                        "failpoint '{site}' fired: injected transient error (tag '{tag}')"
+                    )))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+}
+
+#[cfg(all(test, feature = "failpoints"))]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn unconfigured_site_is_a_no_op() {
+        let _guard = exclusive();
+        clear();
+        assert!(check("tests.nowhere", "").is_ok());
+        trigger("tests.nowhere", "");
+        assert_eq!(fires("tests.nowhere"), 0);
+    }
+
+    #[test]
+    fn schedule_is_deterministic() {
+        let _guard = exclusive();
+        clear();
+        // skip 2, then every 3rd, at most 2 fires
+        configure(
+            "tests.sched",
+            FailPlan::always(FailAction::TransientError).after(2).every_nth(3).limit(2),
+        );
+        let run = || -> Vec<bool> {
+            (0..12).map(|_| check("tests.sched", "").is_err()).collect()
+        };
+        let first = run();
+        assert_eq!(
+            first,
+            vec![
+                false, false, // skipped
+                true, false, false, // fire, then 2 off
+                true, false, false, // second (last) fire
+                false, false, false, false // max_fires reached
+            ]
+        );
+        // re-arming the identical plan reproduces the identical schedule
+        configure(
+            "tests.sched",
+            FailPlan::always(FailAction::TransientError).after(2).every_nth(3).limit(2),
+        );
+        assert_eq!(run(), first);
+        clear();
+    }
+
+    #[test]
+    fn seeded_coin_is_reproducible() {
+        let _guard = exclusive();
+        clear();
+        let plan = || FailPlan::always(FailAction::TransientError).with_probability(0.5, 42);
+        configure("tests.coin", plan());
+        let a: Vec<bool> = (0..64).map(|_| check("tests.coin", "").is_err()).collect();
+        configure("tests.coin", plan());
+        let b: Vec<bool> = (0..64).map(|_| check("tests.coin", "").is_err()).collect();
+        assert_eq!(a, b, "same seed must give the same coin sequence");
+        assert!(a.iter().any(|&f| f) && a.iter().any(|&f| !f), "p=0.5 fired some, not all");
+        clear();
+    }
+
+    #[test]
+    fn tags_scope_plans_to_one_tenant() {
+        let _guard = exclusive();
+        clear();
+        configure("tests.tag", FailPlan::always(FailAction::TransientError).with_tag("victim"));
+        assert!(check("tests.tag", "victim").is_err());
+        assert!(check("tests.tag", "bystander").is_ok());
+        assert!(check("tests.tag", "").is_ok());
+        assert_eq!(fires("tests.tag"), 1);
+        clear();
+    }
+
+    #[test]
+    fn panic_action_panics_and_counts() {
+        let _guard = exclusive();
+        clear();
+        configure("tests.panic", FailPlan::always(FailAction::Panic).limit(1));
+        let caught = std::panic::catch_unwind(|| trigger("tests.panic", ""));
+        assert!(caught.is_err());
+        assert_eq!(fires("tests.panic"), 1);
+        // limit exhausted → subsequent hits pass
+        trigger("tests.panic", "");
+        assert_eq!(hits("tests.panic"), 2);
+        clear();
+    }
+
+    #[test]
+    fn delay_action_sleeps_and_transient_is_ignored_at_trigger_sites() {
+        let _guard = exclusive();
+        clear();
+        configure("tests.delay", FailPlan::always(FailAction::Delay(Duration::from_millis(15))));
+        let t0 = Instant::now();
+        trigger("tests.delay", "");
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        // a trigger site swallows TransientError (no Result to carry it)
+        configure("tests.swallow", FailPlan::always(FailAction::TransientError));
+        trigger("tests.swallow", "");
+        assert_eq!(fires("tests.swallow"), 1);
+        clear();
+    }
+}

@@ -14,10 +14,13 @@
 //!   `criterion`): warmup + repetitions + median/mean/min reporting.
 //! * [`check`] — seeded property-testing loop (replaces `proptest`).
 //! * [`tmp`] — unique temp directories for tests (replaces `tempfile`).
+//! * [`failpoints`] — deterministic fault injection (replaces the `fail`
+//!   crate); compiled to no-ops unless the `failpoints` feature is on.
 
 pub mod bench;
 pub mod check;
 pub mod cli;
+pub mod failpoints;
 pub mod json;
 pub mod parallel;
 pub mod rng;

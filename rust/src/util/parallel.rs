@@ -99,6 +99,11 @@ struct PoolInner {
     /// caller-inlined lane). The serving bench reads this to show many
     /// graph sessions really share one pool.
     jobs: AtomicU64,
+    /// Lifetime count of job panics caught by `join_all`. The latch only
+    /// carries the FIRST panic payload of a batch back to the caller, so
+    /// without this counter a multi-panic batch is indistinguishable from
+    /// a single-panic one.
+    panics: AtomicU64,
 }
 
 impl PoolInner {
@@ -126,6 +131,7 @@ impl WorkerPool {
             available: Condvar::new(),
             shutdown: AtomicBool::new(false),
             jobs: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
         });
         for i in 0..workers {
             let inner = Arc::clone(&inner);
@@ -157,6 +163,15 @@ impl WorkerPool {
         self.inner.jobs.load(Ordering::Relaxed)
     }
 
+    /// Lifetime count of job panics caught by [`WorkerPool::join_all`] —
+    /// every lane, including the caller-inlined one and the zero-worker
+    /// inline path. The latch re-raises only a batch's *first* panic
+    /// payload, so this counter is what makes multi-panic batches
+    /// observable. Monotone; diagnostic only.
+    pub fn panics_caught(&self) -> u64 {
+        self.inner.panics.load(Ordering::Relaxed)
+    }
+
     /// Run every closure in `jobs` and wait for all of them. The calling
     /// thread always executes at least the first job; the rest are handed
     /// to parked workers. Propagates the first panic after the whole batch
@@ -171,10 +186,16 @@ impl WorkerPool {
         }
         self.inner.jobs.fetch_add(n as u64, Ordering::Relaxed);
         // Inline fast paths: single job, or a pool with no workers
-        // (thread budget 1). No queue traffic, no synchronisation.
+        // (thread budget 1). No queue traffic, no synchronisation; the
+        // catch exists only to keep `panics_caught` accurate (catch_unwind
+        // costs nothing until a panic actually unwinds), and the panic is
+        // re-raised immediately — later jobs do not run, same as before.
         if n == 1 || self.workers == 0 {
             for job in jobs {
-                job();
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
+                    self.inner.panics.fetch_add(1, Ordering::Relaxed);
+                    resume_unwind(payload);
+                }
             }
             return;
         }
@@ -186,8 +207,12 @@ impl WorkerPool {
             let mut q = self.inner.queue.lock().unwrap();
             for job in iter {
                 let latch = Arc::clone(&latch);
+                let inner = Arc::clone(&self.inner);
                 let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                     let result = catch_unwind(AssertUnwindSafe(job));
+                    if result.is_err() {
+                        inner.panics.fetch_add(1, Ordering::Relaxed);
+                    }
                     latch.complete(result.err());
                 });
                 // SAFETY: the task may borrow from the caller's stack (its
@@ -206,6 +231,9 @@ impl WorkerPool {
         // Run the first job here instead of idling; its panic is also
         // deferred until the batch has drained.
         let mine = catch_unwind(AssertUnwindSafe(first)).err();
+        if mine.is_some() {
+            self.inner.panics.fetch_add(1, Ordering::Relaxed);
+        }
 
         // Help-first wait: steal queued tasks (ours or another batch's —
         // both are safe, their latches pin their borrows) until our latch
@@ -507,6 +535,37 @@ mod tests {
         let inline = WorkerPool::new(0);
         inline.join_all(vec![|| {}, || {}]);
         assert_eq!(inline.jobs_executed(), 2);
+    }
+
+    #[test]
+    fn panics_caught_counts_every_panic_in_a_batch() {
+        // The latch carries only the FIRST panic payload back — the
+        // counter is what distinguishes a 3-panic batch from a 1-panic
+        // one.
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.panics_caught(), 0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<_> = (0..4)
+                .map(|i| move || {
+                    if i != 2 {
+                        panic!("boom {i}");
+                    }
+                })
+                .collect();
+            pool.join_all(jobs);
+        }));
+        assert!(result.is_err());
+        assert_eq!(pool.panics_caught(), 3, "all three panics must be counted");
+        // a clean batch leaves the counter alone
+        pool.join_all(vec![|| {}, || {}]);
+        assert_eq!(pool.panics_caught(), 3);
+        // the inline (zero-worker) path counts too
+        let inline = WorkerPool::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            inline.join_all(vec![|| panic!("inline boom"), || {}]);
+        }));
+        assert!(result.is_err());
+        assert_eq!(inline.panics_caught(), 1);
     }
 
     #[test]

@@ -305,7 +305,8 @@ fn fused_session_serves_bitwise_equal_through_scheduler() {
             .find(|c| c.session == plain_sid && c.features.data == x.data)
             .expect("plain completion");
         assert_eq!(
-            fused_out.output.data, plain_out.output.data,
+            fused_out.expect_output().data,
+            plain_out.expect_output().data,
             "fused serving diverged from unfused over the scheduler"
         );
     }

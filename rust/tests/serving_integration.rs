@@ -184,7 +184,7 @@ fn train_freeze_serve_roundtrip() {
     let done = server.run_until_drained().unwrap();
     let want = trainer.predict(&ds).unwrap();
     for c in &done {
-        assert!(c.output.allclose(&want, 1e-5), "serving logits diverge from predict");
+        assert!(c.expect_output().allclose(&want, 1e-5), "serving logits diverge from predict");
         assert_eq!(c.batch_size, 3);
     }
     // inference is cache-free: the trainer's BackpropCache saw nothing
@@ -256,7 +256,7 @@ fn session_serves_from_tuned_format_without_request_time_conversion() {
     // bitwise: the tuned-format path equals the per-request reference
     for c in &done {
         let solo = server.infer_now(sid, &c.features).unwrap();
-        assert_eq!(solo.data, c.output.data, "tuned-format serving diverged");
+        assert_eq!(solo.data, c.expect_output().data, "tuned-format serving diverged");
     }
     // closing the session evicts the converted format with the graph
     server.close_session(sid).unwrap();

@@ -1,12 +1,16 @@
 #!/usr/bin/env bash
 # Tier-1 verify: release build, clippy with warnings promoted to errors,
-# then the full test suite. CI and pre-merge both run exactly this.
+# then the full test suite — once with default features (failpoints
+# compiled out to inline no-ops) and once with `--features failpoints`,
+# which arms the fault-injection registry and runs the chaos suite
+# (tests/chaos_integration.rs plus the in-crate chaos_tests modules).
 # `--all-targets` keeps the serve/ subsystem and its integration tests
 # (tests/serving_integration.rs) under the -D warnings gate, and the
-# unfiltered `cargo test` run below executes them.
+# unfiltered `cargo test` runs below execute them.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
 cargo build --release
 cargo clippy --all-targets -- -D warnings
 cargo test -q
+cargo test -q --features failpoints
