@@ -32,6 +32,12 @@
 //!   spawn-per-call path. The workload is sized so fixed costs (thread
 //!   startup vs. enqueue+wake, partitioning, allocation) dominate; the
 //!   `speedup` field is pool-over-spawn per-call time.
+//! * `obs_overhead` — what the telemetry layer costs on the hot path: the
+//!   same repeated small-SpMM loop, once with the obs registry off (the
+//!   disabled path is a single relaxed atomic load per dispatch) and once
+//!   with metrics recording on (per-dispatch labelled histogram + counter
+//!   update). Fields: `disabled_ns_per_call`, `enabled_ns_per_call`,
+//!   `overhead_pct`.
 //!
 //! ```text
 //! cargo bench --bench bench_kernels          # writes BENCH_kernels.json
@@ -468,6 +474,23 @@ fn main() {
         spawned * 1e6
     );
 
+    // --- obs_overhead: telemetry cost on the hot dispatch path -----------
+    // Same pooled small-SpMM loop; the only difference between the arms is
+    // the obs state byte, so the delta is the per-dispatch recording cost.
+    isplib::obs::set_metrics(false);
+    isplib::obs::set_tracing(false);
+    let obs_off = per_call_secs(&small, &xs, calls, false);
+    isplib::obs::set_metrics(true);
+    let obs_on = per_call_secs(&small, &xs, calls, false);
+    isplib::obs::set_metrics(false);
+    let obs_overhead_pct = (obs_on / obs_off.max(1e-12) - 1.0) * 100.0;
+    println!(
+        "obs overhead ({calls} calls, threads=2): disabled {:.1} µs/call, \
+         metrics-on {:.1} µs/call → {obs_overhead_pct:+.2}% per-call",
+        obs_off * 1e6,
+        obs_on * 1e6
+    );
+
     let workloads = Json::Arr(
         graphs
             .iter()
@@ -495,6 +518,13 @@ fn main() {
             ("pool_ns_per_call", Json::num(pooled * 1e9)),
             ("spawn_ns_per_call", Json::num(spawned * 1e9)),
             ("speedup", Json::num(speedup)),
+        ])),
+        ("obs_overhead", Json::obj(vec![
+            ("calls", Json::num(calls as f64)),
+            ("threads", Json::num(2.0)),
+            ("disabled_ns_per_call", Json::num(obs_off * 1e9)),
+            ("enabled_ns_per_call", Json::num(obs_on * 1e9)),
+            ("overhead_pct", Json::num(obs_overhead_pct)),
         ])),
     ]);
     std::fs::write(&out_path, doc.pretty()).expect("write BENCH_kernels.json");

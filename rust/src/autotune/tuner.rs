@@ -256,6 +256,16 @@ impl Tuner {
     /// steady state a run actually sees. Outputs are recycled so reps hit
     /// the buffer pool like a warm epoch does.
     fn time_choice(&self, a: &Csr, x: &Dense, choice: KernelChoice, ws: &KernelWorkspace) -> Result<f64> {
+        // candidate-level span: the trace shows each timed candidate as a
+        // child of the enclosing sweep/tune span, and the aggregate table
+        // accumulates per-candidate wall time under a bounded label
+        let _span = if crate::obs::active() {
+            crate::obs::Span::enter("tune.time_choice")
+                .arg("k", Json::num(x.cols as f64))
+                .agg(format!("tune.candidate{{k={},kernel={}}}", x.cols, choice.label()))
+        } else {
+            crate::obs::Span::enter("tune.time_choice")
+        };
         prepare_format(a, choice, ws, TUNE_GRAPH_ID);
         for _ in 0..self.config.warmup {
             let y = spmm_with_workspace(
@@ -361,6 +371,11 @@ impl Tuner {
     /// sparse-format axis when the graph's row-length stats warrant it;
     /// the stats land in the report so the pruning decision is auditable.
     pub fn sweep(&self, dataset: &str, a: &Csr) -> Result<TuningReport> {
+        let _span = if crate::obs::active() {
+            crate::obs::Span::enter("tune.sweep").arg("dataset", Json::str(dataset))
+        } else {
+            crate::obs::Span::enter("tune.sweep")
+        };
         let stats = a.row_len_stats();
         let ws = KernelWorkspace::new();
         let mut points = Vec::with_capacity(self.config.ks.len());
@@ -435,6 +450,13 @@ impl Tuner {
         if let Some(choice) = self.warm_start(dataset, k, registry, db) {
             return Ok(choice);
         }
+        let _span = if crate::obs::active() {
+            crate::obs::Span::enter("tune.tune")
+                .arg("dataset", Json::str(dataset))
+                .arg("k", Json::num(k as f64))
+        } else {
+            crate::obs::Span::enter("tune.tune")
+        };
 
         let stats = a.row_len_stats();
         let ws = KernelWorkspace::new();

@@ -163,6 +163,21 @@ impl BackpropCache {
         self.inner.lock().unwrap().memory_bytes
     }
 
+    /// Push this cache's counters into the obs registry as `cache.*`
+    /// gauges (the trainer calls this at fit exit); no-op while metrics
+    /// are off.
+    pub fn publish_obs(&self) {
+        if !crate::obs::metrics_on() {
+            return;
+        }
+        let stats = self.stats();
+        let reg = crate::obs::registry();
+        reg.gauge("cache.hits").set(stats.hits as f64);
+        reg.gauge("cache.misses").set(stats.misses as f64);
+        reg.gauge("cache.hit_ratio").set(stats.hit_ratio());
+        reg.gauge("cache.memory_bytes").set(self.memory_bytes() as f64);
+    }
+
     /// Drop everything, keep the enabled flag and reset stats.
     pub fn clear(&self) {
         let mut g = self.inner.lock().unwrap();

@@ -141,6 +141,29 @@ pub fn prepare_format(a: &Csr, choice: KernelChoice, ws: &KernelWorkspace, graph
     }
 }
 
+/// Record one successful dispatch into the obs registry (caller has
+/// already checked `metrics_on`): a duration histogram under a
+/// `kernel.<name>{fmt=…,k=…,kernel=…,threads=…}` label plus a flat call
+/// counter. The label re-applies the same fallback and thread resolution
+/// as the dispatch body, so the aggregate names what actually ran.
+fn record_dispatch(
+    name: &str,
+    k: usize,
+    op: Semiring,
+    choice: KernelChoice,
+    threads: usize,
+    dur: std::time::Duration,
+) {
+    let choice = if choice.applicable(k, op) { choice } else { KernelChoice::Trusted };
+    let threads = if threads == 0 { parallel::current_num_threads() } else { threads };
+    let fmt = choice.format_label();
+    let kernel = choice.label();
+    let reg = crate::obs::registry();
+    reg.histogram(&format!("kernel.{name}{{fmt={fmt},k={k},kernel={kernel},threads={threads}}}"))
+        .record_duration(dur);
+    reg.counter(&format!("kernel.{name}.calls")).inc(1);
+}
+
 /// SpMM with explicit routing. Falls back to the trusted kernel when the
 /// requested choice is not applicable to `(K, op)` — mirroring the paper's
 /// "when the embedding dimension is not a multiple of VLEN, we use a
@@ -162,6 +185,25 @@ pub fn spmm(
 /// output buffer comes from the recycle pool instead of a fresh
 /// allocation.
 pub fn spmm_with_workspace(
+    a: &Csr,
+    x: &Dense,
+    op: Semiring,
+    choice: KernelChoice,
+    threads: usize,
+    ws: Option<(&KernelWorkspace, u64)>,
+) -> Result<Dense> {
+    if !crate::obs::metrics_on() {
+        return spmm_with_workspace_impl(a, x, op, choice, threads, ws);
+    }
+    let t0 = std::time::Instant::now();
+    let out = spmm_with_workspace_impl(a, x, op, choice, threads, ws);
+    if out.is_ok() {
+        record_dispatch("spmm", x.cols, op, choice, threads, t0.elapsed());
+    }
+    out
+}
+
+fn spmm_with_workspace_impl(
     a: &Csr,
     x: &Dense,
     op: Semiring,
@@ -296,6 +338,25 @@ pub fn spmm_fused_relu(a: &Csr, x: &Dense, bias: Option<&[f32]>, threads: usize)
 /// cache, and format conversions are served from the format cache — the
 /// same amortisation contract as [`spmm_with_workspace`].
 pub fn spmm_fused_relu_with_workspace(
+    a: &Csr,
+    x: &Dense,
+    bias: Option<&[f32]>,
+    choice: KernelChoice,
+    threads: usize,
+    ws: Option<(&KernelWorkspace, u64)>,
+) -> Result<Dense> {
+    if !crate::obs::metrics_on() {
+        return spmm_fused_relu_impl(a, x, bias, choice, threads, ws);
+    }
+    let t0 = std::time::Instant::now();
+    let out = spmm_fused_relu_impl(a, x, bias, choice, threads, ws);
+    if out.is_ok() {
+        record_dispatch("spmm_fused_relu", x.cols, Semiring::Sum, choice, threads, t0.elapsed());
+    }
+    out
+}
+
+fn spmm_fused_relu_impl(
     a: &Csr,
     x: &Dense,
     bias: Option<&[f32]>,

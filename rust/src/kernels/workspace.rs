@@ -385,6 +385,27 @@ impl KernelWorkspace {
         self.inner.lock().unwrap().stats
     }
 
+    /// Push this workspace's counters into the obs registry as
+    /// `workspace.*` gauges (hit/miss counters, cache populations). Called
+    /// by the trainer at fit exit and by the serving snapshot source;
+    /// no-op while metrics are off.
+    pub fn publish_obs(&self) {
+        if !crate::obs::metrics_on() {
+            return;
+        }
+        let stats = self.stats();
+        let reg = crate::obs::registry();
+        reg.gauge("workspace.partition_hits").set(stats.partition_hits as f64);
+        reg.gauge("workspace.partition_misses").set(stats.partition_misses as f64);
+        reg.gauge("workspace.buffer_reuses").set(stats.buffer_reuses as f64);
+        reg.gauge("workspace.buffer_allocs").set(stats.buffer_allocs as f64);
+        reg.gauge("workspace.format_hits").set(stats.format_hits as f64);
+        reg.gauge("workspace.format_misses").set(stats.format_misses as f64);
+        reg.gauge("workspace.cached_partitions").set(self.cached_partitions() as f64);
+        reg.gauge("workspace.cached_formats").set(self.cached_formats() as f64);
+        reg.gauge("workspace.pooled_buffers").set(self.pooled_buffers() as f64);
+    }
+
     /// Drop all cached partitions, formats and pooled buffers; reset
     /// counters.
     pub fn clear(&self) {

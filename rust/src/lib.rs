@@ -42,6 +42,7 @@ pub mod dense;
 pub mod error;
 pub mod gnn;
 pub mod kernels;
+pub mod obs;
 pub mod plan;
 pub mod runtime;
 pub mod serve;

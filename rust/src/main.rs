@@ -50,6 +50,13 @@ COMMANDS:
              [--epochs 3] [--hidden 16]
              [--scale 2048] [--out BENCH_serving.json] [--json]
 
+GLOBAL FLAGS:
+  --trace <path>   Write a Perfetto/Chrome trace-event JSON of the whole
+                   run to <path> on exit (load at ui.perfetto.dev). Implies
+                   metrics collection. train and serve-bench always collect
+                   metrics and dump the registry snapshot on exit
+                   (serve-bench embeds it in BENCH_serving.json as \"obs\").
+
 Models:     gcn | sage-sum | sage-mean | gin
 Backends:   isplib | pt2 | pt1 | pt2-mp | dense | hlo
 Datasets:   reddit | reddit2 | ogbn-mag | ogbn-products | amazon |
@@ -71,7 +78,15 @@ fn main() {
 }
 
 fn run(args: Args) -> Result<()> {
-    match args.subcommand.as_deref() {
+    // --trace works on any subcommand: turn span tracing on before
+    // dispatch, write the Perfetto/Chrome trace-event JSON after — even on
+    // error, since a trace of a failing run is exactly when you want one.
+    let trace_path = args.flags.get("trace").cloned();
+    if trace_path.is_some() {
+        isplib::obs::set_tracing(true);
+        isplib::obs::set_metrics(true);
+    }
+    let out = match args.subcommand.as_deref() {
         Some("probe") => probe(),
         Some("datasets") => datasets(&args),
         Some("tune") => tune(&args),
@@ -83,7 +98,12 @@ fn run(args: Args) -> Result<()> {
             Ok(())
         }
         Some(other) => Err(Error::Config(format!("unknown command '{other}'\n\n{USAGE}"))),
+    };
+    if let Some(path) = &trace_path {
+        isplib::obs::write_trace(std::path::Path::new(path))?;
+        eprintln!("trace: wrote {path} ({} events)", isplib::obs::trace_event_count());
     }
+    out
 }
 
 fn probe() -> Result<()> {
@@ -156,10 +176,17 @@ fn train(args: &Args) -> Result<()> {
         artifacts_dir: Some(args.get("artifacts", "artifacts").into()),
         ..TrainConfig::default()
     };
+    // train always collects metrics: fit() publishes cache/workspace
+    // counters at exit and the registry snapshot is dumped below
+    isplib::obs::set_metrics(true);
     let mut trainer = Trainer::new(model, backend, cfg, &ds)?;
     let report = trainer.fit(&ds)?;
     if args.has("json") {
-        println!("{}", report.to_json().pretty());
+        let mut json = report.to_json();
+        if let Json::Obj(m) = &mut json {
+            m.insert("obs".to_string(), isplib::obs::snapshot());
+        }
+        println!("{}", json.pretty());
     } else {
         println!(
             "model={} backend={} dataset={} epochs={} avg_epoch={:.6}s setup={:.3}s \
@@ -174,6 +201,7 @@ fn train(args: &Args) -> Result<()> {
             report.train_acc,
             report.test_acc
         );
+        println!("obs snapshot:\n{}", isplib::obs::snapshot().pretty());
     }
     Ok(())
 }
@@ -214,6 +242,11 @@ fn serve_bench(args: &Args) -> Result<()> {
     use isplib::serve::{InferenceServer, ServeConfig};
     use isplib::util::parallel::WorkerPool;
     use isplib::util::rng::Rng;
+
+    // the bench always collects metrics: the registry snapshot (per-op
+    // timing aggregates, pool utilization, serve gauges) lands in
+    // BENCH_serving.json under "obs"
+    isplib::obs::set_metrics(true);
 
     let scale = args.get_parse("scale", 2048usize)?;
     let hidden = args.get_parse("hidden", 16usize)?;
@@ -483,14 +516,11 @@ fn serve_bench(args: &Args) -> Result<()> {
         quarantine_trips += m.quarantine_trips;
         closed_drained += m.closed_drained;
     }
-    let mut served_lat: Vec<f64> =
+    let served_lat: Vec<f64> =
         done.iter().filter(|c| c.output().is_some()).map(|c| c.latency_ns).collect();
-    served_lat.sort_unstable_by(f64::total_cmp);
-    let p99_served_ns = if served_lat.is_empty() {
-        0.0
-    } else {
-        served_lat[(served_lat.len() - 1) * 99 / 100]
-    };
+    // shared percentile definition (one sort, handles empty) — the same
+    // one SessionMetrics' histogram is validated against
+    let p99_served_ns = isplib::util::bench::percentile(&served_lat, 99.0);
     if overload {
         println!(
             "  overload: {served} served / {shed} shed / {rejected_submits} rejected at \
@@ -562,6 +592,13 @@ fn serve_bench(args: &Args) -> Result<()> {
             ]),
         ),
         ("wall_secs", Json::num(wall)),
+        // full registry snapshot: per-op labelled timing aggregates,
+        // pool utilization/steal/park gauges, serve queue-depth +
+        // breaker-state gauges, workspace/cache counters
+        ("obs", {
+            server.publish_obs();
+            isplib::obs::snapshot()
+        }),
     ]);
     std::fs::write(&out_path, doc.pretty())?;
     if args.has("json") {

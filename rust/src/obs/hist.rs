@@ -1,0 +1,301 @@
+//! Log2-bucket histograms: O(1) record, bounded memory, mergeable.
+//!
+//! A value `v` lands in bucket `floor(log2(max(v, 1)))`, so 64 buckets
+//! cover the whole `u64` range — recording is a `leading_zeros` plus one
+//! add, reading is a single 64-entry scan. Percentiles interpolate
+//! linearly inside the winning bucket and are clamped to the observed
+//! `[min, max]`, which bounds the error at **one bucket's relative
+//! error** (a factor of 2): the estimate always lands in the same
+//! power-of-two bucket as the order statistic at the target rank
+//! (`sorted[floor(p/100 · (n-1))]`, the lower anchor of the exact
+//! linear-interpolated percentile definition in
+//! [`crate::util::bench::percentiles`]).
+//!
+//! Two flavours share this math: the plain [`Log2Hist`] here (single
+//! writer, `Clone`, used by `serve::SessionMetrics`) and the atomic
+//! [`Histogram`](super::registry::Histogram) in the registry
+//! (multi-writer, lock-free).
+
+use crate::util::json::Json;
+
+/// Number of buckets — one per power of two of the `u64` range.
+pub const BUCKETS: usize = 64;
+
+/// Bucket index for a value: `floor(log2(max(v, 1)))`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    (63 - v.max(1).leading_zeros()) as usize
+}
+
+/// Inclusive lower bound of a bucket (bucket 0 also holds the value 0).
+#[inline]
+pub fn bucket_lo(b: usize) -> f64 {
+    if b == 0 {
+        0.0
+    } else {
+        2f64.powi(b as i32)
+    }
+}
+
+/// Exclusive upper bound of a bucket.
+#[inline]
+pub fn bucket_hi(b: usize) -> f64 {
+    2f64.powi(b as i32 + 1)
+}
+
+/// Percentile estimate from raw bucket counts: find the bucket holding
+/// the target rank (`p/100 * (count-1)`, matching
+/// [`crate::util::bench::percentiles`]' rank definition), then
+/// interpolate linearly within it. Returns 0 for an empty histogram.
+/// Callers clamp to the observed `[min, max]` for the one-bucket error
+/// bound.
+pub fn percentile_from_buckets(buckets: &[u64; BUCKETS], count: u64, p: f64) -> f64 {
+    if count == 0 {
+        return 0.0;
+    }
+    let target = (p / 100.0).clamp(0.0, 1.0) * (count - 1) as f64;
+    let mut cum = 0u64;
+    for (b, &n) in buckets.iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        if (cum + n) as f64 > target {
+            let frac = ((target - cum as f64 + 0.5) / n as f64).clamp(0.0, 1.0);
+            let lo = bucket_lo(b);
+            return lo + frac * (bucket_hi(b) - lo);
+        }
+        cum += n;
+    }
+    // target == count-1 exactly on the last populated bucket's edge
+    bucket_hi(buckets.iter().rposition(|&n| n > 0).unwrap_or(0))
+}
+
+/// Single-writer log2 histogram. `Clone` + `Default`, fixed 64-bucket
+/// memory whatever the traffic — the replacement for sample-window
+/// latency tracking (no per-read copy, no sort).
+#[derive(Clone, Debug)]
+pub struct Log2Hist {
+    buckets: [u64; BUCKETS],
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Log2Hist {
+    fn default() -> Self {
+        Log2Hist { buckets: [0; BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+}
+
+impl Log2Hist {
+    /// Fresh empty histogram.
+    pub fn new() -> Log2Hist {
+        Log2Hist::default()
+    }
+
+    /// Assemble from raw parts — the atomic
+    /// [`Histogram`](super::registry::Histogram) snapshots itself into the
+    /// plain type through this so one percentile implementation serves
+    /// both.
+    pub(crate) fn from_raw(
+        buckets: [u64; BUCKETS],
+        count: u64,
+        sum: u64,
+        min: u64,
+        max: u64,
+    ) -> Log2Hist {
+        Log2Hist { buckets, count, sum, min, max }
+    }
+
+    /// Record one value: one bucket add, O(1), no allocation.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Record a (nanosecond) value given as `f64`; negatives clamp to 0.
+    #[inline]
+    pub fn record_f64(&mut self, v: f64) {
+        self.record(v.max(0.0) as u64);
+    }
+
+    /// Total values recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of recorded values (saturating).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Mean of recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Largest recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.max
+        }
+    }
+
+    /// Percentile estimate, clamped to observed `[min, max]` — within one
+    /// bucket's relative error (factor 2) of the sorted-sample order
+    /// statistic at the target rank (see the module docs for the exact
+    /// bound).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        percentile_from_buckets(&self.buckets, self.count, p)
+            .clamp(self.min as f64, self.max as f64)
+    }
+
+    /// Several percentiles in one call (no sample copy, no sort — each is
+    /// a 64-entry scan).
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        ps.iter().map(|&p| self.percentile(p)).collect()
+    }
+
+    /// Merge another histogram into this one (bucket-wise add).
+    pub fn merge(&mut self, other: &Log2Hist) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Summary as JSON: count, sum, mean, p50, p99, max.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::num(self.sum as f64)),
+            ("mean", Json::num(self.mean())),
+            ("p50", Json::num(self.percentile(50.0))),
+            ("p99", Json::num(self.percentile(99.0))),
+            ("max", Json::num(self.max() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bench::percentiles;
+    use crate::util::check::{default_cases, forall};
+
+    #[test]
+    fn bucket_index_is_floor_log2() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 1);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(1023), 9);
+        assert_eq!(bucket_index(1024), 10);
+        assert_eq!(bucket_index(u64::MAX), 63);
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let h = Log2Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.percentile(99.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn single_value_percentiles_are_exact() {
+        let mut h = Log2Hist::new();
+        h.record(300);
+        // clamping to [min, max] makes a one-point histogram exact
+        assert_eq!(h.percentile(0.0), 300.0);
+        assert_eq!(h.percentile(50.0), 300.0);
+        assert_eq!(h.percentile(100.0), 300.0);
+    }
+
+    /// The headline accuracy contract: the estimate shares the
+    /// power-of-two bucket of the sorted-sample order statistic at the
+    /// target rank — within a factor of 2 of `sorted[floor(rank)]`, and
+    /// never above twice the exact interpolated percentile
+    /// (`util::bench::percentiles`, whose value lies between the two
+    /// bracketing order statistics), for arbitrary positive samples.
+    #[test]
+    fn percentiles_agree_with_sorted_definition_within_one_bucket() {
+        forall("hist_vs_sorted", default_cases(), |rng| {
+            let n = 1 + rng.gen_range(400);
+            let mut h = Log2Hist::new();
+            let mut samples = Vec::with_capacity(n);
+            for _ in 0..n {
+                // spread across many buckets: 1ns .. ~16ms
+                let v = 1 + (rng.gen_range_f32(0.0, 24.0).exp2()) as u64;
+                h.record(v);
+                samples.push(v as f64);
+            }
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let ps = [50.0, 90.0, 99.0];
+            let exact = percentiles(&samples, &ps);
+            let est = h.percentiles(&ps);
+            for ((p, e), g) in ps.iter().zip(&exact).zip(&est) {
+                let anchor = samples[(p / 100.0 * (n - 1) as f64).floor() as usize];
+                assert!(
+                    *g <= anchor * 2.0 + 1.0 && anchor <= g * 2.0 + 1.0,
+                    "rank-{p} order stat {anchor} vs hist {g} drifted past one bucket ({n} samples)"
+                );
+                assert!(*g <= e * 2.0 + 1.0, "hist {g} above twice the exact percentile {e}");
+            }
+        });
+    }
+
+    #[test]
+    fn merge_is_bucketwise_sum() {
+        let mut a = Log2Hist::new();
+        let mut b = Log2Hist::new();
+        let mut whole = Log2Hist::new();
+        for v in [3u64, 17, 900, 40_000] {
+            a.record(v);
+            whole.record(v);
+        }
+        for v in [1u64, 255, 1_000_000] {
+            b.record(v);
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.sum(), whole.sum());
+        assert_eq!(a.max(), whole.max());
+        assert_eq!(a.percentile(50.0), whole.percentile(50.0));
+        assert_eq!(a.percentile(99.0), whole.percentile(99.0));
+    }
+
+    #[test]
+    fn json_summary_has_expected_fields() {
+        let mut h = Log2Hist::new();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        let j = h.to_json();
+        assert_eq!(j.get("count").unwrap().as_f64().unwrap(), 100.0);
+        assert_eq!(j.get("sum").unwrap().as_f64().unwrap(), 5050.0);
+        assert!(j.get("p50").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("max").unwrap().as_f64().unwrap(), 100.0);
+    }
+}

@@ -1,0 +1,220 @@
+//! Unified telemetry: a process-wide metrics registry, hierarchical span
+//! tracing, and a Perfetto/Chrome trace-event exporter.
+//!
+//! One observability layer replaces the ad-hoc counters that used to live
+//! in each subsystem: the plan executor, kernel dispatch, worker pool,
+//! tuner, trainer and serving scheduler all report here, and a single
+//! [`snapshot`] (or `--trace` export from the CLI) tells the whole story.
+//!
+//! # Enablement and cost
+//!
+//! All of it is **off by default**. A single process-global state byte
+//! gates two independent facilities:
+//!
+//! - [`set_metrics`] — counters/gauges/histograms and per-op aggregate
+//!   labels;
+//! - [`set_tracing`] — the span event buffer behind [`write_trace`].
+//!
+//! While disabled, every instrumentation site costs exactly **one relaxed
+//! atomic load** — no lock, no allocation, no store (guarded by a
+//! counting-allocator test in `tests/obs_integration.rs`). While enabled,
+//! *recording* on a held handle is lock-free and allocation-free
+//! (relaxed atomics only); *registration* — looking a name up in the
+//! registry — takes a mutex and allocates, and therefore belongs off the
+//! hot path: acquire handles once (at construction or first enabled use)
+//! and keep them.
+//!
+//! # Naming scheme
+//!
+//! Metric names are dotted lowercase paths, `subsystem.metric`, with an
+//! optional brace-delimited label set sorted by key:
+//!
+//! ```text
+//! pool.jobs_executed                 counter
+//! pool.worker.busy_ns{worker=3}      gauge
+//! serve.queue_depth{session=reddit}  gauge
+//! op.spmm{fmt=sell(c=4,s=32),k=32,kernel=sell(c=4,s=32),threads=2}
+//!                                    histogram (per-op aggregate)
+//! ```
+//!
+//! # Label cardinality rules
+//!
+//! Every distinct name is a live registry entry forever, so labels must
+//! come from **bounded** sets: kernel-choice labels (a fixed candidate
+//! family), format labels, thread budgets, worker indices (≤ cores),
+//! session names (≤ registered sessions), op mnemonics. Never label with
+//! unbounded values — request ids, timestamps, row counts, feature
+//! contents. Quantities like `rows`/`nnz` belong in span **args**
+//! ([`Span::arg`]), which are per-event payload, not registry keys.
+//!
+//! # How to add a metric
+//!
+//! 1. Pick a name under the scheme above (and check the label set is
+//!    bounded).
+//! 2. Acquire the handle once — `obs::counter("pool.steals")` at
+//!    construction time, or lazily behind `obs::metrics_on()` — and store
+//!    it (`Arc<Counter>`).
+//! 3. Record on the handle in the hot path: `c.inc(1)`,
+//!    `g.set(depth as f64)`, `h.record(ns)`. The handle itself enforces
+//!    the disabled-path contract.
+//! 4. For timed regions, prefer a [`Span`]: `Span::enter("serve.batch")`
+//!    traces the region, and `.agg(label)` additionally feeds the per-op
+//!    aggregate histogram.
+//!
+//! Process-global subsystems may instead push gauges from a snapshot
+//! source ([`Registry::register_source`]) so plain `snapshot()` callers
+//! always see fresh values.
+
+pub mod hist;
+pub mod registry;
+pub mod span;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use crate::util::json::Json;
+
+pub use hist::Log2Hist;
+pub use registry::{registry, Counter, Gauge, Histogram, Registry};
+pub use span::{
+    clear_trace, current_tid, set_thread_tid, trace_event_count, trace_json, write_trace, Span,
+};
+
+const METRICS: u8 = 1;
+const TRACING: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(0);
+
+/// The raw state byte — one relaxed load. 0 means fully disabled.
+#[inline]
+pub fn state() -> u8 {
+    STATE.load(Ordering::Relaxed)
+}
+
+/// True when either metrics or tracing are enabled — the cheap guard for
+/// sites that would otherwise build labels for nothing.
+#[inline]
+pub fn active() -> bool {
+    state() != 0
+}
+
+/// True when the metrics registry is recording.
+#[inline]
+pub fn metrics_on() -> bool {
+    state() & METRICS != 0
+}
+
+/// True when spans are buffered for trace export.
+#[inline]
+pub fn tracing_on() -> bool {
+    state() & TRACING != 0
+}
+
+/// Enable/disable the metrics registry.
+pub fn set_metrics(on: bool) {
+    if on {
+        STATE.fetch_or(METRICS, Ordering::Relaxed);
+    } else {
+        STATE.fetch_and(!METRICS, Ordering::Relaxed);
+    }
+}
+
+/// Enable/disable span tracing.
+pub fn set_tracing(on: bool) {
+    if on {
+        STATE.fetch_or(TRACING, Ordering::Relaxed);
+    } else {
+        STATE.fetch_and(!TRACING, Ordering::Relaxed);
+    }
+}
+
+/// [`Registry::counter`] on the process registry.
+pub fn counter(name: &str) -> Arc<Counter> {
+    registry().counter(name)
+}
+
+/// [`Registry::gauge`] on the process registry.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    registry().gauge(name)
+}
+
+/// [`Registry::histogram`] on the process registry.
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    registry().histogram(name)
+}
+
+/// [`Registry::snapshot`] of the process registry.
+pub fn snapshot() -> Json {
+    registry().snapshot()
+}
+
+/// Test/bench helper: serialises flips of the global obs state (the state
+/// byte is process-wide, so concurrent tests that toggle it must take
+/// this guard) and restores the previous state on drop.
+pub struct ObsGuard {
+    prev: u8,
+    _lock: MutexGuard<'static, ()>,
+}
+
+fn obs_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    let lock = LOCK.get_or_init(|| Mutex::new(()));
+    lock.lock().unwrap_or_else(|poison| poison.into_inner())
+}
+
+impl ObsGuard {
+    fn with_state(metrics: bool, tracing: bool) -> ObsGuard {
+        let lock = obs_lock();
+        let prev = state();
+        set_metrics(metrics);
+        set_tracing(tracing);
+        ObsGuard { prev, _lock: lock }
+    }
+
+    /// Metrics on, tracing off.
+    pub fn enabled() -> ObsGuard {
+        ObsGuard::with_state(true, false)
+    }
+
+    /// Metrics and tracing both on.
+    pub fn tracing() -> ObsGuard {
+        ObsGuard::with_state(true, true)
+    }
+
+    /// Everything off (for disabled-path assertions).
+    pub fn disabled() -> ObsGuard {
+        ObsGuard::with_state(false, false)
+    }
+}
+
+impl Drop for ObsGuard {
+    fn drop(&mut self) {
+        STATE.store(self.prev, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_bits_are_independent() {
+        let _guard = ObsGuard::disabled();
+        assert!(!active());
+        set_metrics(true);
+        assert!(metrics_on() && !tracing_on() && active());
+        set_tracing(true);
+        assert!(metrics_on() && tracing_on());
+        set_metrics(false);
+        assert!(!metrics_on() && tracing_on() && active());
+        set_tracing(false);
+        assert!(!active());
+    }
+
+    #[test]
+    fn guard_restores_previous_state() {
+        let outer = ObsGuard::enabled();
+        assert!(metrics_on());
+        drop(outer);
+    }
+}

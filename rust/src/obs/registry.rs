@@ -1,0 +1,409 @@
+//! The process-wide metrics registry: named atomic counters, gauges and
+//! log2 histograms behind `Arc` handles, with a single JSON snapshot.
+//!
+//! Hot-path contract (see the [module docs](super) for the full rules):
+//!
+//! - **Record is lock-free and allocation-free.** `Counter::inc`,
+//!   `Gauge::set` and `Histogram::record` touch only relaxed atomics on a
+//!   handle the caller already holds.
+//! - **Disabled costs one relaxed load.** Every record op first reads the
+//!   global state byte ([`super::metrics_on`]); when metrics are off it
+//!   returns immediately — no lock, no allocation, no store. A test in
+//!   `tests/obs_integration.rs` guards this with a counting allocator.
+//! - **Registration is the cold path.** `Registry::counter/gauge/histogram`
+//!   take a mutex and may allocate; call them once per label (at
+//!   construction, or lazily on first enabled use) and cache the handle.
+//!
+//! Snapshot sources let process-global subsystems (the shared
+//! [`WorkerPool`](crate::util::parallel::WorkerPool)) push their gauges
+//! right before every snapshot, so one [`Registry::snapshot`] call tells
+//! the whole story without the registry depending on those modules.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+use super::hist::{bucket_index, percentile_from_buckets, Log2Hist, BUCKETS};
+use super::metrics_on;
+
+/// Monotonic event count. Increments are dropped while metrics are
+/// disabled (the disabled path is a single relaxed load).
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// Add `n` (relaxed; no-op while metrics are disabled).
+    #[inline]
+    pub fn inc(&self, n: u64) {
+        if metrics_on() {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    /// Zero the counter (snapshot isolation for tests/benches).
+    pub fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-write-wins instantaneous value (stored as `f64` bits).
+#[derive(Debug)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge { bits: AtomicU64::new(0f64.to_bits()) }
+    }
+}
+
+impl Gauge {
+    /// Set the value (relaxed store; no-op while metrics are disabled).
+    #[inline]
+    pub fn set(&self, v: f64) {
+        if metrics_on() {
+            self.bits.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Add a delta (lock-free CAS loop; no-op while metrics are disabled).
+    #[inline]
+    pub fn add(&self, d: f64) {
+        if !metrics_on() {
+            return;
+        }
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + d).to_bits();
+            match self.bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    /// Zero the gauge.
+    pub fn reset(&self) {
+        self.bits.store(0f64.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Multi-writer log2-bucket histogram: the atomic twin of
+/// [`Log2Hist`](super::hist::Log2Hist) — O(1) lock-free record, 64
+/// buckets of bounded memory, mergeable by bucket-wise addition.
+#[derive(Debug)]
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one value: a `leading_zeros` plus relaxed adds — no lock,
+    /// no allocation (no-op while metrics are disabled).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if !metrics_on() {
+            return;
+        }
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record an elapsed duration in nanoseconds.
+    #[inline]
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_nanos() as u64);
+    }
+
+    /// Total values recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of recorded values.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Copy the atomic state into a plain [`Log2Hist`] for reading —
+    /// percentiles, merge and JSON all go through the shared math.
+    pub fn to_plain(&self) -> Log2Hist {
+        let mut buckets = [0u64; BUCKETS];
+        for (dst, src) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        Log2Hist::from_raw(
+            buckets,
+            self.count.load(Ordering::Relaxed),
+            self.sum.load(Ordering::Relaxed),
+            self.min.load(Ordering::Relaxed),
+            self.max.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Percentile estimate (see [`Log2Hist::percentile`] for the error
+    /// bound).
+    pub fn percentile(&self, p: f64) -> f64 {
+        let count = self.count.load(Ordering::Relaxed);
+        if count == 0 {
+            return 0.0;
+        }
+        let mut buckets = [0u64; BUCKETS];
+        for (dst, src) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        let lo = self.min.load(Ordering::Relaxed) as f64;
+        let hi = self.max.load(Ordering::Relaxed) as f64;
+        percentile_from_buckets(&buckets, count, p).clamp(lo, hi)
+    }
+
+    /// Summary as JSON (count, sum, mean, p50, p99, max).
+    pub fn to_json(&self) -> Json {
+        self.to_plain().to_json()
+    }
+
+    /// Clear all buckets and stats.
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+type Source = Arc<dyn Fn() + Send + Sync>;
+
+/// The process-wide registry. Obtain it through [`registry`] (or the
+/// `obs::counter`/`gauge`/`histogram` conveniences); metric names follow
+/// the scheme in the [module docs](super).
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    sources: Mutex<Vec<Source>>,
+}
+
+impl Registry {
+    /// Get-or-register a counter handle. Cold path: takes a mutex, may
+    /// allocate — cache the returned handle near the hot loop.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.counters.lock().unwrap();
+        match map.get(name) {
+            Some(c) => Arc::clone(c),
+            None => {
+                let c = Arc::new(Counter::default());
+                map.insert(name.to_string(), Arc::clone(&c));
+                c
+            }
+        }
+    }
+
+    /// Get-or-register a gauge handle (cold path, like
+    /// [`Registry::counter`]).
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().unwrap();
+        match map.get(name) {
+            Some(g) => Arc::clone(g),
+            None => {
+                let g = Arc::new(Gauge::default());
+                map.insert(name.to_string(), Arc::clone(&g));
+                g
+            }
+        }
+    }
+
+    /// Get-or-register a histogram handle (cold path, like
+    /// [`Registry::counter`]).
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.histograms.lock().unwrap();
+        match map.get(name) {
+            Some(h) => Arc::clone(h),
+            None => {
+                let h = Arc::new(Histogram::default());
+                map.insert(name.to_string(), Arc::clone(&h));
+                h
+            }
+        }
+    }
+
+    /// Register a snapshot source: a closure run at the start of every
+    /// [`Registry::snapshot`] so a process-global subsystem can push its
+    /// current gauge values. The source list is cloned before running, so
+    /// a source may itself register metrics (or even further sources —
+    /// those take effect from the next snapshot).
+    pub fn register_source(&self, f: Box<dyn Fn() + Send + Sync>) {
+        self.sources.lock().unwrap().push(Arc::from(f));
+    }
+
+    /// One JSON snapshot of everything: counters, gauges, and histogram
+    /// summaries, after running every registered source.
+    pub fn snapshot(&self) -> Json {
+        let sources: Vec<Source> = self.sources.lock().unwrap().clone();
+        for f in &sources {
+            f();
+        }
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(v.get() as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(v.get())))
+            .collect();
+        let histograms: BTreeMap<String, Json> = self
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.to_json()))
+            .collect();
+        Json::Obj(BTreeMap::from([
+            ("counters".to_string(), Json::Obj(counters)),
+            ("gauges".to_string(), Json::Obj(gauges)),
+            ("histograms".to_string(), Json::Obj(histograms)),
+        ]))
+    }
+
+    /// Zero every registered metric (registrations and handles survive —
+    /// benches and tests isolate runs through this).
+    pub fn reset(&self) {
+        for c in self.counters.lock().unwrap().values() {
+            c.reset();
+        }
+        for g in self.gauges.lock().unwrap().values() {
+            g.reset();
+        }
+        for h in self.histograms.lock().unwrap().values() {
+            h.reset();
+        }
+    }
+}
+
+/// The process-wide registry instance.
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{set_metrics, ObsGuard};
+
+    #[test]
+    fn counters_gauges_histograms_roundtrip() {
+        let _guard = ObsGuard::enabled();
+        let r = Registry::default();
+        let c = r.counter("t.calls");
+        c.inc(3);
+        c.inc(2);
+        assert_eq!(c.get(), 5);
+        assert_eq!(r.counter("t.calls").get(), 5, "same name, same handle");
+        let g = r.gauge("t.depth");
+        g.set(7.5);
+        g.add(0.5);
+        assert_eq!(g.get(), 8.0);
+        let h = r.histogram("t.lat");
+        for v in [10u64, 100, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum(), 1110);
+        let snap = r.snapshot();
+        assert_eq!(
+            snap.get("counters").unwrap().get("t.calls").unwrap().as_f64().unwrap(),
+            5.0
+        );
+        assert_eq!(snap.get("gauges").unwrap().get("t.depth").unwrap().as_f64().unwrap(), 8.0);
+        let lat = snap.get("histograms").unwrap().get("t.lat").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_f64().unwrap(), 3.0);
+        r.reset();
+        assert_eq!(c.get(), 0);
+        assert_eq!(g.get(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn disabled_metrics_drop_records() {
+        let _guard = ObsGuard::enabled();
+        let r = Registry::default();
+        let c = r.counter("t.off");
+        let h = r.histogram("t.off.h");
+        set_metrics(false);
+        c.inc(10);
+        h.record(99);
+        set_metrics(true);
+        assert_eq!(c.get(), 0, "disabled increments must be dropped");
+        assert_eq!(h.count(), 0);
+        c.inc(1);
+        assert_eq!(c.get(), 1);
+    }
+
+    #[test]
+    fn snapshot_runs_sources_first() {
+        let _guard = ObsGuard::enabled();
+        let r = Registry::default();
+        let g = r.gauge("t.pushed");
+        r.register_source(Box::new(move || g.set(42.0)));
+        let snap = r.snapshot();
+        assert_eq!(snap.get("gauges").unwrap().get("t.pushed").unwrap().as_f64().unwrap(), 42.0);
+    }
+
+    #[test]
+    fn atomic_histogram_percentiles_match_plain() {
+        let _guard = ObsGuard::enabled();
+        let h = Histogram::default();
+        let mut plain = Log2Hist::new();
+        for v in [3u64, 90, 90, 700, 15_000] {
+            h.record(v);
+            plain.record(v);
+        }
+        assert_eq!(h.percentile(50.0), plain.percentile(50.0));
+        assert_eq!(h.percentile(99.0), plain.percentile(99.0));
+        assert_eq!(h.to_plain().to_json().compact(), plain.to_json().compact());
+    }
+}

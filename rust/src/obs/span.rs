@@ -1,0 +1,295 @@
+//! Hierarchical span tracing and the Chrome/Perfetto trace-event
+//! exporter.
+//!
+//! A [`Span`] is an RAII guard: [`Span::enter`] stamps the start, drop
+//! stamps the end. While **tracing** is on the completed span is pushed
+//! into a bounded global event buffer; while **metrics** are on a span
+//! with an aggregate label ([`Span::agg`]) also records its duration
+//! into the registry histogram of that name — this is how the per-op
+//! aggregate table (keyed by `op.*{kernel=…,format=…}` labels) is built.
+//! When both are off, `Span::enter` is one relaxed atomic load and the
+//! guard holds nothing.
+//!
+//! Nesting is by construction: spans on one thread strictly nest because
+//! the guards drop in reverse creation order, and every event carries the
+//! thread's registered `tid` ([`set_thread_tid`] — the worker pool maps
+//! worker `i` to tid `i + 1`; unregistered threads, including `main`,
+//! are tid 0). [`write_trace`] emits the buffer in the Chrome
+//! `traceEvents` JSON format ("X" complete events plus "M" thread-name
+//! metadata), which `chrome://tracing` and [Perfetto](https://ui.perfetto.dev)
+//! load directly.
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+use super::registry::registry;
+use super::{metrics_on, tracing_on};
+
+/// Cap on buffered trace events: ~64k spans of bounded memory. Overflow
+/// is counted (and reported in the export), never reallocated past this.
+pub const MAX_TRACE_EVENTS: usize = 1 << 16;
+
+struct Event {
+    name: String,
+    ts_us: f64,
+    dur_us: f64,
+    tid: u64,
+    args: Vec<(&'static str, Json)>,
+}
+
+struct TraceBuf {
+    events: Mutex<Vec<Event>>,
+    dropped: AtomicU64,
+    threads: Mutex<BTreeMap<u64, String>>,
+}
+
+fn buf() -> &'static TraceBuf {
+    static BUF: OnceLock<TraceBuf> = OnceLock::new();
+    BUF.get_or_init(|| TraceBuf {
+        events: Mutex::new(Vec::new()),
+        dropped: AtomicU64::new(0),
+        threads: Mutex::new(BTreeMap::new()),
+    })
+}
+
+/// The process trace epoch: all `ts` values are microseconds since the
+/// first span (or first explicit touch) of the process.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+thread_local! {
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Register the calling thread's trace tid and display name. The worker
+/// pool calls this at thread start (`worker i` → tid `i + 1`, name
+/// `isplib-worker-i`); tid 0 is reserved for unregistered threads and is
+/// exported as `main`.
+pub fn set_thread_tid(tid: u64, name: &str) {
+    TID.with(|t| t.set(tid));
+    buf().threads.lock().unwrap().insert(tid, name.to_string());
+}
+
+/// The calling thread's trace tid (0 unless registered).
+pub fn current_tid() -> u64 {
+    TID.with(|t| t.get())
+}
+
+struct SpanData {
+    name: String,
+    args: Vec<(&'static str, Json)>,
+    agg: Option<String>,
+    start: Instant,
+}
+
+/// RAII span guard — see the module docs. Create with [`Span::enter`],
+/// attach labels with [`Span::arg`]/[`Span::agg`], and let it drop at the
+/// end of the region.
+#[must_use = "a span measures the region it is alive for — bind it to a variable"]
+pub struct Span(Option<Box<SpanData>>);
+
+impl Span {
+    /// Open a span. When neither metrics nor tracing are enabled this is
+    /// a single relaxed atomic load and the returned guard is inert (no
+    /// allocation). Callers that compute expensive labels should gate on
+    /// [`super::active`] (or [`Span::active`]) first.
+    #[inline]
+    pub fn enter(name: &str) -> Span {
+        if super::state() == 0 {
+            return Span(None);
+        }
+        let _ = epoch(); // pin the trace epoch no later than the first span
+        Span(Some(Box::new(SpanData {
+            name: name.to_string(),
+            args: Vec::new(),
+            agg: None,
+            start: Instant::now(),
+        })))
+    }
+
+    /// Whether this span is live (observability was on at `enter`).
+    pub fn active(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Attach a key/value argument (shown in the trace viewer's span
+    /// details). No-op on an inert span.
+    pub fn arg(mut self, key: &'static str, val: Json) -> Span {
+        if let Some(d) = &mut self.0 {
+            d.args.push((key, val));
+        }
+        self
+    }
+
+    /// Set the aggregate label: on drop the span's duration is also
+    /// recorded into `registry().histogram(label)` (when metrics are on),
+    /// building the per-op aggregate table. Labels must obey the
+    /// cardinality rules in the [module docs](super).
+    pub fn agg(mut self, label: String) -> Span {
+        if let Some(d) = &mut self.0 {
+            d.agg = Some(label);
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(d) = self.0.take() else { return };
+        let dur = d.start.elapsed();
+        if metrics_on() {
+            if let Some(label) = &d.agg {
+                registry().histogram(label).record_duration(dur);
+            }
+        }
+        if tracing_on() {
+            let ts_us = d.start.saturating_duration_since(epoch()).as_secs_f64() * 1e6;
+            let b = buf();
+            let mut events = b.events.lock().unwrap();
+            if events.len() >= MAX_TRACE_EVENTS {
+                b.dropped.fetch_add(1, Ordering::Relaxed);
+            } else {
+                events.push(Event {
+                    name: d.name,
+                    ts_us,
+                    dur_us: dur.as_secs_f64() * 1e6,
+                    tid: current_tid(),
+                    args: d.args,
+                });
+            }
+        }
+    }
+}
+
+/// Number of events currently buffered (test hook).
+pub fn trace_event_count() -> usize {
+    buf().events.lock().unwrap().len()
+}
+
+/// Drop all buffered events and the overflow count (tests and repeated
+/// CLI runs isolate traces through this).
+pub fn clear_trace() {
+    let b = buf();
+    b.events.lock().unwrap().clear();
+    b.dropped.store(0, Ordering::Relaxed);
+}
+
+/// The buffered trace as a Chrome trace-event JSON document.
+pub fn trace_json() -> Json {
+    let b = buf();
+    let mut named = b.threads.lock().unwrap().clone();
+    named.entry(0).or_insert_with(|| "main".to_string());
+    let events = b.events.lock().unwrap();
+    let mut arr = Vec::with_capacity(events.len() + named.len());
+    for (tid, name) in &named {
+        arr.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(*tid as f64)),
+            ("args", Json::obj(vec![("name", Json::str(name))])),
+        ]));
+    }
+    for e in events.iter() {
+        let args: BTreeMap<String, Json> =
+            e.args.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+        arr.push(Json::obj(vec![
+            ("name", Json::str(&e.name)),
+            ("cat", Json::str("isplib")),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(e.ts_us)),
+            ("dur", Json::num(e.dur_us)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(e.tid as f64)),
+            ("args", Json::Obj(args)),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(arr)),
+        ("displayTimeUnit", Json::str("ns")),
+        ("droppedEvents", Json::num(b.dropped.load(Ordering::Relaxed) as f64)),
+    ])
+}
+
+/// Write the buffered trace to `path` as Perfetto-loadable JSON.
+pub fn write_trace(path: &Path) -> std::io::Result<()> {
+    std::fs::write(path, trace_json().pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::ObsGuard;
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        let _guard = ObsGuard::disabled();
+        let s = Span::enter("never");
+        assert!(!s.active());
+        drop(s);
+        // nothing buffered, nothing aggregated
+        assert_eq!(trace_event_count(), 0);
+    }
+
+    #[test]
+    fn spans_nest_and_export_loadable_json() {
+        let _guard = ObsGuard::tracing();
+        clear_trace();
+        {
+            let _outer = Span::enter("outer").arg("k", Json::num(8.0));
+            {
+                let _inner = Span::enter("inner");
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+        }
+        let doc = trace_json();
+        // the export round-trips through the parser (loadability proxy)
+        let parsed = Json::parse(&doc.pretty()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let named = |e: &Json, name: &str| {
+            e.get("name").ok().and_then(|n| n.as_str().ok()).map(|s| s == name).unwrap_or(false)
+        };
+        let find = |name: &str| {
+            events
+                .iter()
+                .find(|e| named(e, name))
+                .unwrap_or_else(|| panic!("missing event {name}"))
+        };
+        let outer = find("outer");
+        let inner = find("inner");
+        let span_of = |e: &Json| {
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            (ts, ts + e.get("dur").unwrap().as_f64().unwrap())
+        };
+        let (ots, oend) = span_of(outer);
+        let (its, iend) = span_of(inner);
+        assert!(ots <= its && iend <= oend, "inner [{its},{iend}] outside outer [{ots},{oend}]");
+        assert_eq!(outer.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(outer.get("args").unwrap().get("k").unwrap().as_f64().unwrap(), 8.0);
+        // tid 0 (main) carries a thread_name metadata record
+        assert!(events.iter().any(|e| {
+            named(e, "thread_name")
+                && e.get("tid").ok().and_then(|t| t.as_f64().ok()) == Some(0.0)
+        }));
+        clear_trace();
+    }
+
+    #[test]
+    fn agg_spans_feed_the_registry_histogram() {
+        let _guard = ObsGuard::enabled();
+        let h = registry().histogram("t.span.agg");
+        h.reset();
+        for _ in 0..3 {
+            let _s = Span::enter("work").agg("t.span.agg".to_string());
+        }
+        assert_eq!(h.count(), 3);
+    }
+}

@@ -12,8 +12,66 @@ use crate::kernels::{
     fused_relu_epilogue, spmm_fused_relu_with_workspace, spmm_with_workspace, KernelWorkspace,
     Semiring,
 };
+use crate::obs;
+use crate::util::json::Json;
+use crate::util::parallel;
 
 use super::ir::{ExecutionPlan, Op, ValueId, INPUT_VALUE};
+
+/// Per-instruction observability span for both executors: named by the op
+/// mnemonic, carrying `(kernel, format, rows, nnz, k, threads, fused,
+/// inplace)` args for the trace viewer, and aggregated per-op under a
+/// bounded `op.<name>{...}` label (kernel/format labels come from a fixed
+/// candidate family, `k` from the model dims, `threads` from the budget —
+/// see the cardinality rules in [`crate::obs`]). Inert — one relaxed load,
+/// no allocation — while observability is off.
+fn instr_span(
+    plan: &ExecutionPlan,
+    i: usize,
+    op: &Op,
+    operand: &SpmmOperand,
+    threads: usize,
+) -> obs::Span {
+    if !obs::active() {
+        return obs::Span::enter("op");
+    }
+    let name = match op {
+        Op::Spmm { .. } => "spmm",
+        Op::MatMul { .. } => "matmul",
+        Op::BiasAdd { .. } => "bias_add",
+        Op::Relu { .. } => "relu",
+        Op::Add { .. } => "add",
+        Op::SpmmFusedRelu { .. } => "spmm_fused_relu",
+    };
+    let k = op.operands().first().map(|&v| plan.value_cols(v)).unwrap_or(0);
+    let fused = matches!(op, Op::SpmmFusedRelu { .. });
+    let inplace = plan.inplace_operand(i).is_some();
+    let mut span = obs::Span::enter(name)
+        .arg("k", Json::num(k as f64))
+        .arg("threads", Json::num(threads as f64))
+        .arg("fused", Json::bool(fused))
+        .arg("inplace", Json::bool(inplace));
+    match op {
+        Op::Spmm { .. } | Op::SpmmFusedRelu { .. } => {
+            let (kernel, fmt) = match operand.impl_kind {
+                SpmmImpl::Kernel => {
+                    let c = KernelRegistry::global().resolve(&operand.context, k, Semiring::Sum);
+                    (c.label(), c.format_label())
+                }
+                SpmmImpl::EdgeWise => ("edgewise".to_string(), "coo".to_string()),
+                SpmmImpl::Dense => ("dense".to_string(), "dense".to_string()),
+            };
+            span = span
+                .arg("rows", Json::num(operand.a.rows as f64))
+                .arg("nnz", Json::num(operand.a.nnz() as f64))
+                .arg("kernel", Json::str(&kernel))
+                .arg("format", Json::str(&fmt))
+                .agg(format!("op.{name}{{fmt={fmt},k={k},kernel={kernel},threads={threads}}}"));
+        }
+        _ => span = span.agg(format!("op.{name}{{k={k},threads={threads}}}")),
+    }
+    span
+}
 
 /// Record the plan's forward pass onto `tape`; returns the logits node.
 ///
@@ -33,9 +91,13 @@ pub fn execute_taped(
     let get = |name: &str| -> Result<Var> {
         vars.get(name).copied().ok_or_else(|| Error::UnknownName(format!("param var '{name}'")))
     };
+    let _plan_span = obs::Span::enter("plan.execute_taped")
+        .arg("ops", Json::num(plan.ops().len() as f64));
     let mut vals: Vec<Var> = Vec::with_capacity(plan.num_values());
     vals.push(x);
-    for op in plan.ops() {
+    for (i, op) in plan.ops().iter().enumerate() {
+        // taped kernels run on the global pool's full budget
+        let _span = instr_span(plan, i, op, operand, parallel::current_num_threads());
         let var = match op {
             Op::Spmm { x } => tape.spmm(operand, vals[*x])?,
             Op::MatMul { x, w } => tape.matmul(vals[*x], get(w)?)?,
@@ -239,6 +301,10 @@ pub fn execute_inference(
             )));
         }
     }
+    let _plan_span = obs::Span::enter("plan.execute_inference")
+        .arg("batch", Json::num(xs.len() as f64))
+        .arg("threads", Json::num(threads as f64))
+        .arg("ops", Json::num(plan.ops().len() as f64));
     let scratch = Scratch { ws: operand.workspace.as_deref() };
     let b = xs.len();
     let mut vals: Vec<Option<Vec<Dense>>> = (0..plan.num_values()).map(|_| None).collect();
@@ -256,6 +322,7 @@ pub fn execute_inference(
         let out_id = i + 1;
         let is_output = out_id == plan.output();
         let out_slot = plan.slot_of(out_id);
+        let _span = instr_span(plan, i, op, operand, threads);
         let outs: Vec<Dense> = match op {
             Op::Spmm { x } | Op::SpmmFusedRelu { x, .. } => {
                 let fused_bias = match op {
@@ -561,6 +628,35 @@ mod tests {
         let xv = tape.input(x);
         let vars = BTreeMap::new();
         assert!(execute_taped(&plan, &mut tape, &operand, xv, &vars).is_err());
+    }
+
+    #[test]
+    fn inference_emits_instruction_spans_and_aggregates() {
+        let _guard = crate::obs::ObsGuard::tracing();
+        crate::obs::clear_trace();
+        let (plan, operand, params, n) = setup(GnnModel::Gcn);
+        let mut rng = Rng::seed_from_u64(55);
+        let x = Dense::uniform(n, plan.in_dim(), 1.0, &mut rng);
+        execute_inference(&plan, &operand, &params, &[&x], 1).unwrap();
+        let doc = crate::obs::trace_json();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let has = |name: &str| {
+            events.iter().any(|e| {
+                e.get("name").ok().and_then(|v| v.as_str().ok()).map(|s| s == name).unwrap_or(false)
+            })
+        };
+        assert!(has("plan.execute_inference"), "missing executor span");
+        assert!(has("spmm"), "missing spmm instruction span");
+        assert!(has("matmul"), "missing matmul instruction span");
+        // the aggregate table picked up a per-op labelled histogram
+        let snap = crate::obs::snapshot();
+        let hists = snap.get("histograms").unwrap();
+        let has_spmm_agg = match hists {
+            Json::Obj(m) => m.keys().any(|k| k.starts_with("op.spmm{")),
+            _ => false,
+        };
+        assert!(has_spmm_agg, "missing op.spmm aggregate: {}", hists.compact());
+        crate::obs::clear_trace();
     }
 
     #[test]

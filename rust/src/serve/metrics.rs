@@ -3,21 +3,19 @@
 //!
 //! Latency is measured enqueue → batch completion, so it includes queueing
 //! delay — exactly the quantity the scheduler's fairness is supposed to
-//! bound for light sessions under a heavy co-tenant. The percentile
-//! definition is shared with the bench harness
-//! ([`crate::util::bench::percentile`]) so `BENCH_serving.json` snapshots
-//! stay comparable PR-over-PR.
+//! bound for light sessions under a heavy co-tenant. Latencies live in a
+//! [`Log2Hist`]: O(1) record, fixed 64-bucket memory however long the
+//! session lives, and percentile reads that are a 64-entry scan instead of
+//! a copy-and-sort of a 4096-sample window. Estimates stay within one
+//! power-of-two bucket of the sorted-sample order statistic at the target
+//! rank (see [`Log2Hist`]'s docs for the exact bound vs. the
+//! interpolating [`crate::util::bench::percentiles`] definition), and
+//! both `p50_ns`/`p99_ns` route through a single
+//! [`SessionMetrics::latency_percentiles`] read so snapshots never pay
+//! for the read twice.
 
-use std::collections::VecDeque;
-
-use crate::util::bench::percentiles;
+use crate::obs::Log2Hist;
 use crate::util::json::Json;
-
-/// Latency samples retained per session (a sliding window over the most
-/// recent requests). Bounds a long-lived session's metric memory and keeps
-/// percentile reads O(window), while still covering far more traffic than
-/// one scheduler round.
-const MAX_LATENCY_SAMPLES: usize = 4096;
 
 /// Rolling counters for one serving session.
 #[derive(Clone, Debug, Default)]
@@ -39,9 +37,9 @@ pub struct SessionMetrics {
     pub closed_drained: u64,
     /// Times this session's circuit breaker tripped into quarantine.
     pub quarantine_trips: u64,
-    /// Sliding window of per-request latencies in nanoseconds (enqueue →
-    /// completion), most recent [`MAX_LATENCY_SAMPLES`].
-    latencies_ns: VecDeque<f64>,
+    /// Per-request latency in nanoseconds (enqueue → completion),
+    /// log2-bucketed over the session's whole lifetime.
+    latencies_ns: Log2Hist,
     /// Σ batch_size / max_batch — occupancy numerator.
     occupancy_sum: f64,
 }
@@ -53,38 +51,32 @@ impl SessionMetrics {
         self.batches += 1;
         self.occupancy_sum += batch_size as f64 / max_batch.max(1) as f64;
         for &l in latencies_ns {
-            if self.latencies_ns.len() == MAX_LATENCY_SAMPLES {
-                self.latencies_ns.pop_front();
-            }
-            self.latencies_ns.push_back(l);
+            self.latencies_ns.record_f64(l);
         }
     }
 
-    /// Latency samples currently in the window.
+    /// Latency samples recorded so far (lifetime count — the histogram
+    /// holds every sample in fixed memory, there is no window to fall out
+    /// of).
     pub fn latency_samples(&self) -> usize {
-        self.latencies_ns.len()
+        self.latencies_ns.count() as usize
     }
 
-    fn window(&self) -> Vec<f64> {
-        self.latencies_ns.iter().copied().collect()
-    }
-
-    /// `(p50, p99)` request latency in nanoseconds over the sample window
-    /// (zeros with no traffic), computed with one sort — snapshots read
+    /// `(p50, p99)` request latency in nanoseconds (zeros with no
+    /// traffic), read from the histogram in one pass — snapshots read
     /// both, so this is the cheap path.
     pub fn latency_percentiles(&self) -> (f64, f64) {
-        let v = percentiles(&self.window(), &[50.0, 99.0]);
+        let v = self.latencies_ns.percentiles(&[50.0, 99.0]);
         (v[0], v[1])
     }
 
-    /// Median request latency in nanoseconds over the sample window (0
-    /// with no traffic).
+    /// Median request latency in nanoseconds (0 with no traffic).
     pub fn p50_ns(&self) -> f64 {
         self.latency_percentiles().0
     }
 
-    /// 99th-percentile request latency in nanoseconds over the sample
-    /// window (0 with no traffic).
+    /// 99th-percentile request latency in nanoseconds (0 with no
+    /// traffic).
     pub fn p99_ns(&self) -> f64 {
         self.latency_percentiles().1
     }
@@ -143,6 +135,8 @@ pub fn fairness_spread(p99s_ns: &[f64]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::bench::percentiles;
+    use crate::util::check::{default_cases, forall};
 
     #[test]
     fn empty_metrics_are_zero() {
@@ -151,6 +145,7 @@ mod tests {
         assert_eq!(m.p99_ns(), 0.0);
         assert_eq!(m.avg_batch(), 0.0);
         assert_eq!(m.occupancy(), 0.0);
+        assert_eq!(m.latency_samples(), 0);
     }
 
     #[test]
@@ -185,16 +180,52 @@ mod tests {
     }
 
     #[test]
-    fn latency_window_is_bounded() {
+    fn latency_memory_is_bounded_and_lossless() {
         let mut m = SessionMetrics::default();
         let batch: Vec<f64> = (0..100).map(|i| i as f64).collect();
         for _ in 0..60 {
             m.record_batch(batch.len(), 8, &batch);
         }
-        // 6000 samples offered, window holds the most recent 4096
+        // 6000 samples offered: the histogram keeps them all (fixed
+        // 64-bucket memory — nothing is evicted), and percentile reads
+        // stay clamped to the observed range
         assert_eq!(m.requests, 6000);
-        assert_eq!(m.latency_samples(), MAX_LATENCY_SAMPLES);
+        assert_eq!(m.latency_samples(), 6000);
         assert!(m.p99_ns() <= 99.0);
+    }
+
+    /// Migration guard for the window → histogram swap: over the identical
+    /// sample stream the old sorted window saw, the histogram-backed
+    /// `p50_ns`/`p99_ns` stay within one log2 bucket (a factor of 2) of
+    /// the sorted-sample order statistic at the target rank, and never
+    /// exceed twice the exact interpolated percentile.
+    #[test]
+    fn histogram_percentiles_agree_with_sorted_window() {
+        forall("serve_metrics_hist_vs_sorted", default_cases(), |rng| {
+            let mut m = SessionMetrics::default();
+            let mut samples = Vec::new();
+            let batches = 1 + rng.gen_range(20);
+            for _ in 0..batches {
+                let b = 1 + rng.gen_range(32);
+                let lat: Vec<f64> = (0..b)
+                    .map(|_| 1.0 + rng.gen_range_f32(0.0, 22.0).exp2() as f64)
+                    .collect();
+                samples.extend_from_slice(&lat);
+                m.record_batch(b, 32, &lat);
+            }
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let exact = percentiles(&samples, &[50.0, 99.0]);
+            let (p50, p99) = m.latency_percentiles();
+            for ((p, e), g) in [50.0, 99.0].iter().zip(&exact).zip([p50, p99]) {
+                let rank = p / 100.0 * (samples.len() - 1) as f64;
+                let anchor = samples[rank.floor() as usize];
+                assert!(
+                    g <= anchor * 2.0 + 1.0 && anchor <= g * 2.0 + 1.0,
+                    "rank-{p} order stat {anchor} vs hist {g} drifted past one bucket"
+                );
+                assert!(g <= e * 2.0 + 1.0, "hist {g} above twice the exact percentile {e}");
+            }
+        });
     }
 
     #[test]

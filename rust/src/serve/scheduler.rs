@@ -46,7 +46,9 @@ use crate::dense::Dense;
 use crate::error::{Error, Result};
 use crate::gnn::{GnnModel, ModelParams, ParamSet};
 use crate::kernels::KernelWorkspace;
+use crate::obs::{Counter, Gauge};
 use crate::sparse::Csr;
+use crate::util::json::Json;
 
 use super::batch::{CompletedInference, InferenceRequest, SessionQueue};
 use super::breaker::{BreakerState, CircuitBreaker};
@@ -136,6 +138,56 @@ pub struct CloseOutcome {
     pub drained: Vec<CompletedInference>,
 }
 
+/// Obs-registry counter handles for the scheduler, acquired once at
+/// server construction (registration is the cold, locking step; the
+/// `inc()` calls at the scheduling sites are lock-free and gate
+/// themselves on the metrics state).
+struct ServeObs {
+    rejected: Arc<Counter>,
+    shed_deadline: Arc<Counter>,
+    failed: Arc<Counter>,
+    quarantine_trips: Arc<Counter>,
+    closed_drained: Arc<Counter>,
+    batches: Arc<Counter>,
+    requests: Arc<Counter>,
+    open_sessions: Arc<Gauge>,
+}
+
+impl ServeObs {
+    fn new() -> ServeObs {
+        let reg = crate::obs::registry();
+        ServeObs {
+            rejected: reg.counter("serve.rejected"),
+            shed_deadline: reg.counter("serve.shed_deadline"),
+            failed: reg.counter("serve.failed"),
+            quarantine_trips: reg.counter("serve.quarantine_trips"),
+            closed_drained: reg.counter("serve.closed_drained"),
+            batches: reg.counter("serve.batches"),
+            requests: reg.counter("serve.requests"),
+            open_sessions: reg.gauge("serve.open_sessions"),
+        }
+    }
+}
+
+/// Per-session obs gauges, labelled by session name (a bounded set —
+/// sessions are explicitly registered). Acquired at registration.
+struct SessionGauges {
+    queue_depth: Arc<Gauge>,
+    queued_flops: Arc<Gauge>,
+    breaker_state: Arc<Gauge>,
+}
+
+impl SessionGauges {
+    fn new(name: &str) -> SessionGauges {
+        let reg = crate::obs::registry();
+        SessionGauges {
+            queue_depth: reg.gauge(&format!("serve.queue_depth{{session={name}}}")),
+            queued_flops: reg.gauge(&format!("serve.queued_flops{{session={name}}}")),
+            breaker_state: reg.gauge(&format!("serve.breaker_state{{session={name}}}")),
+        }
+    }
+}
+
 /// The multi-graph inference server: session registry + per-session
 /// request queues + the DRR scheduler. See the module docs for the
 /// fairness and fault-isolation model and [`super`] for the subsystem
@@ -152,6 +204,8 @@ pub struct InferenceServer {
     thread_budgets: Vec<Option<usize>>,
     next_request: u64,
     rr_start: usize,
+    obs: ServeObs,
+    session_gauges: Vec<SessionGauges>,
 }
 
 impl InferenceServer {
@@ -167,6 +221,8 @@ impl InferenceServer {
             thread_budgets: Vec::new(),
             next_request: 1,
             rr_start: 0,
+            obs: ServeObs::new(),
+            session_gauges: Vec::new(),
         }
     }
 
@@ -202,6 +258,7 @@ impl InferenceServer {
         self.breakers
             .push(CircuitBreaker::new(self.cfg.quarantine_after, self.cfg.probation_passes));
         self.thread_budgets.push(None);
+        self.session_gauges.push(SessionGauges::new(name));
         Ok(id)
     }
 
@@ -284,6 +341,7 @@ impl InferenceServer {
         let name = session.name.clone();
         if self.breakers[id.0].rejects_submits() {
             self.metrics[id.0].rejected += 1;
+            self.obs.rejected.inc(1);
             return Err(Error::Overloaded {
                 reason: format!("session '{name}' is quarantined after repeated failures"),
                 retry_after_ms: self.retry_hint(id),
@@ -292,6 +350,7 @@ impl InferenceServer {
         let q = &self.queues[id.0];
         if self.cfg.queue_cap > 0 && q.len() >= self.cfg.queue_cap {
             self.metrics[id.0].rejected += 1;
+            self.obs.rejected.inc(1);
             return Err(Error::Overloaded {
                 reason: format!(
                     "session '{name}' queue full ({} pending, cap {})",
@@ -303,6 +362,7 @@ impl InferenceServer {
         }
         if self.cfg.flops_budget > 0.0 && q.queued_flops() + cost_flops > self.cfg.flops_budget {
             self.metrics[id.0].rejected += 1;
+            self.obs.rejected.inc(1);
             return Err(Error::Overloaded {
                 reason: format!(
                     "session '{name}' over FLOPs budget: {:.3e} queued + {:.3e} requested > {:.3e}",
@@ -409,6 +469,7 @@ impl InferenceServer {
         if n == 0 {
             return;
         }
+        let _pass_span = crate::obs::Span::enter("serve.drr_pass");
         let quantum = self.cfg.quantum.max(1);
         let max_batch = self.cfg.max_batch.max(1);
         let now = Instant::now();
@@ -419,6 +480,7 @@ impl InferenceServer {
             let expired = self.queues[s].drain_expired(now);
             if !expired.is_empty() {
                 self.metrics[s].shed_deadline += expired.len() as u64;
+                self.obs.shed_deadline.inc(expired.len() as u64);
                 Self::terminate(expired, completed, |r| {
                     Error::DeadlineExceeded(format!(
                         "request {} shed before batch formation",
@@ -453,6 +515,31 @@ impl InferenceServer {
             }
         }
         self.rr_start = (start + 1) % n;
+        self.publish_obs();
+    }
+
+    /// Refresh the obs gauges this server owns: per-session queue depth /
+    /// queued FLOPs / breaker state, the open-session count, and the
+    /// shared workspace's counters. Runs at the end of every DRR pass (and
+    /// from serve-bench before snapshotting); one relaxed load while
+    /// metrics are off.
+    pub fn publish_obs(&self) {
+        if !crate::obs::metrics_on() {
+            return;
+        }
+        for id in self.registry.ids() {
+            let s = id.0;
+            let g = &self.session_gauges[s];
+            g.queue_depth.set(self.queues[s].len() as f64);
+            g.queued_flops.set(self.queues[s].queued_flops());
+            g.breaker_state.set(match self.breakers[s].state() {
+                BreakerState::Closed => 0.0,
+                BreakerState::Probation => 1.0,
+                BreakerState::Quarantined => 2.0,
+            });
+        }
+        self.obs.open_sessions.set(self.registry.ids().len() as f64);
+        self.registry.workspace().publish_obs();
     }
 
     /// One arrival-driven scheduling pass (the serving loop's steady-state
@@ -495,6 +582,7 @@ impl InferenceServer {
         let name = self.registry.get(id)?.name.clone();
         let pending = self.queues[id.0].drain_all();
         self.metrics[id.0].closed_drained += pending.len() as u64;
+        self.obs.closed_drained.inc(pending.len() as u64);
         let mut drained = Vec::new();
         Self::terminate(pending, &mut drained, |r| {
             Error::SessionClosed(format!("session '{name}' closed with request {} queued", r.id))
@@ -556,11 +644,20 @@ impl InferenceServer {
                 // session closed with requests in flight (defensive; close
                 // drains first) — still a typed terminal outcome
                 self.metrics[id.0].closed_drained += batch.len() as u64;
+                self.obs.closed_drained.inc(batch.len() as u64);
                 Self::terminate(batch, completed, |r| {
                     Error::SessionClosed(format!("request {} raced a session close", r.id))
                 });
                 return;
             }
+        };
+        let _batch_span = if crate::obs::active() {
+            crate::obs::Span::enter("serve.batch")
+                .arg("batch", Json::num(b as f64))
+                .arg("threads", Json::num(threads as f64))
+                .agg(format!("serve.batch{{session={name}}}"))
+        } else {
+            crate::obs::Span::enter("serve.batch")
         };
         let result = {
             let session = self.registry.get(id).expect("session checked above");
@@ -598,9 +695,12 @@ impl InferenceServer {
                     });
                 }
                 self.metrics[id.0].record_batch(b, self.cfg.max_batch.max(1), &latencies);
+                self.obs.batches.inc(1);
+                self.obs.requests.inc(b as u64);
             }
             Err(e) => {
                 self.metrics[id.0].failed += b as u64;
+                self.obs.failed.inc(b as u64);
                 let msg = match &e {
                     Error::RequestFailed(m) => m.clone(),
                     other => other.to_string(),
@@ -622,9 +722,11 @@ impl InferenceServer {
                     // queue terminates typed — co-tenants keep serving
                     // from the same pool and workspace untouched.
                     self.metrics[id.0].quarantine_trips += 1;
+                    self.obs.quarantine_trips.inc(1);
                     self.registry.workspace().evict(graph_id);
                     let drained = self.queues[id.0].drain_all();
                     self.metrics[id.0].closed_drained += drained.len() as u64;
+                    self.obs.closed_drained.inc(drained.len() as u64);
                     Self::terminate(drained, completed, |r| {
                         Error::SessionClosed(format!(
                             "session '{name}' quarantined with request {} queued",

@@ -20,6 +20,7 @@ use crate::gnn::{masked_accuracy, GnnModel, ModelParams, ParamSet};
 use crate::kernels::KernelWorkspace;
 use crate::plan::{execute_taped, ExecutionPlan};
 use crate::runtime::HloGnnTrainer;
+use crate::util::json::Json;
 
 use super::{Backend, Optimizer, OptimizerKind};
 
@@ -309,6 +310,8 @@ impl Trainer {
 
     /// Run the training loop; returns the report.
     pub fn fit(&mut self, dataset: &Dataset) -> Result<TrainReport> {
+        let _fit_span = crate::obs::Span::enter("train.fit")
+            .arg("epochs", Json::num(self.cfg.epochs as f64));
         let epochs = self.cfg.epochs;
         let mut losses = Vec::with_capacity(epochs);
         let mut epoch_secs = Vec::with_capacity(epochs);
@@ -321,6 +324,9 @@ impl Trainer {
         }
 
         let (train_acc, test_acc) = self.evaluate(dataset)?;
+        // one publish at exit covers the whole run's cache/workspace story
+        self.cache.publish_obs();
+        self.workspace.publish_obs();
         Ok(TrainReport {
             model: self.model.name().to_string(),
             backend: self.backend.label().to_string(),
@@ -336,6 +342,12 @@ impl Trainer {
 
     /// One optimisation step; returns the training loss.
     pub fn train_step(&mut self, dataset: &Dataset) -> Result<f32> {
+        let _step_span = if crate::obs::active() {
+            crate::obs::Span::enter("train.step")
+                .agg(format!("train.step{{backend={}}}", self.backend.label()))
+        } else {
+            crate::obs::Span::enter("train.step")
+        };
         // PT1-style: re-derive the normalised adjacency every epoch
         if self.backend.renormalizes_per_epoch() {
             let operand = Self::build_operand(

@@ -37,7 +37,9 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+use crate::obs;
 
 /// Default worker budget: `ISPLIB_THREADS` env var, else the number of
 /// available cores. Read once per process.
@@ -89,6 +91,18 @@ impl Latch {
     }
 }
 
+/// Per-worker observability counters (always allocated, one per worker;
+/// busy time accrues only while `obs` metrics are enabled).
+#[derive(Default)]
+struct WorkerStat {
+    /// Nanoseconds spent executing tasks.
+    busy_ns: AtomicU64,
+    /// Tasks this worker executed.
+    tasks: AtomicU64,
+    /// Times this worker parked on the condvar with an empty queue.
+    parks: AtomicU64,
+}
+
 struct PoolInner {
     queue: Mutex<VecDeque<Task>>,
     /// Signalled when tasks are enqueued; workers park here when idle.
@@ -104,6 +118,15 @@ struct PoolInner {
     /// without this counter a multi-panic batch is indistinguishable from
     /// a single-panic one.
     panics: AtomicU64,
+    /// Tasks the *caller* lane stole out of the queue while waiting on a
+    /// latch (workers popping their own queue is consumption, not a
+    /// steal).
+    steals: AtomicU64,
+    /// Per-worker busy/tasks/parks counters, indexed by worker id.
+    worker_stats: Box<[WorkerStat]>,
+    /// Pool creation time — the wall-clock base for the utilization
+    /// gauge.
+    started: Instant,
 }
 
 impl PoolInner {
@@ -132,12 +155,15 @@ impl WorkerPool {
             shutdown: AtomicBool::new(false),
             jobs: AtomicU64::new(0),
             panics: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            worker_stats: (0..workers).map(|_| WorkerStat::default()).collect(),
+            started: Instant::now(),
         });
         for i in 0..workers {
             let inner = Arc::clone(&inner);
             std::thread::Builder::new()
                 .name(format!("isplib-worker-{i}"))
-                .spawn(move || worker_loop(&inner))
+                .spawn(move || worker_loop(&inner, i))
                 .expect("spawn isplib worker");
         }
         WorkerPool { inner, workers }
@@ -145,10 +171,14 @@ impl WorkerPool {
 
     /// The process-wide pool: `current_num_threads() - 1` workers (the
     /// caller thread is the remaining lane). Created lazily on first use;
-    /// workers park when idle and live for the process lifetime.
+    /// workers park when idle and live for the process lifetime. It
+    /// publishes its counters into the obs registry on every snapshot.
     pub fn global() -> &'static WorkerPool {
         static POOL: OnceLock<WorkerPool> = OnceLock::new();
-        POOL.get_or_init(|| WorkerPool::new(current_num_threads().saturating_sub(1)))
+        POOL.get_or_init(|| {
+            obs::registry().register_source(Box::new(|| WorkerPool::global().publish_obs()));
+            WorkerPool::new(current_num_threads().saturating_sub(1))
+        })
     }
 
     /// Number of pooled worker threads (0 → inline execution).
@@ -249,6 +279,7 @@ impl WorkerPool {
                 }
             }
             if let Some(task) = self.inner.try_pop() {
+                self.inner.steals.fetch_add(1, Ordering::Relaxed);
                 task();
                 continue;
             }
@@ -261,6 +292,48 @@ impl WorkerPool {
         if let Some(payload) = mine.or(theirs) {
             resume_unwind(payload);
         }
+    }
+
+    /// Tasks the caller lane stole from the queue while waiting on
+    /// latches. Monotone; diagnostic only.
+    pub fn steals(&self) -> u64 {
+        self.inner.steals.load(Ordering::Relaxed)
+    }
+
+    /// Push this pool's counters into the obs registry: lifetime
+    /// jobs/panics/steals, per-worker busy/tasks/parks gauges, and the
+    /// derived `pool.utilization` gauge — the fraction of wall time since
+    /// pool creation the workers spent executing tasks (busy time accrues
+    /// only while metrics are enabled, so enable obs before the workload
+    /// you want attributed). The global pool calls this automatically as
+    /// a snapshot source; private pools may call it directly.
+    pub fn publish_obs(&self) {
+        if !obs::metrics_on() {
+            return;
+        }
+        let reg = obs::registry();
+        reg.gauge("pool.workers").set(self.workers as f64);
+        reg.gauge("pool.jobs_executed").set(self.jobs_executed() as f64);
+        reg.gauge("pool.panics_caught").set(self.panics_caught() as f64);
+        reg.gauge("pool.steals").set(self.steals() as f64);
+        let mut busy_total = 0u64;
+        for (i, stat) in self.inner.worker_stats.iter().enumerate() {
+            let busy = stat.busy_ns.load(Ordering::Relaxed);
+            busy_total += busy;
+            let id = i + 1; // matches the trace tid mapping
+            reg.gauge(&format!("pool.worker.busy_ns{{worker={id}}}")).set(busy as f64);
+            reg.gauge(&format!("pool.worker.tasks{{worker={id}}}"))
+                .set(stat.tasks.load(Ordering::Relaxed) as f64);
+            reg.gauge(&format!("pool.worker.parks{{worker={id}}}"))
+                .set(stat.parks.load(Ordering::Relaxed) as f64);
+        }
+        let wall = self.inner.started.elapsed().as_nanos().max(1) as f64;
+        let util = if self.workers == 0 {
+            0.0
+        } else {
+            busy_total as f64 / (wall * self.workers as f64)
+        };
+        reg.gauge("pool.utilization").set(util);
     }
 
     /// Wait briefly on the latch; returns the guard so the caller can
@@ -287,7 +360,11 @@ impl Drop for WorkerPool {
     }
 }
 
-fn worker_loop(inner: &PoolInner) {
+fn worker_loop(inner: &PoolInner, worker: usize) {
+    // Worker i is trace tid i + 1 (tid 0 is the main/caller thread), the
+    // mapping the Perfetto exporter's thread_name metadata reflects.
+    obs::set_thread_tid(worker as u64 + 1, &format!("isplib-worker-{worker}"));
+    let stat = &inner.worker_stats[worker];
     loop {
         let task = {
             let mut q = inner.queue.lock().unwrap();
@@ -298,13 +375,29 @@ fn worker_loop(inner: &PoolInner) {
                 if inner.shutdown.load(Ordering::SeqCst) {
                     break None;
                 }
+                if obs::metrics_on() {
+                    stat.parks.fetch_add(1, Ordering::Relaxed);
+                }
                 q = inner.available.wait(q).unwrap();
             }
         };
         match task {
             // Tasks are panic-catching wrappers (see join_all); they never
             // unwind into this loop.
-            Some(task) => task(),
+            Some(task) => {
+                if obs::active() {
+                    let _span = obs::Span::enter("pool.task");
+                    // count at start: the batch latch fires inside task(),
+                    // so a post-task increment could be missed by a caller
+                    // that snapshots right after join_all returns
+                    stat.tasks.fetch_add(1, Ordering::Relaxed);
+                    let t0 = Instant::now();
+                    task();
+                    stat.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                } else {
+                    task();
+                }
+            }
             None => return,
         }
     }
@@ -566,6 +659,29 @@ mod tests {
         }));
         assert!(result.is_err());
         assert_eq!(inline.panics_caught(), 1);
+    }
+
+    #[test]
+    fn publish_obs_exports_pool_gauges() {
+        let _guard = crate::obs::ObsGuard::enabled();
+        let pool = WorkerPool::new(2);
+        let jobs: Vec<_> = (0..8)
+            .map(|_| move || std::thread::sleep(Duration::from_micros(20)))
+            .collect();
+        pool.join_all(jobs);
+        pool.publish_obs();
+        // read the handles directly: a full snapshot() would re-run the
+        // global pool's source and overwrite these with its own values
+        assert_eq!(crate::obs::gauge("pool.workers").get(), 2.0);
+        assert_eq!(crate::obs::gauge("pool.jobs_executed").get(), 8.0);
+        assert_eq!(crate::obs::gauge("pool.panics_caught").get(), 0.0);
+        let worker_tasks = crate::obs::gauge("pool.worker.tasks{worker=1}").get()
+            + crate::obs::gauge("pool.worker.tasks{worker=2}").get();
+        let stolen = pool.steals();
+        // caller lane runs job 1 inline and may steal more; workers get the rest
+        assert_eq!(worker_tasks as u64 + stolen + 1, 8, "every job is attributed to a lane");
+        let util = crate::obs::gauge("pool.utilization").get();
+        assert!((0.0..=1.0).contains(&util), "utilization {util} out of range");
     }
 
     #[test]

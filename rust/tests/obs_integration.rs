@@ -1,0 +1,391 @@
+//! Observability integration: the cross-subsystem contracts of the obs
+//! layer, checked from outside the crate.
+//!
+//! * The **disabled-path contract**: with observability off, every
+//!   instrumentation call (spans, counters, histograms) performs zero heap
+//!   allocation and records nothing — guarded by a counting global
+//!   allocator, so a regression that sneaks a `format!` or a `Box` onto
+//!   the disabled path fails loudly.
+//! * **Concurrent exactness**: counters and histograms hammered from many
+//!   worker-pool threads lose no updates (the registry is lock-free
+//!   relaxed atomics, and relaxed is enough for totals).
+//! * **Perfetto export**: spans opened on the main thread and inside pool
+//!   workers export as Chrome trace-event JSON that parses back, nests,
+//!   and carries the worker-pool tid mapping (worker `i` → tid `i + 1`).
+//! * With `--features failpoints`: injected kernel panics drive the
+//!   serving quarantine machinery, and the resulting fault counters
+//!   (failed / quarantine trips / drains / rejections) surface in one
+//!   registry snapshot.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::time::{Duration, Instant};
+
+use isplib::obs::{self, ObsGuard, Span};
+use isplib::util::check::{default_cases, forall};
+use isplib::util::json::Json;
+use isplib::util::parallel::WorkerPool;
+use isplib::util::tmp::TempDir;
+
+// --- counting allocator ---------------------------------------------------
+// Thread-local so concurrently running tests on other threads don't
+// pollute the count; const-init Cells so the TLS access itself never
+// allocates. `try_with` guards against TLS teardown re-entry.
+
+thread_local! {
+    static COUNTING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = COUNTING.try_with(|on| {
+            if on.get() {
+                let _ = ALLOCS.try_with(|a| a.set(a.get() + 1));
+            }
+        });
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Run `f` with allocation counting on for this thread; returns how many
+/// heap allocations it performed.
+fn count_allocs<F: FnOnce()>(f: F) -> u64 {
+    ALLOCS.with(|a| a.set(0));
+    COUNTING.with(|on| on.set(true));
+    f();
+    COUNTING.with(|on| on.set(false));
+    ALLOCS.with(|a| a.get())
+}
+
+/// The disabled path is one relaxed atomic load: no allocation, no trace
+/// event, no metric movement — for spans, counters, gauges, and
+/// histograms alike.
+#[test]
+fn disabled_path_never_allocates_and_records_nothing() {
+    let _guard = ObsGuard::disabled();
+    // registration is the cold path and MAY allocate: acquire handles
+    // outside the counted region, as real call sites do
+    let c = obs::counter("obs_test.disabled.counter");
+    let g = obs::gauge("obs_test.disabled.gauge");
+    let h = obs::histogram("obs_test.disabled.hist");
+    let (c0, h0) = (c.get(), h.count());
+    let events0 = obs::trace_event_count();
+
+    let n = count_allocs(|| {
+        for i in 0..256u64 {
+            let _span = Span::enter("obs_test.disabled.span");
+            c.inc(1);
+            g.set(i as f64);
+            h.record(i);
+        }
+    });
+
+    assert_eq!(n, 0, "disabled instrumentation performed {n} heap allocations");
+    assert_eq!(c.get(), c0, "disabled counter moved");
+    assert_eq!(h.count(), h0, "disabled histogram recorded");
+    assert_eq!(obs::trace_event_count(), events0, "disabled span buffered an event");
+}
+
+/// Sanity inverse: with metrics on, recording on held handles moves them
+/// — and still without allocating (recording is relaxed atomics only).
+#[test]
+fn enabled_recording_is_allocation_free_on_held_handles() {
+    let _guard = ObsGuard::enabled();
+    let c = obs::counter("obs_test.enabled.counter");
+    let h = obs::histogram("obs_test.enabled.hist");
+    let (c0, h0) = (c.get(), h.count());
+
+    let n = count_allocs(|| {
+        for i in 0..256u64 {
+            c.inc(1);
+            h.record(i);
+        }
+    });
+
+    assert_eq!(n, 0, "recording on held handles performed {n} heap allocations");
+    assert_eq!(c.get() - c0, 256);
+    assert_eq!(h.count() - h0, 256);
+}
+
+/// Counters and histograms written from many pool workers at once lose
+/// nothing: totals are exact for arbitrary job/iteration mixes.
+#[test]
+fn concurrent_pool_recording_totals_are_exact() {
+    let _guard = ObsGuard::enabled();
+    let pool = WorkerPool::new(4);
+    let c = obs::counter("obs_test.concurrent.counter");
+    let h = obs::histogram("obs_test.concurrent.hist");
+    forall("obs_concurrent_totals", default_cases(), |rng| {
+        let jobs_n = 1 + rng.gen_range(16);
+        let per = 1 + rng.gen_range(200) as u64;
+        let (c0, h0, s0) = (c.get(), h.count(), h.sum());
+        let jobs: Vec<_> = (0..jobs_n)
+            .map(|_| {
+                let c = c.clone();
+                let h = h.clone();
+                move || {
+                    for v in 0..per {
+                        c.inc(1);
+                        h.record(v);
+                    }
+                }
+            })
+            .collect();
+        pool.join_all(jobs);
+        let expect = jobs_n as u64 * per;
+        assert_eq!(c.get() - c0, expect, "counter lost updates");
+        assert_eq!(h.count() - h0, expect, "histogram lost samples");
+        // sum of 0..per per job — exact, not just counted
+        assert_eq!(h.sum() - s0, jobs_n as u64 * (per * (per - 1) / 2));
+    });
+}
+
+/// Golden Perfetto export: a root span on main plus pool jobs produce a
+/// trace that (a) parses back from its own JSON, (b) nests the worker
+/// spans' starts inside the root, (c) maps worker `i` to tid `i + 1` with
+/// a matching `thread_name` metadata record, and (d) loads identically
+/// from the file `write_trace` produces.
+#[test]
+fn pool_spans_export_perfetto_json_with_worker_tids() {
+    let _guard = ObsGuard::tracing();
+    obs::clear_trace();
+    const WORKERS: usize = 3;
+    const JOBS: usize = 6;
+    let pool = WorkerPool::new(WORKERS);
+    let root_name = "obs_test.trace.root";
+    // jobs the caller steals in join_all run without a pool.task span, so
+    // the expected span count is JOBS minus the steals this batch caused
+    let steals0 = pool.steals();
+    {
+        let _root = Span::enter(root_name).arg("jobs", Json::num(JOBS as f64));
+        let jobs: Vec<_> = (0..JOBS)
+            .map(|_| || std::thread::sleep(Duration::from_micros(200)))
+            .collect();
+        pool.join_all(jobs);
+    }
+    let expected_spans = JOBS - (pool.steals() - steals0) as usize;
+    // worker spans close a few instructions after the batch latch fires,
+    // so join_all returning does not guarantee their events are buffered
+    // yet — poll briefly instead of racing
+    let count_tasks = |doc: &Json| -> usize {
+        doc.get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| {
+                e.get("name").ok().and_then(|n| n.as_str().ok()).map(|s| s == "pool.task")
+                    == Some(true)
+                    && e.get("ph").ok().and_then(|p| p.as_str().ok()).map(|s| s == "X")
+                        == Some(true)
+            })
+            .count()
+    };
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut doc = obs::trace_json();
+    while count_tasks(&doc) < expected_spans && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+        doc = obs::trace_json();
+    }
+    assert_eq!(
+        count_tasks(&doc),
+        expected_spans,
+        "expected one pool.task span per worker-executed job"
+    );
+
+    // (a) the export round-trips through the parser
+    let parsed = Json::parse(&doc.pretty()).unwrap();
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    let name_of = |e: &Json| e.get("name").ok().and_then(|n| n.as_str().ok()).map(String::from);
+    let tid_of = |e: &Json| e.get("tid").unwrap().as_f64().unwrap() as u64;
+    let root = events
+        .iter()
+        .find(|e| name_of(e).as_deref() == Some(root_name))
+        .expect("root span exported");
+    assert_eq!(tid_of(root), 0, "main thread is tid 0");
+    let root_ts = root.get("ts").unwrap().as_f64().unwrap();
+    let root_end = root_ts + root.get("dur").unwrap().as_f64().unwrap();
+
+    // (b) + (c): every pool.task starts inside the root span and runs on
+    // a registered worker tid
+    for e in events.iter().filter(|e| name_of(e).as_deref() == Some("pool.task")) {
+        let tid = tid_of(e);
+        assert!(
+            (1..=WORKERS as u64).contains(&tid),
+            "pool.task on unexpected tid {tid}"
+        );
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        assert!(
+            ts >= root_ts && ts <= root_end,
+            "pool.task started at {ts} outside root [{root_ts},{root_end}]"
+        );
+        let meta = events.iter().find(|m| {
+            name_of(m).as_deref() == Some("thread_name") && tid_of(m) == tid
+        });
+        let tname = meta
+            .expect("worker tid has thread_name metadata")
+            .get("args")
+            .unwrap()
+            .get("name")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        assert_eq!(tname, format!("isplib-worker-{}", tid - 1), "tid↔worker mapping");
+    }
+
+    // (d) write_trace emits the same loadable document
+    let dir = TempDir::new().unwrap();
+    let path = dir.path().join("trace.json");
+    obs::write_trace(&path).unwrap();
+    let from_disk = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(
+        from_disk.get("traceEvents").unwrap().as_arr().unwrap().len(),
+        events.len(),
+        "on-disk trace differs from the in-memory export"
+    );
+    obs::clear_trace();
+}
+
+// --- failpoints chaos: fault counters surface in the snapshot -------------
+
+#[cfg(feature = "failpoints")]
+mod chaos {
+    use super::*;
+    use isplib::dense::Dense;
+    use isplib::error::Error;
+    use isplib::gnn::{GnnModel, ModelParams};
+    use isplib::serve::{InferenceServer, ServeConfig};
+    use isplib::sparse::{Coo, Csr};
+    use isplib::util::failpoints::{self, FailAction, FailPlan};
+    use isplib::util::rng::Rng;
+
+    const VICTIM: &str = "obs-victim";
+    const BYSTANDER: &str = "obs-bystander";
+
+    fn random_graph(n: usize, deg: usize, seed: u64) -> Csr {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            for _ in 0..deg {
+                coo.push(r, rng.gen_range(n), rng.gen_range_f32(0.1, 1.0));
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// Injected kernel panics quarantine one tenant; the episode's whole
+    /// story — failed requests, the quarantine trip, the drained
+    /// stragglers, the post-trip rejection, and the breaker-state gauge —
+    /// is readable from a single `obs::snapshot()`.
+    #[test]
+    fn injected_faults_surface_in_the_registry_snapshot() {
+        let _obs = ObsGuard::enabled();
+        let _fp = failpoints::exclusive();
+        failpoints::clear();
+
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 2,
+            quantum: 2,
+            threads: 2,
+            quarantine_after: 2,
+            probation_passes: 1,
+            ..ServeConfig::default()
+        });
+        let g1 = random_graph(30, 4, 171);
+        let g2 = random_graph(36, 4, 172);
+        let dims = ModelParams { in_dim: 6, hidden: 8, classes: 3 };
+        let victim = server
+            .register_session(
+                VICTIM,
+                GnnModel::Gcn,
+                dims,
+                GnnModel::Gcn.init_params(dims, 1),
+                &g1,
+                None,
+            )
+            .unwrap();
+        let bystander = server
+            .register_session(
+                BYSTANDER,
+                GnnModel::Gin,
+                dims,
+                GnnModel::Gin.init_params(dims, 2),
+                &g2,
+                None,
+            )
+            .unwrap();
+
+        let failed = obs::counter("serve.failed");
+        let trips = obs::counter("serve.quarantine_trips");
+        let drained = obs::counter("serve.closed_drained");
+        let rejected = obs::counter("serve.rejected");
+        let (f0, t0, d0, r0) = (failed.get(), trips.get(), drained.get(), rejected.get());
+
+        failpoints::configure(
+            "kernels.spmm",
+            FailPlan::always(FailAction::Panic).with_tag(VICTIM).limit(2),
+        );
+        let mut rng = Rng::seed_from_u64(181);
+        for _ in 0..5 {
+            server.submit(victim, Dense::uniform(30, 6, 1.0, &mut rng)).unwrap();
+        }
+        for _ in 0..4 {
+            server.submit(bystander, Dense::uniform(36, 6, 1.0, &mut rng)).unwrap();
+        }
+        let done = server.run_until_drained().unwrap();
+        assert_eq!(done.len(), 9, "every accepted request terminates");
+        // the quarantined session rejects at its door
+        assert!(matches!(
+            server.submit(victim, Dense::uniform(30, 6, 1.0, &mut rng)).unwrap_err(),
+            Error::Overloaded { .. }
+        ));
+        failpoints::clear();
+
+        // two panicked batches of 2, one trip, one drained straggler, one
+        // post-trip rejection — as registry counter deltas
+        assert_eq!(failed.get() - f0, 4, "serve.failed");
+        assert_eq!(trips.get() - t0, 1, "serve.quarantine_trips");
+        assert_eq!(drained.get() - d0, 1, "serve.closed_drained");
+        assert_eq!(rejected.get() - r0, 1, "serve.rejected");
+
+        server.publish_obs();
+        let snap = obs::snapshot();
+        let counters = snap.get("counters").unwrap();
+        for key in
+            ["serve.failed", "serve.quarantine_trips", "serve.closed_drained", "serve.rejected", "serve.shed_deadline"]
+        {
+            assert!(counters.get(key).is_ok(), "snapshot missing counter {key}");
+        }
+        let gauges = snap.get("gauges").unwrap();
+        let breaker = gauges
+            .get(&format!("serve.breaker_state{{session={VICTIM}}}"))
+            .expect("victim breaker-state gauge in snapshot")
+            .as_f64()
+            .unwrap();
+        assert!(breaker > 0.0, "victim breaker gauge should read quarantined/probation");
+        let bystander_breaker = gauges
+            .get(&format!("serve.breaker_state{{session={BYSTANDER}}}"))
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert_eq!(bystander_breaker, 0.0, "bystander stays closed");
+        assert!(
+            gauges.get(&format!("serve.queue_depth{{session={BYSTANDER}}}")).is_ok(),
+            "queue-depth gauges in snapshot"
+        );
+        // the pool's scattered counters are absorbed too
+        assert!(gauges.get("pool.panics_caught").is_ok());
+        assert!(gauges.get("pool.jobs_executed").is_ok());
+    }
+}

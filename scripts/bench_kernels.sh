@@ -8,7 +8,12 @@
 # fused epilogue against the unfused chain ON EACH sparse format (the
 # tuner's joint format×fusion cells); an `inplace` section timing the
 # copying `_into` dense ops against their in-place twins; plus the
-# pool-vs-spawn per-call overhead microbenchmark. Run from anywhere;
+# pool-vs-spawn per-call overhead microbenchmark; plus an `obs_overhead`
+# section measuring the telemetry layer's hot-path cost — the same
+# repeated small-SpMM loop with the obs registry off vs on, reported as
+# `disabled_ns_per_call` / `enabled_ns_per_call` / `overhead_pct` (the
+# disabled path is a single relaxed atomic load per dispatch, so the
+# delta should be noise). Run from anywhere;
 # extra args pass through to cargo bench. Set ISPLIB_BENCH_QUICK=1 for a
 # fast smoke run.
 set -euo pipefail

@@ -7,10 +7,18 @@
 # `--all-targets` keeps the serve/ subsystem and its integration tests
 # (tests/serving_integration.rs) under the -D warnings gate, and the
 # unfiltered `cargo test` runs below execute them.
+#
+# The obs suite (tests/obs_integration.rs + the obs:: unit tests) is also
+# run explicitly in BOTH passes: the default pass guards the
+# disabled-path/no-allocation contract and the Perfetto export, and the
+# failpoints pass additionally checks that injected faults surface in the
+# registry snapshot.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
 cargo build --release
 cargo clippy --all-targets -- -D warnings
 cargo test -q
+cargo test -q --test obs_integration
 cargo test -q --features failpoints
+cargo test -q --features failpoints --test obs_integration
