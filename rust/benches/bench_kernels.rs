@@ -83,7 +83,7 @@ fn time_spmm_ns(
     prepare_format(a, choice, ws, graph_id);
     let r = time_case(cfg, &choice.label(), || {
         let y =
-            spmm_with_workspace(a, x, op, choice, threads, Some((ws, graph_id))).unwrap();
+            spmm_with_workspace(a, x, op, choice, threads, Some((ws, graph_id.into()))).unwrap();
         std::hint::black_box(&y.data[..]);
         ws.recycle(y.data);
     });
@@ -114,7 +114,7 @@ fn per_call_secs(a: &Csr, x: &Dense, calls: usize, spawn_legacy: bool) -> f64 {
     let ws = KernelWorkspace::new();
     // warm the partition cache + buffer pool so the measured loop sees the
     // steady state a training run sees
-    let warm = spmm_with_workspace(a, x, Semiring::Sum, KernelChoice::Trusted, threads, Some((&ws, 1)))
+    let warm = spmm_with_workspace(a, x, Semiring::Sum, KernelChoice::Trusted, threads, Some((&ws, 1u64.into())))
         .unwrap();
     ws.recycle(warm.data);
 
@@ -134,7 +134,7 @@ fn per_call_secs(a: &Csr, x: &Dense, calls: usize, spawn_legacy: bool) -> f64 {
             );
             std::hint::black_box(&y.data[0]);
         } else {
-            let y = spmm_with_workspace(a, x, Semiring::Sum, KernelChoice::Trusted, threads, Some((&ws, 1)))
+            let y = spmm_with_workspace(a, x, Semiring::Sum, KernelChoice::Trusted, threads, Some((&ws, 1u64.into())))
                 .unwrap();
             std::hint::black_box(&y.data[0]);
             ws.recycle(y.data);
@@ -332,7 +332,7 @@ fn main() {
                         Semiring::Sum,
                         choice,
                         threads,
-                        Some((&ws, graph_id)),
+                        Some((&ws, graph_id.into())),
                     )
                     .unwrap();
                     let mut h = ws.take_dense(y.rows, y.cols);
@@ -353,7 +353,7 @@ fn main() {
                         Some(&bias),
                         choice,
                         threads,
-                        Some((&ws, graph_id)),
+                        Some((&ws, graph_id.into())),
                     )
                     .unwrap();
                     std::hint::black_box(&y.data[..]);

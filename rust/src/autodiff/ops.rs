@@ -4,7 +4,7 @@ use std::sync::Arc;
 
 use crate::dense::Dense;
 use crate::error::Result;
-use crate::kernels::KernelWorkspace;
+use crate::kernels::{GraphEpoch, KernelWorkspace};
 use crate::sparse::{Coo, Csr};
 
 /// Stable in-process identity for a graph operand, derived from the
@@ -61,6 +61,11 @@ pub struct SpmmOperand {
     /// Graph identity used to key per-graph workspace entries (cached NNZ
     /// partitions); defaults to [`context_graph_id`] of `context`.
     pub graph_id: u64,
+    /// Graph epoch this operand's matrix belongs to. 0 for static callers
+    /// (training, tuning); bumped by the serving registry when a live
+    /// session absorbs an edge delta, so each epoch's workspace entries
+    /// stay distinct while old-epoch batches drain.
+    pub epoch: u32,
     /// Shared kernel workspace (partition cache + output-buffer pool).
     /// `None` — the default for ad-hoc operands — means every SpMM call
     /// allocates and partitions from scratch.
@@ -79,6 +84,7 @@ impl SpmmOperand {
             coo: None,
             dense: None,
             graph_id: context_graph_id(context),
+            epoch: 0,
             workspace: None,
         }
     }
@@ -94,6 +100,7 @@ impl SpmmOperand {
             coo: None,
             dense: None,
             graph_id: context_graph_id(context),
+            epoch: 0,
             workspace: None,
         }
     }
@@ -108,6 +115,7 @@ impl SpmmOperand {
             coo: None,
             dense: None,
             graph_id: context_graph_id(context),
+            epoch: 0,
             workspace: None,
         }
     }
@@ -123,6 +131,7 @@ impl SpmmOperand {
             coo: Some(Arc::new(coo)),
             dense: None,
             graph_id: context_graph_id(context),
+            epoch: 0,
             workspace: None,
         }
     }
@@ -138,6 +147,7 @@ impl SpmmOperand {
             coo: None,
             dense: Some(Arc::new(dense)),
             graph_id: context_graph_id(context),
+            epoch: 0,
             workspace: None,
         }
     }
@@ -151,6 +161,19 @@ impl SpmmOperand {
         self.workspace = Some(workspace);
         self.graph_id = graph_id;
         self
+    }
+
+    /// Stamp this operand with a graph epoch (serving-registry mutation
+    /// path); all workspace entries its SpMM calls touch are then keyed
+    /// under `(graph_id, epoch)`.
+    pub fn with_epoch(mut self, epoch: u32) -> Self {
+        self.epoch = epoch;
+        self
+    }
+
+    /// The workspace cache key for this operand's matrix.
+    pub fn graph_key(&self) -> GraphEpoch {
+        GraphEpoch::new(self.graph_id, self.epoch)
     }
 
     /// Get `Aᵀ` — from the cache, or recomputed (the §3.3 cost difference

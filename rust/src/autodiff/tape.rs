@@ -187,7 +187,7 @@ impl Tape {
             SpmmImpl::Kernel => {
                 let choice =
                     KernelRegistry::global().resolve(&operand.context, xv.cols, Semiring::Sum);
-                let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_id));
+                let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_key()));
                 spmm_with_workspace(&operand.a, xv, Semiring::Sum, choice, self.threads, ws)
             }
             SpmmImpl::EdgeWise => operand.edgewise_forward(xv),
@@ -210,7 +210,7 @@ impl Tape {
                 let ws = operand
                     .workspace
                     .as_deref()
-                    .map(|w| (w, KernelWorkspace::transpose_id(operand.graph_id)));
+                    .map(|w| (w, operand.graph_key().transpose()));
                 spmm_with_workspace(&at, gout, Semiring::Sum, choice, self.threads, ws)
             }
             SpmmImpl::EdgeWise => operand.edgewise_backward(gout),
@@ -272,7 +272,7 @@ impl Tape {
                 // graph keeps its layout through the fused epilogue
                 let choice =
                     KernelRegistry::global().resolve(&operand.context, xv.cols, Semiring::Sum);
-                let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_id));
+                let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_key()));
                 spmm_fused_relu_with_workspace(&operand.a, &xv, bias_row, choice, self.threads, ws)?
             }
             _ => {

@@ -274,7 +274,7 @@ impl Tuner {
                 Semiring::Sum,
                 choice,
                 self.config.threads,
-                Some((ws, TUNE_GRAPH_ID)),
+                Some((ws, TUNE_GRAPH_ID.into())),
             )?;
             ws.recycle(y.data);
         }
@@ -287,7 +287,7 @@ impl Tuner {
                 Semiring::Sum,
                 choice,
                 self.config.threads,
-                Some((ws, TUNE_GRAPH_ID)),
+                Some((ws, TUNE_GRAPH_ID.into())),
             )?;
             times.push(t0.elapsed().as_secs_f64());
             std::hint::black_box(&y.data[0]);
@@ -513,7 +513,7 @@ impl Tuner {
                 Semiring::Sum,
                 choice,
                 self.config.threads,
-                Some((ws, TUNE_GRAPH_ID)),
+                Some((ws, TUNE_GRAPH_ID.into())),
             )?;
             y.add_row_broadcast_into(bias, &mut h)?;
             h.relu_into(&mut r)?;
@@ -530,7 +530,7 @@ impl Tuner {
                 Some(bias),
                 choice,
                 self.config.threads,
-                Some((ws, TUNE_GRAPH_ID)),
+                Some((ws, TUNE_GRAPH_ID.into())),
             )?;
             let dt = t0.elapsed().as_secs_f64();
             std::hint::black_box(&y.data[..]);

@@ -52,6 +52,11 @@ pub enum Error {
     /// The owning session was closed (or quarantined) while the request
     /// was queued; the request was drained without executing.
     SessionClosed(String),
+    /// A live model hot-swap was rejected before the flip — shape
+    /// validation against the session's lowered plan failed, or a fault
+    /// surfaced mid-swap. The old model keeps serving untouched; not
+    /// retryable with the same params.
+    SwapRejected(String),
 }
 
 impl fmt::Display for Error {
@@ -71,6 +76,7 @@ impl fmt::Display for Error {
             }
             Error::DeadlineExceeded(s) => write!(f, "deadline exceeded: {s}"),
             Error::SessionClosed(s) => write!(f, "session closed: {s}"),
+            Error::SwapRejected(s) => write!(f, "swap rejected: {s}"),
         }
     }
 }
@@ -160,6 +166,12 @@ mod tests {
         let e = Error::SessionClosed("session #2".into());
         assert!(e.to_string().contains("session closed"));
         assert!(!e.is_retryable());
+
+        let e = Error::SwapRejected("layer0.w: 8x4 vs 8x5".into());
+        assert!(e.to_string().contains("swap rejected"));
+        assert!(e.to_string().contains("layer0.w"));
+        assert!(!e.is_retryable());
+        assert_eq!(e.retry_after_ms(), None);
     }
 
     #[test]

@@ -415,7 +415,7 @@ mod tests {
                 Some(&bias),
                 KernelChoice::Trusted,
                 2,
-                Some((&ws, 5)),
+                Some((&ws, 5u64.into())),
             )
             .unwrap();
             assert_eq!(y.data, plain.data, "round {round}");

@@ -59,7 +59,7 @@ pub use spmm_dispatch::{
 };
 pub use tiled::{spmm_tiled, spmm_tiled_parallel, TILED_KTS};
 pub use trusted::{spmm_trusted, spmm_trusted_parallel};
-pub use workspace::{KernelWorkspace, WorkspaceStats};
+pub use workspace::{GraphEpoch, KernelWorkspace, WorkspaceStats};
 
 #[cfg(test)]
 mod proptests;

@@ -154,7 +154,7 @@ fn prop_format_choices_bitwise_equal_trusted() {
             let got = spmm(&a, &x, op, choice, threads).unwrap();
             assert_eq!(got.data, want.data, "{choice:?} op={op:?} threads={threads}");
             let pooled =
-                spmm_with_workspace(&a, &x, op, choice, threads, Some((&ws, 3))).unwrap();
+                spmm_with_workspace(&a, &x, op, choice, threads, Some((&ws, 3u64.into()))).unwrap();
             assert_eq!(pooled.data, want.data, "pooled {choice:?} op={op:?}");
             ws.recycle(pooled.data);
         }
@@ -253,7 +253,7 @@ fn prop_fused_relu_bitwise_across_families() {
                 bias.as_deref(),
                 choice,
                 threads,
-                Some((&ws, 9)),
+                Some((&ws, 9u64.into())),
             )
             .unwrap();
             assert_eq!(pooled_fused.data, fused.data, "pooled fused {choice:?}");

@@ -29,8 +29,8 @@ use super::sell::{
 use super::tiled::{spmm_tiled_partitioned_into, spmm_tiled_serial_into};
 use super::trusted::{spmm_trusted_partitioned_into, spmm_trusted_serial_into};
 use super::{
-    nnz_balanced_partition, KernelWorkspace, Semiring, GENERATED_KBS, SELL_SLICE_HEIGHTS,
-    TILED_KTS,
+    nnz_balanced_partition, GraphEpoch, KernelWorkspace, Semiring, GENERATED_KBS,
+    SELL_SLICE_HEIGHTS, TILED_KTS,
 };
 
 /// Which kernel implementation — and matrix representation — to route an
@@ -127,14 +127,20 @@ impl KernelChoice {
 /// before timing — conversion is a per-graph setup cost, not a per-call
 /// one — and serving sessions pre-convert at registration so the first
 /// request pays nothing.
-pub fn prepare_format(a: &Csr, choice: KernelChoice, ws: &KernelWorkspace, graph_id: u64) -> bool {
+pub fn prepare_format(
+    a: &Csr,
+    choice: KernelChoice,
+    ws: &KernelWorkspace,
+    key: impl Into<GraphEpoch>,
+) -> bool {
+    let key = key.into();
     match choice {
         KernelChoice::Sell { c, sigma } => {
-            ws.sell(graph_id, a, c, sigma);
+            ws.sell(key, a, c, sigma);
             true
         }
         KernelChoice::SortedCsr => {
-            ws.sorted_csr(graph_id, a);
+            ws.sorted_csr(key, a);
             true
         }
         _ => false,
@@ -179,18 +185,18 @@ pub fn spmm(
 }
 
 /// [`spmm`] with a shared [`KernelWorkspace`]: `ws` is the workspace plus
-/// the caller's graph identity for `a` (the same id keying the
-/// [`BackpropCache`](crate::cache::BackpropCache)). With a workspace, the
-/// NNZ-balanced partition is served from the per-graph cache and the
-/// output buffer comes from the recycle pool instead of a fresh
-/// allocation.
+/// the caller's [`GraphEpoch`] identity for `a` (the same graph id keying
+/// the [`BackpropCache`](crate::cache::BackpropCache); a bare `u64`
+/// converts via `.into()` to epoch 0). With a workspace, the NNZ-balanced
+/// partition is served from the per-epoch cache and the output buffer
+/// comes from the recycle pool instead of a fresh allocation.
 pub fn spmm_with_workspace(
     a: &Csr,
     x: &Dense,
     op: Semiring,
     choice: KernelChoice,
     threads: usize,
-    ws: Option<(&KernelWorkspace, u64)>,
+    ws: Option<(&KernelWorkspace, GraphEpoch)>,
 ) -> Result<Dense> {
     if !crate::obs::metrics_on() {
         return spmm_with_workspace_impl(a, x, op, choice, threads, ws);
@@ -209,7 +215,7 @@ fn spmm_with_workspace_impl(
     op: Semiring,
     choice: KernelChoice,
     threads: usize,
-    ws: Option<(&KernelWorkspace, u64)>,
+    ws: Option<(&KernelWorkspace, GraphEpoch)>,
 ) -> Result<Dense> {
     if a.cols != x.rows {
         return Err(Error::ShapeMismatch(format!(
@@ -267,9 +273,7 @@ fn spmm_with_workspace_impl(
         KernelChoice::SortedCsr => {
             let sc = cached_sorted(a, ws);
             let ranges = match ws {
-                Some((w, graph_id)) => {
-                    w.partition(KernelWorkspace::sorted_partition_id(graph_id), &sc.csr, threads)
-                }
+                Some((w, key)) => w.partition(key.sorted_partition(), &sc.csr, threads),
                 None => Arc::new(nnz_balanced_partition(&sc.csr, threads)),
             };
             let mut scratch = match ws {
@@ -283,7 +287,7 @@ fn spmm_with_workspace_impl(
         }
         _ => {
             let ranges = match ws {
-                Some((w, graph_id)) => w.partition(graph_id, a, threads),
+                Some((w, key)) => w.partition(key, a, threads),
                 None => Arc::new(nnz_balanced_partition(a, threads)),
             };
             match choice {
@@ -343,7 +347,7 @@ pub fn spmm_fused_relu_with_workspace(
     bias: Option<&[f32]>,
     choice: KernelChoice,
     threads: usize,
-    ws: Option<(&KernelWorkspace, u64)>,
+    ws: Option<(&KernelWorkspace, GraphEpoch)>,
 ) -> Result<Dense> {
     if !crate::obs::metrics_on() {
         return spmm_fused_relu_impl(a, x, bias, choice, threads, ws);
@@ -362,7 +366,7 @@ fn spmm_fused_relu_impl(
     bias: Option<&[f32]>,
     choice: KernelChoice,
     threads: usize,
-    ws: Option<(&KernelWorkspace, u64)>,
+    ws: Option<(&KernelWorkspace, GraphEpoch)>,
 ) -> Result<Dense> {
     if a.cols != x.rows {
         return Err(Error::ShapeMismatch(format!(
@@ -410,11 +414,7 @@ fn spmm_fused_relu_impl(
                 spmm_sorted_fused_relu_serial_into(&sc, x, bias, &mut y);
             } else {
                 let ranges = match ws {
-                    Some((w, graph_id)) => w.partition(
-                        KernelWorkspace::sorted_partition_id(graph_id),
-                        &sc.csr,
-                        threads,
-                    ),
+                    Some((w, key)) => w.partition(key.sorted_partition(), &sc.csr, threads),
                     None => Arc::new(nnz_balanced_partition(&sc.csr, threads)),
                 };
                 let mut scratch = match ws {
@@ -435,7 +435,7 @@ fn spmm_fused_relu_impl(
                 fused_relu_rows(a, x, bias, 0, a.rows, &mut y.data);
             } else {
                 let ranges = match ws {
-                    Some((w, graph_id)) => w.partition(graph_id, a, threads),
+                    Some((w, key)) => w.partition(key, a, threads),
                     None => Arc::new(nnz_balanced_partition(a, threads)),
                 };
                 parallel::join_all(
@@ -457,18 +457,18 @@ fn cached_sell(
     a: &Csr,
     c: usize,
     sigma: usize,
-    ws: Option<(&KernelWorkspace, u64)>,
+    ws: Option<(&KernelWorkspace, GraphEpoch)>,
 ) -> Arc<Sell> {
     match ws {
-        Some((w, graph_id)) => w.sell(graph_id, a, c, sigma),
+        Some((w, key)) => w.sell(key, a, c, sigma),
         None => Arc::new(Sell::from_csr(a, c, sigma)),
     }
 }
 
 /// The (possibly cached) sorted-CSR conversion for this call.
-fn cached_sorted(a: &Csr, ws: Option<(&KernelWorkspace, u64)>) -> Arc<SortedCsr> {
+fn cached_sorted(a: &Csr, ws: Option<(&KernelWorkspace, GraphEpoch)>) -> Arc<SortedCsr> {
     match ws {
-        Some((w, graph_id)) => w.sorted_csr(graph_id, a),
+        Some((w, key)) => w.sorted_csr(key, a),
         None => Arc::new(SortedCsr::from_csr(a)),
     }
 }
@@ -594,28 +594,28 @@ mod tests {
         let ws = KernelWorkspace::new();
         let choice = KernelChoice::Sell { c: 4, sigma: 16 };
         // prepare_format primes the cache without running a kernel
-        assert!(prepare_format(&a, choice, &ws, 7));
-        assert!(!prepare_format(&a, KernelChoice::Trusted, &ws, 7));
+        assert!(prepare_format(&a, choice, &ws, 7u64));
+        assert!(!prepare_format(&a, KernelChoice::Trusted, &ws, 7u64));
         assert_eq!(ws.stats().format_misses, 1);
         for _ in 0..3 {
-            let y = spmm_with_workspace(&a, &x, Semiring::Sum, choice, 2, Some((&ws, 7))).unwrap();
+            let y = spmm_with_workspace(&a, &x, Semiring::Sum, choice, 2, Some((&ws, 7u64.into()))).unwrap();
             ws.recycle(y.data);
         }
         let stats = ws.stats();
         assert_eq!(stats.format_misses, 1, "conversion must be cached, not per-call");
         assert_eq!(stats.format_hits, 3);
         // sorted-csr caches both the format and its permuted partition
-        let ys = spmm_with_workspace(&a, &x, Semiring::Sum, KernelChoice::SortedCsr, 2, Some((&ws, 7)))
+        let ys = spmm_with_workspace(&a, &x, Semiring::Sum, KernelChoice::SortedCsr, 2, Some((&ws, 7u64.into())))
             .unwrap();
         ws.recycle(ys.data);
         assert_eq!(ws.cached_formats(), 2);
         let misses = ws.stats().partition_misses;
-        let yt = spmm_with_workspace(&a, &x, Semiring::Sum, KernelChoice::SortedCsr, 2, Some((&ws, 7)))
+        let yt = spmm_with_workspace(&a, &x, Semiring::Sum, KernelChoice::SortedCsr, 2, Some((&ws, 7u64.into())))
             .unwrap();
         ws.recycle(yt.data);
         assert_eq!(ws.stats().partition_misses, misses, "permuted partition cached");
         // eviction drops the graph's formats with its partitions
-        assert!(ws.evict(7) >= 2);
+        assert!(ws.evict(7u64) >= 2);
         assert_eq!(ws.cached_formats(), 0);
     }
 
@@ -661,7 +661,7 @@ mod tests {
                         bias,
                         choice,
                         threads,
-                        Some((&ws, 21)),
+                        Some((&ws, 21u64.into())),
                     )
                     .unwrap();
                     assert_eq!(pooled.data, want.data, "pooled {choice:?} t={threads}");
@@ -685,7 +685,7 @@ mod tests {
                 Some(&bias),
                 KernelChoice::Sell { c: 4, sigma: 16 },
                 2,
-                Some((&ws, 31)),
+                Some((&ws, 31u64.into())),
             )
             .unwrap();
             ws.recycle(y.data);
@@ -701,7 +701,7 @@ mod tests {
                 Some(&bias),
                 KernelChoice::SortedCsr,
                 2,
-                Some((&ws, 31)),
+                Some((&ws, 31u64.into())),
             )
             .unwrap();
             ws.recycle(y.data);
@@ -709,7 +709,7 @@ mod tests {
         assert_eq!(ws.stats().format_misses, 2);
         assert!(ws.stats().partition_hits >= 1, "{:?}", ws.stats());
         // everything the fused paths cached for this graph evicts with it
-        assert!(ws.evict(31) >= 3);
+        assert!(ws.evict(31u64) >= 3);
         assert_eq!(ws.cached_formats(), 0);
     }
 
@@ -803,7 +803,7 @@ mod tests {
         let plain = spmm(&a, &x, Semiring::Sum, KernelChoice::Trusted, 3).unwrap();
         for round in 0..5 {
             let pooled =
-                spmm_with_workspace(&a, &x, Semiring::Sum, KernelChoice::Trusted, 3, Some((&ws, 9)))
+                spmm_with_workspace(&a, &x, Semiring::Sum, KernelChoice::Trusted, 3, Some((&ws, 9u64.into())))
                     .unwrap();
             assert_eq!(pooled.data, plain.data, "round {round}");
             // outputs go back to the pool, as the tape does on drop
@@ -826,7 +826,7 @@ mod tests {
         for op in Semiring::ALL {
             let want = spmm_dense_ref(&a, &x, op).unwrap();
             let got =
-                spmm_with_workspace(&a, &x, op, KernelChoice::Tiled { kt: 16 }, 1, Some((&ws, 1)))
+                spmm_with_workspace(&a, &x, op, KernelChoice::Tiled { kt: 16 }, 1, Some((&ws, 1u64.into())))
                     .unwrap();
             assert!(got.allclose(&want, 1e-4), "op={op:?}");
             ws.recycle(got.data);

@@ -32,6 +32,16 @@
 //! stays O(bins) under the shared lock instead of walking every retired
 //! buffer. Hit/miss counters make its effect measurable the same way
 //! `CacheStats` does for the backprop cache.
+//!
+//! Since live graph mutation landed, the cache key is a [`GraphEpoch`]
+//! (graph identity × epoch number) rather than a bare graph id: a serving
+//! session that absorbs an edge delta builds a *new* epoch of its CSR, and
+//! in-flight batches admitted under the old epoch keep hitting the old
+//! epoch's cached partitions/conversions until their last reference
+//! retires — at which point [`KernelWorkspace::evict_stale_epochs`] drops
+//! exactly that epoch's entries. A bare `u64` still converts
+//! (`From<u64>` → epoch 0), so single-epoch callers — training, the
+//! tuner, tests — are unchanged.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
@@ -68,6 +78,51 @@ pub struct WorkspaceStats {
     pub format_hits: u64,
     /// Sparse-format lookups that had to convert (O(nnz)).
     pub format_misses: u64,
+}
+
+/// Cache identity of one *epoch* of one graph. Every workspace entry —
+/// partitions, format conversions — is keyed by this pair, so two epochs
+/// of the same mutating graph coexist in the cache while in-flight batches
+/// drain, and retire independently. `From<u64>` maps a bare graph id to
+/// epoch 0, keeping every single-epoch caller source-compatible.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GraphEpoch {
+    /// Caller-supplied graph identity (the same id keying the
+    /// [`BackpropCache`](crate::cache::BackpropCache)).
+    pub graph: u64,
+    /// Epoch number; bumped by the serving registry on each applied delta.
+    pub epoch: u32,
+}
+
+impl GraphEpoch {
+    /// Key for `(graph, epoch)`.
+    pub fn new(graph: u64, epoch: u32) -> Self {
+        GraphEpoch { graph, epoch }
+    }
+
+    /// This epoch's transpose identity (`Aᵀ` entries; see
+    /// [`KernelWorkspace::transpose_id`]).
+    pub fn transpose(self) -> Self {
+        GraphEpoch { graph: KernelWorkspace::transpose_id(self.graph), epoch: self.epoch }
+    }
+
+    /// This epoch's sorted-CSR permuted-partition identity (see
+    /// [`KernelWorkspace::sorted_partition_id`]).
+    pub fn sorted_partition(self) -> Self {
+        GraphEpoch { graph: KernelWorkspace::sorted_partition_id(self.graph), epoch: self.epoch }
+    }
+}
+
+impl From<u64> for GraphEpoch {
+    fn from(graph: u64) -> Self {
+        GraphEpoch { graph, epoch: 0 }
+    }
+}
+
+impl From<(u64, u32)> for GraphEpoch {
+    fn from((graph, epoch): (u64, u32)) -> Self {
+        GraphEpoch { graph, epoch }
+    }
 }
 
 struct CachedPartition {
@@ -136,11 +191,11 @@ fn csr_fingerprint(a: &Csr) -> u64 {
 
 #[derive(Default)]
 struct Inner {
-    partitions: HashMap<(u64, usize), CachedPartition>,
-    /// Converted sparse formats (SELL-C-σ / sorted CSR), keyed per graph —
-    /// the conversion is O(nnz), so like partitions it must be a per-graph
-    /// cost, not a per-call one. Evicted with the graph.
-    formats: HashMap<(u64, FormatKey), CachedFormat>,
+    partitions: HashMap<(GraphEpoch, usize), CachedPartition>,
+    /// Converted sparse formats (SELL-C-σ / sorted CSR), keyed per graph
+    /// epoch — the conversion is O(nnz), so like partitions it must be a
+    /// per-graph cost, not a per-call one. Evicted with the epoch.
+    formats: HashMap<(GraphEpoch, FormatKey), CachedFormat>,
     /// Retired buffers, binned by [`size_class`] of their capacity. Serving
     /// mixes many sizes (per-graph node counts × per-request widths) in one
     /// shared pool, so `take_buffer` must not scan every buffer per call.
@@ -168,16 +223,22 @@ impl KernelWorkspace {
         graph_id ^ 0x9e37_79b9_7f4a_7c15
     }
 
-    /// NNZ-balanced row ranges for `(graph_id, threads)`, memoised. The
+    /// NNZ-balanced row ranges for `(graph epoch, threads)`, memoised. The
     /// cached entry is validated against the graph's row/nnz counts and
     /// recomputed on mismatch, so a stale or colliding id degrades to a
     /// miss, never to wrong routing.
-    pub fn partition(&self, graph_id: u64, a: &Csr, threads: usize) -> Arc<Vec<RowRange>> {
+    pub fn partition(
+        &self,
+        key: impl Into<GraphEpoch>,
+        a: &Csr,
+        threads: usize,
+    ) -> Arc<Vec<RowRange>> {
+        let key = key.into();
         {
             let mut g = self.inner.lock().unwrap();
             let hit = g
                 .partitions
-                .get(&(graph_id, threads))
+                .get(&(key, threads))
                 .filter(|hit| hit.rows == a.rows && hit.nnz == a.nnz())
                 .map(|hit| Arc::clone(&hit.ranges));
             if let Some(ranges) = hit {
@@ -190,7 +251,7 @@ impl KernelWorkspace {
         let ranges = Arc::new(nnz_balanced_partition(a, threads));
         let mut g = self.inner.lock().unwrap();
         g.partitions.insert(
-            (graph_id, threads),
+            (key, threads),
             CachedPartition { rows: a.rows, nnz: a.nnz(), ranges: Arc::clone(&ranges) },
         );
         ranges
@@ -203,7 +264,7 @@ impl KernelWorkspace {
     /// cannot silently return a different matrix's conversion.
     fn cached_format(
         &self,
-        key: (u64, FormatKey),
+        key: (GraphEpoch, FormatKey),
         a: &Csr,
         convert: impl FnOnce() -> FormatVal,
     ) -> FormatVal {
@@ -223,10 +284,10 @@ impl KernelWorkspace {
         val
     }
 
-    /// The SELL-C-σ conversion of `a` under `(graph_id, c, sigma)`,
+    /// The SELL-C-σ conversion of `a` under `(graph epoch, c, sigma)`,
     /// memoised (O(nnz) conversion runs outside the lock, once per graph).
-    pub fn sell(&self, graph_id: u64, a: &Csr, c: usize, sigma: usize) -> Arc<Sell> {
-        let key = (graph_id, FormatKey::Sell { c, sigma });
+    pub fn sell(&self, key: impl Into<GraphEpoch>, a: &Csr, c: usize, sigma: usize) -> Arc<Sell> {
+        let key = (key.into(), FormatKey::Sell { c, sigma });
         match self.cached_format(key, a, || FormatVal::Sell(Arc::new(Sell::from_csr(a, c, sigma))))
         {
             FormatVal::Sell(s) => s,
@@ -235,10 +296,10 @@ impl KernelWorkspace {
         }
     }
 
-    /// The sorted-CSR conversion of `a` under `graph_id`, memoised — same
-    /// contract as [`KernelWorkspace::sell`].
-    pub fn sorted_csr(&self, graph_id: u64, a: &Csr) -> Arc<SortedCsr> {
-        let key = (graph_id, FormatKey::Sorted);
+    /// The sorted-CSR conversion of `a` under its graph epoch, memoised —
+    /// same contract as [`KernelWorkspace::sell`].
+    pub fn sorted_csr(&self, key: impl Into<GraphEpoch>, a: &Csr) -> Arc<SortedCsr> {
+        let key = (key.into(), FormatKey::Sorted);
         match self.cached_format(key, a, || FormatVal::Sorted(Arc::new(SortedCsr::from_csr(a)))) {
             FormatVal::Sorted(s) => s,
             // the Sorted key only ever maps to a sorted-csr value
@@ -341,27 +402,59 @@ impl KernelWorkspace {
         }
     }
 
-    /// Drop every cached partition **and converted sparse format**
-    /// belonging to `graph_id` — including every derived identity: the
-    /// transpose, the sorted-CSR permuted partition, and the sorted
-    /// partition of the *transpose* (the backward pass routes `Aᵀ` through
-    /// the tuned format too, so training caches entries under
-    /// `sorted_partition_id(transpose_id(g))`; a regression left those
-    /// behind). Serving churns graphs — a closed session must release its
-    /// entries without nuking the other tenants' (whole-pool
-    /// [`KernelWorkspace::clear`] was the only option before). Pooled
-    /// buffers — including the fused sorted-CSR scatter scratch — are
-    /// graph-agnostic and survive eviction. Returns the number of entries
-    /// removed (partitions + formats).
-    pub fn evict(&self, graph_id: u64) -> usize {
+    /// The four identities one graph's entries may live under: the caller
+    /// id, its transpose, and the sorted-CSR permuted partitions of both
+    /// (the backward pass routes `Aᵀ` through the tuned format too, so
+    /// training caches entries under `sorted_partition_id(transpose_id(g))`;
+    /// a regression left those behind).
+    fn derived_ids(graph_id: u64) -> [u64; 4] {
         let tid = Self::transpose_id(graph_id);
-        let sid = Self::sorted_partition_id(graph_id);
-        let stid = Self::sorted_partition_id(tid);
+        [graph_id, tid, Self::sorted_partition_id(graph_id), Self::sorted_partition_id(tid)]
+    }
+
+    /// Drop every cached partition **and converted sparse format**
+    /// belonging to one epoch of `key.graph` — including every derived
+    /// identity (see [`Self::derived_ids`]). Serving churns graphs — a
+    /// closed session must release its entries without nuking the other
+    /// tenants' (whole-pool [`KernelWorkspace::clear`] was the only option
+    /// before), and a mutating session must release a *retired epoch's*
+    /// entries without touching the live epoch's. Pooled buffers —
+    /// including the fused sorted-CSR scatter scratch — are graph-agnostic
+    /// and survive eviction. Returns the number of entries removed
+    /// (partitions + formats). A bare `u64` evicts epoch 0.
+    pub fn evict(&self, key: impl Into<GraphEpoch>) -> usize {
+        let key = key.into();
+        let ids = Self::derived_ids(key.graph);
         let mut g = self.inner.lock().unwrap();
         let before = g.partitions.len() + g.formats.len();
-        g.partitions
-            .retain(|&(id, _), _| id != graph_id && id != tid && id != sid && id != stid);
-        g.formats.retain(|&(id, _), _| id != graph_id && id != tid);
+        g.partitions.retain(|&(k, _), _| k.epoch != key.epoch || !ids.contains(&k.graph));
+        g.formats.retain(|&(k, _), _| k.epoch != key.epoch || !ids.contains(&k.graph));
+        before - g.partitions.len() - g.formats.len()
+    }
+
+    /// Drop every cached entry of `graph_id` (all derived identities)
+    /// whose epoch is **not** `keep` — the retirement path: once the last
+    /// in-flight reference to an old epoch retires, the serving registry
+    /// calls this to release that epoch's partitions and conversions while
+    /// the current epoch's stay hot. Returns the number of entries removed.
+    pub fn evict_stale_epochs(&self, graph_id: u64, keep: u32) -> usize {
+        let ids = Self::derived_ids(graph_id);
+        let mut g = self.inner.lock().unwrap();
+        let before = g.partitions.len() + g.formats.len();
+        g.partitions.retain(|&(k, _), _| k.epoch == keep || !ids.contains(&k.graph));
+        g.formats.retain(|&(k, _), _| k.epoch == keep || !ids.contains(&k.graph));
+        before - g.partitions.len() - g.formats.len()
+    }
+
+    /// Drop every cached entry of `graph_id` across **all** epochs — the
+    /// session-close and quarantine path, where the whole tenant leaves at
+    /// once. Returns the number of entries removed.
+    pub fn evict_all_epochs(&self, graph_id: u64) -> usize {
+        let ids = Self::derived_ids(graph_id);
+        let mut g = self.inner.lock().unwrap();
+        let before = g.partitions.len() + g.formats.len();
+        g.partitions.retain(|&(k, _), _| !ids.contains(&k.graph));
+        g.formats.retain(|&(k, _), _| !ids.contains(&k.graph));
         before - g.partitions.len() - g.formats.len()
     }
 
@@ -441,8 +534,8 @@ mod tests {
     fn partition_second_lookup_hits_and_matches_direct() {
         let ws = KernelWorkspace::new();
         let a = graph(40);
-        let r1 = ws.partition(7, &a, 4);
-        let r2 = ws.partition(7, &a, 4);
+        let r1 = ws.partition(7u64, &a, 4);
+        let r2 = ws.partition(7u64, &a, 4);
         assert_eq!(*r1, nnz_balanced_partition(&a, 4));
         assert_eq!(*r1, *r2);
         let s = ws.stats();
@@ -454,8 +547,8 @@ mod tests {
     fn partition_keys_on_threads_and_id() {
         let ws = KernelWorkspace::new();
         let a = graph(40);
-        ws.partition(7, &a, 2);
-        ws.partition(7, &a, 4); // different thread count → new entry
+        ws.partition(7u64, &a, 2);
+        ws.partition(7u64, &a, 4); // different thread count → new entry
         ws.partition(KernelWorkspace::transpose_id(7), &a, 2); // transpose id → new entry
         assert_eq!(ws.stats().partition_misses, 3);
         assert_ne!(KernelWorkspace::transpose_id(7), 7);
@@ -466,9 +559,9 @@ mod tests {
         let ws = KernelWorkspace::new();
         let small = graph(10);
         let big = graph(20);
-        ws.partition(1, &small, 2);
+        ws.partition(1u64, &small, 2);
         // same id, different graph: must recompute, and must be correct
-        let ranges = ws.partition(1, &big, 2);
+        let ranges = ws.partition(1u64, &big, 2);
         assert_eq!(*ranges, nnz_balanced_partition(&big, 2));
         assert_eq!(ws.stats().partition_misses, 2);
     }
@@ -509,25 +602,25 @@ mod tests {
     fn evict_removes_one_graph_only() {
         let ws = KernelWorkspace::new();
         let a = graph(16);
-        ws.partition(1, &a, 2);
-        ws.partition(1, &a, 4);
+        ws.partition(1u64, &a, 2);
+        ws.partition(1u64, &a, 4);
         ws.partition(KernelWorkspace::transpose_id(1), &a, 2);
-        ws.partition(2, &a, 2);
+        ws.partition(2u64, &a, 2);
         ws.recycle(vec![0.0; 64]);
         assert_eq!(ws.cached_partitions(), 4);
         // graph 1 and its transpose identity go; graph 2 survives
-        assert_eq!(ws.evict(1), 3);
+        assert_eq!(ws.evict(1u64), 3);
         assert_eq!(ws.cached_partitions(), 1);
         // buffers are graph-agnostic: eviction leaves the pool alone
         assert_eq!(ws.pooled_buffers(), 1);
         // graph 2 still hits; graph 1 recomputes
         let misses = ws.stats().partition_misses;
-        ws.partition(2, &a, 2);
+        ws.partition(2u64, &a, 2);
         assert_eq!(ws.stats().partition_misses, misses);
-        ws.partition(1, &a, 2);
+        ws.partition(1u64, &a, 2);
         assert_eq!(ws.stats().partition_misses, misses + 1);
         // evicting an unknown graph is a no-op
-        assert_eq!(ws.evict(999), 0);
+        assert_eq!(ws.evict(999u64), 0);
     }
 
     /// Regression: eviction must leave ZERO per-graph entries — including
@@ -550,8 +643,8 @@ mod tests {
         ws.sorted_csr(gid, &a);
         ws.sorted_csr(tid, &a);
         // an unrelated tenant that must survive
-        ws.partition(99, &a, 2);
-        ws.sell(99, &a, 4, 8);
+        ws.partition(99u64, &a, 2);
+        ws.sell(99u64, &a, 4, 8);
         assert_eq!(ws.cached_partitions(), 5);
         assert_eq!(ws.cached_formats(), 4);
         assert_eq!(ws.evict(gid), 7, "4 partitions + 3 formats");
@@ -561,6 +654,70 @@ mod tests {
         let misses = ws.stats().partition_misses;
         ws.partition(KernelWorkspace::sorted_partition_id(tid), &a, 2);
         assert_eq!(ws.stats().partition_misses, misses + 1);
+    }
+
+    /// Regression (extends `evict_drops_every_derived_identity` to the
+    /// epoch axis): after an old epoch retires, ZERO of its entries may
+    /// survive — across every derived identity — while the live epoch's
+    /// entries and other tenants' stay untouched.
+    #[test]
+    fn evict_stale_epochs_drops_retired_epoch_completely() {
+        let ws = KernelWorkspace::new();
+        let a = graph(24);
+        let b = graph(30); // the "mutated" next-epoch matrix
+        let gid = 11u64;
+        let e0 = GraphEpoch::new(gid, 0);
+        let e1 = GraphEpoch::new(gid, 1);
+        // epoch 0: everything a format-tuned serve cycle caches
+        ws.partition(e0, &a, 2);
+        ws.partition(e0.transpose(), &a, 2);
+        ws.partition(e0.sorted_partition(), &a, 2);
+        ws.partition(e0.transpose().sorted_partition(), &a, 2);
+        ws.sell(e0, &a, 4, 8);
+        ws.sorted_csr(e0, &a);
+        ws.sorted_csr(e0.transpose(), &a);
+        // epoch 1 of the same graph, plus an unrelated tenant
+        ws.partition(e1, &b, 2);
+        ws.partition(e1.sorted_partition(), &b, 2);
+        ws.sell(e1, &b, 4, 8);
+        ws.partition(99u64, &a, 2);
+        ws.sell(99u64, &a, 4, 8);
+        assert_eq!(ws.cached_partitions(), 7);
+        assert_eq!(ws.cached_formats(), 5);
+        // retire everything but epoch 1
+        assert_eq!(ws.evict_stale_epochs(gid, 1), 7, "4 partitions + 3 formats of epoch 0");
+        assert_eq!(ws.cached_partitions(), 3, "epoch 1 (2) + tenant 99 (1) survive");
+        assert_eq!(ws.cached_formats(), 2, "epoch 1 (1) + tenant 99 (1) survive");
+        // the live epoch still hits; the retired epoch misses again
+        let (hits, misses) = {
+            let s = ws.stats();
+            (s.partition_hits, s.partition_misses)
+        };
+        ws.partition(e1, &b, 2);
+        assert_eq!(ws.stats().partition_hits, hits + 1);
+        ws.partition(e0, &a, 2);
+        assert_eq!(ws.stats().partition_misses, misses + 1);
+        // session close drops every epoch at once; tenant 99 survives
+        assert!(ws.evict_all_epochs(gid) >= 4);
+        assert_eq!(ws.cached_partitions(), 1);
+        assert_eq!(ws.cached_formats(), 1);
+        assert_eq!(ws.evict_all_epochs(gid), 0, "idempotent");
+    }
+
+    #[test]
+    fn epoch_keys_are_distinct_cache_entries() {
+        let ws = KernelWorkspace::new();
+        let a = graph(16);
+        ws.partition(GraphEpoch::new(3, 0), &a, 2);
+        ws.partition(GraphEpoch::new(3, 1), &a, 2); // same graph, new epoch → new entry
+        assert_eq!(ws.stats().partition_misses, 2);
+        // bare u64 is epoch 0 — hits the epoch-0 entry
+        ws.partition(3u64, &a, 2);
+        assert_eq!(ws.stats().partition_hits, 1);
+        // evict is epoch-scoped: dropping epoch 0 leaves epoch 1 hot
+        assert_eq!(ws.evict(3u64), 1);
+        ws.partition(GraphEpoch::new(3, 1), &a, 2);
+        assert_eq!(ws.stats().partition_hits, 2);
     }
 
     #[test]
@@ -601,28 +758,28 @@ mod tests {
     fn format_cache_hits_validates_and_evicts() {
         let ws = KernelWorkspace::new();
         let a = graph(24);
-        let s1 = ws.sell(5, &a, 4, 16);
-        let s2 = ws.sell(5, &a, 4, 16);
+        let s1 = ws.sell(5u64, &a, 4, 16);
+        let s2 = ws.sell(5u64, &a, 4, 16);
         assert!(Arc::ptr_eq(&s1, &s2), "second lookup must be the cached Arc");
         assert_eq!(ws.stats().format_misses, 1);
         assert_eq!(ws.stats().format_hits, 1);
         // different params → distinct entry
-        let _ = ws.sell(5, &a, 8, 16);
-        let _ = ws.sorted_csr(5, &a);
+        let _ = ws.sell(5u64, &a, 8, 16);
+        let _ = ws.sorted_csr(5u64, &a);
         assert_eq!(ws.cached_formats(), 3);
         assert_eq!(ws.stats().format_misses, 3);
         // same id, different graph: fingerprint mismatch recomputes
         let b = graph(30);
-        let sb = ws.sell(5, &b, 4, 16);
+        let sb = ws.sell(5u64, &b, 4, 16);
         assert_eq!(sb.rows, 30);
         assert_eq!(ws.stats().format_misses, 4);
         // eviction drops this graph's formats (and partitions) only
-        ws.partition(5, &b, 2);
-        ws.sorted_csr(6, &b);
-        let evicted = ws.evict(5);
+        ws.partition(5u64, &b, 2);
+        ws.sorted_csr(6u64, &b);
+        let evicted = ws.evict(5u64);
         assert_eq!(evicted, 4); // 3 formats + 1 partition
         assert_eq!(ws.cached_formats(), 1); // graph 6 survives
-        assert_eq!(ws.evict(6), 1);
+        assert_eq!(ws.evict(6u64), 1);
         assert_eq!(ws.cached_formats(), 0);
     }
 
@@ -630,8 +787,8 @@ mod tests {
     fn cached_sell_and_sorted_roundtrip_the_graph() {
         let ws = KernelWorkspace::new();
         let a = graph(20);
-        assert_eq!(ws.sell(1, &a, 4, 8).to_csr(), a);
-        assert_eq!(ws.sorted_csr(1, &a).to_csr(), a);
+        assert_eq!(ws.sell(1u64, &a, 4, 8).to_csr(), a);
+        assert_eq!(ws.sorted_csr(1u64, &a).to_csr(), a);
     }
 
     #[test]
@@ -652,12 +809,12 @@ mod tests {
         assert_eq!((a.rows, a.nnz()), (b.rows, b.nnz()));
         assert_ne!(a, b);
         let ws = KernelWorkspace::new();
-        assert_eq!(ws.sell(1, &a, 4, 8).to_csr(), a);
+        assert_eq!(ws.sell(1u64, &a, 4, 8).to_csr(), a);
         // same id, same shape, different matrix: must recompute B's
-        assert_eq!(ws.sell(1, &b, 4, 8).to_csr(), b);
+        assert_eq!(ws.sell(1u64, &b, 4, 8).to_csr(), b);
         assert_eq!(ws.stats().format_misses, 2);
-        assert_eq!(ws.sorted_csr(1, &a).to_csr(), a);
-        assert_eq!(ws.sorted_csr(1, &b).to_csr(), b);
+        assert_eq!(ws.sorted_csr(1u64, &a).to_csr(), a);
+        assert_eq!(ws.sorted_csr(1u64, &b).to_csr(), b);
         assert_eq!(ws.stats().format_misses, 4);
     }
 
@@ -665,8 +822,8 @@ mod tests {
     fn clear_resets_everything() {
         let ws = KernelWorkspace::new();
         let a = graph(12);
-        ws.partition(3, &a, 2);
-        ws.sell(3, &a, 4, 8);
+        ws.partition(3u64, &a, 2);
+        ws.sell(3u64, &a, 4, 8);
         ws.recycle(vec![0.0; 16]);
         ws.clear();
         assert_eq!(ws.stats(), WorkspaceStats::default());
@@ -711,7 +868,7 @@ mod chaos_tests {
             // clean reference pass — the sorted-CSR parallel path both
             // takes AND recycles a pooled scratch inside the call, which
             // is exactly where the fault will land
-            let wsref = Some((&ws, gid));
+            let wsref = Some((&ws, gid.into()));
             let y0 =
                 spmm_with_workspace(&a, &x, Semiring::Sum, KernelChoice::SortedCsr, threads, wsref)
                     .unwrap();

@@ -49,6 +49,12 @@ COMMANDS:
              [--max-wait-ms 5] [--threads 2] [--session-threads 0]
              [--epochs 3] [--hidden 16]
              [--scale 2048] [--out BENCH_serving.json] [--json]
+             --churn drives a live-mutation phase on the flooded session:
+             edge deltas and model hot-swaps interleave with serving, and
+             every completion is verified bitwise against its
+             admission-stamp reference (infer_at). Results land in the
+             JSON under \"churn\".
+             [--churn] [--delta-rate 8] [--swap-every 3] [--staleness 0.25]
 
 GLOBAL FLAGS:
   --trace <path>   Write a Perfetto/Chrome trace-event JSON of the whole
@@ -280,6 +286,9 @@ fn serve_bench(args: &Args) -> Result<()> {
         } else {
             args.get_parse("deadline-ms", 0u64)?
         }),
+        // staleness threshold of the delta re-tuning policy (only
+        // consulted by the --churn phase's apply_delta calls)
+        staleness: args.get_parse("staleness", 0.25f64)?,
         ..ServeConfig::default()
     };
     let out_path = args.get("out", "BENCH_serving.json");
@@ -530,7 +539,115 @@ fn serve_bench(args: &Args) -> Result<()> {
         );
     }
 
-    // eviction demo: churn the last session out of the shared workspace
+    // --- optional churn phase: live mutation under load -------------------
+    // --churn keeps serving the flooded session while edge deltas and
+    // model hot-swaps land between passes. Every completion is verified
+    // bitwise against the sequential reference AT ITS ADMISSION STAMP
+    // (infer_at) — the acceptance criterion for epoch-versioned serving.
+    let churn = args.has("churn");
+    let churn_json = if churn {
+        use std::collections::HashMap;
+        let delta_rate = args.get_parse("delta-rate", 8usize)?.max(1);
+        let swap_every = args.get_parse("swap-every", 3usize)?.max(1);
+        let target = sids[0];
+        let (ds0, model0, _) = &trained[0];
+        let dims0 = ModelParams { in_dim: ds0.feature_dim(), hidden, classes: ds0.num_classes };
+        let (n0, f0) = (ds0.adj.rows, ds0.feature_dim());
+        let mut expect: HashMap<u64, Vec<f32>> = HashMap::new();
+        let mut churn_done = Vec::new();
+        let mut deltas_applied = 0u64;
+        let mut refreshes = 0u64;
+        let mut swaps = 0u64;
+        let mut churn_rejected = 0usize;
+        let t_churn = Instant::now();
+        for i in 0..requests {
+            let x = Dense::uniform(n0, f0, 1.0, &mut rng);
+            match server.submit(target, x.clone()) {
+                Ok(rid) => {
+                    let s = server.session(target)?;
+                    let (e, v) = (s.epoch(), s.model_version());
+                    expect.insert(rid, server.infer_at(target, e, v, &x)?.data);
+                }
+                Err(e @ Error::Overloaded { .. }) if overload => {
+                    debug_assert!(e.is_retryable());
+                    churn_rejected += 1;
+                }
+                Err(e) => return Err(e),
+            }
+            if (i + 1) % delta_rate == 0 {
+                // a symmetric insert/upsert pair is always a valid delta
+                let r = rng.gen_range(n0);
+                let c = (r + 1 + rng.gen_range(n0 - 2)) % n0;
+                let w = rng.gen_range_f32(0.1, 1.0);
+                let delta = isplib::sparse::EdgeDelta::new().add(r, c, w).add(c, r, w);
+                let out = server.apply_delta(target, &delta, Some((&tuner, &db)))?;
+                deltas_applied += 1;
+                refreshes += out.refreshed as u64;
+                if deltas_applied % swap_every as u64 == 0 {
+                    server.swap_model(target, model0.init_params(dims0, 1000 + deltas_applied))?;
+                    swaps += 1;
+                }
+            }
+            churn_done.extend(server.run_ready()?);
+        }
+        while server.pending() > 0 {
+            churn_done.extend(server.run_ready()?);
+            if server.pending() > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+        }
+        let churn_wall = t_churn.elapsed().as_secs_f64();
+        // bitwise acceptance at the admission stamp — served or typed-shed
+        let mut churn_verified = 0usize;
+        for c in &churn_done {
+            match (&c.outcome, overload) {
+                (Ok(out), _) => {
+                    if out.data != expect[&c.id] {
+                        return Err(Error::Runtime(format!(
+                            "serve-bench --churn: request {} diverged from its \
+                             admission-stamp (epoch, version) reference",
+                            c.id
+                        )));
+                    }
+                    churn_verified += 1;
+                }
+                (Err(Error::DeadlineExceeded(_)), true) => {}
+                (Err(e), _) => {
+                    return Err(Error::Runtime(format!(
+                        "serve-bench --churn: request {} terminated {e}",
+                        c.id
+                    )))
+                }
+            }
+        }
+        let s = server.session(target)?;
+        println!(
+            "  churn: {churn_verified} requests verified bitwise at their admission stamp \
+             across {deltas_applied} deltas ({refreshes} format refreshes) + {swaps} \
+             hot-swaps; final epoch={} version={} live_epochs={} ({churn_wall:.3}s)",
+            s.epoch(),
+            s.model_version(),
+            s.live_epochs()
+        );
+        Json::obj(vec![
+            ("enabled", Json::bool(true)),
+            ("requests", Json::num(requests as f64)),
+            ("verified_bitwise", Json::num(churn_verified as f64)),
+            ("rejected_submits", Json::num(churn_rejected as f64)),
+            ("deltas", Json::num(deltas_applied as f64)),
+            ("format_refreshes", Json::num(refreshes as f64)),
+            ("swaps", Json::num(swaps as f64)),
+            ("final_epoch", Json::num(s.epoch() as f64)),
+            ("final_model_version", Json::num(s.model_version() as f64)),
+            ("live_epochs", Json::num(s.live_epochs() as f64)),
+            ("staleness", Json::num(cfg.staleness)),
+            ("wall_secs", Json::num(churn_wall)),
+        ])
+    } else {
+        Json::obj(vec![("enabled", Json::bool(false))])
+    };
+
+    // eviction demo: close the last session out of the shared workspace
     let last = *sids.last().unwrap();
     let evicted = server.close_session(last)?.evicted;
     println!(
@@ -555,10 +672,12 @@ fn serve_bench(args: &Args) -> Result<()> {
                 ("overload", Json::bool(overload)),
                 ("queue_cap", Json::num(cfg.queue_cap as f64)),
                 ("deadline_ms", Json::num(cfg.default_deadline.as_secs_f64() * 1e3)),
+                ("staleness", Json::num(cfg.staleness)),
             ]),
         ),
         ("sessions", Json::Arr(sessions_json)),
         ("fairness", Json::obj(vec![("p99_spread", Json::num(spread))])),
+        ("churn", churn_json),
         (
             "overload",
             Json::obj(vec![

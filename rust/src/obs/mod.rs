@@ -33,6 +33,11 @@
 //! pool.jobs_executed                 counter
 //! pool.worker.busy_ns{worker=3}      gauge
 //! serve.queue_depth{session=reddit}  gauge
+//! serve.epoch{session=reddit}        gauge  (graph epoch after deltas)
+//! serve.staleness_drift{session=reddit}
+//!                                    gauge  (row-stats drift since last
+//!                                            format refresh)
+//! serve.swaps                        counter (model hot-swaps committed)
 //! op.spmm{fmt=sell(c=4,s=32),k=32,kernel=sell(c=4,s=32),threads=2}
 //!                                    histogram (per-op aggregate)
 //! ```

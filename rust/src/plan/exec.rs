@@ -157,7 +157,7 @@ fn spmm_call(operand: &SpmmOperand, x: &Dense, threads: usize) -> Result<Dense> 
     match operand.impl_kind {
         SpmmImpl::Kernel => {
             let choice = KernelRegistry::global().resolve(&operand.context, x.cols, Semiring::Sum);
-            let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_id));
+            let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_key()));
             spmm_with_workspace(&operand.a, x, Semiring::Sum, choice, threads, ws)
         }
         SpmmImpl::EdgeWise => operand.edgewise_forward(x),
@@ -183,7 +183,7 @@ fn fused_call(
             // both aggregation families of a faulted session
             crate::util::failpoints::check("kernels.spmm", &operand.context)?;
             let choice = KernelRegistry::global().resolve(&operand.context, x.cols, Semiring::Sum);
-            let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_id));
+            let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_key()));
             spmm_fused_relu_with_workspace(&operand.a, x, bias, choice, threads, ws)
         }
         _ => {

@@ -51,6 +51,14 @@ pub struct InferenceRequest {
     /// [`ExecutionPlan::estimated_flops`](crate::plan::ExecutionPlan::estimated_flops).
     /// Admission control sums these per queue.
     pub cost_flops: f64,
+    /// Graph epoch the request was admitted against. The scheduler
+    /// resolves the batch's plan/operand at this stamp, so a request
+    /// admitted before an edge delta executes against exactly the
+    /// structure it was admitted under.
+    pub epoch: u32,
+    /// Model version the request was admitted against (same contract as
+    /// `epoch`, for parameter hot-swaps).
+    pub model_version: u32,
 }
 
 /// A finished request: the typed outcome plus the measured latency.
@@ -122,9 +130,24 @@ impl SessionQueue {
         self.queued_flops
     }
 
-    /// Pop up to `max` requests, oldest first — one micro-batch.
+    /// Pop up to `max` requests, oldest first — one micro-batch. The
+    /// batch is cut at the first `(epoch, model_version)` stamp change:
+    /// a coalesced batch must execute against exactly one graph epoch and
+    /// one parameter set, and stamps are monotone in queue order (they
+    /// are assigned at admission), so the longest uniform prefix is still
+    /// FIFO. Requests behind the boundary ride the next batch.
     pub fn drain_batch(&mut self, max: usize) -> Vec<InferenceRequest> {
-        let n = self.q.len().min(max);
+        let n = match self.q.front() {
+            None => 0,
+            Some(front) => {
+                let stamp = (front.epoch, front.model_version);
+                self.q
+                    .iter()
+                    .take(self.q.len().min(max))
+                    .take_while(|r| (r.epoch, r.model_version) == stamp)
+                    .count()
+            }
+        };
         let batch: Vec<_> = self.q.drain(..n).collect();
         self.debit(&batch);
         batch
@@ -183,6 +206,8 @@ mod tests {
             enqueued: Instant::now(),
             deadline: None,
             cost_flops: 100.0,
+            epoch: 0,
+            model_version: 0,
         }
     }
 
@@ -224,6 +249,29 @@ mod tests {
         assert_eq!(q.queued_flops(), 300.0);
         let live = q.drain_batch(6);
         assert_eq!(live.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn drain_batch_cuts_at_stamp_boundaries() {
+        let mut q = SessionQueue::default();
+        // ids 0-1 on (epoch 0, v0), 2-3 on (epoch 1, v0), 4 on (epoch 1, v1)
+        for i in 0..5u64 {
+            let mut r = req(i);
+            r.epoch = if i < 2 { 0 } else { 1 };
+            r.model_version = if i < 4 { 0 } else { 1 };
+            q.push(r);
+        }
+        // a generous max still stops at the epoch flip
+        let b = q.drain_batch(10);
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert!(b.iter().all(|r| (r.epoch, r.model_version) == (0, 0)));
+        // next batch is the (1, 0) run, cut at the version flip
+        let b = q.drain_batch(10);
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        let b = q.drain_batch(10);
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
+        assert!(q.is_empty());
+        assert_eq!(q.queued_flops(), 0.0);
     }
 
     #[test]

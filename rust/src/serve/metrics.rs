@@ -37,6 +37,16 @@ pub struct SessionMetrics {
     pub closed_drained: u64,
     /// Times this session's circuit breaker tripped into quarantine.
     pub quarantine_trips: u64,
+    /// Edge deltas committed (each bumped the graph epoch).
+    pub deltas_applied: u64,
+    /// Deltas whose staleness drift crossed the threshold and re-consulted
+    /// the tuner / re-converted formats for the new epoch.
+    pub format_refreshes: u64,
+    /// Model hot-swaps committed (each bumped the model version).
+    pub swaps: u64,
+    /// Hot-swaps rejected before the flip (shape mismatch or injected
+    /// fault) — the old model kept serving.
+    pub swaps_rejected: u64,
     /// Per-request latency in nanoseconds (enqueue → completion),
     /// log2-bucketed over the session's whole lifetime.
     latencies_ns: Log2Hist,
@@ -114,6 +124,10 @@ impl SessionMetrics {
             ("rejected", Json::num(self.rejected as f64)),
             ("closed_drained", Json::num(self.closed_drained as f64)),
             ("quarantine_trips", Json::num(self.quarantine_trips as f64)),
+            ("deltas_applied", Json::num(self.deltas_applied as f64)),
+            ("format_refreshes", Json::num(self.format_refreshes as f64)),
+            ("swaps", Json::num(self.swaps as f64)),
+            ("swaps_rejected", Json::num(self.swaps_rejected as f64)),
         ])
     }
 }
@@ -171,12 +185,20 @@ mod tests {
         m.rejected = 5;
         m.closed_drained = 1;
         m.quarantine_trips = 1;
+        m.deltas_applied = 4;
+        m.format_refreshes = 2;
+        m.swaps = 3;
+        m.swaps_rejected = 1;
         let json = m.to_json();
         assert_eq!(json.get("shed_deadline").unwrap().as_f64().unwrap(), 3.0);
         assert_eq!(json.get("failed").unwrap().as_f64().unwrap(), 2.0);
         assert_eq!(json.get("rejected").unwrap().as_f64().unwrap(), 5.0);
         assert_eq!(json.get("closed_drained").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(json.get("quarantine_trips").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(json.get("deltas_applied").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(json.get("format_refreshes").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(json.get("swaps").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(json.get("swaps_rejected").unwrap().as_f64().unwrap(), 1.0);
     }
 
     #[test]

@@ -92,13 +92,61 @@
 //!   [`SessionRegistry::register`] runs the full
 //!   [`Csr::validate`](crate::sparse::Csr::validate) — structure *and*
 //!   finite values — so a NaN/Inf-weighted adjacency is rejected once at
-//!   registration instead of poisoning every request.
+//!   registration instead of poisoning every request. Edge deltas cross
+//!   the same boundary: [`Csr::apply_edge_delta`](crate::sparse::Csr::apply_edge_delta)
+//!   bounds/finiteness-checks every insert and delete before building
+//!   anything, so a malformed mutation degrades to `InvalidSparse`
+//!   instead of a corrupt epoch.
+//!
+//! # Live mutation & hot-swap
+//!
+//! Sessions are **not** frozen forever: two mutation paths change a live
+//! session without dropping, corrupting, or stalling a single request.
+//!
+//! * **Graph deltas** ([`InferenceServer::apply_delta`], [`EdgeDelta`]) —
+//!   a batch of edge inserts/deletes builds the next **graph epoch**'s
+//!   CSR off to the side (validation → re-normalisation → format
+//!   conversion) and flips the session at a single commit point; any
+//!   error leaves the old epoch serving bit-for-bit untouched. Every
+//!   request is stamped `(epoch, model_version)` at admission, the
+//!   batcher cuts batches at stamp boundaries, and the scheduler resolves
+//!   each batch's plan/operand/params *at its stamp* — so in-flight and
+//!   queued work finishes on the structure it was admitted under.
+//!   Old-epoch workspace entries (partitions, converted formats) are
+//!   refcounted by admission and evicted only when the last in-flight
+//!   reference releases, never mid-batch.
+//! * **Staleness policy** (`ServeConfig.staleness`) — each delta measures
+//!   row-length-stats drift
+//!   ([`Csr::row_len_stats`](crate::sparse::Csr::row_len_stats)) against
+//!   the last-tuned reference; only drift at/above the threshold
+//!   re-consults the tuner's warm start and re-converts formats
+//!   ([`DeltaOutcome::refreshed`]). Below it, the previous tuning
+//!   decision carries over — the carried formats are still
+//!   re-materialised for the new epoch off the request path, so the hot
+//!   path never converts.
+//! * **Model hot-swap** ([`InferenceServer::swap_model`]) — a new
+//!   [`ParamSet`](crate::gnn::ParamSet) is shape-validated against the
+//!   session's lowered plan *before* the flip; failures (and injected
+//!   faults) return typed
+//!   [`Error::SwapRejected`](crate::error::Error::SwapRejected) with the
+//!   old model untouched. The flip is atomic at the scheduling boundary:
+//!   every batch executes against exactly one coherent param set — its
+//!   admission-time version — never a torn mix.
+//!
+//! The chaos suite drives both paths with injected faults at the
+//! `serve.apply_delta` / `serve.hot_swap` failpoints, and
+//! `tests/mutation_integration.rs` property-checks random interleavings
+//! of deltas, swaps, and requests for bitwise equality against each
+//! request's admission-stamp reference ([`InferenceServer::infer_at`]).
 //!
 //! All of this is observable per session: [`SessionMetrics`] counts
 //! `shed_deadline`, `failed`, `rejected`, `closed_drained`, and
-//! `quarantine_trips` alongside the latency percentiles. The
-//! deterministic fault-injection harness behind the failure-path tests
-//! lives in [`crate::util::failpoints`] (compiled to no-ops unless the
+//! `quarantine_trips` — plus `deltas_applied`, `format_refreshes`,
+//! `swaps`, and `swaps_rejected` for the mutation paths — alongside the
+//! latency percentiles, and the obs registry carries per-session
+//! `serve.epoch` / `serve.staleness_drift` gauges. The deterministic
+//! fault-injection harness behind the failure-path tests lives in
+//! [`crate::util::failpoints`] (compiled to no-ops unless the
 //! `failpoints` feature is on).
 
 mod batch;
@@ -117,4 +165,7 @@ pub use crate::dense::{concat_cols, concat_cols_into, split_cols, split_cols_int
 pub use forward::{infer_batched, infer_one};
 pub use metrics::{fairness_spread, SessionMetrics};
 pub use scheduler::{CloseOutcome, InferenceServer, ServeConfig};
-pub use session::{ServeSession, SessionId, SessionRegistry};
+pub use session::{DeltaOutcome, ServeSession, SessionId, SessionRegistry};
+// re-exported so serving clients build mutation batches without reaching
+// into the sparse module
+pub use crate::sparse::EdgeDelta;

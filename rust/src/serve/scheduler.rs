@@ -36,6 +36,14 @@
 //!   for all); expired work is shed *before* batch formation as
 //!   [`Error::DeadlineExceeded`] completions, never burning a kernel call,
 //!   and DRR deficits are untouched.
+//!
+//! Sessions are additionally **mutable while serving**
+//! ([`InferenceServer::apply_delta`], [`InferenceServer::swap_model`]):
+//! every request is stamped with the session's `(epoch, model_version)`
+//! pair at admission, batches are cut at stamp boundaries, and
+//! `run_batch` resolves the plan/operand/params at the batch's stamp — so
+//! a mutation never changes what an already-admitted request computes.
+//! See [`super::session`] for the epoch/version retention contract.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
@@ -47,14 +55,14 @@ use crate::error::{Error, Result};
 use crate::gnn::{GnnModel, ModelParams, ParamSet};
 use crate::kernels::KernelWorkspace;
 use crate::obs::{Counter, Gauge};
-use crate::sparse::Csr;
+use crate::sparse::{Csr, EdgeDelta};
 use crate::util::json::Json;
 
 use super::batch::{CompletedInference, InferenceRequest, SessionQueue};
 use super::breaker::{BreakerState, CircuitBreaker};
 use super::forward::{infer_batched, infer_one};
 use super::metrics::{fairness_spread, SessionMetrics};
-use super::session::{ServeSession, SessionId, SessionRegistry};
+use super::session::{DeltaOutcome, ServeSession, SessionId, SessionRegistry};
 
 /// Serving configuration. Zero values are clamped to their minimum (1)
 /// except `threads`, where 0 means the worker-pool default, and the
@@ -108,6 +116,13 @@ pub struct ServeConfig {
     /// batch is admitted (success re-opens the session, failure
     /// re-quarantines). Clamped to at least 1 pass.
     pub probation_passes: usize,
+    /// Staleness threshold of the delta re-tuning policy: an
+    /// [`InferenceServer::apply_delta`] whose row-length-stats drift
+    /// (relative change of mean/p99/max) reaches this re-consults the
+    /// tuner and re-converts formats for the new epoch; below it, the
+    /// previous tuning decision carries over. `0.0` refreshes on every
+    /// delta.
+    pub staleness: f64,
 }
 
 impl Default for ServeConfig {
@@ -123,6 +138,7 @@ impl Default for ServeConfig {
             default_deadline: Duration::ZERO,
             quarantine_after: 3,
             probation_passes: 2,
+            staleness: 0.25,
         }
     }
 }
@@ -150,6 +166,10 @@ struct ServeObs {
     closed_drained: Arc<Counter>,
     batches: Arc<Counter>,
     requests: Arc<Counter>,
+    deltas: Arc<Counter>,
+    format_refreshes: Arc<Counter>,
+    swaps: Arc<Counter>,
+    swaps_rejected: Arc<Counter>,
     open_sessions: Arc<Gauge>,
 }
 
@@ -164,6 +184,10 @@ impl ServeObs {
             closed_drained: reg.counter("serve.closed_drained"),
             batches: reg.counter("serve.batches"),
             requests: reg.counter("serve.requests"),
+            deltas: reg.counter("serve.deltas"),
+            format_refreshes: reg.counter("serve.format_refreshes"),
+            swaps: reg.counter("serve.swaps"),
+            swaps_rejected: reg.counter("serve.swaps_rejected"),
             open_sessions: reg.gauge("serve.open_sessions"),
         }
     }
@@ -175,6 +199,8 @@ struct SessionGauges {
     queue_depth: Arc<Gauge>,
     queued_flops: Arc<Gauge>,
     breaker_state: Arc<Gauge>,
+    epoch: Arc<Gauge>,
+    staleness_drift: Arc<Gauge>,
 }
 
 impl SessionGauges {
@@ -184,6 +210,8 @@ impl SessionGauges {
             queue_depth: reg.gauge(&format!("serve.queue_depth{{session={name}}}")),
             queued_flops: reg.gauge(&format!("serve.queued_flops{{session={name}}}")),
             breaker_state: reg.gauge(&format!("serve.breaker_state{{session={name}}}")),
+            epoch: reg.gauge(&format!("serve.epoch{{session={name}}}")),
+            staleness_drift: reg.gauge(&format!("serve.staleness_drift{{session={name}}}")),
         }
     }
 }
@@ -377,6 +405,9 @@ impl InferenceServer {
             (self.cfg.default_deadline > Duration::ZERO)
                 .then(|| Instant::now() + self.cfg.default_deadline)
         });
+        // admission stamp: pin the current (epoch, model_version) pair so
+        // later deltas/swaps cannot change what this request computes
+        let (epoch, model_version) = self.registry.admit(id)?;
         let rid = self.next_request;
         self.next_request += 1;
         self.queues[id.0].push(InferenceRequest {
@@ -386,6 +417,8 @@ impl InferenceServer {
             enqueued: Instant::now(),
             deadline,
             cost_flops,
+            epoch,
+            model_version,
         });
         Ok(rid)
     }
@@ -414,6 +447,100 @@ impl InferenceServer {
         Self::validate_features(session, features)?;
         let threads = self.session_threads(id);
         infer_one(session.plan(), session.operand(), session.params(), features, threads)
+    }
+
+    /// [`InferenceServer::infer_now`] against an explicit admission stamp:
+    /// the sequential reference for a request admitted at `(epoch,
+    /// model_version)`. Resolvable for the current stamp and for any
+    /// retired stamp still pinned by in-flight work; a fully retired
+    /// stamp is [`Error::UnknownName`].
+    pub fn infer_at(
+        &self,
+        id: SessionId,
+        epoch: u32,
+        model_version: u32,
+        features: &Dense,
+    ) -> Result<Dense> {
+        let session = self.registry.get(id)?;
+        Self::validate_features(session, features)?;
+        let (plan, operand) = session.epoch_state(epoch).ok_or_else(|| {
+            Error::UnknownName(format!("session '{}' epoch {epoch} (retired)", session.name))
+        })?;
+        let params = session.params_at(model_version).ok_or_else(|| {
+            Error::UnknownName(format!(
+                "session '{}' model version {model_version} (retired)",
+                session.name
+            ))
+        })?;
+        infer_one(plan, operand, params, features, self.session_threads(id))
+    }
+
+    /// Apply an incremental edge delta to a live session (see
+    /// [`SessionRegistry::apply_delta`] for the transactional contract and
+    /// the staleness policy driven by `config().staleness`). Runs under
+    /// `catch_unwind`: a panic mid-mutation (e.g. an injected fault at the
+    /// `serve.apply_delta` failpoint) becomes a typed
+    /// [`Error::RequestFailed`] and the old epoch keeps serving — the
+    /// session's breaker is *not* involved, since no admitted request was
+    /// harmed.
+    pub fn apply_delta(
+        &mut self,
+        id: SessionId,
+        delta: &EdgeDelta,
+        warm: Option<(&Tuner, &TuningDb)>,
+    ) -> Result<DeltaOutcome> {
+        let name = self.registry.get(id)?.name.clone();
+        let warm = warm.map(|(t, db)| (t, db, self.cfg.max_batch.max(1)));
+        let staleness = self.cfg.staleness;
+        let _span = crate::obs::Span::enter("serve.apply_delta");
+        let registry = &mut self.registry;
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            registry.apply_delta(id, delta, staleness, warm)
+        }))
+        .unwrap_or_else(|payload| {
+            Err(Error::RequestFailed(format!(
+                "panic while applying delta to session '{name}': {}",
+                panic_message(&payload)
+            )))
+        });
+        if let Ok(out) = &result {
+            self.metrics[id.0].deltas_applied += 1;
+            self.obs.deltas.inc(1);
+            if out.refreshed {
+                self.metrics[id.0].format_refreshes += 1;
+                self.obs.format_refreshes.inc(1);
+            }
+        }
+        result
+    }
+
+    /// Atomically hot-swap a live session's model parameters (see
+    /// [`SessionRegistry::swap_model`]). Validation failures — and panics
+    /// mid-swap, caught here — return [`Error::SwapRejected`] and leave
+    /// the old model serving; in-flight batches keep their
+    /// admission-time version either way.
+    pub fn swap_model(&mut self, id: SessionId, params: ParamSet) -> Result<u32> {
+        let name = self.registry.get(id)?.name.clone();
+        let _span = crate::obs::Span::enter("serve.hot_swap");
+        let registry = &mut self.registry;
+        let result = catch_unwind(AssertUnwindSafe(|| registry.swap_model(id, params)))
+            .unwrap_or_else(|payload| {
+                Err(Error::SwapRejected(format!(
+                    "panic while swapping model for session '{name}': {}",
+                    panic_message(&payload)
+                )))
+            });
+        match &result {
+            Ok(_) => {
+                self.metrics[id.0].swaps += 1;
+                self.obs.swaps.inc(1);
+            }
+            Err(_) => {
+                self.metrics[id.0].swaps_rejected += 1;
+                self.obs.swaps_rejected.inc(1);
+            }
+        }
+        result
     }
 
     /// Drain every queue under DRR fairness; returns completions in
@@ -481,6 +608,12 @@ impl InferenceServer {
             if !expired.is_empty() {
                 self.metrics[s].shed_deadline += expired.len() as u64;
                 self.obs.shed_deadline.inc(expired.len() as u64);
+                // shedding is a terminal outcome: the admission stamps are
+                // released so a retired epoch pinned only by expired work
+                // can leave the workspace
+                for r in &expired {
+                    self.registry.release(SessionId(s), r.epoch, r.model_version, 1);
+                }
                 Self::terminate(expired, completed, |r| {
                     Error::DeadlineExceeded(format!(
                         "request {} shed before batch formation",
@@ -510,8 +643,10 @@ impl InferenceServer {
                 if self.deficits[s] < want {
                     break; // out of credit this pass; banks for the next
                 }
-                self.run_batch(SessionId(s), want, completed);
-                self.deficits[s] -= want;
+                // the batcher may cut below `want` at an (epoch, version)
+                // stamp boundary — only what actually ran is debited
+                let served = self.run_batch(SessionId(s), want, completed);
+                self.deficits[s] -= served.min(want);
             }
         }
         self.rr_start = (start + 1) % n;
@@ -537,6 +672,10 @@ impl InferenceServer {
                 BreakerState::Probation => 1.0,
                 BreakerState::Quarantined => 2.0,
             });
+            if let Ok(sess) = self.registry.get(id) {
+                g.epoch.set(sess.epoch() as f64);
+                g.staleness_drift.set(sess.staleness_drift());
+            }
         }
         self.obs.open_sessions.set(self.registry.ids().len() as f64);
         self.registry.workspace().publish_obs();
@@ -626,35 +765,51 @@ impl InferenceServer {
         }
     }
 
-    /// Execute one micro-batch of `b` requests for `id`. The batch always
-    /// terminates: on success every request completes with its logits; on
-    /// executor error **or kernel panic** (caught here, at the serve
-    /// boundary) every request completes with [`Error::RequestFailed`]
-    /// and the session's breaker records the failure — tripping it evicts
-    /// the session's workspace entries and drains its queue as
-    /// [`Error::SessionClosed`]. There is no requeue: a poisoned batch
-    /// can never cycle through the scheduler forever.
-    fn run_batch(&mut self, id: SessionId, b: usize, completed: &mut Vec<CompletedInference>) {
-        let batch = self.queues[id.0].drain_batch(b);
-        debug_assert_eq!(batch.len(), b);
+    /// Execute one micro-batch of up to `max` requests for `id` (the
+    /// batcher cuts at `(epoch, model_version)` stamp boundaries, so the
+    /// batch may be shorter). The plan, operand, and params are resolved
+    /// at the batch's **admission stamp** — a delta or hot-swap applied
+    /// after admission never changes what the batch computes. The batch
+    /// always terminates: on success every request completes with its
+    /// logits; on executor error **or kernel panic** (caught here, at the
+    /// serve boundary) every request completes with
+    /// [`Error::RequestFailed`] and the session's breaker records the
+    /// failure — tripping it evicts the session's workspace entries (all
+    /// epochs) and drains its queue as [`Error::SessionClosed`]. There is
+    /// no requeue: a poisoned batch can never cycle through the scheduler
+    /// forever. Every drained request's admission stamp is released here,
+    /// after the batch terminates — never mid-batch. Returns the number
+    /// of requests the batch drained from the queue.
+    fn run_batch(
+        &mut self,
+        id: SessionId,
+        max: usize,
+        completed: &mut Vec<CompletedInference>,
+    ) -> usize {
+        let batch = self.queues[id.0].drain_batch(max);
+        let b = batch.len();
+        debug_assert!(b > 0 && b <= max);
+        let (epoch, model_version) =
+            batch.first().map(|r| (r.epoch, r.model_version)).unwrap_or((0, 0));
         let threads = self.session_threads(id);
         let (name, graph_id) = match self.registry.get(id) {
             Ok(s) => (s.name.clone(), s.graph_id),
             Err(_) => {
                 // session closed with requests in flight (defensive; close
                 // drains first) — still a typed terminal outcome
-                self.metrics[id.0].closed_drained += batch.len() as u64;
-                self.obs.closed_drained.inc(batch.len() as u64);
+                self.metrics[id.0].closed_drained += b as u64;
+                self.obs.closed_drained.inc(b as u64);
                 Self::terminate(batch, completed, |r| {
                     Error::SessionClosed(format!("request {} raced a session close", r.id))
                 });
-                return;
+                return b;
             }
         };
         let _batch_span = if crate::obs::active() {
             crate::obs::Span::enter("serve.batch")
                 .arg("batch", Json::num(b as f64))
                 .arg("threads", Json::num(threads as f64))
+                .arg("epoch", Json::num(epoch as f64))
                 .agg(format!("serve.batch{{session={name}}}"))
         } else {
             crate::obs::Span::enter("serve.batch")
@@ -668,7 +823,20 @@ impl InferenceServer {
             // down the server
             catch_unwind(AssertUnwindSafe(|| -> Result<Vec<Dense>> {
                 crate::util::failpoints::check("serve.run_batch", &name)?;
-                infer_batched(session.plan(), session.operand(), session.params(), &xs, threads)
+                // resolve at the admission stamp; the refcount retention
+                // contract guarantees both lookups succeed while this
+                // batch is in flight
+                let (plan, operand) = session.epoch_state(epoch).ok_or_else(|| {
+                    Error::RequestFailed(format!(
+                        "session '{name}' epoch {epoch} retired with its batch in flight"
+                    ))
+                })?;
+                let params = session.params_at(model_version).ok_or_else(|| {
+                    Error::RequestFailed(format!(
+                        "session '{name}' version {model_version} retired with its batch in flight"
+                    ))
+                })?;
+                infer_batched(plan, operand, params, &xs, threads)
             }))
             .unwrap_or_else(|payload| {
                 Err(Error::RequestFailed(format!(
@@ -717,16 +885,20 @@ impl InferenceServer {
                 }
                 if self.breakers[id.0].record_failure() {
                     // tripped: isolate the tenant. Its cached partitions
-                    // and converted formats leave the shared workspace
-                    // (they may be poisoned by whatever panicked), and its
-                    // queue terminates typed — co-tenants keep serving
-                    // from the same pool and workspace untouched.
+                    // and converted formats — every epoch's — leave the
+                    // shared workspace (they may be poisoned by whatever
+                    // panicked), and its queue terminates typed —
+                    // co-tenants keep serving from the same pool and
+                    // workspace untouched.
                     self.metrics[id.0].quarantine_trips += 1;
                     self.obs.quarantine_trips.inc(1);
-                    self.registry.workspace().evict(graph_id);
+                    self.registry.workspace().evict_all_epochs(graph_id);
                     let drained = self.queues[id.0].drain_all();
                     self.metrics[id.0].closed_drained += drained.len() as u64;
                     self.obs.closed_drained.inc(drained.len() as u64);
+                    for r in &drained {
+                        self.registry.release(id, r.epoch, r.model_version, 1);
+                    }
                     Self::terminate(drained, completed, |r| {
                         Error::SessionClosed(format!(
                             "session '{name}' quarantined with request {} queued",
@@ -736,6 +908,10 @@ impl InferenceServer {
                 }
             }
         }
+        // terminal: release the batch's admission stamps (retiring the
+        // epoch/version if this was their last in-flight reference)
+        self.registry.release(id, epoch, model_version, b as u64);
+        b
     }
 }
 
@@ -1262,6 +1438,182 @@ mod tests {
         assert!(matches!(done[0].outcome, Err(Error::DeadlineExceeded(_))));
         assert_eq!(server.metrics(sid).unwrap().shed_deadline, 1);
     }
+
+    #[test]
+    fn delta_mid_stream_serves_every_request_at_its_admission_epoch() {
+        // requests straddling an edge delta: the pre-delta cohort executes
+        // against epoch 0's structure, the post-delta cohort against epoch
+        // 1's — each bitwise-equal to its admission-stamp reference, even
+        // though one drain serves them all
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 8,
+            quantum: 8,
+            threads: 1,
+            staleness: 1e9, // carry tuning: refresh policy tested separately
+            ..ServeConfig::default()
+        });
+        let adj = ring_graph(12);
+        let sid = add_session(&mut server, "delta-stream", &adj, 4);
+        let mut rng = Rng::seed_from_u64(101);
+
+        let xs0: Vec<Dense> = (0..3).map(|_| feats(12, 4, &mut rng)).collect();
+        let mut expect = std::collections::HashMap::new();
+        for x in &xs0 {
+            let rid = server.submit(sid, x.clone()).unwrap();
+            expect.insert(rid, server.infer_at(sid, 0, 0, x).unwrap());
+        }
+
+        let delta = EdgeDelta::new().add(0, 6, 0.5).add(6, 0, 0.5);
+        let out = server.apply_delta(sid, &delta, None).unwrap();
+        assert_eq!(out.epoch, 1);
+        assert!(!out.refreshed, "drift cannot reach a 1e9 threshold");
+        assert_eq!(out.retired, 0, "epoch 0 is pinned by 3 queued requests");
+        assert_eq!(server.session(sid).unwrap().epoch(), 1);
+        assert_eq!(server.metrics(sid).unwrap().deltas_applied, 1);
+
+        let xs1: Vec<Dense> = (0..2).map(|_| feats(12, 4, &mut rng)).collect();
+        for x in &xs1 {
+            let rid = server.submit(sid, x.clone()).unwrap();
+            expect.insert(rid, server.infer_at(sid, 1, 0, x).unwrap());
+        }
+        // the two cohorts genuinely disagree: epoch 1 has two more edges
+        assert_ne!(
+            server.infer_at(sid, 0, 0, &xs0[0]).unwrap().data,
+            server.infer_at(sid, 1, 0, &xs0[0]).unwrap().data,
+            "the delta must change the inference"
+        );
+
+        let done = server.run_until_drained().unwrap();
+        assert_eq!(done.len(), 5);
+        for c in &done {
+            assert_eq!(
+                c.expect_output().data,
+                expect[&c.id].data,
+                "request {} must match its admission-stamp reference",
+                c.id
+            );
+        }
+        // max_batch admits all 5, but the batcher cuts at the epoch flip
+        assert_eq!(done[0].batch_size, 3);
+        assert_eq!(done[4].batch_size, 2);
+        // draining released epoch 0's last pins: it retired
+        assert_eq!(server.session(sid).unwrap().live_epochs(), 1);
+        assert!(matches!(
+            server.infer_at(sid, 0, 0, &xs0[0]),
+            Err(Error::UnknownName(_))
+        ));
+    }
+
+    #[test]
+    fn swap_mid_stream_serves_every_request_at_its_admission_version() {
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 8,
+            quantum: 8,
+            threads: 1,
+            ..ServeConfig::default()
+        });
+        let adj = ring_graph(10);
+        let sid = add_session(&mut server, "swap-stream", &adj, 4);
+        let dims = ModelParams { in_dim: 4, hidden: 8, classes: 3 };
+        let mut rng = Rng::seed_from_u64(102);
+
+        let xs0: Vec<Dense> = (0..2).map(|_| feats(10, 4, &mut rng)).collect();
+        let mut expect = std::collections::HashMap::new();
+        for x in &xs0 {
+            let rid = server.submit(sid, x.clone()).unwrap();
+            expect.insert(rid, server.infer_at(sid, 0, 0, x).unwrap());
+        }
+
+        let v = server.swap_model(sid, GnnModel::Gcn.init_params(dims, 999)).unwrap();
+        assert_eq!(v, 1);
+        assert_eq!(server.session(sid).unwrap().model_version(), 1);
+        assert_eq!(server.metrics(sid).unwrap().swaps, 1);
+
+        let xs1: Vec<Dense> = (0..2).map(|_| feats(10, 4, &mut rng)).collect();
+        for x in &xs1 {
+            let rid = server.submit(sid, x.clone()).unwrap();
+            expect.insert(rid, server.infer_at(sid, 0, 1, x).unwrap());
+        }
+        assert_ne!(
+            server.infer_at(sid, 0, 0, &xs0[0]).unwrap().data,
+            server.infer_at(sid, 0, 1, &xs0[0]).unwrap().data,
+            "the swap must change the inference"
+        );
+
+        let done = server.run_until_drained().unwrap();
+        assert_eq!(done.len(), 4);
+        for c in &done {
+            assert_eq!(
+                c.expect_output().data,
+                expect[&c.id].data,
+                "request {} must match its admission-stamp reference",
+                c.id
+            );
+        }
+        assert_eq!(done[0].batch_size, 2, "batch cut at the version flip");
+        assert_eq!(done[3].batch_size, 2);
+        // the old version retired with its last in-flight reference
+        assert_eq!(server.session(sid).unwrap().live_param_versions(), 1);
+    }
+
+    #[test]
+    fn rejected_mutations_leave_the_session_serving_untouched() {
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 4,
+            quantum: 4,
+            threads: 1,
+            ..ServeConfig::default()
+        });
+        let adj = ring_graph(10);
+        let sid = add_session(&mut server, "reject-mut", &adj, 4);
+        let mut rng = Rng::seed_from_u64(103);
+        let x = feats(10, 4, &mut rng);
+        let reference = server.infer_now(sid, &x).unwrap();
+
+        // bad delta (deletes a missing edge): typed InvalidSparse at the
+        // trust boundary, epoch untouched
+        let err = server.apply_delta(sid, &EdgeDelta::new().del(0, 5), None).unwrap_err();
+        assert!(matches!(err, Error::InvalidSparse(_)), "{err}");
+        assert_eq!(server.session(sid).unwrap().epoch(), 0);
+        assert_eq!(server.metrics(sid).unwrap().deltas_applied, 0);
+
+        // bad swap (wrong hidden width): typed SwapRejected naming the
+        // offending tensor, version untouched
+        let bad = GnnModel::Gcn
+            .init_params(ModelParams { in_dim: 4, hidden: 9, classes: 3 }, 7);
+        let err = server.swap_model(sid, bad).unwrap_err();
+        assert!(matches!(err, Error::SwapRejected(_)), "{err}");
+        assert_eq!(server.session(sid).unwrap().model_version(), 0);
+        assert_eq!(server.metrics(sid).unwrap().swaps_rejected, 1);
+        assert_eq!(server.metrics(sid).unwrap().swaps, 0);
+
+        // serving is bit-for-bit what it was before either rejection
+        assert_eq!(server.infer_now(sid, &x).unwrap().data, reference.data);
+    }
+
+    #[test]
+    fn staleness_zero_refreshes_formats_on_every_delta() {
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 4,
+            quantum: 4,
+            threads: 1,
+            staleness: 0.0,
+            ..ServeConfig::default()
+        });
+        let adj = ring_graph(10);
+        let sid = add_session(&mut server, "stale-zero", &adj, 4);
+        let out = server
+            .apply_delta(sid, &EdgeDelta::new().add(0, 5, 1.0), None)
+            .unwrap();
+        assert!(out.refreshed, "staleness 0.0 refreshes on any drift");
+        assert_eq!(server.metrics(sid).unwrap().format_refreshes, 1);
+        // the refreshed epoch still serves correctly
+        let mut rng = Rng::seed_from_u64(104);
+        let x = feats(10, 4, &mut rng);
+        server.submit(sid, x.clone()).unwrap();
+        let done = server.run_until_drained().unwrap();
+        assert_eq!(done[0].expect_output().data, server.infer_now(sid, &x).unwrap().data);
+    }
 }
 
 /// Quarantine-path tests need a way to make a healthy session's batches
@@ -1387,6 +1739,97 @@ mod chaos_tests {
         let done = server.run_until_drained().unwrap();
         assert!(done[0].output().is_some());
         assert_eq!(server.metrics(sid).unwrap().quarantine_trips, 0);
+        failpoints::clear();
+    }
+
+    #[test]
+    fn mid_delta_fault_leaves_the_old_epoch_serving() {
+        let _guard = failpoints::exclusive();
+        failpoints::clear();
+        let name = "delta-chaos";
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 4,
+            quantum: 4,
+            threads: 1,
+            ..ServeConfig::default()
+        });
+        let adj = ring_graph(12);
+        let sid = add_session(&mut server, name, &adj, 4);
+        let victim = add_session(&mut server, "delta-chaos-cotenant", &ring_graph(8), 4);
+        let mut rng = Rng::seed_from_u64(98);
+        let x = Dense::uniform(12, 4, 1.0, &mut rng);
+        let xv = Dense::uniform(8, 4, 1.0, &mut rng);
+        let reference = server.infer_now(sid, &x).unwrap();
+        let cotenant_ref = server.infer_now(victim, &xv).unwrap();
+        let delta = EdgeDelta::new().add(0, 6, 0.5).add(6, 0, 0.5);
+
+        // fault 1: a panic mid-mutation unwinds to the serve boundary
+        failpoints::configure(
+            "serve.apply_delta",
+            FailPlan::always(FailAction::Panic).with_tag(name).limit(1),
+        );
+        let err = server.apply_delta(sid, &delta, None).unwrap_err();
+        assert!(matches!(err, Error::RequestFailed(_)), "{err}");
+        assert!(err.to_string().contains("panic"), "{err}");
+
+        // fault 2: a transient error propagates typed, no unwind needed
+        failpoints::configure(
+            "serve.apply_delta",
+            FailPlan::always(FailAction::TransientError).with_tag(name).limit(1),
+        );
+        let err = server.apply_delta(sid, &delta, None).unwrap_err();
+        assert!(matches!(err, Error::Runtime(_)), "{err}");
+
+        // both faults were transactional no-ops: epoch untouched, serving
+        // bitwise-clean, breaker never involved, co-tenant undisturbed
+        assert_eq!(server.session(sid).unwrap().epoch(), 0);
+        assert_eq!(server.session(sid).unwrap().live_epochs(), 1);
+        assert_eq!(server.metrics(sid).unwrap().deltas_applied, 0);
+        assert_eq!(server.breaker_state(sid).unwrap(), BreakerState::Closed);
+        assert_eq!(server.infer_now(sid, &x).unwrap().data, reference.data);
+        assert_eq!(server.infer_now(victim, &xv).unwrap().data, cotenant_ref.data);
+
+        // the site is exhausted: the identical delta now commits
+        let out = server.apply_delta(sid, &delta, None).unwrap();
+        assert_eq!(out.epoch, 1);
+        assert_eq!(server.metrics(sid).unwrap().deltas_applied, 1);
+        failpoints::clear();
+    }
+
+    #[test]
+    fn mid_swap_fault_is_a_typed_rejection_keeping_the_old_model() {
+        let _guard = failpoints::exclusive();
+        failpoints::clear();
+        let name = "swap-chaos";
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 4,
+            quantum: 4,
+            threads: 1,
+            ..ServeConfig::default()
+        });
+        let adj = ring_graph(10);
+        let sid = add_session(&mut server, name, &adj, 4);
+        let dims = ModelParams { in_dim: 4, hidden: 8, classes: 3 };
+        let mut rng = Rng::seed_from_u64(99);
+        let x = Dense::uniform(10, 4, 1.0, &mut rng);
+        let reference = server.infer_now(sid, &x).unwrap();
+
+        failpoints::configure(
+            "serve.hot_swap",
+            FailPlan::always(FailAction::Panic).with_tag(name).limit(1),
+        );
+        let err = server.swap_model(sid, GnnModel::Gcn.init_params(dims, 21)).unwrap_err();
+        assert!(matches!(err, Error::SwapRejected(_)), "{err}");
+        assert!(!err.is_retryable());
+        assert_eq!(server.session(sid).unwrap().model_version(), 0);
+        assert_eq!(server.metrics(sid).unwrap().swaps_rejected, 1);
+        assert_eq!(server.metrics(sid).unwrap().swaps, 0);
+        assert_eq!(server.infer_now(sid, &x).unwrap().data, reference.data);
+
+        // exhausted: the same swap now flips, and new admissions see it
+        let v = server.swap_model(sid, GnnModel::Gcn.init_params(dims, 21)).unwrap();
+        assert_eq!(v, 1);
+        assert_eq!(server.metrics(sid).unwrap().swaps, 1);
         failpoints::clear();
     }
 }

@@ -1,14 +1,48 @@
-//! Serving sessions: frozen `(graph, trained model)` pairs sharing one
+//! Serving sessions: live `(graph, trained model)` pairs sharing one
 //! kernel workspace.
 //!
 //! A session is registered once — adjacency normalised, parameters frozen,
 //! tuned kernel choices warm-started from a persisted [`TuningDb`] — and
 //! then serves any number of inference requests. All sessions share the
-//! registry's single [`KernelWorkspace`]: partitions are keyed per graph
-//! (and evicted per graph when a session closes), buffers are pooled
-//! across graphs. The session *name* doubles as the tuning-DB dataset key
-//! and the kernel-registry context, so a model tuned at training time
-//! routes to the same kernels at serving time without re-measurement.
+//! registry's single [`KernelWorkspace`]: partitions are keyed per
+//! `(graph, epoch)` (and evicted per graph when a session closes), buffers
+//! are pooled across graphs. The session *name* doubles as the tuning-DB
+//! dataset key and the kernel-registry context, so a model tuned at
+//! training time routes to the same kernels at serving time without
+//! re-measurement.
+//!
+//! # Epochs and versions
+//!
+//! Unlike the original frozen design, a session can now be **mutated
+//! while serving**:
+//!
+//! * [`SessionRegistry::apply_delta`] applies an incremental
+//!   [`EdgeDelta`] to the session's *raw* adjacency, re-normalises, and
+//!   installs the result as a new **graph epoch**. Each epoch owns its
+//!   own [`SpmmOperand`] (stamped via
+//!   [`SpmmOperand::with_epoch`](crate::autodiff::SpmmOperand::with_epoch)),
+//!   plan, and FLOPs price, and keys its workspace entries under
+//!   `(graph_id, epoch)` — in-flight batches admitted against an older
+//!   epoch keep executing against exactly the structure they were
+//!   admitted under.
+//! * [`SessionRegistry::swap_model`] atomically flips the session to a
+//!   new parameter **version** after shape-validating it against the
+//!   lowered plan. A rejected swap ([`Error::SwapRejected`]) leaves the
+//!   old model serving, untouched.
+//!
+//! Both mutations are refcounted: [`SessionRegistry::admit`] pins the
+//! current `(epoch, version)` pair for a request at admission time, and
+//! [`SessionRegistry::release`] retires an epoch/version only when its
+//! last in-flight reference drops — retirement evicts the epoch's
+//! workspace entries, and it never happens mid-batch.
+//!
+//! Whether a delta re-consults the tuner is a **staleness policy**: the
+//! registry tracks [`RowLenStats`] at the last format refresh and only
+//! re-runs warm-start / format conversion when the relative drift of the
+//! row-length distribution crosses the caller's threshold
+//! ([`ServeConfig::staleness`](super::ServeConfig::staleness)); below it,
+//! the previous tuning decision carries over and the carried formats are
+//! re-materialised for the new epoch off the request path.
 
 use std::sync::Arc;
 
@@ -16,13 +50,51 @@ use crate::autodiff::{context_graph_id, SpmmOperand};
 use crate::autotune::{KernelRegistry, Tuner, TuningDb};
 use crate::error::{Error, Result};
 use crate::gnn::{GnnModel, ModelParams, ParamSet};
-use crate::kernels::{prepare_format, KernelChoice, KernelWorkspace};
+use crate::kernels::{prepare_format, GraphEpoch, KernelChoice, KernelWorkspace};
 use crate::plan::ExecutionPlan;
-use crate::sparse::Csr;
+use crate::sparse::{Csr, EdgeDelta, RowLenStats};
+use crate::util::failpoints;
 
 /// Opaque handle to a registered serving session.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct SessionId(pub usize);
+
+/// What one [`SessionRegistry::apply_delta`] call did.
+#[derive(Clone, Copy, Debug)]
+pub struct DeltaOutcome {
+    /// The epoch the delta produced (now the session's current epoch).
+    pub epoch: u32,
+    /// Relative drift of the row-length stats (mean / p99 / max) against
+    /// the stats at the last format refresh.
+    pub drift: f64,
+    /// True when `drift` crossed the staleness threshold and the tuner
+    /// was re-consulted (formats re-converted, fusion re-decided, and the
+    /// reference stats reset).
+    pub refreshed: bool,
+    /// Prior epochs retired immediately (they had no in-flight work).
+    pub retired: usize,
+    /// Workspace entries evicted with those retired epochs.
+    pub evicted: usize,
+}
+
+/// One graph epoch of a session: the immutable state every batch admitted
+/// against this epoch executes with.
+struct EpochState {
+    epoch: u32,
+    operand: SpmmOperand,
+    plan: ExecutionPlan,
+    request_flops: f64,
+    /// In-flight references (admitted, not yet released).
+    refs: u64,
+}
+
+/// One parameter version of a session.
+struct ParamVersion {
+    version: u32,
+    params: ParamSet,
+    /// In-flight references (admitted, not yet released).
+    refs: u64,
+}
 
 /// One registered `(graph, trained model)` pair.
 pub struct ServeSession {
@@ -41,57 +113,118 @@ pub struct ServeSession {
     /// requests serve from the tuned representation with **zero**
     /// conversion at request time.
     pub preconverted: usize,
-    params: ParamSet,
-    operand: SpmmOperand,
-    /// The frozen execution plan every request interprets — the same IR
-    /// training executes, fused per the tuning DB's measured `fuse_relu`
-    /// wins when the session was warm-started.
-    plan: ExecutionPlan,
-    /// Estimated cost of one (unbatched) request against this session, in
-    /// FLOPs — [`ExecutionPlan::estimated_flops`] over the *fused* plan
-    /// and the normalised adjacency. Admission control prices requests
-    /// with this.
-    request_flops: f64,
+    /// The raw (pre-normalisation) adjacency deltas apply to. Kept because
+    /// normalisation is global in the degrees: one inserted edge changes
+    /// the normalised weight of every edge touching its endpoints, so the
+    /// new epoch must re-normalise from raw structure.
+    raw_adj: Csr,
+    /// Row-length stats at the last format refresh — the staleness
+    /// policy's reference point.
+    ref_stats: RowLenStats,
+    /// Tuned format choices currently in force (what to re-materialise
+    /// for each new epoch when the decision carries over).
+    tuned_formats: Vec<KernelChoice>,
+    /// Live epochs, oldest → current. The last entry is the current epoch;
+    /// earlier entries are retired epochs still pinned by in-flight work.
+    epochs: Vec<EpochState>,
+    /// Live parameter versions, oldest → current (same retention rule).
+    versions: Vec<ParamVersion>,
+    current_epoch: u32,
+    current_version: u32,
+    /// Drift measured by the most recent delta (0.0 before any delta).
+    last_drift: f64,
 }
 
 impl ServeSession {
-    /// The normalised-adjacency SpMM operand (workspace attached).
-    pub fn operand(&self) -> &SpmmOperand {
-        &self.operand
+    fn current(&self) -> &EpochState {
+        self.epochs.last().expect("a session always has a current epoch")
     }
 
-    /// The frozen execution plan requests are served with.
+    /// The normalised-adjacency SpMM operand of the **current** epoch.
+    pub fn operand(&self) -> &SpmmOperand {
+        &self.current().operand
+    }
+
+    /// The execution plan requests admitted now are served with.
     pub fn plan(&self) -> &ExecutionPlan {
-        &self.plan
+        &self.current().plan
     }
 
     /// How many `Spmm→Relu` edges the tuning DB justified fusing in this
-    /// session's plan.
+    /// session's current plan.
     pub fn fused_ops(&self) -> usize {
-        self.plan.fused_op_count()
+        self.current().plan.fused_op_count()
     }
 
-    /// The frozen trained parameters.
+    /// The current trained parameters.
     pub fn params(&self) -> &ParamSet {
-        &self.params
+        &self.versions.last().expect("a session always has current params").params
     }
 
     /// Graph node count (rows a request's feature matrix must have).
     pub fn nodes(&self) -> usize {
-        self.operand.a.rows
+        self.current().operand.a.rows
     }
 
-    /// Stored non-zeros of the normalised adjacency.
+    /// Stored non-zeros of the current epoch's normalised adjacency.
     pub fn nnz(&self) -> usize {
-        self.operand.a.nnz()
+        self.current().operand.a.nnz()
     }
 
-    /// Estimated FLOPs of one request through this session's frozen plan
+    /// Estimated FLOPs of one request through the current epoch's plan
     /// (see [`ExecutionPlan::estimated_flops`]) — the unit the server's
     /// `flops_budget` admission control is denominated in.
     pub fn request_flops(&self) -> f64 {
-        self.request_flops
+        self.current().request_flops
     }
+
+    /// The session's current graph epoch (0 until the first delta).
+    pub fn epoch(&self) -> u32 {
+        self.current_epoch
+    }
+
+    /// The session's current model version (0 until the first swap).
+    pub fn model_version(&self) -> u32 {
+        self.current_version
+    }
+
+    /// Row-length drift measured by the most recent delta.
+    pub fn staleness_drift(&self) -> f64 {
+        self.last_drift
+    }
+
+    /// Epochs still alive: the current one plus any retired epoch pinned
+    /// by in-flight work.
+    pub fn live_epochs(&self) -> usize {
+        self.epochs.len()
+    }
+
+    /// Parameter versions still alive (same retention rule as epochs).
+    pub fn live_param_versions(&self) -> usize {
+        self.versions.len()
+    }
+
+    /// The plan and operand of a (possibly retired-but-pinned) epoch.
+    pub fn epoch_state(&self, epoch: u32) -> Option<(&ExecutionPlan, &SpmmOperand)> {
+        self.epochs.iter().find(|e| e.epoch == epoch).map(|e| (&e.plan, &e.operand))
+    }
+
+    /// The parameters of a (possibly retired-but-pinned) model version.
+    pub fn params_at(&self, version: u32) -> Option<&ParamSet> {
+        self.versions.iter().find(|v| v.version == version).map(|v| &v.params)
+    }
+}
+
+/// Relative drift between two row-length summaries: the max relative
+/// change across mean, p99, and max (denominators clamped to 1 so empty
+/// and near-empty graphs don't explode the ratio).
+fn stats_drift(old: &RowLenStats, new: &RowLenStats) -> f64 {
+    fn rel(a: f64, b: f64) -> f64 {
+        (b - a).abs() / a.abs().max(1.0)
+    }
+    rel(old.mean, new.mean)
+        .max(rel(old.p99 as f64, new.p99 as f64))
+        .max(rel(old.max as f64, new.max as f64))
 }
 
 /// The session registry: sessions indexed by [`SessionId`], all sharing
@@ -139,6 +272,13 @@ impl SessionRegistry {
             .ok_or_else(|| Error::UnknownName(format!("serving session #{}", id.0)))
     }
 
+    fn get_mut(&mut self, id: SessionId) -> Result<&mut ServeSession> {
+        self.sessions
+            .get_mut(id.0)
+            .and_then(|s| s.as_mut())
+            .ok_or_else(|| Error::UnknownName(format!("serving session #{}", id.0)))
+    }
+
     /// Register a session: validate the frozen parameters against the
     /// model/dims, normalise the adjacency once (no `BackpropCache` — this
     /// is the serving path's only preprocessing), attach the shared
@@ -170,21 +310,10 @@ impl SessionRegistry {
         adj.validate().map_err(|e| {
             Error::InvalidSparse(format!("serving session '{name}' adjacency rejected: {e}"))
         })?;
-        // shape-check the frozen params against a reference layout
-        let reference = model.init_params(dims, 0);
-        for (pname, want) in reference.iter() {
-            let got = params.get(pname).map_err(|_| {
-                Error::Config(format!("session '{name}': missing parameter '{pname}'"))
-            })?;
-            if got.rows != want.rows || got.cols != want.cols {
-                return Err(Error::ShapeMismatch(format!(
-                    "session '{name}': param '{pname}' is {}x{}, expected {}x{}",
-                    got.rows, got.cols, want.rows, want.cols
-                )));
-            }
-        }
+        Self::shape_check(name, &model, dims, &params, Error::Config)?;
 
         let a = model.norm_kind().apply(adj)?;
+        let ref_stats = a.row_len_stats();
         let graph_id = context_graph_id(name);
         // uncached operand: inference is forward-only, so the backward
         // transpose is never materialised
@@ -196,10 +325,9 @@ impl SessionRegistry {
         // warm-start loop and the fusion decision below
         let mut plan = model.lower(dims, model.norm_kind());
         let mut warm_started = 0;
-        let mut preconverted = 0;
+        let mut tuned_formats: Vec<KernelChoice> = Vec::new();
         if let Some((tuner, db, max_batch)) = warm {
             let registry = KernelRegistry::global();
-            let mut prepared: Vec<KernelChoice> = Vec::new();
             for k in plan.spmm_shapes_batched(max_batch) {
                 if let Some(choice) = tuner.warm_start(name, k, registry, db) {
                     warm_started += 1;
@@ -208,11 +336,10 @@ impl SessionRegistry {
                     // setup moment), so request-time SpMM hits the cached
                     // conversion — never an O(nnz) convert on the serving
                     // hot path.
-                    if !prepared.contains(&choice)
+                    if !tuned_formats.contains(&choice)
                         && prepare_format(&operand.a, choice, &self.workspace, graph_id)
                     {
-                        prepared.push(choice);
-                        preconverted += 1;
+                        tuned_formats.push(choice);
                     }
                 }
             }
@@ -232,6 +359,7 @@ impl SessionRegistry {
         let request_flops = plan.estimated_flops(operand.a.rows, operand.a.nnz());
 
         let id = SessionId(self.sessions.len());
+        let preconverted = tuned_formats.len();
         self.sessions.push(Some(ServeSession {
             name: name.to_string(),
             model,
@@ -239,20 +367,218 @@ impl SessionRegistry {
             graph_id,
             warm_started,
             preconverted,
-            params,
-            operand,
-            plan,
-            request_flops,
+            raw_adj: adj.clone(),
+            ref_stats,
+            tuned_formats,
+            epochs: vec![EpochState { epoch: 0, operand, plan, request_flops, refs: 0 }],
+            versions: vec![ParamVersion { version: 0, params, refs: 0 }],
+            current_epoch: 0,
+            current_version: 0,
+            last_drift: 0.0,
         }));
         Ok(id)
     }
 
-    /// Close a session: drop its frozen state, evict its partition entries
-    /// and converted sparse formats from the shared workspace (pooled
-    /// buffers are graph-agnostic and stay), and unbind its
-    /// kernel-registry context so a later same-named session cannot
-    /// inherit this graph's tuned choices. Returns the number of
-    /// workspace entries evicted.
+    /// Shape-check `params` against the model/dims reference layout,
+    /// wrapping failures with `err` (registration rejects with `Config` /
+    /// `ShapeMismatch`; hot-swap rejects with `SwapRejected`).
+    fn shape_check(
+        name: &str,
+        model: &GnnModel,
+        dims: ModelParams,
+        params: &ParamSet,
+        err: fn(String) -> Error,
+    ) -> Result<()> {
+        let reference = model.init_params(dims, 0);
+        for (pname, want) in reference.iter() {
+            let got = params
+                .get(pname)
+                .map_err(|_| err(format!("session '{name}': missing parameter '{pname}'")))?;
+            if got.rows != want.rows || got.cols != want.cols {
+                return Err(err(format!(
+                    "session '{name}': param '{pname}' is {}x{}, expected {}x{}",
+                    got.rows, got.cols, want.rows, want.cols
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply an incremental edge delta to a live session, installing the
+    /// result as a new graph epoch. The mutation is **transactional**:
+    /// everything (delta validation, re-normalisation, drift measurement,
+    /// format conversion) is built off to the side, and the session flips
+    /// to the new epoch at a single commit point — any error (or injected
+    /// fault at the `serve.apply_delta` failpoint) leaves the old epoch
+    /// serving, bit-for-bit untouched.
+    ///
+    /// In-flight batches admitted against older epochs keep executing
+    /// against their admission-time structure; an old epoch's workspace
+    /// entries are evicted only when its last reference is
+    /// [`released`](SessionRegistry::release).
+    ///
+    /// `staleness` is the drift threshold of the re-tuning policy (see
+    /// [`DeltaOutcome::refreshed`]); `warm` mirrors
+    /// [`register`](SessionRegistry::register)'s warm-start input and is
+    /// only consulted on a refresh.
+    pub fn apply_delta(
+        &mut self,
+        id: SessionId,
+        delta: &EdgeDelta,
+        staleness: f64,
+        warm: Option<(&Tuner, &TuningDb, usize)>,
+    ) -> Result<DeltaOutcome> {
+        let workspace = Arc::clone(&self.workspace);
+        let session = self.get_mut(id)?;
+
+        // ---- build phase: no session state is touched below this line
+        // until the commit point -------------------------------------
+        let raw = session.raw_adj.apply_edge_delta(delta).map_err(|e| {
+            Error::InvalidSparse(format!("session '{}' delta rejected: {e}", session.name))
+        })?;
+        let a = session.model.norm_kind().apply(&raw)?;
+        let stats = a.row_len_stats();
+        let drift = stats_drift(&session.ref_stats, &stats);
+        let new_epoch = session.current_epoch + 1;
+        // injected faults land here: after validation, before any
+        // workspace side effect or session mutation
+        failpoints::check("serve.apply_delta", &session.name)?;
+
+        let operand = SpmmOperand::uncached(a, &session.name)
+            .with_workspace(Arc::clone(&workspace), session.graph_id)
+            .with_epoch(new_epoch);
+        let key = GraphEpoch::new(session.graph_id, new_epoch);
+
+        let refreshed = drift >= staleness;
+        let mut new_formats = session.tuned_formats.clone();
+        let plan = if refreshed {
+            // the structure drifted past the policy threshold: re-consult
+            // the tuner for this epoch exactly like registration did
+            new_formats.clear();
+            let mut plan = session.model.lower(session.dims, session.model.norm_kind());
+            if let Some((tuner, db, max_batch)) = warm {
+                let registry = KernelRegistry::global();
+                for k in plan.spmm_shapes_batched(max_batch) {
+                    if let Some(choice) = tuner.warm_start(&session.name, k, registry, db) {
+                        if !new_formats.contains(&choice)
+                            && prepare_format(&operand.a, choice, &workspace, key)
+                        {
+                            new_formats.push(choice);
+                        }
+                    }
+                }
+                let profile = tuner.profile.name.clone();
+                plan =
+                    plan.fuse_spmm_relu(|k| db.fused_relu_profitable(&session.name, &profile, k));
+            }
+            plan
+        } else {
+            // below the threshold: the old tuning decision carries over;
+            // re-materialise the carried formats for the new epoch HERE,
+            // off the request path, so the hot path still never converts
+            for &choice in &session.tuned_formats {
+                prepare_format(&operand.a, choice, &workspace, key);
+            }
+            session.current().plan.clone()
+        };
+        let request_flops = plan.estimated_flops(operand.a.rows, operand.a.nnz());
+
+        // ---- commit point: flip the session to the new epoch ---------
+        session.raw_adj = raw;
+        session.last_drift = drift;
+        if refreshed {
+            session.ref_stats = stats;
+            session.tuned_formats = new_formats;
+        }
+        session.current_epoch = new_epoch;
+        session.epochs.push(EpochState { epoch: new_epoch, operand, plan, request_flops, refs: 0 });
+        // prior epochs with no in-flight work retire immediately; pinned
+        // ones wait for their last release
+        let (retired, evicted) = Self::retire_epochs(&workspace, session);
+        Ok(DeltaOutcome { epoch: new_epoch, drift, refreshed, retired, evicted })
+    }
+
+    /// Atomically swap a live session's model parameters. The new set is
+    /// shape-validated against the session's lowered plan **before** the
+    /// flip; any failure (or injected fault at the `serve.hot_swap`
+    /// failpoint) returns [`Error::SwapRejected`] and leaves the old
+    /// model serving. On success every batch admitted from now on sees
+    /// exactly the new set; in-flight batches keep their admission-time
+    /// version. Returns the new model version.
+    pub fn swap_model(&mut self, id: SessionId, params: ParamSet) -> Result<u32> {
+        let session = self.get_mut(id)?;
+        Self::shape_check(&session.name, &session.model, session.dims, &params, Error::SwapRejected)?;
+        failpoints::check("serve.hot_swap", &session.name)
+            .map_err(|e| Error::SwapRejected(format!("session '{}': {e}", session.name)))?;
+        // ---- commit point: flip to the new version -------------------
+        let version = session.current_version + 1;
+        session.current_version = version;
+        session.versions.push(ParamVersion { version, params, refs: 0 });
+        session.versions.retain(|v| v.version == version || v.refs > 0);
+        Ok(version)
+    }
+
+    /// Pin the current `(epoch, model_version)` pair for one request being
+    /// admitted; the scheduler stamps the request with the returned pair
+    /// and must [`release`](SessionRegistry::release) it on every terminal
+    /// outcome.
+    pub fn admit(&mut self, id: SessionId) -> Result<(u32, u32)> {
+        let session = self.get_mut(id)?;
+        session.epochs.last_mut().expect("current epoch").refs += 1;
+        session.versions.last_mut().expect("current version").refs += 1;
+        Ok((session.current_epoch, session.current_version))
+    }
+
+    /// Release `n` admission references against `(epoch, version)` —
+    /// called by the scheduler on *every* terminal request outcome
+    /// (served, failed, shed, or drained). A non-current epoch whose last
+    /// reference drops is retired here: its workspace entries are evicted
+    /// (never mid-batch — this is the only other eviction point besides
+    /// close/quarantine). Returns the workspace entries evicted. A closed
+    /// session is a no-op (its workspace was already fully evicted).
+    pub fn release(&mut self, id: SessionId, epoch: u32, version: u32, n: u64) -> usize {
+        let workspace = Arc::clone(&self.workspace);
+        let Some(session) = self.sessions.get_mut(id.0).and_then(|s| s.as_mut()) else {
+            return 0;
+        };
+        if let Some(e) = session.epochs.iter_mut().find(|e| e.epoch == epoch) {
+            e.refs = e.refs.saturating_sub(n);
+        }
+        if let Some(v) = session.versions.iter_mut().find(|v| v.version == version) {
+            v.refs = v.refs.saturating_sub(n);
+        }
+        let current_version = session.current_version;
+        session.versions.retain(|v| v.version == current_version || v.refs > 0);
+        let (_retired, evicted) = Self::retire_epochs(&workspace, session);
+        evicted
+    }
+
+    /// Drop every non-current epoch with zero in-flight references,
+    /// evicting its workspace entries. Returns `(epochs retired, entries
+    /// evicted)`.
+    fn retire_epochs(workspace: &KernelWorkspace, session: &mut ServeSession) -> (usize, usize) {
+        let current = session.current_epoch;
+        let mut retired = 0;
+        let mut evicted = 0;
+        let mut i = 0;
+        while i < session.epochs.len() {
+            if session.epochs[i].epoch != current && session.epochs[i].refs == 0 {
+                let gone = session.epochs.remove(i);
+                evicted += workspace.evict(GraphEpoch::new(session.graph_id, gone.epoch));
+                retired += 1;
+            } else {
+                i += 1;
+            }
+        }
+        (retired, evicted)
+    }
+
+    /// Close a session: drop its state (all epochs and versions), evict
+    /// its partition entries and converted sparse formats — **every**
+    /// epoch's — from the shared workspace (pooled buffers are
+    /// graph-agnostic and stay), and unbind its kernel-registry context so
+    /// a later same-named session cannot inherit this graph's tuned
+    /// choices. Returns the number of workspace entries evicted.
     pub fn close(&mut self, id: SessionId) -> Result<usize> {
         let slot = self
             .sessions
@@ -262,7 +588,7 @@ impl SessionRegistry {
             .take()
             .ok_or_else(|| Error::Config(format!("serving session #{} already closed", id.0)))?;
         KernelRegistry::global().unbind_context(&session.name);
-        Ok(self.workspace.evict(session.graph_id))
+        Ok(self.workspace.evict_all_epochs(session.graph_id))
     }
 }
 
@@ -300,6 +626,10 @@ mod tests {
         assert_eq!(s.nodes(), 34);
         assert!(s.nnz() > 0);
         assert!(s.operand().workspace.is_some());
+        assert_eq!(s.epoch(), 0);
+        assert_eq!(s.model_version(), 0);
+        assert_eq!(s.live_epochs(), 1);
+        assert_eq!(s.live_param_versions(), 1);
         // duplicate name rejected
         let params = GnnModel::Gcn.init_params(dims, 3);
         assert!(reg
@@ -519,5 +849,222 @@ mod tests {
             reg.register("sess-cold", GnnModel::Gcn, dims, params, &ds.adj, None).unwrap();
         assert_eq!(reg.get(id).unwrap().fused_ops(), 0);
         assert_eq!(reg.get(id).unwrap().plan().spmm_shapes(), vec![2, 8]);
+    }
+
+    #[test]
+    fn apply_delta_bumps_epoch_and_retires_the_old_one() {
+        let ds = karate_club();
+        let dims = dims_for(&ds, 8);
+        let mut reg = SessionRegistry::new();
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let id = reg.register("sess-delta", GnnModel::Gcn, dims, params, &ds.adj, None).unwrap();
+        let nnz0 = reg.get(id).unwrap().nnz();
+        let flops0 = reg.get(id).unwrap().request_flops();
+        // warm the epoch-0 workspace so retirement has something to evict
+        let s = reg.get(id).unwrap();
+        let ws = Arc::clone(reg.workspace());
+        ws.partition(s.operand().graph_key(), &s.operand().a, 2);
+        assert_eq!(ws.cached_partitions(), 1);
+
+        // karate club is symmetric; insert a symmetric pair of new edges
+        let delta = EdgeDelta::new().add(0, 9, 1.0).add(9, 0, 1.0);
+        let out = reg.apply_delta(id, &delta, 0.0, None).unwrap();
+        assert_eq!(out.epoch, 1);
+        assert!(out.refreshed, "threshold 0.0 always refreshes");
+        assert_eq!(out.retired, 1, "no in-flight work pinned epoch 0");
+        assert!(out.evicted >= 1, "epoch 0's partition must leave with it");
+        assert_eq!(ws.cached_partitions(), 0);
+
+        let s = reg.get(id).unwrap();
+        assert_eq!(s.epoch(), 1);
+        assert_eq!(s.live_epochs(), 1);
+        assert_eq!(s.nnz(), nnz0 + 2);
+        assert_eq!(s.operand().epoch, 1, "operand is stamped with the new epoch");
+        assert_ne!(s.request_flops(), flops0, "pricing tracks the new structure");
+        // deleting the same pair restores the original nnz
+        let out = reg.apply_delta(id, &EdgeDelta::new().del(0, 9).del(9, 0), 0.0, None).unwrap();
+        assert_eq!(out.epoch, 2);
+        assert_eq!(reg.get(id).unwrap().nnz(), nnz0);
+        reg.close(id).unwrap();
+    }
+
+    #[test]
+    fn apply_delta_rejects_bad_deltas_without_state_change() {
+        let ds = karate_club();
+        let dims = dims_for(&ds, 8);
+        let mut reg = SessionRegistry::new();
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let id = reg.register("sess-bad-delta", GnnModel::Gcn, dims, params, &ds.adj, None).unwrap();
+        let nnz0 = reg.get(id).unwrap().nnz();
+        for delta in [
+            EdgeDelta::new().add(0, 99, 1.0),          // out of bounds
+            EdgeDelta::new().add(0, 1, f32::NAN),      // non-finite weight
+            EdgeDelta::new().del(0, 7),                // not an edge in karate club
+            EdgeDelta::new().add(0, 1, 1.0).del(0, 1), // duplicate target
+        ] {
+            let err = reg.apply_delta(id, &delta, 0.0, None).unwrap_err();
+            assert!(matches!(err, Error::InvalidSparse(_)), "{err}");
+            let s = reg.get(id).unwrap();
+            assert_eq!(s.epoch(), 0, "rejected delta must not bump the epoch");
+            assert_eq!(s.nnz(), nnz0);
+        }
+        reg.close(id).unwrap();
+    }
+
+    #[test]
+    fn staleness_policy_gates_the_format_refresh() {
+        let ds = karate_club();
+        let dims = dims_for(&ds, 8);
+        let name = "sess-staleness";
+        let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+        let mut db = TuningDb::default();
+        db.put(
+            name,
+            "amd-epyc",
+            8,
+            DbEntry { sell: Some((4, 32)), speedup: 1.5, ..DbEntry::default() },
+        );
+        let mut reg = SessionRegistry::new();
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let id = reg
+            .register(name, GnnModel::Gcn, dims, params, &ds.adj, Some((&tuner, &db, 1)))
+            .unwrap();
+        assert_eq!(reg.get(id).unwrap().preconverted, 1);
+        let formats0 = reg.workspace().cached_formats();
+        assert_eq!(formats0, 1);
+
+        // a tiny delta under a generous threshold: the tuning decision
+        // carries over, but the carried format is still re-materialised
+        // for the new epoch (off the request path)
+        let delta = EdgeDelta::new().add(0, 9, 1.0).add(9, 0, 1.0);
+        let out = reg.apply_delta(id, &delta, 10.0, Some((&tuner, &db, 1))).unwrap();
+        assert!(!out.refreshed, "drift {} must stay under 10.0", out.drift);
+        assert!(out.drift > 0.0);
+        assert_eq!(reg.get(id).unwrap().staleness_drift(), out.drift);
+        assert_eq!(
+            reg.workspace().cached_formats(),
+            1,
+            "epoch 0's format retired with it; epoch 1 carries one conversion"
+        );
+
+        // threshold 0.0 forces a refresh: the tuner is re-consulted and
+        // the reference stats reset
+        let delta = EdgeDelta::new().add(0, 20, 1.0).add(20, 0, 1.0);
+        let out = reg.apply_delta(id, &delta, 0.0, Some((&tuner, &db, 1))).unwrap();
+        assert!(out.refreshed);
+        assert_eq!(reg.workspace().cached_formats(), 1);
+        // the reference point moved: an immediate identical-size delta now
+        // measures a smaller drift than the cumulative one would have
+        let delta = EdgeDelta::new().del(0, 20).del(20, 0);
+        let next = reg.apply_delta(id, &delta, 10.0, Some((&tuner, &db, 1))).unwrap();
+        assert!(!next.refreshed);
+        reg.close(id).unwrap();
+        assert_eq!(reg.workspace().cached_formats(), 0, "close evicts every epoch");
+    }
+
+    #[test]
+    fn in_flight_references_pin_epochs_until_release() {
+        let ds = karate_club();
+        let dims = dims_for(&ds, 8);
+        let mut reg = SessionRegistry::new();
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let id = reg.register("sess-refs", GnnModel::Gcn, dims, params, &ds.adj, None).unwrap();
+        let ws = Arc::clone(reg.workspace());
+        // two requests admitted against epoch 0 / version 0
+        let stamp_a = reg.admit(id).unwrap();
+        let stamp_b = reg.admit(id).unwrap();
+        assert_eq!(stamp_a, (0, 0));
+        assert_eq!(stamp_b, (0, 0));
+        // warm epoch 0's workspace
+        {
+            let s = reg.get(id).unwrap();
+            ws.partition(s.operand().graph_key(), &s.operand().a, 2);
+        }
+
+        let delta = EdgeDelta::new().add(0, 9, 1.0).add(9, 0, 1.0);
+        let out = reg.apply_delta(id, &delta, 0.0, None).unwrap();
+        assert_eq!(out.retired, 0, "epoch 0 is pinned by two in-flight requests");
+        let s = reg.get(id).unwrap();
+        assert_eq!(s.live_epochs(), 2);
+        assert_eq!(ws.cached_partitions(), 1, "pinned epoch keeps its entries");
+        // the pinned epoch's state is still resolvable for its batch
+        let (plan0, op0) = s.epoch_state(0).expect("epoch 0 retained");
+        assert_eq!(op0.epoch, 0);
+        assert!(plan0.estimated_flops(op0.a.rows, op0.a.nnz()) > 0.0);
+        assert!(s.params_at(0).is_some());
+
+        // first release: still pinned
+        assert_eq!(reg.release(id, 0, 0, 1), 0);
+        assert_eq!(reg.get(id).unwrap().live_epochs(), 2);
+        // last release retires epoch 0 and evicts its workspace entries
+        let evicted = reg.release(id, 0, 0, 1);
+        assert!(evicted >= 1, "retirement must evict the retired epoch's entries");
+        let s = reg.get(id).unwrap();
+        assert_eq!(s.live_epochs(), 1);
+        assert!(s.epoch_state(0).is_none(), "retired epoch is gone");
+        assert!(s.epoch_state(1).is_some());
+        assert_eq!(ws.cached_partitions(), 0);
+        // releasing against a closed session is a harmless no-op
+        reg.close(id).unwrap();
+        assert_eq!(reg.release(id, 1, 0, 1), 0);
+    }
+
+    #[test]
+    fn swap_model_flips_atomically_and_rejects_bad_shapes() {
+        let ds = karate_club();
+        let dims = dims_for(&ds, 8);
+        let mut reg = SessionRegistry::new();
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let id = reg.register("sess-swap", GnnModel::Gcn, dims, params, &ds.adj, None).unwrap();
+        let old_first: Vec<f32> = {
+            let (_, first) = reg.get(id).unwrap().params().iter().next().unwrap();
+            first.data.clone()
+        };
+
+        // a valid swap flips the version and the served params
+        let fresh = GnnModel::Gcn.init_params(dims, 99);
+        let v = reg.swap_model(id, fresh.clone()).unwrap();
+        assert_eq!(v, 1);
+        let s = reg.get(id).unwrap();
+        assert_eq!(s.model_version(), 1);
+        assert_eq!(s.live_param_versions(), 1, "unpinned version 0 retired at the flip");
+        let (_, now_first) = s.params().iter().next().unwrap();
+        assert_ne!(now_first.data, old_first);
+
+        // wrong-shape and wrong-model params are rejected typed, and the
+        // serving set is untouched
+        let narrow = GnnModel::Gcn.init_params(dims_for(&ds, 4), 7);
+        let err = reg.swap_model(id, narrow).unwrap_err();
+        assert!(matches!(err, Error::SwapRejected(_)), "{err}");
+        let wrong = GnnModel::SageSum.init_params(dims, 7);
+        let err = reg.swap_model(id, wrong).unwrap_err();
+        assert!(matches!(err, Error::SwapRejected(_)), "{err}");
+        let s = reg.get(id).unwrap();
+        assert_eq!(s.model_version(), 1, "rejected swaps must not bump the version");
+        let (_, still_first) = s.params().iter().next().unwrap();
+        let (_, want_first) = fresh.iter().next().unwrap();
+        assert_eq!(still_first.data, want_first.data);
+        reg.close(id).unwrap();
+    }
+
+    #[test]
+    fn in_flight_references_pin_param_versions() {
+        let ds = karate_club();
+        let dims = dims_for(&ds, 8);
+        let mut reg = SessionRegistry::new();
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let id = reg.register("sess-vpin", GnnModel::Gcn, dims, params, &ds.adj, None).unwrap();
+        let stamp = reg.admit(id).unwrap();
+        assert_eq!(stamp, (0, 0));
+        reg.swap_model(id, GnnModel::Gcn.init_params(dims, 42)).unwrap();
+        let s = reg.get(id).unwrap();
+        assert_eq!(s.live_param_versions(), 2, "version 0 pinned by the in-flight request");
+        assert!(s.params_at(0).is_some());
+        assert!(s.params_at(1).is_some());
+        reg.release(id, 0, 0, 1);
+        let s = reg.get(id).unwrap();
+        assert_eq!(s.live_param_versions(), 1);
+        assert!(s.params_at(0).is_none(), "released version retired");
+        reg.close(id).unwrap();
     }
 }

@@ -304,6 +304,127 @@ impl Csr {
         hist
     }
 
+    /// Apply a batch of edge insertions/deletions, producing the next
+    /// epoch's matrix. The delta is validated at the trust boundary —
+    /// mutation deltas arrive from clients on a live serving session, so
+    /// every malformed input degrades to a typed [`Error::InvalidSparse`]
+    /// instead of a corrupt CSR or a panic deep in a kernel:
+    ///
+    /// * indices must be in range (`row < rows`, `col < cols`);
+    /// * inserted weights must be finite (the same non-finite guard as
+    ///   [`Csr::validate`]);
+    /// * a single delta may not target the same `(row, col)` twice
+    ///   (insert-then-delete within one batch has no defined order);
+    /// * deleting an edge that does not exist is an error — a delete is a
+    ///   claim about current structure, and silently ignoring a miss would
+    ///   let a client's view drift from the server's.
+    ///
+    /// Inserting over an existing edge replaces its weight (upsert).
+    /// Untouched rows are copied wholesale (one `memcpy` per contiguous
+    /// run via the slice copies below — no per-element merge), so the cost
+    /// is O(nnz) copy + O(touched · row len) merge, and the result is a
+    /// valid CSR by construction: within-row merge keeps columns strictly
+    /// increasing and the inputs were bounds/finiteness-checked up front.
+    pub fn apply_edge_delta(&self, delta: &EdgeDelta) -> Result<Csr> {
+        use std::collections::{BTreeMap, HashSet};
+        // ops per touched row: col → Some(weight) for upsert, None for
+        // delete. Validation happens here, before any building.
+        let mut touched: BTreeMap<usize, Vec<(usize, Option<f32>)>> = BTreeMap::new();
+        let mut seen: HashSet<(usize, usize)> = HashSet::new();
+        let check_bounds = |r: usize, c: usize| -> Result<()> {
+            if r >= self.rows || c >= self.cols {
+                return Err(Error::InvalidSparse(format!(
+                    "delta edge ({r},{c}) out of bounds for {}x{}",
+                    self.rows, self.cols
+                )));
+            }
+            Ok(())
+        };
+        for &(r, c, w) in &delta.insert {
+            check_bounds(r, c)?;
+            if !w.is_finite() {
+                return Err(Error::InvalidSparse(format!(
+                    "delta edge ({r},{c}): non-finite weight {w}"
+                )));
+            }
+            if !seen.insert((r, c)) {
+                return Err(Error::InvalidSparse(format!(
+                    "delta targets edge ({r},{c}) more than once"
+                )));
+            }
+            touched.entry(r).or_default().push((c, Some(w)));
+        }
+        for &(r, c) in &delta.delete {
+            check_bounds(r, c)?;
+            if !seen.insert((r, c)) {
+                return Err(Error::InvalidSparse(format!(
+                    "delta targets edge ({r},{c}) more than once"
+                )));
+            }
+            touched.entry(r).or_default().push((c, None));
+        }
+
+        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        row_ptr.push(0usize);
+        let cap = self.nnz() + delta.insert.len();
+        let mut col_idx = Vec::with_capacity(cap);
+        let mut values = Vec::with_capacity(cap);
+        for r in 0..self.rows {
+            match touched.get_mut(&r) {
+                None => {
+                    // untouched row: wholesale copy of the old slices
+                    col_idx.extend_from_slice(self.row_cols(r));
+                    values.extend_from_slice(self.row_vals(r));
+                }
+                Some(ops) => {
+                    ops.sort_unstable_by_key(|&(c, _)| c);
+                    let (old_cols, old_vals) = (self.row_cols(r), self.row_vals(r));
+                    let (mut i, mut j) = (0usize, 0usize);
+                    while i < old_cols.len() || j < ops.len() {
+                        let oc = old_cols.get(i).copied();
+                        let nc = ops.get(j).map(|&(c, _)| c);
+                        match (oc, nc) {
+                            (Some(o), Some(n)) if o < n => {
+                                col_idx.push(o);
+                                values.push(old_vals[i]);
+                                i += 1;
+                            }
+                            (Some(o), Some(n)) if o == n => {
+                                // upsert replaces; delete drops
+                                if let Some(w) = ops[j].1 {
+                                    col_idx.push(n);
+                                    values.push(w);
+                                }
+                                i += 1;
+                                j += 1;
+                            }
+                            (_, Some(n)) => match ops[j].1 {
+                                Some(w) => {
+                                    col_idx.push(n);
+                                    values.push(w);
+                                    j += 1;
+                                }
+                                None => {
+                                    return Err(Error::InvalidSparse(format!(
+                                        "delta deletes missing edge ({r},{n})"
+                                    )));
+                                }
+                            },
+                            (Some(o), None) => {
+                                col_idx.push(o);
+                                values.push(old_vals[i]);
+                                i += 1;
+                            }
+                            (None, None) => unreachable!("loop condition"),
+                        }
+                    }
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Ok(Csr::from_parts_unchecked(self.rows, self.cols, row_ptr, col_idx, values))
+    }
+
     /// Mean / median / tail row-length statistics (see [`RowLenStats`]).
     /// O(rows log rows); drives the tuner's sparse-format pruning
     /// heuristic and the tuning reports.
@@ -358,6 +479,50 @@ impl RowLenStats {
     /// clearly hopeless case.
     pub fn format_promising(&self) -> bool {
         self.max > 0 && (self.mean <= 32.0 || self.skew() >= 2.0)
+    }
+}
+
+/// A batch of incremental edge mutations against one adjacency matrix —
+/// the input to [`Csr::apply_edge_delta`] and, one level up, to the
+/// serving registry's live-mutation path. Built with the fluent helpers
+/// (`EdgeDelta::new().add(0, 3, 1.0).del(2, 5)`) or by filling the public
+/// fields directly.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EdgeDelta {
+    /// Edges to insert — or re-weight, when the edge already exists
+    /// (upsert): `(row, col, weight)`.
+    pub insert: Vec<(usize, usize, f32)>,
+    /// Edges to remove: `(row, col)`. Removing a missing edge is a
+    /// validation error, not a no-op.
+    pub delete: Vec<(usize, usize)>,
+}
+
+impl EdgeDelta {
+    /// An empty delta.
+    pub fn new() -> Self {
+        EdgeDelta::default()
+    }
+
+    /// Queue an edge insert/upsert.
+    pub fn add(mut self, row: usize, col: usize, weight: f32) -> Self {
+        self.insert.push((row, col, weight));
+        self
+    }
+
+    /// Queue an edge delete.
+    pub fn del(mut self, row: usize, col: usize) -> Self {
+        self.delete.push((row, col));
+        self
+    }
+
+    /// Total queued mutations.
+    pub fn len(&self) -> usize {
+        self.insert.len() + self.delete.len()
+    }
+
+    /// True when no mutations are queued.
+    pub fn is_empty(&self) -> bool {
+        self.insert.is_empty() && self.delete.is_empty()
     }
 }
 
@@ -521,5 +686,81 @@ mod tests {
         assert_eq!(s.mean, 100.0);
         assert!(s.skew() < 2.0);
         assert!(!s.format_promising());
+    }
+
+    #[test]
+    fn edge_delta_inserts_deletes_and_upserts() {
+        // sample:
+        // [[0 1 2]
+        //  [0 0 0]
+        //  [3 0 4]]
+        let m = sample();
+        let delta = EdgeDelta::new()
+            .add(1, 1, 9.0) // new edge in an empty row
+            .add(0, 0, 5.0) // new edge before existing ones
+            .add(2, 2, 7.0) // upsert over the 4.0
+            .del(0, 2); // remove the 2.0
+        let next = m.apply_edge_delta(&delta).unwrap();
+        next.validate().unwrap();
+        let d = next.to_dense();
+        assert_eq!(d.get(0, 0), 5.0);
+        assert_eq!(d.get(0, 1), 1.0);
+        assert_eq!(d.get(0, 2), 0.0);
+        assert_eq!(d.get(1, 1), 9.0);
+        assert_eq!(d.get(2, 0), 3.0);
+        assert_eq!(d.get(2, 2), 7.0);
+        assert_eq!(next.nnz(), m.nnz() + 2 - 1);
+        // the source matrix is untouched (next epoch, not in-place)
+        assert_eq!(m, sample());
+        // an empty delta reproduces the matrix exactly
+        assert_eq!(m.apply_edge_delta(&EdgeDelta::new()).unwrap(), m);
+        // untouched rows are copied bit-for-bit
+        let only_row0 = m.apply_edge_delta(&EdgeDelta::new().add(0, 0, 1.5)).unwrap();
+        assert_eq!(only_row0.row_cols(2), m.row_cols(2));
+        assert_eq!(only_row0.row_vals(2), m.row_vals(2));
+    }
+
+    #[test]
+    fn edge_delta_validates_at_the_trust_boundary() {
+        let m = sample();
+        // out-of-bounds indices
+        let err = m.apply_edge_delta(&EdgeDelta::new().add(3, 0, 1.0)).unwrap_err();
+        assert!(err.to_string().contains("out of bounds"), "{err}");
+        let err = m.apply_edge_delta(&EdgeDelta::new().del(0, 9)).unwrap_err();
+        assert!(err.to_string().contains("out of bounds"), "{err}");
+        // non-finite weight
+        let err = m.apply_edge_delta(&EdgeDelta::new().add(0, 0, f32::NAN)).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        // duplicate target within one delta (insert+insert and insert+delete)
+        let err = m
+            .apply_edge_delta(&EdgeDelta::new().add(0, 0, 1.0).add(0, 0, 2.0))
+            .unwrap_err();
+        assert!(err.to_string().contains("more than once"), "{err}");
+        let err =
+            m.apply_edge_delta(&EdgeDelta::new().add(0, 1, 1.0).del(0, 1)).unwrap_err();
+        assert!(err.to_string().contains("more than once"), "{err}");
+        // deleting a missing edge is an error, not a silent no-op
+        let err = m.apply_edge_delta(&EdgeDelta::new().del(1, 1)).unwrap_err();
+        assert!(err.to_string().contains("missing edge"), "{err}");
+        // every failure is the typed InvalidSparse variant
+        assert!(matches!(err, Error::InvalidSparse(_)));
+        // delta helpers
+        let d = EdgeDelta::new().add(0, 1, 1.0).del(2, 0);
+        assert_eq!(d.len(), 2);
+        assert!(!d.is_empty());
+        assert!(EdgeDelta::new().is_empty());
+    }
+
+    #[test]
+    fn edge_delta_merge_keeps_rows_sorted_under_interleaving() {
+        // row 0 holds cols {1, 2}; interleave inserts on both sides and
+        // between, out of submission order — the merge must sort
+        let m = sample();
+        let next = m
+            .apply_edge_delta(&EdgeDelta::new().add(0, 0, 0.5).del(0, 1).add(0, 2, 1.5))
+            .unwrap();
+        next.validate().unwrap();
+        assert_eq!(next.row_cols(0), &[0, 2]);
+        assert_eq!(next.row_vals(0), &[0.5, 1.5]);
     }
 }

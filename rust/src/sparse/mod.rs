@@ -26,7 +26,7 @@ mod sell;
 
 pub use coo::Coo;
 pub use csc::Csc;
-pub use csr::{Csr, RowLenStats};
+pub use csr::{Csr, EdgeDelta, RowLenStats};
 pub use norm::{degree_counts, degree_vector, gcn_normalize, row_normalize, NormKind};
 pub use sell::{Sell, SortedCsr};
 

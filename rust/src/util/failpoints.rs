@@ -5,8 +5,12 @@
 //! named site: [`check`] for `Result` contexts (can inject a transient
 //! error) and [`trigger`] for infallible ones (panic / delay only). The
 //! kernels mark the SpMM dispatch (`"kernels.spmm"`), the workspace marks
-//! buffer recycling (`"workspace.recycle"`), and the serving scheduler
-//! marks batch execution (`"serve.run_batch"`). Without the feature both
+//! buffer recycling (`"workspace.recycle"`), and the serving layer marks
+//! batch execution (`"serve.run_batch"`) plus its two live-mutation
+//! commit paths — `"serve.apply_delta"` (after delta validation, before
+//! any side effect) and `"serve.hot_swap"` (after shape validation,
+//! before the version flip) — so chaos tests can prove a fault
+//! mid-mutation leaves the old epoch/model serving. Without the feature both
 //! functions are inlined empty — zero cost, zero behavior change — which
 //! is why `scripts/tier1.sh` runs the test suite both ways.
 //!

@@ -1,0 +1,426 @@
+//! Live-mutation integration: epoch-versioned graph deltas and atomic
+//! model hot-swaps against the full serving stack.
+//!
+//! The acceptance story for dynamic-graph serving: a session can be
+//! mutated — edges inserted/deleted, model parameters hot-swapped —
+//! while requests are queued and flowing, and **every** completed
+//! request is bitwise-equal to the sequential reference at its
+//! admission-time `(epoch, model_version)` stamp. The property test
+//! drives random interleavings of submits, deltas, swaps, and partial
+//! drains through the seeded [`forall`] harness (replayable with
+//! `ISPLIB_CHECK_SEED`); the chaos module (behind `--features
+//! failpoints`) injects faults into the mutation commit paths and
+//! asserts the old epoch/model keeps serving bit-for-bit.
+
+use std::collections::{BTreeSet, HashMap};
+use std::time::Duration;
+
+use isplib::autotune::{DbEntry, HardwareProfile, TuneConfig, Tuner, TuningDb};
+use isplib::dense::Dense;
+use isplib::gnn::{GnnModel, ModelParams};
+use isplib::serve::{EdgeDelta, InferenceServer, ServeConfig};
+use isplib::sparse::{Coo, Csr};
+use isplib::util::check::{default_cases, forall};
+use isplib::util::rng::Rng;
+
+/// A symmetric ring over `n` nodes: every row keeps at least its two ring
+/// edges however many inserted edges a test later deletes, so GCN
+/// normalisation never meets an empty row.
+fn ring_graph(n: usize) -> (Csr, BTreeSet<(usize, usize)>) {
+    let mut coo = Coo::new(n, n);
+    let mut edges = BTreeSet::new();
+    for i in 0..n {
+        let j = (i + 1) % n;
+        coo.push_sym(i, j, 1.0);
+        edges.insert((i, j));
+        edges.insert((j, i));
+    }
+    (coo.to_csr(), edges)
+}
+
+fn dims() -> ModelParams {
+    ModelParams { in_dim: 4, hidden: 8, classes: 3 }
+}
+
+/// Build a random valid delta against the mirrored edge set: inserts at
+/// fresh or existing (upsert) positions, deletes only among edges a
+/// previous delta inserted (ring edges stay, keeping rows non-empty).
+/// Updates the mirrors to match what the server will hold after commit.
+fn random_delta(
+    n: usize,
+    edges: &mut BTreeSet<(usize, usize)>,
+    inserted: &mut Vec<(usize, usize)>,
+    rng: &mut Rng,
+) -> EdgeDelta {
+    let mut delta = EdgeDelta::new();
+    let mut touched: BTreeSet<(usize, usize)> = BTreeSet::new();
+    for _ in 0..(1 + rng.gen_range(3)) {
+        if !inserted.is_empty() && rng.gen_bool(0.3) {
+            let k = rng.gen_range(inserted.len());
+            let (r, c) = inserted[k];
+            if touched.insert((r, c)) {
+                inserted.swap_remove(k);
+                edges.remove(&(r, c));
+                delta = delta.del(r, c);
+            }
+        } else {
+            let (r, c) = (rng.gen_range(n), rng.gen_range(n));
+            if touched.insert((r, c)) {
+                if edges.insert((r, c)) {
+                    inserted.push((r, c));
+                }
+                delta = delta.add(r, c, rng.gen_range_f32(0.1, 1.0));
+            }
+        }
+    }
+    delta
+}
+
+/// The tentpole property: over random interleavings of submits, edge
+/// deltas, model swaps, and partial drains, every completion is
+/// bitwise-equal to the [`InferenceServer::infer_at`] reference taken at
+/// its admission stamp — and once nothing is in flight, exactly one
+/// epoch and one param version remain live.
+#[test]
+fn random_interleavings_serve_every_request_at_its_admission_stamp() {
+    forall("serve_mutation_interleaving", default_cases(), |rng| {
+        let n = 8 + rng.gen_range(9);
+        let (adj, mut edges) = ring_graph(n);
+        let mut inserted: Vec<(usize, usize)> = Vec::new();
+        let cfg = ServeConfig {
+            max_batch: 1 + rng.gen_range(4),
+            quantum: 8,
+            threads: 1,
+            max_wait: Duration::ZERO,
+            // flip between always-refresh and the default carry-leaning
+            // policy: correctness must not depend on the tuning decision
+            staleness: if rng.gen_bool(0.5) { 0.0 } else { 0.25 },
+            ..ServeConfig::default()
+        };
+        let mut server = InferenceServer::new(cfg);
+        let d = dims();
+        let sid = server
+            .register_session(
+                "mutate-prop",
+                GnnModel::Gcn,
+                d,
+                GnnModel::Gcn.init_params(d, 7),
+                &adj,
+                None,
+            )
+            .unwrap();
+
+        let mut expect: HashMap<u64, Vec<f32>> = HashMap::new();
+        let mut completed = Vec::new();
+        for _ in 0..24 {
+            match rng.gen_range(8) {
+                0..=3 => {
+                    let x = Dense::uniform(n, d.in_dim, 1.0, rng);
+                    let rid = server.submit(sid, x.clone()).unwrap();
+                    let s = server.session(sid).unwrap();
+                    let (e, v) = (s.epoch(), s.model_version());
+                    expect.insert(rid, server.infer_at(sid, e, v, &x).unwrap().data);
+                }
+                4 | 5 => {
+                    let delta = random_delta(n, &mut edges, &mut inserted, rng);
+                    let before = server.session(sid).unwrap().epoch();
+                    let out = server.apply_delta(sid, &delta, None).unwrap();
+                    assert_eq!(out.epoch, before + 1);
+                }
+                6 => {
+                    let seed = rng.next_u64();
+                    server.swap_model(sid, GnnModel::Gcn.init_params(d, seed)).unwrap();
+                }
+                _ => completed.extend(server.run_ready().unwrap()),
+            }
+        }
+        completed.extend(server.run_until_drained().unwrap());
+
+        assert_eq!(completed.len(), expect.len(), "every request terminates exactly once");
+        for c in &completed {
+            assert_eq!(
+                c.expect_output().data, expect[&c.id],
+                "request {} diverged from its admission-stamp reference",
+                c.id
+            );
+        }
+        // quiescent: every superseded epoch/version has retired
+        let s = server.session(sid).unwrap();
+        assert_eq!(s.live_epochs(), 1, "old epochs must retire once nothing is in flight");
+        assert_eq!(s.live_param_versions(), 1);
+    });
+}
+
+/// Mutating one tenant never perturbs a co-tenant sharing the scheduler
+/// and workspace: the bystander's completions stay bitwise-equal to its
+/// own pre-churn references throughout.
+#[test]
+fn mutations_on_one_tenant_leave_the_co_tenant_bitwise_clean() {
+    let mut server = InferenceServer::new(ServeConfig {
+        max_batch: 4,
+        quantum: 4,
+        threads: 1,
+        max_wait: Duration::ZERO,
+        ..ServeConfig::default()
+    });
+    let d = dims();
+    let (adj_a, mut edges) = ring_graph(16);
+    let (adj_b, _) = ring_graph(12);
+    let mut inserted = Vec::new();
+    let churn = server
+        .register_session("mut-churner", GnnModel::Gcn, d, GnnModel::Gcn.init_params(d, 1), &adj_a, None)
+        .unwrap();
+    let stay = server
+        .register_session("mut-bystander", GnnModel::Gcn, d, GnnModel::Gcn.init_params(d, 2), &adj_b, None)
+        .unwrap();
+    let mut rng = Rng::seed_from_u64(55);
+    let mut expect: HashMap<u64, Vec<f32>> = HashMap::new();
+    let mut completed = Vec::new();
+    for round in 0..6 {
+        for _ in 0..2 {
+            let x = Dense::uniform(16, d.in_dim, 1.0, &mut rng);
+            let rid = server.submit(churn, x.clone()).unwrap();
+            let s = server.session(churn).unwrap();
+            let (e, v) = (s.epoch(), s.model_version());
+            expect.insert(rid, server.infer_at(churn, e, v, &x).unwrap().data);
+            let xb = Dense::uniform(12, d.in_dim, 1.0, &mut rng);
+            let rid = server.submit(stay, xb.clone()).unwrap();
+            expect.insert(rid, server.infer_at(stay, 0, 0, &xb).unwrap().data);
+        }
+        if round % 2 == 0 {
+            let delta = random_delta(16, &mut edges, &mut inserted, &mut rng);
+            server.apply_delta(churn, &delta, None).unwrap();
+        } else {
+            server.swap_model(churn, GnnModel::Gcn.init_params(d, 100 + round)).unwrap();
+        }
+        completed.extend(server.run_ready().unwrap());
+    }
+    completed.extend(server.run_until_drained().unwrap());
+    assert_eq!(completed.len(), expect.len());
+    for c in &completed {
+        assert_eq!(c.expect_output().data, expect[&c.id], "request {}", c.id);
+    }
+    // the bystander never moved off its registration stamp
+    let s = server.session(stay).unwrap();
+    assert_eq!((s.epoch(), s.model_version()), (0, 0));
+    assert_eq!(server.metrics(stay).unwrap().deltas_applied, 0);
+    // the churner accumulated its mutations
+    let s = server.session(churn).unwrap();
+    assert_eq!(s.epoch(), 3);
+    assert_eq!(s.model_version(), 3);
+}
+
+/// A warm-started session keeps its zero-conversion hot path across
+/// deltas: below the staleness threshold the tuned format carries over
+/// (re-materialised for the new epoch off the request path), the retired
+/// epoch's conversion leaves the workspace, and serving stays
+/// bitwise-equal to the reference.
+#[test]
+fn tuned_formats_follow_epochs_under_churn() {
+    let name = "mutate-warm";
+    let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+    let mut db = TuningDb::default();
+    db.put(
+        name,
+        "amd-epyc",
+        8,
+        DbEntry { sell: Some((4, 32)), speedup: 1.5, ..DbEntry::default() },
+    );
+    let mut server = InferenceServer::new(ServeConfig {
+        max_batch: 1,
+        quantum: 4,
+        threads: 1,
+        max_wait: Duration::ZERO,
+        staleness: 1e9, // never refresh: the carry path is under test
+        ..ServeConfig::default()
+    });
+    let d = dims();
+    let (adj, _) = ring_graph(48);
+    let sid = server
+        .register_session(
+            name,
+            GnnModel::Gcn,
+            d,
+            GnnModel::Gcn.init_params(d, 5),
+            &adj,
+            Some((&tuner, &db)),
+        )
+        .unwrap();
+    assert_eq!(server.workspace().cached_formats(), 1, "warm start converted one format");
+
+    let mut rng = Rng::seed_from_u64(66);
+    let x = Dense::uniform(48, d.in_dim, 1.0, &mut rng);
+    server.submit(sid, x.clone()).unwrap();
+    let done = server.run_until_drained().unwrap();
+    assert_eq!(done[0].expect_output().data, server.infer_now(sid, &x).unwrap().data);
+
+    let out = server
+        .apply_delta(sid, &EdgeDelta::new().add(0, 24, 0.5).add(24, 0, 0.5), Some((&tuner, &db)))
+        .unwrap();
+    assert!(!out.refreshed, "drift {} must stay under the 1e9 threshold", out.drift);
+    assert_eq!(
+        server.workspace().cached_formats(),
+        1,
+        "epoch 0's conversion retired with it; epoch 1 carries exactly one"
+    );
+    // the carried format still serves the new structure bitwise-correctly
+    server.submit(sid, x.clone()).unwrap();
+    let done = server.run_until_drained().unwrap();
+    assert_eq!(done[0].expect_output().data, server.infer_now(sid, &x).unwrap().data);
+    // close releases the lot
+    server.close_session(sid).unwrap();
+    assert_eq!(server.workspace().cached_formats(), 0);
+}
+
+/// Fault injection against the mutation commit paths (`--features
+/// failpoints`): a fault mid-delta or mid-swap must leave the old
+/// epoch/model serving bit-for-bit, including work already queued, and
+/// the whole schedule must reproduce exactly from fixed seeds.
+#[cfg(feature = "failpoints")]
+mod chaos {
+    use super::*;
+    use isplib::error::Error;
+    use isplib::util::failpoints::{self, FailAction, FailPlan};
+
+    #[test]
+    fn fault_during_delta_with_queued_work_keeps_old_epoch_serving() {
+        let _guard = failpoints::exclusive();
+        failpoints::clear();
+        let name = "mut-chaos-delta";
+        let mut server = InferenceServer::new(ServeConfig {
+            max_batch: 4,
+            quantum: 4,
+            threads: 1,
+            ..ServeConfig::default()
+        });
+        let d = dims();
+        let (adj, _) = ring_graph(12);
+        let sid = server
+            .register_session(name, GnnModel::Gcn, d, GnnModel::Gcn.init_params(d, 3), &adj, None)
+            .unwrap();
+        let mut rng = Rng::seed_from_u64(77);
+        let mut expect = HashMap::new();
+        for _ in 0..3 {
+            let x = Dense::uniform(12, d.in_dim, 1.0, &mut rng);
+            let rid = server.submit(sid, x.clone()).unwrap();
+            expect.insert(rid, server.infer_at(sid, 0, 0, &x).unwrap().data);
+        }
+
+        failpoints::configure(
+            "serve.apply_delta",
+            FailPlan::always(FailAction::Panic).with_tag(name).limit(1),
+        );
+        let delta = EdgeDelta::new().add(0, 6, 0.5).add(6, 0, 0.5);
+        let err = server.apply_delta(sid, &delta, None).unwrap_err();
+        assert!(matches!(err, Error::RequestFailed(_)), "{err}");
+        assert_eq!(server.session(sid).unwrap().epoch(), 0, "failed delta is a no-op");
+
+        // the queued cohort drains bitwise-clean off the untouched epoch
+        let done = server.run_until_drained().unwrap();
+        assert_eq!(done.len(), 3);
+        for c in &done {
+            assert_eq!(c.expect_output().data, expect[&c.id], "request {}", c.id);
+        }
+        failpoints::clear();
+    }
+
+    #[test]
+    fn seeded_mutation_fault_schedule_is_deterministic_and_bitwise_clean() {
+        let _guard = failpoints::exclusive();
+        let name = "mut-chaos-seeded";
+
+        // one full churn run under a probabilistic fault schedule; returns
+        // every terminal observation so two runs can be compared byte for
+        // byte
+        let run = || -> (Vec<(u64, Vec<f32>)>, u32, u32, u64, u64, u64) {
+            failpoints::clear();
+            failpoints::configure(
+                "serve.apply_delta",
+                FailPlan::always(FailAction::Panic).with_tag(name).with_probability(0.5, 7),
+            );
+            failpoints::configure(
+                "serve.hot_swap",
+                FailPlan::always(FailAction::TransientError)
+                    .with_tag(name)
+                    .with_probability(0.5, 9),
+            );
+            let mut server = InferenceServer::new(ServeConfig {
+                max_batch: 4,
+                quantum: 8,
+                threads: 1,
+                max_wait: Duration::ZERO,
+                ..ServeConfig::default()
+            });
+            let d = dims();
+            let n = 12;
+            let (adj, mut edges) = ring_graph(n);
+            let mut inserted = Vec::new();
+            let sid = server
+                .register_session(name, GnnModel::Gcn, d, GnnModel::Gcn.init_params(d, 4), &adj, None)
+                .unwrap();
+            let mut rng = Rng::seed_from_u64(88);
+            let mut expect: HashMap<u64, Vec<f32>> = HashMap::new();
+            let mut served: Vec<(u64, Vec<f32>)> = Vec::new();
+            let mut observed = Vec::new();
+            for step in 0..18 {
+                match step % 4 {
+                    0 | 2 => {
+                        let x = Dense::uniform(n, d.in_dim, 1.0, &mut rng);
+                        let rid = server.submit(sid, x.clone()).unwrap();
+                        let s = server.session(sid).unwrap();
+                        let (e, v) = (s.epoch(), s.model_version());
+                        expect.insert(rid, server.infer_at(sid, e, v, &x).unwrap().data);
+                    }
+                    1 => {
+                        // mirror the server state only when the delta lands
+                        let mut e2 = edges.clone();
+                        let mut i2 = inserted.clone();
+                        let delta = random_delta(n, &mut e2, &mut i2, &mut rng);
+                        if server.apply_delta(sid, &delta, None).is_ok() {
+                            edges = e2;
+                            inserted = i2;
+                        }
+                    }
+                    _ => {
+                        let seed = rng.next_u64();
+                        let _ = server.swap_model(sid, GnnModel::Gcn.init_params(d, seed));
+                    }
+                }
+                observed.extend(server.run_ready().unwrap());
+            }
+            observed.extend(server.run_until_drained().unwrap());
+            // under mutation faults every REQUEST still succeeds bitwise —
+            // faults target the commit paths, not batch execution
+            for c in &observed {
+                let out = c.expect_output();
+                assert_eq!(out.data, expect[&c.id], "request {}", c.id);
+                served.push((c.id, out.data.clone()));
+            }
+            served.sort_by_key(|(id, _)| *id);
+            let s = server.session(sid).unwrap();
+            let m = server.metrics(sid).unwrap();
+            let summary = (
+                served,
+                s.epoch(),
+                s.model_version(),
+                m.deltas_applied,
+                m.swaps,
+                m.swaps_rejected,
+            );
+            failpoints::clear();
+            summary
+        };
+
+        let first = run();
+        let second = run();
+        assert_eq!(first, second, "the fault schedule must reproduce exactly from its seeds");
+        let (_, epoch, version, deltas, swaps, swaps_rejected) = first;
+        // whatever the coin decided, the books must balance: every
+        // committed mutation bumped its stamp exactly once, and every
+        // swap attempt terminated typed (committed or rejected)
+        assert_eq!(epoch as u64, deltas, "every committed delta bumped the epoch once");
+        assert_eq!(version as u64, swaps, "every committed swap bumped the version once");
+        assert_eq!(swaps + swaps_rejected, 4, "all four swap attempts terminated typed");
+        assert!(deltas <= 5, "five delta attempts at most");
+    }
+}

@@ -89,7 +89,7 @@ fn concurrent_multi_graph_workspace_use() {
                         Semiring::Sum,
                         KernelChoice::Trusted,
                         2,
-                        Some((&ws, id)),
+                        Some((&ws, id.into())),
                     )
                     .unwrap();
                     assert_eq!(y.data, want.data, "thread {t} round {round}");
@@ -107,10 +107,10 @@ fn concurrent_multi_graph_workspace_use() {
     assert!(stats.buffer_reuses > 0, "{stats:?}");
     assert!(ws.cached_partitions() >= 2);
     // per-graph eviction leaves the other tenant's entries intact
-    let evicted = ws.evict(1);
+    let evicted = ws.evict(1u64);
     assert!(evicted >= 1);
     assert!(ws.cached_partitions() >= 1);
-    let y = spmm_with_workspace(&g2, &x2, Semiring::Sum, KernelChoice::Trusted, 2, Some((&ws, 2)))
+    let y = spmm_with_workspace(&g2, &x2, Semiring::Sum, KernelChoice::Trusted, 2, Some((&ws, 2u64.into())))
         .unwrap();
     assert_eq!(y.data, want2.data);
 }

@@ -13,6 +13,13 @@
 # disabled-path/no-allocation contract and the Perfetto export, and the
 # failpoints pass additionally checks that injected faults surface in the
 # registry snapshot.
+#
+# The live-mutation suite (tests/mutation_integration.rs) likewise runs
+# in BOTH passes: the default pass property-checks random delta / swap /
+# request interleavings for bitwise equality against each request's
+# admission-stamp reference, and the failpoints pass arms the
+# serve.apply_delta / serve.hot_swap sites so mid-mutation faults are
+# exercised (old epoch / old model must keep serving untouched).
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
@@ -20,5 +27,7 @@ cargo build --release
 cargo clippy --all-targets -- -D warnings
 cargo test -q
 cargo test -q --test obs_integration
+cargo test -q --test mutation_integration
 cargo test -q --features failpoints
 cargo test -q --features failpoints --test obs_integration
+cargo test -q --features failpoints --test mutation_integration
