@@ -23,6 +23,17 @@
 //!   (SpMM then separate bias/relu passes), `speedup` = unfused/fused —
 //!   the cell-level evidence behind the tuner's joint (format, fuse)
 //!   decision.
+//! * `shard` — topology-aware sharding: per (graph × shard count), the
+//!   sharded SpMM against the flat dispatch at the same (k, threads).
+//!   Sharded execution is bitwise-equal to flat *by construction* (the
+//!   gathered panel renames columns monotonically and the merge writes
+//!   disjoint row ranges; the bench asserts the bits before timing), so
+//!   `speedup` is a pure perf number — > 1 means shard-local working
+//!   sets beat one global dispatch on this machine. Each row also
+//!   carries the shard plan's `halo_bytes` (cross-shard panel traffic
+//!   per SpMM at this k) and `imbalance` (max-shard-nnz × shards /
+//!   total-nnz; 1.0 = a perfectly balanced cut), so the traffic/balance
+//!   trade behind the tuner's shard axis is inspectable PR-over-PR.
 //! * `inplace` — copying (`_into`) vs in-place dense-op kernels
 //!   (relu / bias_add / add), `speedup` = copy/in-place — what in-place
 //!   slot execution saves per eligible plan op.
@@ -52,8 +63,8 @@ use isplib::data::spec_by_name;
 use isplib::dense::Dense;
 use isplib::gnn::{GnnModel, ModelParams};
 use isplib::kernels::{
-    prepare_format, spmm_fused_relu_with_workspace, spmm_with_workspace, KernelChoice,
-    KernelWorkspace, Semiring, TILED_KTS,
+    prepare_format, shard_count_candidates, spmm_fused_relu_with_workspace, spmm_sharded,
+    spmm_with_workspace, KernelChoice, KernelWorkspace, Semiring, TILED_KTS,
 };
 use isplib::plan::{execute_inference, ExecutionPlan};
 use isplib::sparse::{Coo, Csr};
@@ -382,6 +393,91 @@ fn main() {
         }
     }
 
+    // --- shard: sharded vs flat SpMM per (graph × shard count) -----------
+    // Parity first, perf second: every sharded result is asserted
+    // bitwise-equal to the flat dispatch before its cell is timed, so a
+    // `speedup` below 1.0 is an honest "sharding doesn't pay here", never
+    // a wrong answer. Candidates come from `shard_count_candidates()`
+    // (powers of two up to `available_parallelism`), padded with {2, 4}
+    // so the section has machine-independent coverage even on small
+    // runners — spmm_sharded is well-defined past the core count.
+    let mut shard_rows = Vec::new();
+    for (gi, (gname, a)) in graphs.iter().enumerate() {
+        let ws = KernelWorkspace::new();
+        let graph_id = 200 + gi as u64;
+        let (k, threads) = (64usize, 4usize);
+        let x = Dense::uniform(a.rows, k, 1.0, &mut rng);
+        let flat_ns =
+            time_spmm_ns(cfg, a, &x, Semiring::Sum, KernelChoice::Trusted, threads, &ws, graph_id);
+        let flat = spmm_with_workspace(
+            a,
+            &x,
+            Semiring::Sum,
+            KernelChoice::Trusted,
+            threads,
+            Some((&ws, graph_id.into())),
+        )
+        .unwrap();
+        let mut counts = shard_count_candidates();
+        for extra in [2usize, 4] {
+            if !counts.contains(&extra) {
+                counts.push(extra);
+            }
+        }
+        counts.sort_unstable();
+        for shards in counts.into_iter().filter(|&s| s >= 2) {
+            let plan = ws.shard_plan(graph_id, a, shards);
+            let y = spmm_sharded(
+                a,
+                &x,
+                Semiring::Sum,
+                KernelChoice::Trusted,
+                threads,
+                Some((&ws, graph_id.into())),
+                shards,
+            )
+            .unwrap();
+            assert_eq!(y.data, flat.data, "sharded SpMM must stay bitwise-equal to flat");
+            ws.recycle(y.data);
+            let ns = time_case(cfg, "shard", || {
+                let y = spmm_sharded(
+                    a,
+                    &x,
+                    Semiring::Sum,
+                    KernelChoice::Trusted,
+                    threads,
+                    Some((&ws, graph_id.into())),
+                    shards,
+                )
+                .unwrap();
+                std::hint::black_box(&y.data[..]);
+                ws.recycle(y.data);
+            })
+            .median_secs
+                * 1e9;
+            let speedup = flat_ns / ns.max(1e-9);
+            println!(
+                "shard graph={gname:<9} k={k} threads={threads} shards={shards:<3} \
+                 {ns:>14.0} ns/iter  flat {flat_ns:>14.0} ns/iter  {speedup:>5.2}x  \
+                 halo={} B  imbalance={:.3}",
+                plan.halo_bytes(k),
+                plan.imbalance()
+            );
+            shard_rows.push(Json::obj(vec![
+                ("graph", Json::str(gname)),
+                ("k", Json::num(k as f64)),
+                ("threads", Json::num(threads as f64)),
+                ("shards", Json::num(shards as f64)),
+                ("ns_per_iter", Json::num(ns)),
+                ("flat_ns_per_iter", Json::num(flat_ns)),
+                ("speedup", Json::num(speedup)),
+                ("halo_bytes", Json::num(plan.halo_bytes(k) as f64)),
+                ("imbalance", Json::num(plan.imbalance())),
+            ]));
+        }
+        ws.recycle(flat.data);
+    }
+
     // --- inplace: copying vs in-place dense ops --------------------------
     // What in-place slot execution buys per eligible plan op: the `_into`
     // kernels write a second matrix the next op immediately re-reads; the
@@ -511,6 +607,7 @@ fn main() {
         ("kernels", Json::Arr(rows)),
         ("plan", Json::Arr(plan_rows)),
         ("fused_formats", Json::Arr(ff_rows)),
+        ("shard", Json::Arr(shard_rows)),
         ("inplace", Json::Arr(ip_rows)),
         ("overhead", Json::obj(vec![
             ("calls", Json::num(calls as f64)),

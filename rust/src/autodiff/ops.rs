@@ -70,6 +70,12 @@ pub struct SpmmOperand {
     /// `None` — the default for ad-hoc operands — means every SpMM call
     /// allocates and partitions from scratch.
     pub workspace: Option<Arc<KernelWorkspace>>,
+    /// Shard count for this operand's SpMM calls (1 = unsharded, the
+    /// default). Stamped from [`ExecutionPlan::shards`]
+    /// (`crate::plan::ExecutionPlan::shards`) by the plan executors, so
+    /// training, inference and serving all route through the sharded
+    /// dispatch with no per-path special cases.
+    pub shards: usize,
 }
 
 impl SpmmOperand {
@@ -86,6 +92,7 @@ impl SpmmOperand {
             graph_id: context_graph_id(context),
             epoch: 0,
             workspace: None,
+            shards: 1,
         }
     }
 
@@ -102,6 +109,7 @@ impl SpmmOperand {
             graph_id: context_graph_id(context),
             epoch: 0,
             workspace: None,
+            shards: 1,
         }
     }
 
@@ -117,6 +125,7 @@ impl SpmmOperand {
             graph_id: context_graph_id(context),
             epoch: 0,
             workspace: None,
+            shards: 1,
         }
     }
 
@@ -133,6 +142,7 @@ impl SpmmOperand {
             graph_id: context_graph_id(context),
             epoch: 0,
             workspace: None,
+            shards: 1,
         }
     }
 
@@ -149,6 +159,7 @@ impl SpmmOperand {
             graph_id: context_graph_id(context),
             epoch: 0,
             workspace: None,
+            shards: 1,
         }
     }
 
@@ -168,6 +179,14 @@ impl SpmmOperand {
     /// under `(graph_id, epoch)`.
     pub fn with_epoch(mut self, epoch: u32) -> Self {
         self.epoch = epoch;
+        self
+    }
+
+    /// Stamp this operand with a shard count. `0` is normalised to `1`
+    /// (unsharded); the executors call this once per plan execution with
+    /// the plan's shard property.
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
         self
     }
 

@@ -31,8 +31,7 @@
 use crate::dense::Dense;
 use crate::error::{Error, Result};
 use crate::kernels::{
-    fused_relu_epilogue, spmm_fused_relu_with_workspace, spmm_with_workspace, KernelWorkspace,
-    Semiring,
+    fused_relu_epilogue, spmm_fused_relu_sharded, spmm_sharded, KernelWorkspace, Semiring,
 };
 
 use crate::autotune::KernelRegistry;
@@ -188,7 +187,18 @@ impl Tape {
                 let choice =
                     KernelRegistry::global().resolve(&operand.context, xv.cols, Semiring::Sum);
                 let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_key()));
-                spmm_with_workspace(&operand.a, xv, Semiring::Sum, choice, self.threads, ws)
+                // sharded dispatch — delegates to the flat kernel when the
+                // operand is unsharded (shards ≤ 1), so this is the single
+                // SpMM routing for both modes
+                spmm_sharded(
+                    &operand.a,
+                    xv,
+                    Semiring::Sum,
+                    choice,
+                    self.threads,
+                    ws,
+                    operand.shards,
+                )
             }
             SpmmImpl::EdgeWise => operand.edgewise_forward(xv),
             SpmmImpl::Dense => operand.dense.as_ref().expect("dense operand").matmul(xv),
@@ -211,7 +221,9 @@ impl Tape {
                     .workspace
                     .as_deref()
                     .map(|w| (w, operand.graph_key().transpose()));
-                spmm_with_workspace(&at, gout, Semiring::Sum, choice, self.threads, ws)
+                // Aᵀ shards under its own plan (different matrix, different
+                // degree profile), cached under the transpose identity
+                spmm_sharded(&at, gout, Semiring::Sum, choice, self.threads, ws, operand.shards)
             }
             SpmmImpl::EdgeWise => operand.edgewise_backward(gout),
             SpmmImpl::Dense => operand.dense.as_ref().expect("dense operand").t_matmul(gout),
@@ -273,7 +285,15 @@ impl Tape {
                 let choice =
                     KernelRegistry::global().resolve(&operand.context, xv.cols, Semiring::Sum);
                 let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_key()));
-                spmm_fused_relu_with_workspace(&operand.a, &xv, bias_row, choice, self.threads, ws)?
+                spmm_fused_relu_sharded(
+                    &operand.a,
+                    &xv,
+                    bias_row,
+                    choice,
+                    self.threads,
+                    ws,
+                    operand.shards,
+                )?
             }
             _ => {
                 let mut y = self.spmm_forward_value(operand, &xv)?;

@@ -14,7 +14,10 @@ use std::time::Instant;
 use crate::dense::Dense;
 use crate::error::Result;
 use crate::util::json::Json;
-use crate::kernels::{prepare_format, spmm_with_workspace, KernelChoice, KernelWorkspace, Semiring};
+use crate::kernels::{
+    prepare_format, shard_count_candidates, spmm_sharded, spmm_with_workspace, KernelChoice,
+    KernelWorkspace, Semiring,
+};
 use crate::sparse::{Csr, RowLenStats, Sell};
 
 use super::{HardwareProfile, KernelRegistry, RegistryEntry, TuningPoint, TuningReport};
@@ -86,6 +89,14 @@ pub struct DbEntry {
     /// leaves the edge unfused. Absent from pre-fusion DBs (JSON
     /// back-compatible: a missing key loads as `None`).
     pub fuse_relu: Option<f64>,
+    /// Winning shard count from the topology axis
+    /// ([`Tuner::tune_shards`]): how many degree-balanced node-range
+    /// shards this entry's kernel/format choice ran fastest with at this
+    /// width (1 = flat). `None` means the shard axis was never measured —
+    /// plans then run flat. Sharding is bitwise-equal to flat execution,
+    /// so this composes freely with the kernel/format/fusion decisions.
+    /// Absent from pre-sharding DBs (a missing key loads as `None`).
+    pub shards: Option<usize>,
 }
 
 impl DbEntry {
@@ -158,8 +169,15 @@ impl TuningDb {
                     Some(Json::Null) | None => None,
                     Some(v) => Some(v.as_f64()?),
                 };
-                entries
-                    .insert(key.clone(), DbEntry { kb, kt, sell, sorted, speedup, fuse_relu });
+                // `shards` is absent in pre-sharding DBs; missing → None.
+                let shards = match val.get_opt("shards") {
+                    Some(Json::Null) | None => None,
+                    Some(v) => Some(v.as_usize()?),
+                };
+                entries.insert(
+                    key.clone(),
+                    DbEntry { kb, kt, sell, sorted, speedup, fuse_relu, shards },
+                );
             }
         }
         Ok(TuningDb { entries })
@@ -188,6 +206,10 @@ impl TuningDb {
                 Some(s) => Json::num(s),
                 None => Json::Null,
             };
+            let shards = match e.shards {
+                Some(s) => Json::num(s as f64),
+                None => Json::Null,
+            };
             map.insert(
                 key.clone(),
                 Json::obj(vec![
@@ -198,6 +220,7 @@ impl TuningDb {
                     ("sorted", Json::bool(e.sorted)),
                     ("speedup", Json::num(e.speedup)),
                     ("fuse_relu", fuse_relu),
+                    ("shards", shards),
                 ]),
             );
         }
@@ -226,6 +249,15 @@ impl TuningDb {
             .and_then(|e| e.fuse_relu)
             .map(|s| s > 1.0)
             .unwrap_or(false)
+    }
+
+    /// The warm-started shard count for this shape, if the shard axis has
+    /// been measured ([`Tuner::tune_shards`]). `None` — including every
+    /// pre-sharding DB — means "unmeasured"; callers then run flat. The
+    /// serving registry applies this to the session plan via
+    /// [`ExecutionPlan::with_shards`](crate::plan::ExecutionPlan::with_shards).
+    pub fn shard_count(&self, dataset: &str, profile: &str, k: usize) -> Option<usize> {
+        self.get(dataset, profile, k).and_then(|e| e.shards)
     }
 }
 
@@ -477,7 +509,9 @@ impl Tuner {
         // ran (tune_fused_relu on this width) survives the overwrite —
         // the two families compose in either call order
         let mut entry = DbEntry::from_choice(best_choice, speedup);
-        entry.fuse_relu = db.get(dataset, &self.profile.name, k).and_then(|e| e.fuse_relu);
+        let prior = db.get(dataset, &self.profile.name, k);
+        entry.fuse_relu = prior.and_then(|e| e.fuse_relu);
+        entry.shards = prior.and_then(|e| e.shards);
         db.put(dataset, &self.profile.name, k, entry);
         Ok(best_choice)
     }
@@ -623,8 +657,104 @@ impl Tuner {
         registry.bind(dataset, k, Semiring::Sum, RegistryEntry { choice, speedup });
         let mut entry = DbEntry::from_choice(choice, speedup);
         entry.fuse_relu = Some(fuse_relu);
+        entry.shards = db.get(dataset, &self.profile.name, k).and_then(|e| e.shards);
         db.put(dataset, &self.profile.name, k, entry);
         Ok(fuse_relu)
+    }
+
+    /// Median-of-reps timing of one kernel choice at one shard count,
+    /// through the sharded entry point. The shard plan (the per-graph
+    /// partition + halo remap, cached in the shared workspace in real
+    /// runs) is primed by one untimed run so every rep measures the warm
+    /// steady state, exactly like [`Tuner::time_choice`] primes format
+    /// conversions.
+    fn time_sharded(
+        &self,
+        a: &Csr,
+        x: &Dense,
+        choice: KernelChoice,
+        shards: usize,
+        ws: &KernelWorkspace,
+    ) -> Result<f64> {
+        let _span = if crate::obs::active() {
+            crate::obs::Span::enter("tune.time_sharded")
+                .arg("k", Json::num(x.cols as f64))
+                .arg("shards", Json::num(shards as f64))
+                .agg(format!("tune.shard_candidate{{k={},shards={shards}}}", x.cols))
+        } else {
+            crate::obs::Span::enter("tune.time_sharded")
+        };
+        prepare_format(a, choice, ws, TUNE_GRAPH_ID);
+        let run = || -> Result<f64> {
+            let t0 = Instant::now();
+            let y = spmm_sharded(
+                a,
+                x,
+                Semiring::Sum,
+                choice,
+                self.config.threads,
+                Some((ws, TUNE_GRAPH_ID.into())),
+                shards,
+            )?;
+            let dt = t0.elapsed().as_secs_f64();
+            std::hint::black_box(&y.data[0]);
+            ws.recycle(y.data);
+            Ok(dt)
+        };
+        run()?; // untimed: builds and caches the shard plan
+        for _ in 0..self.config.warmup {
+            run()?;
+        }
+        let mut times = Vec::with_capacity(self.config.reps.max(1));
+        for _ in 0..self.config.reps.max(1) {
+            times.push(run()?);
+        }
+        times.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        Ok(times[times.len() / 2])
+    }
+
+    /// **Shard-count axis** for one `(dataset, K)`: time the width's bound
+    /// kernel/format choice at every candidate shard count (1, 2, 4, … up
+    /// to `available_parallelism` — [`shard_count_candidates`]) and record
+    /// the fastest in the DB entry's `shards` field. A DB hit returns the
+    /// recorded count without measuring, so the axis warm-starts exactly
+    /// like kernel, format and fusion. Because sharded execution is
+    /// bitwise-equal to flat, this axis composes with the others in any
+    /// call order: it reads whatever choice `registry` currently resolves
+    /// (the joint format×fusion winner when that ran first, trusted
+    /// otherwise) and never disturbs the recorded kernel decision.
+    pub fn tune_shards(
+        &self,
+        dataset: &str,
+        a: &Csr,
+        k: usize,
+        registry: &KernelRegistry,
+        db: &mut TuningDb,
+    ) -> Result<usize> {
+        if let Some(s) = db.shard_count(dataset, &self.profile.name, k) {
+            return Ok(s);
+        }
+        let _span = if crate::obs::active() {
+            crate::obs::Span::enter("tune.tune_shards")
+                .arg("dataset", Json::str(dataset))
+                .arg("k", Json::num(k as f64))
+        } else {
+            crate::obs::Span::enter("tune.tune_shards")
+        };
+        let choice = registry.resolve(dataset, k, Semiring::Sum);
+        let ws = KernelWorkspace::new();
+        let x = deterministic_features(a.cols, k);
+        let mut best = (1usize, f64::INFINITY);
+        for shards in shard_count_candidates() {
+            let t = self.time_sharded(a, &x, choice, shards, &ws)?;
+            if t < best.1 {
+                best = (shards, t);
+            }
+        }
+        let mut entry = db.get(dataset, &self.profile.name, k).cloned().unwrap_or_default();
+        entry.shards = Some(best.0);
+        db.put(dataset, &self.profile.name, k, entry);
+        Ok(best.0)
     }
 }
 
@@ -942,7 +1072,12 @@ mod tests {
         db.put("d", "p", 32, DbEntry { kb: Some(16), speedup: 2.5, ..DbEntry::default() });
         db.put("d", "p", 512, DbEntry { kt: Some(256), speedup: 1.8, ..DbEntry::default() });
         db.put("d", "p", 16, DbEntry { sell: Some((4, 32)), speedup: 1.9, ..DbEntry::default() });
-        db.put("d", "p", 8, DbEntry { sorted: true, speedup: 1.2, ..DbEntry::default() });
+        db.put(
+            "d",
+            "p",
+            8,
+            DbEntry { sorted: true, speedup: 1.2, shards: Some(4), ..DbEntry::default() },
+        );
         db.save(&path).unwrap();
         let back = TuningDb::load(&path).unwrap();
         assert!(back.get("d", "p", 64).unwrap().kb.is_none());
@@ -956,6 +1091,9 @@ mod tests {
         );
         assert!(back.get("d", "p", 8).unwrap().sorted);
         assert_eq!(back.get("d", "p", 8).unwrap().choice(), KernelChoice::SortedCsr);
+        // the shard decision round-trips; unmeasured stays None
+        assert_eq!(back.get("d", "p", 8).unwrap().shards, Some(4));
+        assert!(back.get("d", "p", 64).unwrap().shards.is_none());
         // the fused-epilogue measurement round-trips; unmeasured stays None
         assert_eq!(back.get("d", "p", 96).unwrap().fuse_relu, Some(1.4));
         assert_eq!(back.get("d", "p", 96).unwrap().choice(), KernelChoice::Tiled { kt: 64 });
@@ -975,5 +1113,35 @@ mod tests {
         // pre-fusion DBs (no fuse_relu key) load as "never measured"
         assert!(e.fuse_relu.is_none());
         assert!(!old.fused_relu_profitable("d", "p", 32));
+        // pre-sharding DBs (no shards key) load as "run flat"
+        assert!(e.shards.is_none());
+        assert!(old.shard_count("d", "p", 32).is_none());
+    }
+
+    #[test]
+    fn tune_shards_measures_once_and_warm_starts() {
+        let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+        let a = graph(64, 4, 59);
+        let registry = KernelRegistry::new();
+        registry.set_patched(true);
+        let mut db = TuningDb::default();
+        // kernel decision first, then the shard axis on top of it
+        let choice = tuner.tune("toy", &a, 16, &registry, &mut db).unwrap();
+        let shards = tuner.tune_shards("toy", &a, 16, &registry, &mut db).unwrap();
+        assert!(shards >= 1);
+        assert!(shard_count_candidates().contains(&shards));
+        let e = db.get("toy", "amd-epyc", 16).unwrap();
+        assert_eq!(e.shards, Some(shards));
+        assert_eq!(e.choice(), choice, "the shard axis never disturbs the kernel decision");
+        assert_eq!(db.shard_count("toy", "amd-epyc", 16), Some(shards));
+        // a second call is a DB hit (warm start, no measurement)
+        assert_eq!(tuner.tune_shards("toy", &a, 16, &registry, &mut db).unwrap(), shards);
+        // reverse order composes too: shards measured before any kernel
+        // decision records a placeholder that a later tune() preserves
+        let s32 = tuner.tune_shards("toy", &a, 32, &registry, &mut db).unwrap();
+        assert_eq!(db.get("toy", "amd-epyc", 32).unwrap().speedup, 0.0);
+        tuner.tune("toy", &a, 32, &registry, &mut db).unwrap();
+        assert_eq!(db.shard_count("toy", "amd-epyc", 32), Some(s32));
+        assert!(db.get("toy", "amd-epyc", 32).unwrap().speedup > 0.0);
     }
 }

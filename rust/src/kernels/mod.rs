@@ -31,6 +31,16 @@
 //! The [`KernelWorkspace`] amortises per-call fixed costs (partitioning,
 //! format conversion, output allocation) across a training run.
 //!
+//! The sharding layer ([`shard`]) executes any of the above over a
+//! degree-balanced node-range partition of the graph: each shard runs a
+//! *serial* kernel on its column-remapped block against a gathered halo
+//! panel, and the results merge by disjoint row-range copy — so
+//! [`spmm_sharded`] / [`spmm_fused_relu_sharded`] are bitwise-equal to
+//! the flat dispatcher for every family, format and semiring. The shard
+//! count is a tuner axis like kernel, format and fusion; shard plans (and
+//! the per-shard format conversions inside them) cache in the
+//! [`KernelWorkspace`] under `(graph epoch, shard count)`.
+//!
 //! All kernels are deterministic: parallelism partitions output rows, never
 //! reduction order within a row.
 
@@ -41,6 +51,7 @@ mod partition;
 mod sddmm;
 mod sell;
 mod semiring;
+mod shard;
 mod spmm_dispatch;
 mod tiled;
 mod trusted;
@@ -53,6 +64,9 @@ pub use partition::{nnz_balanced_partition, split_rows_mut, RowRange};
 pub use sddmm::sddmm;
 pub use sell::{sell_window_ranges, SELL_SLICE_HEIGHTS};
 pub use semiring::Semiring;
+pub use shard::{
+    shard_count_candidates, spmm_fused_relu_sharded, spmm_sharded, ShardBlock, ShardPlan,
+};
 pub use spmm_dispatch::{
     prepare_format, spmm, spmm_fused_relu, spmm_fused_relu_with_workspace, spmm_with_workspace,
     KernelChoice,

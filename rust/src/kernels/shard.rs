@@ -1,0 +1,767 @@
+//! Topology-aware graph sharding: degree-balanced node-range shards,
+//! shard-local workspaces, and a per-SpMM halo exchange.
+//!
+//! The tuner already matches kernel × format × fusion to the graph, but
+//! every kernel still sees one flat matrix and the worker pool is
+//! memory-topology-blind. This module partitions a graph into contiguous
+//! node-range shards with balanced non-zero counts ([`ShardPlan::build`],
+//! a greedy cut over the same per-row nnz prefix sums as
+//! [`nnz_balanced_partition`]) and executes one *serial* kernel per shard
+//! on the worker pool — shard parallelism replaces row partitioning, so
+//! the tuner's shard-count axis owns the tradeoff between both.
+//!
+//! # The gathered-panel halo exchange
+//!
+//! Shard *s* owns output rows `[r0, r1)`. Its non-zeros reference three
+//! kinds of input rows: **pre-halo** columns `< r0` owned by earlier
+//! shards, **local** columns in `[r0, r1)`, and **post-halo** columns
+//! `≥ r1` owned by later shards. The shard's CSR block remaps every
+//! column into a *gathered panel* laid out
+//!
+//! ```text
+//! [ sorted pre-halo cols | ALL local rows r0..r1 | sorted post-halo cols ]
+//! ```
+//!
+//! and the per-SpMM halo exchange materialises that panel by copying the
+//! referenced rows of `X` (the local segment is one contiguous memcpy —
+//! [`Dense`] is row-major). The remap is *monotone* in the global column
+//! index, and CSR columns are strictly increasing within each row, so the
+//! block is itself a valid CSR whose rows hold **the same values in the
+//! same order** as the unsharded matrix. Every serial kernel family
+//! therefore runs unchanged on `(block, panel)` and produces its rows
+//! bitwise-equal to the unsharded call:
+//!
+//! - each output row's reduction visits the identical value sequence in
+//!   the identical order (columns are renamed, never reordered);
+//! - panel rows are bit-exact copies of `X` rows;
+//! - block rows keep the original row nnz, so `Mean`'s finalize divide
+//!   and the empty-row → 0 convention are untouched;
+//! - the merge is a disjoint per-shard row-range copy
+//!   ([`split_rows_mut`]) — no floating-point combining across shards.
+//!
+//! SELL-C-σ / sorted-CSR conversions of each *block* are cached inside
+//! the [`ShardPlan`], and the plan itself caches in the
+//! [`KernelWorkspace`] under `(GraphEpoch, shard_count)` — so shard-local
+//! state retires with its graph epoch exactly like every other cached
+//! entry (the serving registry's eviction predicates apply unchanged).
+//!
+//! The `kernels.halo_merge` failpoint fires inside each shard job just
+//! before its merge copy, letting the chaos suite inject a panic
+//! mid-merge and assert the caller sees a contained failure.
+//!
+//! First-touch locality: each shard's panel and output buffers are
+//! allocated (or pool-reclaimed) and written by that shard's worker job,
+//! so pages fault in on the worker that uses them. With the best-effort
+//! `numa` feature, [`crate::util::numa`] additionally pins the worker to
+//! a shard-derived CPU for the duration of the job.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::dense::Dense;
+use crate::error::{Error, Result};
+use crate::sparse::{Csr, Sell, SortedCsr};
+use crate::util::{failpoints, parallel};
+
+use super::fusedmm::{epilogue_elems, fused_relu_rows};
+use super::partition::{nnz_balanced_partition, split_rows_mut, RowRange};
+use super::sell::{
+    spmm_sell_fused_relu_serial_into, spmm_sell_serial_into, spmm_sorted_fused_relu_serial_into,
+    spmm_sorted_serial_into,
+};
+use super::spmm_dispatch::{
+    record_dispatch, spmm_fused_relu_with_workspace, spmm_with_workspace, KernelChoice,
+};
+use super::generated::spmm_generated_serial_into;
+use super::tiled::spmm_tiled_serial_into;
+use super::trusted::spmm_trusted_serial_into;
+use super::workspace::{GraphEpoch, KernelWorkspace};
+use super::Semiring;
+
+/// Per-shard format-conversion cache key (the shard analogue of the
+/// workspace's `FormatKey`, extended with the shard index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum BlockFormatKey {
+    Sell { shard: usize, c: usize, sigma: usize },
+    Sorted { shard: usize },
+}
+
+enum BlockFormatVal {
+    Sell(Arc<Sell>),
+    Sorted(Arc<SortedCsr>),
+}
+
+impl Clone for BlockFormatVal {
+    fn clone(&self) -> Self {
+        match self {
+            BlockFormatVal::Sell(s) => BlockFormatVal::Sell(Arc::clone(s)),
+            BlockFormatVal::Sorted(s) => BlockFormatVal::Sorted(Arc::clone(s)),
+        }
+    }
+}
+
+/// One shard: a contiguous output row range plus its column-remapped CSR
+/// block and the halo gather lists that define the block's input panel.
+pub struct ShardBlock {
+    /// Output rows `[start, end)` this shard owns.
+    pub range: RowRange,
+    /// The shard's rows with columns remapped into panel coordinates:
+    /// `rows == range.len()`, `cols == pre + range.len() + post`.
+    block: Csr,
+    /// Global input-row ids gathered *before* the local segment
+    /// (ascending, all `< range.start`).
+    pre: Vec<usize>,
+    /// Global input-row ids gathered *after* the local segment
+    /// (ascending, all `≥ range.end`).
+    post: Vec<usize>,
+}
+
+impl ShardBlock {
+    fn build(a: &Csr, range: RowRange) -> ShardBlock {
+        let (r0, r1) = (range.start, range.end);
+        let mut pre: Vec<usize> = Vec::new();
+        let mut post: Vec<usize> = Vec::new();
+        for r in r0..r1 {
+            for &c in a.row_cols(r) {
+                if c < r0 {
+                    pre.push(c);
+                } else if c >= r1 {
+                    post.push(c);
+                }
+            }
+        }
+        pre.sort_unstable();
+        pre.dedup();
+        post.sort_unstable();
+        post.dedup();
+
+        let n_pre = pre.len();
+        let local = r1 - r0;
+        let nnz = a.row_ptr[r1] - a.row_ptr[r0];
+        let mut row_ptr = Vec::with_capacity(local + 1);
+        row_ptr.push(0usize);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        for r in r0..r1 {
+            for (&c, &v) in a.row_cols(r).iter().zip(a.row_vals(r)) {
+                // monotone remap: pre block, then the full local segment,
+                // then the post block — preserves strictly-increasing
+                // within-row column order, so the block is a valid CSR
+                // whose rows are the original rows verbatim.
+                let nc = if c < r0 {
+                    pre.binary_search(&c).expect("pre-halo column collected above")
+                } else if c < r1 {
+                    n_pre + (c - r0)
+                } else {
+                    n_pre + local + post.binary_search(&c).expect("post-halo column collected above")
+                };
+                col_idx.push(nc);
+                values.push(v);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        let block =
+            Csr::from_parts_unchecked(local, n_pre + local + post.len(), row_ptr, col_idx, values);
+        ShardBlock { range, block, pre, post }
+    }
+
+    /// Rows of the gathered input panel this block multiplies against.
+    pub fn panel_rows(&self) -> usize {
+        self.block.cols
+    }
+
+    /// Halo rows (pre + post) gathered from other shards' territory.
+    pub fn halo_rows(&self) -> usize {
+        self.pre.len() + self.post.len()
+    }
+
+    /// Non-zeros in this shard (equal to the owned rows' nnz in the
+    /// original matrix).
+    pub fn nnz(&self) -> usize {
+        self.block.nnz()
+    }
+
+    /// Copy the referenced rows of `x` into `panel` (pre-sized
+    /// `panel_rows() × k`). The local segment `range.start..range.end` is
+    /// one contiguous row-major memcpy; halo rows are gathered
+    /// individually. Every copied row is bit-exact.
+    fn fill_panel(&self, x: &Dense, panel: &mut Dense) {
+        let k = x.cols;
+        let n_pre = self.pre.len();
+        let local = self.range.len();
+        for (i, &r) in self.pre.iter().enumerate() {
+            panel.data[i * k..(i + 1) * k].copy_from_slice(x.row(r));
+        }
+        panel.data[n_pre * k..(n_pre + local) * k]
+            .copy_from_slice(&x.data[self.range.start * k..self.range.end * k]);
+        for (i, &r) in self.post.iter().enumerate() {
+            let at = n_pre + local + i;
+            panel.data[at * k..(at + 1) * k].copy_from_slice(x.row(r));
+        }
+    }
+}
+
+/// A full sharding of one graph: the degree-balanced cut, each shard's
+/// remapped block + halo lists, and a per-shard cache of SELL / sorted-CSR
+/// conversions of the blocks. Plans cache in the [`KernelWorkspace`] under
+/// `(GraphEpoch, shard_count)` and retire with their epoch.
+pub struct ShardPlan {
+    shards: Vec<ShardBlock>,
+    rows: usize,
+    nnz: usize,
+    /// Σ halo rows across shards — halo traffic per SpMM is
+    /// `halo_rows * k * 4` bytes.
+    halo_rows: usize,
+    /// max shard nnz / mean shard nnz (1.0 = perfectly balanced).
+    imbalance: f64,
+    formats: Mutex<HashMap<BlockFormatKey, BlockFormatVal>>,
+}
+
+impl ShardPlan {
+    /// Shard `a` into at most `shard_count` contiguous row ranges with
+    /// balanced nnz (the same greedy prefix-sum cut the row partitioner
+    /// uses). Skewed graphs may yield fewer shards than requested — empty
+    /// ranges are dropped, so every shard owns ≥ 1 row.
+    pub fn build(a: &Csr, shard_count: usize) -> ShardPlan {
+        let ranges = nnz_balanced_partition(a, shard_count);
+        let shards: Vec<ShardBlock> =
+            ranges.into_iter().map(|r| ShardBlock::build(a, r)).collect();
+        let halo_rows = shards.iter().map(|s| s.halo_rows()).sum();
+        let max_nnz = shards.iter().map(|s| s.nnz()).max().unwrap_or(0);
+        let imbalance = if shards.is_empty() || a.nnz() == 0 {
+            1.0
+        } else {
+            max_nnz as f64 * shards.len() as f64 / a.nnz() as f64
+        };
+        ShardPlan { shards, rows: a.rows, nnz: a.nnz(), halo_rows, imbalance, formats: Mutex::new(HashMap::new()) }
+    }
+
+    /// Number of shards actually produced (≤ requested; ≥ 1 unless the
+    /// graph has no rows).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shards, in output-row order.
+    pub fn shards(&self) -> &[ShardBlock] {
+        &self.shards
+    }
+
+    /// Rows of the graph this plan was built for.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Non-zeros of the graph this plan was built for.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Bytes of `X` rows gathered across shard boundaries for one SpMM at
+    /// feature width `k` — the `shard.halo_bytes` gauge.
+    pub fn halo_bytes(&self, k: usize) -> usize {
+        self.halo_rows * k * std::mem::size_of::<f32>()
+    }
+
+    /// max shard nnz / mean shard nnz — the `shard.imbalance` gauge.
+    pub fn imbalance(&self) -> f64 {
+        self.imbalance
+    }
+
+    /// The row ranges of the cut (for tests / diagnostics).
+    pub fn ranges(&self) -> Vec<RowRange> {
+        self.shards.iter().map(|s| s.range).collect()
+    }
+
+    /// Cached or computed format conversion of one shard's block. The
+    /// conversion runs outside the lock (the workspace's pattern): two
+    /// shard jobs racing on the same key at worst convert twice and keep
+    /// one — both are identical pure functions of the block.
+    fn block_format(
+        &self,
+        key: BlockFormatKey,
+        compute: impl FnOnce() -> BlockFormatVal,
+    ) -> BlockFormatVal {
+        if let Some(v) = self.formats.lock().unwrap().get(&key) {
+            return v.clone();
+        }
+        let v = compute();
+        self.formats
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| v.clone())
+            .clone()
+    }
+
+    pub(super) fn sell_block(&self, shard: usize, c: usize, sigma: usize) -> Arc<Sell> {
+        let key = BlockFormatKey::Sell { shard, c, sigma };
+        let block = &self.shards[shard].block;
+        match self.block_format(key, || BlockFormatVal::Sell(Arc::new(Sell::from_csr(block, c, sigma)))) {
+            BlockFormatVal::Sell(s) => s,
+            BlockFormatVal::Sorted(_) => unreachable!("sell key held a sorted-csr value"),
+        }
+    }
+
+    pub(super) fn sorted_block(&self, shard: usize) -> Arc<SortedCsr> {
+        let key = BlockFormatKey::Sorted { shard };
+        let block = &self.shards[shard].block;
+        match self.block_format(key, || BlockFormatVal::Sorted(Arc::new(SortedCsr::from_csr(block)))) {
+            BlockFormatVal::Sorted(s) => s,
+            BlockFormatVal::Sell(_) => unreachable!("sorted key held a sell value"),
+        }
+    }
+
+    /// Number of cached per-shard format conversions (diagnostics).
+    pub fn cached_block_formats(&self) -> usize {
+        self.formats.lock().unwrap().len()
+    }
+}
+
+/// What one shard job computes: the plain semiring kernel or the fused
+/// SpMM+bias+ReLU epilogue.
+enum ShardOp<'b> {
+    Plain(Semiring),
+    FusedRelu { bias: Option<&'b [f32]> },
+}
+
+/// Sharded SpMM: one serial kernel per shard on the worker pool, gathered
+/// halo panels, disjoint row-range merge. Bitwise-equal to
+/// [`spmm_with_workspace`] for every kernel family and semiring (see the
+/// module docs for why). Delegates to the unsharded dispatcher when
+/// `shards ≤ 1` or the call is degenerate (no rows / no columns / no
+/// non-zeros) — the degenerate-shard guard.
+pub fn spmm_sharded(
+    a: &Csr,
+    x: &Dense,
+    op: Semiring,
+    choice: KernelChoice,
+    threads: usize,
+    ws: Option<(&KernelWorkspace, GraphEpoch)>,
+    shards: usize,
+) -> Result<Dense> {
+    if shards <= 1 || a.rows == 0 || x.cols == 0 || a.nnz() == 0 {
+        return spmm_with_workspace(a, x, op, choice, threads, ws);
+    }
+    if a.cols != x.rows {
+        return Err(Error::ShapeMismatch(format!(
+            "spmm_sharded: A {}x{} @ X {}x{}",
+            a.rows, a.cols, x.rows, x.cols
+        )));
+    }
+    run_sharded(a, x, choice, ws, shards, ShardOp::Plain(op))
+}
+
+/// Sharded fused `relu(spmm(A, X) + bias)`: the fused analogue of
+/// [`spmm_sharded`], bitwise-equal to [`spmm_fused_relu_with_workspace`].
+pub fn spmm_fused_relu_sharded(
+    a: &Csr,
+    x: &Dense,
+    bias: Option<&[f32]>,
+    choice: KernelChoice,
+    threads: usize,
+    ws: Option<(&KernelWorkspace, GraphEpoch)>,
+    shards: usize,
+) -> Result<Dense> {
+    if shards <= 1 || a.rows == 0 || x.cols == 0 || a.nnz() == 0 {
+        return spmm_fused_relu_with_workspace(a, x, bias, choice, threads, ws);
+    }
+    if a.cols != x.rows {
+        return Err(Error::ShapeMismatch(format!(
+            "spmm_fused_relu_sharded: A {}x{} @ X {}x{}",
+            a.rows, a.cols, x.rows, x.cols
+        )));
+    }
+    if let Some(b) = bias {
+        if b.len() != x.cols {
+            return Err(Error::ShapeMismatch(format!(
+                "spmm_fused_relu_sharded: bias len {} vs cols {}",
+                b.len(),
+                x.cols
+            )));
+        }
+    }
+    run_sharded(a, x, choice, ws, shards, ShardOp::FusedRelu { bias })
+}
+
+fn run_sharded(
+    a: &Csr,
+    x: &Dense,
+    choice: KernelChoice,
+    ws: Option<(&KernelWorkspace, GraphEpoch)>,
+    shards: usize,
+    shard_op: ShardOp<'_>,
+) -> Result<Dense> {
+    let k = x.cols;
+    let op = match shard_op {
+        ShardOp::Plain(op) => op,
+        // the fused family accumulates in trusted sum order
+        ShardOp::FusedRelu { .. } => Semiring::Sum,
+    };
+    // Resolve the applicability fallback *before* sharding, exactly as the
+    // unsharded dispatcher does, so every shard routes the same family the
+    // flat call would have run.
+    let choice = if choice.applicable(k, op) { choice } else { KernelChoice::Trusted };
+
+    let started = crate::obs::metrics_on().then(std::time::Instant::now);
+
+    let plan: Arc<ShardPlan> = match ws {
+        Some((w, key)) => w.shard_plan(key, a, shards),
+        None => Arc::new(ShardPlan::build(a, shards)),
+    };
+
+    if crate::obs::metrics_on() {
+        let reg = crate::obs::registry();
+        reg.gauge("shard.halo_bytes").set(plan.halo_bytes(k) as f64);
+        reg.gauge("shard.imbalance").set(plan.imbalance());
+    }
+
+    let mut y = match ws {
+        Some((w, _)) => w.take_dense(a.rows, k),
+        None => Dense::zeros(a.rows, k),
+    };
+
+    let ranges = plan.ranges();
+    let w = ws.map(|(w, _)| w);
+    let plan_ref: &ShardPlan = &plan;
+    let shard_op_ref = &shard_op;
+    let jobs: Vec<_> = split_rows_mut(&mut y.data, &ranges, k)
+        .into_iter()
+        .enumerate()
+        .map(|(i, (_range, out))| {
+            move || run_shard(plan_ref, i, x, choice, shard_op_ref, w, out)
+        })
+        .collect();
+    parallel::join_all(jobs);
+
+    if let (Some(t0), ShardOp::Plain(op)) = (started, &shard_op) {
+        record_dispatch("spmm_sharded", k, *op, choice, plan.shard_count(), t0.elapsed());
+    } else if let Some(t0) = started {
+        record_dispatch("spmm_fused_relu_sharded", k, op, choice, plan.shard_count(), t0.elapsed());
+    }
+    Ok(y)
+}
+
+/// One shard job: gather the panel, run the serial kernel family on the
+/// remapped block, and merge into the shard's disjoint slice of `y`.
+fn run_shard(
+    plan: &ShardPlan,
+    idx: usize,
+    x: &Dense,
+    choice: KernelChoice,
+    shard_op: &ShardOp<'_>,
+    ws: Option<&KernelWorkspace>,
+    out: &mut [f32],
+) {
+    let shard = &plan.shards()[idx];
+    let k = x.cols;
+    let _span = if crate::obs::active() {
+        Some(
+            crate::obs::Span::enter("shard.spmm")
+                .arg("shard", crate::util::json::Json::num(idx as f64))
+                .arg("rows", crate::util::json::Json::num(shard.range.len() as f64))
+                .arg("halo_rows", crate::util::json::Json::num(shard.halo_rows() as f64)),
+        )
+    } else {
+        None
+    };
+    // Best-effort worker pinning (no-op unless the `numa` feature is on
+    // and the OS call succeeds); restored when the job ends.
+    let _pin = crate::util::numa::pin_for_shard(idx);
+
+    // Per-shard output buffer, first-touch-written by this worker; merged
+    // into the caller's slice below so the shard boundary never splits a
+    // row's reduction.
+    let mut local = match ws {
+        Some(w) => w.take_dense(shard.range.len(), k),
+        None => Dense::zeros(shard.range.len(), k),
+    };
+
+    if shard.nnz() == 0 {
+        // Degenerate shard: a 0-nnz block writes exactly what the flat
+        // kernel writes for empty rows — 0 for the plain semirings
+        // (`finalize(identity, 0) == 0`), the bare epilogue for the fused
+        // family. No panel gather, no kernel, no format conversion.
+        if let ShardOp::FusedRelu { bias } = shard_op {
+            for row in local.data.chunks_mut(k.max(1)) {
+                epilogue_elems(row, *bias);
+            }
+        }
+    } else {
+        let mut panel = match ws {
+            Some(w) => w.take_dense(shard.panel_rows(), k),
+            None => Dense::zeros(shard.panel_rows(), k),
+        };
+        shard.fill_panel(x, &mut panel);
+        match shard_op {
+            ShardOp::Plain(op) => match choice {
+                KernelChoice::Trusted => {
+                    spmm_trusted_serial_into(&shard.block, &panel, *op, &mut local)
+                }
+                KernelChoice::Generated { kb } => {
+                    spmm_generated_serial_into(&shard.block, &panel, kb, &mut local)
+                }
+                KernelChoice::Tiled { kt } => {
+                    spmm_tiled_serial_into(&shard.block, &panel, *op, kt, &mut local)
+                }
+                KernelChoice::Sell { c, sigma } => {
+                    let s = plan.sell_block(idx, c, sigma);
+                    spmm_sell_serial_into(&s, &panel, *op, &mut local)
+                }
+                KernelChoice::SortedCsr => {
+                    let s = plan.sorted_block(idx);
+                    spmm_sorted_serial_into(&s, &panel, *op, &mut local)
+                }
+            },
+            ShardOp::FusedRelu { bias } => match choice {
+                KernelChoice::Sell { c, sigma } => {
+                    let s = plan.sell_block(idx, c, sigma);
+                    spmm_sell_fused_relu_serial_into(&s, &panel, *bias, &mut local)
+                }
+                KernelChoice::SortedCsr => {
+                    let s = plan.sorted_block(idx);
+                    spmm_sorted_fused_relu_serial_into(&s, &panel, *bias, &mut local)
+                }
+                // every CSR-layout family shares the fused CSR body,
+                // exactly as the unsharded dispatcher routes it
+                _ => fused_relu_rows(&shard.block, &panel, *bias, 0, shard.block.rows, &mut local.data),
+            },
+        }
+        if let Some(w) = ws {
+            w.recycle(panel.data);
+        }
+    }
+
+    // halo merge: the one cross-shard write of the whole call — a
+    // disjoint row-range copy into the caller's buffer.
+    failpoints::trigger("kernels.halo_merge", "");
+    out.copy_from_slice(&local.data);
+    if let Some(w) = ws {
+        w.recycle(local.data);
+    }
+}
+
+/// The shard-count candidate axis: powers of two `1, 2, 4, …` up to the
+/// machine's available parallelism (the tuner sweeps these like any other
+/// decision and warm-starts the winner through the `TuningDb`).
+pub fn shard_count_candidates() -> Vec<usize> {
+    let max = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut out = vec![1usize];
+    let mut c = 2usize;
+    while c <= max {
+        out.push(c);
+        c *= 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn random_graph(n: usize, avg_deg: usize, seed: u64) -> Csr {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            for _ in 0..avg_deg {
+                coo.push(r, rng.gen_range(n), rng.gen_range_f32(0.1, 1.0));
+            }
+        }
+        coo.to_csr()
+    }
+
+    fn hub_graph() -> Csr {
+        // row 0 is a hub: heavy skew forces an uneven row cut.
+        let mut coo = Coo::new(33, 33);
+        for j in 1..33 {
+            coo.push(0, j, 0.5);
+            coo.push(j, 0, 0.25);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn blocks_cover_rows_and_preserve_nnz() {
+        let a = random_graph(50, 6, 1);
+        for shards in [1, 2, 3, 4, 7] {
+            let plan = ShardPlan::build(&a, shards);
+            let mut cursor = 0;
+            let mut nnz = 0;
+            for s in plan.shards() {
+                assert_eq!(s.range.start, cursor);
+                cursor = s.range.end;
+                nnz += s.nnz();
+                s.block.validate().unwrap();
+            }
+            assert_eq!(cursor, a.rows);
+            assert_eq!(nnz, a.nnz());
+        }
+    }
+
+    #[test]
+    fn block_rows_hold_original_values_in_order() {
+        let a = random_graph(40, 5, 2);
+        let plan = ShardPlan::build(&a, 4);
+        for s in plan.shards() {
+            for (i, r) in (s.range.start..s.range.end).enumerate() {
+                assert_eq!(s.block.row_vals(i), a.row_vals(r), "row {r}");
+                assert_eq!(s.block.row_nnz(i), a.row_nnz(r), "row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_matches_unsharded_all_semirings_and_families() {
+        let a = random_graph(60, 5, 3);
+        let mut rng = Rng::seed_from_u64(9);
+        for k in [8usize, 17] {
+            let x = Dense::uniform(60, k, 1.0, &mut rng);
+            for op in Semiring::ALL {
+                let oracle =
+                    spmm_with_workspace(&a, &x, op, KernelChoice::Trusted, 1, None).unwrap();
+                for choice in [
+                    KernelChoice::Trusted,
+                    KernelChoice::Generated { kb: 8 },
+                    KernelChoice::Sell { c: 4, sigma: 32 },
+                    KernelChoice::SortedCsr,
+                ] {
+                    for shards in [1, 2, 4] {
+                        let got =
+                            spmm_sharded(&a, &x, op, choice, 1, None, shards).unwrap();
+                        assert!(
+                            got.allclose(&oracle, 0.0),
+                            "choice={choice:?} op={op:?} k={k} shards={shards}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_sharded_matches_unsharded() {
+        let a = random_graph(48, 4, 5);
+        let mut rng = Rng::seed_from_u64(11);
+        let k = 12;
+        let x = Dense::uniform(48, k, 1.0, &mut rng);
+        let bias: Vec<f32> = (0..k).map(|i| (i as f32 - 4.0) * 0.3).collect();
+        for bias in [None, Some(&bias[..])] {
+            let oracle = spmm_fused_relu_with_workspace(
+                &a,
+                &x,
+                bias,
+                KernelChoice::Trusted,
+                1,
+                None,
+            )
+            .unwrap();
+            for choice in
+                [KernelChoice::Trusted, KernelChoice::Sell { c: 4, sigma: 16 }, KernelChoice::SortedCsr]
+            {
+                for shards in [2, 4] {
+                    let got =
+                        spmm_fused_relu_sharded(&a, &x, bias, choice, 1, None, shards).unwrap();
+                    assert!(
+                        got.allclose(&oracle, 0.0),
+                        "choice={choice:?} shards={shards} bias={}",
+                        bias.is_some()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_count_above_rows_is_degenerate_safe() {
+        // satellite: skewed cuts can only drop to ≤ rows shards; a request
+        // for more than `rows` shards must not panic in the halo merge.
+        let a = hub_graph();
+        let mut rng = Rng::seed_from_u64(13);
+        let x = Dense::uniform(33, 7, 1.0, &mut rng);
+        let oracle = spmm_with_workspace(&a, &x, Semiring::Sum, KernelChoice::Trusted, 1, None)
+            .unwrap();
+        for shards in [64, 1000] {
+            let got =
+                spmm_sharded(&a, &x, Semiring::Sum, KernelChoice::Trusted, 1, None, shards)
+                    .unwrap();
+            assert!(got.allclose(&oracle, 0.0), "shards={shards}");
+        }
+        // zero-nnz graph: the delegate path, not a halo-merge panic
+        let empty = Csr::empty(5, 5);
+        let x = Dense::zeros(5, 3);
+        let y = spmm_sharded(&empty, &x, Semiring::Max, KernelChoice::Trusted, 1, None, 4)
+            .unwrap();
+        assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn zero_nnz_shard_fused_gets_epilogue() {
+        // rows 0..8 have edges, rows 8..16 are isolated: with many shards
+        // the tail shards are all-empty and must still apply bias+relu.
+        let mut coo = Coo::new(16, 16);
+        for r in 0..8 {
+            coo.push(r, (r + 1) % 8, 1.0);
+        }
+        let a = coo.to_csr();
+        let mut rng = Rng::seed_from_u64(17);
+        let x = Dense::uniform(16, 5, 1.0, &mut rng);
+        let bias = vec![0.5f32; 5];
+        let oracle = spmm_fused_relu_with_workspace(
+            &a,
+            &x,
+            Some(&bias),
+            KernelChoice::Trusted,
+            1,
+            None,
+        )
+        .unwrap();
+        let got = spmm_fused_relu_sharded(&a, &x, Some(&bias), KernelChoice::Trusted, 1, None, 8)
+            .unwrap();
+        assert!(got.allclose(&oracle, 0.0));
+        // every isolated row is exactly relu(0 + 0.5) = 0.5
+        assert!(got.row(12).iter().all(|&v| v == 0.5));
+    }
+
+    #[test]
+    fn workspace_caches_and_retires_shard_plans() {
+        let a = random_graph(30, 4, 19);
+        let ws = KernelWorkspace::new();
+        let key = GraphEpoch::new(7, 0);
+        let mut rng = Rng::seed_from_u64(23);
+        let x = Dense::uniform(30, 6, 1.0, &mut rng);
+        let _ = spmm_sharded(&a, &x, Semiring::Sum, KernelChoice::SortedCsr, 1, Some((&ws, key)), 2)
+            .unwrap();
+        assert_eq!(ws.cached_shard_plans(), 1);
+        // the per-shard sorted conversions live inside the plan entry
+        let plan = ws.shard_plan(key, &a, 2);
+        assert!(plan.cached_block_formats() >= 1);
+        let _ = spmm_sharded(&a, &x, Semiring::Sum, KernelChoice::SortedCsr, 1, Some((&ws, key)), 2)
+            .unwrap();
+        assert_eq!(ws.cached_shard_plans(), 1, "second call hits the cache");
+        ws.evict(key);
+        assert_eq!(ws.cached_shard_plans(), 0, "shard plans retire with their epoch");
+    }
+
+    #[test]
+    fn halo_accounting_is_sane() {
+        let a = random_graph(40, 6, 29);
+        let plan = ShardPlan::build(&a, 4);
+        // some cross-shard edges must exist in a random graph
+        assert!(plan.halo_bytes(8) > 0);
+        assert!(plan.imbalance() >= 1.0);
+        // single-shard plan has no halo at all
+        let solo = ShardPlan::build(&a, 1);
+        assert_eq!(solo.halo_bytes(8), 0);
+    }
+
+    #[test]
+    fn shard_candidates_start_at_one_and_double() {
+        let c = shard_count_candidates();
+        assert_eq!(c[0], 1);
+        for w in c.windows(2) {
+            assert_eq!(w[1], w[0] * 2);
+        }
+    }
+}

@@ -152,7 +152,7 @@ pub fn prepare_format(
 /// `kernel.<name>{fmt=…,k=…,kernel=…,threads=…}` label plus a flat call
 /// counter. The label re-applies the same fallback and thread resolution
 /// as the dispatch body, so the aggregate names what actually ran.
-fn record_dispatch(
+pub(super) fn record_dispatch(
     name: &str,
     k: usize,
     op: Semiring,

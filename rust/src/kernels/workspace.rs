@@ -50,6 +50,7 @@ use crate::dense::Dense;
 use crate::sparse::{Csr, Sell, SortedCsr};
 
 use super::partition::{nnz_balanced_partition, RowRange};
+use super::shard::ShardPlan;
 
 /// Maximum number of retired buffers the pool retains; beyond this,
 /// recycled buffers are simply freed. A GNN tape produces ~2 buffers per
@@ -78,6 +79,10 @@ pub struct WorkspaceStats {
     pub format_hits: u64,
     /// Sparse-format lookups that had to convert (O(nnz)).
     pub format_misses: u64,
+    /// Shard-plan lookups served from the cache.
+    pub shard_hits: u64,
+    /// Shard-plan lookups that had to build (O(nnz) cut + remap).
+    pub shard_misses: u64,
 }
 
 /// Cache identity of one *epoch* of one graph. Every workspace entry —
@@ -149,6 +154,15 @@ enum FormatVal {
     Sorted(Arc<SortedCsr>),
 }
 
+struct CachedShardPlan {
+    /// Structural fingerprint of the source matrix ([`csr_fingerprint`]) —
+    /// a shard plan carries remapped copies of the matrix's *contents*
+    /// (blocks + halo lists + cached per-shard conversions), so it gets
+    /// the same false-hit protection as [`CachedFormat`].
+    fp: u64,
+    plan: Arc<ShardPlan>,
+}
+
 struct CachedFormat {
     /// Structural fingerprint of the source matrix ([`csr_fingerprint`]).
     /// Stronger than [`CachedPartition`]'s `(rows, nnz)` pair on purpose:
@@ -196,6 +210,12 @@ struct Inner {
     /// epoch — the conversion is O(nnz), so like partitions it must be a
     /// per-graph cost, not a per-call one. Evicted with the epoch.
     formats: HashMap<(GraphEpoch, FormatKey), CachedFormat>,
+    /// Shard plans keyed `(graph epoch, shard count)`. Each entry holds
+    /// the degree-balanced cut, the per-shard remapped blocks + halo
+    /// lists, and — *inside* the plan — that shard's cached SELL /
+    /// sorted-CSR block conversions, so the whole shard-local slice of
+    /// the workspace retires atomically with its `(graph, epoch)` key.
+    shard_plans: HashMap<(GraphEpoch, usize), CachedShardPlan>,
     /// Retired buffers, binned by [`size_class`] of their capacity. Serving
     /// mixes many sizes (per-graph node counts × per-request widths) in one
     /// shared pool, so `take_buffer` must not scan every buffer per call.
@@ -305,6 +325,40 @@ impl KernelWorkspace {
             // the Sorted key only ever maps to a sorted-csr value
             FormatVal::Sell(_) => unreachable!("sorted key held a sell value"),
         }
+    }
+
+    /// The memoised [`ShardPlan`] for `(graph epoch, shard_count)`:
+    /// fingerprint-validated hit, or build outside the lock and insert.
+    /// The plan's per-shard SELL/sorted-CSR conversions cache *inside*
+    /// the returned plan, so every shard-local entry shares this one
+    /// keyed lifetime and retires with the epoch (see
+    /// [`KernelWorkspace::evict`] and friends).
+    pub fn shard_plan(
+        &self,
+        key: impl Into<GraphEpoch>,
+        a: &Csr,
+        shard_count: usize,
+    ) -> Arc<ShardPlan> {
+        let key = (key.into(), shard_count);
+        let fp = csr_fingerprint(a);
+        {
+            let mut g = self.inner.lock().unwrap();
+            let hit = g
+                .shard_plans
+                .get(&key)
+                .filter(|p| p.fp == fp && p.plan.rows() == a.rows && p.plan.nnz() == a.nnz())
+                .map(|p| Arc::clone(&p.plan));
+            if let Some(p) = hit {
+                g.stats.shard_hits += 1;
+                return p;
+            }
+            g.stats.shard_misses += 1;
+        }
+        // build outside the lock — O(nnz) cut + column remap
+        let plan = Arc::new(ShardPlan::build(a, shard_count));
+        let mut g = self.inner.lock().unwrap();
+        g.shard_plans.insert(key, CachedShardPlan { fp, plan: Arc::clone(&plan) });
+        plan
     }
 
     /// Derived identity for the *permuted* matrix inside a graph's sorted
@@ -426,10 +480,11 @@ impl KernelWorkspace {
         let key = key.into();
         let ids = Self::derived_ids(key.graph);
         let mut g = self.inner.lock().unwrap();
-        let before = g.partitions.len() + g.formats.len();
+        let before = g.partitions.len() + g.formats.len() + g.shard_plans.len();
         g.partitions.retain(|&(k, _), _| k.epoch != key.epoch || !ids.contains(&k.graph));
         g.formats.retain(|&(k, _), _| k.epoch != key.epoch || !ids.contains(&k.graph));
-        before - g.partitions.len() - g.formats.len()
+        g.shard_plans.retain(|&(k, _), _| k.epoch != key.epoch || !ids.contains(&k.graph));
+        before - g.partitions.len() - g.formats.len() - g.shard_plans.len()
     }
 
     /// Drop every cached entry of `graph_id` (all derived identities)
@@ -440,10 +495,11 @@ impl KernelWorkspace {
     pub fn evict_stale_epochs(&self, graph_id: u64, keep: u32) -> usize {
         let ids = Self::derived_ids(graph_id);
         let mut g = self.inner.lock().unwrap();
-        let before = g.partitions.len() + g.formats.len();
+        let before = g.partitions.len() + g.formats.len() + g.shard_plans.len();
         g.partitions.retain(|&(k, _), _| k.epoch == keep || !ids.contains(&k.graph));
         g.formats.retain(|&(k, _), _| k.epoch == keep || !ids.contains(&k.graph));
-        before - g.partitions.len() - g.formats.len()
+        g.shard_plans.retain(|&(k, _), _| k.epoch == keep || !ids.contains(&k.graph));
+        before - g.partitions.len() - g.formats.len() - g.shard_plans.len()
     }
 
     /// Drop every cached entry of `graph_id` across **all** epochs — the
@@ -452,10 +508,11 @@ impl KernelWorkspace {
     pub fn evict_all_epochs(&self, graph_id: u64) -> usize {
         let ids = Self::derived_ids(graph_id);
         let mut g = self.inner.lock().unwrap();
-        let before = g.partitions.len() + g.formats.len();
+        let before = g.partitions.len() + g.formats.len() + g.shard_plans.len();
         g.partitions.retain(|&(k, _), _| !ids.contains(&k.graph));
         g.formats.retain(|&(k, _), _| !ids.contains(&k.graph));
-        before - g.partitions.len() - g.formats.len()
+        g.shard_plans.retain(|&(k, _), _| !ids.contains(&k.graph));
+        before - g.partitions.len() - g.formats.len() - g.shard_plans.len()
     }
 
     /// Number of cached partition entries (diagnostics).
@@ -466,6 +523,11 @@ impl KernelWorkspace {
     /// Number of cached converted sparse formats (diagnostics).
     pub fn cached_formats(&self) -> usize {
         self.inner.lock().unwrap().formats.len()
+    }
+
+    /// Number of cached shard plans (diagnostics).
+    pub fn cached_shard_plans(&self) -> usize {
+        self.inner.lock().unwrap().shard_plans.len()
     }
 
     /// Number of buffers currently resting in the pool (diagnostics).
@@ -494,8 +556,11 @@ impl KernelWorkspace {
         reg.gauge("workspace.buffer_allocs").set(stats.buffer_allocs as f64);
         reg.gauge("workspace.format_hits").set(stats.format_hits as f64);
         reg.gauge("workspace.format_misses").set(stats.format_misses as f64);
+        reg.gauge("workspace.shard_hits").set(stats.shard_hits as f64);
+        reg.gauge("workspace.shard_misses").set(stats.shard_misses as f64);
         reg.gauge("workspace.cached_partitions").set(self.cached_partitions() as f64);
         reg.gauge("workspace.cached_formats").set(self.cached_formats() as f64);
+        reg.gauge("workspace.cached_shard_plans").set(self.cached_shard_plans() as f64);
         reg.gauge("workspace.pooled_buffers").set(self.pooled_buffers() as f64);
     }
 
@@ -505,6 +570,7 @@ impl KernelWorkspace {
         let mut g = self.inner.lock().unwrap();
         g.partitions.clear();
         g.formats.clear();
+        g.shard_plans.clear();
         g.bins.clear();
         g.pooled = 0;
         g.stats = WorkspaceStats::default();
@@ -702,6 +768,49 @@ mod tests {
         assert_eq!(ws.cached_partitions(), 1);
         assert_eq!(ws.cached_formats(), 1);
         assert_eq!(ws.evict_all_epochs(gid), 0, "idempotent");
+    }
+
+    /// Shard plans are workspace entries like any other: keyed by
+    /// `(graph epoch, shard count)`, fingerprint-validated, and dropped by
+    /// every eviction path — including the per-shard format conversions
+    /// cached *inside* the plan, which share the entry's lifetime.
+    #[test]
+    fn shard_plans_cache_and_retire_per_epoch() {
+        let ws = KernelWorkspace::new();
+        let a = graph(24);
+        let b = graph(30); // the "mutated" next-epoch matrix
+        let gid = 5u64;
+        let e0 = GraphEpoch::new(gid, 0);
+        let e1 = GraphEpoch::new(gid, 1);
+        let p1 = ws.shard_plan(e0, &a, 2);
+        let p2 = ws.shard_plan(e0, &a, 2);
+        assert!(Arc::ptr_eq(&p1, &p2), "second lookup hits");
+        assert_eq!(ws.stats().shard_hits, 1);
+        assert_eq!(ws.stats().shard_misses, 1);
+        // different shard count → its own entry
+        ws.shard_plan(e0, &a, 4);
+        // next epoch + an unrelated tenant
+        ws.shard_plan(e1, &b, 2);
+        ws.shard_plan(99u64, &a, 2);
+        assert_eq!(ws.cached_shard_plans(), 4);
+        // per-shard conversions live inside the plan entry
+        let _ = p1.sorted_block(0);
+        assert!(p1.cached_block_formats() >= 1);
+        // retiring epoch 0 drops both of its shard plans, nothing else
+        assert_eq!(ws.evict_stale_epochs(gid, 1), 2);
+        assert_eq!(ws.cached_shard_plans(), 2);
+        // session close drops the surviving epoch-1 entry; tenant 99 stays
+        assert_eq!(ws.evict_all_epochs(gid), 1);
+        assert_eq!(ws.cached_shard_plans(), 1);
+        // a colliding id with different contents fails the fingerprint and
+        // rebuilds instead of serving the wrong graph's blocks
+        let misses = ws.stats().shard_misses;
+        let rebuilt = ws.shard_plan(99u64, &b, 2);
+        assert_eq!(ws.stats().shard_misses, misses + 1);
+        assert_eq!(rebuilt.rows(), b.rows);
+        // clear() empties the shard-plan map too
+        ws.clear();
+        assert_eq!(ws.cached_shard_plans(), 0);
     }
 
     #[test]

@@ -38,9 +38,22 @@
 //!                                    gauge  (row-stats drift since last
 //!                                            format refresh)
 //! serve.swaps                        counter (model hot-swaps committed)
+//! shard.halo_bytes                   gauge  (per-SpMM cross-shard panel
+//!                                           traffic of the last sharded
+//!                                           dispatch)
+//! shard.imbalance                    gauge  (max-shard-nnz × shards /
+//!                                           total-nnz of the last shard
+//!                                           plan; 1.0 = perfectly
+//!                                           balanced)
 //! op.spmm{fmt=sell(c=4,s=32),k=32,kernel=sell(c=4,s=32),threads=2}
 //!                                    histogram (per-op aggregate)
 //! ```
+//!
+//! Sharded kernel dispatches additionally emit a `shard.spmm` span per
+//! shard job (args: `shard`, `rows`, `halo_rows`) under the dispatch's
+//! `kernel.spmm_sharded` / `kernel.spmm_fused_relu_sharded` aggregates —
+//! shard index is bounded by `available_parallelism`, so the label set
+//! stays finite.
 //!
 //! # Label cardinality rules
 //!

@@ -9,8 +9,7 @@ use crate::dense::{concat_cols_into, split_cols_into, Dense};
 use crate::error::{Error, Result};
 use crate::gnn::ParamSet;
 use crate::kernels::{
-    fused_relu_epilogue, spmm_fused_relu_with_workspace, spmm_with_workspace, KernelWorkspace,
-    Semiring,
+    fused_relu_epilogue, spmm_fused_relu_sharded, spmm_sharded, KernelWorkspace, Semiring,
 };
 use crate::obs;
 use crate::util::json::Json;
@@ -64,6 +63,7 @@ fn instr_span(
             span = span
                 .arg("rows", Json::num(operand.a.rows as f64))
                 .arg("nnz", Json::num(operand.a.nnz() as f64))
+                .arg("shards", Json::num(operand.shards as f64))
                 .arg("kernel", Json::str(&kernel))
                 .arg("format", Json::str(&fmt))
                 .agg(format!("op.{name}{{fmt={fmt},k={k},kernel={kernel},threads={threads}}}"));
@@ -93,6 +93,16 @@ pub fn execute_taped(
     };
     let _plan_span = obs::Span::enter("plan.execute_taped")
         .arg("ops", Json::num(plan.ops().len() as f64));
+    // the plan's shard lowering stamps onto the operand ONCE per execution
+    // — this single line is how training inherits sharding (inference has
+    // its twin below); no per-path special cases exist downstream
+    let sharded;
+    let operand = if operand.shards == plan.shards() {
+        operand
+    } else {
+        sharded = operand.clone().with_shards(plan.shards());
+        &sharded
+    };
     let mut vals: Vec<Var> = Vec::with_capacity(plan.num_values());
     vals.push(x);
     for (i, op) in plan.ops().iter().enumerate() {
@@ -158,7 +168,7 @@ fn spmm_call(operand: &SpmmOperand, x: &Dense, threads: usize) -> Result<Dense> 
         SpmmImpl::Kernel => {
             let choice = KernelRegistry::global().resolve(&operand.context, x.cols, Semiring::Sum);
             let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_key()));
-            spmm_with_workspace(&operand.a, x, Semiring::Sum, choice, threads, ws)
+            spmm_sharded(&operand.a, x, Semiring::Sum, choice, threads, ws, operand.shards)
         }
         SpmmImpl::EdgeWise => operand.edgewise_forward(x),
         SpmmImpl::Dense => operand.dense.as_ref().expect("dense operand").matmul(x),
@@ -184,7 +194,7 @@ fn fused_call(
             crate::util::failpoints::check("kernels.spmm", &operand.context)?;
             let choice = KernelRegistry::global().resolve(&operand.context, x.cols, Semiring::Sum);
             let ws = operand.workspace.as_deref().map(|w| (w, operand.graph_key()));
-            spmm_fused_relu_with_workspace(&operand.a, x, bias, choice, threads, ws)
+            spmm_fused_relu_sharded(&operand.a, x, bias, choice, threads, ws, operand.shards)
         }
         _ => {
             let mut y = spmm_call(operand, x, threads)?;
@@ -305,6 +315,15 @@ pub fn execute_inference(
         .arg("batch", Json::num(xs.len() as f64))
         .arg("threads", Json::num(threads as f64))
         .arg("ops", Json::num(plan.ops().len() as f64));
+    // twin of the taped stamp: the plan's shard count reaches every
+    // spmm_call/fused_call below through the operand
+    let sharded;
+    let operand = if operand.shards == plan.shards() {
+        operand
+    } else {
+        sharded = operand.clone().with_shards(plan.shards());
+        &sharded
+    };
     let scratch = Scratch { ws: operand.workspace.as_deref() };
     let b = xs.len();
     let mut vals: Vec<Option<Vec<Dense>>> = (0..plan.num_values()).map(|_| None).collect();
@@ -598,6 +617,32 @@ mod tests {
             let got = execute_inference(&fused, &operand, &params, &refs, threads).unwrap();
             for (w, g) in want.iter().zip(&got) {
                 assert_eq!(w.data, g.data, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_plan_is_bitwise_equal_on_both_executors() {
+        for model in GnnModel::ALL {
+            let (plan, operand, params, n) = setup(model);
+            let mut rng = Rng::seed_from_u64(56);
+            let x = Dense::uniform(n, plan.in_dim(), 1.0, &mut rng);
+            let flat = execute_inference(&plan, &operand, &params, &[&x], 2).unwrap();
+            for shards in [2usize, 4] {
+                let sharded_plan = plan.clone().with_shards(shards);
+                let got =
+                    execute_inference(&sharded_plan, &operand, &params, &[&x], 2).unwrap();
+                assert_eq!(flat[0].data, got[0].data, "{model:?} shards={shards} inference");
+                // and the taped executor inherits the same lowering
+                let mut tape = Tape::new(2);
+                let xv = tape.input(x.clone());
+                let mut vars = BTreeMap::new();
+                for (name, value) in params.iter() {
+                    vars.insert(name.clone(), tape.input(value.clone()));
+                }
+                let logits =
+                    execute_taped(&sharded_plan, &mut tape, &operand, xv, &vars).unwrap();
+                assert_eq!(flat[0].data, tape.value(logits).data, "{model:?} shards={shards} taped");
             }
         }
     }

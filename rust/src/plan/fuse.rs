@@ -114,7 +114,9 @@ impl ExecutionPlan {
             .expect("fusion rewrite preserves plan validity");
             remap[old_out] = new;
         }
-        builder.finish()
+        // fusion is a structural rewrite; the plan's shard lowering is an
+        // orthogonal property and must survive it
+        builder.finish().with_shards(self.shards())
     }
 }
 
@@ -221,6 +223,17 @@ mod tests {
         let fused = plan.fuse_spmm_relu(|_| true);
         assert_eq!(fused.fused_op_count(), 0);
         assert_eq!(fused.ops().len(), 1);
+    }
+
+    #[test]
+    fn fusion_preserves_shard_lowering() {
+        let plan = GnnModel::Gcn.lower(dims(), NormKind::GcnSym).with_shards(4);
+        let fused = plan.fuse_spmm_relu(|_| true);
+        assert_eq!(fused.fused_op_count(), 1);
+        assert_eq!(fused.shards(), 4, "the shard count survives the rewrite");
+        // and the no-op rewrite keeps it too
+        let unfused = plan.fuse_spmm_relu(|_| false);
+        assert_eq!(unfused.shards(), 4);
     }
 
     #[test]

@@ -121,6 +121,15 @@ pub struct ExecutionPlan {
     /// one), or `None`. See [`ExecutionPlan::inplace_operand`] for the
     /// eligibility rules.
     inplace: Vec<Option<ValueId>>,
+    /// Shard count every aggregation op in this plan executes with
+    /// (1 = unsharded). A *plan* property, not a per-call one: the
+    /// executors stamp it onto the SpMM operand once per execution, so
+    /// training, tape-free inference and serving inherit the same sharded
+    /// lowering with no per-path special cases. Set by
+    /// [`ExecutionPlan::with_shards`] (the serving registry applies the
+    /// tuner's warm-started shard decision here); preserved by the fusion
+    /// pass.
+    shards: usize,
 }
 
 /// Incrementally builds a plan; used by lowering and the fusion pass.
@@ -275,7 +284,18 @@ impl PlanBuilder {
             }
         }
 
-        ExecutionPlan { model, dims, norm, ops, cols, last_use, slot_of, slot_cols, inplace }
+        ExecutionPlan {
+            model,
+            dims,
+            norm,
+            ops,
+            cols,
+            last_use,
+            slot_of,
+            slot_cols,
+            inplace,
+            shards: 1,
+        }
     }
 }
 
@@ -338,6 +358,22 @@ impl ExecutionPlan {
     /// the steady-state pooled-buffer bound per request.
     pub fn num_slots(&self) -> usize {
         self.slot_cols.len()
+    }
+
+    /// Shard count the plan's aggregation ops execute with (1 = unsharded).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Return this plan with its aggregation ops lowered to `shards`-way
+    /// sharded execution (`0` normalises to 1). Sharding is bitwise-equal
+    /// to the flat plan for values and gradients — see
+    /// [`crate::kernels::spmm_sharded`] — so the choice is purely a
+    /// performance decision, owned by the tuner's shard-count axis and
+    /// warm-started through the `TuningDb` like kernel, format and fusion.
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
+        self
     }
 
     /// The operand instruction `i` may execute **in place** on, or `None`.

@@ -68,6 +68,28 @@
 //!   fed from the [`TuningDb`](crate::autotune::TuningDb)'s measured
 //!   `fuse_relu` entries (or a policy override), so fusion only happens
 //!   where it measured faster.
+//! * **Sharded lowering** ([`ExecutionPlan::with_shards`]) — the shard
+//!   count is a property of the *plan*, not of a call site. The rules:
+//!
+//!   1. a plan carries `shards` (default 1 = flat); the serving registry
+//!      sets it from the tuner's warm-started shard decision
+//!      ([`TuningDb::shard_count`](crate::autotune::TuningDb::shard_count)),
+//!      and [`fuse_spmm_relu`](ExecutionPlan::fuse_spmm_relu) preserves it
+//!      across the rewrite;
+//!   2. both executors stamp the count onto the
+//!      [`SpmmOperand`](crate::autodiff::SpmmOperand) once per execution,
+//!      so every aggregation op — plain or fused, forward or backward —
+//!      routes through [`spmm_sharded`](crate::kernels::spmm_sharded) /
+//!      [`spmm_fused_relu_sharded`](crate::kernels::spmm_fused_relu_sharded)
+//!      with the same count. Training, tape-free inference and serving
+//!      inherit sharding from this one stamp — no per-path special cases;
+//!   3. sharded execution is **bitwise-equal** to flat for values and
+//!      gradients (the gathered-panel construction in
+//!      [`crate::kernels::shard`] renames columns without reordering any
+//!      per-row non-zero stream), so `shards` is purely a performance
+//!      knob: shard-local workspace state (cached partitions, SELL /
+//!      sorted-CSR conversions) retires with the plan's `(graph, epoch)`
+//!      key exactly like every other cached artifact.
 //! * **Executors** — two thin interpreters over the same plan:
 //!   [`execute_taped`] records the ops onto the autodiff
 //!   [`Tape`](crate::autodiff::Tape) (cache-enabled backprop; the

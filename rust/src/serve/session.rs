@@ -24,7 +24,10 @@
 //!   plan, and FLOPs price, and keys its workspace entries under
 //!   `(graph_id, epoch)` — in-flight batches admitted against an older
 //!   epoch keep executing against exactly the structure they were
-//!   admitted under.
+//!   admitted under. A burst of deltas coalesces through
+//!   [`SessionRegistry::apply_deltas`] into ONE epoch (same final
+//!   structure as sequential application, one re-normalisation and one
+//!   retirement instead of N).
 //! * [`SessionRegistry::swap_model`] atomically flips the session to a
 //!   new parameter **version** after shape-validating it against the
 //!   lowered plan. A rejected swap ([`Error::SwapRejected`]) leaves the
@@ -43,6 +46,15 @@
 //! ([`ServeConfig::staleness`](super::ServeConfig::staleness)); below it,
 //! the previous tuning decision carries over and the carried formats are
 //! re-materialised for the new epoch off the request path.
+//!
+//! Registration also applies the tuner's **shard axis**: the warm-started
+//! shard count for the session's widest coalesced aggregation becomes a
+//! property of the session plan
+//! ([`ExecutionPlan::with_shards`](crate::plan::ExecutionPlan::with_shards)),
+//! so every request executes shard-lowered with no serving-specific code —
+//! and the shard-sliced workspace state (cached shard plans and their
+//! per-shard format conversions) keys under `(graph, epoch)` like every
+//! other cached artifact, retiring with its epoch.
 
 use std::sync::Arc;
 
@@ -352,6 +364,18 @@ impl SessionRegistry {
             // pre-converted just above.
             let profile = tuner.profile.name.clone();
             plan = plan.fuse_spmm_relu(|k| db.fused_relu_profitable(name, &profile, k));
+            // the tuner's shard axis, warm-started like kernel/format/
+            // fusion: the widest aggregation this session can execute (the
+            // max_batch-coalesced width) decides the plan-level shard
+            // count, and the plan stamps it onto every aggregation op —
+            // serving inherits sharding from this one line
+            if let Some(shards) = plan
+                .spmm_shapes_batched(max_batch)
+                .last()
+                .and_then(|&k| db.shard_count(name, &profile, k))
+            {
+                plan = plan.with_shards(shards);
+            }
         }
 
         // price one request off the plan that will actually execute (post
@@ -428,14 +452,51 @@ impl SessionRegistry {
         staleness: f64,
         warm: Option<(&Tuner, &TuningDb, usize)>,
     ) -> Result<DeltaOutcome> {
+        self.apply_deltas(id, std::slice::from_ref(delta), staleness, warm)
+    }
+
+    /// Coalesce a **batch** of edge deltas into ONE new graph epoch. The
+    /// deltas apply in order to the raw adjacency (each validated against
+    /// the fold so far, so a batch may insert an edge and then delete it),
+    /// but the expensive per-epoch work — re-normalisation, drift
+    /// measurement, format re-materialisation, the epoch flip and the old
+    /// epoch's retirement — happens once for the whole batch instead of
+    /// once per delta. The final structure is exactly what N sequential
+    /// [`apply_delta`](SessionRegistry::apply_delta) calls would have
+    /// produced (normalisation is a pure function of the folded raw
+    /// structure); only the epoch counter advances by 1 instead of N.
+    /// Transactional like the single-delta path: any rejected delta in the
+    /// batch (or an injected `serve.apply_delta` fault) leaves the session
+    /// on its old epoch, bit-for-bit untouched. An empty batch is
+    /// rejected — there is nothing to install an epoch for.
+    pub fn apply_deltas(
+        &mut self,
+        id: SessionId,
+        deltas: &[EdgeDelta],
+        staleness: f64,
+        warm: Option<(&Tuner, &TuningDb, usize)>,
+    ) -> Result<DeltaOutcome> {
         let workspace = Arc::clone(&self.workspace);
         let session = self.get_mut(id)?;
+        if deltas.is_empty() {
+            return Err(Error::Config(format!(
+                "session '{}': empty delta batch",
+                session.name
+            )));
+        }
 
         // ---- build phase: no session state is touched below this line
         // until the commit point -------------------------------------
-        let raw = session.raw_adj.apply_edge_delta(delta).map_err(|e| {
-            Error::InvalidSparse(format!("session '{}' delta rejected: {e}", session.name))
-        })?;
+        let reject = |name: &str, e: Error| {
+            Error::InvalidSparse(format!("session '{name}' delta rejected: {e}"))
+        };
+        let mut raw = session
+            .raw_adj
+            .apply_edge_delta(&deltas[0])
+            .map_err(|e| reject(&session.name, e))?;
+        for delta in &deltas[1..] {
+            raw = raw.apply_edge_delta(delta).map_err(|e| reject(&session.name, e))?;
+        }
         let a = session.model.norm_kind().apply(&raw)?;
         let stats = a.row_len_stats();
         let drift = stats_drift(&session.ref_stats, &stats);
@@ -470,6 +531,16 @@ impl SessionRegistry {
                 let profile = tuner.profile.name.clone();
                 plan =
                     plan.fuse_spmm_relu(|k| db.fused_relu_profitable(&session.name, &profile, k));
+                // re-consult the shard axis too: the refreshed plan's
+                // shard-sliced workspace entries key under the NEW epoch,
+                // so the old epoch's retire untouched with it
+                if let Some(shards) = plan
+                    .spmm_shapes_batched(max_batch)
+                    .last()
+                    .and_then(|&k| db.shard_count(&session.name, &profile, k))
+                {
+                    plan = plan.with_shards(shards);
+                }
             }
             plan
         } else {
@@ -885,6 +956,108 @@ mod tests {
         let out = reg.apply_delta(id, &EdgeDelta::new().del(0, 9).del(9, 0), 0.0, None).unwrap();
         assert_eq!(out.epoch, 2);
         assert_eq!(reg.get(id).unwrap().nnz(), nnz0);
+        reg.close(id).unwrap();
+    }
+
+    #[test]
+    fn apply_deltas_coalesces_a_batch_into_one_epoch() {
+        let ds = karate_club();
+        let dims = dims_for(&ds, 8);
+        let mut reg = SessionRegistry::new();
+        let deltas = vec![
+            EdgeDelta::new().add(0, 9, 1.0).add(9, 0, 1.0),
+            EdgeDelta::new().add(0, 20, 0.5).add(20, 0, 0.5),
+            EdgeDelta::new().del(0, 9).del(9, 0),
+        ];
+
+        // sequential oracle: three apply_delta calls, three epochs
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let seq =
+            reg.register("sess-seq", GnnModel::Gcn, dims, params, &ds.adj, None).unwrap();
+        for d in &deltas {
+            reg.apply_delta(seq, d, 0.0, None).unwrap();
+        }
+        assert_eq!(reg.get(seq).unwrap().epoch(), 3);
+
+        // coalesced: one call, ONE epoch, identical final structure
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let coal =
+            reg.register("sess-coal", GnnModel::Gcn, dims, params, &ds.adj, None).unwrap();
+        let out = reg.apply_deltas(coal, &deltas, 0.0, None).unwrap();
+        assert_eq!(out.epoch, 1, "a batch installs exactly one epoch");
+        assert_eq!(out.retired, 1);
+        let (s, c) = (reg.get(seq).unwrap(), reg.get(coal).unwrap());
+        assert_eq!(c.epoch(), 1);
+        assert_eq!(c.nnz(), s.nnz());
+        // normalisation is a pure function of the folded raw structure, so
+        // the coalesced epoch's normalised adjacency is bitwise the
+        // sequential end state
+        assert_eq!(c.operand().a.values, s.operand().a.values);
+        assert_eq!(c.operand().a.col_idx, s.operand().a.col_idx);
+        assert_eq!(c.request_flops(), s.request_flops());
+
+        // a bad delta anywhere in the batch rejects the WHOLE batch
+        let nnz_before = reg.get(coal).unwrap().nnz();
+        let bad = vec![
+            EdgeDelta::new().add(1, 2, 1.0).add(2, 1, 1.0),
+            EdgeDelta::new().add(0, 99, 1.0), // out of bounds
+        ];
+        assert!(reg.apply_deltas(coal, &bad, 0.0, None).is_err());
+        let c = reg.get(coal).unwrap();
+        assert_eq!(c.epoch(), 1, "rejected batch must not bump the epoch");
+        assert_eq!(c.nnz(), nnz_before);
+        // an empty batch is rejected too
+        assert!(reg.apply_deltas(coal, &[], 0.0, None).is_err());
+        reg.close(seq).unwrap();
+        reg.close(coal).unwrap();
+    }
+
+    #[test]
+    fn register_warm_starts_the_shard_axis_onto_the_plan() {
+        let ds = karate_club();
+        let dims = dims_for(&ds, 8);
+        let name = "sess-shards";
+        let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+        // the shard decision is keyed by the widest coalesced width the
+        // session can execute
+        let widest = *GnnModel::Gcn
+            .lower(dims, GnnModel::Gcn.norm_kind())
+            .spmm_shapes_batched(2)
+            .last()
+            .unwrap();
+        let mut db = TuningDb::default();
+        db.put(
+            name,
+            "amd-epyc",
+            widest,
+            DbEntry { speedup: 1.1, shards: Some(2), ..DbEntry::default() },
+        );
+        let mut reg = SessionRegistry::new();
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let id = reg
+            .register(name, GnnModel::Gcn, dims, params, &ds.adj, Some((&tuner, &db, 2)))
+            .unwrap();
+        assert_eq!(reg.get(id).unwrap().plan().shards(), 2, "plan carries the tuned shard count");
+
+        // a delta under the staleness threshold carries the sharded plan
+        // over; a forced refresh re-consults the DB and re-applies it
+        let delta = EdgeDelta::new().add(0, 9, 1.0).add(9, 0, 1.0);
+        let out = reg.apply_delta(id, &delta, 10.0, Some((&tuner, &db, 2))).unwrap();
+        assert!(!out.refreshed);
+        assert_eq!(reg.get(id).unwrap().plan().shards(), 2);
+        let delta = EdgeDelta::new().del(0, 9).del(9, 0);
+        let out = reg.apply_delta(id, &delta, 0.0, Some((&tuner, &db, 2))).unwrap();
+        assert!(out.refreshed);
+        assert_eq!(reg.get(id).unwrap().plan().shards(), 2);
+        reg.close(id).unwrap();
+
+        // no shard entry in the DB → the plan runs flat
+        let mut reg = SessionRegistry::new();
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let id = reg
+            .register("sess-flat", GnnModel::Gcn, dims, params, &ds.adj, None)
+            .unwrap();
+        assert_eq!(reg.get(id).unwrap().plan().shards(), 1);
         reg.close(id).unwrap();
     }
 

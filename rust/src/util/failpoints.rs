@@ -4,7 +4,11 @@
 //! Production code marks the places where faults are *interesting* with a
 //! named site: [`check`] for `Result` contexts (can inject a transient
 //! error) and [`trigger`] for infallible ones (panic / delay only). The
-//! kernels mark the SpMM dispatch (`"kernels.spmm"`), the workspace marks
+//! kernels mark the SpMM dispatch (`"kernels.spmm"`) and each shard job's
+//! halo-merge copy (`"kernels.halo_merge"`, fired just before a shard
+//! writes its rows into the shared output — a panic there proves a fault
+//! mid-merge is contained by the pool's panic handling and never
+//! half-writes another shard's rows), the workspace marks
 //! buffer recycling (`"workspace.recycle"`), and the serving layer marks
 //! batch execution (`"serve.run_batch"`) plus its two live-mutation
 //! commit paths — `"serve.apply_delta"` (after delta validation, before

@@ -16,12 +16,16 @@
 //! * [`tmp`] — unique temp directories for tests (replaces `tempfile`).
 //! * [`failpoints`] — deterministic fault injection (replaces the `fail`
 //!   crate); compiled to no-ops unless the `failpoints` feature is on.
+//! * [`numa`] — best-effort CPU-affinity pinning for shard workers
+//!   (replaces `core_affinity`/`libc`); raw syscalls behind the `numa`
+//!   feature, inline no-ops otherwise.
 
 pub mod bench;
 pub mod check;
 pub mod cli;
 pub mod failpoints;
 pub mod json;
+pub mod numa;
 pub mod parallel;
 pub mod rng;
 pub mod tmp;

@@ -272,6 +272,79 @@ fn tuned_formats_follow_epochs_under_churn() {
     assert_eq!(server.workspace().cached_formats(), 0);
 }
 
+/// Shard-sliced workspace state is epoch-keyed like every other cached
+/// conversion: a session whose tuning DB carries a shard decision serves
+/// shard-lowered, its shard plans cache under the live `(graph, epoch)`
+/// key, retire with that epoch when a delta commits, and the new epoch
+/// rebuilds exactly its own — with serving bitwise-equal throughout.
+#[test]
+fn shard_plans_follow_epochs_under_churn() {
+    let name = "mutate-sharded";
+    let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+    let d = dims();
+    // the shard axis keys on the widest coalesced SpMM width
+    let widest = *GnnModel::Gcn
+        .lower(d, GnnModel::Gcn.norm_kind())
+        .spmm_shapes_batched(1)
+        .last()
+        .unwrap();
+    let mut db = TuningDb::default();
+    db.put(
+        name,
+        "amd-epyc",
+        widest,
+        DbEntry { speedup: 1.2, shards: Some(2), ..DbEntry::default() },
+    );
+    let mut server = InferenceServer::new(ServeConfig {
+        max_batch: 1,
+        quantum: 4,
+        threads: 1,
+        max_wait: Duration::ZERO,
+        staleness: 1e9, // carry path: the shard lowering must survive a non-refreshing delta
+        ..ServeConfig::default()
+    });
+    let (adj, _) = ring_graph(48);
+    let sid = server
+        .register_session(
+            name,
+            GnnModel::Gcn,
+            d,
+            GnnModel::Gcn.init_params(d, 9),
+            &adj,
+            Some((&tuner, &db)),
+        )
+        .unwrap();
+    assert_eq!(server.session(sid).unwrap().plan().shards(), 2, "warm start shard-lowers the plan");
+    assert_eq!(server.workspace().cached_shard_plans(), 0, "shard plans build lazily");
+
+    let mut rng = Rng::seed_from_u64(91);
+    let x = Dense::uniform(48, d.in_dim, 1.0, &mut rng);
+    server.submit(sid, x.clone()).unwrap();
+    let done = server.run_until_drained().unwrap();
+    assert_eq!(done[0].expect_output().data, server.infer_now(sid, &x).unwrap().data);
+    let epoch0 = server.workspace().cached_shard_plans();
+    assert!(epoch0 > 0, "sharded serving caches its shard plans");
+
+    let out = server
+        .apply_delta(sid, &EdgeDelta::new().add(0, 24, 0.5).add(24, 0, 0.5), Some((&tuner, &db)))
+        .unwrap();
+    assert!(!out.refreshed, "drift {} must stay under the 1e9 threshold", out.drift);
+    assert_eq!(server.session(sid).unwrap().plan().shards(), 2, "carry keeps the shard lowering");
+
+    server.submit(sid, x.clone()).unwrap();
+    let done = server.run_until_drained().unwrap();
+    assert_eq!(done[0].expect_output().data, server.infer_now(sid, &x).unwrap().data);
+    assert_eq!(
+        server.workspace().cached_shard_plans(),
+        epoch0,
+        "epoch 0's shard plans retired with it; epoch 1 rebuilt exactly its own"
+    );
+
+    // close releases the lot
+    server.close_session(sid).unwrap();
+    assert_eq!(server.workspace().cached_shard_plans(), 0);
+}
+
 /// Fault injection against the mutation commit paths (`--features
 /// failpoints`): a fault mid-delta or mid-swap must leave the old
 /// epoch/model serving bit-for-bit, including work already queued, and

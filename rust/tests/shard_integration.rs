@@ -1,0 +1,316 @@
+//! Topology-aware sharding integration: the bitwise-equality matrix.
+//!
+//! The sharding layer (`kernels/shard.rs`) claims that shard-lowered
+//! execution is **bitwise-equal** to flat execution — values and
+//! gradients — because each shard's gathered panel renames columns
+//! monotonically without reordering any row's non-zero stream, and the
+//! merge writes disjoint row ranges. These tests pin that claim where it
+//! matters: through the `ExecutionPlan`, for every model of the zoo,
+//! across {1, 2, 4, rows+} shards × {CSR, SELL-C-σ, sorted CSR} ×
+//! {unfused, fused epilogue} × taped training / tape-free inference
+//! (solo and coalesced) — plus the serving path, where the shard count
+//! arrives via the tuning DB's warm-started shard axis.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use isplib::autodiff::{context_graph_id, SpmmOperand, Tape};
+use isplib::autotune::{
+    DbEntry, HardwareProfile, KernelRegistry, RegistryEntry, TuneConfig, Tuner, TuningDb,
+};
+use isplib::data::karate_club;
+use isplib::dense::Dense;
+use isplib::gnn::{GnnModel, ModelParams, ParamSet};
+use isplib::kernels::{KernelChoice, KernelWorkspace, Semiring};
+use isplib::plan::{execute_inference, execute_taped, ExecutionPlan};
+use isplib::serve::{InferenceServer, ServeConfig};
+use isplib::sparse::Csr;
+use isplib::util::rng::Rng;
+
+const HIDDEN: usize = 24;
+
+fn setup(model: GnnModel) -> (ExecutionPlan, Csr, ParamSet, ModelParams, Dense) {
+    let ds = karate_club();
+    let dims = ModelParams { in_dim: ds.feature_dim(), hidden: HIDDEN, classes: ds.num_classes };
+    let plan = model.lower(dims, model.norm_kind());
+    let params = model.init_params(dims, 23);
+    let a = model.norm_kind().apply(&ds.adj).unwrap();
+    let mut rng = Rng::seed_from_u64(29);
+    let x = Dense::uniform(a.rows, dims.in_dim, 1.0, &mut rng).map(|v| v - 0.5);
+    (plan, a, params, dims, x)
+}
+
+/// Bind `choice` for every SpMM width of `plan` under `context`.
+fn bind_choice(context: &str, plan: &ExecutionPlan, choice: KernelChoice) {
+    let registry = KernelRegistry::global();
+    registry.set_patched(true);
+    for k in plan.spmm_shapes() {
+        registry.bind(context, k, Semiring::Sum, RegistryEntry { choice, speedup: 1.0 });
+    }
+}
+
+/// Run the taped executor; returns (logits, per-param grads by name).
+fn run_taped(
+    plan: &ExecutionPlan,
+    operand: &SpmmOperand,
+    params: &ParamSet,
+    x: &Dense,
+    threads: usize,
+    ws: Option<Arc<KernelWorkspace>>,
+) -> (Dense, BTreeMap<String, Dense>) {
+    let mut tape = match ws {
+        Some(ws) => Tape::with_workspace(threads, ws),
+        None => Tape::new(threads),
+    };
+    let xv = tape.input(x.clone());
+    let mut vars = BTreeMap::new();
+    for (name, value) in params.iter() {
+        vars.insert(name.clone(), tape.input(value.clone()));
+    }
+    let logits = execute_taped(plan, &mut tape, operand, xv, &vars).unwrap();
+    let labels: Vec<usize> = (0..x.rows).map(|i| i % plan.dims().classes).collect();
+    let loss = tape.softmax_xent(logits, &labels, None).unwrap();
+    tape.backward(loss).unwrap();
+    let value = tape.value(logits).clone();
+    let grads = vars
+        .iter()
+        .map(|(name, var)| (name.clone(), tape.grad(*var).unwrap().clone()))
+        .collect();
+    (value, grads)
+}
+
+/// The property matrix. For every cell, the flat (shards = 1) execution
+/// is the oracle; every shard count — including one far above the row
+/// count, which degenerates to fewer non-empty shards — must reproduce
+/// it bitwise, values AND gradients, on both executors. The `64` column
+/// is the integration-level degenerate-shard guard: karate club has 34
+/// rows, so most requested shards are empty and must neither panic in
+/// the halo merge nor perturb a single bit.
+#[test]
+fn sharded_execution_is_bitwise_equal_across_the_matrix() {
+    let formats = [
+        ("csr", KernelChoice::Trusted),
+        ("sell", KernelChoice::Sell { c: 4, sigma: 32 }),
+        ("sorted", KernelChoice::SortedCsr),
+    ];
+    for model in GnnModel::ALL {
+        let (plan, a, params, _, x) = setup(model);
+        let fused_plan = plan.fuse_spmm_relu(|_| true);
+        for (fname, choice) in formats {
+            for fused in [false, true] {
+                let base = if fused { &fused_plan } else { &plan };
+                let ctx = format!("shard-matrix-{}-{fname}-{fused}", model.name());
+                bind_choice(&ctx, &plan, choice);
+                let ws = Arc::new(KernelWorkspace::new());
+                let operand = SpmmOperand::cached(a.clone(), &ctx)
+                    .with_workspace(Arc::clone(&ws), context_graph_id(&ctx));
+
+                // flat oracle for this (model, format, fusion) cell
+                let (flat_logits, flat_grads) =
+                    run_taped(base, &operand, &params, &x, 2, Some(Arc::clone(&ws)));
+                let flat_inf = execute_inference(base, &operand, &params, &[&x], 2).unwrap();
+                assert_eq!(flat_inf[0].data, flat_logits.data);
+
+                for shards in [2usize, 4, 64] {
+                    let label = format!("{model:?}/{fname}/fused={fused}/shards={shards}");
+                    let sharded = base.clone().with_shards(shards);
+                    assert_eq!(sharded.shards(), shards);
+
+                    let (logits, grads) =
+                        run_taped(&sharded, &operand, &params, &x, 2, Some(Arc::clone(&ws)));
+                    assert_eq!(logits.data, flat_logits.data, "{label}: taped value");
+                    for (name, g) in &grads {
+                        assert_eq!(
+                            g.data, flat_grads[name].data,
+                            "{label}: grad '{name}' diverged"
+                        );
+                    }
+
+                    let solo =
+                        execute_inference(&sharded, &operand, &params, &[&x], 2).unwrap();
+                    assert_eq!(solo[0].data, flat_logits.data, "{label}: inference value");
+                    let batch =
+                        execute_inference(&sharded, &operand, &params, &[&x, &x, &x], 2)
+                            .unwrap();
+                    for out in &batch {
+                        assert_eq!(out.data, flat_logits.data, "{label}: coalesced inference");
+                    }
+                }
+                KernelRegistry::global().unbind_context(&ctx);
+            }
+        }
+    }
+}
+
+/// Shard-local workspace state accumulates while executing sharded —
+/// cached shard plans (and, for format-bound contexts, their per-shard
+/// conversions) — and the flat oracle above proved it never changes a
+/// bit. Here: the cache actually populates and hits, so the second
+/// execution builds nothing.
+#[test]
+fn shard_plans_cache_across_executions() {
+    let (plan, a, params, _, x) = setup(GnnModel::Gcn);
+    let ctx = "shard-cache-test";
+    bind_choice(ctx, &plan, KernelChoice::Trusted);
+    let ws = Arc::new(KernelWorkspace::new());
+    let operand =
+        SpmmOperand::cached(a, ctx).with_workspace(Arc::clone(&ws), context_graph_id(ctx));
+    let sharded = plan.with_shards(2);
+    let first = execute_inference(&sharded, &operand, &params, &[&x], 2).unwrap();
+    let misses = ws.stats().shard_misses;
+    assert!(misses > 0, "sharded execution must build shard plans");
+    assert!(ws.cached_shard_plans() > 0);
+    let second = execute_inference(&sharded, &operand, &params, &[&x], 2).unwrap();
+    assert_eq!(first[0].data, second[0].data);
+    assert_eq!(ws.stats().shard_misses, misses, "warm execution rebuilds nothing");
+    assert!(ws.stats().shard_hits > 0);
+    KernelRegistry::global().unbind_context(ctx);
+}
+
+/// Sharding end-to-end in *serving*: a session whose tuning DB carries a
+/// shard decision serves shard-lowered — bitwise-equal to a flat
+/// co-session over the same frozen parameters, through the real
+/// scheduler queue and micro-batcher.
+#[test]
+fn sharded_session_serves_bitwise_equal_through_scheduler() {
+    let ds = karate_club();
+    let model = GnnModel::Gcn;
+    let dims = ModelParams { in_dim: ds.feature_dim(), hidden: HIDDEN, classes: ds.num_classes };
+    let params = model.init_params(dims, 31);
+    let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+    // the shard axis keys on the widest coalesced width this session can
+    // execute (max_batch = ServeConfig::max_batch below)
+    let widest =
+        *model.lower(dims, model.norm_kind()).spmm_shapes_batched(4).last().unwrap();
+    let mut db = TuningDb::default();
+    db.put(
+        "shard-serve-sharded",
+        "amd-epyc",
+        widest,
+        DbEntry { speedup: 1.1, shards: Some(2), ..DbEntry::default() },
+    );
+    KernelRegistry::global().set_patched(true);
+
+    let mut server = InferenceServer::new(ServeConfig {
+        max_batch: 4,
+        quantum: 4,
+        threads: 2,
+        ..ServeConfig::default()
+    });
+    let sharded_sid = server
+        .register_session(
+            "shard-serve-sharded",
+            model,
+            dims,
+            params.clone(),
+            &ds.adj,
+            Some((&tuner, &db)),
+        )
+        .unwrap();
+    let flat_sid = server
+        .register_session("shard-serve-flat", model, dims, params, &ds.adj, None)
+        .unwrap();
+    assert_eq!(
+        server.session(sharded_sid).unwrap().plan().shards(),
+        2,
+        "warm start must shard-lower the session plan"
+    );
+    assert_eq!(server.session(flat_sid).unwrap().plan().shards(), 1);
+
+    let mut rng = Rng::seed_from_u64(37);
+    let xs: Vec<Dense> = (0..6).map(|_| Dense::uniform(34, dims.in_dim, 1.0, &mut rng)).collect();
+    for x in &xs {
+        server.submit(sharded_sid, x.clone()).unwrap();
+        server.submit(flat_sid, x.clone()).unwrap();
+    }
+    let done = server.run_until_drained().unwrap();
+    assert_eq!(done.len(), 12);
+    for x in &xs {
+        let sharded_out = done
+            .iter()
+            .find(|c| c.session == sharded_sid && c.features.data == x.data)
+            .expect("sharded completion");
+        let flat_out = done
+            .iter()
+            .find(|c| c.session == flat_sid && c.features.data == x.data)
+            .expect("flat completion");
+        assert_eq!(
+            sharded_out.expect_output().data,
+            flat_out.expect_output().data,
+            "sharded serving diverged from flat over the scheduler"
+        );
+    }
+    server.close_session(sharded_sid).unwrap();
+    server.close_session(flat_sid).unwrap();
+}
+
+/// Fault injection at the `kernels.halo_merge` site (`--features
+/// failpoints`): the one cross-shard write of a sharded dispatch. A
+/// panic there must propagate out of the pool (no torn output escapes —
+/// the merge target is only published on success), and once disarmed the
+/// very next call is bitwise-clean; a delay there reorders shard
+/// completion without perturbing a single bit.
+#[cfg(feature = "failpoints")]
+mod chaos {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::time::Duration;
+
+    use isplib::kernels::{spmm_sharded, ShardPlan};
+    use isplib::util::failpoints::{self, fires, FailAction, FailPlan};
+
+    use super::*;
+
+    #[test]
+    fn panic_in_halo_merge_propagates_and_disarmed_rerun_is_clean() {
+        let _guard = failpoints::exclusive();
+        failpoints::clear();
+        let ds = karate_club();
+        let a = &ds.adj;
+        let mut rng = Rng::seed_from_u64(41);
+        let x = Dense::uniform(a.rows, 16, 1.0, &mut rng);
+        let flat =
+            spmm_sharded(a, &x, Semiring::Sum, KernelChoice::Trusted, 2, None, 1).unwrap();
+
+        failpoints::configure(
+            "kernels.halo_merge",
+            FailPlan::always(FailAction::Panic).limit(1),
+        );
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            spmm_sharded(a, &x, Semiring::Sum, KernelChoice::Trusted, 2, None, 4)
+        }));
+        assert!(caught.is_err(), "injected merge panic must propagate to the caller");
+        failpoints::clear();
+
+        let after = spmm_sharded(a, &x, Semiring::Sum, KernelChoice::Trusted, 2, None, 4)
+            .unwrap();
+        assert_eq!(after.data, flat.data, "disarmed rerun must be bitwise-clean");
+    }
+
+    #[test]
+    fn delay_in_halo_merge_fires_per_shard_and_never_perturbs_bits() {
+        let _guard = failpoints::exclusive();
+        failpoints::clear();
+        let ds = karate_club();
+        let a = &ds.adj;
+        let mut rng = Rng::seed_from_u64(43);
+        let x = Dense::uniform(a.rows, 16, 1.0, &mut rng);
+        let flat =
+            spmm_sharded(a, &x, Semiring::Sum, KernelChoice::Trusted, 2, None, 1).unwrap();
+        let jobs = ShardPlan::build(a, 4).shard_count();
+
+        failpoints::configure(
+            "kernels.halo_merge",
+            FailPlan::always(FailAction::Delay(Duration::from_millis(2))),
+        );
+        let before = fires("kernels.halo_merge");
+        let slow = spmm_sharded(a, &x, Semiring::Sum, KernelChoice::Trusted, 2, None, 4)
+            .unwrap();
+        assert_eq!(
+            fires("kernels.halo_merge") - before,
+            jobs as u64,
+            "the merge failpoint fires once per shard job"
+        );
+        assert_eq!(slow.data, flat.data, "a delayed merge changes timing, never bits");
+        failpoints::clear();
+    }
+}

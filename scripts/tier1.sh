@@ -20,6 +20,12 @@
 # admission-stamp reference, and the failpoints pass arms the
 # serve.apply_delta / serve.hot_swap sites so mid-mutation faults are
 # exercised (old epoch / old model must keep serving untouched).
+#
+# The sharding suite (tests/shard_integration.rs) runs in BOTH passes
+# too: the default pass pins the bitwise-equality matrix (models ×
+# formats × fusion × shard counts, values AND gradients, both executors
+# plus the serving scheduler), and the failpoints pass additionally arms
+# the kernels.halo_merge site inside the shard merge path.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
@@ -28,6 +34,8 @@ cargo clippy --all-targets -- -D warnings
 cargo test -q
 cargo test -q --test obs_integration
 cargo test -q --test mutation_integration
+cargo test -q --test shard_integration
 cargo test -q --features failpoints
 cargo test -q --features failpoints --test obs_integration
 cargo test -q --features failpoints --test mutation_integration
+cargo test -q --features failpoints --test shard_integration
