@@ -12,7 +12,8 @@ use std::path::Path;
 use std::time::Instant;
 
 use crate::dense::Dense;
-use crate::error::Result;
+use crate::error::{Error, Result};
+use crate::util::durable;
 use crate::util::json::Json;
 use crate::kernels::{
     prepare_format, shard_count_candidates, spmm_sharded, spmm_with_workspace, KernelChoice,
@@ -130,13 +131,25 @@ impl TuningDb {
         format!("{dataset}/{profile}/{k}")
     }
 
-    /// Load from a JSON file; missing file → empty DB.
+    /// Load from a JSON file; missing file → empty DB. The file goes
+    /// through the durable layer ([`crate::util::durable`]): a torn,
+    /// truncated or malformed file is quarantined to `<path>.corrupt` and
+    /// the last-good `<path>.bak` generation kept by [`TuningDb::save`]
+    /// is loaded instead; `Error::CorruptState` surfaces only when
+    /// nothing recoverable exists. Pre-envelope (bare JSON) files keep
+    /// loading unchanged.
     pub fn load(path: &Path) -> Result<Self> {
-        if !path.exists() {
-            return Ok(TuningDb::default());
-        }
-        let text = std::fs::read_to_string(path)?;
-        let json = Json::parse(&text)?;
+        let entries = durable::load(path, |bytes| {
+            let text = std::str::from_utf8(bytes)
+                .map_err(|_| Error::Json("tuning db is not utf-8".into()))?;
+            Self::entries_from_json(&Json::parse(text)?)
+        })?;
+        Ok(entries.map(|entries| TuningDb { entries }).unwrap_or_default())
+    }
+
+    /// Decode the `entries` map (shared by [`TuningDb::load`]'s primary
+    /// and `.bak`-fallback parses).
+    fn entries_from_json(json: &Json) -> Result<HashMap<String, DbEntry>> {
         let mut entries = HashMap::new();
         if let Json::Obj(map) = json.get("entries")? {
             for (key, val) in map {
@@ -180,14 +193,15 @@ impl TuningDb {
                 );
             }
         }
-        Ok(TuningDb { entries })
+        Ok(entries)
     }
 
-    /// Persist to a JSON file.
+    /// Persist to a JSON file through the durable layer: atomic
+    /// temp→fsync→rename under the checksummed envelope, with the
+    /// previous good file kept as `<path>.bak`. A crash mid-save can no
+    /// longer tear the DB — the tuner's accumulated measurements are the
+    /// most expensive artifact this crate produces.
     pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
         let mut map = std::collections::BTreeMap::new();
         for (key, e) in &self.entries {
             let kb = match e.kb {
@@ -225,8 +239,7 @@ impl TuningDb {
             );
         }
         let doc = Json::obj(vec![("entries", Json::Obj(map))]);
-        std::fs::write(path, doc.pretty())?;
-        Ok(())
+        durable::save(path, doc.pretty().as_bytes())
     }
 
     /// Look up a prior decision.
@@ -1116,6 +1129,76 @@ mod tests {
         // pre-sharding DBs (no shards key) load as "run flat"
         assert!(e.shards.is_none());
         assert!(old.shard_count("d", "p", 32).is_none());
+    }
+
+    /// Regression for the original torn-write bug: `save` used to be a
+    /// bare `std::fs::write`, and `load` of a torn file was an opaque
+    /// JSON error with the bytes left in place. Now every failure mode
+    /// quarantines to `.corrupt`, falls back to the `.bak` generation,
+    /// and only a fully unrecoverable path is a typed `CorruptState`.
+    #[test]
+    fn db_load_recovers_from_torn_files() {
+        use crate::util::durable;
+        let dir = crate::util::tmp::TempDir::new().unwrap();
+        let path = dir.path().join("tune.json");
+        let mut db = TuningDb::default();
+        db.put("d", "p", 32, DbEntry { kb: Some(16), speedup: 2.5, ..DbEntry::default() });
+        db.save(&path).unwrap();
+        db.put("d", "p", 64, DbEntry { kt: Some(32), speedup: 1.5, ..DbEntry::default() });
+        db.save(&path).unwrap();
+
+        // (1) truncated file: envelope length check catches it
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let back = TuningDb::load(&path).unwrap();
+        assert!(back.get("d", "p", 32).is_some(), "recovered from .bak");
+        assert!(back.get("d", "p", 64).is_none(), "the .bak generation predates k=64");
+        assert!(durable::corrupt_path(&path).exists(), "torn bytes quarantined");
+
+        // (2) half-written bare JSON object (a legacy writer dying
+        // mid-write): parse fails, quarantine + .bak fallback again
+        db.save(&path).unwrap(); // re-establish a good primary
+        std::fs::write(&path, r#"{ "entries": { "d/p/32": { "kb": 16,"#).unwrap();
+        let back = TuningDb::load(&path).unwrap();
+        assert!(back.get("d", "p", 32).is_some());
+
+        // (3) empty file with nothing to fall back to: typed error
+        let lone = dir.path().join("lone.json");
+        std::fs::write(&lone, b"").unwrap();
+        match TuningDb::load(&lone) {
+            Err(Error::CorruptState { path: p, .. }) => {
+                assert!(p.contains("lone.json"));
+            }
+            other => panic!("want CorruptState, got {other:?}"),
+        }
+        assert!(durable::corrupt_path(&lone).exists());
+
+        // (4) malformed JSON with no .bak: typed error, not Error::Json
+        let half = dir.path().join("half.json");
+        std::fs::write(&half, r#"{ "entries": {"#).unwrap();
+        assert!(matches!(TuningDb::load(&half), Err(Error::CorruptState { .. })));
+    }
+
+    #[test]
+    fn db_save_is_atomic_and_keeps_a_bak_generation() {
+        use crate::util::durable;
+        let dir = crate::util::tmp::TempDir::new().unwrap();
+        let path = dir.path().join("nested").join("tune.json");
+        let mut db = TuningDb::default();
+        db.put("d", "p", 16, DbEntry { speedup: 1.1, ..DbEntry::default() });
+        db.save(&path).unwrap(); // creates the parent dir too
+        db.put("d", "p", 32, DbEntry { speedup: 1.2, ..DbEntry::default() });
+        db.save(&path).unwrap();
+        // previous generation is retained and loads on its own
+        let bak_bytes = std::fs::read(durable::bak_path(&path)).unwrap();
+        let payload = durable::decode(&bak_bytes).unwrap();
+        let prev =
+            TuningDb::entries_from_json(&Json::parse(std::str::from_utf8(payload).unwrap()).unwrap())
+                .unwrap();
+        assert!(prev.contains_key("d/p/16"));
+        assert!(!prev.contains_key("d/p/32"));
+        // no temp droppings on the happy path
+        assert!(!path.with_file_name("tune.json.tmp").exists());
     }
 
     #[test]

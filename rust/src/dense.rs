@@ -8,6 +8,7 @@
 //! kernels; dense ops just need to be correct and not embarrassing.
 
 use crate::error::{Error, Result};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Row-major dense matrix of `f32`.
@@ -39,6 +40,26 @@ impl Dense {
             )));
         }
         Ok(Dense { rows, cols, data })
+    }
+
+    /// Serialize as `{"rows", "cols", "bits"}` with every element stored
+    /// as its raw IEEE-754 bit pattern ([`Json::f32_bits`]), so the text
+    /// round-trip is bitwise-lossless — checkpoints depend on this.
+    pub fn to_json_bits(&self) -> Json {
+        Json::obj(vec![
+            ("rows", Json::num(self.rows as f64)),
+            ("cols", Json::num(self.cols as f64)),
+            ("bits", Json::Arr(self.data.iter().map(|&x| Json::f32_bits(x)).collect())),
+        ])
+    }
+
+    /// Inverse of [`Dense::to_json_bits`]; validates the element count.
+    pub fn from_json_bits(json: &Json) -> Result<Dense> {
+        let rows = json.get("rows")?.as_usize()?;
+        let cols = json.get("cols")?.as_usize()?;
+        let bits = json.get("bits")?.as_arr()?;
+        let data = bits.iter().map(|b| b.as_f32_bits()).collect::<Result<Vec<f32>>>()?;
+        Dense::from_vec(rows, cols, data)
     }
 
     /// Create with every element drawn from `U(-scale, scale)`.
@@ -514,6 +535,22 @@ mod tests {
         let z = Dense::zeros(2, 3);
         assert_eq!(z.data, vec![0.0; 6]);
         assert!(Dense::from_vec(2, 2, vec![1.0; 3]).is_err());
+    }
+
+    #[test]
+    fn json_bits_roundtrip_is_bitwise() {
+        let mut rng = Rng::seed_from_u64(11);
+        let a = Dense::uniform(4, 3, 1.0, &mut rng);
+        let text = a.to_json_bits().pretty();
+        let back = Dense::from_json_bits(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.rows, a.rows);
+        assert_eq!(back.cols, a.cols);
+        let bits: Vec<u32> = a.data.iter().map(|x| x.to_bits()).collect();
+        let back_bits: Vec<u32> = back.data.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(back_bits, bits);
+        // element-count mismatch is rejected
+        let bad = Json::parse(r#"{"rows": 2, "cols": 2, "bits": [0, 0, 0]}"#).unwrap();
+        assert!(Dense::from_json_bits(&bad).is_err());
     }
 
     #[test]

@@ -57,6 +57,18 @@ pub enum Error {
     /// surfaced mid-swap. The old model keeps serving untouched; not
     /// retryable with the same params.
     SwapRejected(String),
+    /// A persisted artifact failed durable-envelope validation (bad
+    /// magic, checksum mismatch, truncation, malformed payload) and no
+    /// recoverable `.bak` fallback existed. The offending bytes have been
+    /// quarantined to `<path>.corrupt` for post-mortem; see
+    /// [`crate::util::durable`]. Not retryable: the state is gone and the
+    /// caller must re-derive it (re-tune, re-train).
+    CorruptState {
+        /// The artifact path that failed to load.
+        path: String,
+        /// What validation step rejected it.
+        reason: String,
+    },
 }
 
 impl fmt::Display for Error {
@@ -77,6 +89,9 @@ impl fmt::Display for Error {
             Error::DeadlineExceeded(s) => write!(f, "deadline exceeded: {s}"),
             Error::SessionClosed(s) => write!(f, "session closed: {s}"),
             Error::SwapRejected(s) => write!(f, "swap rejected: {s}"),
+            Error::CorruptState { path, reason } => {
+                write!(f, "corrupt state: {path}: {reason}")
+            }
         }
     }
 }
@@ -172,6 +187,15 @@ mod tests {
         assert!(e.to_string().contains("layer0.w"));
         assert!(!e.is_retryable());
         assert_eq!(e.retry_after_ms(), None);
+
+        let e = Error::CorruptState {
+            path: "db.json".into(),
+            reason: "checksum mismatch".into(),
+        };
+        assert!(e.to_string().contains("corrupt state"));
+        assert!(e.to_string().contains("db.json"));
+        assert!(e.to_string().contains("checksum mismatch"));
+        assert!(!e.is_retryable());
     }
 
     #[test]

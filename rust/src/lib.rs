@@ -65,5 +65,5 @@ pub mod prelude {
     pub use crate::plan::ExecutionPlan;
     pub use crate::serve::{InferenceServer, ServeConfig, SessionId};
     pub use crate::sparse::{Coo, Csc, Csr, NormKind};
-    pub use crate::train::{Backend, TrainConfig, TrainReport, Trainer};
+    pub use crate::train::{Backend, TrainCheckpoint, TrainConfig, TrainReport, Trainer};
 }

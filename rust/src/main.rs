@@ -35,6 +35,12 @@ COMMANDS:
   train      Train one cell         [--model gcn] [--dataset karate]
              [--backend isplib] [--epochs 30] [--hidden 32] [--scale 256]
              [--artifacts artifacts] [--json]
+             --checkpoint-dir persists a crash-safe training checkpoint
+             (atomic write, checksummed, .bak generation) at the end of
+             the run — and every N epochs with --checkpoint-every N.
+             --resume loads it and continues to --epochs; the resumed
+             trajectory is bitwise-identical to an uninterrupted run.
+             [--checkpoint-dir ckpt] [--checkpoint-every 0] [--resume]
   bench      Regenerate Figure 3    [--models gcn,sage-sum,gin]
              [--datasets all] [--frameworks all] [--epochs 10]
              [--hidden 32] [--scale 256] [--json]
@@ -55,6 +61,13 @@ COMMANDS:
              admission-stamp reference (infer_at). Results land in the
              JSON under \"churn\".
              [--churn] [--delta-rate 8] [--swap-every 3] [--staleness 0.25]
+             --restart persists the session manifest + tuning DB through
+             the durable layer, tears the server down, rebuilds it from
+             the two files, and verifies restored sessions serve bitwise-
+             equal outputs with warm-starts replayed and zero
+             re-measurement. Results land in the JSON under \"restart\".
+             [--restart] [--manifest serve_manifest.json]
+             [--tuning-db serve_tunedb.json]
 
 GLOBAL FLAGS:
   --trace <path>   Write a Perfetto/Chrome trace-event JSON of the whole
@@ -182,11 +195,31 @@ fn train(args: &Args) -> Result<()> {
         artifacts_dir: Some(args.get("artifacts", "artifacts").into()),
         ..TrainConfig::default()
     };
+    let ckpt_dir = args.flags.get("checkpoint-dir").map(std::path::PathBuf::from);
+    let ckpt_every = args.get_parse("checkpoint-every", 0usize)?;
+    let resume = args.has("resume");
+    if (resume || ckpt_every > 0) && ckpt_dir.is_none() {
+        return Err(Error::Config(
+            "--resume and --checkpoint-every require --checkpoint-dir".into(),
+        ));
+    }
     // train always collects metrics: fit() publishes cache/workspace
     // counters at exit and the registry snapshot is dumped below
     isplib::obs::set_metrics(true);
     let mut trainer = Trainer::new(model, backend, cfg, &ds)?;
-    let report = trainer.fit(&ds)?;
+    let report = match &ckpt_dir {
+        Some(dir) => {
+            if resume && trainer.resume(dir)? {
+                eprintln!(
+                    "resumed from {} at epoch {}",
+                    dir.display(),
+                    trainer.epochs_run()
+                );
+            }
+            trainer.fit_with_checkpoints(&ds, Some(dir.as_path()), ckpt_every)?
+        }
+        None => trainer.fit(&ds)?,
+    };
     if args.has("json") {
         let mut json = report.to_json();
         if let Json::Obj(m) = &mut json {
@@ -647,6 +680,108 @@ fn serve_bench(args: &Args) -> Result<()> {
         Json::obj(vec![("enabled", Json::bool(false))])
     };
 
+    // --- optional restart phase: warm restart from durable state ---------
+    // --restart persists the session manifest and the tuning DB through
+    // the durable layer, tears the whole server down (sessions, shared
+    // workspace, kernel-registry contexts — a process "crash"), rebuilds
+    // it from the two files, and verifies (a) restored sessions serve
+    // outputs bitwise-equal to pre-restart probes, (b) tuning warm-starts
+    // replay identically with zero re-measurement, and (c) serving after
+    // restore never converts a format on the request path.
+    let restart = args.has("restart");
+    let restart_json = if restart {
+        use isplib::serve::SessionManifest;
+        let manifest_path = std::path::PathBuf::from(args.get("manifest", "serve_manifest.json"));
+        let db_path = std::path::PathBuf::from(args.get("tuning-db", "serve_tunedb.json"));
+
+        // pre-restart reference: one probe input/output per open session
+        let mut probes = Vec::new();
+        let mut warm_before = Vec::new();
+        for &sid in &sids {
+            let (n, f) = {
+                let s = server.session(sid)?;
+                warm_before.push((s.name.clone(), s.warm_started, s.preconverted, s.fused_ops()));
+                (s.nodes(), s.dims.in_dim)
+            };
+            let x = Dense::uniform(n, f, 1.0, &mut rng);
+            let y = server.infer_now(sid, &x)?;
+            probes.push((x, y));
+        }
+
+        server.snapshot_manifest().save(&manifest_path)?;
+        db.save(&db_path)?;
+        // the "crash": close every session (unbinding global kernel
+        // contexts) and drop the server with its workspace
+        for &sid in &sids {
+            server.close_session(sid)?;
+        }
+
+        let restored_db = TuningDb::load(&db_path)?;
+        let loaded = SessionManifest::load(&manifest_path)?.ok_or_else(|| {
+            Error::Runtime("serve-bench --restart: persisted manifest did not load".into())
+        })?;
+        server = InferenceServer::new(cfg);
+        sids = server.restore_from_manifest(&loaded, Some((&tuner, &restored_db)))?;
+        // format conversions after restore: exactly the registration-time
+        // pre-conversions — anything above this during serving would mean
+        // the hot path converted
+        let misses_at_restore = server.workspace().stats().format_misses;
+
+        let mut verified = 0usize;
+        for (i, &sid) in sids.iter().enumerate() {
+            let s = server.session(sid)?;
+            let (name, warm0, pre0, fused0) = &warm_before[i];
+            if (s.warm_started, s.preconverted, s.fused_ops()) != (*warm0, *pre0, *fused0) {
+                return Err(Error::Runtime(format!(
+                    "serve-bench --restart: session '{name}' warm-start diverged \
+                     (warm {}→{}, formats {}→{}, fused {}→{})",
+                    warm0,
+                    s.warm_started,
+                    pre0,
+                    s.preconverted,
+                    fused0,
+                    s.fused_ops()
+                )));
+            }
+            let y = server.infer_now(sid, &probes[i].0)?;
+            if y.data != probes[i].1.data {
+                return Err(Error::Runtime(format!(
+                    "serve-bench --restart: session '{name}' output diverged after restore"
+                )));
+            }
+            verified += 1;
+        }
+        let misses_after_probes = server.workspace().stats().format_misses;
+        if misses_after_probes != misses_at_restore {
+            return Err(Error::Runtime(format!(
+                "serve-bench --restart: {} format conversions hit the request path after \
+                 restore",
+                misses_after_probes - misses_at_restore
+            )));
+        }
+        println!(
+            "  restart: {verified} sessions restored from {} + {} — outputs bitwise-equal, \
+             warm-starts replayed ({} registration-time conversions, 0 on the request path)",
+            manifest_path.display(),
+            db_path.display(),
+            misses_at_restore
+        );
+        Json::obj(vec![
+            ("enabled", Json::bool(true)),
+            ("manifest", Json::str(&manifest_path.display().to_string())),
+            ("tuning_db", Json::str(&db_path.display().to_string())),
+            ("sessions_restored", Json::num(sids.len() as f64)),
+            ("verified_bitwise", Json::num(verified as f64)),
+            ("format_misses_at_restore", Json::num(misses_at_restore as f64)),
+            (
+                "format_misses_on_request_path",
+                Json::num((misses_after_probes - misses_at_restore) as f64),
+            ),
+        ])
+    } else {
+        Json::obj(vec![("enabled", Json::bool(false))])
+    };
+
     // eviction demo: close the last session out of the shared workspace
     let last = *sids.last().unwrap();
     let evicted = server.close_session(last)?.evicted;
@@ -678,6 +813,7 @@ fn serve_bench(args: &Args) -> Result<()> {
         ("sessions", Json::Arr(sessions_json)),
         ("fairness", Json::obj(vec![("p99_spread", Json::num(spread))])),
         ("churn", churn_json),
+        ("restart", restart_json),
         (
             "overload",
             Json::obj(vec![

@@ -47,6 +47,16 @@
 //!                                           balanced)
 //! op.spmm{fmt=sell(c=4,s=32),k=32,kernel=sell(c=4,s=32),threads=2}
 //!                                    histogram (per-op aggregate)
+//! ckpt.saves                         counter (training checkpoints written)
+//! ckpt.resumes                       counter (runs resumed from a checkpoint)
+//! ckpt.rejected                      counter (resume refused: fingerprint
+//!                                             mismatch)
+//! durable.saves                      counter (atomic envelope writes
+//!                                             committed)
+//! durable.quarantines                counter (corrupt files renamed to
+//!                                             `.corrupt`)
+//! durable.recoveries                 counter (loads served by the `.bak`
+//!                                             generation)
 //! ```
 //!
 //! Sharded kernel dispatches additionally emit a `shard.spmm` span per

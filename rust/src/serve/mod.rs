@@ -148,6 +148,15 @@
 //! fault-injection harness behind the failure-path tests lives in
 //! [`crate::util::failpoints`] (compiled to no-ops unless the
 //! `failpoints` feature is on).
+//!
+//! Serving state is also **restartable**: [`SessionRegistry::snapshot_manifest`]
+//! captures every open session's durable identity as a [`SessionManifest`]
+//! persisted through [`crate::util::durable`] (atomic, checksummed,
+//! `.bak`-generation), and a restarted process rebuilds the registry with
+//! [`SessionRegistry::restore_from_manifest`] — warm-started from the same
+//! persisted tuning DB, so no kernel/format/fusion/shard choice is ever
+//! re-measured across a restart and restored sessions serve bitwise-equal
+//! outputs (`serve-bench --restart` asserts both).
 
 mod batch;
 mod breaker;
@@ -165,7 +174,7 @@ pub use crate::dense::{concat_cols, concat_cols_into, split_cols, split_cols_int
 pub use forward::{infer_batched, infer_one};
 pub use metrics::{fairness_spread, SessionMetrics};
 pub use scheduler::{CloseOutcome, InferenceServer, ServeConfig};
-pub use session::{DeltaOutcome, ServeSession, SessionId, SessionRegistry};
+pub use session::{DeltaOutcome, ServeSession, SessionId, SessionManifest, SessionRegistry};
 // re-exported so serving clients build mutation batches without reaching
 // into the sparse module
 pub use crate::sparse::EdgeDelta;

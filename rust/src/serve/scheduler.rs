@@ -62,7 +62,7 @@ use super::batch::{CompletedInference, InferenceRequest, SessionQueue};
 use super::breaker::{BreakerState, CircuitBreaker};
 use super::forward::{infer_batched, infer_one};
 use super::metrics::{fairness_spread, SessionMetrics};
-use super::session::{DeltaOutcome, ServeSession, SessionId, SessionRegistry};
+use super::session::{DeltaOutcome, ServeSession, SessionId, SessionManifest, SessionRegistry};
 
 /// Serving configuration. Zero values are clamped to their minimum (1)
 /// except `threads`, where 0 means the worker-pool default, and the
@@ -288,6 +288,44 @@ impl InferenceServer {
         self.thread_budgets.push(None);
         self.session_gauges.push(SessionGauges::new(name));
         Ok(id)
+    }
+
+    /// Capture every open session's durable identity for a warm restart;
+    /// see [`SessionRegistry::snapshot_manifest`].
+    pub fn snapshot_manifest(&self) -> SessionManifest {
+        self.registry.snapshot_manifest()
+    }
+
+    /// Re-register every session a manifest captured (scheduler state —
+    /// queue, deficit, metrics, breaker, gauges — starts fresh; durable
+    /// identity and warm-started tuning come back exactly). `warm` mirrors
+    /// [`register_session`](InferenceServer::register_session): handed the
+    /// persisted tuning DB, restored sessions replay their tuned
+    /// kernel/format/fusion/shard choices with zero re-measurement.
+    pub fn restore_from_manifest(
+        &mut self,
+        manifest: &SessionManifest,
+        warm: Option<(&Tuner, &TuningDb)>,
+    ) -> Result<Vec<SessionId>> {
+        let warm = warm.map(|(t, db)| (t, db, self.cfg.max_batch.max(1)));
+        let result = self.registry.restore_from_manifest(manifest, warm);
+        // keep the per-session vectors aligned with registry slots even
+        // when a failed restore left rolled-back tombstones behind
+        while self.queues.len() < self.registry.slot_count() {
+            let name = self
+                .registry
+                .get(SessionId(self.queues.len()))
+                .map(|s| s.name.clone())
+                .unwrap_or_default();
+            self.queues.push(SessionQueue::default());
+            self.deficits.push(0);
+            self.metrics.push(SessionMetrics::default());
+            self.breakers
+                .push(CircuitBreaker::new(self.cfg.quarantine_after, self.cfg.probation_passes));
+            self.thread_budgets.push(None);
+            self.session_gauges.push(SessionGauges::new(&name));
+        }
+        result
     }
 
     /// Override one session's kernel thread budget (the ROADMAP

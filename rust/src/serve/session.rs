@@ -55,7 +55,23 @@
 //! and the shard-sliced workspace state (cached shard plans and their
 //! per-shard format conversions) keys under `(graph, epoch)` like every
 //! other cached artifact, retiring with its epoch.
+//!
+//! # Warm restart
+//!
+//! A registry can be rebuilt across a process restart without losing any
+//! tuning work: [`SessionRegistry::snapshot_manifest`] captures every open
+//! session's durable identity — name, model, dims, current parameters
+//! (bit-exact), and the *raw* adjacency — as a [`SessionManifest`], which
+//! persists through [`crate::util::durable`] (atomic write, checksummed,
+//! `.bak` generation). [`SessionRegistry::restore_from_manifest`] replays
+//! registration for each entry; handed the same persisted
+//! [`TuningDb`], the restored sessions warm-start identical kernel/format/
+//! fusion/shard choices with **zero** re-measurement, and serve outputs
+//! bitwise-equal to the pre-restart process (`serve-bench --restart`
+//! asserts both). Epoch and version counters restart at 0 — they number
+//! mutations within one process lifetime, not across restarts.
 
+use std::path::Path;
 use std::sync::Arc;
 
 use crate::autodiff::{context_graph_id, SpmmOperand};
@@ -65,7 +81,10 @@ use crate::gnn::{GnnModel, ModelParams, ParamSet};
 use crate::kernels::{prepare_format, GraphEpoch, KernelChoice, KernelWorkspace};
 use crate::plan::ExecutionPlan;
 use crate::sparse::{Csr, EdgeDelta, RowLenStats};
+use crate::train::{params_from_json, params_to_json};
+use crate::util::durable;
 use crate::util::failpoints;
+use crate::util::json::Json;
 
 /// Opaque handle to a registered serving session.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -260,6 +279,12 @@ impl SessionRegistry {
     /// Number of open sessions.
     pub fn len(&self) -> usize {
         self.sessions.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Total registry slots, **including** closed-session tombstones —
+    /// the index space scheduler-side per-session vectors must track.
+    pub(crate) fn slot_count(&self) -> usize {
+        self.sessions.len()
     }
 
     /// True when no session is open.
@@ -666,6 +691,186 @@ impl SessionRegistry {
 impl Default for SessionRegistry {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// One session's durable identity inside a [`SessionManifest`]: exactly
+/// the inputs [`SessionRegistry::register`] needs to rebuild it.
+struct ManifestEntry {
+    name: String,
+    model: GnnModel,
+    dims: ModelParams,
+    params: ParamSet,
+    raw_adj: Csr,
+}
+
+/// A durable snapshot of a [`SessionRegistry`]: every open session's
+/// name, model, dims, bit-exact current parameters, and raw adjacency,
+/// in registration order. Derived state (normalised adjacency, plans,
+/// warm-started bindings, converted formats) is deliberately **not**
+/// stored — [`SessionRegistry::restore_from_manifest`] rebuilds it by
+/// replaying registration, warm-started from the persisted
+/// [`TuningDb`] so nothing is re-measured.
+pub struct SessionManifest {
+    entries: Vec<ManifestEntry>,
+}
+
+/// Raw CSR structure as JSON: indices as exact integers, values as raw
+/// IEEE-754 bit patterns so the restored adjacency is bitwise identical.
+fn csr_to_json(m: &Csr) -> Json {
+    Json::obj(vec![
+        ("rows", Json::num(m.rows as f64)),
+        ("cols", Json::num(m.cols as f64)),
+        ("row_ptr", Json::Arr(m.row_ptr.iter().map(|&p| Json::num(p as f64)).collect())),
+        ("col_idx", Json::Arr(m.col_idx.iter().map(|&c| Json::num(c as f64)).collect())),
+        ("values", Json::Arr(m.values.iter().map(|&v| Json::f32_bits(v)).collect())),
+    ])
+}
+
+fn csr_from_json(json: &Json) -> Result<Csr> {
+    let rows = json.get("rows")?.as_usize()?;
+    let cols = json.get("cols")?.as_usize()?;
+    let row_ptr =
+        json.get("row_ptr")?.as_arr()?.iter().map(Json::as_usize).collect::<Result<Vec<_>>>()?;
+    let col_idx =
+        json.get("col_idx")?.as_arr()?.iter().map(Json::as_usize).collect::<Result<Vec<_>>>()?;
+    let values =
+        json.get("values")?.as_arr()?.iter().map(Json::as_f32_bits).collect::<Result<Vec<_>>>()?;
+    // full invariant validation: a manifest is durable state crossing the
+    // same trust boundary as a registration-time adjacency
+    Csr::from_parts(rows, cols, row_ptr, col_idx, values)
+}
+
+impl SessionManifest {
+    /// Number of sessions captured.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no session was open at snapshot time.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Names of the captured sessions, in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// Serialise to the JSON document [`SessionManifest::save`] persists.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "sessions",
+            Json::Arr(
+                self.entries
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            ("name", Json::str(&e.name)),
+                            ("model", Json::str(e.model.name())),
+                            (
+                                "dims",
+                                Json::obj(vec![
+                                    ("in_dim", Json::num(e.dims.in_dim as f64)),
+                                    ("hidden", Json::num(e.dims.hidden as f64)),
+                                    ("classes", Json::num(e.dims.classes as f64)),
+                                ]),
+                            ),
+                            ("params", params_to_json(&e.params)),
+                            ("raw_adj", csr_to_json(&e.raw_adj)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    /// Parse what [`SessionManifest::to_json`] produced.
+    pub fn from_json(json: &Json) -> Result<SessionManifest> {
+        let mut entries = Vec::new();
+        for e in json.get("sessions")?.as_arr()? {
+            let dims = e.get("dims")?;
+            entries.push(ManifestEntry {
+                name: e.get("name")?.as_str()?.to_string(),
+                model: GnnModel::parse(e.get("model")?.as_str()?)?,
+                dims: ModelParams {
+                    in_dim: dims.get("in_dim")?.as_usize()?,
+                    hidden: dims.get("hidden")?.as_usize()?,
+                    classes: dims.get("classes")?.as_usize()?,
+                },
+                params: params_from_json(e.get("params")?)?,
+                raw_adj: csr_from_json(e.get("raw_adj")?)?,
+            });
+        }
+        Ok(SessionManifest { entries })
+    }
+
+    /// Persist through [`crate::util::durable`]: atomic temp→fsync→rename
+    /// under a checksummed envelope, previous generation kept as `.bak`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        durable::save(path, self.to_json().pretty().as_bytes())
+    }
+
+    /// Load a manifest, recovering from a torn/corrupt primary via the
+    /// `.bak` generation. `Ok(None)` when no manifest was ever written.
+    pub fn load(path: &Path) -> Result<Option<SessionManifest>> {
+        durable::load(path, |bytes| {
+            let text = std::str::from_utf8(bytes)
+                .map_err(|e| Error::Json(format!("manifest not UTF-8: {e}")))?;
+            Self::from_json(&Json::parse(text)?)
+        })
+    }
+}
+
+impl SessionRegistry {
+    /// Capture every open session's durable identity for a warm restart.
+    /// The snapshot is taken from the **current** epoch's raw adjacency
+    /// and the current parameter version, so a restored registry serves
+    /// exactly what this one serves now.
+    pub fn snapshot_manifest(&self) -> SessionManifest {
+        SessionManifest {
+            entries: self
+                .sessions
+                .iter()
+                .flatten()
+                .map(|s| ManifestEntry {
+                    name: s.name.clone(),
+                    model: s.model,
+                    dims: s.dims,
+                    params: s.params().clone(),
+                    raw_adj: s.raw_adj.clone(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Re-register every session a manifest captured, in its original
+    /// registration order. `warm` mirrors
+    /// [`register`](SessionRegistry::register): handed the persisted
+    /// [`TuningDb`], each restored session warm-starts the same tuned
+    /// kernel/format/fusion/shard choices without a single measurement.
+    /// Returns the new ids, aligned with [`SessionManifest::names`].
+    pub fn restore_from_manifest(
+        &mut self,
+        manifest: &SessionManifest,
+        warm: Option<(&Tuner, &TuningDb, usize)>,
+    ) -> Result<Vec<SessionId>> {
+        let mut ids = Vec::with_capacity(manifest.entries.len());
+        for e in &manifest.entries {
+            match self.register(&e.name, e.model, e.dims, e.params.clone(), &e.raw_adj, warm) {
+                Ok(id) => ids.push(id),
+                Err(err) => {
+                    // all-or-nothing: a half-restored registry (e.g. a name
+                    // clash midway through the manifest) would silently
+                    // serve a subset — close what was restored and fail
+                    for id in ids {
+                        let _ = self.close(id);
+                    }
+                    return Err(err);
+                }
+            }
+        }
+        Ok(ids)
     }
 }
 
@@ -1239,5 +1444,132 @@ mod tests {
         assert_eq!(s.live_param_versions(), 1);
         assert!(s.params_at(0).is_none(), "released version retired");
         reg.close(id).unwrap();
+    }
+
+    /// Every parameter tensor's raw bits, keyed by name — the strict
+    /// equality the warm-restart contract promises (`==` on f32 would
+    /// conflate `-0.0` with `0.0`).
+    fn param_bits(params: &ParamSet) -> Vec<(String, Vec<u32>)> {
+        let mut out: Vec<(String, Vec<u32>)> = params
+            .iter()
+            .map(|(n, d)| (n.to_string(), d.data.iter().map(|x| x.to_bits()).collect()))
+            .collect();
+        out.sort();
+        out
+    }
+
+    #[test]
+    fn manifest_roundtrip_restores_sessions_bitwise() {
+        let ds = karate_club();
+        let dims = dims_for(&ds, 8);
+        let mut reg = SessionRegistry::new();
+
+        // an empty registry snapshots to an empty manifest
+        assert!(reg.snapshot_manifest().is_empty());
+
+        let pa = GnnModel::Gcn.init_params(dims, 5);
+        let pb = GnnModel::SageSum.init_params(dims, 6);
+        let a = reg
+            .register("sess-manifest-a", GnnModel::Gcn, dims, pa, &ds.adj, None)
+            .unwrap();
+        let b = reg
+            .register("sess-manifest-b", GnnModel::SageSum, dims, pb, &ds.adj, None)
+            .unwrap();
+
+        let manifest = reg.snapshot_manifest();
+        assert_eq!(manifest.len(), 2);
+        assert_eq!(manifest.names(), vec!["sess-manifest-a", "sess-manifest-b"]);
+
+        // what the live registry serves right now
+        let want_bits_a = param_bits(reg.get(a).unwrap().params());
+        let want_bits_b = param_bits(reg.get(b).unwrap().params());
+        let want_norm_a: Vec<u32> =
+            reg.get(a).unwrap().operand().a.values.iter().map(|x| x.to_bits()).collect();
+        let want_nnz_b = reg.get(b).unwrap().nnz();
+
+        // persist through the durable layer, then "crash": drop everything
+        let dir = crate::util::tmp::TempDir::new().unwrap();
+        let path = dir.path().join("sessions.json");
+        manifest.save(&path).unwrap();
+        assert!(path.exists());
+        reg.close(a).unwrap();
+        reg.close(b).unwrap();
+        drop(reg);
+
+        // warm restart: load + restore into a fresh registry
+        let loaded = SessionManifest::load(&path).unwrap().expect("manifest persisted");
+        assert_eq!(loaded.names(), vec!["sess-manifest-a", "sess-manifest-b"]);
+        let mut reg = SessionRegistry::new();
+        let ids = reg.restore_from_manifest(&loaded, None).unwrap();
+        assert_eq!(ids.len(), 2);
+        assert_eq!(reg.len(), 2);
+
+        let ra = reg.get(ids[0]).unwrap();
+        let rb = reg.get(ids[1]).unwrap();
+        assert_eq!(ra.name, "sess-manifest-a");
+        assert_eq!(param_bits(ra.params()), want_bits_a, "params survive bitwise");
+        let got_norm: Vec<u32> = ra.operand().a.values.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got_norm, want_norm_a, "re-normalised adjacency is bitwise identical");
+        assert_eq!(rb.model, GnnModel::SageSum);
+        assert_eq!(param_bits(rb.params()), want_bits_b);
+        assert_eq!(rb.nnz(), want_nnz_b);
+        // counters restart: epochs/versions number one process lifetime
+        assert_eq!(ra.epoch(), 0);
+        assert_eq!(ra.model_version(), 0);
+        reg.close(ids[0]).unwrap();
+        reg.close(ids[1]).unwrap();
+
+        // missing manifest is None, not an error
+        assert!(SessionManifest::load(&dir.path().join("never.json")).unwrap().is_none());
+    }
+
+    #[test]
+    fn manifest_restore_warm_starts_tuning_without_measurement() {
+        let ds = karate_club();
+        let dims = dims_for(&ds, 8);
+        let name = "sess-manifest-warm";
+        let tuner = Tuner::with_config(HardwareProfile::amd_epyc(), TuneConfig::quick());
+        let mut db = TuningDb::default();
+        // a joint (format, fuse) win at the per-request width and a sorted
+        // win at the 2-batched width — everything the restore must replay
+        db.put(
+            name,
+            "amd-epyc",
+            8,
+            DbEntry { sell: Some((4, 32)), speedup: 1.5, fuse_relu: Some(1.8), ..DbEntry::default() },
+        );
+        db.put(name, "amd-epyc", 16, DbEntry { sorted: true, speedup: 1.2, ..DbEntry::default() });
+
+        let mut reg = SessionRegistry::new();
+        let params = GnnModel::Gcn.init_params(dims, 3);
+        let id = reg
+            .register(name, GnnModel::Gcn, dims, params, &ds.adj, Some((&tuner, &db, 2)))
+            .unwrap();
+        let (warm0, pre0, fused0) = {
+            let s = reg.get(id).unwrap();
+            (s.warm_started, s.preconverted, s.fused_ops())
+        };
+        assert_eq!((warm0, pre0, fused0), (2, 2, 1));
+
+        let manifest = reg.snapshot_manifest();
+        reg.close(id).unwrap();
+        drop(reg);
+
+        // the restored session replays the identical tuning decisions from
+        // the same persisted DB — the DB is borrowed immutably, so by
+        // construction nothing was re-measured
+        let mut reg = SessionRegistry::new();
+        let ids = reg.restore_from_manifest(&manifest, Some((&tuner, &db, 2))).unwrap();
+        let s = reg.get(ids[0]).unwrap();
+        assert_eq!(s.warm_started, warm0);
+        assert_eq!(s.preconverted, pre0, "tuned formats re-materialised at restore");
+        assert_eq!(s.fused_ops(), fused0, "fusion decision replayed from the DB");
+        assert_eq!(reg.workspace().cached_formats(), pre0);
+        use crate::kernels::Semiring;
+        assert_eq!(
+            KernelRegistry::global().binding(name, 8, Semiring::Sum).unwrap().choice,
+            KernelChoice::Sell { c: 4, sigma: 32 }
+        );
+        reg.close(ids[0]).unwrap();
     }
 }

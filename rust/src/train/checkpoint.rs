@@ -1,0 +1,341 @@
+//! Bitwise-resumable training checkpoints.
+//!
+//! A [`TrainCheckpoint`] is the *complete* mutable state of a native
+//! training run: the parameters, the optimizer's moment buffers and step
+//! counter, the epoch counter, and the loss/wall-time history so far —
+//! every float stored as its raw IEEE-754 bit pattern
+//! ([`crate::util::json::Json::f32_bits`]), so the JSON round-trip loses
+//! nothing. Resuming from the epoch-`e` checkpoint and training to epoch
+//! `N` is bitwise-identical (parameters *and* loss trajectory) to an
+//! uninterrupted run to `N`; `tests/durability_integration.rs` pins that
+//! property across optimizers × models × checkpoint epochs.
+//!
+//! The file goes through [`crate::util::durable`], so a crash mid-save
+//! leaves either the previous checkpoint or the new one — never a torn
+//! file — and a corrupted checkpoint quarantines and falls back to the
+//! `.bak` generation.
+//!
+//! # Fingerprint
+//!
+//! Every checkpoint embeds a [`RunFingerprint`] of the run that wrote it:
+//! model, backend, hidden width, optimizer hyperparameters (bit-exact),
+//! seed, thread budget, fusion policy, and the graph's identity (id hash,
+//! node count, feature width, nnz). [`crate::train::Trainer::resume`]
+//! refuses a checkpoint whose fingerprint differs from the live run — a
+//! resumed run that silently mixed, say, an Adam state into an SGD loop,
+//! or a cora checkpoint into a karate run, would converge to garbage. The
+//! total epoch count is deliberately *not* part of the fingerprint:
+//! extending a finished run with more epochs is a legitimate resume.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::dense::Dense;
+use crate::error::{Error, Result};
+use crate::gnn::ParamSet;
+use crate::util::durable;
+use crate::util::json::Json;
+
+/// Identity of a training run, embedded in each checkpoint and compared
+/// exactly on resume. See the module docs for what is (and is not) part
+/// of it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunFingerprint {
+    /// Model name (`GnnModel::name`).
+    pub model: String,
+    /// Backend label (paper column).
+    pub backend: String,
+    /// Hidden width.
+    pub hidden: usize,
+    /// Optimizer kind + hyperparameters, bit-exact (`OptimizerKind::export`).
+    pub optimizer: Json,
+    /// Parameter-init seed.
+    pub seed: u64,
+    /// Kernel thread budget.
+    pub threads: usize,
+    /// Fusion policy (`auto` / `always` / `never`).
+    pub fuse: String,
+    /// Graph id hash, hex (full 64 bits — too wide for a JSON number).
+    pub graph: String,
+    /// Node count (feature rows).
+    pub nodes: usize,
+    /// Feature width.
+    pub feature_dim: usize,
+    /// Non-zeros of the normalised adjacency the run trains on.
+    pub nnz: usize,
+}
+
+impl RunFingerprint {
+    /// JSON form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("backend", Json::str(&self.backend)),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("optimizer", self.optimizer.clone()),
+            ("seed", Json::num(self.seed as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            ("fuse", Json::str(&self.fuse)),
+            ("graph", Json::str(&self.graph)),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("feature_dim", Json::num(self.feature_dim as f64)),
+            ("nnz", Json::num(self.nnz as f64)),
+        ])
+    }
+
+    /// Inverse of [`RunFingerprint::to_json`].
+    pub fn from_json(json: &Json) -> Result<RunFingerprint> {
+        Ok(RunFingerprint {
+            model: json.get("model")?.as_str()?.to_string(),
+            backend: json.get("backend")?.as_str()?.to_string(),
+            hidden: json.get("hidden")?.as_usize()?,
+            optimizer: json.get("optimizer")?.clone(),
+            seed: json.get("seed")?.as_usize()? as u64,
+            threads: json.get("threads")?.as_usize()?,
+            fuse: json.get("fuse")?.as_str()?.to_string(),
+            graph: json.get("graph")?.as_str()?.to_string(),
+            nodes: json.get("nodes")?.as_usize()?,
+            feature_dim: json.get("feature_dim")?.as_usize()?,
+            nnz: json.get("nnz")?.as_usize()?,
+        })
+    }
+}
+
+/// Serialize a [`ParamSet`] with every element as its raw bit pattern.
+/// Shared by checkpoints, the durable param export, and the serving
+/// restart manifest.
+pub fn params_to_json(params: &ParamSet) -> Json {
+    Json::Obj(params.iter().map(|(k, d)| (k.clone(), d.to_json_bits())).collect())
+}
+
+/// Inverse of [`params_to_json`].
+pub fn params_from_json(json: &Json) -> Result<ParamSet> {
+    let map = match json {
+        Json::Obj(m) => m,
+        other => return Err(Error::Json(format!("params not an object: {other:?}"))),
+    };
+    let mut params = ParamSet::new();
+    for (name, value) in map {
+        params.insert(name, Dense::from_json_bits(value)?);
+    }
+    Ok(params)
+}
+
+/// The full mutable state of a native training run at an epoch boundary.
+#[derive(Clone, Debug)]
+pub struct TrainCheckpoint {
+    /// Identity of the run that wrote this (compared exactly on resume).
+    pub fingerprint: RunFingerprint,
+    /// Epochs completed when the checkpoint was taken.
+    pub epochs_run: usize,
+    /// Per-epoch training loss so far (bit-exact).
+    pub losses: Vec<f32>,
+    /// Per-epoch wall time so far (informational; not part of any bitwise
+    /// guarantee).
+    pub epoch_secs: Vec<f64>,
+    /// Model parameters (bit-exact).
+    pub params: ParamSet,
+    /// Optimizer state as exported by `Optimizer::export_state`
+    /// (bit-exact; kept as JSON so the checkpoint does not need to know
+    /// the optimizer's internals).
+    pub optimizer: Json,
+}
+
+impl TrainCheckpoint {
+    /// The checkpoint file inside `dir`. The durable layer adds `.bak` /
+    /// `.corrupt` siblings next to it.
+    pub fn path(dir: &Path) -> PathBuf {
+        dir.join("checkpoint.json")
+    }
+
+    /// JSON form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("fingerprint", self.fingerprint.to_json()),
+            ("epochs_run", Json::num(self.epochs_run as f64)),
+            ("losses", Json::Arr(self.losses.iter().map(|&l| Json::f32_bits(l)).collect())),
+            ("epoch_secs", Json::Arr(self.epoch_secs.iter().map(|&t| Json::num(t)).collect())),
+            ("params", params_to_json(&self.params)),
+            ("optimizer", self.optimizer.clone()),
+        ])
+    }
+
+    /// Inverse of [`TrainCheckpoint::to_json`]; validates the histories
+    /// agree with the epoch counter.
+    pub fn from_json(json: &Json) -> Result<TrainCheckpoint> {
+        let epochs_run = json.get("epochs_run")?.as_usize()?;
+        let losses = json
+            .get("losses")?
+            .as_arr()?
+            .iter()
+            .map(|l| l.as_f32_bits())
+            .collect::<Result<Vec<f32>>>()?;
+        let epoch_secs = json
+            .get("epoch_secs")?
+            .as_arr()?
+            .iter()
+            .map(|t| t.as_f64())
+            .collect::<Result<Vec<f64>>>()?;
+        if losses.len() != epochs_run || epoch_secs.len() != epochs_run {
+            return Err(Error::Json(format!(
+                "checkpoint histories disagree with epoch counter: {} losses, {} times, {} epochs",
+                losses.len(),
+                epoch_secs.len(),
+                epochs_run
+            )));
+        }
+        Ok(TrainCheckpoint {
+            fingerprint: RunFingerprint::from_json(json.get("fingerprint")?)?,
+            epochs_run,
+            losses,
+            epoch_secs,
+            params: params_from_json(json.get("params")?)?,
+            optimizer: json.get("optimizer")?.clone(),
+        })
+    }
+
+    /// Durably save to `dir/checkpoint.json` (atomic write, envelope,
+    /// `.bak` generation — see [`crate::util::durable`]).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        durable::save(&Self::path(dir), self.to_json().pretty().as_bytes())
+    }
+
+    /// Load from `dir/checkpoint.json` with full recovery semantics:
+    /// `Ok(None)` when no checkpoint exists yet, quarantine + `.bak`
+    /// fallback on corruption, `Error::CorruptState` when nothing
+    /// recoverable remains.
+    pub fn load(dir: &Path) -> Result<Option<TrainCheckpoint>> {
+        durable::load(&Self::path(dir), |bytes| {
+            let text = std::str::from_utf8(bytes)
+                .map_err(|_| Error::Json("checkpoint is not utf-8".into()))?;
+            TrainCheckpoint::from_json(&Json::parse(text)?)
+        })
+    }
+}
+
+/// Durably export a trained [`ParamSet`] on its own (no optimizer state)
+/// — the artifact a serving process loads. Goes through the same
+/// envelope/`.bak` machinery as checkpoints.
+pub fn save_params(params: &ParamSet, path: &Path) -> Result<()> {
+    durable::save(path, params_to_json(params).pretty().as_bytes())
+}
+
+/// Load a [`save_params`] artifact; `Ok(None)` when the file does not
+/// exist.
+pub fn load_params(path: &Path) -> Result<Option<ParamSet>> {
+    durable::load(path, |bytes| {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|_| Error::Json("params are not utf-8".into()))?;
+        params_from_json(&Json::parse(text)?)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::{Optimizer, OptimizerKind};
+    use crate::util::rng::Rng;
+    use crate::util::tmp::TempDir;
+
+    fn fingerprint() -> RunFingerprint {
+        RunFingerprint {
+            model: "gcn".into(),
+            backend: "PT2".into(),
+            hidden: 8,
+            optimizer: OptimizerKind::Sgd { lr: 0.05, momentum: 0.9 }.export(),
+            seed: 42,
+            threads: 1,
+            fuse: "auto".into(),
+            graph: "00c0ffee00c0ffee".into(),
+            nodes: 34,
+            feature_dim: 34,
+            nnz: 156,
+        }
+    }
+
+    fn small_params(seed: u64) -> ParamSet {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut p = ParamSet::new();
+        p.insert("w0", Dense::glorot(4, 3, &mut rng));
+        p.insert("b0", Dense::zeros(1, 3));
+        p
+    }
+
+    #[test]
+    fn fingerprint_roundtrip_and_inequality() {
+        let fp = fingerprint();
+        let text = fp.to_json().pretty();
+        let back = RunFingerprint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, fp);
+        let mut other = fp.clone();
+        other.seed = 7;
+        assert_ne!(other, fp);
+        let mut other = fp.clone();
+        other.optimizer = OptimizerKind::Adam { lr: 0.01 }.export();
+        assert_ne!(other, fp);
+    }
+
+    #[test]
+    fn checkpoint_save_load_is_bitwise() {
+        let dir = TempDir::new().unwrap();
+        let params = small_params(9);
+        let opt = Optimizer::new(OptimizerKind::Adam { lr: 0.01 });
+        let ckpt = TrainCheckpoint {
+            fingerprint: fingerprint(),
+            epochs_run: 3,
+            losses: vec![1.5, 0.75, 0.4062],
+            epoch_secs: vec![0.01, 0.02, 0.015],
+            params: params.clone(),
+            optimizer: opt.export_state(),
+        };
+        ckpt.save(dir.path()).unwrap();
+        let back = TrainCheckpoint::load(dir.path()).unwrap().unwrap();
+        assert_eq!(back.fingerprint, ckpt.fingerprint);
+        assert_eq!(back.epochs_run, 3);
+        let lb: Vec<u32> = back.losses.iter().map(|l| l.to_bits()).collect();
+        let lw: Vec<u32> = ckpt.losses.iter().map(|l| l.to_bits()).collect();
+        assert_eq!(lb, lw);
+        for (name, want) in params.iter() {
+            let got = back.params.get(name).unwrap();
+            let gb: Vec<u32> = got.data.iter().map(|x| x.to_bits()).collect();
+            let wb: Vec<u32> = want.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(gb, wb, "param '{name}'");
+        }
+        assert_eq!(back.optimizer, ckpt.optimizer);
+    }
+
+    #[test]
+    fn load_missing_dir_is_none() {
+        let dir = TempDir::new().unwrap();
+        assert!(TrainCheckpoint::load(&dir.path().join("never")).unwrap().is_none());
+    }
+
+    #[test]
+    fn mismatched_histories_are_rejected() {
+        let json = Json::obj(vec![
+            ("fingerprint", fingerprint().to_json()),
+            ("epochs_run", Json::num(5.0)),
+            ("losses", Json::Arr(vec![Json::f32_bits(1.0)])),
+            ("epoch_secs", Json::Arr(vec![])),
+            ("params", params_to_json(&small_params(1))),
+            ("optimizer", Optimizer::new(OptimizerKind::Sgd { lr: 0.1, momentum: 0.0 }).export_state()),
+        ]);
+        assert!(TrainCheckpoint::from_json(&json).is_err());
+    }
+
+    #[test]
+    fn params_export_roundtrip() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("params.json");
+        let params = small_params(33);
+        save_params(&params, &path).unwrap();
+        let back = load_params(&path).unwrap().unwrap();
+        for (name, want) in params.iter() {
+            let got = back.get(name).unwrap();
+            let gb: Vec<u32> = got.data.iter().map(|x| x.to_bits()).collect();
+            let wb: Vec<u32> = want.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(gb, wb, "param '{name}'");
+        }
+        assert!(load_params(&dir.path().join("absent.json")).unwrap().is_none());
+    }
+}

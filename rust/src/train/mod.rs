@@ -1,10 +1,46 @@
 //! Training: optimizers, backends (the "framework" axis of Figure 3), and
 //! the epoch-loop [`Trainer`].
+//!
+//! # Durability & recovery
+//!
+//! A multi-epoch run can be snapshotted at any epoch boundary with
+//! [`Trainer::checkpoint`] (or periodically via
+//! [`Trainer::fit_with_checkpoints`]) and continued with
+//! [`Trainer::resume`]. The guarantees, pinned by
+//! `tests/durability_integration.rs`:
+//!
+//! - **Bitwise resume.** A [`TrainCheckpoint`] captures the complete
+//!   mutable state — parameters, optimizer moment buffers and step
+//!   counter, epoch counter, loss history — with every float stored as
+//!   its raw IEEE-754 bit pattern. Resuming from the epoch-`e` checkpoint
+//!   and training to epoch `N` produces parameters and a loss trajectory
+//!   bitwise-identical to an uninterrupted run to `N`, for every
+//!   optimizer (SGD, SGD+momentum, Adam) and model. The only RNG in a
+//!   native run is parameter init, which is a pure function of
+//!   `cfg.seed`, so no live PRNG state needs to travel.
+//! - **Crash safety.** Checkpoints go through [`crate::util::durable`]:
+//!   atomic temp→fsync→rename writes under a checksummed envelope, with
+//!   the previous good checkpoint kept as `checkpoint.json.bak`. A crash
+//!   mid-save (exercised via the `io.atomic_write` / `io.fsync` /
+//!   `train.checkpoint` failpoints) leaves either the old or the new
+//!   checkpoint loadable — never a torn file. A corrupt file is
+//!   quarantined to `checkpoint.json.corrupt` and the `.bak` generation
+//!   is loaded instead.
+//! - **Fingerprint match.** Every checkpoint embeds a [`RunFingerprint`]
+//!   (model, backend, hidden width, bit-exact optimizer hyperparameters,
+//!   seed, threads, fusion policy, graph identity). [`Trainer::resume`]
+//!   rejects a mismatch with `Error::Config` instead of silently mixing
+//!   states from different runs; only the total epoch count may differ,
+//!   so a finished run can be extended.
 
 mod backend;
+mod checkpoint;
 mod optimizer;
 mod trainer;
 
 pub use backend::Backend;
+pub use checkpoint::{
+    load_params, params_from_json, params_to_json, save_params, RunFingerprint, TrainCheckpoint,
+};
 pub use optimizer::{Optimizer, OptimizerKind};
 pub use trainer::{FusePolicy, TrainConfig, TrainReport, Trainer};

@@ -5,6 +5,7 @@ use std::collections::BTreeMap;
 use crate::dense::Dense;
 use crate::error::{Error, Result};
 use crate::gnn::ParamSet;
+use crate::util::json::Json;
 
 /// Which optimizer to use.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -32,6 +33,35 @@ impl OptimizerKind {
             other => Err(Error::UnknownName(format!("optimizer '{other}'"))),
         }
     }
+
+    /// JSON form with hyperparameters stored as raw f32 bit patterns so
+    /// the round-trip is bitwise (a checkpoint fingerprint compares them
+    /// exactly).
+    pub fn export(&self) -> Json {
+        match self {
+            OptimizerKind::Sgd { lr, momentum } => Json::obj(vec![
+                ("name", Json::str("sgd")),
+                ("lr_bits", Json::f32_bits(*lr)),
+                ("momentum_bits", Json::f32_bits(*momentum)),
+            ]),
+            OptimizerKind::Adam { lr } => Json::obj(vec![
+                ("name", Json::str("adam")),
+                ("lr_bits", Json::f32_bits(*lr)),
+            ]),
+        }
+    }
+
+    /// Inverse of [`OptimizerKind::export`].
+    pub fn import(json: &Json) -> Result<OptimizerKind> {
+        match json.get("name")?.as_str()? {
+            "sgd" => Ok(OptimizerKind::Sgd {
+                lr: json.get("lr_bits")?.as_f32_bits()?,
+                momentum: json.get("momentum_bits")?.as_f32_bits()?,
+            }),
+            "adam" => Ok(OptimizerKind::Adam { lr: json.get("lr_bits")?.as_f32_bits()? }),
+            other => Err(Error::UnknownName(format!("optimizer '{other}'"))),
+        }
+    }
 }
 
 /// Stateful optimizer over named parameters.
@@ -47,6 +77,50 @@ impl Optimizer {
     /// New optimizer with empty state.
     pub fn new(kind: OptimizerKind) -> Self {
         Optimizer { kind, m: BTreeMap::new(), v: BTreeMap::new(), t: 0 }
+    }
+
+    /// The configured update rule and hyperparameters.
+    pub fn kind(&self) -> OptimizerKind {
+        self.kind
+    }
+
+    /// Steps taken so far (the `t` in Adam's bias correction).
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+
+    /// Export the full mutable state — `kind`, the `m`/`v` moment buffers
+    /// and the step counter — with every f32 as its raw bit pattern.
+    /// [`Optimizer::import_state`] of the result reproduces an optimizer
+    /// whose next [`Optimizer::step`] is bitwise-identical to this one's.
+    pub fn export_state(&self) -> Json {
+        let buffers = |map: &BTreeMap<String, Dense>| {
+            Json::Obj(map.iter().map(|(k, d)| (k.clone(), d.to_json_bits())).collect())
+        };
+        Json::obj(vec![
+            ("kind", self.kind.export()),
+            ("t", Json::num(self.t as f64)),
+            ("m", buffers(&self.m)),
+            ("v", buffers(&self.v)),
+        ])
+    }
+
+    /// Inverse of [`Optimizer::export_state`].
+    pub fn import_state(json: &Json) -> Result<Optimizer> {
+        let kind = OptimizerKind::import(json.get("kind")?)?;
+        let t = json.get("t")?.as_usize()? as u64;
+        let buffers = |j: &Json| -> Result<BTreeMap<String, Dense>> {
+            match j {
+                Json::Obj(map) => map
+                    .iter()
+                    .map(|(k, v)| Ok((k.clone(), Dense::from_json_bits(v)?)))
+                    .collect(),
+                other => Err(Error::Json(format!("optimizer buffers not an object: {other:?}"))),
+            }
+        };
+        let m = buffers(json.get("m")?)?;
+        let v = buffers(json.get("v")?)?;
+        Ok(Optimizer { kind, m, v, t })
     }
 
     /// Apply one update step: `params[name] -= update(grads[name])`.
@@ -155,5 +229,75 @@ mod tests {
         assert!(matches!(OptimizerKind::parse("sgd").unwrap(), OptimizerKind::Sgd { .. }));
         assert!(matches!(OptimizerKind::parse("adam").unwrap(), OptimizerKind::Adam { .. }));
         assert!(OptimizerKind::parse("lbfgs").is_err());
+    }
+
+    #[test]
+    fn kind_export_import_roundtrip() {
+        for kind in [
+            OptimizerKind::Sgd { lr: 0.1, momentum: 0.9 },
+            OptimizerKind::Sgd { lr: 0.05, momentum: 0.0 },
+            OptimizerKind::Adam { lr: 0.01 },
+        ] {
+            let text = kind.export().compact();
+            let back = OptimizerKind::import(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, kind, "through {text}");
+        }
+        assert!(OptimizerKind::import(&Json::obj(vec![("name", Json::str("lbfgs"))])).is_err());
+    }
+
+    /// The satellite guarantee: export at step k, import, and the next
+    /// steps of the restored optimizer are bitwise-identical to the
+    /// uninterrupted one — momentum and Adam moment buffers included.
+    #[test]
+    fn state_roundtrip_preserves_stepping_bitwise() {
+        use crate::util::rng::Rng;
+        for kind in [
+            OptimizerKind::Sgd { lr: 0.1, momentum: 0.0 },
+            OptimizerKind::Sgd { lr: 0.05, momentum: 0.9 },
+            OptimizerKind::Adam { lr: 0.01 },
+        ] {
+            let mut rng = Rng::seed_from_u64(3);
+            let grads_at = |step: usize| -> BTreeMap<String, Dense> {
+                // deterministic per-step pseudo-gradients
+                let mut r = Rng::seed_from_u64(100 + step as u64);
+                let mut g = BTreeMap::new();
+                g.insert("w".to_string(), Dense::uniform(2, 3, 1.0, &mut r));
+                g.insert("b".to_string(), Dense::uniform(1, 3, 1.0, &mut r));
+                g
+            };
+            let fresh_params = |rng: &mut Rng| {
+                let mut p = ParamSet::new();
+                p.insert("w", Dense::uniform(2, 3, 1.0, rng));
+                p.insert("b", Dense::uniform(1, 3, 1.0, rng));
+                p
+            };
+            // uninterrupted run: 10 steps straight through
+            let mut params = fresh_params(&mut rng);
+            let mut opt = Optimizer::new(kind);
+            for step in 0..10 {
+                opt.step(&mut params, &grads_at(step)).unwrap();
+            }
+            // interrupted run: 5 steps, export through actual JSON text,
+            // import, 5 more steps on the restored optimizer
+            let mut params_resumed = fresh_params(&mut Rng::seed_from_u64(3));
+            let mut first_half = Optimizer::new(kind);
+            for step in 0..5 {
+                first_half.step(&mut params_resumed, &grads_at(step)).unwrap();
+            }
+            let text = first_half.export_state().pretty();
+            let mut resumed = Optimizer::import_state(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(resumed.kind(), kind);
+            assert_eq!(resumed.steps(), 5);
+            for step in 5..10 {
+                resumed.step(&mut params_resumed, &grads_at(step)).unwrap();
+            }
+            for name in ["w", "b"] {
+                let a = params.get(name).unwrap();
+                let b = params_resumed.get(name).unwrap();
+                let ab: Vec<u32> = a.data.iter().map(|x| x.to_bits()).collect();
+                let bb: Vec<u32> = b.data.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(ab, bb, "{kind:?} param '{name}' diverged after resume");
+            }
+        }
     }
 }

@@ -7,7 +7,7 @@
 //! the loss curve, and accuracies.
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -20,8 +20,10 @@ use crate::gnn::{masked_accuracy, GnnModel, ModelParams, ParamSet};
 use crate::kernels::KernelWorkspace;
 use crate::plan::{execute_taped, ExecutionPlan};
 use crate::runtime::HloGnnTrainer;
+use crate::util::failpoints;
 use crate::util::json::Json;
 
+use super::checkpoint::{RunFingerprint, TrainCheckpoint};
 use super::{Backend, Optimizer, OptimizerKind};
 
 /// When to rewrite fusable `Spmm→Relu` chains in the lowered plan
@@ -157,6 +159,14 @@ pub struct Trainer {
     /// NNZ partitions cached per graph (keyed like the [`BackpropCache`]),
     /// output buffers recycled across epochs.
     workspace: Arc<KernelWorkspace>,
+    /// Epochs completed so far — [`Trainer::fit`] runs `epochs_run..epochs`,
+    /// so a resumed trainer continues instead of restarting.
+    epochs_run: usize,
+    /// Per-epoch loss so far (survives checkpoint/resume, so a resumed
+    /// run's report carries the *full* trajectory).
+    loss_history: Vec<f32>,
+    /// Per-epoch wall time so far (informational).
+    secs_history: Vec<f64>,
 }
 
 impl Trainer {
@@ -267,6 +277,9 @@ impl Trainer {
             plan,
             features: Arc::new(dataset.features.clone()),
             workspace,
+            epochs_run: 0,
+            loss_history: Vec::new(),
+            secs_history: Vec::new(),
         })
     }
 
@@ -308,19 +321,39 @@ impl Trainer {
         Ok(operand.with_workspace(Arc::clone(workspace), graph_id))
     }
 
-    /// Run the training loop; returns the report.
+    /// Run the training loop; returns the report. On a freshly built
+    /// trainer this runs all `cfg.epochs` epochs; after [`Trainer::resume`]
+    /// it runs only the remaining ones, and the report's loss trajectory
+    /// covers the whole run (checkpointed prefix included).
     pub fn fit(&mut self, dataset: &Dataset) -> Result<TrainReport> {
+        self.fit_with_checkpoints(dataset, None, 0)
+    }
+
+    /// [`Trainer::fit`] with periodic durable checkpoints: every `every`
+    /// completed epochs (and always after the final one) the full state
+    /// goes to `dir` via [`Trainer::checkpoint`]. `dir = None` disables
+    /// checkpointing.
+    pub fn fit_with_checkpoints(
+        &mut self,
+        dataset: &Dataset,
+        dir: Option<&Path>,
+        every: usize,
+    ) -> Result<TrainReport> {
         let _fit_span = crate::obs::Span::enter("train.fit")
             .arg("epochs", Json::num(self.cfg.epochs as f64));
         let epochs = self.cfg.epochs;
-        let mut losses = Vec::with_capacity(epochs);
-        let mut epoch_secs = Vec::with_capacity(epochs);
 
-        for _epoch in 0..epochs {
+        while self.epochs_run < epochs {
             let t0 = Instant::now();
             let loss = self.train_step(dataset)?;
-            epoch_secs.push(t0.elapsed().as_secs_f64());
-            losses.push(loss);
+            self.secs_history.push(t0.elapsed().as_secs_f64());
+            self.loss_history.push(loss);
+            self.epochs_run += 1;
+            if let Some(dir) = dir {
+                if (every > 0 && self.epochs_run % every == 0) || self.epochs_run == epochs {
+                    self.checkpoint(dir)?;
+                }
+            }
         }
 
         let (train_acc, test_acc) = self.evaluate(dataset)?;
@@ -331,9 +364,9 @@ impl Trainer {
             model: self.model.name().to_string(),
             backend: self.backend.label().to_string(),
             dataset: dataset.name.clone(),
-            final_loss: losses.last().copied().unwrap_or(f32::NAN),
-            losses,
-            epoch_secs,
+            final_loss: self.loss_history.last().copied().unwrap_or(f32::NAN),
+            losses: self.loss_history.clone(),
+            epoch_secs: self.secs_history.clone(),
             setup_secs: self.setup_secs,
             train_acc,
             test_acc,
@@ -454,6 +487,116 @@ impl Trainer {
         self.params().cloned().ok_or_else(|| {
             Error::Config("export_params: HLO engine holds parameters on device".into())
         })
+    }
+
+    /// Epochs completed so far (equals `cfg.epochs` after a full
+    /// [`Trainer::fit`]).
+    pub fn epochs_run(&self) -> usize {
+        self.epochs_run
+    }
+
+    /// The identity this run stamps into (and demands from) checkpoints.
+    /// Errors for the HLO engine, which cannot checkpoint (parameters
+    /// live on device).
+    pub fn run_fingerprint(&self) -> Result<RunFingerprint> {
+        let Engine::Native { operand, .. } = &self.engine else {
+            return Err(Error::Config(
+                "checkpoint: HLO engine holds parameters on device".into(),
+            ));
+        };
+        let fuse = match self.cfg.fuse {
+            FusePolicy::Auto => "auto",
+            FusePolicy::Always => "always",
+            FusePolicy::Never => "never",
+        };
+        Ok(RunFingerprint {
+            model: self.model.name().to_string(),
+            backend: self.backend.label().to_string(),
+            hidden: self.cfg.hidden,
+            optimizer: self.cfg.optimizer.export(),
+            seed: self.cfg.seed,
+            threads: self.cfg.threads,
+            fuse: fuse.to_string(),
+            graph: format!("{:016x}", self.graph_id),
+            nodes: self.features.rows,
+            feature_dim: self.features.cols,
+            nnz: operand.a.nnz(),
+        })
+    }
+
+    /// Durably snapshot the full training state into `dir` (see
+    /// [`TrainCheckpoint`]): parameters, optimizer moments and step
+    /// counter, epoch counter, loss/time history, all bit-exact. Goes
+    /// through the atomic envelope/`.bak` machinery, so a crash mid-save
+    /// never loses the previous checkpoint. Failpoint site:
+    /// `train.checkpoint` (tagged with the model name), fired before the
+    /// save begins.
+    pub fn checkpoint(&self, dir: &Path) -> Result<()> {
+        let fingerprint = self.run_fingerprint()?;
+        let Engine::Native { params, optimizer, .. } = &self.engine else {
+            unreachable!("run_fingerprint already rejected the HLO engine");
+        };
+        failpoints::check("train.checkpoint", self.model.name())?;
+        let _span = crate::obs::Span::enter("ckpt.save")
+            .arg("epoch", Json::num(self.epochs_run as f64));
+        let ckpt = TrainCheckpoint {
+            fingerprint,
+            epochs_run: self.epochs_run,
+            losses: self.loss_history.clone(),
+            epoch_secs: self.secs_history.clone(),
+            params: params.clone(),
+            optimizer: optimizer.export_state(),
+        };
+        ckpt.save(dir)?;
+        if crate::obs::metrics_on() {
+            crate::obs::counter("ckpt.saves").inc(1);
+        }
+        Ok(())
+    }
+
+    /// Restore the training state checkpointed in `dir`. Returns
+    /// `Ok(false)` when no checkpoint exists (fresh start); installs the
+    /// parameters, optimizer state, epoch counter and histories and
+    /// returns `Ok(true)` when one does. A checkpoint whose
+    /// [`RunFingerprint`] differs from this trainer's configuration is
+    /// rejected with `Error::Config` — resuming across a changed model,
+    /// optimizer, seed or graph would silently converge to garbage. After
+    /// a successful resume, [`Trainer::fit`] continues from the
+    /// checkpointed epoch and the final state is bitwise-identical to an
+    /// uninterrupted run.
+    pub fn resume(&mut self, dir: &Path) -> Result<bool> {
+        let Some(ckpt) = TrainCheckpoint::load(dir)? else {
+            return Ok(false);
+        };
+        let fingerprint = self.run_fingerprint()?;
+        if ckpt.fingerprint != fingerprint {
+            if crate::obs::metrics_on() {
+                crate::obs::counter("ckpt.rejected").inc(1);
+            }
+            return Err(Error::Config(format!(
+                "resume: checkpoint fingerprint mismatch: checkpoint is {}, run is {}",
+                ckpt.fingerprint.to_json().compact(),
+                fingerprint.to_json().compact()
+            )));
+        }
+        if ckpt.epochs_run > self.cfg.epochs {
+            return Err(Error::Config(format!(
+                "resume: checkpoint is at epoch {} but the run only goes to {}",
+                ckpt.epochs_run, self.cfg.epochs
+            )));
+        }
+        let Engine::Native { params, optimizer, .. } = &mut self.engine else {
+            unreachable!("run_fingerprint already rejected the HLO engine");
+        };
+        *params = ckpt.params;
+        *optimizer = Optimizer::import_state(&ckpt.optimizer)?;
+        self.epochs_run = ckpt.epochs_run;
+        self.loss_history = ckpt.losses;
+        self.secs_history = ckpt.epoch_secs;
+        if crate::obs::metrics_on() {
+            crate::obs::counter("ckpt.resumes").inc(1);
+        }
+        Ok(true)
     }
 }
 

@@ -1,0 +1,541 @@
+//! Crash-safe durable state: atomic writes, a checksummed envelope, and
+//! typed recovery for every artifact the crate persists.
+//!
+//! The tuning database is the most valuable asset the library accumulates
+//! (every entry is a real measurement sweep), and a training checkpoint
+//! represents hours of epochs — neither may be lost to a torn write. This
+//! module is the single choke point all of them go through.
+//!
+//! # Envelope format
+//!
+//! A durable file is a one-line ASCII header followed by the raw payload
+//! bytes:
+//!
+//! ```text
+//! ISPLIBD1 v1 len=<payload bytes> fnv=<16 hex digits>\n
+//! <payload>
+//! ```
+//!
+//! - `ISPLIBD1` — magic; a file not starting with it is treated as a
+//!   *legacy* bare payload (pre-envelope `TuningDb` files keep loading).
+//! - `v1` — format version; unknown versions are rejected as corrupt.
+//! - `len` — exact payload length; catches truncation before checksumming.
+//! - `fnv` — FNV-1a 64-bit checksum of the payload (the repo carries no
+//!   dependencies, so no CRC crate); catches bit rot and interleaved
+//!   partial writes.
+//!
+//! # Write path: temp → fsync → rename, with a `.bak` generation
+//!
+//! [`save`] stages the envelope in a temp file *in the same directory*
+//! (rename across filesystems is not atomic), fsyncs it, promotes the
+//! previous good file to `<path>.bak`, then renames the temp file into
+//! place and best-effort-syncs the directory. A crash at any point leaves
+//! either the old state, the new state, or the old state under `.bak` —
+//! never a torn target. [`atomic_write`] is the same primitive without the
+//! envelope or `.bak` generation, for artifacts that are regenerated
+//! wholesale (bench JSON reports).
+//!
+//! # Load path: validate → quarantine → fall back → typed error
+//!
+//! [`load`] validates the envelope and the caller's parse step. Any
+//! failure quarantines the offending bytes to `<path>.corrupt` (kept for
+//! post-mortem, never silently deleted) and falls back to `<path>.bak`
+//! through the same validation. Only when *nothing* recoverable exists
+//! does it surface [`Error::CorruptState`]; a file that simply does not
+//! exist yet is `Ok(None)`, not an error.
+//!
+//! # Fault injection
+//!
+//! Two failpoint sites drive the crash-recovery chaos suite
+//! (`tests/durability_integration.rs`): `io.atomic_write` (hit once
+//! before the temp write — a fault leaves a *torn* temp file of half the
+//! bytes — and once after `.bak` promotion, just before the final rename)
+//! and `io.fsync` (a fault models power loss with the temp file full but
+//! unsynced). Both are tagged with the target file name.
+//!
+//! Writers are expected to be single-threaded per path: the temp-file name
+//! is deterministic (`<path>.tmp`), so two concurrent saves to one path
+//! would race. Every current caller (tuner, trainer, serve-bench) already
+//! owns its artifact exclusively.
+
+use std::fs::File;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::obs;
+use crate::util::failpoints;
+
+/// Magic prefix of an enveloped durable file.
+pub const MAGIC: &[u8] = b"ISPLIBD1";
+
+/// Current envelope format version.
+pub const VERSION: u32 = 1;
+
+/// FNV-1a 64-bit checksum (offset basis / prime per the reference spec).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Wrap `payload` in the checksummed envelope.
+pub fn encode(payload: &[u8]) -> Vec<u8> {
+    let header =
+        format!("ISPLIBD1 v{VERSION} len={} fnv={:016x}\n", payload.len(), fnv1a64(payload));
+    let mut out = Vec::with_capacity(header.len() + payload.len());
+    out.extend_from_slice(header.as_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Validate an enveloped file and return its payload slice. A file that
+/// does not start with [`MAGIC`] is a legacy bare payload and is returned
+/// whole (the caller's parse step still vets it). `Err` carries the
+/// human-readable reason used in quarantine reporting.
+pub fn decode(bytes: &[u8]) -> std::result::Result<&[u8], String> {
+    if !bytes.starts_with(MAGIC) {
+        return Ok(bytes);
+    }
+    let nl = match bytes.iter().position(|&b| b == b'\n') {
+        Some(i) if i <= 96 => i,
+        _ => return Err("unterminated envelope header".to_string()),
+    };
+    let header = std::str::from_utf8(&bytes[..nl])
+        .map_err(|_| "non-utf8 envelope header".to_string())?;
+    let mut fields = header.split(' ');
+    let _magic = fields.next();
+    let version = fields
+        .next()
+        .and_then(|f| f.strip_prefix('v'))
+        .and_then(|v| v.parse::<u32>().ok())
+        .ok_or_else(|| "malformed envelope version".to_string())?;
+    if version != VERSION {
+        return Err(format!("unsupported envelope version {version}"));
+    }
+    let len = fields
+        .next()
+        .and_then(|f| f.strip_prefix("len="))
+        .and_then(|v| v.parse::<usize>().ok())
+        .ok_or_else(|| "malformed envelope length".to_string())?;
+    let fnv = fields
+        .next()
+        .and_then(|f| f.strip_prefix("fnv="))
+        .and_then(|v| u64::from_str_radix(v, 16).ok())
+        .ok_or_else(|| "malformed envelope checksum".to_string())?;
+    let payload = &bytes[nl + 1..];
+    if payload.len() != len {
+        return Err(format!("truncated payload: header says {len} bytes, file has {}", payload.len()));
+    }
+    let got = fnv1a64(payload);
+    if got != fnv {
+        return Err(format!("checksum mismatch: header {fnv:016x}, payload {got:016x}"));
+    }
+    Ok(payload)
+}
+
+/// `<path>.bak` — the last-good generation kept by each successful save.
+pub fn bak_path(path: &Path) -> PathBuf {
+    sibling(path, "bak")
+}
+
+/// `<path>.corrupt` — where failed-validation bytes are quarantined.
+pub fn corrupt_path(path: &Path) -> PathBuf {
+    sibling(path, "corrupt")
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    sibling(path, "tmp")
+}
+
+fn sibling(path: &Path, suffix: &str) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".");
+    name.push(suffix);
+    path.with_file_name(name)
+}
+
+fn file_tag(path: &Path) -> String {
+    path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default()
+}
+
+fn bump(name: &str) {
+    if obs::metrics_on() {
+        obs::counter(name).inc(1);
+    }
+}
+
+/// Stage `bytes` in `<path>.tmp` and fsync it. Carries the two injection
+/// sites; a fault at `io.atomic_write` deliberately leaves a *torn* temp
+/// file (half the bytes) so recovery tests face realistic wreckage.
+fn stage(path: &Path, bytes: &[u8]) -> Result<PathBuf> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let tmp = tmp_path(path);
+    let tag = file_tag(path);
+    if let Err(e) = failpoints::check("io.atomic_write", &tag) {
+        let _ = std::fs::write(&tmp, &bytes[..bytes.len() / 2]);
+        return Err(e);
+    }
+    let mut f = File::create(&tmp)?;
+    f.write_all(bytes)?;
+    if let Err(e) = failpoints::check("io.fsync", &tag) {
+        // crash before fsync: the temp file may or may not be on disk,
+        // the target is untouched either way
+        return Err(e);
+    }
+    f.sync_all()?;
+    Ok(tmp)
+}
+
+/// Rename `tmp` into place and best-effort-sync the directory so the
+/// rename itself is durable.
+fn commit(tmp: &Path, path: &Path) -> Result<()> {
+    std::fs::rename(tmp, path)?;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            if let Ok(dir) = File::open(parent) {
+                let _ = dir.sync_all();
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Atomically replace `path` with `bytes`: temp file in the same
+/// directory → fsync → rename. No envelope, no `.bak` — for artifacts
+/// that are regenerated wholesale. A reader never observes a torn file.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = stage(path, bytes)?;
+    commit(&tmp, path)
+}
+
+/// Durably save `payload` to `path` under the checksummed envelope,
+/// keeping the previous good generation as `<path>.bak`. A prior target
+/// that fails validation is quarantined instead of promoted, so `.bak`
+/// only ever holds a state that loaded cleanly.
+pub fn save(path: &Path, payload: &[u8]) -> Result<()> {
+    let bytes = encode(payload);
+    let tmp = stage(path, &bytes)?;
+    match std::fs::read(path) {
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+        Err(e) => return Err(Error::Io(e)),
+        Ok(prev) => {
+            if decode(&prev).is_ok() {
+                std::fs::rename(path, bak_path(path))?;
+            } else {
+                quarantine(path);
+            }
+        }
+    }
+    // second hit at the same site: a fault here models a crash after the
+    // `.bak` promotion but before the commit rename — the target is gone
+    // but the last-good generation is recoverable from `.bak`
+    failpoints::check("io.atomic_write", &file_tag(path))?;
+    commit(&tmp, path)?;
+    bump("durable.saves");
+    Ok(())
+}
+
+fn quarantine(path: &Path) {
+    if std::fs::rename(path, corrupt_path(path)).is_ok() {
+        bump("durable.quarantines");
+    }
+}
+
+/// Load and validate a durable artifact. `parse` is the caller's typed
+/// decode of the payload (e.g. JSON parse + field extraction); it runs
+/// inside the recovery loop, so a payload that passes the checksum but
+/// fails to parse still quarantines and falls back.
+///
+/// - `Ok(Some(v))` — `path` (or, after quarantine, `<path>.bak`) loaded
+///   cleanly.
+/// - `Ok(None)` — nothing exists yet; first run, not an error.
+/// - `Err(CorruptState)` — something existed but nothing validated; the
+///   wreckage is under `<path>.corrupt` / `<path>.bak.corrupt`.
+pub fn load<T>(path: &Path, parse: impl Fn(&[u8]) -> Result<T>) -> Result<Option<T>> {
+    let mut first_reason: Option<String> = None;
+    for (candidate, is_bak) in [(path.to_path_buf(), false), (bak_path(path), true)] {
+        let bytes = match std::fs::read(&candidate) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+            Err(e) => return Err(Error::Io(e)),
+            Ok(b) => b,
+        };
+        let outcome = match decode(&bytes) {
+            Err(reason) => Err(reason),
+            Ok(payload) => parse(payload).map_err(|e| e.to_string()),
+        };
+        match outcome {
+            Ok(v) => {
+                if is_bak {
+                    bump("durable.recoveries");
+                }
+                return Ok(Some(v));
+            }
+            Err(reason) => {
+                quarantine(&candidate);
+                if first_reason.is_none() {
+                    first_reason = Some(reason);
+                }
+            }
+        }
+    }
+    match first_reason {
+        None => Ok(None),
+        Some(reason) => {
+            Err(Error::CorruptState { path: path.display().to_string(), reason })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn parse_text(bytes: &[u8]) -> Result<String> {
+        std::str::from_utf8(bytes)
+            .map(|s| s.to_string())
+            .map_err(|_| Error::Json("not utf-8".into()))
+    }
+
+    #[test]
+    fn fnv1a64_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn envelope_roundtrip() {
+        let payload = b"{\"entries\": {}}";
+        let bytes = encode(payload);
+        assert!(bytes.starts_with(MAGIC));
+        assert_eq!(decode(&bytes).unwrap(), payload);
+    }
+
+    #[test]
+    fn decode_detects_truncation_and_corruption() {
+        let bytes = encode(b"0123456789abcdef");
+        // truncated: drop the tail
+        let torn = &bytes[..bytes.len() - 4];
+        assert!(decode(torn).unwrap_err().contains("truncated"));
+        // flipped payload byte: checksum catches it
+        let mut flipped = bytes.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0xff;
+        assert!(decode(&flipped).unwrap_err().contains("checksum mismatch"));
+        // future version: rejected, not misparsed
+        let v9 = encode(b"x");
+        let v9 = String::from_utf8(v9).unwrap().replacen("v1", "v9", 1);
+        assert!(decode(v9.as_bytes()).unwrap_err().contains("unsupported"));
+    }
+
+    #[test]
+    fn legacy_bare_payload_passes_through() {
+        let bare = b"{\"k\": 1}";
+        assert_eq!(decode(bare).unwrap(), bare);
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_bak_generation() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("state.json");
+        save(&path, b"gen-1").unwrap();
+        assert_eq!(load(&path, parse_text).unwrap().unwrap(), "gen-1");
+        assert!(!bak_path(&path).exists(), "first save has nothing to back up");
+        save(&path, b"gen-2").unwrap();
+        assert_eq!(load(&path, parse_text).unwrap().unwrap(), "gen-2");
+        // previous generation is the .bak
+        let bak = std::fs::read(bak_path(&path)).unwrap();
+        assert_eq!(decode(&bak).unwrap(), b"gen-1");
+        assert!(!tmp_path(&path).exists(), "temp file is consumed by the rename");
+    }
+
+    #[test]
+    fn load_missing_is_none_not_error() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("absent.json");
+        assert!(load(&path, parse_text).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_primary_quarantines_and_falls_back_to_bak() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("state.json");
+        save(&path, b"good-old").unwrap();
+        save(&path, b"good-new").unwrap();
+        // tear the primary: valid magic, mangled payload
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 3);
+        std::fs::write(&path, &bytes).unwrap();
+        let got = load(&path, parse_text).unwrap().unwrap();
+        assert_eq!(got, "good-old", "falls back to the last-good .bak");
+        assert!(corrupt_path(&path).exists(), "torn bytes are quarantined");
+        assert!(!path.exists(), "quarantine moves, never copies");
+    }
+
+    #[test]
+    fn both_generations_corrupt_is_a_typed_error() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("state.json");
+        save(&path, b"old").unwrap();
+        save(&path, b"new").unwrap();
+        // mangle both generations
+        for p in [path.clone(), bak_path(&path)] {
+            let mut bytes = std::fs::read(&p).unwrap();
+            let last = bytes.len() - 1;
+            bytes[last] ^= 0xff;
+            std::fs::write(&p, &bytes).unwrap();
+        }
+        let err = load(&path, parse_text).unwrap_err();
+        match err {
+            Error::CorruptState { reason, .. } => {
+                assert!(reason.contains("checksum mismatch"), "reason: {reason}");
+            }
+            other => panic!("want CorruptState, got {other:?}"),
+        }
+        assert!(corrupt_path(&path).exists());
+        assert!(corrupt_path(&bak_path(&path)).exists());
+    }
+
+    #[test]
+    fn parse_failure_behind_valid_checksum_still_recovers() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("state.json");
+        save(&path, b"42").unwrap();
+        save(&path, b"not-a-number").unwrap();
+        let strict = |bytes: &[u8]| -> Result<usize> {
+            std::str::from_utf8(bytes)
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+                .ok_or_else(|| Error::Json("not a usize".into()))
+        };
+        // envelope is intact but the payload fails the caller's parse:
+        // quarantine + fall back, same as a checksum failure
+        assert_eq!(load(&path, strict).unwrap().unwrap(), 42);
+        assert!(corrupt_path(&path).exists());
+    }
+
+    #[test]
+    fn empty_file_recovers_or_errors_typed() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("state.json");
+        std::fs::write(&path, b"").unwrap();
+        // no .bak: typed corrupt-state error (legacy passthrough + parse fail)
+        let strict = |bytes: &[u8]| -> Result<usize> {
+            std::str::from_utf8(bytes)
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+                .ok_or_else(|| Error::Json("empty".into()))
+        };
+        assert!(matches!(load(&path, strict), Err(Error::CorruptState { .. })));
+    }
+
+    #[test]
+    fn atomic_write_replaces_wholesale() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("bench.json");
+        atomic_write(&path, b"{\"a\": 1}").unwrap();
+        atomic_write(&path, b"{\"a\": 2}").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"{\"a\": 2}");
+        assert!(!tmp_path(&path).exists());
+        assert!(!bak_path(&path).exists(), "atomic_write keeps no generations");
+    }
+
+    #[test]
+    fn save_does_not_promote_a_corrupt_target_over_good_bak() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("state.json");
+        save(&path, b"good-1").unwrap();
+        save(&path, b"good-2").unwrap();
+        // tear the primary in place (models a pre-durable-layer writer)
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(7);
+        std::fs::write(&path, &bytes).unwrap();
+        save(&path, b"good-3").unwrap();
+        // the torn bytes were quarantined, not promoted: .bak still good
+        assert_eq!(load(&path, parse_text).unwrap().unwrap(), "good-3");
+        let bak = std::fs::read(bak_path(&path)).unwrap();
+        assert_eq!(decode(&bak).unwrap(), b"good-1");
+        assert!(corrupt_path(&path).exists());
+    }
+}
+
+#[cfg(all(test, feature = "failpoints"))]
+mod chaos_tests {
+    use super::*;
+    use crate::util::failpoints::{clear, configure, exclusive, fires, FailAction, FailPlan};
+    use crate::util::tmp::TempDir;
+
+    fn parse_text(bytes: &[u8]) -> Result<String> {
+        std::str::from_utf8(bytes)
+            .map(|s| s.to_string())
+            .map_err(|_| Error::Json("not utf-8".into()))
+    }
+
+    #[test]
+    fn fault_during_temp_write_leaves_target_and_bak_intact() {
+        let _guard = exclusive();
+        clear();
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("state.json");
+        save(&path, b"committed").unwrap();
+        configure(
+            "io.atomic_write",
+            FailPlan::always(FailAction::TransientError).with_tag("state.json").limit(1),
+        );
+        assert!(save(&path, b"doomed").is_err());
+        assert!(fires("io.atomic_write") >= 1);
+        // the torn temp file is real wreckage, but load never looks at it
+        assert!(tmp_path(&path).exists(), "fault leaves a torn temp file behind");
+        assert_eq!(load(&path, parse_text).unwrap().unwrap(), "committed");
+        clear();
+        // retry after the fault clears succeeds and cleans up
+        save(&path, b"retried").unwrap();
+        assert_eq!(load(&path, parse_text).unwrap().unwrap(), "retried");
+    }
+
+    #[test]
+    fn fault_at_fsync_leaves_target_untouched() {
+        let _guard = exclusive();
+        clear();
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("state.json");
+        save(&path, b"committed").unwrap();
+        configure(
+            "io.fsync",
+            FailPlan::always(FailAction::TransientError).with_tag("state.json").limit(1),
+        );
+        assert!(save(&path, b"doomed").is_err());
+        clear();
+        assert_eq!(load(&path, parse_text).unwrap().unwrap(), "committed");
+    }
+
+    #[test]
+    fn fault_after_bak_promotion_recovers_from_bak() {
+        let _guard = exclusive();
+        clear();
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("state.json");
+        save(&path, b"gen-1").unwrap();
+        // skip the first hit (pre-temp-write), fire on the second — the
+        // one between .bak promotion and the commit rename
+        configure(
+            "io.atomic_write",
+            FailPlan::always(FailAction::TransientError).with_tag("state.json").after(1).limit(1),
+        );
+        assert!(save(&path, b"gen-2").is_err());
+        clear();
+        // crash window: target gone, last-good generation under .bak
+        assert!(!path.exists());
+        assert_eq!(load(&path, parse_text).unwrap().unwrap(), "gen-1");
+    }
+}

@@ -14,7 +14,14 @@
 //! commit paths — `"serve.apply_delta"` (after delta validation, before
 //! any side effect) and `"serve.hot_swap"` (after shape validation,
 //! before the version flip) — so chaos tests can prove a fault
-//! mid-mutation leaves the old epoch/model serving. Without the feature both
+//! mid-mutation leaves the old epoch/model serving. The durable-state
+//! layer marks its write stages — `"io.atomic_write"` (hit before the
+//! temp-file write, where a fault tears the temp file, and again before
+//! the commit rename) and `"io.fsync"` (a fault models power loss with
+//! the temp file unsynced) — and the trainer marks `"train.checkpoint"`
+//! (fired before a checkpoint save begins), so the crash-recovery suite
+//! can kill persistence at every stage and assert the prior state always
+//! loads intact. Without the feature both
 //! functions are inlined empty — zero cost, zero behavior change — which
 //! is why `scripts/tier1.sh` runs the test suite both ways.
 //!

@@ -184,6 +184,23 @@ impl Json {
         Json::Bool(b)
     }
 
+    /// Encode an `f32` as its raw IEEE-754 bit pattern. The printer emits
+    /// any integer-valued number below 2^53 exactly (see `write`), so
+    /// this round-trips *bitwise* through text — including NaN payloads,
+    /// signed zero and subnormals — which is the substrate of the durable
+    /// checkpoint guarantees in [`crate::train`].
+    pub fn f32_bits(x: f32) -> Json {
+        Json::Num(x.to_bits() as f64)
+    }
+
+    /// Decode an `f32` stored as its bit pattern via [`Json::f32_bits`].
+    pub fn as_f32_bits(&self) -> Result<f32> {
+        let n = self.as_usize()?;
+        u32::try_from(n)
+            .map(f32::from_bits)
+            .map_err(|_| Error::Json(format!("f32 bits out of range: {n}")))
+    }
+
     /// Read a boolean value.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
@@ -472,6 +489,28 @@ mod tests {
     fn integer_formatting() {
         assert_eq!(Json::Num(34.0).compact(), "34");
         assert_eq!(Json::Num(0.5).compact(), "0.5");
+    }
+
+    #[test]
+    fn f32_bits_roundtrip_is_bitwise() {
+        let cases = [
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.5,
+            f32::MIN_POSITIVE / 2.0, // subnormal
+            f32::MAX,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::from_bits(0x7fc0_1234), // NaN with payload
+        ];
+        for x in cases {
+            let text = Json::f32_bits(x).compact();
+            let back = Json::parse(&text).unwrap().as_f32_bits().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "through {text}");
+        }
+        assert!(Json::num(4.5e9).as_f32_bits().is_err(), "beyond u32 range");
+        assert!(Json::num(0.5).as_f32_bits().is_err(), "not an integer");
     }
 
     #[test]

@@ -16,6 +16,9 @@
 //! * [`tmp`] — unique temp directories for tests (replaces `tempfile`).
 //! * [`failpoints`] — deterministic fault injection (replaces the `fail`
 //!   crate); compiled to no-ops unless the `failpoints` feature is on.
+//! * [`durable`] — crash-safe persistence (replaces `atomicwrites`/`crc`):
+//!   atomic temp→fsync→rename writes, an FNV-1a-checksummed envelope, and
+//!   quarantine/`.bak` recovery; every persisted artifact goes through it.
 //! * [`numa`] — best-effort CPU-affinity pinning for shard workers
 //!   (replaces `core_affinity`/`libc`); raw syscalls behind the `numa`
 //!   feature, inline no-ops otherwise.
@@ -23,6 +26,7 @@
 pub mod bench;
 pub mod check;
 pub mod cli;
+pub mod durable;
 pub mod failpoints;
 pub mod json;
 pub mod numa;

@@ -1,0 +1,366 @@
+//! Durable-state integration: bitwise-resumable training checkpoints,
+//! and (under `--features failpoints`) the crash-recovery chaos suite.
+//!
+//! The acceptance story for crash-safe state:
+//!
+//! 1. **Bitwise resume.** Checkpointing a run at epoch `e` and resuming
+//!    it in a fresh trainer ("fresh process") to epoch `N` reproduces the
+//!    uninterrupted run's loss trajectory and final parameters *to the
+//!    bit*, across optimizers × models × checkpoint epochs.
+//! 2. **Fingerprint safety.** A checkpoint never resumes into a run with
+//!    a different model, optimizer, or seed — only extending the epoch
+//!    count is allowed.
+//! 3. **Crash safety** (`failpoints` builds). Faults injected at every
+//!    durable-write stage (`io.atomic_write` both before the temp write
+//!    and before the commit rename, `io.fsync`, `train.checkpoint`) under
+//!    `every_nth` and seeded-coin schedules crash the training loop
+//!    mid-save — and whatever survives on disk *always* loads clean
+//!    (primary or `.bak`, never torn) and resumes bitwise-identical to
+//!    the uninterrupted run.
+//!
+//! `scripts/tier1.sh` runs this file in BOTH the default and the
+//! `--features failpoints` pass: the default pass proves the
+//! checkpointing machinery with failpoints compiled to no-ops, the
+//! failpoints pass adds the chaos schedule on top of the same tests.
+
+use isplib::data::{karate_club, Dataset};
+use isplib::gnn::GnnModel;
+use isplib::train::{Backend, OptimizerKind, TrainConfig, Trainer};
+use isplib::util::tmp::TempDir;
+
+#[cfg(feature = "failpoints")]
+use isplib::util::failpoints;
+
+/// NativeTrusted + skip_tuning: fully deterministic (no measurement on
+/// the path), so bitwise equality is a meaningful assertion.
+fn trainer(ds: &Dataset, model: GnnModel, opt: OptimizerKind, epochs: usize) -> Trainer {
+    let cfg = TrainConfig {
+        epochs,
+        hidden: 8,
+        optimizer: opt,
+        skip_tuning: true,
+        ..TrainConfig::default()
+    };
+    Trainer::new(model, Backend::NativeTrusted, cfg, ds).unwrap()
+}
+
+fn loss_bits(losses: &[f32]) -> Vec<u32> {
+    losses.iter().map(|l| l.to_bits()).collect()
+}
+
+fn param_bits(t: &Trainer) -> Vec<(String, Vec<u32>)> {
+    let params = t.export_params().unwrap();
+    let mut out: Vec<(String, Vec<u32>)> = params
+        .iter()
+        .map(|(n, d)| (n.to_string(), d.data.iter().map(|x| x.to_bits()).collect()))
+        .collect();
+    out.sort();
+    out
+}
+
+const SGD: OptimizerKind = OptimizerKind::Sgd { lr: 0.1, momentum: 0.0 };
+const SGD_MOMENTUM: OptimizerKind = OptimizerKind::Sgd { lr: 0.05, momentum: 0.9 };
+const ADAM: OptimizerKind = OptimizerKind::Adam { lr: 0.01 };
+
+/// The headline property: for (SGD, SGD+momentum, Adam) × (GCN, GIN) ×
+/// checkpoint epoch e ∈ {1, N/2, N−1}, training to e, "crashing",
+/// resuming in a fresh trainer and training to N is bitwise-identical —
+/// full loss trajectory AND final parameters — to the uninterrupted run.
+#[test]
+fn resume_is_bitwise_equal_across_optimizers_models_and_epochs() {
+    // under --features failpoints the durable layer's global sites are
+    // live: serialise against the chaos tests in this binary
+    #[cfg(feature = "failpoints")]
+    let _guard = {
+        let g = failpoints::exclusive();
+        failpoints::clear();
+        g
+    };
+    let ds = karate_club();
+    const EPOCHS: usize = 12;
+    for opt in [SGD, SGD_MOMENTUM, ADAM] {
+        for model in [GnnModel::Gcn, GnnModel::Gin] {
+            let mut reference = trainer(&ds, model, opt, EPOCHS);
+            let ref_report = reference.fit(&ds).unwrap();
+            let ref_losses = loss_bits(&ref_report.losses);
+            let ref_params = param_bits(&reference);
+
+            for e in [1usize, EPOCHS / 2, EPOCHS - 1] {
+                let dir = TempDir::new().unwrap();
+                // phase 1: a run that only reaches epoch e, checkpointing
+                // every epoch, then "crashes" (is dropped)
+                let mut first = trainer(&ds, model, opt, e);
+                first.fit_with_checkpoints(&ds, Some(dir.path()), 1).unwrap();
+                assert_eq!(first.epochs_run(), e);
+                drop(first);
+
+                // phase 2: a fresh trainer resumes from disk and finishes
+                let mut resumed = trainer(&ds, model, opt, EPOCHS);
+                assert!(
+                    resumed.resume(dir.path()).unwrap(),
+                    "{model:?}/{opt:?}: checkpoint at epoch {e} must load"
+                );
+                assert_eq!(resumed.epochs_run(), e);
+                let report = resumed.fit(&ds).unwrap();
+                assert_eq!(report.losses.len(), EPOCHS);
+                assert_eq!(
+                    loss_bits(&report.losses),
+                    ref_losses,
+                    "{model:?}/{opt:?} resumed at {e}: loss trajectory diverged"
+                );
+                assert_eq!(
+                    param_bits(&resumed),
+                    ref_params,
+                    "{model:?}/{opt:?} resumed at {e}: final parameters diverged"
+                );
+            }
+        }
+    }
+}
+
+/// The fingerprint gate: a checkpoint refuses to resume into any run it
+/// did not come from — different model, optimizer, or seed — while a
+/// same-run trainer with MORE epochs resumes fine (extension) and one
+/// with FEWER epochs than the checkpoint is rejected.
+#[test]
+fn resume_rejects_mismatched_runs_and_allows_extension() {
+    #[cfg(feature = "failpoints")]
+    let _guard = {
+        let g = failpoints::exclusive();
+        failpoints::clear();
+        g
+    };
+    let ds = karate_club();
+    let dir = TempDir::new().unwrap();
+    let mut t = trainer(&ds, GnnModel::Gcn, SGD, 3);
+    t.fit_with_checkpoints(&ds, Some(dir.path()), 0).unwrap();
+
+    // wrong model
+    let err = trainer(&ds, GnnModel::Gin, SGD, 3).resume(dir.path()).unwrap_err();
+    assert!(err.to_string().contains("fingerprint mismatch"), "{err}");
+    // wrong optimizer
+    let err = trainer(&ds, GnnModel::Gcn, ADAM, 3).resume(dir.path()).unwrap_err();
+    assert!(err.to_string().contains("fingerprint mismatch"), "{err}");
+    // wrong seed
+    let cfg = TrainConfig {
+        epochs: 3,
+        hidden: 8,
+        optimizer: SGD,
+        seed: 7,
+        skip_tuning: true,
+        ..TrainConfig::default()
+    };
+    let mut other = Trainer::new(GnnModel::Gcn, Backend::NativeTrusted, cfg, &ds).unwrap();
+    assert!(other.resume(dir.path()).unwrap_err().to_string().contains("fingerprint"));
+
+    // a shorter run than the checkpoint cannot absorb it
+    let err = trainer(&ds, GnnModel::Gcn, SGD, 1).resume(dir.path()).unwrap_err();
+    assert!(err.to_string().contains("only goes to"), "{err}");
+
+    // extension is legitimate: same run, more epochs
+    let mut extended = trainer(&ds, GnnModel::Gcn, SGD, 6);
+    assert!(extended.resume(dir.path()).unwrap());
+    assert_eq!(extended.epochs_run(), 3);
+    let report = extended.fit(&ds).unwrap();
+    assert_eq!(report.losses.len(), 6);
+
+    // an empty directory is a fresh start, not an error
+    let empty = TempDir::new().unwrap();
+    assert!(!trainer(&ds, GnnModel::Gcn, SGD, 3).resume(empty.path()).unwrap());
+}
+
+/// Crash-recovery chaos: kill the durable-write machinery at every stage
+/// and prove no on-disk state is ever unrecoverable.
+#[cfg(feature = "failpoints")]
+mod chaos {
+    use super::*;
+    use isplib::util::failpoints::{FailAction, FailPlan};
+
+    /// Uninterrupted reference trajectory for the chaos runs.
+    fn reference(ds: &Dataset, epochs: usize) -> (Vec<u32>, Vec<(String, Vec<u32>)>) {
+        let mut t = trainer(ds, GnnModel::Gcn, SGD_MOMENTUM, epochs);
+        let report = t.fit(ds).unwrap();
+        (loss_bits(&report.losses), param_bits(&t))
+    }
+
+    /// Crash-restart loop: keep resuming from disk and re-running until a
+    /// pass completes. Each crash must leave a state that loads clean —
+    /// any `CorruptState` (or panic) fails the test. Returns the number
+    /// of crashes endured.
+    fn crash_loop_to_completion(
+        ds: &Dataset,
+        dir: &std::path::Path,
+        epochs: usize,
+        want_losses: &[u32],
+        want_params: &[(String, Vec<u32>)],
+    ) -> usize {
+        let mut crashes = 0;
+        loop {
+            let mut t = trainer(ds, GnnModel::Gcn, SGD_MOMENTUM, epochs);
+            // the probe-load after a crash IS the assertion: torn state
+            // would surface here as CorruptState instead of Ok
+            t.resume(dir).unwrap_or_else(|e| {
+                panic!("crash #{crashes} left unrecoverable state: {e}")
+            });
+            match t.fit_with_checkpoints(ds, Some(dir), 1) {
+                Ok(report) => {
+                    assert_eq!(loss_bits(&report.losses), want_losses, "chaos run diverged");
+                    assert_eq!(param_bits(&t), want_params, "chaos params diverged");
+                    return crashes;
+                }
+                Err(e) => {
+                    assert!(
+                        e.to_string().contains("failpoint"),
+                        "only injected faults may crash the loop, got: {e}"
+                    );
+                    crashes += 1;
+                    assert!(crashes < 64, "crash loop failed to converge");
+                }
+            }
+        }
+    }
+
+    /// A torn temp-file write (fault at the first `io.atomic_write` stage
+    /// of save #2) loses nothing: the epoch-1 checkpoint still loads and
+    /// the resumed run is bitwise-identical to the uninterrupted one.
+    #[test]
+    fn torn_temp_write_resumes_bitwise_from_the_prior_save() {
+        let _guard = failpoints::exclusive();
+        failpoints::clear();
+        let ds = karate_club();
+        const EPOCHS: usize = 8;
+        let (want_losses, want_params) = reference(&ds, EPOCHS);
+
+        let dir = TempDir::new().unwrap();
+        // each save hits io.atomic_write twice (temp stage, pre-commit):
+        // hits 1–2 are save 1, hit 3 is save 2's temp stage → tear it
+        failpoints::configure(
+            "io.atomic_write",
+            FailPlan::always(FailAction::TransientError).after(2).limit(1),
+        );
+        let mut t = trainer(&ds, GnnModel::Gcn, SGD_MOMENTUM, EPOCHS);
+        let err = t.fit_with_checkpoints(&ds, Some(dir.path()), 1).unwrap_err();
+        assert!(err.to_string().contains("io.atomic_write"), "{err}");
+        assert_eq!(failpoints::fires("io.atomic_write"), 1);
+        failpoints::clear();
+
+        let mut resumed = trainer(&ds, GnnModel::Gcn, SGD_MOMENTUM, EPOCHS);
+        assert!(resumed.resume(dir.path()).unwrap(), "save 1 must have survived");
+        assert_eq!(resumed.epochs_run(), 1);
+        let report = resumed.fit(&ds).unwrap();
+        assert_eq!(loss_bits(&report.losses), want_losses);
+        assert_eq!(param_bits(&resumed), want_params);
+        failpoints::clear();
+    }
+
+    /// Power loss at fsync (temp file written but never synced): the
+    /// previous checkpoint generation stays loadable and resume is clean.
+    #[test]
+    fn fsync_fault_falls_back_to_the_previous_generation() {
+        let _guard = failpoints::exclusive();
+        failpoints::clear();
+        let ds = karate_club();
+        const EPOCHS: usize = 6;
+        let (want_losses, want_params) = reference(&ds, EPOCHS);
+
+        let dir = TempDir::new().unwrap();
+        // one io.fsync hit per save: let save 1 through, kill save 2
+        failpoints::configure(
+            "io.fsync",
+            FailPlan::always(FailAction::TransientError).after(1).limit(1),
+        );
+        let mut t = trainer(&ds, GnnModel::Gcn, SGD_MOMENTUM, EPOCHS);
+        let err = t.fit_with_checkpoints(&ds, Some(dir.path()), 1).unwrap_err();
+        assert!(err.to_string().contains("io.fsync"), "{err}");
+        failpoints::clear();
+
+        let mut resumed = trainer(&ds, GnnModel::Gcn, SGD_MOMENTUM, EPOCHS);
+        assert!(resumed.resume(dir.path()).unwrap());
+        assert_eq!(resumed.epochs_run(), 1);
+        let report = resumed.fit(&ds).unwrap();
+        assert_eq!(loss_bits(&report.losses), want_losses);
+        assert_eq!(param_bits(&resumed), want_params);
+        failpoints::clear();
+    }
+
+    /// `every_nth` schedule: every 5th durable-write stage errors,
+    /// repeatedly crashing the run mid-training. The crash-restart loop
+    /// resumes from disk each time and still converges to the
+    /// uninterrupted trajectory, bit for bit.
+    #[test]
+    fn every_nth_fault_schedule_crash_loops_to_a_bitwise_clean_finish() {
+        let _guard = failpoints::exclusive();
+        failpoints::clear();
+        let ds = karate_club();
+        const EPOCHS: usize = 10;
+        let (want_losses, want_params) = reference(&ds, EPOCHS);
+
+        let dir = TempDir::new().unwrap();
+        // 2 hits per save → roughly every 3rd save dies, at alternating
+        // stages (temp tear / pre-commit, exercising the .bak fallback);
+        // bounded so the loop terminates
+        failpoints::configure(
+            "io.atomic_write",
+            FailPlan::always(FailAction::TransientError).every_nth(5).limit(4),
+        );
+        let crashes =
+            crash_loop_to_completion(&ds, dir.path(), EPOCHS, &want_losses, &want_params);
+        assert!(crashes >= 1, "the schedule must have crashed at least one pass");
+        failpoints::clear();
+    }
+
+    /// Seeded-coin schedule across BOTH io sites at once: random saves die
+    /// at random stages, and every intermediate on-disk state still loads
+    /// clean until the run completes bitwise-identical.
+    #[test]
+    fn probabilistic_fault_schedule_never_leaves_torn_state() {
+        let _guard = failpoints::exclusive();
+        failpoints::clear();
+        let ds = karate_club();
+        const EPOCHS: usize = 10;
+        let (want_losses, want_params) = reference(&ds, EPOCHS);
+
+        let dir = TempDir::new().unwrap();
+        failpoints::configure(
+            "io.atomic_write",
+            FailPlan::always(FailAction::TransientError).with_probability(0.35, 2024).limit(4),
+        );
+        failpoints::configure(
+            "io.fsync",
+            FailPlan::always(FailAction::TransientError).with_probability(0.35, 4202).limit(3),
+        );
+        let crashes =
+            crash_loop_to_completion(&ds, dir.path(), EPOCHS, &want_losses, &want_params);
+        // p=0.35 over ≥30 stage hits: astronomically unlikely to never fire
+        assert!(crashes >= 1, "the coin never fired — schedule not exercised");
+        failpoints::clear();
+    }
+
+    /// The `train.checkpoint` site fires BEFORE any disk write: an
+    /// injected fault there aborts the save without touching the
+    /// directory at all.
+    #[test]
+    fn train_checkpoint_fault_aborts_before_touching_disk() {
+        let _guard = failpoints::exclusive();
+        failpoints::clear();
+        let ds = karate_club();
+        let dir = TempDir::new().unwrap();
+        failpoints::configure(
+            "train.checkpoint",
+            FailPlan::always(FailAction::TransientError).with_tag("gcn").limit(1),
+        );
+        let mut t = trainer(&ds, GnnModel::Gcn, SGD, 4);
+        let err = t.fit_with_checkpoints(&ds, Some(dir.path()), 1).unwrap_err();
+        assert!(err.to_string().contains("train.checkpoint"), "{err}");
+        assert!(
+            !isplib::train::TrainCheckpoint::path(dir.path()).exists(),
+            "the fault fired before the save began — nothing may be on disk"
+        );
+        // a fresh start resumes nothing and trains through cleanly
+        let mut t = trainer(&ds, GnnModel::Gcn, SGD, 4);
+        assert!(!t.resume(dir.path()).unwrap());
+        t.fit_with_checkpoints(&ds, Some(dir.path()), 1).unwrap();
+        assert!(isplib::train::TrainCheckpoint::path(dir.path()).exists());
+        failpoints::clear();
+    }
+}

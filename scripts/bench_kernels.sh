@@ -16,6 +16,14 @@
 # delta should be noise). Run from anywhere;
 # extra args pass through to cargo bench. Set ISPLIB_BENCH_QUICK=1 for a
 # fast smoke run.
+#
+# Checkpoint-write overhead is NOT measured here: durable saves
+# (train --checkpoint-every) are epoch-granular cold-path I/O — two
+# fsyncs plus a rename per epoch, amortised over a full epoch of SpMM
+# work — and the per-epoch cost is already visible in the train report's
+# `epoch_secs` when checkpointing is on vs off. If a checkpoint cadence
+# ever gets hot enough to matter, add a `durable` section to this bench
+# timing `durable::save` against a raw `fs::write` of the same payload.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 

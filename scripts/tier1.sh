@@ -26,6 +26,15 @@
 # formats × fusion × shard counts, values AND gradients, both executors
 # plus the serving scheduler), and the failpoints pass additionally arms
 # the kernels.halo_merge site inside the shard merge path.
+#
+# The durability suite (tests/durability_integration.rs) runs in BOTH
+# passes as well: the default pass proves bitwise-resumable checkpoints
+# (optimizers × models × checkpoint epochs) with the durable layer's
+# failpoint sites compiled to no-ops, and the failpoints pass layers the
+# crash-recovery chaos schedules on top — io.atomic_write / io.fsync /
+# train.checkpoint faults torn mid-save must never leave state that
+# fails to load, and every crash-restart must finish bitwise-identical
+# to the uninterrupted run.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
@@ -35,7 +44,9 @@ cargo test -q
 cargo test -q --test obs_integration
 cargo test -q --test mutation_integration
 cargo test -q --test shard_integration
+cargo test -q --test durability_integration
 cargo test -q --features failpoints
 cargo test -q --features failpoints --test obs_integration
 cargo test -q --features failpoints --test mutation_integration
 cargo test -q --features failpoints --test shard_integration
+cargo test -q --features failpoints --test durability_integration
